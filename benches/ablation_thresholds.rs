@@ -1,0 +1,50 @@
+//! Ablation (DESIGN.md design-choice): sensitivity of detection to the
+//! threshold rule's SAFETY multiplier. For each safety value: does the
+//! clean tp2 candidate still pass (false-positive check) and is the
+//! subtlest gradient bug (bug 12, missing LN grad sync) still detected?
+//! Also times the three pipeline stages (estimate / trace / check) to show
+//! where TTrace spends its time.
+
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::GenData;
+use ttrace::dist::Topology;
+use ttrace::model::{ParCfg, TINY};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::{ttrace_check, CheckCfg};
+use ttrace::util::bench::{fmt_s, time_once, Table};
+
+fn main() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+    p.sp = true;
+
+    let mut t = Table::new(&["safety", "clean tp2+sp", "bug12 detected",
+                             "margin(min fail rel/thr)"]);
+    for safety in [2.0, 4.0, 8.0, 16.0, 32.0, 64.0] {
+        let cfg = CheckCfg { safety, ..CheckCfg::default() };
+        let clean = ttrace_check(&TINY, &p, 2, &exec, &GenData, BugSet::none(),
+                                 &cfg, false).unwrap();
+        let buggy = ttrace_check(&TINY, &p, 2, &exec, &GenData,
+                                 BugSet::one(BugId::B12SpLnSync), &cfg, false)
+            .unwrap();
+        let margin = buggy.outcome.failures().iter()
+            .map(|c| c.rel_err / c.threshold)
+            .fold(f64::INFINITY, f64::min);
+        t.row(&[format!("{safety}"),
+                if clean.outcome.pass { "PASS" } else { "FALSE-POS" }.into(),
+                if !buggy.outcome.pass { "yes" } else { "MISSED" }.into(),
+                if margin.is_finite() { format!("{margin:.1}x") } else { "-".into() }]);
+    }
+    t.print();
+    t.write_csv("results/ablation_thresholds.csv").unwrap();
+
+    // pipeline cost breakdown
+    let cfg = CheckCfg::default();
+    let (_, total) = time_once(|| {
+        ttrace_check(&TINY, &p, 2, &exec, &GenData, BugSet::none(), &cfg, false)
+            .unwrap()
+    });
+    println!("\nfull check pipeline (estimate + 2 traced runs + diff): {}",
+             fmt_s(total));
+}

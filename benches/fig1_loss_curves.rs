@@ -1,0 +1,60 @@
+//! E1 / Figure 1: loss + grad-norm curves of a correct vs buggy (bug 1:
+//! TP wrong embedding mask) training run — the paper's motivation that
+//! naive loss-curve watching takes thousands of iterations to surface a
+//! silent bug. Writes results/fig1_loss_curves.csv and prints the
+//! iteration at which the naive 3%-loss-gap criterion first fires.
+
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::CorpusData;
+use ttrace::dist::Topology;
+use ttrace::model::{step::run_training_full, Engine, ParCfg, TINY};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::NoopHooks;
+use ttrace::util::bench::Table;
+
+fn main() {
+    let iters: u64 = std::env::var("FIG1_ITERS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(300);
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let data = CorpusData::builtin(TINY.v);
+
+    let run = |bugs: BugSet| -> (Vec<f64>, Vec<f64>) {
+        let mut p = ParCfg::single();
+        p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+        let engine = Engine::new(TINY, p, 2, &exec, bugs).unwrap();
+        let per_rank = run_training_full(&engine, &data, &NoopHooks, iters);
+        let losses = per_rank.iter().find(|(l, _)| !l.is_empty()).unwrap().0.clone();
+        let norms = per_rank[0].1.clone();
+        (losses, norms)
+    };
+
+    eprintln!("fig1: training correct run ({iters} iters)...");
+    let (correct, norm_ok) = run(BugSet::none());
+    eprintln!("fig1: training buggy run (bug 1)...");
+    let (buggy, norm_bug) = run(BugSet::one(BugId::B1TpEmbeddingMask));
+
+    let mut t = Table::new(&["iter", "loss_correct", "loss_buggy", "rel_gap",
+                             "gnorm_correct", "gnorm_buggy"]);
+    let mut naive_detect_iter: Option<usize> = None;
+    for i in 0..correct.len() {
+        let gap = (buggy[i] - correct[i]).abs() / correct[i];
+        if gap > 0.03 && naive_detect_iter.is_none() {
+            naive_detect_iter = Some(i);
+        }
+        if i % 10 == 0 || i + 1 == correct.len() {
+            t.row(&[i.to_string(), format!("{:.4}", correct[i]),
+                    format!("{:.4}", buggy[i]), format!("{:.4}", gap),
+                    format!("{:.4}", norm_ok[i]), format!("{:.4}", norm_bug[i])]);
+        }
+    }
+    t.print();
+    t.write_csv("results/fig1_loss_curves.csv").unwrap();
+    match naive_detect_iter {
+        Some(i) => println!("\nnaive 3%-loss-gap criterion first fires at \
+                             iteration {i} (paper: >4000 iterations on its \
+                             testbed; shape, not absolute count, is the claim)"),
+        None => println!("\nnaive 3%-loss-gap criterion NEVER fired in {iters} \
+                          iterations — the bug stays silent in the loss curve"),
+    }
+    println!("wrote results/fig1_loss_curves.csv");
+}

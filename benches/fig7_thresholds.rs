@@ -1,0 +1,71 @@
+//! E3 / Figure 7: estimated FP round-off error thresholds vs layer index
+//! (BF16), obtained by the §5.2 input-perturbation procedure on the
+//! reference model: (a) forward activations Attn(X), FC2-equivalent (mlp
+//! output) and Layer(X); (b) activation gradients; (c) parameter
+//! gradients. y-values are normalized by eps(BF16). The paper sweeps to
+//! 128 layers on GPUs; this testbed (1 CPU core) sweeps to
+//! FIG7_LAYERS (default 24) — the claim is the *shape* (slow, bounded
+//! growth ⇒ smooth layers), which is depth-independent.
+
+use std::collections::HashMap;
+
+use ttrace::data::GenData;
+use ttrace::model::{ParCfg, SMALL};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::canonical::names;
+use ttrace::ttrace::threshold;
+use ttrace::util::bench::Table;
+use ttrace::util::bf16::EPS_BF16;
+
+fn main() {
+    let layers: usize = std::env::var("FIG7_LAYERS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(24);
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let p = ParCfg::single();
+    eprintln!("fig7: estimating FP round-off for a {layers}-layer model...");
+    let est = threshold::estimate(&SMALL, &p, layers, &exec, &GenData,
+                                  EPS_BF16, 1).unwrap();
+    let eps = EPS_BF16 as f64;
+
+    let col = |key: &str, rel: &HashMap<String, f64>| -> String {
+        rel.get(key).map(|r| format!("{:.3}", r / eps)).unwrap_or("-".into())
+    };
+
+    // (a) forward activations
+    let mut ta = Table::new(&["layer", "Attn(X)/eps", "MLP/eps", "Layer(X)/eps"]);
+    for l in 0..layers {
+        ta.row(&[l.to_string(),
+                 col(&format!("i0/m0/act/{}", names::core_attn(l)), &est.rel),
+                 col(&format!("i0/m0/act/{}", names::mlp(l)), &est.rel),
+                 col(&format!("i0/m0/act/{}", names::layer_out(l)), &est.rel)]);
+    }
+    println!("(a) forward activations — estimated FP error / eps(BF16)");
+    ta.print();
+    ta.write_csv("results/fig7a_fwd_activations.csv").unwrap();
+
+    // (b) activation gradients
+    let mut tb = Table::new(&["layer", "dAttn/eps", "dMLP/eps", "dLN1/eps"]);
+    for l in 0..layers {
+        tb.row(&[l.to_string(),
+                 col(&format!("i0/m0/act_grad/{}", names::core_attn(l)), &est.rel),
+                 col(&format!("i0/m0/act_grad/{}", names::mlp(l)), &est.rel),
+                 col(&format!("i0/m0/act_grad/{}", names::input_ln(l)), &est.rel)]);
+    }
+    println!("\n(b) activation gradients — estimated FP error / eps(BF16)");
+    tb.print();
+    tb.write_csv("results/fig7b_act_grads.csv").unwrap();
+
+    // (c) parameter gradients (per-micro)
+    let mut tc = Table::new(&["layer", "dWqkv/eps", "dWfc1/eps", "dWproj/eps"]);
+    for l in 0..layers {
+        tc.row(&[l.to_string(),
+                 col(&format!("i0/m0/param_grad/layers.{l}.self_attention.linear_qkv.weight"), &est.rel),
+                 col(&format!("i0/m0/param_grad/layers.{l}.mlp.fc1.weight"), &est.rel),
+                 col(&format!("i0/m0/param_grad/layers.{l}.self_attention.linear_proj.weight"), &est.rel)]);
+    }
+    println!("\n(c) parameter gradients — estimated FP error / eps(BF16)");
+    tc.print();
+    tc.write_csv("results/fig7c_param_grads.csv").unwrap();
+    println!("\nwrote results/fig7{{a,b,c}}_*.csv — gradual growth (no \
+              exponential blow-up) indicates smooth layers (Thm 5.1/5.2)");
+}

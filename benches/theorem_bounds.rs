@@ -1,0 +1,87 @@
+//! E7 / Theorems 5.2 & 5.3 (ablation): empirical validation of the error
+//! growth laws on the estimated FP differences:
+//!   Thm 5.2 — forward activation error grows ~ O(L * eps) (linear in depth)
+//!   Thm 5.3 — parameter-gradient error grows ~ O(C^(L+1-l) * eps) with the
+//!             backward Jacobian bound C close to 1 (i.e. nearly flat /
+//!             mildly exponential in distance-from-output).
+
+use ttrace::data::GenData;
+use ttrace::model::{ParCfg, SMALL};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::canonical::names;
+use ttrace::ttrace::threshold;
+use ttrace::util::bench::Table;
+use ttrace::util::bf16::EPS_BF16;
+
+/// least-squares slope of y over x
+fn slope(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let num: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    num / den
+}
+
+fn main() {
+    let layers: usize = std::env::var("THM_LAYERS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(24);
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let p = ParCfg::single();
+    eprintln!("theorem_bounds: estimating over {layers} layers...");
+    let est = threshold::estimate(&SMALL, &p, layers, &exec, &GenData,
+                                  EPS_BF16, 1).unwrap();
+    let eps = EPS_BF16 as f64;
+
+    // Thm 5.2: activation rel-err vs depth
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut t = Table::new(&["layer", "act_err/eps", "err/(L*eps)"]);
+    for l in 0..layers {
+        if let Some(&r) = est.rel.get(&format!("i0/m0/act/{}", names::layer_out(l))) {
+            xs.push((l + 1) as f64);
+            ys.push(r / eps);
+            t.row(&[l.to_string(), format!("{:.3}", r / eps),
+                    format!("{:.3}", r / eps / (l + 1) as f64)]);
+        }
+    }
+    println!("Thm 5.2 — forward error vs depth (expect ~linear):");
+    t.print();
+    let s52 = slope(&xs, &ys);
+    println!("linear-fit slope: {s52:.3} eps/layer; per-layer constant \
+              {:.3}..{:.3} (bounded => O(L*eps) holds)\n",
+             ys.iter().cloned().fold(f64::INFINITY, f64::min) / 1.0,
+             ys.iter().cloned().fold(0.0, f64::max) / xs.last().unwrap());
+
+    // Thm 5.3: param-grad rel-err vs distance from output, log-space slope
+    let mut xs2 = Vec::new();
+    let mut ys2 = Vec::new();
+    let mut t2 = Table::new(&["layer", "dist_from_out", "grad_err/eps"]);
+    for l in 0..layers {
+        let key = format!("i0/m0/param_grad/layers.{l}.self_attention.linear_qkv.weight");
+        if let Some(&r) = est.rel.get(&key) {
+            if r > 0.0 {
+                let dist = (layers - l) as f64;
+                xs2.push(dist);
+                ys2.push((r / eps).ln());
+                t2.row(&[l.to_string(), format!("{dist}"), format!("{:.3}", r / eps)]);
+            }
+        }
+    }
+    println!("Thm 5.3 — gradient error vs distance from output:");
+    t2.print();
+    let c = slope(&xs2, &ys2).exp();
+    println!("fitted backward-Jacobian base C = {c:.3} (theorem expects C \
+              close to 1; C >> 1 would be exponential blow-up)");
+    let mut csv = Table::new(&["layer", "act_over_eps", "grad_over_eps"]);
+    for l in 0..layers {
+        let a = est.rel.get(&format!("i0/m0/act/{}", names::layer_out(l)));
+        let g = est.rel.get(&format!(
+            "i0/m0/param_grad/layers.{l}.self_attention.linear_qkv.weight"));
+        csv.row(&[l.to_string(),
+                  a.map(|r| format!("{:.4}", r / eps)).unwrap_or("-".into()),
+                  g.map(|r| format!("{:.4}", r / eps)).unwrap_or("-".into())]);
+    }
+    csv.write_csv("results/theorem_bounds.csv").unwrap();
+    println!("wrote results/theorem_bounds.csv");
+}

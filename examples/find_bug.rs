@@ -1,0 +1,51 @@
+//! The paper's §3 running example end-to-end: a user notices the TP loss
+//! curve drifting (Figure 1), arms TTrace, and finds bug 1 (wrong
+//! embedding mask) in one iteration — including step 5, the input-rewrite
+//! pass that pins the divergence to the buggy module even though the error
+//! propagates through every later layer.
+//!
+//!     cargo run --release --example find_bug [bug-number]
+
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::GenData;
+use ttrace::model::TINY;
+use ttrace::runtime::Executor;
+use ttrace::ttrace::{localized_module, report, ttrace_check, CheckCfg};
+
+fn main() -> anyhow::Result<()> {
+    let number: u32 = std::env::args().nth(1)
+        .and_then(|s| s.parse().ok()).unwrap_or(1);
+    let bug: BugId = *BugId::all()
+        .iter()
+        .find(|b| b.info().number == number)
+        .expect("bug number in 1..=14");
+    let info = bug.info();
+    println!("armed bug {number}: {} ({}) — impact: {}\n",
+             info.description, info.btype.name(), info.impact);
+
+    let exec = Executor::load(ttrace::default_artifacts_dir())?;
+    let p = ttrace::bugs::table1::bug_config(bug);
+    println!("candidate config: {} sp={} fp8={} moe={} zero1={} recompute={}\n",
+             p.topo.describe(), p.sp, p.fp8, p.moe, p.zero1, p.recompute);
+
+    let cfg = CheckCfg::default();
+    let run = ttrace_check(&TINY, &p, 2, &exec, &GenData, BugSet::one(bug),
+                           &cfg, true)?;
+
+    println!("=== step 4: differential report (plain traced run) ===");
+    println!("{}", report::render(&run.outcome, &cfg, 16));
+
+    if let Some(rw) = &run.rewrite_outcome {
+        println!("=== step 5: input-rewrite localization pass ===");
+        println!("{}", report::render(rw, &cfg, 16));
+    }
+
+    match localized_module(&run) {
+        Some(m) => println!(">>> TTrace localizes the bug at: {m}\n\
+                             >>> expected neighbourhood:     {}",
+                            if info.expect_module.is_empty() { "(any)" }
+                            else { info.expect_module }),
+        None => println!(">>> no divergence found (bug not detected?)"),
+    }
+    Ok(())
+}

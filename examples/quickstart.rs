@@ -1,0 +1,44 @@
+//! Quickstart: the paper's §3 workflow on a healthy candidate.
+//!
+//! 1. annotate the model (Figure 2 — here the built-in annotation file,
+//!    validated against the framework's shard specs),
+//! 2. estimate expected FP round-off thresholds on the reference,
+//! 3. run candidate (TP=2) and reference for ONE iteration with tracing,
+//! 4. differentially test and print the report: expected verdict PASS.
+//!
+//!     cargo run --release --example quickstart
+
+use ttrace::bugs::BugSet;
+use ttrace::data::GenData;
+use ttrace::dist::{Coord, Topology};
+use ttrace::model::{params, ParCfg, TINY};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::annot::{default_annotations, Annotations};
+use ttrace::ttrace::{report, ttrace_check, CheckCfg};
+
+fn main() -> anyhow::Result<()> {
+    let exec = Executor::load(ttrace::default_artifacts_dir())?;
+
+    // Step 2 (user): annotations describe the intended sharding; TTrace
+    // validates them against what the framework actually builds.
+    let annotations = Annotations::parse_str(default_annotations())?;
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(1, 2, 1, 1, 1)?;
+    let set = params::build(&TINY, &p, Coord { dp: 0, tp: 0, pp: 0, cp: 0 },
+                            2, &[0, 1], true, true);
+    for name in &set.order {
+        annotations.validate_param(name, &set.get(name).spec, 2)?;
+    }
+    println!("annotations validated for {} parameters", set.order.len());
+
+    // Steps 1+3+4: thresholds, traced runs, differential report.
+    let cfg = CheckCfg::default();
+    let run = ttrace_check(&TINY, &p, 2, &exec, &GenData, BugSet::none(),
+                           &cfg, false)?;
+    println!("{}", report::render(&run.outcome, &cfg, 24));
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/quickstart_report.json",
+                   report::to_json(&run.outcome, &cfg).to_string_pretty())?;
+    println!("wrote results/quickstart_report.json");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! The paper's §6.2 sweep test: run TTrace over combinations of 4D
+//! parallelism (DP, TP, PP, CP) plus SP/VPP/recompute/fp8/moe/zero1 on the
+//! bug-free framework — every configuration must PASS. (This is the test
+//! that surfaced the paper's three new Megatron bugs.)
+//!
+//!     cargo run --release --example sweep
+
+use ttrace::bugs::BugSet;
+use ttrace::data::GenData;
+use ttrace::dist::Topology;
+use ttrace::model::{ParCfg, TINY};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::{ttrace_check, CheckCfg};
+use ttrace::util::bench::{fmt_s, time_once, Table};
+
+fn main() -> anyhow::Result<()> {
+    let exec = Executor::load(ttrace::default_artifacts_dir())?;
+    // (dp, tp, pp, cp, vpp, sp, fp8, moe, zero1, recompute, n_micro)
+    let cases: &[(usize, usize, usize, usize, usize, bool, bool, bool, bool, bool, usize)] = &[
+        (1, 2, 1, 1, 1, false, false, false, false, false, 1),
+        (2, 1, 1, 1, 1, false, false, false, false, false, 1),
+        (1, 1, 2, 1, 1, false, false, false, false, false, 2),
+        (1, 1, 1, 2, 1, false, false, false, false, false, 1),
+        (1, 2, 1, 1, 1, true, false, false, false, false, 1),
+        (1, 2, 1, 2, 1, true, false, false, false, false, 1),
+        (2, 2, 1, 1, 1, false, false, false, true, false, 1),
+        (1, 2, 1, 1, 1, false, true, false, false, false, 1),
+        (1, 2, 1, 1, 1, true, false, true, false, false, 1),
+        (1, 1, 1, 1, 1, false, false, false, false, true, 1),
+        (1, 1, 2, 1, 2, false, false, false, false, false, 2),
+        (2, 2, 2, 1, 1, false, false, false, false, false, 2),
+        (2, 1, 1, 2, 1, false, false, false, false, false, 1),
+        (4, 1, 1, 1, 1, false, false, false, true, false, 1),
+    ];
+    let mut t = Table::new(&["config", "tensors", "verdict", "time"]);
+    let mut all_pass = true;
+    for &(dp, tp, pp, cp, vpp, sp, fp8, moe, zero1, rec, n_micro) in cases {
+        let mut p = ParCfg::single();
+        p.topo = Topology::new(dp, tp, pp, cp, vpp)?;
+        p.sp = sp;
+        p.fp8 = fp8;
+        p.moe = moe;
+        p.zero1 = zero1;
+        p.recompute = rec;
+        p.n_micro = n_micro;
+        let layers = (pp * vpp).max(2);
+        let label = format!("{}{}{}{}{}{}",
+                            p.topo.describe(),
+                            if sp { "+sp" } else { "" },
+                            if fp8 { "+fp8" } else { "" },
+                            if moe { "+moe" } else { "" },
+                            if zero1 { "+zero1" } else { "" },
+                            if rec { "+recompute" } else { "" });
+        let (run, dt) = time_once(|| {
+            ttrace_check(&TINY, &p, layers, &exec, &GenData, BugSet::none(),
+                         &CheckCfg::default(), false)
+        });
+        let run = run?;
+        all_pass &= run.outcome.pass;
+        t.row(&[label, run.outcome.checks.len().to_string(),
+                if run.outcome.pass { "PASS" } else { "FAIL" }.into(),
+                fmt_s(dt)]);
+    }
+    t.print();
+    t.write_csv("results/sweep.csv")?;
+    println!("\nsweep verdict: {}",
+             if all_pass { "all configurations PASS" }
+             else { "FAILURES FOUND — a framework bug or a checker bug" });
+    std::process::exit(if all_pass { 0 } else { 1 });
+}

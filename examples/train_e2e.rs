@@ -1,0 +1,83 @@
+//! End-to-end driver: train a real (multi-million-parameter) GPT on the
+//! built-in corpus under DP x TP with the full three-layer stack — Rust
+//! coordinator -> AOT HLO modules (JAX/Pallas) -> PJRT CPU — log the loss
+//! curve, then run the TTrace differential check on the same
+//! configuration. Results are recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example train_e2e -- --steps 200 --tp 2 --dp 1
+//!
+//! The `e2e` preset is ~7M parameters at 8 layers (D=256, V=2048, S=128) —
+//! the largest the 1-core CPU testbed trains in minutes; the same driver
+//! scales to ~100M by raising layers/D once artifacts for that shape are
+//! added to python/compile/aot.py (one line in CONFIGS).
+
+use ttrace::bugs::BugSet;
+use ttrace::data::CorpusData;
+use ttrace::dist::Topology;
+use ttrace::model::{mean_losses, preset, run_training, Engine, ParCfg};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::{report, ttrace_check, CheckCfg, NoopHooks};
+use ttrace::util::bench::{fmt_s, time_once, Table};
+use ttrace::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("end-to-end training + TTrace check")
+        .opt("model", "e2e", "model preset (tiny|small|e2e)")
+        .opt("steps", "200", "training steps")
+        .opt("layers", "0", "override layer count (0 = preset default)")
+        .opt("tp", "2", "tensor parallel degree")
+        .opt("dp", "1", "data parallel degree")
+        .flag("skip-check", "train only, skip the TTrace differential check");
+    let args = cli.parse()?;
+
+    let m = preset(args.get("model"))?;
+    let steps = args.get_usize("steps")? as u64;
+    let layers = match args.get_usize("layers")? {
+        0 => m.layers,
+        l => l,
+    };
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(args.get_usize("dp")?, args.get_usize("tp")?, 1, 1, 1)?;
+
+    let exec = Executor::load(ttrace::default_artifacts_dir())?;
+    let data = CorpusData::builtin(m.v);
+    let engine = Engine::new(m, p.clone(), layers, &exec, BugSet::none())?;
+    println!("model '{}': ~{:.1}M params, {} layers, topology {}, {} steps",
+             m.name, m.param_count(layers) as f64 / 1e6, layers,
+             p.topo.describe(), steps);
+
+    let (losses, train_s) = time_once(|| {
+        mean_losses(&run_training(&engine, &data, &NoopHooks, steps))
+    });
+    let mut t = Table::new(&["step", "loss"]);
+    for (i, l) in losses.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == losses.len() {
+            t.row(&[i.to_string(), format!("{l:.4}")]);
+        }
+    }
+    t.print();
+    t.write_csv("results/train_e2e_loss.csv")?;
+    let stats = exec.stats();
+    println!("\ntrained {} steps in {} ({} per step); loss {:.4} -> {:.4}",
+             steps, fmt_s(train_s), fmt_s(train_s / steps as f64),
+             losses[0], losses.last().unwrap());
+    println!("runtime: {} module executions, compile {}, execute {}, marshal {}",
+             stats.executions, fmt_s(stats.compile_s), fmt_s(stats.execute_s),
+             fmt_s(stats.marshal_s));
+    assert!(losses.last().unwrap() < &losses[0],
+            "loss did not decrease — investigate before trusting this build");
+
+    if !args.flag("skip-check") {
+        println!("\nrunning TTrace differential check on this configuration...");
+        let cfg = CheckCfg::default();
+        let (run, check_s) = time_once(|| {
+            ttrace_check(&m, &p, layers, &exec, &data, BugSet::none(), &cfg,
+                         false)
+        });
+        let run = run?;
+        println!("{}", report::render(&run.outcome, &cfg, 12));
+        println!("check wall-clock: {}", fmt_s(check_s));
+    }
+    println!("wrote results/train_e2e_loss.csv");
+    Ok(())
+}

@@ -1,0 +1,189 @@
+"""AOT lowering: every (module, shape-variant) the Rust coordinator needs,
+as HLO *text* artifacts plus a manifest.json.
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run as ``python -m compile.aot --out ../artifacts`` (from python/). Python
+runs ONLY here, at build time; the Rust binary is self-contained afterwards.
+
+The model/parallelism configurations below must stay in lock-step with
+``rust/src/model/config.rs`` (same names, same dims): the Rust side
+recomputes each module's shape-parameter tuple and loads the artifact whose
+key is ``model.module_key(name, params)``.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+# ---------------------------------------------------------------------------
+# Model configurations. dims: B=microbatch, S=sequence, D=hidden, H=heads,
+# F=ffn, V=vocab, E=experts. Variants: (tp, cp, sp) parallel layouts to
+# pre-lower; fp8/moe: whether to emit those module families for the config.
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    # tiny: unit/integration tests and most benches
+    "tiny": dict(B=2, S=16, D=32, H=4, F=64, V=64, E=2,
+                 variants=[(1, 1, 0), (2, 1, 0), (2, 1, 1), (1, 2, 0),
+                           (2, 2, 0), (2, 2, 1), (4, 1, 0)],
+                 fp8=True, moe=True),
+    # small: figure benches (deeper sweeps, wider layers)
+    "small": dict(B=2, S=32, D=64, H=4, F=256, V=256, E=2,
+                  variants=[(1, 1, 0), (2, 1, 0), (2, 1, 1), (1, 2, 0),
+                            (2, 2, 0)],
+                  fp8=True, moe=True),
+    # e2e: the end-to-end training example (~10M params at L=8; scaled for
+    # the single-CPU-core testbed — see EXPERIMENTS.md)
+    "e2e": dict(B=4, S=128, D=256, H=8, F=1024, V=2048, E=2,
+                variants=[(1, 1, 0), (2, 1, 0)],
+                fp8=False, moe=False),
+}
+
+
+def variant_requests(cfg, tp, cp, sp, fp8, moe):
+    """The set of (module-name, shape-params) a (tp, cp, sp) layout needs.
+
+    Mirrors rust/src/model/config.rs::module_plan — keep in sync.
+    """
+    b, s, d, h, f, v, e = (cfg[k] for k in "BSDHFVE")
+    hd = d // h
+    t_cp = s // cp            # local sequence inside the attention block
+    t_sp = t_cp // tp if sp else t_cp  # sequence at LN/residual points
+    dp_, hp, fp_, vp = 3 * d // tp, h // tp, f // tp, v // tp
+    reqs = [
+        ("embed_fwd", (b, t_cp, vp, d)),
+        ("embed_bwd", (b, t_cp, vp, d)),
+        ("ln_fwd", (b, t_sp, d)),
+        ("ln_bwd", (b, t_sp, d)),
+        ("linear_fwd", (b, t_cp, d, dp_)),          # fused QKV (column-par)
+        ("linear_bwd", (b, t_cp, d, dp_)),
+        ("attn_fwd", (b, hp, t_cp, s, hd)),         # K/V allgathered over cp
+        ("attn_bwd", (b, hp, t_cp, s, hd)),
+        ("linearnb_fwd", (b, t_cp, hp * hd, d)),    # out proj (row-par)
+        ("linearnb_bwd", (b, t_cp, hp * hd, d)),
+        ("mlp_fwd", (b, t_cp, d, fp_)),
+        ("mlp_bwd", (b, t_cp, d, fp_)),
+        ("lmhead_fwd", (b, t_cp, d, vp)),
+        ("logits_max", (b, t_cp, vp)),
+        ("xent_local", (b, t_cp, vp)),
+        ("lmhead_bwd", (b, t_cp, d, vp)),
+    ]
+    if fp8:
+        reqs += [
+            ("linear_fp8_fwd", (b, t_cp, d, dp_)),
+            ("linear_fp8_bwd", (b, t_cp, d, dp_)),
+            ("linearnb_fp8_fwd", (b, t_cp, hp * hd, d)),
+            ("linearnb_fp8_bwd", (b, t_cp, hp * hd, d)),
+            ("mlp_fp8_fwd", (b, t_cp, d, fp_)),
+            ("mlp_fp8_bwd", (b, t_cp, d, fp_)),
+        ]
+    if moe:
+        reqs += [
+            # router runs on the SP-sharded sequence (bug #6's habitat)
+            ("router_fwd", (b, t_sp, d, e)),
+            ("router_bwd", (b, t_sp, d, e)),
+            ("experts_fwd", (b, t_cp, d, fp_, e)),
+            ("experts_bwd", (b, t_cp, d, fp_, e)),
+        ]
+    return reqs
+
+
+def build_plan():
+    """Global deduped {key: (name, params)} across all configs/variants."""
+    plan = {}
+    for cfg in CONFIGS.values():
+        for (tp, cp, sp) in cfg["variants"]:
+            for fp8 in ([False, True] if cfg["fp8"] and cp == 1 else [False]):
+                moe = cfg["moe"] and cp == 1 and not fp8
+                for name, params in variant_requests(cfg, tp, cp, sp,
+                                                     fp8, moe):
+                    plan[model.module_key(name, params)] = (name, params)
+    return plan
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"bfloat16": "bf16", "float32": "f32", "int32": "i32",
+            "float64": "f64", "int64": "i64"}[str(dt)]
+
+
+def lower_one(name, params):
+    fn, spec_builder = model.MODULES[name]
+    specs = spec_builder(params)
+    # keep_unused: module signatures are a fixed ABI with the Rust runtime —
+    # never let jit prune arguments the math happens not to need (e.g.
+    # embed_bwd's table).
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    ins = [[_dtype_name(s.dtype)] + list(s.shape) for s in specs]
+    outs = [[_dtype_name(o.dtype)] + list(o.shape)
+            for o in lowered.out_info]
+    return text, ins, outs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated key prefixes to (re)build")
+    args = ap.parse_args()
+    outdir = os.path.abspath(args.out)
+    hlodir = os.path.join(outdir, "hlo")
+    os.makedirs(hlodir, exist_ok=True)
+
+    plan = build_plan()
+    keys = sorted(plan)
+    if args.only:
+        prefixes = args.only.split(",")
+        keys = [k for k in keys if any(k.startswith(p) for p in prefixes)]
+
+    manifest_path = os.path.join(outdir, "manifest.json")
+    manifest = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f).get("modules", {})
+
+    t0 = time.time()
+    built = 0
+    for i, key in enumerate(keys):
+        name, params = plan[key]
+        fname = f"hlo/{key}.hlo.txt"
+        fpath = os.path.join(outdir, fname)
+        if key in manifest and os.path.exists(fpath):
+            continue  # incremental: Makefile handles source-change staleness
+        text, ins, outs = lower_one(name, params)
+        with open(fpath, "w") as f:
+            f.write(text)
+        manifest[key] = {"name": name, "params": list(params),
+                         "file": fname, "inputs": ins, "outputs": outs}
+        built += 1
+        print(f"[{i + 1}/{len(keys)}] {key}  ({time.time() - t0:.1f}s)",
+              file=sys.stderr)
+
+    with open(manifest_path, "w") as f:
+        json.dump({"version": 1, "modules": manifest}, f, indent=1,
+                  sort_keys=True)
+    print(f"built {built} new, total {len(manifest)} artifacts in "
+          f"{time.time() - t0:.1f}s -> {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""L1 Pallas kernel: tiled online-softmax (flash) attention forward.
+
+This is the compute hot-spot of the transformer candidate/reference models
+that TTrace checks. The paper's substrate runs CUDA FlashAttention; per the
+hardware-adaptation rule we re-think it for TPU idioms instead of porting
+warp-level code:
+
+  - the grid iterates (batch, head, q-tile); each q-tile is resident in
+    VMEM (the TPU scratchpad) for the whole pass,
+  - K/V are streamed tile-by-tile from HBM via ``pl.ds`` loads — the
+    BlockSpec/ds schedule plays the role the paper's threadblock loop
+    plays on GPUs,
+  - score/accumulator math is f32 (MXU-accumulate analogue); the P·V
+    product is fed through bf16 operands like an MXU matmul would be.
+
+Run under ``interpret=True`` on CPU: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. VMEM footprint / MXU
+utilization for the TPU-shaped tile sizes are estimated in DESIGN.md §Perf.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+NEG_INF = -1e30
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, block_k: int,
+                     skv: int, scale: float):
+    """One (batch, head, q-tile) program instance.
+
+    q_ref: [1, 1, bq, hd] VMEM-resident query tile
+    k_ref, v_ref: [1, 1, Skv, hd] full key/value for this (b, h)
+    m_ref: [bq, Skv] additive mask tile (f32)
+    o_ref: [1, 1, bq, hd] output tile
+    """
+    q = q_ref[0, 0].astype(F32) * scale  # [bq, hd]
+    bq = q.shape[0]
+    hd = q.shape[1]
+
+    def body(i, carry):
+        m_i, l_i, acc = carry
+        kblk = pl.load(k_ref, (0, 0, pl.ds(i * block_k, block_k),
+                               slice(None))).astype(F32)  # [bk, hd]
+        vblk = pl.load(v_ref, (0, 0, pl.ds(i * block_k, block_k),
+                               slice(None)))  # [bk, hd] bf16
+        mblk = pl.load(m_ref, (slice(None), pl.ds(i * block_k, block_k)))
+        s = q @ kblk.T + mblk  # [bq, bk] f32
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])  # [bq, bk] f32
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        # MXU-style product: bf16 operands, f32 accumulation.
+        pv = jnp.matmul(p.astype(BF16), vblk, preferred_element_type=F32)
+        acc_new = acc * alpha[:, None] + pv
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, F32)
+    l0 = jnp.zeros((bq,), F32)
+    acc0 = jnp.zeros((bq, hd), F32)
+    nsteps = skv // block_k
+    m_i, l_i, acc = jax.lax.fori_loop(0, nsteps, body, (m0, l0, acc0))
+    # Guard fully-masked rows (cannot happen for causal masks but keeps the
+    # kernel total for arbitrary masks the coordinator may feed it).
+    l_safe = jnp.where(l_i == 0.0, 1.0, l_i)
+    o_ref[0, 0] = (acc / l_safe[:, None]).astype(BF16)
+
+
+def attention_pallas(q, k, v, mask, *, block_q: int = 0, block_k: int = 0,
+                     interpret: bool = True):
+    """Flash-attention forward matching ``ref.attention_ref`` semantics.
+
+    q: [B, H, Sq, hd] bf16;  k, v: [B, H, Skv, hd] bf16
+    mask: [Sq, Skv] f32 additive
+    """
+    b, h, sq, hd = q.shape
+    skv = k.shape[2]
+    bq = block_q or _pick_block(sq)
+    bk = block_k or _pick_block(skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+
+    kernel = functools.partial(_attn_fwd_kernel, block_k=bk, skv=skv,
+                               scale=1.0 / math.sqrt(hd))
+    grid = (b, h, sq // bq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda ib, ih, iq: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, skv, hd), lambda ib, ih, iq: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, skv, hd), lambda ib, ih, iq: (ib, ih, 0, 0)),
+            pl.BlockSpec((bq, skv), lambda ib, ih, iq: (iq, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda ib, ih, iq: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), BF16),
+        interpret=interpret,
+    )(q, k, v, mask)
+
+
+def _pick_block(n: int) -> int:
+    """Largest power-of-two tile <= min(n, 128) that divides n — 128 matches
+    the MXU systolic array on real TPU; on CPU-interpret it also minimizes
+    while-loop trip counts, which dominated the attention profile
+    (EXPERIMENTS.md §Perf iteration 1: 16.8ms -> measured below)."""
+    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= n and n % cand == 0:
+            return cand
+    return 1
+
+
+def attention_bwd_formula(q, k, v, mask, do):
+    """Flash-style backward: recompute scores, use the softmax identity
+    dS = P * (dP - rowsum(dP * P)). Matches ``attention_ref``'s vjp up to
+    bf16 round-off; lowered into the attn_bwd HLO by the L2 model.
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=F32)
+    s = s * scale + mask.astype(F32)[None, None, :, :]
+    p = jax.nn.softmax(s, axis=-1)  # [B,H,Sq,Skv] f32
+    dof = do.astype(F32)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", dof, v.astype(F32))
+    delta = jnp.sum(dp * p, axis=-1, keepdims=True)
+    ds = p * (dp - delta) * scale
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, k.astype(F32))
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q.astype(F32))
+    return dq.astype(BF16), dk.astype(BF16), dv.astype(BF16)

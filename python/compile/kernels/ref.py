@@ -1,0 +1,210 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the ground-truth semantics every kernel in this package must
+match (pytest + hypothesis sweep them against the kernels). They are also
+used by the L2 model as the *backward* path: the backward HLOs are lowered
+as ``jax.vjp`` of these reference functions, recomputing the forward inside
+the backward (activation-recomputation style), so no saved intermediates
+cross the Rust/HLO boundary.
+
+Precision model (BF16 mixed precision, matching Megatron-style recipes):
+  - activations / parameters: bfloat16
+  - matmul accumulation: float32 (``preferred_element_type``)
+  - softmax / normalization statistics: float32
+  - cross-entropy: float32
+"""
+
+import jax
+import jax.numpy as jnp
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+# Large-but-finite additive mask value. -inf breaks bf16 arithmetic in some
+# XLA CPU paths; -30000 underflows exp() identically for our value ranges.
+MASK_VALUE = -30000.0
+
+
+def matmul_f32(a, b):
+    """bf16 x bf16 matmul with f32 accumulation, returns f32."""
+    return jnp.matmul(a, b, preferred_element_type=F32)
+
+
+def gelu(x):
+    """tanh-approximated GeLU, computed in f32."""
+    xf = x.astype(F32)
+    c = 0.7978845608028654  # sqrt(2/pi)
+    return 0.5 * xf * (1.0 + jnp.tanh(c * (xf + 0.044715 * xf**3)))
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last dim; stats in f32; output bf16."""
+    xf = x.astype(F32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mean) ** 2, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    y = (xf - mean) * rstd * gamma.astype(F32) + beta.astype(F32)
+    return y.astype(BF16)
+
+
+def attention_ref(q, k, v, mask):
+    """Scaled dot-product attention with an additive mask.
+
+    q: [B, H, Sq, hd] bf16;  k, v: [B, H, Skv, hd] bf16
+    mask: [Sq, Skv] bf16 additive (0 where visible, MASK_VALUE where not)
+    returns: [B, H, Sq, hd] bf16
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, F32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=F32)
+    s = s * scale + mask.astype(F32)[None, None, :, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(BF16), v,
+                   preferred_element_type=F32)
+    return o.astype(BF16)
+
+
+def linear_ref(x, w, b=None):
+    """x @ w (+ b). x: [..., din] bf16, w: [din, dout] bf16."""
+    y = matmul_f32(x, w)
+    if b is not None:
+        y = y + b.astype(F32)
+    return y.astype(BF16)
+
+
+def mlp_ref(x, w1, b1, w2):
+    """fc1 -> gelu -> fc2 (no fc2 bias: row-parallel, bias added by the
+    coordinator after the all-reduce)."""
+    h = matmul_f32(x, w1) + b1.astype(F32)
+    a = gelu(h.astype(BF16))
+    y = matmul_f32(a.astype(BF16), w2)
+    return y.astype(BF16)
+
+
+def embed_ref(tokens, table, offset):
+    """Vocab-sharded embedding lookup with the Megatron mask trick.
+
+    tokens: [B, S] i32 (global vocab ids); table: [Vp, D] bf16 (this rank's
+    shard); offset: scalar i32, first vocab id owned by this shard.
+    Out-of-shard tokens contribute zeros; the coordinator all-reduces the
+    partial outputs across the TP group. (Bug #1 corrupts ``offset``.)
+    """
+    vp = table.shape[0]
+    idx = tokens.astype(jnp.int32) - offset
+    in_shard = (idx >= 0) & (idx < vp)
+    safe = jnp.clip(idx, 0, vp - 1)
+    out = jnp.take(table, safe, axis=0)
+    return jnp.where(in_shard[..., None], out, jnp.zeros_like(out))
+
+
+def embed_grad_ref(tokens, dy, offset, vp):
+    """Gradient of embed_ref w.r.t. the table shard: masked scatter-add."""
+    idx = tokens.astype(jnp.int32) - offset
+    in_shard = (idx >= 0) & (idx < vp)
+    safe = jnp.clip(idx, 0, vp - 1)
+    contrib = jnp.where(in_shard[..., None], dy.astype(F32),
+                        jnp.zeros(dy.shape, F32))
+    flat_idx = safe.reshape(-1)
+    flat = contrib.reshape(-1, dy.shape[-1])
+    dtable = jnp.zeros((vp, dy.shape[-1]), F32).at[flat_idx].add(flat)
+    return dtable.astype(BF16)
+
+
+def lmhead_logits_ref(x, table):
+    """Vocab-parallel LM head: logits over this rank's vocab shard, f32.
+
+    x: [B, S, D] bf16; table: [Vp, D] bf16 (tied embedding shard).
+    """
+    return matmul_f32(x, table.T)
+
+
+def xent_local_ref(logits, targets, offset, gmax):
+    """Local pieces of the vocab-parallel cross-entropy.
+
+    Given logits [B,S,Vp] f32 for this vocab shard, the global max gmax
+    [B,S] f32 (coordinator all-reduce-max of per-shard maxima), returns
+      sumexp [B,S] f32  — sum of exp(logit - gmax) over the local shard
+      tlogit [B,S] f32  — (target_logit - gmax) if the target id falls in
+                          this shard, else 0 (all-reduce-sum reconstructs it)
+    """
+    vp = logits.shape[-1]
+    sumexp = jnp.sum(jnp.exp(logits - gmax[..., None]), axis=-1)
+    idx = targets.astype(jnp.int32) - offset
+    in_shard = (idx >= 0) & (idx < vp)
+    safe = jnp.clip(idx, 0, vp - 1)
+    tl = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    tlogit = jnp.where(in_shard, tl - gmax, jnp.zeros_like(gmax))
+    return sumexp, tlogit
+
+
+def xent_dlogits_ref(logits, targets, offset, gmax, gsum, scale):
+    """d(loss)/d(logits) for the local vocab shard.
+
+    loss (per token) = log(gsum) - tlogit ; dlogits = (softmax - onehot)*scale
+    scale: [B,S] f32 per-token loss scale (1/num_tokens etc. — the
+    coordinator owns it; bugs #3/#4 corrupt it).
+    """
+    vp = logits.shape[-1]
+    p = jnp.exp(logits - gmax[..., None]) / gsum[..., None]
+    idx = targets.astype(jnp.int32) - offset
+    in_shard = (idx >= 0) & (idx < vp)
+    safe = jnp.clip(idx, 0, vp - 1)
+    onehot = jax.nn.one_hot(safe, vp, dtype=F32) * in_shard[..., None]
+    return (p - onehot) * scale[..., None]
+
+
+# ---------------------------------------------------------------------------
+# FP8 (e4m3) emulation — software quantize-dequantize with a per-tensor
+# scale, mirroring TransformerEngine's delayed-scaling recipe. The scale is
+# computed and synchronized by the Rust coordinator (bug #7 syncs it over
+# the wrong group; bug #8 applies the wrong cast during recomputation).
+# ---------------------------------------------------------------------------
+
+E4M3_MAX = 448.0
+
+
+def fp8_quant_dequant_ref(x, scale):
+    """Quantize x (bf16) to float8_e4m3fn at x*scale, then dequantize (f32)."""
+    xf = x.astype(F32) * scale
+    xf = jnp.clip(xf, -E4M3_MAX, E4M3_MAX)
+    q = xf.astype(jnp.float8_e4m3fn)
+    return q.astype(F32) / scale
+
+
+def linear_fp8_ref(x, w, scale_x, scale_w, b=None):
+    """FP8-emulated linear: quantize inputs and weights to e4m3, matmul with
+    f32 accumulation, bf16 output — the TPU analogue of FP8 tensor-core MMA
+    with higher-precision accumulation."""
+    xq = fp8_quant_dequant_ref(x, scale_x)
+    wq = fp8_quant_dequant_ref(w, scale_w)
+    y = jnp.matmul(xq, wq, preferred_element_type=F32)
+    if b is not None:
+        y = y + b.astype(F32)
+    return y.astype(BF16)
+
+
+def router_ref(x, wr):
+    """Top-1 router for the dense-MoE layer: returns per-expert combine
+    weights [B,S,E] f32 (gate prob on the argmax expert, 0 elsewhere)."""
+    logits = matmul_f32(x, wr)
+    g = jax.nn.softmax(logits, axis=-1)
+    top = jnp.argmax(g, axis=-1)
+    onehot = jax.nn.one_hot(top, g.shape[-1], dtype=F32)
+    return g * onehot
+
+
+def moe_ref(x, wr, w1, b1, w2):
+    """Dense top-1 MoE: every expert runs on every token, combined by the
+    router weights. Keeps static shapes (no capacity/dropping) while
+    preserving router semantics — the router-sync bug (#6) lives in how the
+    coordinator synchronizes ``wr`` gradients across the TP group.
+
+    x: [B,S,D]; wr: [D,E]; w1: [E,D,Fp]; b1: [E,Fp]; w2: [E,Fp,D]
+    """
+    combine = router_ref(x, wr)  # [B,S,E]
+    ys = []
+    for e in range(w1.shape[0]):
+        ys.append(mlp_ref(x, w1[e], b1[e], w2[e]).astype(F32))
+    y = jnp.stack(ys, axis=-1)  # [B,S,D,E]
+    out = jnp.einsum("bsde,bse->bsd", y, combine)
+    return out.astype(BF16)

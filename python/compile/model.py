@@ -1,0 +1,422 @@
+"""L2: the module set of the GPT/MoE model, as individually-lowerable
+JAX functions (forward + backward).
+
+TTrace's whole point is observing *per-module* intermediate tensors, so the
+model is NOT lowered as one fused graph: every module's forward and
+backward is its own HLO computation. The Rust coordinator (L3) chains them
+— manual backprop — which gives exactly the hook surface the paper gets
+from PyTorch module hooks, and places every collective *between* module
+executions in Rust, which is where Megatron's silent bugs live.
+
+Backward modules are lowered as ``jax.vjp`` of the reference forward,
+recomputing the forward inside the backward (activation-recomputation
+style), so no saved intermediates cross the Rust/HLO boundary.
+
+Every function is shape-polymorphic in Python; ``aot.py`` instantiates the
+concrete shape variants each parallelism configuration needs and emits one
+HLO text artifact per (module, shape) with a deterministic key that the
+Rust manifest loader recomputes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.attention import attention_pallas, attention_bwd_formula
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Forward modules
+# ---------------------------------------------------------------------------
+
+def embed_fwd(tokens, table, offset):
+    return (ref.embed_ref(tokens, table, offset),)
+
+
+def embed_bwd(tokens, table, offset, dy):
+    _, vjp = jax.vjp(lambda t: ref.embed_ref(tokens, t, offset), table)
+    (dtable,) = vjp(dy)
+    return (dtable,)
+
+
+def ln_fwd(x, gamma, beta):
+    return (ref.layernorm_ref(x, gamma, beta),)
+
+
+def ln_bwd(x, gamma, beta, dy):
+    _, vjp = jax.vjp(ref.layernorm_ref, x, gamma, beta)
+    return vjp(dy)  # (dx, dgamma, dbeta)
+
+
+def linear_fwd(x, w, b):
+    return (ref.linear_ref(x, w, b),)
+
+
+def linear_bwd(x, w, b, dy):
+    _, vjp = jax.vjp(ref.linear_ref, x, w, b)
+    return vjp(dy)  # (dx, dw, db)
+
+
+def linearnb_fwd(x, w):
+    return (ref.linear_ref(x, w),)
+
+
+def linearnb_bwd(x, w, dy):
+    _, vjp = jax.vjp(lambda x, w: ref.linear_ref(x, w), x, w)
+    return vjp(dy)  # (dx, dw)
+
+
+def attn_fwd(q, k, v, mask):
+    return (attention_pallas(q, k, v, mask),)
+
+
+def attn_bwd(q, k, v, mask, do):
+    return attention_bwd_formula(q, k, v, mask, do)  # (dq, dk, dv)
+
+
+def mlp_fwd(x, w1, b1, w2):
+    return (ref.mlp_ref(x, w1, b1, w2),)
+
+
+def mlp_bwd(x, w1, b1, w2, dy):
+    _, vjp = jax.vjp(ref.mlp_ref, x, w1, b1, w2)
+    return vjp(dy)  # (dx, dw1, db1, dw2)
+
+
+def lmhead_fwd(x, table):
+    return (ref.lmhead_logits_ref(x, table),)
+
+
+def logits_max(logits):
+    return (jnp.max(logits, axis=-1),)
+
+
+def xent_local(logits, targets, offset, gmax):
+    return ref.xent_local_ref(logits, targets, offset, gmax)
+
+
+def lmhead_bwd(x, table, targets, offset, gmax, gsum, scale):
+    """Recomputes local logits, forms dlogits, and backprops through the
+    (tied) LM head. Returns (dx bf16, dtable bf16)."""
+    logits = ref.lmhead_logits_ref(x, table)
+    dlogits = ref.xent_dlogits_ref(logits, targets, offset, gmax, gsum,
+                                   scale)
+    dx = jnp.matmul(dlogits, table.astype(F32),
+                    preferred_element_type=F32).astype(BF16)
+    dlf = dlogits.reshape(-1, dlogits.shape[-1])
+    xf = x.reshape(-1, x.shape[-1]).astype(F32)
+    dtable = jnp.matmul(dlf.T, xf, preferred_element_type=F32).astype(BF16)
+    return dx, dtable
+
+
+# ---------------------------------------------------------------------------
+# FP8-emulated linears (delayed scaling; scales are coordinator inputs).
+# Gradients use the straight-through estimator through the quantizer, with
+# e5m2-emulated gradient quantization — the TransformerEngine hybrid recipe.
+# ---------------------------------------------------------------------------
+
+E5M2_MAX = 57344.0
+
+
+def _qdq_e5m2(x, scale):
+    xf = x.astype(F32) * scale
+    xf = jnp.clip(xf, -E5M2_MAX, E5M2_MAX)
+    return xf.astype(jnp.float8_e5m2).astype(F32) / scale
+
+
+def linear_fp8_fwd(x, w, b, sx, sw):
+    return (ref.linear_fp8_ref(x, w, sx, sw, b),)
+
+
+def linear_fp8_bwd(x, w, sx, sw, sdy, dy):
+    """dx = dyq @ wq^T ; dw = xq^T @ dyq ; db = sum(dy)."""
+    xq = ref.fp8_quant_dequant_ref(x, sx)
+    wq = ref.fp8_quant_dequant_ref(w, sw)
+    dyq = _qdq_e5m2(dy, sdy)
+    dx = jnp.matmul(dyq, wq.T, preferred_element_type=F32).astype(BF16)
+    dyf = dyq.reshape(-1, dyq.shape[-1])
+    xf = xq.reshape(-1, xq.shape[-1])
+    dw = jnp.matmul(xf.T, dyf, preferred_element_type=F32).astype(BF16)
+    db = jnp.sum(dy.astype(F32), axis=tuple(range(dy.ndim - 1))).astype(BF16)
+    return dx, dw, db
+
+
+def linearnb_fp8_fwd(x, w, sx, sw):
+    return (ref.linear_fp8_ref(x, w, sx, sw),)
+
+
+def linearnb_fp8_bwd(x, w, sx, sw, sdy, dy):
+    dx, dw, _ = linear_fp8_bwd(x, w, sx, sw, sdy, dy)
+    return dx, dw
+
+
+def mlp_fp8_fwd(x, w1, b1, w2, sx, sw1, sh, sw2):
+    """FP8-emulated fused MLP: fc1(e4m3) -> gelu(f32) -> fc2(e4m3).
+
+    Also returns amax of the (internal) post-gelu activation so the
+    coordinator can run delayed scaling for `sh` — the activation never
+    leaves the device, mirroring TransformerEngine's amax history.
+    """
+    h = ref.linear_fp8_ref(x, w1, sx, sw1, b1)
+    a = ref.gelu(h).astype(BF16)
+    y = ref.linear_fp8_ref(a, w2, sh, sw2)
+    amax_a = jnp.max(jnp.abs(a.astype(F32)))
+    return y, amax_a
+
+
+def mlp_fp8_bwd(x, w1, b1, w2, sx, sw1, sh, sw2, sdy, dy):
+    """Straight-through-quantizer backward of mlp_fp8_fwd (recomputes the
+    forward; e5m2 gradient quantization on both GEMMs)."""
+    h = ref.linear_fp8_ref(x, w1, sx, sw1, b1)  # bf16 [.., Fp]
+    a = ref.gelu(h).astype(BF16)
+    aq = ref.fp8_quant_dequant_ref(a, sh)
+    w2q = ref.fp8_quant_dequant_ref(w2, sw2)
+    dyq = _qdq_e5m2(dy, sdy)
+    da = jnp.matmul(dyq, w2q.T, preferred_element_type=F32)
+    dw2 = jnp.matmul(aq.reshape(-1, aq.shape[-1]).T,
+                     dyq.reshape(-1, dyq.shape[-1]),
+                     preferred_element_type=F32).astype(BF16)
+    # gelu'(h) in f32
+    _, gelu_vjp = jax.vjp(lambda t: ref.gelu(t), h)
+    (dh,) = gelu_vjp(da)
+    dh = dh.astype(BF16)
+    dhq = _qdq_e5m2(dh, sdy)
+    xq = ref.fp8_quant_dequant_ref(x, sx)
+    w1q = ref.fp8_quant_dequant_ref(w1, sw1)
+    dx = jnp.matmul(dhq, w1q.T, preferred_element_type=F32).astype(BF16)
+    dw1 = jnp.matmul(xq.reshape(-1, xq.shape[-1]).T,
+                     dhq.reshape(-1, dhq.shape[-1]),
+                     preferred_element_type=F32).astype(BF16)
+    db1 = jnp.sum(dh.astype(F32), axis=tuple(range(dh.ndim - 1))).astype(BF16)
+    return dx, dw1, db1, dw2
+
+
+# ---------------------------------------------------------------------------
+# Dense top-1 MoE layer, split into router and experts so the coordinator
+# can compute the router on the *sequence-parallel-sharded* input (that is
+# where Megatron's router-sync bug #6 lives: under SP each TP rank sees a
+# different sequence shard, so router weight grads MUST be all-reduced over
+# the TP group).
+# ---------------------------------------------------------------------------
+
+def router_fwd(x, wr):
+    return (ref.router_ref(x, wr),)
+
+
+def router_bwd(x, wr, dcombine):
+    _, vjp = jax.vjp(ref.router_ref, x, wr)
+    return vjp(dcombine)  # (dx, dwr)
+
+
+def _experts(x, w1, b1, w2, combine):
+    ys = []
+    for e in range(w1.shape[0]):
+        ys.append(ref.mlp_ref(x, w1[e], b1[e], w2[e]).astype(F32))
+    y = jnp.stack(ys, axis=-1)  # [B,S,D,E]
+    out = jnp.einsum("bsde,bse->bsd", y, combine)
+    return out.astype(BF16)
+
+
+def experts_fwd(x, w1, b1, w2, combine):
+    return (_experts(x, w1, b1, w2, combine),)
+
+
+def experts_bwd(x, w1, b1, w2, combine, dy):
+    _, vjp = jax.vjp(_experts, x, w1, b1, w2, combine)
+    return vjp(dy)  # (dx, dw1, db1, dw2, dcombine)
+
+
+# ---------------------------------------------------------------------------
+# Module registry: name -> (fn, input-spec builder)
+#
+# Each spec builder takes the module's shape-parameter tuple (the same tuple
+# the Rust side uses to form the artifact key) and returns the list of
+# ShapeDtypeStructs to lower with.
+# ---------------------------------------------------------------------------
+
+def _embed_specs(p):
+    b, t, vp, d = p
+    return [spec((b, t), I32), spec((vp, d), BF16), spec((), I32)]
+
+
+def _embed_bwd_specs(p):
+    b, t, vp, d = p
+    return _embed_specs(p) + [spec((b, t, d), BF16)]
+
+
+def _ln_specs(p):
+    b, t, d = p
+    return [spec((b, t, d), BF16), spec((d,), BF16), spec((d,), BF16)]
+
+
+def _ln_bwd_specs(p):
+    b, t, d = p
+    return _ln_specs(p) + [spec((b, t, d), BF16)]
+
+
+def _linear_specs(p):
+    b, t, din, dout = p
+    return [spec((b, t, din), BF16), spec((din, dout), BF16),
+            spec((dout,), BF16)]
+
+
+def _linear_bwd_specs(p):
+    b, t, din, dout = p
+    return _linear_specs(p) + [spec((b, t, dout), BF16)]
+
+
+def _linearnb_specs(p):
+    b, t, din, dout = p
+    return [spec((b, t, din), BF16), spec((din, dout), BF16)]
+
+
+def _linearnb_bwd_specs(p):
+    b, t, din, dout = p
+    return _linearnb_specs(p) + [spec((b, t, dout), BF16)]
+
+
+def _attn_specs(p):
+    b, hp, sq, skv, hd = p
+    return [spec((b, hp, sq, hd), BF16), spec((b, hp, skv, hd), BF16),
+            spec((b, hp, skv, hd), BF16), spec((sq, skv), F32)]
+
+
+def _attn_bwd_specs(p):
+    b, hp, sq, skv, hd = p
+    return _attn_specs(p) + [spec((b, hp, sq, hd), BF16)]
+
+
+def _mlp_specs(p):
+    b, t, d, fp = p
+    return [spec((b, t, d), BF16), spec((d, fp), BF16), spec((fp,), BF16),
+            spec((fp, d), BF16)]
+
+
+def _mlp_bwd_specs(p):
+    b, t, d, fp = p
+    return _mlp_specs(p) + [spec((b, t, d), BF16)]
+
+
+def _lmhead_specs(p):
+    b, t, d, vp = p
+    return [spec((b, t, d), BF16), spec((vp, d), BF16)]
+
+
+def _logits_max_specs(p):
+    b, t, vp = p
+    return [spec((b, t, vp), F32)]
+
+
+def _xent_local_specs(p):
+    b, t, vp = p
+    return [spec((b, t, vp), F32), spec((b, t), I32), spec((), I32),
+            spec((b, t), F32)]
+
+
+def _lmhead_bwd_specs(p):
+    b, t, d, vp = p
+    return [spec((b, t, d), BF16), spec((vp, d), BF16), spec((b, t), I32),
+            spec((), I32), spec((b, t), F32), spec((b, t), F32),
+            spec((b, t), F32)]
+
+
+def _linear_fp8_specs(p):
+    b, t, din, dout = p
+    return [spec((b, t, din), BF16), spec((din, dout), BF16),
+            spec((dout,), BF16), spec((), F32), spec((), F32)]
+
+
+def _linear_fp8_bwd_specs(p):
+    b, t, din, dout = p
+    return [spec((b, t, din), BF16), spec((din, dout), BF16), spec((), F32),
+            spec((), F32), spec((), F32), spec((b, t, dout), BF16)]
+
+
+def _linearnb_fp8_specs(p):
+    b, t, din, dout = p
+    return [spec((b, t, din), BF16), spec((din, dout), BF16), spec((), F32),
+            spec((), F32)]
+
+
+def _linearnb_fp8_bwd_specs(p):
+    b, t, din, dout = p
+    return _linearnb_fp8_specs(p) + [spec((), F32),
+                                     spec((b, t, dout), BF16)]
+
+
+def _mlp_fp8_specs(p):
+    b, t, d, fp = p
+    return [spec((b, t, d), BF16), spec((d, fp), BF16), spec((fp,), BF16),
+            spec((fp, d), BF16), spec((), F32), spec((), F32), spec((), F32),
+            spec((), F32)]
+
+
+def _mlp_fp8_bwd_specs(p):
+    b, t, d, fp = p
+    return _mlp_fp8_specs(p) + [spec((), F32), spec((b, t, d), BF16)]
+
+
+def _router_specs(p):
+    b, t, d, e = p
+    return [spec((b, t, d), BF16), spec((d, e), BF16)]
+
+
+def _router_bwd_specs(p):
+    b, t, d, e = p
+    return _router_specs(p) + [spec((b, t, e), F32)]
+
+
+def _experts_specs(p):
+    b, t, d, fp, e = p
+    return [spec((b, t, d), BF16), spec((e, d, fp), BF16),
+            spec((e, fp), BF16), spec((e, fp, d), BF16),
+            spec((b, t, e), F32)]
+
+
+def _experts_bwd_specs(p):
+    b, t, d, fp, e = p
+    return _experts_specs(p) + [spec((b, t, d), BF16)]
+
+
+MODULES = {
+    "embed_fwd": (embed_fwd, _embed_specs),
+    "embed_bwd": (embed_bwd, _embed_bwd_specs),
+    "ln_fwd": (ln_fwd, _ln_specs),
+    "ln_bwd": (ln_bwd, _ln_bwd_specs),
+    "linear_fwd": (linear_fwd, _linear_specs),
+    "linear_bwd": (linear_bwd, _linear_bwd_specs),
+    "linearnb_fwd": (linearnb_fwd, _linearnb_specs),
+    "linearnb_bwd": (linearnb_bwd, _linearnb_bwd_specs),
+    "attn_fwd": (attn_fwd, _attn_specs),
+    "attn_bwd": (attn_bwd, _attn_bwd_specs),
+    "mlp_fwd": (mlp_fwd, _mlp_specs),
+    "mlp_bwd": (mlp_bwd, _mlp_bwd_specs),
+    "lmhead_fwd": (lmhead_fwd, _lmhead_specs),
+    "logits_max": (logits_max, _logits_max_specs),
+    "xent_local": (xent_local, _xent_local_specs),
+    "lmhead_bwd": (lmhead_bwd, _lmhead_bwd_specs),
+    "linear_fp8_fwd": (linear_fp8_fwd, _linear_fp8_specs),
+    "linear_fp8_bwd": (linear_fp8_bwd, _linear_fp8_bwd_specs),
+    "linearnb_fp8_fwd": (linearnb_fp8_fwd, _linearnb_fp8_specs),
+    "linearnb_fp8_bwd": (linearnb_fp8_bwd, _linearnb_fp8_bwd_specs),
+    "mlp_fp8_fwd": (mlp_fp8_fwd, _mlp_fp8_specs),
+    "mlp_fp8_bwd": (mlp_fp8_bwd, _mlp_fp8_bwd_specs),
+    "router_fwd": (router_fwd, _router_specs),
+    "router_bwd": (router_bwd, _router_bwd_specs),
+    "experts_fwd": (experts_fwd, _experts_specs),
+    "experts_bwd": (experts_bwd, _experts_bwd_specs),
+}
+
+
+def module_key(name, params) -> str:
+    """Deterministic artifact key; the Rust manifest loader recomputes this
+    exact string. Example: ``attn_fwd__2_4_16_16_8``."""
+    return name + "__" + "_".join(str(int(x)) for x in params)

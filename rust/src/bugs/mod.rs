@@ -1,0 +1,324 @@
+//! The 14 silent bugs of Table 1, re-created as injectable faults in the
+//! distributed-training engine.
+//!
+//! Each bug is a hook the engine consults at the exact point in the
+//! training semantics where the original Megatron-LM/TransformerEngine bug
+//! lived: a wrong operand (mask offset, loss scale, fp8 scale), a wrong or
+//! missing collective, a wrong process group, a wrong pipeline-stage
+//! division, a stale recomputation input. All bugs are *silent*: shapes
+//! stay legal, no errors are raised — only tensor values go wrong, exactly
+//! the failure mode TTrace exists to catch.
+
+pub mod table1;
+
+use crate::model::config::ParCfg;
+
+/// Bug taxonomy (paper §6.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BugType {
+    /// Wrong Computation: an operation consumes a wrong input
+    WCp,
+    /// Wrong Communication: collective order/pattern/group is wrong
+    WCm,
+    /// Missing Communication: a collective is skipped entirely
+    MCm,
+}
+
+impl BugType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BugType::WCp => "W-CP",
+            BugType::WCm => "W-CM",
+            BugType::MCm => "M-CM",
+        }
+    }
+}
+
+/// Table 1, bugs 1-14. Numbering matches the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BugId {
+    /// 1: TP — wrong embedding mask (wrong vocab offset on rank>0)
+    B1TpEmbeddingMask,
+    /// 2: AR — recomputation consumes a wrong (stale) input
+    B2ArWrongInput,
+    /// 3: CP — wrong loss scaling (forgets the cp factor)
+    B3CpLossScale,
+    /// 4: DP — wrong loss scaling (forgets the dp factor)
+    B4DpLossScale,
+    /// 5: ZeRO — embedding and LM-head untied (tie-sync skipped)
+    B5ZeroUntiedEmbedding,
+    /// 6: SP — router weight grads not all-reduced over tp
+    B6SpRouterSync,
+    /// 7: TP — fp8 amax synchronized over the wrong group
+    B7Fp8WrongGroup,
+    /// 8: AR+fp8 — wrong tensor produced by fp8 cast in recompute path
+    B8ArFp8Cast,
+    /// 9: ZeRO — parameter update never propagated (broadcast skipped)
+    B9ZeroUpdateFailure,
+    /// 10: PP — wrong stage division (layer blocks rotated by one)
+    B10PpStageDivision,
+    /// 11: TP — grad all-reduce skipped when comm/compute overlap is on
+    B11TpOverlapGrads,
+    /// 12: SP — layernorm weight grads not synchronized over tp
+    B12SpLnSync,
+    /// 13: CP — wrong attention gradients (dK/dV cp-reduction skipped)
+    B13CpAttnGrads,
+    /// 14: TP+CP — wrong layernorm gradients (cp contribution dropped)
+    B14TpCpLnGrads,
+}
+
+pub struct BugInfo {
+    pub id: BugId,
+    pub number: u32,
+    pub new: bool,
+    pub btype: BugType,
+    pub description: &'static str,
+    pub impact: &'static str,
+    /// canonical-module substring where TTrace is expected to localize it
+    pub expect_module: &'static str,
+    /// which trace kinds are expected to diverge
+    pub expect_kinds: &'static str,
+}
+
+impl BugId {
+    pub fn all() -> [BugId; 14] {
+        use BugId::*;
+        [B1TpEmbeddingMask, B2ArWrongInput, B3CpLossScale, B4DpLossScale,
+         B5ZeroUntiedEmbedding, B6SpRouterSync, B7Fp8WrongGroup, B8ArFp8Cast,
+         B9ZeroUpdateFailure, B10PpStageDivision, B11TpOverlapGrads,
+         B12SpLnSync, B13CpAttnGrads, B14TpCpLnGrads]
+    }
+
+    pub fn info(&self) -> BugInfo {
+        use BugId::*;
+        use BugType::*;
+        match self {
+            B1TpEmbeddingMask => BugInfo {
+                id: *self, number: 1, new: false, btype: WCp,
+                description: "TP: wrong embedding mask",
+                impact: "Wrong forward, gradients",
+                expect_module: "embedding.word_embeddings",
+                expect_kinds: "act",
+            },
+            B2ArWrongInput => BugInfo {
+                id: *self, number: 2, new: false, btype: WCp,
+                description: "AR: wrong input",
+                impact: "Wrong gradients",
+                expect_module: "layers.",
+                expect_kinds: "act_grad,param_grad",
+            },
+            B3CpLossScale => BugInfo {
+                id: *self, number: 3, new: false, btype: WCp,
+                description: "CP: wrong loss scaling",
+                impact: "Wrong gradients",
+                expect_module: "output_layer",
+                expect_kinds: "act_grad,param_grad",
+            },
+            B4DpLossScale => BugInfo {
+                id: *self, number: 4, new: false, btype: WCp,
+                description: "DP: wrong loss scaling",
+                impact: "Wrong gradients",
+                expect_module: "output_layer",
+                expect_kinds: "act_grad,param_grad",
+            },
+            B5ZeroUntiedEmbedding => BugInfo {
+                id: *self, number: 5, new: false, btype: WCm,
+                description: "ZeRO: embedding and LM-head untied",
+                impact: "Wrong parameter update",
+                expect_module: "embedding.word_embeddings",
+                expect_kinds: "main_grad,param",
+            },
+            B6SpRouterSync => BugInfo {
+                id: *self, number: 6, new: false, btype: MCm,
+                description: "SP: router weights not synchronized",
+                impact: "Wrong gradients",
+                expect_module: "mlp.router",
+                expect_kinds: "main_grad",
+            },
+            B7Fp8WrongGroup => BugInfo {
+                id: *self, number: 7, new: false, btype: WCm,
+                description: "TP: wrong FP8 communication group",
+                impact: "Wrong forward, gradients",
+                expect_module: "layers.",
+                expect_kinds: "act",
+            },
+            B8ArFp8Cast => BugInfo {
+                id: *self, number: 8, new: false, btype: WCp,
+                description: "AR: wrong tensor by FP8 cast",
+                impact: "Wrong loss",
+                expect_module: "layers.",
+                expect_kinds: "act,loss",
+            },
+            B9ZeroUpdateFailure => BugInfo {
+                id: *self, number: 9, new: false, btype: WCm,
+                description: "ZeRO: parameter update failure",
+                impact: "No parameter update",
+                expect_module: "",
+                expect_kinds: "param",
+            },
+            B10PpStageDivision => BugInfo {
+                id: *self, number: 10, new: false, btype: WCp,
+                description: "PP: wrong stage division",
+                impact: "Wrong model get trained",
+                expect_module: "layers.",
+                expect_kinds: "act",
+            },
+            B11TpOverlapGrads => BugInfo {
+                id: *self, number: 11, new: false, btype: WCm,
+                description: "TP: wrong gradients with overlap",
+                impact: "Wrong gradients",
+                expect_module: "layers.",
+                expect_kinds: "act_grad,param_grad",
+            },
+            B12SpLnSync => BugInfo {
+                id: *self, number: 12, new: true, btype: MCm,
+                description: "SP: layernorm weights not synchronized",
+                impact: "Wrong gradients",
+                expect_module: "layernorm",
+                expect_kinds: "main_grad",
+            },
+            B13CpAttnGrads => BugInfo {
+                id: *self, number: 13, new: true, btype: WCp,
+                description: "CP: wrong attention gradients",
+                impact: "Wrong gradients",
+                expect_module: "self_attention",
+                expect_kinds: "act_grad,param_grad",
+            },
+            B14TpCpLnGrads => BugInfo {
+                id: *self, number: 14, new: true, btype: WCp,
+                description: "TP+CP: wrong layernorm gradients",
+                impact: "Wrong gradients",
+                expect_module: "layernorm",
+                expect_kinds: "main_grad",
+            },
+        }
+    }
+
+    /// Arm the parallel features this bug needs on top of a base config.
+    pub fn arm_parcfg(&self, p: &mut ParCfg) {
+        use BugId::*;
+        match self {
+            B1TpEmbeddingMask => require_tp(p),
+            B2ArWrongInput => p.recompute = true,
+            B3CpLossScale | B13CpAttnGrads => require_cp(p),
+            B4DpLossScale => require_dp(p),
+            B5ZeroUntiedEmbedding => {
+                p.zero1 = true;
+                require_pp(p);
+            }
+            B6SpRouterSync => {
+                require_tp(p);
+                p.sp = true;
+                p.moe = true;
+            }
+            B7Fp8WrongGroup => {
+                require_tp(p);
+                require_dp(p);
+                p.fp8 = true;
+            }
+            B8ArFp8Cast => {
+                p.fp8 = true;
+                p.recompute = true;
+            }
+            B9ZeroUpdateFailure => {
+                p.zero1 = true;
+                require_dp(p);
+            }
+            B10PpStageDivision => require_pp(p),
+            B11TpOverlapGrads => {
+                require_tp(p);
+                p.overlap = true;
+            }
+            B12SpLnSync => {
+                require_tp(p);
+                p.sp = true;
+            }
+            B14TpCpLnGrads => {
+                require_tp(p);
+                p.sp = true;
+                require_cp(p);
+            }
+        }
+    }
+}
+
+fn require_tp(p: &mut ParCfg) {
+    if p.topo.tp < 2 {
+        p.topo.tp = 2;
+    }
+}
+
+fn require_cp(p: &mut ParCfg) {
+    if p.topo.cp < 2 {
+        p.topo.cp = 2;
+    }
+}
+
+fn require_dp(p: &mut ParCfg) {
+    if p.topo.dp < 2 {
+        p.topo.dp = 2;
+    }
+}
+
+fn require_pp(p: &mut ParCfg) {
+    if p.topo.pp < 2 {
+        p.topo.pp = 2;
+    }
+}
+
+/// The fault switchboard the engine consults. At most one bug is armed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BugSet {
+    pub active: Option<BugId>,
+}
+
+impl BugSet {
+    pub fn none() -> BugSet {
+        BugSet { active: None }
+    }
+
+    pub fn one(id: BugId) -> BugSet {
+        BugSet { active: Some(id) }
+    }
+
+    #[inline]
+    pub fn on(&self, id: BugId) -> bool {
+        self.active == Some(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_fourteen_present_and_numbered() {
+        let all = BugId::all();
+        assert_eq!(all.len(), 14);
+        for (i, b) in all.iter().enumerate() {
+            assert_eq!(b.info().number as usize, i + 1);
+        }
+        assert_eq!(all.iter().filter(|b| b.info().new).count(), 3);
+    }
+
+    #[test]
+    fn arm_produces_required_features() {
+        let mut p = ParCfg::single();
+        BugId::B6SpRouterSync.arm_parcfg(&mut p);
+        assert!(p.sp && p.moe && p.topo.tp >= 2);
+        let mut p2 = ParCfg::single();
+        BugId::B13CpAttnGrads.arm_parcfg(&mut p2);
+        assert!(p2.topo.cp >= 2);
+        let mut p3 = ParCfg::single();
+        BugId::B11TpOverlapGrads.arm_parcfg(&mut p3);
+        assert!(p3.overlap && p3.topo.tp >= 2);
+    }
+
+    #[test]
+    fn bugset_switch() {
+        let b = BugSet::one(BugId::B1TpEmbeddingMask);
+        assert!(b.on(BugId::B1TpEmbeddingMask));
+        assert!(!b.on(BugId::B2ArWrongInput));
+        assert!(!BugSet::none().on(BugId::B1TpEmbeddingMask));
+    }
+}

@@ -1,0 +1,93 @@
+//! The Table-1 harness: arm each of the 14 bugs in its native parallel
+//! configuration, run the full TTrace workflow, and report
+//! detection + localization. Shared by `cargo test` (assertions) and
+//! `cargo bench --bench table1_bugs` (prints the paper's table).
+
+use anyhow::Result;
+
+use crate::data::GenData;
+use crate::model::{ModelCfg, ParCfg};
+use crate::runtime::Executor;
+use crate::ttrace::{localized_module, ttrace_check, CheckCfg};
+
+use super::{BugId, BugSet};
+
+pub struct Table1Row {
+    pub number: u32,
+    pub new: bool,
+    pub btype: &'static str,
+    pub description: &'static str,
+    pub impact: &'static str,
+    pub config: String,
+    pub detected: bool,
+    pub localized: Option<String>,
+    pub localization_ok: bool,
+}
+
+/// The armed parallel configuration for one bug on the given model.
+pub fn bug_config(bug: BugId) -> ParCfg {
+    let mut p = ParCfg::single();
+    bug.arm_parcfg(&mut p);
+    p
+}
+
+/// Run TTrace against one armed bug. `layers` must suit the config
+/// (pp*vpp | layers).
+pub fn run_one(bug: BugId, m: &ModelCfg, layers: usize, exec: &Executor)
+               -> Result<Table1Row> {
+    let info = bug.info();
+    let p = bug_config(bug);
+    let run = ttrace_check(m, &p, layers, exec, &GenData, BugSet::one(bug),
+                           &CheckCfg::default(), true)?;
+    let detected = !run.outcome.pass;
+    let localized = localized_module(&run);
+    let localization_ok = match &localized {
+        Some(module) => {
+            info.expect_module.is_empty() || module.contains(info.expect_module)
+        }
+        None => false,
+    };
+    Ok(Table1Row {
+        number: info.number,
+        new: info.new,
+        btype: info.btype.name(),
+        description: info.description,
+        impact: info.impact,
+        config: format!("{}{}{}{}{}",
+                        p.topo.describe(),
+                        if p.sp { "+sp" } else { "" },
+                        if p.fp8 { "+fp8" } else { "" },
+                        if p.moe { "+moe" } else { "" },
+                        if p.zero1 { "+zero1" } else { "" }),
+        detected,
+        localized,
+        localization_ok,
+    })
+}
+
+/// Run the whole table.
+pub fn run_all(m: &ModelCfg, layers: usize, exec: &Executor)
+               -> Result<Vec<Table1Row>> {
+    BugId::all().iter().map(|&b| run_one(b, m, layers, exec)).collect()
+}
+
+/// Sanity counterpart: the same armed *configurations* with no bug must
+/// all PASS (no false positives) — the paper's §6.2 sweep.
+pub fn run_clean_sweep(m: &ModelCfg, layers: usize, exec: &Executor)
+                       -> Result<Vec<(String, bool)>> {
+    let mut seen = std::collections::BTreeSet::new();
+    let mut out = Vec::new();
+    for bug in BugId::all() {
+        let p = bug_config(bug);
+        let key = format!("{}sp{}fp8{}moe{}z{}rc{}ov{}",
+                          p.topo.describe(), p.sp, p.fp8, p.moe, p.zero1,
+                          p.recompute, p.overlap);
+        if !seen.insert(key.clone()) {
+            continue;
+        }
+        let run = ttrace_check(m, &p, layers, exec, &GenData, BugSet::none(),
+                               &CheckCfg::default(), false)?;
+        out.push((key, run.outcome.pass));
+    }
+    Ok(out)
+}

@@ -1,0 +1,319 @@
+//! In-process collective-communication substrate ("nccl-sim").
+//!
+//! Simulated ranks are OS threads inside one process; collectives are
+//! rendezvous points keyed by (group, per-group sequence number). All
+//! reductions fold in **member order**, deterministically — the paper's
+//! merger relies on DP replicas being bit-identical when ZeRO is off, and
+//! reduction-order determinism is what makes the reference/candidate
+//! comparison about *parallelization semantics* rather than scheduling
+//! noise.
+//!
+//! Reduction precision is explicit: `RedPrec::Bf16` rounds after every
+//! accumulation step (what a bf16 ring all-reduce does on real hardware),
+//! `RedPrec::F32` accumulates in f32 (main-grad reductions).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::tensor::{DType, Tensor};
+use crate::util::bf16;
+
+/// Reduction operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RedOp {
+    Sum,
+    Max,
+}
+
+/// Accumulation precision for sum-reductions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RedPrec {
+    F32,
+    Bf16,
+}
+
+struct Point {
+    deposits: Vec<Option<Tensor>>,
+    taken: usize,
+}
+
+/// Process-wide rendezvous state shared by all rank threads.
+pub struct World {
+    pub n: usize,
+    points: Mutex<HashMap<String, Point>>,
+    cv: Condvar,
+}
+
+impl World {
+    pub fn new(n: usize) -> Arc<World> {
+        Arc::new(World { n, points: Mutex::new(HashMap::new()), cv: Condvar::new() })
+    }
+
+    /// All `m` members deposit a tensor under `key`; each receives clones
+    /// of all deposits in member order. The last member to leave removes
+    /// the rendezvous point.
+    fn exchange(&self, key: &str, me: usize, m: usize, x: Tensor) -> Vec<Tensor> {
+        let mut guard = self.points.lock().unwrap();
+        {
+            let point = guard.entry(key.to_string()).or_insert_with(|| Point {
+                deposits: vec![None; m],
+                taken: 0,
+            });
+            assert!(point.deposits.len() == m,
+                    "group size mismatch at '{key}': {} vs {m}", point.deposits.len());
+            assert!(point.deposits[me].is_none(),
+                    "double deposit by member {me} at '{key}' — sequence desync");
+            point.deposits[me] = Some(x);
+            if point.deposits.iter().all(|d| d.is_some()) {
+                self.cv.notify_all();
+            }
+        }
+        loop {
+            let complete = guard
+                .get(key)
+                .map(|p| p.deposits.iter().all(|d| d.is_some()))
+                .unwrap_or(false);
+            if complete {
+                break;
+            }
+            guard = self.cv.wait(guard).unwrap();
+        }
+        let result;
+        {
+            let point = guard.get_mut(key).unwrap();
+            result = point.deposits.iter().map(|d| d.clone().unwrap()).collect();
+            point.taken += 1;
+            if point.taken == m {
+                guard.remove(key);
+            }
+        }
+        result
+    }
+
+    /// Point-to-point send (buffered — does not block).
+    fn p2p_send(&self, key: &str, x: Tensor) {
+        let mut guard = self.points.lock().unwrap();
+        let prev = guard.insert(
+            key.to_string(),
+            Point { deposits: vec![Some(x)], taken: 0 },
+        );
+        assert!(prev.is_none(), "p2p key collision at '{key}'");
+        self.cv.notify_all();
+    }
+
+    fn p2p_recv(&self, key: &str) -> Tensor {
+        let mut guard = self.points.lock().unwrap();
+        loop {
+            if guard.contains_key(key) {
+                let p = guard.remove(key).unwrap();
+                return p.deposits.into_iter().next().unwrap().unwrap();
+            }
+            guard = self.cv.wait(guard).unwrap();
+        }
+    }
+}
+
+/// Per-rank handle: owns the per-group sequence counters that line up
+/// collective calls across SPMD threads.
+pub struct Comm {
+    world: Arc<World>,
+    seq: Mutex<HashMap<String, u64>>,
+}
+
+impl Comm {
+    pub fn new(world: Arc<World>) -> Comm {
+        Comm { world, seq: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.world.n
+    }
+
+    fn next_key(&self, group: &str) -> String {
+        let mut seq = self.seq.lock().unwrap();
+        let c = seq.entry(group.to_string()).or_insert(0);
+        *c += 1;
+        format!("{group}#{c}")
+    }
+
+    /// All-gather: returns every member's tensor, in member order.
+    pub fn all_gather(&self, group: &str, me: usize, m: usize, x: &Tensor) -> Vec<Tensor> {
+        let key = self.next_key(group);
+        self.world.exchange(&key, me, m, x.clone())
+    }
+
+    /// All-reduce with explicit op and accumulation precision. Folds in
+    /// member order: `((x0 ⊕ x1) ⊕ x2) ⊕ ...`.
+    pub fn all_reduce(&self, group: &str, me: usize, m: usize, x: &Tensor,
+                      op: RedOp, prec: RedPrec) -> Tensor {
+        let parts = self.all_gather(group, me, m, x);
+        reduce_parts(&parts, op, prec)
+    }
+
+    /// Reduce-scatter along `dim`: reduce all members' tensors, then return
+    /// this member's 1/m slice.
+    pub fn reduce_scatter(&self, group: &str, me: usize, m: usize, x: &Tensor,
+                          dim: usize, op: RedOp, prec: RedPrec) -> Tensor {
+        let full = self.all_reduce(group, me, m, x, op, prec);
+        let len = full.dims[dim] / m;
+        full.narrow(dim, me * len, len)
+    }
+
+    /// Broadcast from `root` (member index) to the group.
+    pub fn broadcast(&self, group: &str, me: usize, m: usize, root: usize,
+                     x: &Tensor) -> Tensor {
+        let parts = self.all_gather(group, me, m, x);
+        parts[root].clone()
+    }
+
+    /// Barrier over a group.
+    pub fn barrier(&self, group: &str, me: usize, m: usize) {
+        let _ = self.all_gather(group, me, m, &Tensor::zeros(&[], DType::F32));
+    }
+
+    /// P2P send to global rank `dst` with a logical `tag`.
+    pub fn send(&self, me_rank: usize, dst: usize, tag: &str, x: &Tensor) {
+        let key = self.next_key(&format!("p2p:{me_rank}->{dst}:{tag}"));
+        self.world.p2p_send(&key, x.clone());
+    }
+
+    /// P2P receive from global rank `src` with a logical `tag`.
+    pub fn recv(&self, src: usize, me_rank: usize, tag: &str) -> Tensor {
+        let key = self.next_key(&format!("p2p:{src}->{me_rank}:{tag}"));
+        self.world.p2p_recv(&key)
+    }
+}
+
+/// Deterministic member-order fold.
+pub fn reduce_parts(parts: &[Tensor], op: RedOp, prec: RedPrec) -> Tensor {
+    let mut acc = parts[0].clone();
+    for p in &parts[1..] {
+        assert_eq!(acc.dims, p.dims, "reduce shape mismatch");
+        for (a, b) in acc.data.iter_mut().zip(&p.data) {
+            *a = match op {
+                RedOp::Sum => match prec {
+                    RedPrec::F32 => *a + b,
+                    RedPrec::Bf16 => bf16::round_bf16(*a + b),
+                },
+                RedOp::Max => a.max(*b),
+            };
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn spawn_ranks<T: Send>(n: usize, f: impl Fn(usize, Arc<World>) -> T + Sync) -> Vec<T> {
+        let world = World::new(n);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (r, slot) in out.iter_mut().enumerate() {
+                let world = world.clone();
+                let f = &f;
+                handles.push(s.spawn(move || {
+                    *slot = Some(f(r, world));
+                }));
+            }
+        });
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    #[test]
+    fn allreduce_sum_deterministic() {
+        let results = spawn_ranks(4, |r, w| {
+            let comm = Comm::new(w);
+            let x = Tensor::full(&[4], (r + 1) as f32, DType::F32);
+            comm.all_reduce("g", r, 4, &x, RedOp::Sum, RedPrec::F32).data
+        });
+        for r in &results {
+            assert_eq!(r, &vec![10.0; 4]);
+        }
+    }
+
+    #[test]
+    fn allgather_ordered() {
+        let results = spawn_ranks(3, |r, w| {
+            let comm = Comm::new(w);
+            let x = Tensor::scalar(r as f32, DType::F32);
+            let parts = comm.all_gather("g", r, 3, &x);
+            parts.iter().map(|t| t.data[0]).collect::<Vec<_>>()
+        });
+        for r in &results {
+            assert_eq!(r, &vec![0.0, 1.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_slices() {
+        let results = spawn_ranks(2, |r, w| {
+            let comm = Comm::new(w);
+            let x = Tensor::new(&[4], vec![1., 2., 3., 4.], DType::F32);
+            comm.reduce_scatter("g", r, 2, &x, 0, RedOp::Sum, RedPrec::F32).data
+        });
+        assert_eq!(results[0], vec![2., 4.]);
+        assert_eq!(results[1], vec![6., 8.]);
+    }
+
+    #[test]
+    fn successive_collectives_do_not_crosstalk() {
+        let results = spawn_ranks(2, |r, w| {
+            let comm = Comm::new(w);
+            let mut acc = Vec::new();
+            for i in 0..5 {
+                let x = Tensor::scalar((r * 10 + i) as f32, DType::F32);
+                let red = comm.all_reduce("g", r, 2, &x, RedOp::Sum, RedPrec::F32);
+                acc.push(red.data[0]);
+            }
+            acc
+        });
+        assert_eq!(results[0], vec![10., 12., 14., 16., 18.]);
+        assert_eq!(results[0], results[1]);
+    }
+
+    #[test]
+    fn p2p_ordering() {
+        let results = spawn_ranks(2, |r, w| {
+            let comm = Comm::new(w);
+            if r == 0 {
+                comm.send(0, 1, "act", &Tensor::scalar(7.0, DType::F32));
+                comm.send(0, 1, "act", &Tensor::scalar(9.0, DType::F32));
+                vec![]
+            } else {
+                let a = comm.recv(0, 1, "act").data[0];
+                let b = comm.recv(0, 1, "act").data[0];
+                vec![a, b]
+            }
+        });
+        assert_eq!(results[1], vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn bf16_reduction_rounds_each_step() {
+        // 1.0 + eps/2 + eps/2: in f32 the halves accumulate to a full eps;
+        // in bf16 each add rounds back down to 1.0.
+        let eps = crate::util::bf16::EPS_BF16;
+        let parts = vec![
+            Tensor::scalar(1.0, DType::Bf16),
+            Tensor::scalar(eps / 2.0 * 0.9, DType::Bf16),
+            Tensor::scalar(eps / 2.0 * 0.9, DType::Bf16),
+        ];
+        let f32_sum = reduce_parts(&parts, RedOp::Sum, RedPrec::F32).data[0];
+        let bf_sum = reduce_parts(&parts, RedOp::Sum, RedPrec::Bf16).data[0];
+        assert!(f32_sum > 1.0);
+        assert_eq!(bf_sum, 1.0);
+    }
+
+    #[test]
+    fn max_reduction() {
+        let parts = vec![
+            Tensor::new(&[2], vec![1., -5.], DType::F32),
+            Tensor::new(&[2], vec![0., 3.], DType::F32),
+        ];
+        assert_eq!(reduce_parts(&parts, RedOp::Max, RedPrec::F32).data, vec![1., 3.]);
+    }
+}

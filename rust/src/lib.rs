@@ -1,0 +1,44 @@
+//! # ttrace — lightweight error checking and diagnosis for distributed training
+//!
+//! A Rust + JAX + Pallas reproduction of *TTrace: Lightweight Error Checking
+//! and Diagnosis for Distributed Training* (CS.DC 2025).
+//!
+//! Three layers:
+//!  - **L3 (this crate)**: the distributed-training framework substrate
+//!    (simulated multi-rank SPMD, collectives, DP/TP/PP/VPP/SP/CP) and the
+//!    paper's contribution — trace collection, canonical tensor mapping,
+//!    perturbation-based thresholds and differential checking (`ttrace`).
+//!  - **L2** (`python/compile/model.py`): the model's per-module fwd/bwd in
+//!    JAX, AOT-lowered to HLO text at build time.
+//!  - **L1** (`python/compile/kernels/`): Pallas attention / FP8 kernels.
+//!
+//! Python never runs on the request path: the binary loads `artifacts/` and
+//! executes via PJRT (`runtime`).
+
+pub mod bugs;
+pub mod comm;
+pub mod data;
+pub mod dist;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod ttrace;
+pub mod util;
+
+/// Locate the artifacts directory: `$TTRACE_ARTIFACTS` or the nearest
+/// ancestor directory containing `artifacts/manifest.json`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("TTRACE_ARTIFACTS") {
+        return dir.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts/manifest.json");
+        if cand.exists() {
+            return cur.join("artifacts");
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

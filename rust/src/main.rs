@@ -1,0 +1,196 @@
+//! `ttrace` — CLI for the TTrace reproduction.
+//!
+//! Subcommands:
+//!   check   run the full differential check of a candidate configuration
+//!           (optionally with an injected bug) against its reference
+//!   train   run training and print the loss curve
+//!   bugs    list the 14 reproducible Table-1 bugs
+//!
+//! Examples:
+//!   ttrace check --model tiny --tp 2 --layers 2
+//!   ttrace check --model tiny --tp 2 --bug 1 --localize
+//!   ttrace train --model e2e --steps 100 --tp 2
+//!   ttrace bugs
+
+use anyhow::{bail, Result};
+
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::{CorpusData, DataSource, GenData};
+use ttrace::dist::Topology;
+use ttrace::model::{mean_losses, preset, run_training, Engine, ParCfg};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::{localized_module, report, ttrace_check, CheckCfg, NoopHooks};
+use ttrace::util::bench::{fmt_s, time_once};
+use ttrace::util::cli::Cli;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("check") => run(check(&argv[1..])),
+        Some("train") => run(train(&argv[1..])),
+        Some("bugs") => run(bugs()),
+        _ => {
+            eprintln!("usage: ttrace <check|train|bugs> [options]\n\
+                       run `ttrace check --help` etc. for details");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(r: Result<i32>) -> i32 {
+    match r {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("{e:#}");
+            2
+        }
+    }
+}
+
+fn parcfg_cli(cli: Cli) -> Cli {
+    cli.opt("model", "tiny", "model preset (tiny|small|e2e)")
+        .opt("layers", "0", "layer count (0 = preset default)")
+        .opt("dp", "1", "data parallel degree")
+        .opt("tp", "1", "tensor parallel degree")
+        .opt("pp", "1", "pipeline parallel degree")
+        .opt("cp", "1", "context parallel degree")
+        .opt("vpp", "1", "virtual pipeline chunks per stage")
+        .opt("micro", "1", "microbatches per iteration")
+        .flag("sp", "sequence parallelism")
+        .flag("fp8", "fp8 (e4m3-emulated) linears")
+        .flag("moe", "dense top-1 MoE MLPs")
+        .flag("zero1", "ZeRO-1 distributed optimizer")
+        .flag("recompute", "activation recomputation")
+        .opt("data", "synthetic", "data source (synthetic|corpus)")
+}
+
+fn parse_parcfg(args: &ttrace::util::cli::Args) -> Result<(ttrace::model::ModelCfg, ParCfg, usize)> {
+    let m = preset(args.get("model"))?;
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(args.get_usize("dp")?, args.get_usize("tp")?,
+                           args.get_usize("pp")?, args.get_usize("cp")?,
+                           args.get_usize("vpp")?)?;
+    p.sp = args.flag("sp");
+    p.fp8 = args.flag("fp8");
+    p.moe = args.flag("moe");
+    p.zero1 = args.flag("zero1");
+    p.recompute = args.flag("recompute");
+    p.n_micro = args.get_usize("micro")?;
+    let layers = match args.get_usize("layers")? {
+        0 => (p.topo.pp * p.topo.vpp).max(2),
+        l => l,
+    };
+    Ok((m, p, layers))
+}
+
+fn data_source(kind: &str, vocab: usize) -> Result<Box<dyn DataSource>> {
+    Ok(match kind {
+        "synthetic" => Box::new(GenData),
+        "corpus" => Box::new(CorpusData::builtin(vocab)),
+        _ => bail!("unknown --data '{kind}' (synthetic|corpus)"),
+    })
+}
+
+fn find_bug(no: usize) -> Result<BugId> {
+    BugId::all()
+        .iter()
+        .copied()
+        .find(|b| b.info().number == no as u32)
+        .ok_or_else(|| anyhow::anyhow!("bug number must be 1..=14"))
+}
+
+fn check(argv: &[String]) -> Result<i32> {
+    let cli = parcfg_cli(Cli::new("TTrace differential check"))
+        .opt("bug", "0", "inject Table-1 bug number (0 = none)")
+        .opt("safety", "8", "threshold safety multiplier")
+        .flag("localize", "run the input-rewrite localization pass on failure")
+        .opt("out", "", "write the JSON report to this path");
+    let args = cli.parse_from(argv)?;
+    let (m, mut p, layers) = parse_parcfg(&args)?;
+    let bug_no = args.get_usize("bug")?;
+    let bugs = if bug_no == 0 {
+        BugSet::none()
+    } else {
+        let bug = find_bug(bug_no)?;
+        bug.arm_parcfg(&mut p);
+        BugSet::one(bug)
+    };
+    let cfg = CheckCfg { safety: args.get_f64("safety")?, ..CheckCfg::default() };
+    let exec = Executor::load(ttrace::default_artifacts_dir())?;
+    let data = data_source(args.get("data"), m.v)?;
+    let (run_res, dt) = time_once(|| {
+        ttrace_check(&m, &p, layers, &exec, data.as_ref(), bugs, &cfg,
+                     args.flag("localize"))
+    });
+    let run_out = run_res?;
+    println!("{}", report::render(&run_out.outcome, &cfg, 32));
+    if args.flag("localize") {
+        if let Some(module) = localized_module(&run_out) {
+            println!("localization: {module}");
+        }
+    }
+    println!("total check time: {}", fmt_s(dt));
+    let out = args.get("out");
+    if !out.is_empty() {
+        std::fs::write(out, report::to_json(&run_out.outcome, &cfg).to_string_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(if run_out.outcome.pass { 0 } else { 1 })
+}
+
+fn train(argv: &[String]) -> Result<i32> {
+    let cli = parcfg_cli(Cli::new("train and print the loss curve"))
+        .opt("steps", "10", "training iterations")
+        .opt("bug", "0", "inject Table-1 bug number (0 = none)");
+    let args = cli.parse_from(argv)?;
+    let (m, mut p, layers) = parse_parcfg(&args)?;
+    let bug_no = args.get_usize("bug")?;
+    let bugs = if bug_no == 0 {
+        BugSet::none()
+    } else {
+        let bug = find_bug(bug_no)?;
+        bug.arm_parcfg(&mut p);
+        BugSet::one(bug)
+    };
+    let exec = Executor::load(ttrace::default_artifacts_dir())?;
+    let data = data_source(args.get("data"), m.v)?;
+    let engine = Engine::new(m, p.clone(), layers, &exec, bugs)?;
+    println!("training '{}' ({} layers, ~{:.1}M params) on {}",
+             m.name, layers, m.param_count(layers) as f64 / 1e6,
+             p.topo.describe());
+    let steps = args.get_usize("steps")? as u64;
+    let (losses, dt) = time_once(|| {
+        mean_losses(&run_training(&engine, data.as_ref(), &NoopHooks, steps))
+    });
+    for (i, l) in losses.iter().enumerate() {
+        println!("step {i:>4}  loss {l:.4}");
+    }
+    println!("{} steps in {} ({} / step)", steps, fmt_s(dt),
+             fmt_s(dt / steps as f64));
+    // per-module profile (the §Perf instrument)
+    let st = exec.stats();
+    let mut mods: Vec<(&String, &(u64, f64))> = st.per_module.iter().collect();
+    mods.sort_by(|a, b| b.1 .1.partial_cmp(&a.1 .1).unwrap());
+    println!("\nruntime: {} execs, compile {}, execute {}, marshal {}",
+             st.executions, fmt_s(st.compile_s), fmt_s(st.execute_s),
+             fmt_s(st.marshal_s));
+    println!("top modules by device time:");
+    for (k, (n, t)) in mods.iter().take(10) {
+        println!("  {:<40} {:>6} execs  {:>10}  ({} avg)",
+                 k, n, fmt_s(*t), fmt_s(*t / *n as f64));
+    }
+    Ok(0)
+}
+
+fn bugs() -> Result<i32> {
+    println!("{:<4} {:<4} {:<5} {:<42} {}", "ID", "New", "Type",
+             "Description", "Impact");
+    for b in BugId::all() {
+        let i = b.info();
+        println!("{:<4} {:<4} {:<5} {:<42} {}", i.number,
+                 if i.new { "yes" } else { "" }, i.btype.name(),
+                 i.description, i.impact);
+    }
+    Ok(0)
+}

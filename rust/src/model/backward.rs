@@ -1,0 +1,368 @@
+//! Backward bodies of the engine: LM-head/cross-entropy backward, layer
+//! backward (with optional activation recomputation), embedding backward,
+//! and per-microbatch parameter-gradient accumulation.
+
+use crate::bugs::BugId;
+use crate::dist::RankCtx;
+use crate::tensor::{DType, Tensor};
+use crate::ttrace::canonical::names;
+use crate::ttrace::hooks::{CanonId, Hooks, Kind};
+
+use super::engine::{Engine, HeadTape, LayerInner, LayerTape, RankState};
+use super::seq;
+
+impl<'a> Engine<'a> {
+    /// Record a per-microbatch bf16 param grad and accumulate it into the
+    /// f32 main grad.
+    ///
+    /// Recording semantics: under context parallelism every per-micro grad
+    /// is a partial sum over the rank's sequence chunk (the merger sums
+    /// them); under SP the sequence-sharded replicated params (LN, router,
+    /// proj bias) are additionally partial over tp. When tp ranks compute
+    /// *identical* grads (replicated params, full-sequence inputs) only tp
+    /// rank 0 records a partial entry to avoid double-counting in the sum.
+    pub(crate) fn acc_grad(&self, ctx: &RankCtx, st: &mut RankState,
+                           hooks: &dyn Hooks, iter: u64, micro: u32,
+                           name: &str, grad: &Tensor) {
+        self.acc_grad_as(ctx, st, hooks, iter, micro, name, name, grad);
+    }
+
+    /// Like `acc_grad` but records under a different canonical module name
+    /// (the tied LM-head contribution to the embedding grad).
+    pub(crate) fn acc_grad_as(&self, ctx: &RankCtx, st: &mut RankState,
+                              hooks: &dyn Hooks, iter: u64, micro: u32,
+                              record_as: &str, name: &str, grad: &Tensor) {
+        use crate::model::params::GradSync;
+        let topo = self.p.topo;
+        let p = st.params.get_mut(name);
+        let seq_sharded_over_tp =
+            self.p.sp && topo.tp > 1 && p.sync == GradSync::ReplicatedSeqSharded;
+        let partial = topo.cp > 1 || seq_sharded_over_tp;
+        let tp_duplicates =
+            topo.tp > 1 && p.sync != GradSync::Sharded && !seq_sharded_over_tp;
+        let suppress = partial && tp_duplicates && ctx.coord.tp != 0;
+        if !suppress {
+            let spec = if partial { p.spec.clone().as_partial() } else { p.spec.clone() };
+            hooks.record(&CanonId::new(iter, micro, Kind::ParamGrad, record_as),
+                         grad, &spec);
+        }
+        p.accumulate(grad);
+    }
+
+    /// The per-token loss-gradient scale. Correct semantics: every token of
+    /// the *global* batch contributes 1/(B·S·n_micro·dp) (reference runs
+    /// dp·n_micro microbatches with dp=1, giving the identical factor).
+    /// Bugs 3/4 drop the cp/dp corrections exactly like the Megatron loss-
+    /// scaling bugs did.
+    pub(crate) fn loss_scale(&self) -> f32 {
+        let base = 1.0
+            / (self.sh.b as f32 * self.sh.s as f32 * self.p.n_micro as f32
+               * self.p.topo.dp as f32);
+        let mut scale = base;
+        if self.bugs.on(BugId::B3CpLossScale) && self.p.topo.cp > 1 {
+            // wrong: treats each cp shard as if it were the full sequence
+            scale *= self.p.topo.cp as f32;
+        }
+        if self.bugs.on(BugId::B4DpLossScale) && self.p.topo.dp > 1 {
+            // wrong: forgets that grads are summed across dp replicas
+            scale *= self.p.topo.dp as f32;
+        }
+        scale
+    }
+
+    /// LM-head backward: builds dlogits from the saved global max/sumexp,
+    /// backprops through the tied embedding and the final layernorm.
+    /// Returns the gradient w.r.t. the residual-domain chunk output.
+    pub(crate) fn head_bwd(&self, ctx: &RankCtx, st: &mut RankState,
+                           hooks: &dyn Hooks, iter: u64, micro: u32,
+                           tape: &HeadTape) -> Tensor {
+        let scale_v = self.loss_scale();
+        let scale = Tensor::full(&[self.sh.b, self.sh.t_cp], scale_v, DType::F32);
+        let offset = Tensor::scalar((self.sh.vp * ctx.coord.tp) as f32, DType::I32);
+        let table = st.params.model("embedding.word_embeddings.weight").clone();
+        let mut outs = self.run_mod(
+            &self.sh.k_lmhead_bwd(),
+            &[&tape.x_head, &table, &tape.targets, &offset, &tape.gmax,
+              &tape.gsum, &scale]);
+        let dtable = outs.remove(1);
+        let dx_head = outs.remove(0);
+        // tied embedding: the LM-head contribution accumulates into the
+        // embedding grad (united on pp=1; synchronized across stages later).
+        // Recorded under its own id — the embedding's own ParamGrad entry is
+        // the scatter-add from embed_bwd.
+        self.acc_grad_as(ctx, st, hooks, iter, micro, "output_layer.weight",
+                         "embedding.word_embeddings.weight", &dtable);
+
+        // bwd of the sp all-gather before the head: reduce-scatter; the
+        // vocab-parallel dx is a partial sum over tp -> all-reduce without sp
+        let d_ln_out = if self.p.sp {
+            self.sp_scatter_grad(ctx, &dx_head, crate::comm::RedPrec::Bf16)
+        } else {
+            let g = ctx.tp_group();
+            self.ar_bf16(ctx, &g, &dx_head)
+        };
+        // record the head input-grad after the tp reduction (the
+        // pre-reduction tensor is a vocab-shard partial sum)
+        self.rec(hooks, iter, micro, Kind::ActGrad, &names::output_layer(),
+                 &d_ln_out, self.spec_sp(ctx));
+
+        // final layernorm backward
+        let gw = st.params.model("final_layernorm.weight").clone();
+        let gb = st.params.model("final_layernorm.bias").clone();
+        let mut ln_outs = self.run_mod(&self.sh.k_ln_bwd(),
+                                       &[&tape.resid, &gw, &gb, &d_ln_out]);
+        let dbeta = ln_outs.remove(2);
+        let dgamma = ln_outs.remove(1);
+        let dresid = ln_outs.remove(0);
+        self.rec(hooks, iter, micro, Kind::ActGrad, &names::final_ln(),
+                 &dresid, self.spec_sp(ctx));
+        self.acc_grad(ctx, st, hooks, iter, micro, "final_layernorm.weight", &dgamma);
+        self.acc_grad(ctx, st, hooks, iter, micro, "final_layernorm.bias", &dbeta);
+        dresid
+    }
+
+    /// One transformer layer backward. `dy` is the gradient w.r.t. the
+    /// layer output (residual domain). Returns grad w.r.t. the layer input.
+    pub(crate) fn layer_bwd(&self, ctx: &RankCtx, st: &mut RankState,
+                            hooks: &dyn Hooks, iter: u64, micro: u32,
+                            tape: &LayerTape, dy: &Tensor) -> Tensor {
+        let layer = tape.layer;
+        // rewrite point for the backward input (grad of the layer output)
+        let rid = CanonId::new(iter, micro, Kind::ActGrad,
+                               format!("layers.{layer}.output"));
+        let dy = hooks
+            .rewrite_input(&rid, &self.spec_sp(ctx), dy)
+            .unwrap_or_else(|| dy.clone());
+
+        // Recomputation: rebuild the intermediate activations now. Bug 2
+        // recomputes from the layer *output* (a stale/wrong stash) instead
+        // of the input.
+        let rebuilt: LayerInner;
+        let inner: &LayerInner = match &tape.inner {
+            Some(i) => i,
+            None => {
+                let src = if self.bugs.on(BugId::B2ArWrongInput) {
+                    &tape.out
+                } else {
+                    &tape.x
+                };
+                let (_, i) = self.layer_fwd(ctx, st, hooks, iter, micro, layer,
+                                            src, false);
+                rebuilt = i;
+                &rebuilt
+            }
+        };
+
+        let pre = format!("layers.{layer}");
+
+        // ---- MLP branch -------------------------------------------------
+        // residual passthrough: d(mlp_out) = dy
+        let d_mlp_red = self.rowpar_reduce_bwd(ctx, &dy); // [B,t_cp,D]
+        let (dx_mlp_partial, d_router) = if self.p.moe {
+            let w1 = st.params.model(&format!("{pre}.mlp.experts.fc1.weight")).clone();
+            let b1 = st.params.model(&format!("{pre}.mlp.experts.fc1.bias")).clone();
+            let w2 = st.params.model(&format!("{pre}.mlp.experts.fc2.weight")).clone();
+            let combine = inner.combine_full.as_ref().unwrap();
+            let mut outs = self.run_mod(
+                &self.sh.k_experts_bwd(),
+                &[&inner.mlp_in, &w1, &b1, &w2, combine, &d_mlp_red]);
+            let dcombine = outs.remove(4);
+            let dw2 = outs.remove(3);
+            let db1 = outs.remove(2);
+            let dw1 = outs.remove(1);
+            let dx = outs.remove(0);
+            self.acc_grad(ctx, st, hooks, iter, micro,
+                          &format!("{pre}.mlp.experts.fc1.weight"), &dw1);
+            self.acc_grad(ctx, st, hooks, iter, micro,
+                          &format!("{pre}.mlp.experts.fc1.bias"), &db1);
+            self.acc_grad(ctx, st, hooks, iter, micro,
+                          &format!("{pre}.mlp.experts.fc2.weight"), &dw2);
+            // bwd of the sp all-gather of combine: reduce-scatter (f32)
+            let dcombine_local = if self.p.sp {
+                self.sp_scatter_grad(ctx, &dcombine, crate::comm::RedPrec::F32)
+            } else {
+                dcombine
+            };
+            let wr = st.params.model(&format!("{pre}.mlp.router.weight")).clone();
+            let mut r_outs = self.run_mod(&self.sh.k_router_bwd(),
+                                          &[&inner.ln2_out, &wr, &dcombine_local]);
+            let dwr = r_outs.remove(1);
+            let dxr = r_outs.remove(0);
+            self.rec(hooks, iter, micro, Kind::ActGrad, &names::router(layer),
+                     &dxr, self.spec_sp(ctx));
+            self.acc_grad(ctx, st, hooks, iter, micro,
+                          &format!("{pre}.mlp.router.weight"), &dwr);
+            (dx, Some(dxr))
+        } else {
+            let w1 = st.params.model(&format!("{pre}.mlp.fc1.weight")).clone();
+            let b1 = st.params.model(&format!("{pre}.mlp.fc1.bias")).clone();
+            let w2 = st.params.model(&format!("{pre}.mlp.fc2.weight")).clone();
+            let (dx, dw1, db1, dw2) = if self.p.fp8 {
+                let s = &inner.scales; // [qkv sx,sw, proj sx,sw, mlp sx,sw1,sh,sw2]
+                let sdy = Self::fp8_scale_e5m2(self.fp8_amax(ctx, &d_mlp_red));
+                let mut outs = self.run_mod(
+                    &self.sh.k_mlp_fp8_bwd(),
+                    &[&inner.mlp_in, &w1, &b1, &w2,
+                      &Tensor::scalar(s[4], DType::F32),
+                      &Tensor::scalar(s[5], DType::F32),
+                      &Tensor::scalar(s[6], DType::F32),
+                      &Tensor::scalar(s[7], DType::F32),
+                      &Tensor::scalar(sdy, DType::F32), &d_mlp_red]);
+                (outs.remove(0), outs.remove(0), outs.remove(0), outs.remove(0))
+            } else {
+                let mut outs = self.run_mod(
+                    &self.sh.k_mlp_bwd(),
+                    &[&inner.mlp_in, &w1, &b1, &w2, &d_mlp_red]);
+                (outs.remove(0), outs.remove(0), outs.remove(0), outs.remove(0))
+            };
+            self.acc_grad(ctx, st, hooks, iter, micro,
+                          &format!("{pre}.mlp.fc1.weight"), &dw1);
+            self.acc_grad(ctx, st, hooks, iter, micro,
+                          &format!("{pre}.mlp.fc1.bias"), &db1);
+            self.acc_grad(ctx, st, hooks, iter, micro,
+                          &format!("{pre}.mlp.fc2.weight"), &dw2);
+            (dx, None)
+        };
+        // column-parallel dx is a partial sum over tp
+        let mut dx_ln2 = self.colpar_dx_reduce(ctx, &dx_mlp_partial);
+        if let Some(dxr) = d_router {
+            dx_ln2 = dx_ln2.add_bf16(&dxr);
+        }
+        self.rec(hooks, iter, micro, Kind::ActGrad, &names::mlp(layer), &dx_ln2,
+                 self.spec_sp(ctx));
+
+        // pre-MLP layernorm backward
+        let g2 = st.params.model(&format!("{pre}.pre_mlp_layernorm.weight")).clone();
+        let b2 = st.params.model(&format!("{pre}.pre_mlp_layernorm.bias")).clone();
+        let mut ln2_outs = self.run_mod(&self.sh.k_ln_bwd(),
+                                        &[&inner.resid1, &g2, &b2, &dx_ln2]);
+        let db2 = ln2_outs.remove(2);
+        let dg2 = ln2_outs.remove(1);
+        let dx_r1 = ln2_outs.remove(0);
+        self.rec(hooks, iter, micro, Kind::ActGrad, &names::pre_mlp_ln(layer),
+                 &dx_r1, self.spec_sp(ctx));
+        self.acc_grad(ctx, st, hooks, iter, micro,
+                      &format!("{pre}.pre_mlp_layernorm.weight"), &dg2);
+        self.acc_grad(ctx, st, hooks, iter, micro,
+                      &format!("{pre}.pre_mlp_layernorm.bias"), &db2);
+
+        let d_resid1 = dy.add_bf16(&dx_r1);
+
+        // ---- attention branch -------------------------------------------
+        // proj bias grad (host, matches the host-side bias add)
+        let dbias_proj = seq::bias_grad(&d_resid1);
+        self.acc_grad(ctx, st, hooks, iter, micro,
+                      &format!("{pre}.self_attention.linear_proj.bias"),
+                      &dbias_proj);
+        let d_proj_partial = self.rowpar_reduce_bwd(ctx, &d_resid1);
+        let wp = st.params.model(&format!(
+            "{pre}.self_attention.linear_proj.weight")).clone();
+        let (d_attn, dwp) = if self.p.fp8 {
+            let s = &inner.scales;
+            let sdy = Self::fp8_scale_e5m2(self.fp8_amax(ctx, &d_proj_partial));
+            let mut outs = self.run_mod(
+                &self.sh.k_proj_fp8_bwd(),
+                &[&inner.attn_out, &wp, &Tensor::scalar(s[2], DType::F32),
+                  &Tensor::scalar(s[3], DType::F32),
+                  &Tensor::scalar(sdy, DType::F32), &d_proj_partial]);
+            (outs.remove(0), outs.remove(0))
+        } else {
+            let mut outs = self.run_mod(&self.sh.k_proj_bwd(),
+                                        &[&inner.attn_out, &wp, &d_proj_partial]);
+            (outs.remove(0), outs.remove(0))
+        };
+        self.acc_grad(ctx, st, hooks, iter, micro,
+                      &format!("{pre}.self_attention.linear_proj.weight"), &dwp);
+        self.rec(hooks, iter, micro, Kind::ActGrad, &names::proj(layer), &d_attn,
+                 self.spec_cp(ctx, self.sh.d, true));
+
+        // core attention backward
+        let do_heads = d_attn
+            .reshape(&[self.sh.b, self.sh.t_cp, self.sh.hp, self.sh.hd])
+            .permute(&[0, 2, 1, 3]);
+        let mut a_outs = self.run_mod(
+            &self.sh.k_attn_bwd(),
+            &[&inner.q, &inner.k_full, &inner.v_full, &inner.mask, &do_heads]);
+        let dv_full = a_outs.remove(2);
+        let dk_full = a_outs.remove(1);
+        let dq = a_outs.remove(0);
+        let dk = self.cp_scatter_kv_grad(ctx, &dk_full);
+        let dv = self.cp_scatter_kv_grad(ctx, &dv_full);
+        let dqkv = self.merge_heads3(&dq, &dk, &dv);
+        self.rec(hooks, iter, micro, Kind::ActGrad, &names::core_attn(layer),
+                 &dqkv, self.spec_qkv(ctx));
+
+        // fused QKV backward
+        let wq = st.params.model(&format!(
+            "{pre}.self_attention.linear_qkv.weight")).clone();
+        let bq = st.params.model(&format!(
+            "{pre}.self_attention.linear_qkv.bias")).clone();
+        let (dx_qkv, dwq, dbq) = if self.p.fp8 {
+            let s = &inner.scales;
+            let sdy = Self::fp8_scale_e5m2(self.fp8_amax(ctx, &dqkv));
+            let mut outs = self.run_mod(
+                &self.sh.k_qkv_fp8_bwd(),
+                &[&inner.qkv_in, &wq, &Tensor::scalar(s[0], DType::F32),
+                  &Tensor::scalar(s[1], DType::F32),
+                  &Tensor::scalar(sdy, DType::F32), &dqkv]);
+            (outs.remove(0), outs.remove(0), outs.remove(0))
+        } else {
+            let mut outs = self.run_mod(&self.sh.k_qkv_bwd(),
+                                        &[&inner.qkv_in, &wq, &bq, &dqkv]);
+            (outs.remove(0), outs.remove(0), outs.remove(0))
+        };
+        self.acc_grad(ctx, st, hooks, iter, micro,
+                      &format!("{pre}.self_attention.linear_qkv.weight"), &dwq);
+        self.acc_grad(ctx, st, hooks, iter, micro,
+                      &format!("{pre}.self_attention.linear_qkv.bias"), &dbq);
+        let dx_ln1 = self.colpar_dx_reduce(ctx, &dx_qkv);
+        self.rec(hooks, iter, micro, Kind::ActGrad, &names::qkv(layer), &dx_ln1,
+                 self.spec_sp(ctx));
+
+        // input layernorm backward
+        let g1 = st.params.model(&format!("{pre}.input_layernorm.weight")).clone();
+        let b1 = st.params.model(&format!("{pre}.input_layernorm.bias")).clone();
+        let mut ln1_outs = self.run_mod(&self.sh.k_ln_bwd(),
+                                        &[&tape.x, &g1, &b1, &dx_ln1]);
+        let db1 = ln1_outs.remove(2);
+        let dg1 = ln1_outs.remove(1);
+        let dx0 = ln1_outs.remove(0);
+        self.rec(hooks, iter, micro, Kind::ActGrad, &names::input_ln(layer),
+                 &dx0, self.spec_sp(ctx));
+        self.acc_grad(ctx, st, hooks, iter, micro,
+                      &format!("{pre}.input_layernorm.weight"), &dg1);
+        self.acc_grad(ctx, st, hooks, iter, micro,
+                      &format!("{pre}.input_layernorm.bias"), &db1);
+
+        d_resid1.add_bf16(&dx0)
+    }
+
+    /// Embedding backward (first stage, first chunk).
+    pub(crate) fn embed_bwd_path(&self, ctx: &RankCtx, st: &mut RankState,
+                                 hooks: &dyn Hooks, iter: u64, micro: u32,
+                                 tokens: &Tensor, d_embed: &Tensor) {
+        // bwd of the fwd tp reduction: all-reduce -> identity; SP
+        // reduce-scatter -> all-gather
+        let d_full = if self.p.sp {
+            self.sp_gather(ctx, d_embed)
+        } else {
+            d_embed.clone()
+        };
+        self.rec(hooks, iter, micro, Kind::ActGrad, &names::embedding(),
+                 &d_full, self.spec_cp(ctx, self.sh.d, false));
+        let tp = ctx.tp_group();
+        let correct = (self.sh.vp * ctx.coord.tp) as i32;
+        // bug 1 corrupts the backward mask identically to the forward
+        let offset = if self.bugs.on(BugId::B1TpEmbeddingMask) && tp.size > 1 {
+            correct + 1
+        } else {
+            correct
+        };
+        let off = Tensor::scalar(offset as f32, DType::I32);
+        let table = st.params.model("embedding.word_embeddings.weight").clone();
+        let dtable = self.run_mod(&self.sh.k_embed_bwd(),
+                                  &[tokens, &table, &off, &d_full]).remove(0);
+        self.acc_grad(ctx, st, hooks, iter, micro,
+                      "embedding.word_embeddings.weight", &dtable);
+    }
+}

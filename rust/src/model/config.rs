@@ -1,0 +1,311 @@
+//! Model and parallelism configuration.
+//!
+//! The named model presets MUST stay in lock-step with
+//! `python/compile/aot.py::CONFIGS` (same dims): the engine recomputes each
+//! module's shape parameters and loads the artifact keyed by
+//! `manifest::module_key(name, params)`.
+
+use anyhow::{bail, Result};
+
+use crate::dist::Topology;
+use crate::runtime::manifest::module_key;
+
+/// Model dimensions. `b` is the microbatch size baked into the artifacts.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelCfg {
+    pub name: &'static str,
+    pub b: usize,
+    pub s: usize,
+    pub d: usize,
+    pub h: usize,
+    pub f: usize,
+    pub v: usize,
+    pub e: usize,
+    /// default transformer layer count (overridable per run; layers are a
+    /// runtime loop, not baked into artifacts)
+    pub layers: usize,
+}
+
+pub const TINY: ModelCfg = ModelCfg {
+    name: "tiny", b: 2, s: 16, d: 32, h: 4, f: 64, v: 64, e: 2, layers: 2,
+};
+
+pub const SMALL: ModelCfg = ModelCfg {
+    name: "small", b: 2, s: 32, d: 64, h: 4, f: 256, v: 256, e: 2, layers: 4,
+};
+
+pub const E2E: ModelCfg = ModelCfg {
+    name: "e2e", b: 4, s: 128, d: 256, h: 8, f: 1024, v: 2048, e: 2, layers: 8,
+};
+
+pub fn preset(name: &str) -> Result<ModelCfg> {
+    Ok(match name {
+        "tiny" => TINY,
+        "small" => SMALL,
+        "e2e" => E2E,
+        _ => bail!("unknown model preset '{name}' (tiny|small|e2e)"),
+    })
+}
+
+impl ModelCfg {
+    pub fn head_dim(&self) -> usize {
+        self.d / self.h
+    }
+
+    /// Approximate parameter count at `layers` layers (tied embeddings).
+    pub fn param_count(&self, layers: usize) -> usize {
+        let d = self.d;
+        self.v * d + layers * (12 * d * d) + 2 * d
+    }
+
+    pub fn with_layers(mut self, layers: usize) -> ModelCfg {
+        self.layers = layers;
+        self
+    }
+}
+
+/// Pipeline schedule flavor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// all microbatch forwards, then all backwards (flush)
+    GPipe,
+    /// one-forward-one-backward steady state
+    OneF1B,
+}
+
+/// Parallel/runtime configuration of a training run.
+#[derive(Clone, Debug)]
+pub struct ParCfg {
+    pub topo: Topology,
+    /// sequence parallelism (shards LN/residual domain across tp)
+    pub sp: bool,
+    pub n_micro: usize,
+    pub schedule: Schedule,
+    /// activation recomputation (store layer inputs only, recompute in bwd)
+    pub recompute: bool,
+    /// FP8 (e4m3 emulated) linear layers
+    pub fp8: bool,
+    /// dense top-1 MoE MLPs instead of dense MLPs
+    pub moe: bool,
+    /// ZeRO-1 distributed optimizer over the dp×cp group
+    pub zero1: bool,
+    /// overlap grad communication with compute (bug #11's habitat; the
+    /// simulation keeps semantics identical unless the bug is armed)
+    pub overlap: bool,
+}
+
+impl ParCfg {
+    pub fn single() -> ParCfg {
+        ParCfg {
+            topo: Topology::single(),
+            sp: false,
+            n_micro: 1,
+            schedule: Schedule::GPipe,
+            recompute: false,
+            fp8: false,
+            moe: false,
+            zero1: false,
+            overlap: false,
+        }
+    }
+
+    pub fn validate(&self, m: &ModelCfg, layers: usize) -> Result<()> {
+        let t = &self.topo;
+        if m.h % t.tp != 0 || m.v % t.tp != 0 || m.f % t.tp != 0 {
+            bail!("tp={} must divide heads/vocab/ffn of {}", t.tp, m.name);
+        }
+        if t.cp > 1 && m.s % (2 * t.cp) != 0 {
+            bail!("cp={} needs seq divisible by 2*cp", t.cp);
+        }
+        if self.sp && (m.s / t.cp) % t.tp != 0 {
+            bail!("sp needs local seq divisible by tp");
+        }
+        if layers % (t.pp * t.vpp) != 0 {
+            bail!("layers={layers} must divide into pp*vpp={}", t.pp * t.vpp);
+        }
+        if self.fp8 && t.cp > 1 {
+            bail!("fp8 artifacts are not generated for cp>1");
+        }
+        if self.moe && (t.cp > 1 || self.fp8) {
+            bail!("moe artifacts are not generated for cp>1 or fp8");
+        }
+        Ok(())
+    }
+}
+
+/// Derived local shapes for one rank under (ModelCfg, ParCfg) — the single
+/// source of truth for both artifact keys and host-side tensor plumbing.
+#[derive(Clone, Copy, Debug)]
+pub struct Shapes {
+    pub b: usize,
+    pub s: usize,
+    /// local sequence inside the attention block (S / cp)
+    pub t_cp: usize,
+    /// sequence at LN/residual points (t_cp / tp under SP)
+    pub t_sp: usize,
+    pub d: usize,
+    pub hd: usize,
+    /// heads per rank
+    pub hp: usize,
+    /// 3*D/tp — fused qkv output width per rank
+    pub dp3: usize,
+    /// D/tp — attention value width per rank
+    pub dp: usize,
+    /// ffn per rank
+    pub fp: usize,
+    /// vocab per rank
+    pub vp: usize,
+    pub e: usize,
+}
+
+impl Shapes {
+    pub fn derive(m: &ModelCfg, p: &ParCfg) -> Shapes {
+        let tp = p.topo.tp;
+        let cp = p.topo.cp;
+        let t_cp = m.s / cp;
+        let t_sp = if p.sp { t_cp / tp } else { t_cp };
+        Shapes {
+            b: m.b,
+            s: m.s,
+            t_cp,
+            t_sp,
+            d: m.d,
+            hd: m.head_dim(),
+            hp: m.h / tp,
+            dp3: 3 * m.d / tp,
+            dp: m.d / tp,
+            fp: m.f / tp,
+            vp: m.v / tp,
+            e: m.e,
+        }
+    }
+
+    // ---- artifact keys (must mirror aot.py::variant_requests) ------------
+
+    pub fn k_embed_fwd(&self) -> String {
+        module_key("embed_fwd", &[self.b, self.t_cp, self.vp, self.d])
+    }
+    pub fn k_embed_bwd(&self) -> String {
+        module_key("embed_bwd", &[self.b, self.t_cp, self.vp, self.d])
+    }
+    pub fn k_ln_fwd(&self) -> String {
+        module_key("ln_fwd", &[self.b, self.t_sp, self.d])
+    }
+    pub fn k_ln_bwd(&self) -> String {
+        module_key("ln_bwd", &[self.b, self.t_sp, self.d])
+    }
+    pub fn k_qkv_fwd(&self) -> String {
+        module_key("linear_fwd", &[self.b, self.t_cp, self.d, self.dp3])
+    }
+    pub fn k_qkv_bwd(&self) -> String {
+        module_key("linear_bwd", &[self.b, self.t_cp, self.d, self.dp3])
+    }
+    pub fn k_qkv_fp8_fwd(&self) -> String {
+        module_key("linear_fp8_fwd", &[self.b, self.t_cp, self.d, self.dp3])
+    }
+    pub fn k_qkv_fp8_bwd(&self) -> String {
+        module_key("linear_fp8_bwd", &[self.b, self.t_cp, self.d, self.dp3])
+    }
+    pub fn k_attn_fwd(&self) -> String {
+        module_key("attn_fwd", &[self.b, self.hp, self.t_cp, self.s, self.hd])
+    }
+    pub fn k_attn_bwd(&self) -> String {
+        module_key("attn_bwd", &[self.b, self.hp, self.t_cp, self.s, self.hd])
+    }
+    pub fn k_proj_fwd(&self) -> String {
+        module_key("linearnb_fwd", &[self.b, self.t_cp, self.dp, self.d])
+    }
+    pub fn k_proj_bwd(&self) -> String {
+        module_key("linearnb_bwd", &[self.b, self.t_cp, self.dp, self.d])
+    }
+    pub fn k_proj_fp8_fwd(&self) -> String {
+        module_key("linearnb_fp8_fwd", &[self.b, self.t_cp, self.dp, self.d])
+    }
+    pub fn k_proj_fp8_bwd(&self) -> String {
+        module_key("linearnb_fp8_bwd", &[self.b, self.t_cp, self.dp, self.d])
+    }
+    pub fn k_mlp_fwd(&self) -> String {
+        module_key("mlp_fwd", &[self.b, self.t_cp, self.d, self.fp])
+    }
+    pub fn k_mlp_bwd(&self) -> String {
+        module_key("mlp_bwd", &[self.b, self.t_cp, self.d, self.fp])
+    }
+    pub fn k_mlp_fp8_fwd(&self) -> String {
+        module_key("mlp_fp8_fwd", &[self.b, self.t_cp, self.d, self.fp])
+    }
+    pub fn k_mlp_fp8_bwd(&self) -> String {
+        module_key("mlp_fp8_bwd", &[self.b, self.t_cp, self.d, self.fp])
+    }
+    pub fn k_lmhead_fwd(&self) -> String {
+        module_key("lmhead_fwd", &[self.b, self.t_cp, self.d, self.vp])
+    }
+    pub fn k_lmhead_bwd(&self) -> String {
+        module_key("lmhead_bwd", &[self.b, self.t_cp, self.d, self.vp])
+    }
+    pub fn k_logits_max(&self) -> String {
+        module_key("logits_max", &[self.b, self.t_cp, self.vp])
+    }
+    pub fn k_xent_local(&self) -> String {
+        module_key("xent_local", &[self.b, self.t_cp, self.vp])
+    }
+    pub fn k_router_fwd(&self) -> String {
+        module_key("router_fwd", &[self.b, self.t_sp, self.d, self.e])
+    }
+    pub fn k_router_bwd(&self) -> String {
+        module_key("router_bwd", &[self.b, self.t_sp, self.d, self.e])
+    }
+    pub fn k_experts_fwd(&self) -> String {
+        module_key("experts_fwd", &[self.b, self.t_cp, self.d, self.fp, self.e])
+    }
+    pub fn k_experts_bwd(&self) -> String {
+        module_key("experts_bwd", &[self.b, self.t_cp, self.d, self.fp, self.e])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_single_device() {
+        let p = ParCfg::single();
+        let s = Shapes::derive(&TINY, &p);
+        assert_eq!(s.t_cp, 16);
+        assert_eq!(s.t_sp, 16);
+        assert_eq!(s.dp3, 96);
+        assert_eq!(s.k_attn_fwd(), "attn_fwd__2_4_16_16_8");
+    }
+
+    #[test]
+    fn shapes_tp2_sp_cp2() {
+        let mut p = ParCfg::single();
+        p.topo = Topology::new(1, 2, 1, 2, 1).unwrap();
+        p.sp = true;
+        let s = Shapes::derive(&TINY, &p);
+        assert_eq!(s.t_cp, 8);
+        assert_eq!(s.t_sp, 4);
+        assert_eq!(s.hp, 2);
+        assert_eq!(s.vp, 32);
+        assert_eq!(s.k_ln_fwd(), "ln_fwd__2_4_32");
+        assert_eq!(s.k_attn_fwd(), "attn_fwd__2_2_8_16_8");
+    }
+
+    #[test]
+    fn validate_catches_bad_combos() {
+        let m = TINY;
+        let mut p = ParCfg::single();
+        p.topo = Topology::new(1, 8, 1, 1, 1).unwrap();
+        assert!(p.validate(&m, 2).is_err()); // tp=8 > heads=4
+        let mut p2 = ParCfg::single();
+        p2.topo = Topology::new(1, 1, 2, 1, 1).unwrap();
+        assert!(p2.validate(&m, 3).is_err()); // 3 layers on 2 stages
+        assert!(p2.validate(&m, 4).is_ok());
+    }
+
+    #[test]
+    fn param_count_e2e_scale() {
+        // e2e preset at 8 layers ≈ 7M params (documented in EXPERIMENTS.md)
+        let n = E2E.param_count(8);
+        assert!(n > 6_000_000 && n < 9_000_000, "{n}");
+    }
+}

@@ -1,0 +1,351 @@
+//! The distributed GPT training engine — the substrate TTrace checks.
+//!
+//! One `Engine` describes a training run (model dims, parallel layout,
+//! armed bug); `run` executes it SPMD over simulated ranks. The engine is
+//! a *manual-backprop* pipeline: every module's forward/backward is an AOT
+//! HLO execution (`runtime::Executor`), every collective happens between
+//! module calls in Rust — exactly the layer where Megatron's silent bugs
+//! live, and exactly the hook surface TTrace traces.
+//!
+//! The reference (single-device) run is the same code with world size 1:
+//! reference/candidate differences can only come from parallelization
+//! semantics (or an armed bug), never from divergent code paths.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::bugs::{BugId, BugSet};
+use crate::comm::{RedOp, RedPrec};
+use crate::dist::{Group, RankCtx};
+use crate::runtime::Executor;
+use crate::tensor::{DType, Tensor};
+use crate::ttrace::canonical::LayerMap;
+use crate::ttrace::hooks::{CanonId, Hooks, Kind};
+use crate::ttrace::shard::ShardSpec;
+
+use super::config::{ModelCfg, ParCfg, Shapes};
+use super::params::{build as build_params, ParamSet};
+use super::seq;
+
+const E4M3_MAX: f32 = 448.0;
+const E5M2_MAX: f32 = 57344.0;
+
+pub struct Engine<'a> {
+    pub m: ModelCfg,
+    pub p: ParCfg,
+    pub layers: usize,
+    pub sh: Shapes,
+    pub lr: f32,
+    pub exec: &'a Executor,
+    pub bugs: BugSet,
+}
+
+/// Per-rank mutable training state.
+pub struct RankState {
+    pub params: ParamSet,
+    pub lmap: LayerMap,
+    /// chunk index v -> global layer ids this stage computes for chunk v
+    pub chunks: Vec<Vec<usize>>,
+    pub holds_embedding: bool,
+    pub holds_lmhead: bool,
+    pub adam_t: u64,
+    /// delayed fp8 scales for tensors not observable on the host (the
+    /// post-gelu activation inside the fused fp8 MLP)
+    pub fp8_sh: HashMap<String, f32>,
+    /// mean loss of the last iteration (last-stage ranks only)
+    pub last_loss: Option<f64>,
+    /// global gradient norm of the last iteration
+    pub last_grad_norm: Option<f64>,
+}
+
+// ---------------------------------------------------------------------------
+// tapes (saved forward state for manual backprop)
+// ---------------------------------------------------------------------------
+
+pub(crate) struct LayerInner {
+    pub(crate) qkv_in: Tensor,
+    pub(crate) q: Tensor,
+    pub(crate) k_full: Tensor,
+    pub(crate) v_full: Tensor,
+    pub(crate) mask: Tensor,
+    pub(crate) attn_out: Tensor,
+    pub(crate) resid1: Tensor,
+    pub(crate) ln2_out: Tensor,
+    pub(crate) mlp_in: Tensor,
+    pub(crate) combine_full: Option<Tensor>,
+    /// fp8 scales used in fwd (must be reused in bwd): qkv(sx,sw),
+    /// proj(sx,sw), mlp(sx,sw1,sh,sw2)
+    pub(crate) scales: Vec<f32>,
+}
+
+pub(crate) struct LayerTape {
+    pub(crate) layer: usize,
+    pub(crate) x: Tensor,
+    /// layer output (kept for the bug-2 stale-recompute fault)
+    pub(crate) out: Tensor,
+    pub(crate) inner: Option<LayerInner>,
+}
+
+pub(crate) struct HeadTape {
+    pub(crate) resid: Tensor,
+    pub(crate) x_head: Tensor,
+    pub(crate) targets: Tensor,
+    pub(crate) gmax: Tensor,
+    pub(crate) gsum: Tensor,
+}
+
+pub(crate) struct ChunkTape {
+    pub(crate) tokens: Option<Tensor>,
+    pub(crate) layers: Vec<LayerTape>,
+    pub(crate) head: Option<HeadTape>,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(m: ModelCfg, p: ParCfg, layers: usize, exec: &'a Executor,
+               bugs: BugSet) -> Result<Engine<'a>> {
+        p.validate(&m, layers)?;
+        let sh = Shapes::derive(&m, &p);
+        Ok(Engine { m, p, layers, sh, lr: 1e-3, exec, bugs })
+    }
+
+    pub fn init_rank(&self, ctx: &RankCtx) -> RankState {
+        let topo = self.p.topo;
+        let lmap = LayerMap::new(self.layers, topo.pp, topo.vpp).unwrap();
+        // Bug 10: the stage-division code assigns each stage the layer
+        // block of the *next* stage (a rotation) — shapes stay legal, the
+        // composed model silently applies layers in the wrong order.
+        let pp_for_layers = if self.bugs.on(BugId::B10PpStageDivision) && topo.pp > 1 {
+            (ctx.coord.pp + 1) % topo.pp
+        } else {
+            ctx.coord.pp
+        };
+        let chunks: Vec<Vec<usize>> = (0..topo.vpp)
+            .map(|v| lmap.chunk_layers(pp_for_layers, v))
+            .collect();
+        let holds_embedding = ctx.is_first_stage();
+        let holds_lmhead = ctx.is_last_stage();
+        let all_layers: Vec<usize> = chunks.iter().flatten().copied().collect();
+        let params = build_params(&self.m, &self.p, ctx.coord, self.layers,
+                                  &all_layers, holds_embedding, holds_lmhead);
+        RankState {
+            params,
+            lmap,
+            chunks,
+            holds_embedding,
+            holds_lmhead,
+            adam_t: 0,
+            fp8_sh: HashMap::new(),
+            last_loss: None,
+            last_grad_norm: None,
+        }
+    }
+
+    // -------------------------------------------------------------------
+    // small helpers
+    // -------------------------------------------------------------------
+
+    pub(crate) fn run_mod(&self, key: &str, inputs: &[&Tensor]) -> Vec<Tensor> {
+        self.exec
+            .run(key, inputs)
+            .unwrap_or_else(|e| panic!("module {key}: {e:#}"))
+    }
+
+    pub(crate) fn ar_bf16(&self, ctx: &RankCtx, g: &Group, t: &Tensor) -> Tensor {
+        if g.size == 1 {
+            return t.clone();
+        }
+        ctx.comm.all_reduce(&g.key, g.me, g.size, t, RedOp::Sum, RedPrec::Bf16)
+    }
+
+    pub(crate) fn ar_f32(&self, ctx: &RankCtx, g: &Group, t: &Tensor) -> Tensor {
+        if g.size == 1 {
+            return t.clone();
+        }
+        ctx.comm.all_reduce(&g.key, g.me, g.size, t, RedOp::Sum, RedPrec::F32)
+    }
+
+    pub(crate) fn ar_max(&self, ctx: &RankCtx, g: &Group, t: &Tensor) -> Tensor {
+        if g.size == 1 {
+            return t.clone();
+        }
+        ctx.comm.all_reduce(&g.key, g.me, g.size, t, RedOp::Max, RedPrec::F32)
+    }
+
+    /// SP all-gather along the sequence dim (tp member order = seq order).
+    pub(crate) fn sp_gather(&self, ctx: &RankCtx, t: &Tensor) -> Tensor {
+        if !self.p.sp || self.p.topo.tp == 1 {
+            return t.clone();
+        }
+        let g = ctx.tp_group();
+        let parts = ctx.comm.all_gather(&g.key, g.me, g.size, t);
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        Tensor::concat(&refs, 1)
+    }
+
+    /// Inverse of `sp_gather` for gradients: reduce(sum) + scatter my slice.
+    pub(crate) fn sp_scatter_grad(&self, ctx: &RankCtx, t: &Tensor, prec: RedPrec) -> Tensor {
+        if !self.p.sp || self.p.topo.tp == 1 {
+            return t.clone();
+        }
+        let g = ctx.tp_group();
+        ctx.comm.reduce_scatter(&g.key, g.me, g.size, t, 1, RedOp::Sum, prec)
+    }
+
+    /// Row-parallel output reduction: all-reduce, or reduce-scatter under SP.
+    pub(crate) fn rowpar_reduce(&self, ctx: &RankCtx, t: &Tensor) -> Tensor {
+        let g = ctx.tp_group();
+        if g.size == 1 {
+            return t.clone();
+        }
+        if self.p.sp {
+            ctx.comm.reduce_scatter(&g.key, g.me, g.size, t, 1, RedOp::Sum,
+                                    RedPrec::Bf16)
+        } else {
+            self.ar_bf16(ctx, &g, t)
+        }
+    }
+
+    /// Backward of `rowpar_reduce`: identity (all-reduce) or all-gather (SP).
+    pub(crate) fn rowpar_reduce_bwd(&self, ctx: &RankCtx, t: &Tensor) -> Tensor {
+        self.sp_gather(ctx, t)
+    }
+
+    /// Column-parallel input-grad reduction (dx is a partial sum over tp).
+    /// Bug 11: with comm/compute overlap armed, the all-reduce is skipped
+    /// and the partial gradient flows on (M-CM).
+    pub(crate) fn colpar_dx_reduce(&self, ctx: &RankCtx, t: &Tensor) -> Tensor {
+        if self.bugs.on(BugId::B11TpOverlapGrads) && self.p.overlap {
+            // the "overlapped" reduce never lands
+            return if self.p.sp {
+                // keep shapes legal under SP: local slice of the partial
+                let g = ctx.tp_group();
+                let len = t.dims[1] / g.size;
+                t.narrow(1, g.me * len, len)
+            } else {
+                t.clone()
+            };
+        }
+        if self.p.sp {
+            self.sp_scatter_grad(ctx, t, RedPrec::Bf16)
+        } else {
+            let g = ctx.tp_group();
+            self.ar_bf16(ctx, &g, t)
+        }
+    }
+
+    /// Record an activation-kind tensor.
+    pub(crate) fn rec(&self, hooks: &dyn Hooks, iter: u64, micro: u32, kind: Kind,
+           module: &str, t: &Tensor, spec: ShardSpec) {
+        hooks.record(&CanonId::new(iter, micro, kind, module), t, &spec);
+    }
+
+    /// ShardSpec for a residual-domain tensor [B, S, D] (sp+cp sharded).
+    pub(crate) fn spec_sp(&self, ctx: &RankCtx) -> ShardSpec {
+        let topo = self.p.topo;
+        seq::seq_spec(&[self.sh.b, self.sh.s, self.sh.d], 1, ctx.coord.cp,
+                      topo.cp, if self.p.sp { ctx.coord.tp } else { 0 },
+                      if self.p.sp { topo.tp } else { 1 })
+    }
+
+    /// ShardSpec for an attention-domain tensor [B, S, width] (cp stripes,
+    /// optional tp split of the last dim).
+    pub(crate) fn spec_cp(&self, ctx: &RankCtx, width: usize, tp_split: bool) -> ShardSpec {
+        let topo = self.p.topo;
+        let mut spec = seq::seq_spec(&[self.sh.b, self.sh.s, width], 1,
+                                     ctx.coord.cp, topo.cp, 0, 1);
+        if tp_split && topo.tp > 1 {
+            spec = spec.and_split(2, ctx.coord.tp, topo.tp);
+        }
+        spec
+    }
+
+    /// ShardSpec for the fused-QKV output [B, S, 3D].
+    pub(crate) fn spec_qkv(&self, ctx: &RankCtx) -> ShardSpec {
+        let topo = self.p.topo;
+        let spec = seq::seq_spec(&[self.sh.b, self.sh.s, 3 * self.sh.d], 1,
+                                 ctx.coord.cp, topo.cp, 0, 1);
+        if topo.tp > 1 {
+            spec.and_qkv_split(2, self.sh.d, ctx.coord.tp, topo.tp)
+        } else {
+            spec
+        }
+    }
+
+    pub(crate) fn fp8_scale_e4m3(amax: f32) -> f32 {
+        if amax <= 0.0 { 1.0 } else { E4M3_MAX / amax }
+    }
+
+    pub(crate) fn fp8_scale_e5m2(amax: f32) -> f32 {
+        if amax <= 0.0 { 1.0 } else { E5M2_MAX / amax }
+    }
+
+    /// amax of a tensor synchronized over the fp8 scaling group (tp).
+    /// Bug 7 syncs over the dp group instead — a wrong communication group
+    /// that silently desynchronizes quantization grids vs the reference.
+    pub(crate) fn fp8_amax(&self, ctx: &RankCtx, t: &Tensor) -> f32 {
+        let local = Tensor::scalar(t.max_abs(), DType::F32);
+        let g = if self.bugs.on(BugId::B7Fp8WrongGroup) {
+            ctx.dp_group()
+        } else {
+            ctx.tp_group()
+        };
+        self.ar_max(ctx, &g, &local).data[0]
+    }
+
+    /// Split a fused-qkv activation [B,T,3Dp] into q,k,v in [B,Hp,T,hd].
+    pub(crate) fn split_heads(&self, qkv: &Tensor) -> (Tensor, Tensor, Tensor) {
+        let (b, t) = (qkv.dims[0], qkv.dims[1]);
+        let dp = self.sh.dp;
+        let to_heads = |x: Tensor| -> Tensor {
+            x.reshape(&[b, t, self.sh.hp, self.sh.hd]).permute(&[0, 2, 1, 3])
+        };
+        let q = to_heads(qkv.narrow(2, 0, dp));
+        let k = to_heads(qkv.narrow(2, dp, dp));
+        let v = to_heads(qkv.narrow(2, 2 * dp, dp));
+        (q, k, v)
+    }
+
+    /// Inverse of `split_heads`.
+    pub(crate) fn merge_heads3(&self, dq: &Tensor, dk: &Tensor, dv: &Tensor) -> Tensor {
+        let from_heads = |x: &Tensor| -> Tensor {
+            let p = x.permute(&[0, 2, 1, 3]);
+            let (b, t) = (p.dims[0], p.dims[1]);
+            p.reshape(&[b, t, self.sh.dp])
+        };
+        let (q, k, v) = (from_heads(dq), from_heads(dk), from_heads(dv));
+        Tensor::concat(&[&q, &k, &v], 2)
+    }
+
+    /// All-gather K/V over the cp group and reassemble global seq order.
+    pub(crate) fn cp_gather_kv(&self, ctx: &RankCtx, t: &Tensor) -> Tensor {
+        let cp = self.p.topo.cp;
+        if cp == 1 {
+            return t.clone();
+        }
+        let g = ctx.cp_group();
+        let parts = ctx.comm.all_gather(&g.key, g.me, g.size, t);
+        seq::cp_merge(&parts, 2, cp)
+    }
+
+    /// Backward of `cp_gather_kv`: sum every rank's full-seq contribution,
+    /// then take my stripes. Bug 13 skips the sum (W-CP: each rank keeps
+    /// only its own partial dK/dV).
+    pub(crate) fn cp_scatter_kv_grad(&self, ctx: &RankCtx, t: &Tensor) -> Tensor {
+        let cp = self.p.topo.cp;
+        if cp == 1 {
+            return t.clone();
+        }
+        let summed = if self.bugs.on(BugId::B13CpAttnGrads) {
+            t.clone()
+        } else {
+            let g = ctx.cp_group();
+            self.ar_bf16(ctx, &g, t)
+        };
+        seq::cp_extract(&summed, 2, ctx.coord.cp, cp)
+    }
+}
+
+// The forward/backward bodies and the per-iteration driver live in
+// `model::forward`, `model::backward`, `model::step` (separate impl blocks
+// on `Engine` to keep files navigable).

@@ -1,0 +1,334 @@
+//! Forward bodies of the engine: embedding path, transformer layer, LM
+//! head + vocab-parallel cross-entropy. Every traced tensor is recorded
+//! through the `Hooks` surface with its `ShardSpec`; every module input
+//! offers a rewrite point (paper §4.3).
+
+use crate::bugs::BugId;
+use crate::dist::RankCtx;
+use crate::tensor::{DType, Tensor};
+use crate::ttrace::canonical::names;
+use crate::ttrace::hooks::{CanonId, Hooks, Kind};
+
+use super::engine::{Engine, HeadTape, LayerInner, LayerTape, RankState};
+use super::params::ParamSet;
+use super::seq;
+
+impl<'a> Engine<'a> {
+    /// Embedding forward: masked vocab-sharded lookup + tp reduction.
+    /// Returns the residual-domain activation [B, t_sp, D].
+    pub(crate) fn embed_fwd_path(&self, ctx: &RankCtx, st: &RankState,
+                                 hooks: &dyn Hooks, iter: u64, micro: u32,
+                                 tokens: &Tensor) -> Tensor {
+        let tp = ctx.tp_group();
+        // Bug 1 (TP: wrong embedding mask): the shard's vocab offset is off
+        // by one, so the in-shard mask drops one boundary token id per
+        // shard and mis-maps another — a *subtle* corruption (a few % of
+        // tokens embed wrongly), like the original slapo/Megatron bug: the
+        // loss curve barely moves (Figure 1) but the embedding activations
+        // diverge far beyond FP round-off.
+        let correct = (self.sh.vp * ctx.coord.tp) as i32;
+        let offset = if self.bugs.on(BugId::B1TpEmbeddingMask) && tp.size > 1 {
+            correct + 1
+        } else {
+            correct
+        };
+        let table = st.params.model("embedding.word_embeddings.weight");
+        let off = Tensor::scalar(offset as f32, DType::I32);
+        let partial = &self.run_mod(&self.sh.k_embed_fwd(),
+                                    &[tokens, table, &off])[0];
+        let out = if self.p.sp {
+            self.rowpar_reduce(ctx, partial)
+        } else {
+            self.ar_bf16(ctx, &tp, partial)
+        };
+        self.rec(hooks, iter, micro, Kind::Act, &names::embedding(), &out,
+                 self.spec_sp(ctx));
+        out
+    }
+
+    /// One transformer layer forward. `x` is residual-domain [B, t_sp, D].
+    /// When `record` is false this is a recomputation pass (no hooks).
+    pub(crate) fn layer_fwd(&self, ctx: &RankCtx, st: &mut RankState,
+                            hooks: &dyn Hooks, iter: u64, micro: u32,
+                            layer: usize, x: &Tensor, record: bool)
+                            -> (Tensor, LayerInner) {
+        let h = if record { Some(hooks) } else { None };
+        let params = &st.params;
+        let mut scales: Vec<f32> = Vec::new();
+
+        let x = x.clone();
+
+        // input layernorm
+        let g1 = params.model(&format!("layers.{layer}.input_layernorm.weight"));
+        let b1 = params.model(&format!("layers.{layer}.input_layernorm.bias"));
+        let ln1_out = self.run_mod(&self.sh.k_ln_fwd(), &[&x, g1, b1]).remove(0);
+        if let Some(h) = h {
+            self.rec(h, iter, micro, Kind::Act, &names::input_ln(layer),
+                     &ln1_out, self.spec_sp(ctx));
+        }
+
+        // fused QKV (column-parallel); SP gathers the full local sequence
+        let mut qkv_in = self.sp_gather(ctx, &ln1_out);
+        let wq = params.model(&format!(
+            "layers.{layer}.self_attention.linear_qkv.weight"));
+        // Bug 8 (AR + fp8, W-CP): the recompute stash holds the activation
+        // pre-quantized to e4m3 — but with the *weight's* scale (a swapped
+        // scale slot). The corrupted tensor feeds the forward matmul too:
+        // activations are ~50x larger than weights, so the cast clips them
+        // hard -> wrong loss, exactly the paper's impact for this bug.
+        if self.bugs.on(BugId::B8ArFp8Cast) && self.p.fp8 && self.p.recompute {
+            let sw = Self::fp8_scale_e4m3(wq.max_abs());
+            qkv_in = qdq_e4m3_host(&qkv_in, sw);
+        }
+        let bq = params.model(&format!(
+            "layers.{layer}.self_attention.linear_qkv.bias"));
+        let qkv_out = if self.p.fp8 {
+            // Bug 7 (W-CM): the fp8 amax reduction runs over the wrong
+            // communication group; the slot this rank reads back is another
+            // tensor's amax (the weight's), so the activation scale is off
+            // by the activation/weight magnitude ratio and the cast clips.
+            let sx = if self.bugs.on(BugId::B7Fp8WrongGroup) {
+                Self::fp8_scale_e4m3(self.fp8_amax(ctx, wq))
+            } else {
+                Self::fp8_scale_e4m3(self.fp8_amax(ctx, &qkv_in))
+            };
+            let sw = Self::fp8_scale_e4m3(self.fp8_amax(ctx, wq));
+            scales.extend([sx, sw]);
+            self.run_mod(&self.sh.k_qkv_fp8_fwd(),
+                         &[&qkv_in, wq, bq, &Tensor::scalar(sx, DType::F32),
+                           &Tensor::scalar(sw, DType::F32)]).remove(0)
+        } else {
+            self.run_mod(&self.sh.k_qkv_fwd(), &[&qkv_in, wq, bq]).remove(0)
+        };
+        if let Some(h) = h {
+            self.rec(h, iter, micro, Kind::Act, &names::qkv(layer), &qkv_out,
+                     self.spec_qkv(ctx));
+        }
+
+        // core attention (pallas kernel) with cp-gathered K/V
+        let (q, k, v) = self.split_heads(&qkv_out);
+        let k_full = self.cp_gather_kv(ctx, &k);
+        let v_full = self.cp_gather_kv(ctx, &v);
+        let positions = seq::seq_positions(self.sh.s, self.p.topo.cp, ctx.coord.cp);
+        let mask = seq::causal_mask(&positions, self.sh.s);
+        let attn_heads = self.run_mod(&self.sh.k_attn_fwd(),
+                                      &[&q, &k_full, &v_full, &mask]).remove(0);
+        let attn_out = attn_heads.permute(&[0, 2, 1, 3])
+            .reshape(&[self.sh.b, self.sh.t_cp, self.sh.dp]);
+        if let Some(h) = h {
+            self.rec(h, iter, micro, Kind::Act, &names::core_attn(layer),
+                     &attn_out, self.spec_cp(ctx, self.sh.d, true));
+        }
+
+        // output projection (row-parallel) + bias after the reduction
+        let wp = params.model(&format!(
+            "layers.{layer}.self_attention.linear_proj.weight"));
+        let bp = params.model(&format!(
+            "layers.{layer}.self_attention.linear_proj.bias"));
+        let proj_partial = if self.p.fp8 {
+            let sx = Self::fp8_scale_e4m3(self.fp8_amax(ctx, &attn_out));
+            let sw = Self::fp8_scale_e4m3(self.fp8_amax(ctx, wp));
+            scales.extend([sx, sw]);
+            self.run_mod(&self.sh.k_proj_fp8_fwd(),
+                         &[&attn_out, wp, &Tensor::scalar(sx, DType::F32),
+                           &Tensor::scalar(sw, DType::F32)]).remove(0)
+        } else {
+            self.run_mod(&self.sh.k_proj_fwd(), &[&attn_out, wp]).remove(0)
+        };
+        let proj_red = self.rowpar_reduce(ctx, &proj_partial);
+        let proj_out = seq::add_bias_bf16(&proj_red, bp);
+        if let Some(h) = h {
+            self.rec(h, iter, micro, Kind::Act, &names::proj(layer), &proj_out,
+                     self.spec_sp(ctx));
+        }
+
+        let resid1 = x.add_bf16(&proj_out);
+
+        // pre-MLP layernorm
+        let g2 = params.model(&format!("layers.{layer}.pre_mlp_layernorm.weight"));
+        let b2 = params.model(&format!("layers.{layer}.pre_mlp_layernorm.bias"));
+        let ln2_out = self.run_mod(&self.sh.k_ln_fwd(), &[&resid1, g2, b2]).remove(0);
+        if let Some(h) = h {
+            self.rec(h, iter, micro, Kind::Act, &names::pre_mlp_ln(layer),
+                     &ln2_out, self.spec_sp(ctx));
+        }
+
+        // MLP (dense or MoE), column/row parallel
+        let mlp_in = self.sp_gather(ctx, &ln2_out);
+        let (mlp_partial, combine_full) = if self.p.moe {
+            let wr = params.model(&format!("layers.{layer}.mlp.router.weight"));
+            // router runs on the SP-sharded sequence (ln2_out)
+            let combine_local = self.run_mod(&self.sh.k_router_fwd(),
+                                             &[&ln2_out, wr]).remove(0);
+            if let Some(h) = h {
+                self.rec(h, iter, micro, Kind::Act, &names::router(layer),
+                         &combine_local,
+                         self.spec_router(ctx));
+            }
+            let combine_full = self.sp_gather(ctx, &combine_local);
+            let w1 = params.model(&format!("layers.{layer}.mlp.experts.fc1.weight"));
+            let b1e = params.model(&format!("layers.{layer}.mlp.experts.fc1.bias"));
+            let w2 = params.model(&format!("layers.{layer}.mlp.experts.fc2.weight"));
+            let y = self.run_mod(&self.sh.k_experts_fwd(),
+                                 &[&mlp_in, w1, b1e, w2, &combine_full]).remove(0);
+            (y, Some(combine_full))
+        } else {
+            let w1 = params.model(&format!("layers.{layer}.mlp.fc1.weight"));
+            let b1m = params.model(&format!("layers.{layer}.mlp.fc1.bias"));
+            let w2 = params.model(&format!("layers.{layer}.mlp.fc2.weight"));
+            if self.p.fp8 {
+                let sx = Self::fp8_scale_e4m3(self.fp8_amax(ctx, &mlp_in));
+                let sw1 = Self::fp8_scale_e4m3(self.fp8_amax(ctx, w1));
+                // the post-gelu activation is internal to the fused module:
+                // delayed scaling from the previous iteration's amax
+                let sh_key = format!("layers.{layer}.mlp.h");
+                let sh_scale = *st.fp8_sh.get(&sh_key).unwrap_or(&1.0);
+                let sw2 = Self::fp8_scale_e4m3(self.fp8_amax(ctx, w2));
+                scales.extend([sx, sw1, sh_scale, sw2]);
+                let mut outs = self.run_mod(
+                    &self.sh.k_mlp_fp8_fwd(),
+                    &[&mlp_in, w1, b1m, w2,
+                      &Tensor::scalar(sx, DType::F32),
+                      &Tensor::scalar(sw1, DType::F32),
+                      &Tensor::scalar(sh_scale, DType::F32),
+                      &Tensor::scalar(sw2, DType::F32)]);
+                let amax_a = outs.remove(1).data[0];
+                if record {
+                    st.fp8_sh.insert(sh_key,
+                                     Self::fp8_scale_e4m3(amax_a));
+                }
+                (outs.remove(0), None)
+            } else {
+                (self.run_mod(&self.sh.k_mlp_fwd(),
+                              &[&mlp_in, w1, b1m, w2]).remove(0), None)
+            }
+        };
+        let mlp_out = self.rowpar_reduce(ctx, &mlp_partial);
+        if let Some(h) = h {
+            self.rec(h, iter, micro, Kind::Act, &names::mlp(layer), &mlp_out,
+                     self.spec_sp(ctx));
+        }
+
+        let out = resid1.add_bf16(&mlp_out);
+        if let Some(h) = h {
+            self.rec(h, iter, micro, Kind::Act, &names::layer_out(layer), &out,
+                     self.spec_sp(ctx));
+        }
+
+        let inner = LayerInner {
+            qkv_in, q, k_full, v_full, mask, attn_out, resid1,
+            ln2_out, mlp_in, combine_full, scales,
+        };
+        (out, inner)
+    }
+
+    /// Run a chunk of layers forward, building tapes. Rewrite points are
+    /// offered at every layer input.
+    pub(crate) fn chunk_fwd(&self, ctx: &RankCtx, st: &mut RankState,
+                            hooks: &dyn Hooks, iter: u64, micro: u32,
+                            chunk_layers: &[usize], mut x: Tensor)
+                            -> (Tensor, Vec<LayerTape>) {
+        let mut tapes = Vec::with_capacity(chunk_layers.len());
+        for &layer in chunk_layers {
+            let rid = CanonId::new(iter, micro, Kind::Act,
+                                   format!("layers.{layer}.input"));
+            if let Some(repl) = hooks.rewrite_input(&rid, &self.spec_sp(ctx), &x) {
+                x = repl;
+            }
+            let (out, inner) = self.layer_fwd(ctx, st, hooks, iter, micro,
+                                              layer, &x, true);
+            tapes.push(LayerTape {
+                layer,
+                x: x.clone(),
+                out: out.clone(),
+                inner: if self.p.recompute { None } else { Some(inner) },
+            });
+            x = out;
+        }
+        (x, tapes)
+    }
+
+    /// Final layernorm + LM head + vocab-parallel cross-entropy.
+    /// Returns (mean local loss, HeadTape).
+    pub(crate) fn head_fwd(&self, ctx: &RankCtx, st: &RankState,
+                           hooks: &dyn Hooks, iter: u64, micro: u32,
+                           resid: Tensor, targets: &Tensor) -> (f64, HeadTape) {
+        let params: &ParamSet = &st.params;
+        let gw = params.model("final_layernorm.weight");
+        let gb = params.model("final_layernorm.bias");
+        let ln_out = self.run_mod(&self.sh.k_ln_fwd(), &[&resid, gw, gb]).remove(0);
+        self.rec(hooks, iter, micro, Kind::Act, &names::final_ln(), &ln_out,
+                 self.spec_sp(ctx));
+
+        let mut x_head = self.sp_gather(ctx, &ln_out);
+        let rid = CanonId::new(iter, micro, Kind::Act, "output_layer.input");
+        if let Some(repl) = hooks.rewrite_input(
+            &rid, &self.spec_cp(ctx, self.sh.d, false), &x_head) {
+            x_head = repl;
+        }
+
+        let table = params.model("embedding.word_embeddings.weight");
+        let logits = self.run_mod(&self.sh.k_lmhead_fwd(),
+                                  &[&x_head, table]).remove(0);
+        self.rec(hooks, iter, micro, Kind::Act, &names::output_layer(), &logits,
+                 self.spec_cp(ctx, self.m.v, true));
+
+        let tpg = ctx.tp_group();
+        let offset = Tensor::scalar((self.sh.vp * ctx.coord.tp) as f32, DType::I32);
+        let lmax = self.run_mod(&self.sh.k_logits_max(), &[&logits]).remove(0);
+        let gmax = self.ar_max(ctx, &tpg, &lmax);
+        let mut se_tl = self.run_mod(&self.sh.k_xent_local(),
+                                     &[&logits, targets, &offset, &gmax]);
+        let tlogit = se_tl.remove(1);
+        let sumexp = se_tl.remove(0);
+        let gsum = self.ar_f32(ctx, &tpg, &sumexp);
+        let tsum = self.ar_f32(ctx, &tpg, &tlogit);
+
+        // per-token loss = log(gsum) - (target_logit - gmax)
+        let mut total = 0.0f64;
+        for (s, t) in gsum.data.iter().zip(&tsum.data) {
+            total += (*s as f64).ln() - *t as f64;
+        }
+        let mut loss = total / gsum.numel() as f64;
+        // each cp rank saw a different sequence chunk: the comparable loss
+        // is the cp-group average (equal token counts per rank)
+        let cpg = ctx.cp_group();
+        if cpg.size > 1 {
+            let l = Tensor::scalar(loss as f32, DType::F32);
+            let summed = self.ar_f32(ctx, &cpg, &l);
+            loss = summed.data[0] as f64 / cpg.size as f64;
+        }
+        self.rec(hooks, iter, micro, Kind::Loss, "loss",
+                 &Tensor::scalar(loss as f32, DType::F32),
+                 crate::ttrace::shard::ShardSpec::full(&[]));
+
+        (loss, HeadTape { resid, x_head, targets: targets.clone(),
+                          gmax, gsum })
+    }
+
+    /// ShardSpec of the router output [B, S, E] (seq sp+cp sharded).
+    pub(crate) fn spec_router(&self, ctx: &RankCtx) -> crate::ttrace::shard::ShardSpec {
+        let topo = self.p.topo;
+        seq::seq_spec(&[self.sh.b, self.sh.s, self.sh.e], 1, ctx.coord.cp,
+                      topo.cp, if self.p.sp { ctx.coord.tp } else { 0 },
+                      if self.p.sp { topo.tp } else { 1 })
+    }
+}
+
+/// Host-side e4m3 quantize-dequantize (bug-8 fault path only).
+pub(crate) fn qdq_e4m3_host(t: &Tensor, scale: f32) -> Tensor {
+    let mut out = t.clone();
+    for v in out.data.iter_mut() {
+        let x = (*v * scale).clamp(-448.0, 448.0);
+        // decompose to e4m3 grid: 3 mantissa bits
+        let q = if x == 0.0 {
+            0.0
+        } else {
+            let e = x.abs().log2().floor();
+            let step = 2f32.powf(e - 3.0);
+            (x / step).round() * step
+        };
+        *v = crate::util::bf16::round_bf16(q / scale);
+    }
+    out
+}

@@ -1,0 +1,17 @@
+//! The distributed GPT training framework (the substrate TTrace checks):
+//! configuration, parameters, sequence plumbing, the manual-backprop
+//! engine, the GPipe/VPP pipeline driver and the mixed-precision
+//! optimizer. Compute modules execute as AOT HLO via `runtime`.
+
+mod backward;
+pub mod config;
+pub mod engine;
+mod forward;
+pub mod params;
+pub mod seq;
+pub mod step;
+mod optimizer;
+
+pub use config::{preset, ModelCfg, ParCfg, Schedule, Shapes, E2E, SMALL, TINY};
+pub use engine::{Engine, RankState};
+pub use step::{mean_losses, run_training, run_training_full};

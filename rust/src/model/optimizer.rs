@@ -1,0 +1,57 @@
+//! Mixed-precision Adam with an optional ZeRO-1 distributed optimizer.
+//!
+//! Master weights and moments are f32 on the host; after each step the
+//! bf16 model copy is refreshed. Under ZeRO-1, optimizer states are
+//! partitioned over the dp×cp group by round-robin parameter ownership:
+//! the owner updates, then broadcasts the new master weights. Bug 9 skips
+//! the broadcast (silent "no parameter update" on non-owners); bug 5 (in
+//! `finalize_grads`) breaks the embedding/LM-head tie under ZeRO.
+
+use crate::dist::RankCtx;
+use crate::ttrace::hooks::{CanonId, Hooks, Kind};
+
+use super::engine::{Engine, RankState};
+use crate::bugs::BugId;
+
+const BETA1: f32 = 0.9;
+const BETA2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+impl<'a> Engine<'a> {
+    pub(crate) fn optimizer_step(&self, ctx: &RankCtx, st: &mut RankState,
+                                 hooks: &dyn Hooks, iter: u64) {
+        st.adam_t += 1;
+        let t = st.adam_t as i32;
+        let bc1 = 1.0 - BETA1.powi(t);
+        let bc2 = 1.0 - BETA2.powi(t);
+        let dpcp = ctx.dpcp_group();
+        let zero1 = self.p.zero1 && dpcp.size > 1;
+
+        for (idx, name) in st.params.order.clone().iter().enumerate() {
+            let owner = idx % dpcp.size;
+            let i_own = !zero1 || owner == dpcp.me;
+            if i_own {
+                let p = st.params.get_mut(name);
+                for i in 0..p.master.data.len() {
+                    let g = p.main_grad.data[i];
+                    p.m.data[i] = BETA1 * p.m.data[i] + (1.0 - BETA1) * g;
+                    p.v.data[i] = BETA2 * p.v.data[i] + (1.0 - BETA2) * g * g;
+                    let mhat = p.m.data[i] / bc1;
+                    let vhat = p.v.data[i] / bc2;
+                    p.master.data[i] -= self.lr * mhat / (vhat.sqrt() + ADAM_EPS);
+                }
+            }
+            if zero1 && !self.bugs.on(BugId::B9ZeroUpdateFailure) {
+                // ZeRO-1: owner broadcasts the updated master weights
+                let master = st.params.get(name).master.clone();
+                let updated = ctx.comm.broadcast(&dpcp.key, dpcp.me, dpcp.size,
+                                                 owner, &master);
+                st.params.get_mut(name).master = updated;
+            }
+            let p = st.params.get_mut(name);
+            p.refresh_model();
+            hooks.record(&CanonId::new(iter, 0, Kind::Param, name), &p.model,
+                         &p.spec.clone());
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! Parameter definition, initialization and per-rank sharding.
+//!
+//! Parameters are defined once, by canonical name, with their *global*
+//! (reference) shapes and a rule for how each parallel layout shards them.
+//! Initialization draws the logical full tensor from the consistent
+//! generator (`ttrace::gen`) seeded by the parameter name, then slices the
+//! rank's shard — so candidate shards are bit-identical slices of the
+//! reference parameters (paper §4.2).
+//!
+//! Mixed-precision bookkeeping per parameter:
+//!   master   f32 (updated by Adam)
+//!   model    bf16 (fed to device modules; rounded from master)
+//!   main_grad f32 (accumulated across microbatches; reduced over dp×cp)
+
+use std::collections::HashMap;
+
+use crate::dist::Coord;
+use crate::tensor::{DType, Tensor};
+use crate::ttrace::gen;
+use crate::ttrace::shard::ShardSpec;
+
+use super::config::{ModelCfg, ParCfg};
+
+/// How a parameter's gradients must be synchronized beyond the dp×cp
+/// main-grad reduction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradSync {
+    /// sharded over tp — dp×cp reduction only
+    Sharded,
+    /// replicated over tp, inputs replicated — grads already identical
+    Replicated,
+    /// replicated over tp but computed from tp-sharded (sequence-parallel)
+    /// inputs — REQUIRES a tp all-reduce (LN params under SP, router under
+    /// SP; bugs #6/#12/#14 live here)
+    ReplicatedSeqSharded,
+}
+
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub spec: ShardSpec,
+    pub sync: GradSync,
+    pub master: Tensor,
+    pub model: Tensor,
+    pub main_grad: Tensor,
+    /// Adam moments
+    pub m: Tensor,
+    pub v: Tensor,
+}
+
+impl Param {
+    fn new(name: String, spec: ShardSpec, sync: GradSync, init: Tensor) -> Param {
+        let local = spec.extract_local(&init);
+        let master = Tensor::new(&local.dims, local.data.clone(), DType::F32);
+        let model = local.round_bf16();
+        let zeros = Tensor::zeros(&local.dims, DType::F32);
+        Param {
+            name,
+            spec,
+            sync,
+            master,
+            model,
+            main_grad: zeros.clone(),
+            m: zeros.clone(),
+            v: zeros,
+        }
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.main_grad.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Accumulate a bf16 per-microbatch gradient into the f32 main grad.
+    pub fn accumulate(&mut self, grad: &Tensor) {
+        assert_eq!(grad.dims, self.main_grad.dims,
+                   "grad shape mismatch for {}", self.name);
+        for (a, g) in self.main_grad.data.iter_mut().zip(&grad.data) {
+            *a += g;
+        }
+    }
+
+    /// Refresh the bf16 model copy from the master weights.
+    pub fn refresh_model(&mut self) {
+        self.model = self.master.round_bf16();
+    }
+}
+
+/// The full per-rank parameter set, keyed by canonical name, plus the
+/// deterministic name order (used by ZeRO ownership assignment).
+pub struct ParamSet {
+    pub params: HashMap<String, Param>,
+    pub order: Vec<String>,
+}
+
+impl ParamSet {
+    pub fn get(&self, name: &str) -> &Param {
+        self.params
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown param '{name}'"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Param {
+        self.params
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("unknown param '{name}'"))
+    }
+
+    pub fn model(&self, name: &str) -> &Tensor {
+        &self.get(name).model
+    }
+}
+
+/// GPT-2 style init: N(0, 0.02) for weights, output projections scaled by
+/// 1/sqrt(2L), ones for LN weight, zeros for biases/LN bias.
+const INIT_STD: f32 = 0.02;
+
+/// Declarative parameter table for the dense/MoE GPT model.
+/// `layer_range` is the global layer ids this rank's stage owns.
+pub fn build(m: &ModelCfg, p: &ParCfg, coord: Coord, layers: usize,
+             layer_range: &[usize], holds_embedding: bool,
+             holds_lmhead: bool) -> ParamSet {
+    let tp = p.topo.tp;
+    let tpi = coord.tp;
+    let d = m.d;
+    let resid_std = INIT_STD / ((2.0 * layers as f32).sqrt());
+
+    let mut params: Vec<Param> = Vec::new();
+
+    if holds_embedding || holds_lmhead {
+        // Tied word embeddings: held by the first stage (embedding) and the
+        // last stage (LM head); grads are synchronized between them.
+        let name = "embedding.word_embeddings.weight".to_string();
+        let spec = ShardSpec::split(&[m.v, d], 0, tpi, tp);
+        let init = gen::full_normal(&name, &[m.v, d], INIT_STD, DType::Bf16);
+        params.push(Param::new(name, spec, GradSync::Sharded, init));
+    }
+
+    for &l in layer_range {
+        let pre = format!("layers.{l}");
+        let ln_sync = if p.sp { GradSync::ReplicatedSeqSharded } else { GradSync::Replicated };
+
+        for ln in ["input_layernorm", "pre_mlp_layernorm"] {
+            let wname = format!("{pre}.{ln}.weight");
+            params.push(Param::new(
+                wname,
+                ShardSpec::full(&[d]),
+                ln_sync,
+                gen::full_const(&[d], 1.0, DType::Bf16),
+            ));
+            let bname = format!("{pre}.{ln}.bias");
+            params.push(Param::new(
+                bname,
+                ShardSpec::full(&[d]),
+                ln_sync,
+                gen::full_const(&[d], 0.0, DType::Bf16),
+            ));
+        }
+
+        // fused QKV (column-parallel; shard owns matching head-slices of
+        // each of the Q/K/V thirds)
+        let wname = format!("{pre}.self_attention.linear_qkv.weight");
+        let wspec = ShardSpec::full(&[d, 3 * d]).and_qkv_split(1, d, tpi, tp);
+        let winit = gen::full_normal(&wname, &[d, 3 * d], INIT_STD, DType::Bf16);
+        params.push(Param::new(wname, wspec, GradSync::Sharded, winit));
+        let bname = format!("{pre}.self_attention.linear_qkv.bias");
+        let bspec = ShardSpec::full(&[3 * d]).and_qkv_split(0, d, tpi, tp);
+        params.push(Param::new(bname, bspec, GradSync::Sharded,
+                               gen::full_const(&[3 * d], 0.0, DType::Bf16)));
+
+        // output projection (row-parallel: input dim sharded)
+        let wname = format!("{pre}.self_attention.linear_proj.weight");
+        let wspec = ShardSpec::split(&[d, d], 0, tpi, tp);
+        let winit = gen::full_normal(&wname, &[d, d], resid_std, DType::Bf16);
+        params.push(Param::new(wname, wspec, GradSync::Sharded, winit));
+        // proj bias is added after the (reduce-scattered) output under SP,
+        // so each tp rank sees a different sequence shard -> same sync rule
+        // as the LN params.
+        let bname = format!("{pre}.self_attention.linear_proj.bias");
+        params.push(Param::new(bname, ShardSpec::full(&[d]), ln_sync,
+                               gen::full_const(&[d], 0.0, DType::Bf16)));
+
+        if p.moe {
+            let rname = format!("{pre}.mlp.router.weight");
+            let rsync = if p.sp { GradSync::ReplicatedSeqSharded } else { GradSync::Replicated };
+            let rinit = gen::full_normal(&rname, &[d, m.e], INIT_STD, DType::Bf16);
+            params.push(Param::new(rname, ShardSpec::full(&[d, m.e]), rsync, rinit));
+
+            let w1name = format!("{pre}.mlp.experts.fc1.weight");
+            let w1spec = ShardSpec::split(&[m.e, d, m.f], 2, tpi, tp);
+            let w1init = gen::full_normal(&w1name, &[m.e, d, m.f], INIT_STD, DType::Bf16);
+            params.push(Param::new(w1name, w1spec, GradSync::Sharded, w1init));
+            let b1name = format!("{pre}.mlp.experts.fc1.bias");
+            let b1spec = ShardSpec::split(&[m.e, m.f], 1, tpi, tp);
+            params.push(Param::new(b1name, b1spec, GradSync::Sharded,
+                                   gen::full_const(&[m.e, m.f], 0.0, DType::Bf16)));
+            let w2name = format!("{pre}.mlp.experts.fc2.weight");
+            let w2spec = ShardSpec::split(&[m.e, m.f, d], 1, tpi, tp);
+            let w2init = gen::full_normal(&w2name, &[m.e, m.f, d], resid_std, DType::Bf16);
+            params.push(Param::new(w2name, w2spec, GradSync::Sharded, w2init));
+        } else {
+            let w1name = format!("{pre}.mlp.fc1.weight");
+            let w1spec = ShardSpec::split(&[d, m.f], 1, tpi, tp);
+            let w1init = gen::full_normal(&w1name, &[d, m.f], INIT_STD, DType::Bf16);
+            params.push(Param::new(w1name, w1spec, GradSync::Sharded, w1init));
+            let b1name = format!("{pre}.mlp.fc1.bias");
+            let b1spec = ShardSpec::split(&[m.f], 0, tpi, tp);
+            params.push(Param::new(b1name, b1spec, GradSync::Sharded,
+                                   gen::full_const(&[m.f], 0.0, DType::Bf16)));
+            let w2name = format!("{pre}.mlp.fc2.weight");
+            let w2spec = ShardSpec::split(&[m.f, d], 0, tpi, tp);
+            let w2init = gen::full_normal(&w2name, &[m.f, d], resid_std, DType::Bf16);
+            params.push(Param::new(w2name, w2spec, GradSync::Sharded, w2init));
+        }
+    }
+
+    if holds_lmhead {
+        let sync = if p.sp { GradSync::ReplicatedSeqSharded } else { GradSync::Replicated };
+        params.push(Param::new("final_layernorm.weight".to_string(),
+                               ShardSpec::full(&[d]), sync,
+                               gen::full_const(&[d], 1.0, DType::Bf16)));
+        params.push(Param::new("final_layernorm.bias".to_string(),
+                               ShardSpec::full(&[d]), sync,
+                               gen::full_const(&[d], 0.0, DType::Bf16)));
+    }
+
+    let order: Vec<String> = params.iter().map(|p| p.name.clone()).collect();
+    let map = params.into_iter().map(|p| (p.name.clone(), p)).collect();
+    ParamSet { params: map, order }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Topology;
+    use crate::model::config::TINY;
+
+    fn coord0() -> Coord {
+        Coord { dp: 0, tp: 0, pp: 0, cp: 0 }
+    }
+
+    #[test]
+    fn single_device_full_params() {
+        let p = ParCfg::single();
+        let set = build(&TINY, &p, coord0(), 2, &[0, 1], true, true);
+        let emb = set.get("embedding.word_embeddings.weight");
+        assert_eq!(emb.master.dims, vec![64, 32]);
+        assert!(emb.spec.is_full());
+        // embedding + final_ln(w,b) + per layer: 2 LN pairs(4) + qkv(2) +
+        // proj(2) + fc1(2) + fc2(1) = 11
+        assert_eq!(set.order.len(), 3 + 2 * 11);
+    }
+
+    #[test]
+    fn tp_shards_are_slices_of_reference() {
+        let mut p = ParCfg::single();
+        p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+        let pref = ParCfg::single();
+        let ref_set = build(&TINY, &pref, coord0(), 2, &[0, 1], true, true);
+        for tpi in 0..2 {
+            let c = Coord { dp: 0, tp: tpi, pp: 0, cp: 0 };
+            let set = build(&TINY, &p, c, 2, &[0, 1], true, true);
+            for name in &set.order {
+                let shard = set.get(name);
+                let full = ref_set.get(name);
+                let expect = shard.spec.extract_local(&full.master);
+                assert_eq!(shard.master.data, expect.data, "{name} tp{tpi}");
+            }
+        }
+    }
+
+    #[test]
+    fn qkv_shard_covers_qkv_thirds() {
+        let mut p = ParCfg::single();
+        p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+        let c = Coord { dp: 0, tp: 1, pp: 0, cp: 0 };
+        let set = build(&TINY, &p, c, 2, &[0], true, true);
+        let qkv = set.get("layers.0.self_attention.linear_qkv.weight");
+        assert_eq!(qkv.master.dims, vec![32, 48]); // [D, 3*D/2]
+        let pieces = &qkv.spec.maps[0].pieces;
+        assert_eq!(pieces.len(), 3);
+        // rank 1 of 2: starts at D/2, D + D/2, 2D + D/2
+        assert_eq!(pieces[0].global_start, 16);
+        assert_eq!(pieces[1].global_start, 48);
+        assert_eq!(pieces[2].global_start, 80);
+    }
+
+    #[test]
+    fn ln_sync_rule_depends_on_sp() {
+        let mut p = ParCfg::single();
+        p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+        let set = build(&TINY, &p, coord0(), 2, &[0], true, true);
+        assert_eq!(set.get("layers.0.input_layernorm.weight").sync,
+                   GradSync::Replicated);
+        p.sp = true;
+        let set2 = build(&TINY, &p, coord0(), 2, &[0], true, true);
+        assert_eq!(set2.get("layers.0.input_layernorm.weight").sync,
+                   GradSync::ReplicatedSeqSharded);
+    }
+}

@@ -1,0 +1,214 @@
+//! Sequence-domain plumbing: context-parallel striping, sequence-parallel
+//! sub-slicing, causal masks, and small bf16 host ops the device modules
+//! don't cover (bias adds, bias grads).
+//!
+//! CP striping (load-balanced causal attention): the sequence is cut into
+//! `2*cp` chunks; rank `r` owns chunks `r` and `2cp-1-r`. Early chunks see
+//! few keys, late chunks many — pairing them balances work. All stripe
+//! arithmetic here must agree with `ShardSpec::and_cp_stripes`.
+
+use crate::tensor::{DType, Tensor};
+use crate::ttrace::shard::{Piece, ShardSpec};
+
+/// The (global_start, len) stripe pieces rank `r` owns, in local order.
+pub fn stripe_pieces(s: usize, cp: usize, r: usize) -> Vec<(usize, usize)> {
+    if cp == 1 {
+        return vec![(0, s)];
+    }
+    let chunk = s / (2 * cp);
+    vec![(r * chunk, chunk), ((2 * cp - 1 - r) * chunk, chunk)]
+}
+
+/// Global position of every local sequence index on rank `r`.
+pub fn seq_positions(s: usize, cp: usize, r: usize) -> Vec<usize> {
+    stripe_pieces(s, cp, r)
+        .into_iter()
+        .flat_map(|(start, len)| start..start + len)
+        .collect()
+}
+
+/// Sub-range [start, start+len) of a concatenated piece list (used to
+/// compose SP slicing on top of CP striping).
+pub fn pieces_subrange(pieces: &[(usize, usize)], start: usize, len: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut pos = 0usize; // local offset
+    let end = start + len;
+    for &(gs, plen) in pieces {
+        let pstart = pos;
+        let pend = pos + plen;
+        let lo = start.max(pstart);
+        let hi = end.min(pend);
+        if lo < hi {
+            out.push((gs + (lo - pstart), hi - lo));
+        }
+        pos = pend;
+    }
+    assert_eq!(out.iter().map(|p| p.1).sum::<usize>(), len,
+               "subrange [{start},{end}) exceeds pieces");
+    out
+}
+
+/// ShardSpec for a tensor whose `dim` is the sequence, sharded by CP
+/// stripes and then (optionally) SP-sliced within the local stripes.
+pub fn seq_spec(global_dims: &[usize], dim: usize, cp_rank: usize, cp: usize,
+                sp_idx: usize, sp_n: usize) -> ShardSpec {
+    let s = global_dims[dim];
+    let stripes = stripe_pieces(s, cp, cp_rank);
+    let local_len: usize = stripes.iter().map(|p| p.1).sum();
+    let pieces = if sp_n > 1 {
+        let t_sp = local_len / sp_n;
+        pieces_subrange(&stripes, sp_idx * t_sp, t_sp)
+    } else {
+        stripes
+    };
+    let pieces = pieces
+        .into_iter()
+        .map(|(global_start, len)| Piece { global_start, len })
+        .collect();
+    ShardSpec::full(global_dims).and_pieces(dim, pieces)
+}
+
+/// Reassemble CP-striped parts (in cp-rank order, e.g. from an all-gather)
+/// into global sequence order along `dim`.
+pub fn cp_merge(parts: &[Tensor], dim: usize, cp: usize) -> Tensor {
+    assert_eq!(parts.len(), cp);
+    if cp == 1 {
+        return parts[0].clone();
+    }
+    let local = parts[0].dims[dim];
+    let chunk = local / 2;
+    let mut ordered: Vec<Tensor> = Vec::with_capacity(2 * cp);
+    for c in 0..2 * cp {
+        let r = if c < cp { c } else { 2 * cp - 1 - c };
+        let piece_idx = if c < cp { 0 } else { 1 };
+        ordered.push(parts[r].narrow(dim, piece_idx * chunk, chunk));
+    }
+    let refs: Vec<&Tensor> = ordered.iter().collect();
+    Tensor::concat(&refs, dim)
+}
+
+/// Extract rank `r`'s stripes from a global-order tensor along `dim`.
+pub fn cp_extract(full: &Tensor, dim: usize, r: usize, cp: usize) -> Tensor {
+    if cp == 1 {
+        return full.clone();
+    }
+    let s = full.dims[dim];
+    let chunk = s / (2 * cp);
+    let a = full.narrow(dim, r * chunk, chunk);
+    let b = full.narrow(dim, (2 * cp - 1 - r) * chunk, chunk);
+    Tensor::concat(&[&a, &b], dim)
+}
+
+/// Additive-causal mask [len(q_positions), s_full] in f32: 0 where key
+/// position <= query position, MASK_VALUE elsewhere.
+pub const MASK_VALUE: f32 = -30000.0;
+
+pub fn causal_mask(q_positions: &[usize], s_full: usize) -> Tensor {
+    let rows = q_positions.len();
+    let mut data = vec![0.0f32; rows * s_full];
+    for (i, &qp) in q_positions.iter().enumerate() {
+        for j in (qp + 1)..s_full {
+            data[i * s_full + j] = MASK_VALUE;
+        }
+    }
+    Tensor::new(&[rows, s_full], data, DType::F32)
+}
+
+/// Broadcast-add a bias over the last dimension, rounding through bf16
+/// (what the device's bf16 add would produce).
+pub fn add_bias_bf16(x: &Tensor, bias: &Tensor) -> Tensor {
+    let d = *x.dims.last().unwrap();
+    assert_eq!(bias.dims, vec![d]);
+    let mut out = x.clone();
+    for (i, v) in out.data.iter_mut().enumerate() {
+        *v = crate::util::bf16::round_bf16(*v + bias.data[i % d]);
+    }
+    out.dtype = DType::Bf16;
+    out
+}
+
+/// Gradient of a broadcast bias: sum over all leading dims (f32 accumulate,
+/// bf16 result like the device wgrad kernels).
+pub fn bias_grad(dy: &Tensor) -> Tensor {
+    let d = *dy.dims.last().unwrap();
+    let mut out = vec![0.0f32; d];
+    for (i, v) in dy.data.iter().enumerate() {
+        out[i % d] += v;
+    }
+    crate::util::bf16::round_slice_bf16(&mut out);
+    Tensor::new(&[d], out, DType::Bf16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn stripes_match_shardspec() {
+        for cp in [1usize, 2, 4] {
+            let s = 16 * cp;
+            for r in 0..cp {
+                let spec = ShardSpec::full(&[s]).and_cp_stripes(0, r, cp);
+                let expect: Vec<(usize, usize)> = if cp == 1 {
+                    vec![(0, s)]
+                } else {
+                    spec.maps[0].pieces.iter().map(|p| (p.global_start, p.len)).collect()
+                };
+                assert_eq!(stripe_pieces(s, cp, r), expect, "cp={cp} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_extract_roundtrip() {
+        check("cp merge/extract roundtrip", |rng| {
+            let cp = Gen::pow2(rng, 1, 4);
+            let s = 2 * cp * Gen::pow2(rng, 1, 4);
+            let full = Tensor::new(&[2, s], Gen::vec_normal(rng, 2 * s, 1.0),
+                                   crate::tensor::DType::F32);
+            let parts: Vec<Tensor> = (0..cp).map(|r| cp_extract(&full, 1, r, cp)).collect();
+            if cp_merge(&parts, 1, cp) == full {
+                Ok(())
+            } else {
+                Err(format!("cp={cp} s={s}"))
+            }
+        });
+    }
+
+    #[test]
+    fn subrange_splits_pieces() {
+        // pieces: [10..14), [30..34) — local len 8; take [2,6): crosses both
+        let got = pieces_subrange(&[(10, 4), (30, 4)], 2, 4);
+        assert_eq!(got, vec![(12, 2), (30, 2)]);
+    }
+
+    #[test]
+    fn seq_spec_composes_sp_and_cp() {
+        // S=16, cp=2 rank0 -> stripes (0..4),(12..16); sp 2-way idx 1 ->
+        // local [4..8) = (12..16)
+        let spec = seq_spec(&[2, 16, 8], 1, 0, 2, 1, 2);
+        assert_eq!(spec.local_dims(), vec![2, 4, 8]);
+        assert_eq!(spec.maps[0].pieces,
+                   vec![Piece { global_start: 12, len: 4 }]);
+    }
+
+    #[test]
+    fn causal_mask_semantics() {
+        let m = causal_mask(&[0, 3], 4);
+        // row 0: only key 0 visible; row 1 (pos 3): all visible
+        assert_eq!(m.data[0], 0.0);
+        assert_eq!(m.data[1], MASK_VALUE);
+        assert_eq!(&m.data[4..8], &[0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn bias_ops() {
+        let x = Tensor::new(&[2, 2], vec![1., 2., 3., 4.], DType::Bf16);
+        let b = Tensor::new(&[2], vec![0.5, -0.5], DType::Bf16);
+        let y = add_bias_bf16(&x, &b);
+        assert_eq!(y.data, vec![1.5, 1.5, 3.5, 3.5]);
+        let g = bias_grad(&x);
+        assert_eq!(g.data, vec![4.0, 6.0]);
+    }
+}

@@ -1,0 +1,278 @@
+//! The per-iteration training driver: GPipe-style pipeline scheduling over
+//! (virtual) chunks and microbatches, gradient finalization (the collective
+//! choreography most of Table 1's bugs live in), and the entry point that
+//! runs a full training job SPMD.
+
+use std::collections::HashMap;
+
+use crate::bugs::BugId;
+use crate::data::DataSource;
+use crate::dist::{run_spmd, RankCtx};
+use crate::tensor::Tensor;
+use crate::ttrace::hooks::{CanonId, Hooks, Kind};
+
+use super::engine::{ChunkTape, Engine, RankState};
+use super::params::GradSync;
+use super::seq;
+
+impl<'a> Engine<'a> {
+    /// One training iteration. Returns the cp-averaged mean loss on
+    /// last-stage ranks (None elsewhere).
+    pub fn train_iter(&self, ctx: &RankCtx, st: &mut RankState,
+                      hooks: &dyn Hooks, data: &dyn DataSource, iter: u64)
+                      -> Option<f64> {
+        for name in st.params.order.clone() {
+            st.params.get_mut(&name).zero_grad();
+        }
+        let topo = self.p.topo;
+        let pp = topo.pp;
+        let last_chunk = topo.vpp * pp - 1;
+
+        // ---- forward flush (GPipe; 1F1B is semantically identical in the
+        // simulator since p2p sends are buffered) ----
+        let mut tapes: Vec<Vec<ChunkTape>> = Vec::with_capacity(topo.vpp);
+        let mut edges: HashMap<(usize, u32), Tensor> = HashMap::new();
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        for v in 0..topo.vpp {
+            let chunk_layers = st.chunks[v].clone();
+            let mut mtapes = Vec::with_capacity(self.p.n_micro);
+            for m in 0..self.p.n_micro {
+                let gmicro = (m * topo.dp + ctx.coord.dp) as u32;
+                let g = v * pp + ctx.coord.pp;
+                let mut tokens_saved = None;
+                let x_in: Tensor = if g == 0 {
+                    let batch = data.batch(iter, gmicro, self.sh.b, self.sh.s,
+                                           self.m.v);
+                    let tokens_full = batch.narrow(1, 0, self.sh.s);
+                    let tokens = seq::cp_extract(&tokens_full, 1,
+                                                 ctx.coord.cp, topo.cp);
+                    let x = self.embed_fwd_path(ctx, st, hooks, iter, gmicro,
+                                                &tokens);
+                    tokens_saved = Some(tokens);
+                    x
+                } else {
+                    let prev_pp = (g - 1) % pp;
+                    if prev_pp == ctx.coord.pp {
+                        edges.remove(&(g - 1, gmicro)).expect("local fwd edge")
+                    } else {
+                        ctx.comm.recv(ctx.pp_rank(prev_pp), ctx.rank, "act")
+                    }
+                };
+                let (out, ltapes) = self.chunk_fwd(ctx, st, hooks, iter,
+                                                   gmicro, &chunk_layers, x_in);
+                let mut head = None;
+                if g == last_chunk {
+                    let batch = data.batch(iter, gmicro, self.sh.b, self.sh.s,
+                                           self.m.v);
+                    let targets_full = batch.narrow(1, 1, self.sh.s);
+                    let targets = seq::cp_extract(&targets_full, 1,
+                                                  ctx.coord.cp, topo.cp);
+                    let (loss, htape) = self.head_fwd(ctx, st, hooks, iter,
+                                                      gmicro, out, &targets);
+                    loss_sum += loss;
+                    loss_n += 1;
+                    head = Some(htape);
+                } else {
+                    let next_pp = (g + 1) % pp;
+                    if next_pp == ctx.coord.pp {
+                        edges.insert((g, gmicro), out);
+                    } else {
+                        ctx.comm.send(ctx.rank, ctx.pp_rank(next_pp), "act", &out);
+                    }
+                }
+                mtapes.push(ChunkTape { tokens: tokens_saved, layers: ltapes, head });
+            }
+            tapes.push(mtapes);
+        }
+
+        // ---- backward flush ----
+        let mut gedges: HashMap<(usize, u32), Tensor> = HashMap::new();
+        for v in (0..topo.vpp).rev() {
+            for m in (0..self.p.n_micro).rev() {
+                let gmicro = (m * topo.dp + ctx.coord.dp) as u32;
+                let g = v * pp + ctx.coord.pp;
+                let tape = &tapes[v][m];
+                let mut d: Tensor = if g == last_chunk {
+                    self.head_bwd(ctx, st, hooks, iter, gmicro,
+                                  tape.head.as_ref().unwrap())
+                } else {
+                    let next_pp = (g + 1) % pp;
+                    if next_pp == ctx.coord.pp {
+                        gedges.remove(&(g, gmicro)).expect("local bwd edge")
+                    } else {
+                        ctx.comm.recv(ctx.pp_rank(next_pp), ctx.rank, "grad")
+                    }
+                };
+                for lt in tape.layers.iter().rev() {
+                    d = self.layer_bwd(ctx, st, hooks, iter, gmicro, lt, &d);
+                }
+                if g == 0 {
+                    self.embed_bwd_path(ctx, st, hooks, iter, gmicro,
+                                        tape.tokens.as_ref().unwrap(), &d);
+                } else {
+                    let prev_pp = (g - 1) % pp;
+                    if prev_pp == ctx.coord.pp {
+                        gedges.insert((g - 1, gmicro), d);
+                    } else {
+                        ctx.comm.send(ctx.rank, ctx.pp_rank(prev_pp), "grad", &d);
+                    }
+                }
+            }
+        }
+        drop(tapes);
+
+        self.finalize_grads(ctx, st, hooks, iter);
+        st.last_grad_norm = Some(self.global_grad_norm(ctx, st));
+        self.optimizer_step(ctx, st, hooks, iter);
+
+        if loss_n > 0 {
+            let l = loss_sum / loss_n as f64;
+            st.last_loss = Some(l);
+            Some(l)
+        } else {
+            None
+        }
+    }
+
+    /// Gradient finalization: the collective choreography of main grads.
+    /// Bugs 5, 6, 12, 14 are injected here.
+    pub(crate) fn finalize_grads(&self, ctx: &RankCtx, st: &mut RankState,
+                                 hooks: &dyn Hooks, iter: u64) {
+        let topo = self.p.topo;
+        let tpg = ctx.tp_group();
+
+        // 1. replicated-but-sequence-sharded params need a tp all-reduce
+        if tpg.size > 1 {
+            for name in st.params.order.clone() {
+                let p = st.params.get(&name);
+                if p.sync != GradSync::ReplicatedSeqSharded {
+                    continue;
+                }
+                let is_ln = name.contains("layernorm") || name.contains("linear_proj.bias");
+                let is_router = name.contains("router");
+                // Bug 12 (M-CM): the SP layernorm grad sync is missing.
+                if self.bugs.on(BugId::B12SpLnSync) && is_ln {
+                    continue;
+                }
+                // Bug 6 (M-CM): the router grad sync is missing.
+                if self.bugs.on(BugId::B6SpRouterSync) && is_router {
+                    continue;
+                }
+                let grad = p.main_grad.clone();
+                let mut red = self.ar_f32(ctx, &tpg, &grad);
+                // Bug 14 (W-CP): under TP+CP the layernorm grad reduction
+                // averages instead of summing — wrong by a factor of tp.
+                if self.bugs.on(BugId::B14TpCpLnGrads) && is_ln && topo.cp > 1 {
+                    red = red.scale(1.0 / tpg.size as f32);
+                }
+                st.params.get_mut(&name).main_grad = red;
+            }
+        }
+
+        // 2. tied-embedding grad sync between the first and last stages.
+        // Bug 5 (W-CM): skipped when the distributed optimizer is on.
+        if topo.pp > 1 && (st.holds_embedding || st.holds_lmhead) {
+            let skip = self.bugs.on(BugId::B5ZeroUntiedEmbedding) && self.p.zero1;
+            if !skip {
+                let c = ctx.coord;
+                let key = format!("embtie@dp{}tp{}cp{}", c.dp, c.tp, c.cp);
+                let me = if st.holds_embedding { 0 } else { 1 };
+                let grad = st.params.get("embedding.word_embeddings.weight")
+                    .main_grad.clone();
+                let red = ctx.comm.all_reduce(&key, me, 2, &grad,
+                                              crate::comm::RedOp::Sum,
+                                              crate::comm::RedPrec::F32);
+                st.params.get_mut("embedding.word_embeddings.weight").main_grad = red;
+            }
+        }
+
+        // 3. dp×cp main-grad all-reduce (f32)
+        let dpcp = ctx.dpcp_group();
+        if dpcp.size > 1 {
+            for name in st.params.order.clone() {
+                let grad = st.params.get(&name).main_grad.clone();
+                let red = self.ar_f32(ctx, &dpcp, &grad);
+                st.params.get_mut(&name).main_grad = red;
+            }
+        }
+
+        // 4. record the final main grads
+        for name in st.params.order.clone() {
+            let p = st.params.get(&name);
+            hooks.record(&CanonId::new(iter, 0, Kind::MainGrad, &name),
+                         &p.main_grad, &p.spec);
+        }
+    }
+
+    /// Global L2 norm of the main gradients across all *unique* parameter
+    /// shards (replicated params counted on tp rank 0 / the first stage
+    /// only) — the quantity plotted in the paper's Figure 1 next to the
+    /// loss curve.
+    pub(crate) fn global_grad_norm(&self, ctx: &RankCtx, st: &RankState) -> f64 {
+        let mut local = 0.0f64;
+        for name in &st.params.order {
+            let p = st.params.get(name);
+            let counted = match p.sync {
+                super::params::GradSync::Sharded => {
+                    // tied embedding lives on first AND last stage
+                    name != "embedding.word_embeddings.weight" || st.holds_embedding
+                }
+                _ => ctx.coord.tp == 0,
+            };
+            // dp/cp replicas hold identical post-reduce grads: count dp0/cp0
+            if counted && ctx.coord.dp == 0 && ctx.coord.cp == 0 {
+                local += p.main_grad.fro_norm().powi(2);
+            }
+        }
+        let g = ctx.world_group();
+        let t = crate::tensor::Tensor::scalar(local as f32, crate::tensor::DType::F32);
+        let sum = ctx.comm.all_reduce(&g.key, g.me, g.size, &t,
+                                      crate::comm::RedOp::Sum,
+                                      crate::comm::RedPrec::F32);
+        (sum.data[0] as f64).sqrt()
+    }
+}
+
+/// Run `iters` training iterations SPMD; returns each rank's per-iteration
+/// losses (empty for non-last-stage ranks).
+pub fn run_training(engine: &Engine, data: &dyn DataSource, hooks: &dyn Hooks,
+                    iters: u64) -> Vec<Vec<f64>> {
+    run_training_full(engine, data, hooks, iters)
+        .into_iter()
+        .map(|(l, _)| l)
+        .collect()
+}
+
+/// Like `run_training` but also returns each rank's per-iteration global
+/// gradient norms (identical on every rank).
+pub fn run_training_full(engine: &Engine, data: &dyn DataSource,
+                         hooks: &dyn Hooks, iters: u64)
+                         -> Vec<(Vec<f64>, Vec<f64>)> {
+    run_spmd(engine.p.topo, |ctx| {
+        let mut st = engine.init_rank(ctx);
+        let mut losses = Vec::new();
+        let mut norms = Vec::new();
+        for it in 0..iters {
+            if let Some(l) = engine.train_iter(ctx, &mut st, hooks, data, it) {
+                losses.push(l);
+            }
+            if let Some(n) = st.last_grad_norm {
+                norms.push(n);
+            }
+        }
+        (losses, norms)
+    })
+}
+
+/// Convenience: mean loss per iteration across all loss-reporting ranks.
+pub fn mean_losses(per_rank: &[Vec<f64>]) -> Vec<f64> {
+    let reporting: Vec<&Vec<f64>> = per_rank.iter().filter(|l| !l.is_empty()).collect();
+    if reporting.is_empty() {
+        return Vec::new();
+    }
+    let iters = reporting[0].len();
+    (0..iters)
+        .map(|i| reporting.iter().map(|l| l[i]).sum::<f64>() / reporting.len() as f64)
+        .collect()
+}

@@ -1,0 +1,137 @@
+//! Artifact manifest: the ABI contract between `python/compile/aot.py` and
+//! the Rust runtime. Each entry maps a deterministic module key (name +
+//! shape parameters) to an HLO-text file and its input/output specs.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModuleInfo {
+    pub name: String,
+    pub file: String,
+    pub params: Vec<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+pub struct Manifest {
+    modules: HashMap<String, ModuleInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let root = Json::parse_file(path)?;
+        let version = root.req("version")?.as_usize()?;
+        if version != 1 {
+            bail!("manifest version {version} unsupported");
+        }
+        let mut modules = HashMap::new();
+        for (key, entry) in root.req("modules")?.as_obj()? {
+            let info = parse_entry(entry)
+                .with_context(|| format!("manifest entry '{key}'"))?;
+            modules.insert(key.clone(), info);
+        }
+        Ok(Manifest { modules })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ModuleInfo> {
+        self.modules.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.modules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.modules.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.modules.keys()
+    }
+}
+
+/// Recompute the deterministic artifact key — MUST match
+/// `python/compile/model.py::module_key`.
+pub fn module_key(name: &str, params: &[usize]) -> String {
+    let parts: Vec<String> = params.iter().map(|p| p.to_string()).collect();
+    format!("{name}__{}", parts.join("_"))
+}
+
+fn parse_entry(entry: &Json) -> Result<ModuleInfo> {
+    let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+        entry
+            .req(key)?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                let arr = s.as_arr()?;
+                let dtype = DType::from_name(arr[0].as_str()?)?;
+                let shape = arr[1..]
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(TensorSpec { dtype, shape })
+            })
+            .collect()
+    };
+    Ok(ModuleInfo {
+        name: entry.req("name")?.as_str()?.to_string(),
+        file: entry.req("file")?.as_str()?.to_string(),
+        params: entry
+            .req("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| p.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        inputs: specs("inputs")?,
+        outputs: specs("outputs")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_format_matches_python() {
+        // Pinned: python writes attn_fwd__2_4_16_16_8 for params (2,4,16,16,8).
+        assert_eq!(module_key("attn_fwd", &[2, 4, 16, 16, 8]), "attn_fwd__2_4_16_16_8");
+        assert_eq!(module_key("ln_fwd", &[2, 16, 32]), "ln_fwd__2_16_32");
+    }
+
+    #[test]
+    fn parses_manifest_snippet() {
+        let text = r#"{
+          "version": 1,
+          "modules": {
+            "ln_fwd__2_16_32": {
+              "name": "ln_fwd", "params": [2, 16, 32],
+              "file": "hlo/ln_fwd__2_16_32.hlo.txt",
+              "inputs": [["bf16", 2, 16, 32], ["bf16", 32], ["bf16", 32]],
+              "outputs": [["bf16", 2, 16, 32]]
+            }
+          }
+        }"#;
+        let tmp = std::env::temp_dir().join("ttrace_manifest_test.json");
+        std::fs::write(&tmp, text).unwrap();
+        let m = Manifest::load(&tmp).unwrap();
+        assert_eq!(m.len(), 1);
+        let info = m.get("ln_fwd__2_16_32").unwrap();
+        assert_eq!(info.inputs.len(), 3);
+        assert_eq!(info.inputs[0].dtype, DType::Bf16);
+        assert_eq!(info.inputs[0].shape, vec![2, 16, 32]);
+        assert_eq!(info.outputs[0].shape, vec![2, 16, 32]);
+    }
+}

@@ -1,0 +1,242 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! One process-wide `Executor` is shared by all simulated rank threads:
+//! executables are compiled once per module key and cached. The xla crate's
+//! wrappers are raw-pointer newtypes (`!Send`), but the underlying PJRT CPU
+//! client is internally synchronized; `Shared*` wrappers assert Send/Sync
+//! and a single execute mutex serializes device calls (the testbed has one
+//! CPU core — there is no parallelism to lose; see EXPERIMENTS.md §Perf).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{DType, Tensor};
+use crate::util::bf16;
+pub use manifest::{Manifest, ModuleInfo, TensorSpec};
+
+struct SharedClient(xla::PjRtClient);
+// SAFETY: PJRT CPU client methods are thread-safe (the same client object
+// serves concurrent JAX threads); we never move the raw pointer's ownership
+// across threads, only share &self.
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+
+struct SharedExec(xla::PjRtLoadedExecutable);
+// SAFETY: see SharedClient; executions are additionally serialized by
+// `exec_lock`.
+unsafe impl Send for SharedExec {}
+unsafe impl Sync for SharedExec {}
+
+/// Cumulative execution statistics (inspected by the perf pass / benches).
+#[derive(Default, Clone, Debug)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub compile_s: f64,
+    pub execute_s: f64,
+    pub marshal_s: f64,
+    pub per_module: HashMap<String, (u64, f64)>,
+}
+
+pub struct Executor {
+    client: SharedClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<SharedExec>>>,
+    exec_lock: Mutex<()>,
+    stats: Mutex<ExecStats>,
+}
+
+impl Executor {
+    /// Load the artifact manifest; compilation happens lazily per module.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Arc<Executor>> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Arc::new(Executor {
+            client: SharedClient(client),
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            exec_lock: Mutex::new(()),
+            stats: Mutex::new(ExecStats::default()),
+        }))
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.lock().unwrap() = ExecStats::default();
+    }
+
+    fn compiled(&self, key: &str) -> Result<Arc<SharedExec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(key) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .manifest
+            .get(key)
+            .ok_or_else(|| anyhow!("module '{key}' not in manifest — regenerate artifacts \
+                                    (make artifacts) or fix the config plan"))?;
+        let path = self.dir.join(&info.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling '{key}': {e:?}"))?;
+        let exe = Arc::new(SharedExec(exe));
+        let dt = t0.elapsed().as_secs_f64();
+        let mut st = self.stats.lock().unwrap();
+        st.compile_s += dt;
+        drop(st);
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(key.to_string())
+            .or_insert_with(|| exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute module `key` on `inputs`; validates shapes/dtypes against the
+    /// manifest ABI and returns the outputs as host tensors.
+    pub fn run(&self, key: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let info = self
+            .manifest
+            .get(key)
+            .ok_or_else(|| anyhow!("module '{key}' not in manifest"))?
+            .clone();
+        if inputs.len() != info.inputs.len() {
+            bail!("module '{key}': {} inputs supplied, ABI wants {}",
+                  inputs.len(), info.inputs.len());
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&info.inputs).enumerate() {
+            if t.dims != spec.shape {
+                bail!("module '{key}' input {i}: shape {:?} != ABI {:?}",
+                      t.dims, spec.shape);
+            }
+            if t.dtype != spec.dtype {
+                bail!("module '{key}' input {i}: dtype {:?} != ABI {:?}",
+                      t.dtype, spec.dtype);
+            }
+        }
+        let exe = self.compiled(key)?;
+
+        let tm = Instant::now();
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+        let marshal_in = tm.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let guard = self.exec_lock.lock().unwrap();
+        let result = exe
+            .0
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing '{key}': {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of '{key}': {e:?}"))?;
+        drop(guard);
+        let exec_dt = t0.elapsed().as_secs_f64();
+
+        let tm2 = Instant::now();
+        // aot.py lowers with return_tuple=True: always a tuple, even for one
+        // output.
+        let outs = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of '{key}': {e:?}"))?;
+        if outs.len() != info.outputs.len() {
+            bail!("module '{key}': {} outputs, ABI wants {}", outs.len(),
+                  info.outputs.len());
+        }
+        let tensors: Vec<Tensor> = outs
+            .iter()
+            .zip(&info.outputs)
+            .map(|(l, spec)| literal_to_tensor(l, spec))
+            .collect::<Result<_>>()?;
+        let marshal = marshal_in + tm2.elapsed().as_secs_f64();
+
+        let mut st = self.stats.lock().unwrap();
+        st.executions += 1;
+        st.execute_s += exec_dt;
+        st.marshal_s += marshal;
+        let e = st.per_module.entry(key.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += exec_dt;
+        Ok(tensors)
+    }
+}
+
+/// Host tensor -> device literal, marshaling through the device dtype.
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let mk = |ty, bytes: &[u8]| {
+        xla::Literal::create_from_shape_and_untyped_data(ty, &t.dims, bytes)
+            .map_err(|e| anyhow!("literal create: {e:?}"))
+    };
+    match t.dtype {
+        DType::F32 => {
+            let bytes = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            mk(xla::ElementType::F32, bytes)
+        }
+        DType::Bf16 => {
+            let packed = bf16::pack_bf16(&t.data);
+            let bytes = unsafe {
+                std::slice::from_raw_parts(packed.as_ptr() as *const u8, packed.len() * 2)
+            };
+            mk(xla::ElementType::Bf16, bytes)
+        }
+        DType::I32 => {
+            let ints: Vec<i32> = t.data.iter().map(|&x| x as i32).collect();
+            let bytes = unsafe {
+                std::slice::from_raw_parts(ints.as_ptr() as *const u8, ints.len() * 4)
+            };
+            mk(xla::ElementType::S32, bytes)
+        }
+    }
+}
+
+/// Device literal -> host tensor (f32 storage), checking the ABI spec.
+fn literal_to_tensor(l: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+    let shape = l.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    if dims != spec.shape {
+        bail!("output shape {:?} != ABI {:?}", dims, spec.shape);
+    }
+    let data: Vec<f32> = match spec.dtype {
+        DType::I32 => {
+            let v = l
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("literal i32 read: {e:?}"))?;
+            v.into_iter().map(|x| x as f32).collect()
+        }
+        _ => {
+            // bf16 -> f32 conversion is exact; f32 -> f32 is identity.
+            let conv = l
+                .convert(xla::PrimitiveType::F32)
+                .map_err(|e| anyhow!("literal convert: {e:?}"))?;
+            conv.to_vec::<f32>()
+                .map_err(|e| anyhow!("literal f32 read: {e:?}"))?
+        }
+    };
+    Ok(Tensor::new(&dims, data, spec.dtype))
+}

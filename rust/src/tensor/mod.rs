@@ -1,0 +1,352 @@
+//! Host tensor substrate.
+//!
+//! The coordinator's view of every tensor is a dense row-major `f32` buffer
+//! plus a *device dtype* tag describing how it is marshaled to/from the
+//! PJRT device (bf16, f32, i32). Host-side arithmetic that stands in for
+//! device-side bf16 math (residual adds, collective reductions) must round
+//! through bf16 explicitly — see `add_bf16` / `Comm::all_reduce`.
+
+use anyhow::{bail, Result};
+
+use crate::util::bf16;
+
+/// Device representation of a tensor (host storage is always f32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    Bf16,
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::Bf16 => "bf16",
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<DType> {
+        Ok(match s {
+            "bf16" => DType::Bf16,
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            _ => bail!("unknown dtype '{s}'"),
+        })
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+    pub dtype: DType,
+}
+
+impl Tensor {
+    pub fn new(dims: &[usize], data: Vec<f32>, dtype: DType) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len(),
+                   "shape {:?} vs data len {}", dims, data.len());
+        Tensor { dims: dims.to_vec(), data, dtype }
+    }
+
+    pub fn zeros(dims: &[usize], dtype: DType) -> Tensor {
+        Tensor::new(dims, vec![0.0; dims.iter().product()], dtype)
+    }
+
+    pub fn scalar(v: f32, dtype: DType) -> Tensor {
+        Tensor::new(&[], vec![v], dtype)
+    }
+
+    pub fn full(dims: &[usize], v: f32, dtype: DType) -> Tensor {
+        Tensor::new(dims, vec![v; dims.iter().product()], dtype)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.dims.len()];
+        for i in (0..self.dims.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1];
+        }
+        s
+    }
+
+    pub fn reshape(&self, dims: &[usize]) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), self.numel());
+        Tensor::new(dims, self.data.clone(), self.dtype)
+    }
+
+    /// Contiguous slice `[start, start+len)` along `dim`.
+    pub fn narrow(&self, dim: usize, start: usize, len: usize) -> Tensor {
+        assert!(dim < self.dims.len(), "narrow dim {dim} of {:?}", self.dims);
+        assert!(start + len <= self.dims[dim],
+                "narrow [{start},{}) exceeds dim {dim} of {:?}", start + len, self.dims);
+        let outer: usize = self.dims[..dim].iter().product();
+        let inner: usize = self.dims[dim + 1..].iter().product();
+        let d = self.dims[dim];
+        let mut out = Vec::with_capacity(outer * len * inner);
+        for o in 0..outer {
+            let base = o * d * inner + start * inner;
+            out.extend_from_slice(&self.data[base..base + len * inner]);
+        }
+        let mut dims = self.dims.clone();
+        dims[dim] = len;
+        Tensor::new(&dims, out, self.dtype)
+    }
+
+    /// Concatenate tensors along `dim`; shapes must agree elsewhere.
+    pub fn concat(parts: &[&Tensor], dim: usize) -> Tensor {
+        assert!(!parts.is_empty());
+        let first = parts[0];
+        let mut total = 0usize;
+        for p in parts {
+            assert_eq!(p.dims.len(), first.dims.len());
+            for (i, (a, b)) in p.dims.iter().zip(first.dims.iter()).enumerate() {
+                if i != dim {
+                    assert_eq!(a, b, "concat mismatch at dim {i}");
+                }
+            }
+            total += p.dims[dim];
+        }
+        let outer: usize = first.dims[..dim].iter().product();
+        let inner: usize = first.dims[dim + 1..].iter().product();
+        let mut dims = first.dims.clone();
+        dims[dim] = total;
+        let mut out = Vec::with_capacity(outer * total * inner);
+        for o in 0..outer {
+            for p in parts {
+                let d = p.dims[dim];
+                let base = o * d * inner;
+                out.extend_from_slice(&p.data[base..base + d * inner]);
+            }
+        }
+        Tensor::new(&dims, out, first.dtype)
+    }
+
+    /// Split into `n` equal contiguous chunks along `dim`.
+    pub fn chunk(&self, n: usize, dim: usize) -> Vec<Tensor> {
+        assert_eq!(self.dims[dim] % n, 0, "chunk {n} of dim {:?}[{dim}]", self.dims);
+        let len = self.dims[dim] / n;
+        (0..n).map(|i| self.narrow(dim, i * len, len)).collect()
+    }
+
+    /// Permute axes: `perm[i]` is the source axis that lands at output
+    /// axis `i` (numpy `transpose` semantics). O(n) gather.
+    pub fn permute(&self, perm: &[usize]) -> Tensor {
+        assert_eq!(perm.len(), self.dims.len());
+        let in_strides = self.strides();
+        let out_dims: Vec<usize> = perm.iter().map(|&p| self.dims[p]).collect();
+        let n = self.numel();
+        let mut out = vec![0.0f32; n];
+        let out_rank = out_dims.len();
+        // iterate output positions in row-major order, mapping back to input
+        let mut idx = vec![0usize; out_rank];
+        for slot in out.iter_mut() {
+            let mut src = 0usize;
+            for (i, &ix) in idx.iter().enumerate() {
+                src += ix * in_strides[perm[i]];
+            }
+            *slot = self.data[src];
+            // increment multi-index
+            for i in (0..out_rank).rev() {
+                idx[i] += 1;
+                if idx[i] < out_dims[i] {
+                    break;
+                }
+                idx[i] = 0;
+            }
+        }
+        Tensor::new(&out_dims, out, self.dtype)
+    }
+
+    // ---- arithmetic ----------------------------------------------------
+
+    /// Elementwise add in f32 (master-precision math).
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.dims, other.dims);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor::new(&self.dims, data, self.dtype)
+    }
+
+    /// Elementwise add rounding the result through bf16 — what a bf16
+    /// device kernel computing `a + b` would produce.
+    pub fn add_bf16(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.dims, other.dims);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| bf16::round_bf16(a + b))
+            .collect();
+        Tensor::new(&self.dims, data, DType::Bf16)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Tensor::new(&self.dims, data, self.dtype)
+    }
+
+    pub fn scale_bf16(&self, s: f32) -> Tensor {
+        let data = self.data.iter().map(|a| bf16::round_bf16(a * s)).collect();
+        Tensor::new(&self.dims, data, DType::Bf16)
+    }
+
+    /// Round storage through bf16 (e.g. after f32 host math on a bf16 tensor).
+    pub fn round_bf16(&self) -> Tensor {
+        let mut t = self.clone();
+        bf16::round_slice_bf16(&mut t.data);
+        t.dtype = DType::Bf16;
+        t
+    }
+
+    // ---- norms / comparisons -------------------------------------------
+
+    /// Frobenius norm (f64 accumulation — the checker must not itself
+    /// suffer round-off).
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Relative error ‖a − b‖_F / ‖a‖_F (paper §2.2). `a` is the reference.
+    pub fn rel_err(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.dims, other.dims, "rel_err shape mismatch");
+        let mut diff = 0.0f64;
+        for (x, y) in self.data.iter().zip(&other.data) {
+            let d = (*x as f64) - (*y as f64);
+            diff += d * d;
+        }
+        let denom = self.fro_norm();
+        if denom == 0.0 {
+            return if diff == 0.0 { 0.0 } else { f64::INFINITY };
+        }
+        diff.sqrt() / denom
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    pub fn allclose(&self, other: &Tensor, tol: f64) -> bool {
+        self.dims == other.dims && self.rel_err(other) <= tol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn t(dims: &[usize], vals: &[f32]) -> Tensor {
+        Tensor::new(dims, vals.to_vec(), DType::F32)
+    }
+
+    #[test]
+    fn narrow_middle_dim() {
+        // [2,3,2] row-major
+        let x = t(&[2, 3, 2], &[0., 1., 2., 3., 4., 5., 6., 7., 8., 9., 10., 11.]);
+        let y = x.narrow(1, 1, 2);
+        assert_eq!(y.dims, vec![2, 2, 2]);
+        assert_eq!(y.data, vec![2., 3., 4., 5., 8., 9., 10., 11.]);
+    }
+
+    #[test]
+    fn concat_inverts_chunk() {
+        let x = t(&[2, 4], &[0., 1., 2., 3., 4., 5., 6., 7.]);
+        for dim in 0..2 {
+            let parts = x.chunk(2, dim);
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            assert_eq!(Tensor::concat(&refs, dim), x, "dim {dim}");
+        }
+    }
+
+    #[test]
+    fn prop_chunk_concat_roundtrip() {
+        check("chunk/concat roundtrip", |rng| {
+            let r = Gen::range(rng, 1, 3);
+            let dims: Vec<usize> = (0..r).map(|_| Gen::pow2(rng, 2, 8)).collect();
+            let n: usize = dims.iter().product();
+            let x = Tensor::new(&dims, Gen::vec_normal(rng, n, 1.0), DType::F32);
+            let dim = Gen::range(rng, 0, r - 1);
+            let parts = x.chunk(2, dim);
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            if Tensor::concat(&refs, dim) == x {
+                Ok(())
+            } else {
+                Err(format!("roundtrip failed dims={dims:?} dim={dim}"))
+            }
+        });
+    }
+
+    #[test]
+    fn permute_2d_transpose() {
+        let x = t(&[2, 3], &[0., 1., 2., 3., 4., 5.]);
+        let y = x.permute(&[1, 0]);
+        assert_eq!(y.dims, vec![3, 2]);
+        assert_eq!(y.data, vec![0., 3., 1., 4., 2., 5.]);
+    }
+
+    #[test]
+    fn permute_roundtrip() {
+        check("permute roundtrip", |rng| {
+            let dims = [
+                Gen::range(rng, 1, 4),
+                Gen::range(rng, 1, 4),
+                Gen::range(rng, 1, 4),
+                Gen::range(rng, 1, 4),
+            ];
+            let n: usize = dims.iter().product();
+            let x = Tensor::new(&dims, Gen::vec_normal(rng, n, 1.0), DType::F32);
+            // (0,2,1,3) is its own inverse
+            let y = x.permute(&[0, 2, 1, 3]).permute(&[0, 2, 1, 3]);
+            if y == x { Ok(()) } else { Err(format!("dims {dims:?}")) }
+        });
+    }
+
+    #[test]
+    fn rel_err_semantics() {
+        let a = t(&[3], &[1., 2., 2.]);
+        let b = t(&[3], &[1., 2., 2.]);
+        assert_eq!(a.rel_err(&b), 0.0);
+        let c = t(&[3], &[1., 2., 5.]);
+        assert!((a.rel_err(&c) - 1.0).abs() < 1e-9); // |5-2| / 3 = 1.0
+        let z = t(&[2], &[0., 0.]);
+        assert_eq!(z.rel_err(&t(&[2], &[0., 0.])), 0.0);
+        assert!(z.rel_err(&t(&[2], &[1., 0.])).is_infinite());
+    }
+
+    #[test]
+    fn bf16_add_rounds() {
+        let a = t(&[1], &[1.0]);
+        let b = t(&[1], &[crate::util::bf16::EPS_BF16 / 4.0]);
+        assert_eq!(a.add_bf16(&b).data[0], 1.0); // swallowed by rounding
+        assert!(a.add(&b).data[0] > 1.0); // f32 add keeps it
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let x = Tensor::zeros(&[2, 3, 4], DType::F32);
+        assert_eq!(x.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn narrow_oob_panics() {
+        t(&[4], &[0., 1., 2., 3.]).narrow(0, 3, 2);
+    }
+}

@@ -1,0 +1,297 @@
+//! User annotations (paper §3 step 2, Figure 2): a YAML-lite description
+//! of how each parameter and each module's input/output tensors are
+//! sharded by the intended parallel strategy. Annotations inform the
+//! tensor canonical mapping; here they also *validate* the engine's
+//! built-in shard specs — a mismatch means the user's intent and the
+//! framework's behaviour disagree, which is itself a finding.
+//!
+//! Format (2-space indentation, `*` wildcards one path segment):
+//!
+//! ```yaml
+//! params:
+//!   embedding.word_embeddings.weight:
+//!     tp_dim: 0
+//!   layers.*.self_attention.linear_qkv.weight:
+//!     tp_dim: 1
+//! modules:
+//!   layers.*.self_attention.linear_qkv:
+//!     output:
+//!       tp_dim: 2
+//!       cp_dim: 1
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::ttrace::shard::ShardSpec;
+
+/// A scalar annotation value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Val {
+    Null,
+    Int(i64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Val {
+    fn parse(s: &str) -> Val {
+        match s {
+            "null" | "~" => Val::Null,
+            "true" => Val::Bool(true),
+            "false" => Val::Bool(false),
+            _ => s.parse::<i64>().map(Val::Int).unwrap_or_else(|_| Val::Str(s.into())),
+        }
+    }
+
+    pub fn as_dim(&self) -> Option<usize> {
+        match self {
+            Val::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+}
+
+/// Nested map parsed from the YAML-lite text.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Node {
+    pub value: Option<Val>,
+    pub children: BTreeMap<String, Node>,
+}
+
+impl Node {
+    pub fn get(&self, path: &[&str]) -> Option<&Node> {
+        let mut cur = self;
+        for p in path {
+            cur = cur.children.get(*p)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse the 2-space-indented `key: value` format.
+pub fn parse(text: &str) -> Result<Node> {
+    let mut root = Node::default();
+    // stack of (indent, path)
+    let mut path: Vec<(usize, String)> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("");
+        if line.trim().is_empty() {
+            continue;
+        }
+        let indent = line.len() - line.trim_start().len();
+        if indent % 2 != 0 {
+            bail!("line {}: odd indentation", lineno + 1);
+        }
+        let depth = indent / 2;
+        let body = line.trim();
+        let (key, val) = match body.split_once(':') {
+            Some((k, v)) => (k.trim().to_string(), v.trim()),
+            None => bail!("line {}: expected 'key: value'", lineno + 1),
+        };
+        path.truncate(depth);
+        if path.len() != depth {
+            bail!("line {}: indentation skips a level", lineno + 1);
+        }
+        path.push((depth, key.clone()));
+        // insert into tree
+        let mut cur = &mut root;
+        for (_, k) in &path {
+            cur = cur.children.entry(k.clone()).or_default();
+        }
+        if !val.is_empty() {
+            cur.value = Some(Val::parse(val));
+        }
+    }
+    Ok(root)
+}
+
+/// Match a dotted name against a dotted pattern with `*` wildcards.
+pub fn pattern_matches(pattern: &str, name: &str) -> bool {
+    let ps: Vec<&str> = pattern.split('.').collect();
+    let ns: Vec<&str> = name.split('.').collect();
+    ps.len() == ns.len()
+        && ps.iter().zip(&ns).all(|(p, n)| *p == "*" || p == n)
+}
+
+/// Parsed annotations with lookup helpers.
+pub struct Annotations {
+    pub root: Node,
+}
+
+impl Annotations {
+    pub fn parse_str(text: &str) -> Result<Annotations> {
+        Ok(Annotations { root: parse(text)? })
+    }
+
+    /// Find the annotation node for a parameter name (wildcard-aware).
+    pub fn param(&self, name: &str) -> Option<&Node> {
+        let params = self.root.children.get("params")?;
+        params
+            .children
+            .iter()
+            .find(|(pat, _)| pattern_matches(pat, name))
+            .map(|(_, n)| n)
+    }
+
+    /// The annotated tp sharding dim of a parameter (None = replicated).
+    pub fn param_tp_dim(&self, name: &str) -> Option<usize> {
+        self.param(name)?.children.get("tp_dim")?.value.as_ref()?.as_dim()
+    }
+
+    /// Validate a parameter's engine-built ShardSpec against the
+    /// annotation: the annotated tp_dim must be exactly the set of mapped
+    /// dims (Figure 2 semantics).
+    pub fn validate_param(&self, name: &str, spec: &ShardSpec, tp: usize)
+                          -> Result<()> {
+        let annotated = self.param_tp_dim(name);
+        match annotated {
+            None => {
+                if !spec.is_full() && tp > 1 {
+                    bail!("param '{name}': annotation says replicated but the \
+                           framework shards dims {:?}",
+                          spec.maps.iter().map(|m| m.dim).collect::<Vec<_>>());
+                }
+            }
+            Some(dim) => {
+                if tp > 1 && !spec.maps.iter().any(|m| m.dim == dim) {
+                    bail!("param '{name}': annotation shards dim {dim} but the \
+                           framework maps dims {:?}",
+                          spec.maps.iter().map(|m| m.dim).collect::<Vec<_>>());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The canonical annotation for the GPT/MoE model family of this repo —
+/// what a user would write once per model (Figure 2's file).
+pub fn default_annotations() -> &'static str {
+    r#"
+params:
+  embedding.word_embeddings.weight:
+    tp_dim: 0
+  layers.*.input_layernorm.weight:
+    tp_dim: null
+    sp_dim: 0
+  layers.*.input_layernorm.bias:
+    tp_dim: null
+    sp_dim: 0
+  layers.*.pre_mlp_layernorm.weight:
+    tp_dim: null
+    sp_dim: 0
+  layers.*.pre_mlp_layernorm.bias:
+    tp_dim: null
+    sp_dim: 0
+  layers.*.self_attention.linear_qkv.weight:
+    tp_dim: 1
+  layers.*.self_attention.linear_qkv.bias:
+    tp_dim: 0
+  layers.*.self_attention.linear_proj.weight:
+    tp_dim: 0
+  layers.*.self_attention.linear_proj.bias:
+    tp_dim: null
+  layers.*.mlp.fc1.weight:
+    tp_dim: 1
+  layers.*.mlp.fc1.bias:
+    tp_dim: 0
+  layers.*.mlp.fc2.weight:
+    tp_dim: 0
+  layers.*.mlp.router.weight:
+    tp_dim: null
+  layers.*.mlp.experts.fc1.weight:
+    tp_dim: 2
+  layers.*.mlp.experts.fc1.bias:
+    tp_dim: 1
+  layers.*.mlp.experts.fc2.weight:
+    tp_dim: 1
+  final_layernorm.weight:
+    tp_dim: null
+  final_layernorm.bias:
+    tp_dim: null
+modules:
+  embedding.word_embeddings:
+    output:
+      tp_dim: null
+      sp_dim: 1
+      cp_dim: 1
+  layers.*.self_attention.linear_qkv:
+    input:
+      tp_dim: null
+      cp_dim: 1
+    output:
+      tp_dim: 2
+      cp_dim: 1
+  layers.*.self_attention.core_attention:
+    output:
+      tp_dim: 2
+      cp_dim: 1
+  layers.*.self_attention.linear_proj:
+    output:
+      tp_dim: null
+      sp_dim: 1
+      cp_dim: 1
+  layers.*.mlp:
+    output:
+      tp_dim: null
+      sp_dim: 1
+      cp_dim: 1
+  output_layer:
+    output:
+      tp_dim: 2
+      cp_dim: 1
+"#
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_nested_yaml_lite() {
+        let n = parse("a:\n  b: 1\n  c:\n    d: null\ne: true\n").unwrap();
+        assert_eq!(n.get(&["a", "b"]).unwrap().value, Some(Val::Int(1)));
+        assert_eq!(n.get(&["a", "c", "d"]).unwrap().value, Some(Val::Null));
+        assert_eq!(n.get(&["e"]).unwrap().value, Some(Val::Bool(true)));
+    }
+
+    #[test]
+    fn wildcards_match_layer_indices() {
+        assert!(pattern_matches("layers.*.mlp.fc1.weight",
+                                "layers.7.mlp.fc1.weight"));
+        assert!(!pattern_matches("layers.*.mlp.fc1.weight",
+                                 "layers.7.mlp.fc2.weight"));
+        assert!(!pattern_matches("layers.*", "layers.7.mlp"));
+    }
+
+    #[test]
+    fn default_annotations_parse_and_lookup() {
+        let a = Annotations::parse_str(default_annotations()).unwrap();
+        assert_eq!(a.param_tp_dim("embedding.word_embeddings.weight"), Some(0));
+        assert_eq!(a.param_tp_dim("layers.3.self_attention.linear_qkv.weight"),
+                   Some(1));
+        assert_eq!(a.param_tp_dim("final_layernorm.weight"), None);
+    }
+
+    #[test]
+    fn validates_engine_specs_against_annotations() {
+        use crate::dist::{Coord, Topology};
+        use crate::model::{params, ParCfg, TINY};
+        let a = Annotations::parse_str(default_annotations()).unwrap();
+        let mut p = ParCfg::single();
+        p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+        let set = params::build(&TINY, &p, Coord { dp: 0, tp: 1, pp: 0, cp: 0 },
+                                2, &[0, 1], true, true);
+        for name in &set.order {
+            a.validate_param(name, &set.get(name).spec, 2)
+                .unwrap_or_else(|e| panic!("{e:#}"));
+        }
+    }
+
+    #[test]
+    fn rejects_bad_indentation() {
+        assert!(parse("a:\n   b: 1\n").is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! Canonical module naming (paper §4.1, Figure 5).
+//!
+//! Pipeline stages number their local layers from 0; virtual pipelining
+//! (VPP) interleaves chunks of layers across stages. The canonical mapping
+//! restores the reference (single-device) layer index:
+//!
+//!   global = vpp_rank * (pp * chunk) + pp_rank * chunk + local
+//!
+//! with `chunk = L / (pp * vpp)` layers per virtual chunk. The purple
+//! example in Figure 5 (pp=2, vpp=2, L=8): layer 0 of the 2nd virtual chunk
+//! on stage 1 -> 1*(2*2) + 1*2 + 0 = 6... (paper's figure uses its own
+//! chunk size; the formula is the Megatron interleaved mapping).
+
+use anyhow::{bail, Result};
+
+/// Layer-index mapping for one pipeline stage.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerMap {
+    pub layers: usize,
+    pub pp: usize,
+    pub vpp: usize,
+}
+
+impl LayerMap {
+    pub fn new(layers: usize, pp: usize, vpp: usize) -> Result<LayerMap> {
+        if pp == 0 || vpp == 0 || layers == 0 {
+            bail!("layers/pp/vpp must be >= 1");
+        }
+        if layers % (pp * vpp) != 0 {
+            bail!("layers ({layers}) must divide evenly into pp*vpp ({})", pp * vpp);
+        }
+        Ok(LayerMap { layers, pp, vpp })
+    }
+
+    /// Layers per virtual chunk.
+    pub fn chunk(&self) -> usize {
+        self.layers / (self.pp * self.vpp)
+    }
+
+    /// Map (pp_rank, vpp_rank, local layer id) -> reference layer id.
+    pub fn global_layer(&self, pp_rank: usize, vpp_rank: usize, local: usize) -> usize {
+        debug_assert!(pp_rank < self.pp && vpp_rank < self.vpp && local < self.chunk());
+        vpp_rank * self.pp * self.chunk() + pp_rank * self.chunk() + local
+    }
+
+    /// Inverse: reference layer id -> (pp_rank, vpp_rank, local).
+    pub fn locate(&self, global: usize) -> (usize, usize, usize) {
+        debug_assert!(global < self.layers);
+        let chunk = self.chunk();
+        let vpp_rank = global / (self.pp * chunk);
+        let rem = global % (self.pp * chunk);
+        (rem / chunk, vpp_rank, rem % chunk)
+    }
+
+    /// All reference layer ids owned by a (pp_rank, vpp_rank) chunk, in
+    /// local order.
+    pub fn chunk_layers(&self, pp_rank: usize, vpp_rank: usize) -> Vec<usize> {
+        (0..self.chunk())
+            .map(|l| self.global_layer(pp_rank, vpp_rank, l))
+            .collect()
+    }
+}
+
+/// Canonical module-name builders — shared verbatim by the engine (when
+/// recording) and the checker (when reporting), so names can never drift.
+pub mod names {
+    pub fn embedding() -> String {
+        "embedding.word_embeddings".to_string()
+    }
+
+    pub fn input_ln(layer: usize) -> String {
+        format!("layers.{layer}.input_layernorm")
+    }
+
+    pub fn qkv(layer: usize) -> String {
+        format!("layers.{layer}.self_attention.linear_qkv")
+    }
+
+    pub fn core_attn(layer: usize) -> String {
+        format!("layers.{layer}.self_attention.core_attention")
+    }
+
+    pub fn proj(layer: usize) -> String {
+        format!("layers.{layer}.self_attention.linear_proj")
+    }
+
+    pub fn pre_mlp_ln(layer: usize) -> String {
+        format!("layers.{layer}.pre_mlp_layernorm")
+    }
+
+    pub fn mlp(layer: usize) -> String {
+        format!("layers.{layer}.mlp")
+    }
+
+    pub fn router(layer: usize) -> String {
+        format!("layers.{layer}.mlp.router")
+    }
+
+    pub fn layer_out(layer: usize) -> String {
+        format!("layers.{layer}")
+    }
+
+    pub fn final_ln() -> String {
+        "final_layernorm".to_string()
+    }
+
+    pub fn output_layer() -> String {
+        "output_layer".to_string()
+    }
+
+    /// Reference layer index of a canonical module name, if it has one.
+    pub fn layer_of(module: &str) -> Option<usize> {
+        let rest = module.strip_prefix("layers.")?;
+        let idx = rest.split('.').next()?;
+        idx.parse().ok()
+    }
+
+    /// Depth rank used to order modules "by position in the model" in
+    /// reports and figures: embedding < layers (sub-ordered) < final_ln <
+    /// output_layer.
+    pub fn depth_rank(module: &str) -> (usize, usize, usize) {
+        if module.starts_with("embedding") {
+            return (0, 0, 0);
+        }
+        if module.starts_with("output_layer") {
+            return (3, 0, 0);
+        }
+        if let Some(l) = layer_of(module) {
+            // `contains` (not ends_with): parameter names carry
+            // .weight/.bias suffixes and must sort with their submodule
+            let sub = if module.contains("input_layernorm") {
+                0
+            } else if module.contains("linear_qkv") {
+                1
+            } else if module.contains("core_attention") {
+                2
+            } else if module.contains("linear_proj") {
+                3
+            } else if module.contains("pre_mlp_layernorm") {
+                4
+            } else if module.contains("router") {
+                5
+            } else if module.contains("mlp") {
+                6
+            } else {
+                7 // the layer output itself
+            };
+            return (1, l, sub);
+        }
+        if module == "final_layernorm" {
+            return (2, 0, 0);
+        }
+        (3, 0, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn figure5_example() {
+        // Figure 5: pp=2, vpp=2, 8 layers -> chunk=2.
+        // Stage 0 owns chunks [0,1] (vpp 0) and [4,5] (vpp 1);
+        // stage 1 owns [2,3] and [6,7].
+        let m = LayerMap::new(8, 2, 2).unwrap();
+        assert_eq!(m.chunk_layers(0, 0), vec![0, 1]);
+        assert_eq!(m.chunk_layers(1, 0), vec![2, 3]);
+        assert_eq!(m.chunk_layers(0, 1), vec![4, 5]);
+        assert_eq!(m.chunk_layers(1, 1), vec![6, 7]);
+        // "layer 0 in the 2nd virtual pipeline of the 1st pipeline stage
+        // maps to layer 4 in the reference" (purple example)
+        assert_eq!(m.global_layer(0, 1, 0), 4);
+    }
+
+    #[test]
+    fn mapping_is_bijective() {
+        check("layer map bijection", |rng| {
+            let pp = Gen::range(rng, 1, 4);
+            let vpp = Gen::range(rng, 1, 3);
+            let chunk = Gen::range(rng, 1, 4);
+            let layers = pp * vpp * chunk;
+            let m = LayerMap::new(layers, pp, vpp).unwrap();
+            let mut seen = vec![false; layers];
+            for p in 0..pp {
+                for v in 0..vpp {
+                    for l in 0..m.chunk() {
+                        let g = m.global_layer(p, v, l);
+                        if g >= layers || seen[g] {
+                            return Err(format!("collision at ({p},{v},{l})->{g}"));
+                        }
+                        seen[g] = true;
+                        if m.locate(g) != (p, v, l) {
+                            return Err(format!("locate({g}) != ({p},{v},{l})"));
+                        }
+                    }
+                }
+            }
+            if seen.iter().all(|&s| s) { Ok(()) } else { Err("gap".into()) }
+        });
+    }
+
+    #[test]
+    fn no_vpp_is_contiguous_blocks() {
+        let m = LayerMap::new(8, 2, 1).unwrap();
+        assert_eq!(m.chunk_layers(0, 0), vec![0, 1, 2, 3]);
+        assert_eq!(m.chunk_layers(1, 0), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn rejects_uneven_division() {
+        assert!(LayerMap::new(6, 4, 1).is_err());
+    }
+
+    #[test]
+    fn names_and_depth_order() {
+        use names::*;
+        assert_eq!(layer_of(&qkv(3)), Some(3));
+        assert_eq!(layer_of(&embedding()), None);
+        let order = [embedding(), input_ln(0), core_attn(0), mlp(0),
+                     layer_out(0), input_ln(1), final_ln(), output_layer()];
+        let mut sorted = order.to_vec();
+        sorted.sort_by_key(|m| depth_rank(m));
+        assert_eq!(sorted, order.to_vec());
+    }
+}

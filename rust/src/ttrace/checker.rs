@@ -1,0 +1,248 @@
+//! Equivalence checker + differential testing (paper §4.4).
+//!
+//! For every canonical id: merge the candidate shards into the logical
+//! full tensor (conflict/omission checks included), compare against the
+//! reference tensor with the relative Frobenius error, and judge it
+//! against a per-tensor threshold derived from the §5.2 estimate:
+//!
+//! `threshold(id) = max(SAFETY * est_rel(id), FLOOR * eps_mch)`
+//!
+//! Correct candidates sit at or below the estimate (round-off only); the
+//! paper reports bug-induced errors around 100ε — SAFETY=8, FLOOR=4 sit
+//! well inside that decade gap.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::util::bf16::EPS_BF16;
+
+use super::canonical::names;
+use super::collector::Trace;
+use super::hooks::{CanonId, Kind};
+use super::merger;
+
+#[derive(Clone, Debug)]
+pub struct CheckCfg {
+    /// multiplier on the estimated FP round-off error
+    pub safety: f64,
+    /// threshold floor, in units of machine epsilon
+    pub floor: f64,
+    /// machine epsilon of the training precision
+    pub eps: f64,
+    /// learning rate of the run — post-optimizer parameter comparisons get
+    /// an additional allowance of `3*lr*sqrt(n)/||ref||`: Adam\'s first step
+    /// is sign descent, so near-zero-gradient elements flip sign under any
+    /// FP-level noise and move the parameter by up to 2*lr each. Optimizer
+    /// bugs (no update, untied replicas) are still caught bitwise by the
+    /// merger\'s conflict detection, which this allowance does not relax.
+    pub lr: f64,
+}
+
+impl Default for CheckCfg {
+    fn default() -> Self {
+        CheckCfg { safety: 8.0, floor: 4.0, eps: EPS_BF16 as f64, lr: 1e-3 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorCheck {
+    pub key: String,
+    pub id: CanonId,
+    pub rel_err: f64,
+    pub threshold: f64,
+    pub conflict_elems: usize,
+    pub pass: bool,
+}
+
+#[derive(Default)]
+pub struct CheckOutcome {
+    /// all comparisons, in model-computation order
+    pub checks: Vec<TensorCheck>,
+    pub missing_in_candidate: Vec<String>,
+    pub missing_in_reference: Vec<String>,
+    /// structural merge failures (omission, shape mismatch)
+    pub merge_errors: Vec<(String, String)>,
+    pub pass: bool,
+}
+
+impl CheckOutcome {
+    /// First failing check in computation order — the localization signal
+    /// (§3 step 5: with input rewriting this points at the buggy module).
+    pub fn first_divergence(&self) -> Option<&TensorCheck> {
+        self.checks.iter().find(|c| !c.pass)
+    }
+
+    /// Module name of the first divergence (or the first merge error).
+    pub fn localized_module(&self) -> Option<String> {
+        if let Some(c) = self.first_divergence() {
+            return Some(c.id.module.clone());
+        }
+        self.merge_errors
+            .first()
+            .and_then(|(k, _)| CanonId::parse(k).map(|id| id.module))
+    }
+
+    pub fn failures(&self) -> Vec<&TensorCheck> {
+        self.checks.iter().filter(|c| !c.pass).collect()
+    }
+}
+
+/// Computation-order sort key: forward activations by depth, loss, then
+/// backward (reverse depth), then main grads and params.
+pub fn comp_order(id: &CanonId) -> (u64, u32, u32, i64, i64, i64) {
+    let (a, b, c) = names::depth_rank(&id.module);
+    let depth = (a as i64, b as i64, c as i64);
+    match id.kind {
+        Kind::Act => (id.iter, 0, id.micro, depth.0, depth.1, depth.2),
+        Kind::Loss => (id.iter, 1, id.micro, 0, 0, 0),
+        Kind::ActGrad | Kind::ParamGrad => {
+            (id.iter, 2, id.micro, -depth.0, -depth.1, -depth.2)
+        }
+        Kind::MainGrad => (id.iter, 3, id.micro, depth.0, depth.1, depth.2),
+        Kind::Param => (id.iter, 4, id.micro, depth.0, depth.1, depth.2),
+    }
+}
+
+/// Differential testing of a candidate trace against the reference trace.
+pub fn check_traces(reference: &Trace, candidate: &Trace,
+                    estimate: &HashMap<String, f64>, cfg: &CheckCfg)
+                    -> Result<CheckOutcome> {
+    let mut out = CheckOutcome::default();
+    let floor = cfg.floor * cfg.eps;
+
+    let mut keys: Vec<(CanonId, String)> = reference
+        .entries
+        .keys()
+        .filter_map(|k| CanonId::parse(k).map(|id| (id, k.clone())))
+        .collect();
+    keys.sort_by_key(|(id, _)| comp_order(id));
+
+    for (id, key) in keys {
+        let Some(cand_entries) = candidate.get(&key) else {
+            out.missing_in_candidate.push(key);
+            continue;
+        };
+        let ref_entries = reference.get(&key).unwrap();
+        let ref_full = match merger::merge(ref_entries) {
+            Ok(m) => m.full,
+            Err(e) => {
+                out.merge_errors.push((key, format!("reference: {e:#}")));
+                continue;
+            }
+        };
+        let cand = match merger::merge(cand_entries) {
+            Ok(m) => m,
+            Err(e) => {
+                out.merge_errors.push((key, format!("{e:#}")));
+                continue;
+            }
+        };
+        if cand.full.dims != ref_full.dims {
+            out.merge_errors.push((key.clone(),
+                format!("global dims {:?} != reference {:?}",
+                        cand.full.dims, ref_full.dims)));
+            continue;
+        }
+        let rel_err = ref_full.rel_err(&cand.full);
+        let mut threshold = estimate
+            .get(&key)
+            .map(|&e| (cfg.safety * e).max(floor))
+            .unwrap_or(floor);
+        if id.kind == Kind::Param {
+            let norm = ref_full.fro_norm();
+            if norm > 0.0 {
+                let allowance =
+                    3.0 * cfg.lr * (ref_full.numel() as f64).sqrt() / norm;
+                threshold = threshold.max(allowance);
+            }
+        }
+        let pass = rel_err.is_finite() && rel_err <= threshold
+            && cand.conflict_elems == 0;
+        out.checks.push(TensorCheck {
+            key,
+            id,
+            rel_err,
+            threshold,
+            conflict_elems: cand.conflict_elems,
+            pass,
+        });
+    }
+
+    for key in candidate.entries.keys() {
+        if !reference.entries.contains_key(key) {
+            out.missing_in_reference.push(key.clone());
+        }
+    }
+
+    out.pass = out.checks.iter().all(|c| c.pass)
+        && out.merge_errors.is_empty()
+        && out.missing_in_candidate.is_empty();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, Tensor};
+    use crate::ttrace::collector::Entry;
+    use crate::ttrace::shard::ShardSpec;
+
+    fn trace_with(key: &str, vals: &[f32]) -> Trace {
+        let mut t = Trace::default();
+        t.entries.insert(key.to_string(), vec![Entry {
+            spec: ShardSpec::full(&[vals.len()]),
+            data: Tensor::new(&[vals.len()], vals.to_vec(), DType::Bf16),
+        }]);
+        t
+    }
+
+    #[test]
+    fn identical_traces_pass() {
+        let r = trace_with("i0/m0/act/layers.0.mlp", &[1.0, 2.0]);
+        let c = trace_with("i0/m0/act/layers.0.mlp", &[1.0, 2.0]);
+        let out = check_traces(&r, &c, &HashMap::new(), &CheckCfg::default()).unwrap();
+        assert!(out.pass);
+        assert_eq!(out.checks.len(), 1);
+        assert_eq!(out.checks[0].rel_err, 0.0);
+    }
+
+    #[test]
+    fn large_divergence_fails_and_localizes() {
+        let r = trace_with("i0/m0/act/layers.0.mlp", &[1.0, 2.0]);
+        let c = trace_with("i0/m0/act/layers.0.mlp", &[1.0, 4.0]);
+        let out = check_traces(&r, &c, &HashMap::new(), &CheckCfg::default()).unwrap();
+        assert!(!out.pass);
+        assert_eq!(out.localized_module().unwrap(), "layers.0.mlp");
+    }
+
+    #[test]
+    fn threshold_uses_estimate_with_floor() {
+        let cfg = CheckCfg { safety: 8.0, floor: 4.0, eps: 0.01, lr: 1e-3 };
+        let mut est = HashMap::new();
+        est.insert("k".to_string(), 0.1);
+        // 8 * 0.1 = 0.8 > floor 0.04
+        let thr = est.get("k").map(|&e| (cfg.safety * e).max(cfg.floor * cfg.eps)).unwrap();
+        assert!((thr - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_keys_fail_the_check() {
+        let r = trace_with("i0/m0/act/layers.0.mlp", &[1.0]);
+        let c = Trace::default();
+        let out = check_traces(&r, &c, &HashMap::new(), &CheckCfg::default()).unwrap();
+        assert!(!out.pass);
+        assert_eq!(out.missing_in_candidate.len(), 1);
+    }
+
+    #[test]
+    fn comp_order_is_fwd_then_bwd() {
+        let fwd0 = CanonId::new(0, 0, Kind::Act, "layers.0.mlp");
+        let fwd1 = CanonId::new(0, 0, Kind::Act, "layers.1.mlp");
+        let bwd1 = CanonId::new(0, 0, Kind::ActGrad, "layers.1.mlp");
+        let bwd0 = CanonId::new(0, 0, Kind::ActGrad, "layers.0.mlp");
+        let mut ids = vec![bwd0.clone(), fwd1.clone(), bwd1.clone(), fwd0.clone()];
+        ids.sort_by_key(comp_order);
+        assert_eq!(ids, vec![fwd0, fwd1, bwd1, bwd0]);
+    }
+}

@@ -1,0 +1,268 @@
+//! Trace collector (paper §4.3) — the `Hooks` implementation that records
+//! every traced tensor (with its shard mapping) into an in-memory trace,
+//! optionally rewriting module inputs from the consistent generator (the
+//! bug-localization mode of §4.3/§4.2).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::tensor::{DType, Tensor};
+use crate::util::json::Json;
+
+use super::gen;
+use super::hooks::{CanonId, Hooks, Kind};
+use super::shard::ShardSpec;
+
+/// One recorded shard: the local tensor plus its mapping into the logical
+/// full tensor.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub spec: ShardSpec,
+    pub data: Tensor,
+}
+
+/// A trace: canonical id -> all recorded shards (one per recording rank).
+#[derive(Default)]
+pub struct Trace {
+    pub entries: BTreeMap<String, Vec<Entry>>,
+}
+
+impl Trace {
+    pub fn get(&self, key: &str) -> Option<&[Entry]> {
+        self.entries.get(key).map(|v| v.as_slice())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Keys of a given kind, sorted by model depth (for reports/figures).
+    pub fn keys_of_kind(&self, kind: Kind) -> Vec<String> {
+        let mut keys: Vec<(CanonId, String)> = self
+            .entries
+            .keys()
+            .filter_map(|k| CanonId::parse(k).map(|id| (id, k.clone())))
+            .filter(|(id, _)| id.kind == kind)
+            .collect();
+        keys.sort_by(|(a, _), (b, _)| {
+            (a.iter, a.micro, super::canonical::names::depth_rank(&a.module))
+                .cmp(&(b.iter, b.micro,
+                       super::canonical::names::depth_rank(&b.module)))
+        });
+        keys.into_iter().map(|(_, k)| k).collect()
+    }
+
+    // ---- persistence (traces are dumped to disk when a run ends) --------
+
+    pub fn to_json(&self) -> Json {
+        let mut entries = Json::obj();
+        for (key, shards) in &self.entries {
+            let arr = shards
+                .iter()
+                .map(|e| {
+                    let mut o = Json::obj();
+                    o.set("spec", e.spec.to_json());
+                    o.set("dtype", Json::from_str_(e.data.dtype.name()));
+                    o.set("dims", Json::Arr(e.data.dims.iter()
+                        .map(|&d| Json::from_usize(d)).collect()));
+                    o.set("data", Json::Arr(e.data.data.iter()
+                        .map(|&v| Json::from_f64(v as f64)).collect()));
+                    o
+                })
+                .collect();
+            entries.set(key, Json::Arr(arr));
+        }
+        let mut root = Json::obj();
+        root.set("version", Json::from_usize(1));
+        root.set("entries", entries);
+        root
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let mut trace = Trace::default();
+        for (key, arr) in j.req("entries")?.as_obj()? {
+            let mut shards = Vec::new();
+            for e in arr.as_arr()? {
+                let spec = ShardSpec::from_json(e.req("spec")?)?;
+                let dtype = DType::from_name(e.req("dtype")?.as_str()?)?;
+                let dims: Vec<usize> = e.req("dims")?.as_arr()?
+                    .iter().map(|d| d.as_usize()).collect::<Result<_>>()?;
+                let data: Vec<f32> = e.req("data")?.as_arr()?
+                    .iter().map(|v| Ok(v.as_f64()? as f32)).collect::<Result<_>>()?;
+                shards.push(Entry { spec, data: Tensor::new(&dims, data, dtype) });
+            }
+            trace.entries.insert(key.clone(), shards);
+        }
+        Ok(trace)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_compact())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Trace> {
+        Trace::from_json(&Json::parse_file(path)?)
+    }
+}
+
+/// How module inputs are treated during collection.
+pub enum Mode {
+    /// plain tracing
+    Record,
+    /// §4.3 rewrite mode: overwrite every module input with a generated
+    /// tensor (identical across candidate/reference) so errors cannot
+    /// propagate — used to localize the buggy module
+    Rewrite,
+    /// §5.2 threshold estimation: perturb the inputs of the named modules
+    /// at relative magnitude `eps`
+    Perturb { modules: Vec<String>, eps: f32 },
+}
+
+/// Thread-safe collector shared by every simulated rank of a run.
+pub struct Collector {
+    trace: Mutex<Trace>,
+    mode: Mode,
+    /// kinds to record (e.g. skip params for activation-only studies)
+    kinds: Option<Vec<Kind>>,
+}
+
+impl Collector {
+    pub fn new() -> Collector {
+        Collector { trace: Mutex::new(Trace::default()), mode: Mode::Record,
+                    kinds: None }
+    }
+
+    pub fn with_mode(mode: Mode) -> Collector {
+        Collector { trace: Mutex::new(Trace::default()), mode, kinds: None }
+    }
+
+    pub fn only_kinds(mut self, kinds: &[Kind]) -> Collector {
+        self.kinds = Some(kinds.to_vec());
+        self
+    }
+
+    pub fn into_trace(self) -> Trace {
+        self.trace.into_inner().unwrap()
+    }
+}
+
+impl Default for Collector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hooks for Collector {
+    fn record(&self, id: &CanonId, t: &Tensor, spec: &ShardSpec) {
+        if let Some(kinds) = &self.kinds {
+            if !kinds.contains(&id.kind) {
+                return;
+            }
+        }
+        let mut trace = self.trace.lock().unwrap();
+        trace
+            .entries
+            .entry(id.key())
+            .or_default()
+            .push(Entry { spec: spec.clone(), data: t.clone() });
+    }
+
+    fn rewrite_input(&self, id: &CanonId, spec: &ShardSpec, t: &Tensor)
+                     -> Option<Tensor> {
+        match &self.mode {
+            Mode::Record => None,
+            Mode::Rewrite => {
+                // Draw the logical full tensor from the id-seeded stream and
+                // hand back this rank's shard — bit-identical across
+                // candidate and reference by construction.
+                Some(gen::local_normal(&id.key(), spec, 1.0, t.dtype))
+            }
+            Mode::Perturb { modules, eps } => {
+                if modules.iter().any(|m| id.module == *m) {
+                    Some(gen::perturb(&id.key(), t, *eps))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(kind: Kind, module: &str) -> CanonId {
+        CanonId::new(0, 0, kind, module)
+    }
+
+    #[test]
+    fn records_multiple_shards_per_id() {
+        let c = Collector::new();
+        let spec = ShardSpec::split(&[4], 0, 0, 2);
+        let t = Tensor::zeros(&[2], DType::F32);
+        c.record(&id(Kind::Act, "m"), &t, &spec);
+        c.record(&id(Kind::Act, "m"), &t, &ShardSpec::split(&[4], 0, 1, 2));
+        let trace = c.into_trace();
+        assert_eq!(trace.get("i0/m0/act/m").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn kind_filter() {
+        let c = Collector::new().only_kinds(&[Kind::Act]);
+        let t = Tensor::zeros(&[1], DType::F32);
+        c.record(&id(Kind::Act, "a"), &t, &ShardSpec::full(&[1]));
+        c.record(&id(Kind::Param, "p"), &t, &ShardSpec::full(&[1]));
+        let trace = c.into_trace();
+        assert_eq!(trace.len(), 1);
+    }
+
+    #[test]
+    fn rewrite_mode_is_consistent_across_shards() {
+        let c = Collector::with_mode(Mode::Rewrite);
+        let full_spec = ShardSpec::full(&[4, 8]);
+        let t_full = Tensor::zeros(&[4, 8], DType::Bf16);
+        let full = c.rewrite_input(&id(Kind::Act, "x"), &full_spec, &t_full).unwrap();
+        let half_spec = ShardSpec::split(&[4, 8], 1, 1, 2);
+        let t_half = Tensor::zeros(&[4, 4], DType::Bf16);
+        let half = c.rewrite_input(&id(Kind::Act, "x"), &half_spec, &t_half).unwrap();
+        assert_eq!(half, half_spec.extract_local(&full));
+    }
+
+    #[test]
+    fn perturb_mode_targets_named_modules() {
+        let c = Collector::with_mode(Mode::Perturb {
+            modules: vec!["layers.0.input".to_string()],
+            eps: 0.01,
+        });
+        let t = Tensor::full(&[8], 1.0, DType::Bf16);
+        let spec = ShardSpec::full(&[8]);
+        assert!(c.rewrite_input(&id(Kind::Act, "layers.0.input"), &spec, &t).is_some());
+        assert!(c.rewrite_input(&id(Kind::Act, "layers.1.input"), &spec, &t).is_none());
+    }
+
+    #[test]
+    fn trace_json_roundtrip() {
+        let c = Collector::new();
+        let t = Tensor::new(&[2], vec![1.5, -2.25], DType::Bf16);
+        c.record(&id(Kind::MainGrad, "w"), &t, &ShardSpec::full(&[2]));
+        let trace = c.into_trace();
+        let back = Trace::from_json(&trace.to_json()).unwrap();
+        let e = &back.get("i0/m0/main_grad/w").unwrap()[0];
+        assert_eq!(e.data, t);
+    }
+}

@@ -1,0 +1,134 @@
+//! Consistent distributed tensor generator (paper §4.2).
+//!
+//! Candidate (distributed) and reference (single-device) runs must see
+//! bit-identical logical tensors. Every generated tensor — parameter init,
+//! input batches, rewrite-mode module inputs, synthetic main gradients — is
+//! drawn from an RNG seeded by the FNV hash of a stable name (usually a
+//! canonical tensor id), generating the *logical full tensor* first; a
+//! rank's local tensor is then the `ShardSpec` slice of it. Generated
+//! values are rounded through bf16 when the device dtype is bf16, so both
+//! runs feed identical device bits.
+
+use crate::tensor::{DType, Tensor};
+use crate::util::bf16;
+use crate::util::rng::Rng;
+
+use super::shard::ShardSpec;
+
+/// Generate the logical full tensor for `name` with N(0, std) entries.
+pub fn full_normal(name: &str, global_dims: &[usize], std: f32, dtype: DType) -> Tensor {
+    let mut rng = Rng::from_name(name);
+    let n: usize = global_dims.iter().product();
+    let mut data = vec![0.0f32; n];
+    rng.fill_normal(&mut data, std);
+    if dtype == DType::Bf16 {
+        bf16::round_slice_bf16(&mut data);
+    }
+    Tensor::new(global_dims, data, dtype)
+}
+
+/// Generate the logical full tensor of uniform ints in [0, hi) (token ids).
+pub fn full_ints(name: &str, global_dims: &[usize], hi: u64) -> Tensor {
+    let mut rng = Rng::from_name(name);
+    let n: usize = global_dims.iter().product();
+    let mut data = vec![0i32; n];
+    rng.fill_ints(&mut data, hi);
+    Tensor::new(global_dims, data.into_iter().map(|x| x as f32).collect(), DType::I32)
+}
+
+/// Constant-filled full tensor (ln gamma init etc.).
+pub fn full_const(global_dims: &[usize], v: f32, dtype: DType) -> Tensor {
+    let mut t = Tensor::full(global_dims, v, dtype);
+    if dtype == DType::Bf16 {
+        bf16::round_slice_bf16(&mut t.data);
+    }
+    t
+}
+
+/// This rank's shard of a named N(0, std) logical tensor.
+pub fn local_normal(name: &str, spec: &ShardSpec, std: f32, dtype: DType) -> Tensor {
+    let full = full_normal(name, &spec.global_dims, std, dtype);
+    spec.extract_local(&full)
+}
+
+/// This rank's shard of a named token-id logical tensor.
+pub fn local_ints(name: &str, spec: &ShardSpec, hi: u64) -> Tensor {
+    let full = full_ints(name, &spec.global_dims, hi);
+    spec.extract_local(&full)
+}
+
+/// Add a multiplicative perturbation of relative magnitude `rel` (per the
+/// paper's threshold-estimation procedure: ‖ΔX‖/‖X‖ ≈ ε_mch). The
+/// perturbation itself is drawn from a named stream, so candidate and
+/// reference perturb identically. The result is re-rounded through bf16
+/// for bf16 tensors.
+pub fn perturb(name: &str, t: &Tensor, rel: f32) -> Tensor {
+    let mut rng = Rng::from_name(&format!("perturb/{name}"));
+    let mut out = t.clone();
+    for v in out.data.iter_mut() {
+        // relative perturbation keeps the per-element magnitude ~ rel·|x|,
+        // which makes ‖ΔX‖ ≈ rel·‖X‖ without needing the norm first.
+        let d = 1.0 + rel * rng.normal() as f32;
+        *v *= d;
+    }
+    if t.dtype == DType::Bf16 {
+        bf16::round_slice_bf16(&mut out.data);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bf16::EPS_BF16;
+
+    #[test]
+    fn shards_are_slices_of_full() {
+        let spec = ShardSpec::split(&[8, 4], 0, 1, 2);
+        let full = full_normal("w", &[8, 4], 1.0, DType::F32);
+        let local = local_normal("w", &spec, 1.0, DType::F32);
+        assert_eq!(local, spec.extract_local(&full));
+    }
+
+    #[test]
+    fn same_name_same_tensor() {
+        let a = full_normal("x", &[16], 1.0, DType::Bf16);
+        let b = full_normal("x", &[16], 1.0, DType::Bf16);
+        assert_eq!(a, b);
+        let c = full_normal("y", &[16], 1.0, DType::Bf16);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn bf16_generation_is_representable() {
+        let t = full_normal("z", &[64], 0.02, DType::Bf16);
+        for &v in &t.data {
+            assert_eq!(v, bf16::round_bf16(v), "{v} not bf16-representable");
+        }
+    }
+
+    #[test]
+    fn ints_in_range() {
+        let t = full_ints("tok", &[100], 50);
+        for &v in &t.data {
+            assert!((0.0..50.0).contains(&v));
+            assert_eq!(v.fract(), 0.0);
+        }
+    }
+
+    #[test]
+    fn perturbation_magnitude() {
+        let t = full_normal("p", &[4096], 1.0, DType::F32);
+        let p = perturb("p", &t, EPS_BF16);
+        let rel = t.rel_err(&p);
+        // ‖ΔX‖/‖X‖ should be ~ ε (within a small factor)
+        assert!(rel > (EPS_BF16 as f64) * 0.5 && rel < (EPS_BF16 as f64) * 2.0,
+                "rel {rel} vs eps {EPS_BF16}");
+    }
+
+    #[test]
+    fn perturbation_is_deterministic() {
+        let t = full_normal("q", &[32], 1.0, DType::Bf16);
+        assert_eq!(perturb("q", &t, EPS_BF16), perturb("q", &t, EPS_BF16));
+    }
+}

@@ -1,0 +1,135 @@
+//! The hook surface between the training framework (`model::engine`) and
+//! TTrace. This is the paper's "<10 lines of code" integration: the engine
+//! calls `record` at every traced tensor site and `rewrite_input` at every
+//! module input (§4.3 — trace collection and tensor rewrites).
+
+use crate::tensor::Tensor;
+
+use super::shard::ShardSpec;
+
+/// What kind of tensor a trace entry holds (paper §4.3's taxonomy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Kind {
+    /// module output activation (forward)
+    Act,
+    /// gradient w.r.t. a module's *input* (backward)
+    ActGrad,
+    /// per-microbatch bf16 parameter gradient
+    ParamGrad,
+    /// accumulated f32 main gradient (pre-optimizer)
+    MainGrad,
+    /// parameter value after the optimizer step
+    Param,
+    /// scalar training loss
+    Loss,
+}
+
+impl Kind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kind::Act => "act",
+            Kind::ActGrad => "act_grad",
+            Kind::ParamGrad => "param_grad",
+            Kind::MainGrad => "main_grad",
+            Kind::Param => "param",
+            Kind::Loss => "loss",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Kind> {
+        Some(match s {
+            "act" => Kind::Act,
+            "act_grad" => Kind::ActGrad,
+            "param_grad" => Kind::ParamGrad,
+            "main_grad" => Kind::MainGrad,
+            "param" => Kind::Param,
+            "loss" => Kind::Loss,
+            _ => return None,
+        })
+    }
+}
+
+/// Canonical tensor identifier (paper §4.1): unique within a trace; equal
+/// ids across candidate/reference traces are comparable. The module name is
+/// already canonical (PP/VPP layer indices mapped to reference indices by
+/// `ttrace::canonical`).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CanonId {
+    pub iter: u64,
+    pub micro: u32,
+    pub kind: Kind,
+    /// canonical module name, or parameter name for param-kind entries
+    pub module: String,
+}
+
+impl CanonId {
+    pub fn new(iter: u64, micro: u32, kind: Kind, module: impl Into<String>) -> CanonId {
+        CanonId { iter, micro, kind, module: module.into() }
+    }
+
+    /// Stable string form — hashed to seed the consistent generator and
+    /// used as the trace map key.
+    pub fn key(&self) -> String {
+        format!("i{}/m{}/{}/{}", self.iter, self.micro, self.kind.name(), self.module)
+    }
+
+    pub fn parse(s: &str) -> Option<CanonId> {
+        let mut it = s.splitn(4, '/');
+        let iter = it.next()?.strip_prefix('i')?.parse().ok()?;
+        let micro = it.next()?.strip_prefix('m')?.parse().ok()?;
+        let kind = Kind::from_name(it.next()?)?;
+        let module = it.next()?.to_string();
+        Some(CanonId { iter, micro, kind, module })
+    }
+}
+
+/// Framework-side hook points. Implementations: `NoopHooks` (plain
+/// training), `ttrace::collector::Collector` (tracing), and the collector's
+/// rewrite mode (bug localization).
+pub trait Hooks: Sync {
+    /// Record a tensor at a traced site.
+    fn record(&self, id: &CanonId, t: &Tensor, spec: &ShardSpec);
+
+    /// Offer to overwrite a module *input* (forward activation or backward
+    /// gradient). Return `Some(local_replacement)` to rewrite; the
+    /// replacement must be the `spec`-shard of a logical full tensor that
+    /// is identical across candidate and reference (§4.2/§4.3).
+    fn rewrite_input(&self, _id: &CanonId, _spec: &ShardSpec, _t: &Tensor) -> Option<Tensor> {
+        None
+    }
+}
+
+/// No instrumentation (plain training runs, perf baselines).
+pub struct NoopHooks;
+
+impl Hooks for NoopHooks {
+    fn record(&self, _id: &CanonId, _t: &Tensor, _spec: &ShardSpec) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_key_roundtrip() {
+        let id = CanonId::new(3, 1, Kind::ActGrad, "layers.7.mlp");
+        let key = id.key();
+        assert_eq!(key, "i3/m1/act_grad/layers.7.mlp");
+        assert_eq!(CanonId::parse(&key).unwrap(), id);
+    }
+
+    #[test]
+    fn module_names_with_slashes_survive() {
+        // module is the final, greedy segment
+        let id = CanonId::new(0, 0, Kind::Param, "weird/name.with/dots");
+        assert_eq!(CanonId::parse(&id.key()).unwrap(), id);
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [Kind::Act, Kind::ActGrad, Kind::ParamGrad, Kind::MainGrad,
+                  Kind::Param, Kind::Loss] {
+            assert_eq!(Kind::from_name(k.name()), Some(k));
+        }
+    }
+}

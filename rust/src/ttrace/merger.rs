@@ -1,0 +1,229 @@
+//! Tensor merger (paper §4.4): reassemble a logical full tensor from the
+//! shards recorded by the candidate ranks, verifying that shards neither
+//! overlap inconsistently nor leave gaps.
+//!
+//! Replicated tensors are recorded by *every* rank that holds them; the
+//! merger requires all copies to agree bitwise (deterministic collectives
+//! make correct runs bit-identical). A disagreement is a **conflict** —
+//! the merger-level bug signal the paper describes (e.g. a missing
+//! all-reduce leaving per-rank partial sums, or ZeRO replicas diverging).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+use super::collector::Entry;
+
+/// Outcome of merging one canonical id's shards.
+#[derive(Debug)]
+pub struct Merged {
+    pub full: Tensor,
+    /// number of elements written by >1 shard with disagreeing values
+    pub conflict_elems: usize,
+    /// which shard indices disagreed with an earlier shard
+    pub conflict_shards: Vec<usize>,
+}
+
+/// Merge all recorded shards of one canonical id into the logical full
+/// tensor. Errors on structural problems (mismatched global dims, local
+/// shape mismatch, omission); value conflicts are reported, not fatal —
+/// the checker turns them into findings.
+pub fn merge(entries: &[Entry]) -> Result<Merged> {
+    if entries.is_empty() {
+        bail!("no shards to merge");
+    }
+    let global = &entries[0].spec.global_dims;
+    for e in entries {
+        if &e.spec.global_dims != global {
+            bail!("global dims disagree across shards: {:?} vs {:?}",
+                  e.spec.global_dims, global);
+        }
+    }
+    // Partial-sum entries (sequence/context-parallel gradient
+    // contributions) are accumulated; a mix of partial and replicated
+    // entries under one id is a structural error.
+    let partial = entries[0].spec.partial;
+    if entries.iter().any(|e| e.spec.partial != partial) {
+        bail!("mixed partial/replicated shards under one id");
+    }
+    let n: usize = global.iter().product();
+    let mut full = vec![0.0f32; n];
+    let mut covered = vec![false; n];
+    let mut conflict_elems = 0usize;
+    let mut conflict_shards = Vec::new();
+
+    // global row-major strides
+    let mut gstrides = vec![1usize; global.len()];
+    for i in (0..global.len().saturating_sub(1)).rev() {
+        gstrides[i] = gstrides[i + 1] * global[i + 1];
+    }
+
+    for (si, e) in entries.iter().enumerate() {
+        let local_dims = e.spec.local_dims();
+        if e.data.dims != local_dims {
+            bail!("shard {si}: tensor dims {:?} != spec local dims {:?}",
+                  e.data.dims, local_dims);
+        }
+        // per-dim local->global index LUTs
+        let luts: Vec<Vec<usize>> = (0..global.len())
+            .map(|d| {
+                match e.spec.maps.iter().find(|m| m.dim == d) {
+                    None => (0..global[d]).collect(),
+                    Some(m) => m
+                        .pieces
+                        .iter()
+                        .flat_map(|p| p.global_start..p.global_start + p.len)
+                        .collect(),
+                }
+            })
+            .collect();
+        let rank = local_dims.len();
+        let mut idx = vec![0usize; rank.max(1)];
+        let mut had_conflict = false;
+        for &v in &e.data.data {
+            let mut g = 0usize;
+            for d in 0..rank {
+                g += luts[d][idx[d]] * gstrides[d];
+            }
+            if partial {
+                full[g] += v;
+                covered[g] = true;
+            } else if covered[g] {
+                if full[g].to_bits() != v.to_bits() {
+                    conflict_elems += 1;
+                    had_conflict = true;
+                }
+            } else {
+                full[g] = v;
+                covered[g] = true;
+            }
+            // increment local multi-index
+            for d in (0..rank).rev() {
+                idx[d] += 1;
+                if idx[d] < local_dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        if had_conflict {
+            conflict_shards.push(si);
+        }
+    }
+
+    if let Some(gap) = covered.iter().position(|&c| !c) {
+        bail!("omission: global element {gap} of {:?} not covered by any shard",
+              global);
+    }
+
+    Ok(Merged {
+        full: Tensor::new(global, full, entries[0].data.dtype),
+        conflict_elems,
+        conflict_shards,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+    use crate::ttrace::shard::ShardSpec;
+    use crate::util::prop::{check, Gen};
+
+    fn entry(spec: ShardSpec, data: Tensor) -> Entry {
+        Entry { spec, data }
+    }
+
+    #[test]
+    fn merges_tp_split() {
+        let spec0 = ShardSpec::split(&[4], 0, 0, 2);
+        let spec1 = ShardSpec::split(&[4], 0, 1, 2);
+        let m = merge(&[
+            entry(spec0, Tensor::new(&[2], vec![1., 2.], DType::F32)),
+            entry(spec1, Tensor::new(&[2], vec![3., 4.], DType::F32)),
+        ])
+        .unwrap();
+        assert_eq!(m.full.data, vec![1., 2., 3., 4.]);
+        assert_eq!(m.conflict_elems, 0);
+    }
+
+    #[test]
+    fn scalar_entries_merge() {
+        let m = merge(&[
+            entry(ShardSpec::full(&[]), Tensor::scalar(3.5, DType::F32)),
+            entry(ShardSpec::full(&[]), Tensor::scalar(3.5, DType::F32)),
+        ])
+        .unwrap();
+        assert_eq!(m.full.data, vec![3.5]);
+        assert_eq!(m.conflict_elems, 0);
+    }
+
+    #[test]
+    fn replicated_copies_must_agree() {
+        let spec = ShardSpec::full(&[2]);
+        let ok = merge(&[
+            entry(spec.clone(), Tensor::new(&[2], vec![1., 2.], DType::F32)),
+            entry(spec.clone(), Tensor::new(&[2], vec![1., 2.], DType::F32)),
+        ])
+        .unwrap();
+        assert_eq!(ok.conflict_elems, 0);
+        let bad = merge(&[
+            entry(spec.clone(), Tensor::new(&[2], vec![1., 2.], DType::F32)),
+            entry(spec, Tensor::new(&[2], vec![1., 9.], DType::F32)),
+        ])
+        .unwrap();
+        assert_eq!(bad.conflict_elems, 1);
+        assert_eq!(bad.conflict_shards, vec![1]);
+    }
+
+    #[test]
+    fn detects_omission() {
+        let spec0 = ShardSpec::split(&[4], 0, 0, 2);
+        let err = merge(&[entry(spec0, Tensor::new(&[2], vec![1., 2.], DType::F32))]);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("omission"));
+    }
+
+    #[test]
+    fn cp_stripes_reassemble() {
+        // S=8, cp=2: rank0 owns rows {0,1,6,7}, rank1 {2,3,4,5}
+        let full = Tensor::new(&[8], (0..8).map(|x| x as f32).collect(), DType::F32);
+        let e: Vec<Entry> = (0..2)
+            .map(|r| {
+                let spec = ShardSpec::full(&[8]).and_cp_stripes(0, r, 2);
+                let local = spec.extract_local(&full);
+                entry(spec, local)
+            })
+            .collect();
+        let m = merge(&e).unwrap();
+        assert_eq!(m.full, full);
+    }
+
+    #[test]
+    fn prop_extract_then_merge_is_identity() {
+        check("extract/merge identity", |rng| {
+            let n0 = Gen::pow2(rng, 2, 8);
+            let n1 = Gen::pow2(rng, 2, 8);
+            let tp = Gen::pow2(rng, 1, 2);
+            let cp = Gen::pow2(rng, 1, 2);
+            let s = 2 * cp * n0;
+            let full = Tensor::new(&[s, n1],
+                                   Gen::vec_normal(rng, s * n1, 1.0), DType::F32);
+            let mut entries = Vec::new();
+            for c in 0..cp {
+                for t in 0..tp {
+                    let spec = ShardSpec::full(&[s, n1])
+                        .and_cp_stripes(0, c, cp)
+                        .and_split(1, t, tp);
+                    entries.push(entry(spec.clone(), spec.extract_local(&full)));
+                }
+            }
+            let m = merge(&entries).map_err(|e| e.to_string())?;
+            if m.full == full && m.conflict_elems == 0 {
+                Ok(())
+            } else {
+                Err(format!("tp={tp} cp={cp}"))
+            }
+        });
+    }
+}

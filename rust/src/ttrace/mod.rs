@@ -1,0 +1,21 @@
+//! TTrace — the paper's contribution: trace collection, canonical tensor
+//! mapping, consistent tensor generation, shard merging, perturbation-based
+//! threshold estimation, differential checking and bug localization.
+
+pub mod annot;
+pub mod canonical;
+pub mod checker;
+pub mod collector;
+pub mod gen;
+pub mod hooks;
+pub mod merger;
+pub mod report;
+pub mod runner;
+pub mod shard;
+pub mod threshold;
+
+pub use checker::{check_traces, CheckCfg, CheckOutcome};
+pub use runner::{localized_module, reference_of, ttrace_check, TtraceRun};
+pub use collector::{Collector, Trace};
+pub use hooks::{CanonId, Hooks, Kind, NoopHooks};
+pub use shard::ShardSpec;

@@ -1,0 +1,137 @@
+//! Report generation (paper §3 step 4): a human-readable differential
+//! report of candidate vs reference, errors normalized by machine epsilon,
+//! unexpected differences flagged, plus the localization verdict.
+
+use crate::util::json::Json;
+
+use super::checker::{CheckCfg, CheckOutcome};
+
+/// Render the report as text (the paper's step-4 artifact).
+pub fn render(outcome: &CheckOutcome, cfg: &CheckCfg, max_rows: usize) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "TTrace differential report — {} tensors compared\n\
+         thresholds: max({} x estimated FP error, {} x eps), eps = {:.3e}\n\n",
+        outcome.checks.len(), cfg.safety, cfg.floor, cfg.eps));
+    s.push_str(&format!("{:<52} {:>12} {:>12} {:>9} {}\n",
+                        "tensor (iter/micro/kind/module)", "rel_err/eps",
+                        "thresh/eps", "conflicts", "status"));
+    let mut shown = 0;
+    let mut hidden_pass = 0;
+    for c in &outcome.checks {
+        let fail = !c.pass;
+        if shown >= max_rows && !fail {
+            hidden_pass += 1;
+            continue;
+        }
+        shown += 1;
+        s.push_str(&format!(
+            "{:<52} {:>12.3} {:>12.3} {:>9} {}\n",
+            truncate(&c.key, 52),
+            c.rel_err / cfg.eps,
+            c.threshold / cfg.eps,
+            c.conflict_elems,
+            if fail { "FAIL" } else { "ok" }));
+    }
+    if hidden_pass > 0 {
+        s.push_str(&format!("... {hidden_pass} passing tensors elided ...\n"));
+    }
+    for (k, e) in &outcome.merge_errors {
+        s.push_str(&format!("MERGE ERROR {k}: {e}\n"));
+    }
+    if !outcome.missing_in_candidate.is_empty() {
+        s.push_str(&format!("missing in candidate: {} tensors (first: {})\n",
+                            outcome.missing_in_candidate.len(),
+                            outcome.missing_in_candidate[0]));
+    }
+    s.push('\n');
+    if outcome.pass {
+        s.push_str("VERDICT: PASS — candidate matches the reference within \
+                    expected FP round-off.\n");
+    } else {
+        let failures = outcome.failures();
+        s.push_str(&format!("VERDICT: FAIL — {} tensors diverge beyond \
+                             threshold.\n", failures.len()));
+        if let Some(m) = outcome.localized_module() {
+            s.push_str(&format!("LOCALIZED: first divergence at module '{m}'\n"));
+        }
+    }
+    s
+}
+
+/// Machine-readable report (dumped next to traces).
+pub fn to_json(outcome: &CheckOutcome, cfg: &CheckCfg) -> Json {
+    let mut root = Json::obj();
+    root.set("pass", Json::Bool(outcome.pass));
+    root.set("eps", Json::from_f64(cfg.eps));
+    if let Some(m) = outcome.localized_module() {
+        root.set("localized_module", Json::from_str_(&m));
+    }
+    let checks = outcome
+        .checks
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.set("key", Json::from_str_(&c.key));
+            o.set("rel_err", Json::from_f64(c.rel_err));
+            o.set("threshold", Json::from_f64(c.threshold));
+            o.set("conflicts", Json::from_usize(c.conflict_elems));
+            o.set("pass", Json::Bool(c.pass));
+            o
+        })
+        .collect();
+    root.set("checks", Json::Arr(checks));
+    root.set("merge_errors", Json::Arr(
+        outcome.merge_errors.iter()
+            .map(|(k, e)| Json::from_str_(&format!("{k}: {e}")))
+            .collect()));
+    root
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("...{}", &s[s.len() - (n - 3)..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttrace::checker::TensorCheck;
+    use crate::ttrace::hooks::{CanonId, Kind};
+
+    fn outcome(pass: bool) -> CheckOutcome {
+        let mut o = CheckOutcome::default();
+        o.checks.push(TensorCheck {
+            key: "i0/m0/act/layers.0.mlp".into(),
+            id: CanonId::new(0, 0, Kind::Act, "layers.0.mlp"),
+            rel_err: if pass { 0.001 } else { 0.9 },
+            threshold: 0.03,
+            conflict_elems: 0,
+            pass,
+        });
+        o.pass = pass;
+        o
+    }
+
+    #[test]
+    fn render_pass_and_fail() {
+        let cfg = CheckCfg::default();
+        let ok = render(&outcome(true), &cfg, 100);
+        assert!(ok.contains("VERDICT: PASS"));
+        let bad = render(&outcome(false), &cfg, 100);
+        assert!(bad.contains("VERDICT: FAIL"));
+        assert!(bad.contains("LOCALIZED: first divergence at module 'layers.0.mlp'"));
+    }
+
+    #[test]
+    fn json_report_parses() {
+        let cfg = CheckCfg::default();
+        let j = to_json(&outcome(false), &cfg);
+        let txt = j.to_string_pretty();
+        let back = crate::util::json::Json::parse(&txt).unwrap();
+        assert!(!back.req("pass").unwrap().as_bool().unwrap());
+    }
+}

@@ -1,0 +1,99 @@
+//! The end-to-end TTrace workflow (paper §3, steps 1-5): estimate
+//! thresholds on the reference, run candidate and reference for one
+//! iteration with trace collection, merge + differentially test, and (on
+//! failure) optionally re-run in input-rewrite mode to localize the bug.
+
+use anyhow::Result;
+
+use crate::bugs::BugSet;
+use crate::data::DataSource;
+use crate::model::{run_training, Engine, ModelCfg, ParCfg};
+use crate::runtime::Executor;
+
+use super::checker::{check_traces, CheckCfg, CheckOutcome};
+use super::collector::{Collector, Mode, Trace};
+use super::threshold;
+
+/// Reference configuration for a candidate: single device, same numerics
+/// class (fp8/moe), microbatch count covering the global batch.
+pub fn reference_of(p: &ParCfg) -> ParCfg {
+    let mut r = ParCfg::single();
+    r.n_micro = p.n_micro * p.topo.dp;
+    r.fp8 = p.fp8;
+    r.moe = p.moe;
+    r
+}
+
+pub struct TtraceRun {
+    pub outcome: CheckOutcome,
+    pub reference: Trace,
+    pub candidate: Trace,
+    /// outcome of the rewrite-mode (localization) pass, if performed
+    pub rewrite_outcome: Option<CheckOutcome>,
+}
+
+/// Run the complete TTrace check for `candidate_p` against its reference.
+/// `bugs` arms a fault in the candidate only (the reference is trusted).
+pub fn ttrace_check(m: &ModelCfg, candidate_p: &ParCfg, layers: usize,
+                    exec: &Executor, data: &dyn DataSource, bugs: BugSet,
+                    cfg: &CheckCfg, localize: bool) -> Result<TtraceRun> {
+    let ref_p = reference_of(candidate_p);
+
+    // Step 1: estimate expected FP round-off per tensor on the reference.
+    let est = threshold::estimate(m, &ref_p, layers, exec, data,
+                                  cfg.eps as f32, 1)?;
+
+    // Step 3: run reference and candidate for one iteration, collecting.
+    let reference = run_trace(m, &ref_p, layers, exec, data,
+                              BugSet::none(), Mode::Record)?;
+    let candidate = run_trace(m, candidate_p, layers, exec, data, bugs,
+                              Mode::Record)?;
+
+    // Step 4: differential testing.
+    let outcome = check_traces(&reference, &candidate, &est.rel, cfg)?;
+
+    // Step 5: input-rewrite localization on failure.
+    let rewrite_outcome = if localize && !outcome.pass {
+        let ref_rw = run_trace(m, &ref_p, layers, exec, data,
+                               BugSet::none(), Mode::Rewrite)?;
+        let cand_rw = run_trace(m, candidate_p, layers, exec, data, bugs,
+                                Mode::Rewrite)?;
+        Some(check_traces(&ref_rw, &cand_rw, &est.rel, cfg)?)
+    } else {
+        None
+    };
+
+    Ok(TtraceRun { outcome, reference, candidate, rewrite_outcome })
+}
+
+/// The module TTrace blames: the *earliest* (in model-computation order)
+/// first divergence across the plain and rewrite-mode outcomes. Rewrite
+/// mode stops error propagation (its finding is definitely the buggy
+/// module); but some bugs (e.g. a wrong pipeline-stage division) are
+/// masked by rewritten inputs and only the plain run shows the earliest
+/// affected module.
+pub fn localized_module(run: &TtraceRun) -> Option<String> {
+    use super::checker::comp_order;
+    let plain = run.outcome.first_divergence();
+    let rw = run.rewrite_outcome.as_ref().and_then(|o| o.first_divergence());
+    match (plain, rw) {
+        (Some(p), Some(r)) => {
+            Some(if comp_order(&r.id) <= comp_order(&p.id) {
+                r.id.module.clone()
+            } else {
+                p.id.module.clone()
+            })
+        }
+        (Some(p), None) => Some(p.id.module.clone()),
+        (None, Some(r)) => Some(r.id.module.clone()),
+        (None, None) => run.outcome.localized_module(),
+    }
+}
+
+fn run_trace(m: &ModelCfg, p: &ParCfg, layers: usize, exec: &Executor,
+             data: &dyn DataSource, bugs: BugSet, mode: Mode) -> Result<Trace> {
+    let engine = Engine::new(*m, p.clone(), layers, exec, bugs)?;
+    let collector = Collector::with_mode(mode);
+    run_training(&engine, data, &collector, 1);
+    Ok(collector.into_trace())
+}

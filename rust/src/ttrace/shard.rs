@@ -1,0 +1,271 @@
+//! Shard mapping (paper §4.1, Figure 6): how a rank-local tensor maps into
+//! the *logical full tensor* of the single-device reference.
+//!
+//! A local tensor may cover, along each dimension, one contiguous slice
+//! (tensor parallelism), several non-contiguous slices (context-parallel
+//! striped attention), or the whole extent. Dimensions without a `DimMap`
+//! are full. The merger (`ttrace::merger`) uses these maps to reassemble
+//! logical full tensors and to detect overlap/omission.
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Piece {
+    pub global_start: usize,
+    pub len: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DimMap {
+    pub dim: usize,
+    /// Local-order pieces: local offset k covers global
+    /// `[pieces[i].global_start .. +len)` in sequence.
+    pub pieces: Vec<Piece>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardSpec {
+    pub global_dims: Vec<usize>,
+    pub maps: Vec<DimMap>,
+    /// The recorded values are a *partial sum* over a data/sequence split
+    /// (context/sequence parallelism): the merger must SUM overlapping
+    /// entries instead of requiring bitwise equality. Mirrors the paper's
+    /// distinction between replicated tensors (must agree) and partial
+    /// contributions (must be reduced).
+    pub partial: bool,
+}
+
+impl ShardSpec {
+    /// The whole tensor lives on this rank (replicated or single-device).
+    pub fn full(global_dims: &[usize]) -> ShardSpec {
+        ShardSpec { global_dims: global_dims.to_vec(), maps: Vec::new(),
+                    partial: false }
+    }
+
+    /// Mark the recorded values as partial sums (see `partial`).
+    pub fn as_partial(mut self) -> ShardSpec {
+        self.partial = true;
+        self
+    }
+
+    /// Contiguous 1/n split along `dim`, this rank holding chunk `idx`.
+    pub fn split(global_dims: &[usize], dim: usize, idx: usize, n: usize) -> ShardSpec {
+        ShardSpec::full(global_dims).and_split(dim, idx, n)
+    }
+
+    /// Compose an additional contiguous split along `dim`. A 1-way split
+    /// is the identity (the dim stays unmapped/full).
+    pub fn and_split(mut self, dim: usize, idx: usize, n: usize) -> ShardSpec {
+        if n == 1 {
+            return self;
+        }
+        assert!(dim < self.global_dims.len());
+        assert_eq!(self.global_dims[dim] % n, 0,
+                   "dim {dim} ({}) not divisible by {n}", self.global_dims[dim]);
+        assert!(self.maps.iter().all(|m| m.dim != dim), "dim {dim} already mapped");
+        let len = self.global_dims[dim] / n;
+        self.maps.push(DimMap {
+            dim,
+            pieces: vec![Piece { global_start: idx * len, len }],
+        });
+        self.maps.sort_by_key(|m| m.dim);
+        self
+    }
+
+    /// Compose an arbitrary piece list along `dim` (e.g. the fused-QKV
+    /// column shard, which owns one head-slice from each of the Q, K and V
+    /// thirds of the weight).
+    pub fn and_pieces(mut self, dim: usize, pieces: Vec<Piece>) -> ShardSpec {
+        assert!(dim < self.global_dims.len());
+        assert!(self.maps.iter().all(|m| m.dim != dim), "dim {dim} already mapped");
+        let total: usize = pieces.iter().map(|p| p.len).sum();
+        assert!(total <= self.global_dims[dim]);
+        for p in &pieces {
+            assert!(p.global_start + p.len <= self.global_dims[dim]);
+        }
+        self.maps.push(DimMap { dim, pieces });
+        self.maps.sort_by_key(|m| m.dim);
+        self
+    }
+
+    /// The fused-QKV column shard: the global dim is `[Q | K | V]` (each
+    /// `third` wide); tp rank `idx` of `n` owns the matching 1/n slice of
+    /// each third.
+    pub fn and_qkv_split(self, dim: usize, third: usize, idx: usize, n: usize) -> ShardSpec {
+        if n == 1 {
+            return self;
+        }
+        let len = third / n;
+        let pieces = (0..3)
+            .map(|t| Piece { global_start: t * third + idx * len, len })
+            .collect();
+        self.and_pieces(dim, pieces)
+    }
+
+    /// Compose the context-parallel *striped* split (load-balanced causal
+    /// attention): the sequence is cut into `2*cp` chunks and rank `r` owns
+    /// chunks `r` and `2*cp-1-r`, in that local order.
+    pub fn and_cp_stripes(mut self, dim: usize, cp_rank: usize, cp: usize) -> ShardSpec {
+        assert!(dim < self.global_dims.len());
+        assert!(self.maps.iter().all(|m| m.dim != dim), "dim {dim} already mapped");
+        if cp == 1 {
+            return self;
+        }
+        let s = self.global_dims[dim];
+        assert_eq!(s % (2 * cp), 0, "dim {dim} ({s}) not divisible by 2*cp={}", 2 * cp);
+        let chunk = s / (2 * cp);
+        self.maps.push(DimMap {
+            dim,
+            pieces: vec![
+                Piece { global_start: cp_rank * chunk, len: chunk },
+                Piece { global_start: (2 * cp - 1 - cp_rank) * chunk, len: chunk },
+            ],
+        });
+        self.maps.sort_by_key(|m| m.dim);
+        self
+    }
+
+    /// Local shape implied by the mapping.
+    pub fn local_dims(&self) -> Vec<usize> {
+        let mut dims = self.global_dims.clone();
+        for m in &self.maps {
+            dims[m.dim] = m.pieces.iter().map(|p| p.len).sum();
+        }
+        dims
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.maps.is_empty()
+    }
+
+    /// Extract this rank's local tensor out of a logical full tensor —
+    /// used by the consistent generator and parameter initialization so
+    /// candidate shards are literal slices of the reference tensor.
+    pub fn extract_local(&self, full: &Tensor) -> Tensor {
+        assert_eq!(full.dims, self.global_dims,
+                   "extract_local: full {:?} vs spec {:?}", full.dims, self.global_dims);
+        let mut cur = full.clone();
+        // maps are sorted by dim; narrowing preserves earlier dims' indices
+        for m in &self.maps {
+            let parts: Vec<Tensor> = m
+                .pieces
+                .iter()
+                .map(|p| cur.narrow(m.dim, p.global_start, p.len))
+                .collect();
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            cur = Tensor::concat(&refs, m.dim);
+        }
+        cur
+    }
+
+    // ---- (de)serialization for trace dumps -------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("global_dims",
+              Json::Arr(self.global_dims.iter().map(|&d| Json::from_usize(d)).collect()));
+        if self.partial {
+            o.set("partial", Json::Bool(true));
+        }
+        o.set("maps",
+              Json::Arr(self.maps.iter().map(|m| {
+                  let mut mo = Json::obj();
+                  mo.set("dim", Json::from_usize(m.dim));
+                  mo.set("pieces", Json::Arr(m.pieces.iter().map(|p| {
+                      Json::Arr(vec![Json::from_usize(p.global_start),
+                                     Json::from_usize(p.len)])
+                  }).collect()));
+                  mo
+              }).collect()));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ShardSpec> {
+        let global_dims = j.req("global_dims")?.as_arr()?
+            .iter().map(|d| d.as_usize()).collect::<anyhow::Result<Vec<_>>>()?;
+        let mut maps = Vec::new();
+        for m in j.req("maps")?.as_arr()? {
+            let dim = m.req("dim")?.as_usize()?;
+            let mut pieces = Vec::new();
+            for p in m.req("pieces")?.as_arr()? {
+                let arr = p.as_arr()?;
+                pieces.push(Piece {
+                    global_start: arr[0].as_usize()?,
+                    len: arr[1].as_usize()?,
+                });
+            }
+            maps.push(DimMap { dim, pieces });
+        }
+        let partial = j.get("partial").map(|b| b.as_bool()).transpose()?
+            .unwrap_or(false);
+        Ok(ShardSpec { global_dims, maps, partial })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn split_extract() {
+        let full = Tensor::new(&[4, 2], (0..8).map(|x| x as f32).collect(), DType::F32);
+        let spec = ShardSpec::split(&[4, 2], 0, 1, 2);
+        assert_eq!(spec.local_dims(), vec![2, 2]);
+        assert_eq!(spec.extract_local(&full).data, vec![4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn cp_stripes_layout() {
+        // S=8, cp=2: rank0 owns chunks 0 and 3 -> rows 0,1,6,7
+        let full = Tensor::new(&[8], (0..8).map(|x| x as f32).collect(), DType::F32);
+        let s0 = ShardSpec::full(&[8]).and_cp_stripes(0, 0, 2);
+        assert_eq!(s0.extract_local(&full).data, vec![0., 1., 6., 7.]);
+        let s1 = ShardSpec::full(&[8]).and_cp_stripes(0, 1, 2);
+        assert_eq!(s1.extract_local(&full).data, vec![2., 3., 4., 5.]);
+    }
+
+    #[test]
+    fn compose_two_dims() {
+        let full = Tensor::new(&[2, 4], (0..8).map(|x| x as f32).collect(), DType::F32);
+        let spec = ShardSpec::split(&[2, 4], 1, 0, 2).and_split(0, 1, 2);
+        assert_eq!(spec.local_dims(), vec![1, 2]);
+        assert_eq!(spec.extract_local(&full).data, vec![4., 5.]);
+    }
+
+    #[test]
+    fn stripes_cover_dim_exactly() {
+        check("cp stripes cover", |rng| {
+            let cp = Gen::pow2(rng, 1, 4);
+            let s = 2 * cp * Gen::pow2(rng, 1, 8);
+            let mut covered = vec![0u8; s];
+            for r in 0..cp {
+                let spec = ShardSpec::full(&[s]).and_cp_stripes(0, r, cp);
+                if cp == 1 {
+                    covered.iter_mut().for_each(|c| *c += 1);
+                    continue;
+                }
+                for p in &spec.maps[0].pieces {
+                    for i in p.global_start..p.global_start + p.len {
+                        covered[i] += 1;
+                    }
+                }
+            }
+            if covered.iter().all(|&c| c == 1) {
+                Ok(())
+            } else {
+                Err(format!("cp={cp} s={s} coverage {covered:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = ShardSpec::split(&[4, 8], 1, 1, 2).and_cp_stripes(0, 0, 2);
+        let j = spec.to_json();
+        let back = ShardSpec::from_json(&j).unwrap();
+        assert_eq!(spec, back);
+    }
+}

@@ -1,0 +1,145 @@
+//! Wall-clock benchmark harness (no criterion in the offline crate set).
+//!
+//! Each `benches/*.rs` target uses `harness = false` and drives this:
+//! warmup, timed iterations, mean/min/p50 stats, and aligned table output
+//! so every bench prints the rows/series of the paper table or figure it
+//! regenerates. Results can also be dumped as CSV for plotting.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Stats {
+        iters,
+        mean_s: mean,
+        min_s: samples[0],
+        p50_s: samples[samples.len() / 2],
+    }
+}
+
+/// Time a single run of `f` (for expensive end-to-end benches).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Aligned table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Write the table as CSV (for figure reproduction).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, s)
+    }
+}
+
+/// Human format for seconds.
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_reports_sane_stats() {
+        let st = time(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(st.iters, 5);
+        assert!(st.min_s <= st.mean_s);
+        assert!(st.min_s > 0.0);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "x".into()]);
+        t.print();
+        let p = std::env::temp_dir().join("ttrace_bench_test.csv");
+        t.write_csv(p.to_str().unwrap()).unwrap();
+        let got = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(got, "a,b\n1,x\n");
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_s(2.0).ends_with('s'));
+        assert!(fmt_s(0.002).ends_with("ms"));
+        assert!(fmt_s(2e-6).ends_with("µs"));
+    }
+}

@@ -1,0 +1,121 @@
+//! BF16 semantics on the host side.
+//!
+//! The training recipe is BF16 mixed precision: device-side tensors are
+//! bfloat16, so any host-side arithmetic the coordinator performs on
+//! activations/parameters (residual adds, collective reductions, bias adds)
+//! must round through bf16 to match what a bf16 device kernel would
+//! produce. These helpers implement IEEE round-to-nearest-even f32→bf16.
+
+/// Machine epsilon of bfloat16: 7 explicit mantissa bits → ε = 2^-7
+/// (numpy's `finfo(bfloat16).eps` convention). This is the paper's ε_mch:
+/// thresholds and figure axes are expressed in multiples of it. The maximum
+/// relative rounding error (unit roundoff) is ε/2 = 2^-8.
+pub const EPS_BF16: f32 = 0.0078125; // 2^-7
+
+/// Machine epsilon of f32 (2^-23), same convention.
+pub const EPS_F32: f32 = 1.1920929e-7;
+
+/// Machine epsilon of float8 e4m3 (3 explicit mantissa bits → 2^-3).
+pub const EPS_E4M3: f32 = 0.125;
+
+/// Round an f32 to the nearest bf16 (round-to-nearest-even), returned as f32.
+#[inline]
+pub fn round_bf16(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+#[inline]
+fn round_bf16_bits(bits: u32) -> u16 {
+    // NaN must stay NaN: force a quiet NaN payload.
+    if (bits & 0x7FFF_FFFF) > 0x7F80_0000 {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // Round to nearest even on the truncated 16 bits.
+    let lsb = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7FFF + lsb)) >> 16) as u16
+}
+
+/// f32 -> bf16 bit pattern (u16), round-to-nearest-even.
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    round_bf16_bits(x.to_bits())
+}
+
+/// bf16 bit pattern -> f32 (exact).
+#[inline]
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round every element of a slice through bf16 in place.
+pub fn round_slice_bf16(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = bf16_bits_to_f32(f32_to_bf16_bits(*x));
+    }
+}
+
+/// Pack f32 slice into bf16 bit patterns (for building device literals).
+pub fn pack_bf16(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_bf16_bits(x)).collect()
+}
+
+/// Unpack bf16 bit patterns into f32s (exact).
+pub fn unpack_bf16(bits: &[u16]) -> Vec<f32> {
+    bits.iter().map(|&b| bf16_bits_to_f32(b)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        // Values with <= 8 significand bits are exactly representable.
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 3.0, 0.00390625, -30000.0] {
+            let r = bf16_bits_to_f32(f32_to_bf16_bits(v));
+            // -30000 is NOT exactly representable; skip exactness for it.
+            if v != -30000.0 {
+                assert_eq!(r, v, "value {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + eps/2 rounds back to 1.0 (ties-to-even).
+        let x = 1.0f32 + EPS_BF16 / 2.0;
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(x)), 1.0);
+        // 1.0 + 1.5*eps rounds up to 1.0 + 2*eps (tie, even mantissa).
+        let y = 1.0f32 + 1.5 * EPS_BF16;
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(y)), 1.0 + 2.0 * EPS_BF16);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..1000 {
+            let x = (rng.normal() as f32) * 100.0;
+            if x == 0.0 {
+                continue;
+            }
+            let r = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            assert!(((r - x) / x).abs() <= EPS_BF16 / 2.0 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(f32::INFINITY)), f32::INFINITY);
+    }
+
+    #[test]
+    fn pack_unpack() {
+        let xs = vec![0.1f32, -2.5, 7.0, 1e-3];
+        let packed = pack_bf16(&xs);
+        let un = unpack_bf16(&packed);
+        for (a, b) in xs.iter().zip(un.iter()) {
+            assert!(((a - b) / a).abs() <= EPS_BF16);
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Declarative CLI flag parser (no clap in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands, with generated `--help` text. Used by the `ttrace`
+//! binary and the examples.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+    pub is_flag: bool,
+}
+
+#[derive(Default)]
+pub struct Cli {
+    pub about: &'static str,
+    opts: Vec<Opt>,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(about: &'static str) -> Self {
+        Cli { about, opts: Vec::new() }
+    }
+
+    /// Register `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &'static str,
+               help: &'static str) -> Self {
+        self.opts.push(Opt { name, default: Some(default), help, is_flag: false });
+        self
+    }
+
+    /// Register a required `--name <value>` (no default).
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, default: None, help, is_flag: false });
+        self
+    }
+
+    /// Register a boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, default: None, help, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("{}\n\nUSAGE: {prog} [OPTIONS]\n\nOPTIONS:\n", self.about);
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else if let Some(d) = o.default {
+                format!("  --{} <v> [default: {d}]", o.name)
+            } else {
+                format!("  --{} <v> (required)", o.name)
+            };
+            s.push_str(&format!("{head:<42} {}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse an explicit argv slice (excluding the program name).
+    pub fn parse_from(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if o.is_flag {
+                args.flags.insert(o.name.to_string(), false);
+            } else if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage("<prog>"));
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline_val) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow!("unknown option --{name}\n{}",
+                                           self.usage("<prog>")))?;
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        bail!("--{name} takes no value");
+                    }
+                    args.flags.insert(name.to_string(), true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), v);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if !o.is_flag && !args.values.contains_key(o.name) {
+                bail!("missing required --{}\n{}", o.name, self.usage("<prog>"));
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments.
+    pub fn parse(&self) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&argv)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not registered"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not registered"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let cli = Cli::new("t").opt("size", "4", "").flag("verbose", "");
+        let a = cli.parse_from(&v(&["--size", "8"])).unwrap();
+        assert_eq!(a.get_usize("size").unwrap(), 8);
+        assert!(!a.flag("verbose"));
+        let b = cli.parse_from(&v(&["--verbose"])).unwrap();
+        assert_eq!(b.get_usize("size").unwrap(), 4);
+        assert!(b.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positional() {
+        let cli = Cli::new("t").opt("mode", "x", "");
+        let a = cli.parse_from(&v(&["--mode=y", "pos1", "pos2"])).unwrap();
+        assert_eq!(a.get("mode"), "y");
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn required_and_unknown() {
+        let cli = Cli::new("t").req("must", "");
+        assert!(cli.parse_from(&v(&[])).is_err());
+        assert!(cli.parse_from(&v(&["--nope", "1"])).is_err());
+        assert!(cli.parse_from(&v(&["--must", "1"])).is_ok());
+    }
+}

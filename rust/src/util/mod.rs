@@ -1,0 +1,10 @@
+//! Hand-rolled substrates: the offline vendored crate set contains only
+//! `xla` + `anyhow`, so the JSON codec, CLI parser, RNG, bf16 rounding,
+//! property-test harness and bench harness all live here.
+
+pub mod bench;
+pub mod bf16;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

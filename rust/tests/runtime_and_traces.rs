@@ -1,0 +1,113 @@
+//! Integration tests over the PJRT runtime (artifact ABI validation,
+//! numeric round-trips vs host math) and trace persistence/reports.
+
+use ttrace::runtime::Executor;
+use ttrace::tensor::{DType, Tensor};
+use ttrace::ttrace::collector::{Collector, Mode};
+use ttrace::ttrace::{CanonId, Hooks, Kind, ShardSpec, Trace};
+use ttrace::util::rng::Rng;
+
+fn exec() -> std::sync::Arc<Executor> {
+    Executor::load(ttrace::default_artifacts_dir()).expect("artifacts built?")
+}
+
+#[test]
+fn manifest_has_expected_module_families() {
+    let exec = exec();
+    for fam in ["embed_fwd", "ln_bwd", "attn_fwd", "mlp_fwd", "lmhead_bwd",
+                "router_fwd", "experts_bwd", "mlp_fp8_fwd"] {
+        assert!(exec.manifest.keys().any(|k| k.starts_with(fam)),
+                "no artifact for family {fam}");
+    }
+}
+
+#[test]
+fn executor_validates_abi() {
+    let exec = exec();
+    // wrong arity
+    let x = Tensor::zeros(&[2, 16, 32], DType::Bf16);
+    assert!(exec.run("ln_fwd__2_16_32", &[&x]).is_err());
+    // wrong shape
+    let bad = Tensor::zeros(&[2, 16, 16], DType::Bf16);
+    let g = Tensor::zeros(&[32], DType::Bf16);
+    assert!(exec.run("ln_fwd__2_16_32", &[&bad, &g, &g]).is_err());
+    // wrong dtype
+    let xf = Tensor::zeros(&[2, 16, 32], DType::F32);
+    assert!(exec.run("ln_fwd__2_16_32", &[&xf, &g, &g]).is_err());
+    // unknown key
+    assert!(exec.run("nope__1", &[]).is_err());
+}
+
+#[test]
+fn ln_module_matches_host_math() {
+    let exec = exec();
+    let mut rng = Rng::new(11);
+    let mut xv = vec![0.0f32; 2 * 16 * 32];
+    rng.fill_normal(&mut xv, 2.0);
+    let x = Tensor::new(&[2, 16, 32], xv, DType::F32).round_bf16();
+    let gamma = Tensor::full(&[32], 1.0, DType::Bf16);
+    let beta = Tensor::zeros(&[32], DType::Bf16);
+    let y = exec.run("ln_fwd__2_16_32", &[&x, &gamma, &beta]).unwrap().remove(0);
+    // host check: per-row mean ~0, std ~1
+    for row in 0..2 * 16 {
+        let slice = &y.data[row * 32..(row + 1) * 32];
+        let mean: f32 = slice.iter().sum::<f32>() / 32.0;
+        let var: f32 = slice.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 32.0;
+        assert!(mean.abs() < 0.03, "row {row} mean {mean}");
+        assert!((var.sqrt() - 1.0).abs() < 0.1, "row {row} std {}", var.sqrt());
+    }
+}
+
+#[test]
+fn executor_stats_accumulate() {
+    let exec = exec();
+    exec.reset_stats();
+    let x = Tensor::zeros(&[2, 16, 32], DType::Bf16);
+    let g = Tensor::full(&[32], 1.0, DType::Bf16);
+    let b = Tensor::zeros(&[32], DType::Bf16);
+    for _ in 0..3 {
+        exec.run("ln_fwd__2_16_32", &[&x, &g, &b]).unwrap();
+    }
+    let st = exec.stats();
+    assert_eq!(st.executions, 3);
+    assert!(st.execute_s > 0.0);
+    assert_eq!(st.per_module.get("ln_fwd__2_16_32").unwrap().0, 3);
+}
+
+#[test]
+fn trace_saves_and_loads() {
+    let c = Collector::new();
+    let spec = ShardSpec::split(&[8, 4], 0, 1, 2).as_partial();
+    let t = Tensor::new(&[4, 4], (0..16).map(|x| x as f32 * 0.5).collect(),
+                        DType::Bf16);
+    c.record(&CanonId::new(2, 1, Kind::MainGrad, "layers.3.mlp.fc1.weight"),
+             &t, &spec);
+    let trace = c.into_trace();
+    let path = std::env::temp_dir().join("ttrace_trace_roundtrip.json");
+    trace.save(&path).unwrap();
+    let back = Trace::load(&path).unwrap();
+    let entries = back.get("i2/m1/main_grad/layers.3.mlp.fc1.weight").unwrap();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].data, t);
+    assert_eq!(entries[0].spec, spec);
+    assert!(entries[0].spec.partial);
+}
+
+#[test]
+fn rewrite_mode_replaces_inputs_consistently_across_layouts() {
+    // the same rewrite id must generate the identical logical tensor for a
+    // full spec and for each shard of a split spec
+    let c = Collector::with_mode(Mode::Rewrite);
+    let id = CanonId::new(0, 0, Kind::Act, "layers.0.input");
+    let full_spec = ShardSpec::full(&[2, 8, 4]);
+    let full = c
+        .rewrite_input(&id, &full_spec, &Tensor::zeros(&[2, 8, 4], DType::Bf16))
+        .unwrap();
+    for idx in 0..2 {
+        let spec = ShardSpec::split(&[2, 8, 4], 1, idx, 2);
+        let shard = c
+            .rewrite_input(&id, &spec, &Tensor::zeros(&[2, 4, 4], DType::Bf16))
+            .unwrap();
+        assert_eq!(shard, spec.extract_local(&full));
+    }
+}

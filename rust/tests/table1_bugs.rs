@@ -1,0 +1,33 @@
+//! Table 1 end-to-end: every one of the 14 silent bugs must be DETECTED by
+//! TTrace, localized to the expected module, and the same configurations
+//! must pass when no bug is armed (no false positives).
+
+use ttrace::bugs::table1::{run_all, run_clean_sweep};
+use ttrace::model::TINY;
+use ttrace::runtime::Executor;
+
+#[test]
+fn all_14_bugs_detected_and_localized() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let rows = run_all(&TINY, 2, &exec).unwrap();
+    assert_eq!(rows.len(), 14);
+    let mut problems = Vec::new();
+    for r in &rows {
+        if !r.detected {
+            problems.push(format!("bug {} NOT DETECTED ({})", r.number, r.description));
+        } else if !r.localization_ok {
+            problems.push(format!(
+                "bug {} localized at {:?}, expected '{}'",
+                r.number, r.localized, ttrace::bugs::BugId::all()[r.number as usize - 1].info().expect_module));
+        }
+    }
+    assert!(problems.is_empty(), "\n{}", problems.join("\n"));
+}
+
+#[test]
+fn clean_configs_have_no_false_positives() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let sweep = run_clean_sweep(&TINY, 2, &exec).unwrap();
+    let bad: Vec<&String> = sweep.iter().filter(|(_, p)| !p).map(|(k, _)| k).collect();
+    assert!(bad.is_empty(), "false positives in: {bad:?}");
+}

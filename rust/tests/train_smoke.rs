@@ -1,0 +1,97 @@
+//! End-to-end smoke: the engine trains (loss decreases) and parallel
+//! candidates track the single-device reference closely.
+
+use ttrace::data::GenData;
+use ttrace::dist::Topology;
+use ttrace::model::{run_training, Engine, ParCfg, TINY};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::NoopHooks;
+
+fn exec() -> std::sync::Arc<Executor> {
+    Executor::load(ttrace::default_artifacts_dir()).expect("artifacts built?")
+}
+
+#[test]
+fn reference_loss_decreases_on_corpus() {
+    // Uniform random tokens are unlearnable (min loss = ln V); use the
+    // built-in corpus, whose unigram stats a model learns within a few
+    // steps.
+    let exec = exec();
+    let engine = Engine::new(TINY, ParCfg::single(), 2, &exec,
+                             ttrace::bugs::BugSet::none()).unwrap();
+    let data = ttrace::data::CorpusData::builtin(TINY.v);
+    let losses = run_training(&engine, &data, &NoopHooks, 10);
+    let l = &losses[0];
+    assert_eq!(l.len(), 10);
+    let first = l[0];
+    let last = *l.last().unwrap();
+    // vocab=64 -> initial loss ~ ln(64) ≈ 4.16
+    assert!(first > 3.0 && first < 5.5, "initial loss {first}");
+    assert!(last < first - 0.3, "loss did not decrease: {first} -> {last}");
+}
+
+/// Sweep over parallel layouts (the paper's §6.2 sweep test): every
+/// bug-free candidate must track the single-device reference loss.
+#[test]
+fn parallelism_sweep_matches_reference() {
+    let exec = exec();
+    // (dp, tp, pp, cp, vpp, sp, n_micro, fp8, moe, zero1, recompute)
+    let cases: &[(usize, usize, usize, usize, usize, bool, usize, bool, bool, bool, bool)] = &[
+        (1, 1, 2, 1, 1, false, 2, false, false, false, false), // PP
+        (1, 1, 2, 1, 2, false, 2, false, false, false, false), // PP+VPP (4 layers)
+        (1, 1, 1, 2, 1, false, 1, false, false, false, false), // CP
+        (2, 1, 1, 1, 1, false, 1, false, false, false, false), // DP
+        (1, 2, 1, 1, 1, true, 1, false, false, false, false),  // TP+SP
+        (2, 1, 1, 1, 1, false, 1, false, false, true, false),  // DP+ZeRO1
+        (1, 1, 1, 1, 1, false, 1, false, false, false, true),  // recompute
+        (1, 2, 1, 1, 1, false, 1, true, false, false, false),  // TP+fp8
+        (1, 2, 1, 1, 1, true, 1, false, true, false, false),   // TP+SP+MoE
+        (2, 2, 2, 1, 1, false, 2, false, false, false, false), // DP+TP+PP
+    ];
+    for &(dp, tp, pp, cp, vpp, sp, n_micro, fp8, moe, zero1, rec) in cases {
+        let layers = if vpp > 1 { pp * vpp } else { 2.max(pp) };
+        let mut pref = ParCfg::single();
+        pref.n_micro = n_micro * dp;
+        pref.fp8 = fp8;
+        pref.moe = moe;
+        let eref = Engine::new(TINY, pref, layers, &exec,
+                               ttrace::bugs::BugSet::none()).unwrap();
+        let ref_loss = run_training(&eref, &GenData, &NoopHooks, 1)[0][0];
+
+        let mut p = ParCfg::single();
+        p.topo = Topology::new(dp, tp, pp, cp, vpp).unwrap();
+        p.sp = sp;
+        p.n_micro = n_micro;
+        p.fp8 = fp8;
+        p.moe = moe;
+        p.zero1 = zero1;
+        p.recompute = rec;
+        let e = Engine::new(TINY, p, layers, &exec,
+                            ttrace::bugs::BugSet::none()).unwrap();
+        let per_rank = run_training(&e, &GenData, &NoopHooks, 1);
+        let cands: Vec<f64> = per_rank.iter().filter(|l| !l.is_empty())
+            .map(|l| l[0]).collect();
+        let cand = cands.iter().sum::<f64>() / cands.len() as f64;
+        assert!((ref_loss - cand).abs() / ref_loss < 0.02,
+                "case dp{dp} tp{tp} pp{pp} cp{cp} vpp{vpp} sp{sp} fp8{fp8} \
+                 moe{moe} z{zero1} rec{rec}: ref={ref_loss} cand={cand}");
+    }
+}
+
+#[test]
+fn tp2_matches_reference_loss() {
+    let exec = exec();
+    let engine_ref = Engine::new(TINY, ParCfg::single(), 2, &exec,
+                                 ttrace::bugs::BugSet::none()).unwrap();
+    let ref_losses = run_training(&engine_ref, &GenData, &NoopHooks, 3);
+
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+    let engine = Engine::new(TINY, p, 2, &exec, ttrace::bugs::BugSet::none()).unwrap();
+    let cand_losses = run_training(&engine, &GenData, &NoopHooks, 3);
+    let cand = cand_losses.iter().find(|l| !l.is_empty()).unwrap();
+    for (a, b) in ref_losses[0].iter().zip(cand.iter()) {
+        assert!((a - b).abs() / a < 0.02,
+                "loss mismatch ref={a} tp2={b}");
+    }
+}

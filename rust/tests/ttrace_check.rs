@@ -1,0 +1,75 @@
+//! End-to-end TTrace workflow tests: bug-free candidates PASS the
+//! differential check; armed bugs are detected and localized.
+
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::GenData;
+use ttrace::dist::Topology;
+use ttrace::model::{ParCfg, TINY};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::{localized_module, ttrace_check, CheckCfg};
+
+fn exec() -> std::sync::Arc<Executor> {
+    Executor::load(ttrace::default_artifacts_dir()).expect("artifacts built?")
+}
+
+fn parcfg(dp: usize, tp: usize, pp: usize, cp: usize) -> ParCfg {
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(dp, tp, pp, cp, 1).unwrap();
+    p
+}
+
+#[test]
+fn correct_tp2_candidate_passes() {
+    let exec = exec();
+    let p = parcfg(1, 2, 1, 1);
+    let run = ttrace_check(&TINY, &p, 2, &exec, &GenData, BugSet::none(),
+                           &CheckCfg::default(), false).unwrap();
+    let failures: Vec<String> = run.outcome.failures().iter()
+        .map(|c| format!("{} rel={:.4e} thr={:.4e}", c.key, c.rel_err, c.threshold))
+        .collect();
+    assert!(run.outcome.pass, "unexpected failures:\n{}", failures.join("\n"));
+}
+
+#[test]
+fn correct_cp2_sp_candidate_passes() {
+    let exec = exec();
+    let mut p = parcfg(1, 2, 1, 2);
+    p.sp = true;
+    let run = ttrace_check(&TINY, &p, 2, &exec, &GenData, BugSet::none(),
+                           &CheckCfg::default(), false).unwrap();
+    let failures: Vec<String> = run.outcome.failures().iter()
+        .map(|c| format!("{} rel={:.4e} thr={:.4e}", c.key, c.rel_err, c.threshold))
+        .collect();
+    assert!(run.outcome.pass, "unexpected failures:\n{}", failures.join("\n"));
+}
+
+#[test]
+fn bug1_detected_and_localized_at_embedding() {
+    let exec = exec();
+    let p = parcfg(1, 2, 1, 1);
+    let run = ttrace_check(&TINY, &p, 2, &exec, &GenData,
+                           BugSet::one(BugId::B1TpEmbeddingMask),
+                           &CheckCfg::default(), true).unwrap();
+    assert!(!run.outcome.pass, "bug 1 went undetected");
+    let module = localized_module(&run).expect("no localization");
+    assert!(module.contains("embedding"),
+            "bug 1 localized at '{module}', expected the embedding");
+}
+
+#[test]
+fn bug11_partial_grads_detected() {
+    let exec = exec();
+    let mut p = parcfg(1, 2, 1, 1);
+    p.overlap = true;
+    let run = ttrace_check(&TINY, &p, 2, &exec, &GenData,
+                           BugSet::one(BugId::B11TpOverlapGrads),
+                           &CheckCfg::default(), false).unwrap();
+    assert!(!run.outcome.pass, "bug 11 went undetected");
+    // the first divergence must be a backward-pass tensor
+    let first = run.outcome.first_divergence().unwrap();
+    assert!(matches!(first.id.kind,
+                     ttrace::ttrace::Kind::ActGrad
+                     | ttrace::ttrace::Kind::ParamGrad
+                     | ttrace::ttrace::Kind::MainGrad),
+            "first divergence {:?}", first.id);
+}
