@@ -1,0 +1,27 @@
+# Tier-1 verify and artifact pipeline.
+#
+#   make artifacts   build the AOT HLO artifacts (python + jax required)
+#   make verify      artifacts (if missing) + cargo build --release + cargo test -q
+#   make test        cargo test only (assumes artifacts exist)
+#   make clean-artifacts
+
+PYTHON ?= python
+
+.PHONY: verify test artifacts clean-artifacts
+
+# Rebuild the manifest when any lowering input changes; aot.py is
+# incremental, so unchanged module keys are skipped.
+artifacts/manifest.json: $(shell find python/compile -name '*.py' 2>/dev/null)
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts
+
+artifacts: artifacts/manifest.json
+
+verify: artifacts/manifest.json
+	cargo build --release
+	cargo test -q
+
+test:
+	cargo test -q
+
+clean-artifacts:
+	rm -rf artifacts

@@ -46,10 +46,15 @@ def _attn_fwd_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, block_k: int,
 
     def body(i, carry):
         m_i, l_i, acc = carry
-        kblk = pl.load(k_ref, (0, 0, pl.ds(i * block_k, block_k),
-                               slice(None))).astype(F32)  # [bk, hd]
-        vblk = pl.load(v_ref, (0, 0, pl.ds(i * block_k, block_k),
-                               slice(None)))  # [bk, hd] bf16
+        # Leading (b, h) dims are indexed with size-1 dynamic slices (not
+        # bare ints): interpret-mode discharge rejects scalar indices mixed
+        # with pl.ds on this jaxlib.
+        kblk = pl.load(k_ref, (pl.ds(0, 1), pl.ds(0, 1),
+                               pl.ds(i * block_k, block_k),
+                               slice(None)))[0, 0].astype(F32)  # [bk, hd]
+        vblk = pl.load(v_ref, (pl.ds(0, 1), pl.ds(0, 1),
+                               pl.ds(i * block_k, block_k),
+                               slice(None)))[0, 0]  # [bk, hd] bf16
         mblk = pl.load(m_ref, (slice(None), pl.ds(i * block_k, block_k)))
         s = q @ kblk.T + mblk  # [bq, bk] f32
         m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))

@@ -1,0 +1,374 @@
+//! Simulated multi-rank SPMD substrate.
+//!
+//! The engine is written SPMD-style: `run_spmd` spawns one OS thread per
+//! simulated rank over a shared `comm::World`, and every rank executes the
+//! same training code against its own `RankCtx`. The context carries the
+//! rank's coordinate in the 4D parallel topology (DP x TP x PP x CP; VPP is
+//! a scheduling detail, not a process-grid axis) and the communicator plus
+//! group constructors the collectives run over.
+//!
+//! Rank ordering follows the Megatron process-grid convention: **tp varies
+//! fastest, then cp, then dp, with pp outermost** —
+//!
+//!   rank = tp + TP * (cp + CP * (dp + DP * pp))
+//!
+//! so a tensor-parallel group is a contiguous rank range, and pipeline
+//! stages are the outermost blocks (which keeps `ttrace::canonical`'s
+//! layer mapping aligned with stage indices).
+//!
+//! Group keys must be collision-free across *instances* of the same group
+//! kind (the tp group of dp-rank 0 must never rendezvous with the tp group
+//! of dp-rank 1), so every key embeds the coordinates the group holds
+//! fixed. `comm::Comm` appends a per-group sequence number on top.
+
+use anyhow::{bail, Result};
+
+use crate::comm::{Comm, World};
+
+/// The 4D (+ virtual pipeline) parallel topology of a training run.
+///
+/// All sizes are >= 1; `vpp` is the number of virtual-pipeline chunks per
+/// stage (interleaved schedule) and does not contribute to the world size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub cp: usize,
+    pub vpp: usize,
+}
+
+impl Topology {
+    /// Build a validated topology. Argument order matches the CLI and the
+    /// test matrix: (dp, tp, pp, cp, vpp).
+    pub fn new(dp: usize, tp: usize, pp: usize, cp: usize, vpp: usize) -> Result<Topology> {
+        for (name, v) in [("dp", dp), ("tp", tp), ("pp", pp), ("cp", cp), ("vpp", vpp)] {
+            if v == 0 {
+                bail!("topology: {name} must be >= 1 (got 0)");
+            }
+        }
+        Ok(Topology { dp, tp, pp, cp, vpp })
+    }
+
+    /// The single-device (reference) topology.
+    pub fn single() -> Topology {
+        Topology { dp: 1, tp: 1, pp: 1, cp: 1, vpp: 1 }
+    }
+
+    /// Number of simulated ranks.
+    pub fn world(&self) -> usize {
+        self.dp * self.tp * self.pp * self.cp
+    }
+
+    /// Global rank of a coordinate (tp fastest, then cp, then dp, then pp).
+    pub fn rank_of(&self, c: Coord) -> usize {
+        debug_assert!(c.tp < self.tp && c.cp < self.cp && c.dp < self.dp && c.pp < self.pp);
+        ((c.pp * self.dp + c.dp) * self.cp + c.cp) * self.tp + c.tp
+    }
+
+    /// Coordinate of a global rank (inverse of `rank_of`).
+    pub fn coord_of(&self, rank: usize) -> Coord {
+        debug_assert!(rank < self.world());
+        let tp = rank % self.tp;
+        let rest = rank / self.tp;
+        let cp = rest % self.cp;
+        let rest = rest / self.cp;
+        let dp = rest % self.dp;
+        let pp = rest / self.dp;
+        Coord { dp, tp, pp, cp }
+    }
+
+    /// Human-readable layout tag (used in logs, report labels, bench CSVs).
+    pub fn describe(&self) -> String {
+        let mut s = format!("dp{}tp{}pp{}cp{}", self.dp, self.tp, self.pp, self.cp);
+        if self.vpp > 1 {
+            s.push_str(&format!("vpp{}", self.vpp));
+        }
+        s
+    }
+}
+
+/// A rank's coordinate in the (dp, tp, pp, cp) process grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Coord {
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub cp: usize,
+}
+
+/// One communication group: a stable rendezvous `key` (collision-free
+/// across group instances), this rank's member index `me`, and the group
+/// `size`. Member order is ascending global rank.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Group {
+    pub key: String,
+    pub me: usize,
+    pub size: usize,
+}
+
+/// Per-rank SPMD context: identity in the topology plus the communicator.
+pub struct RankCtx {
+    pub rank: usize,
+    pub coord: Coord,
+    pub topo: Topology,
+    pub comm: Comm,
+}
+
+impl RankCtx {
+    pub fn new(topo: Topology, rank: usize, comm: Comm) -> RankCtx {
+        RankCtx { rank, coord: topo.coord_of(rank), topo, comm }
+    }
+
+    /// First pipeline stage holds the embedding.
+    pub fn is_first_stage(&self) -> bool {
+        self.coord.pp == 0
+    }
+
+    /// Last pipeline stage holds the LM head / loss.
+    pub fn is_last_stage(&self) -> bool {
+        self.coord.pp == self.topo.pp - 1
+    }
+
+    /// Global rank of the peer at pipeline stage `pp` with this rank's
+    /// dp/tp/cp coordinates (the p2p partner for activations/grads).
+    pub fn pp_rank(&self, pp: usize) -> usize {
+        self.topo.rank_of(Coord { pp, ..self.coord })
+    }
+
+    /// Tensor-parallel group: same (dp, pp, cp), tp varies.
+    pub fn tp_group(&self) -> Group {
+        let c = self.coord;
+        Group {
+            key: format!("tp@pp{}dp{}cp{}", c.pp, c.dp, c.cp),
+            me: c.tp,
+            size: self.topo.tp,
+        }
+    }
+
+    /// Context-parallel group: same (dp, pp, tp), cp varies.
+    pub fn cp_group(&self) -> Group {
+        let c = self.coord;
+        Group {
+            key: format!("cp@pp{}dp{}tp{}", c.pp, c.dp, c.tp),
+            me: c.cp,
+            size: self.topo.cp,
+        }
+    }
+
+    /// Data-parallel group: same (pp, tp, cp), dp varies.
+    pub fn dp_group(&self) -> Group {
+        let c = self.coord;
+        Group {
+            key: format!("dp@pp{}cp{}tp{}", c.pp, c.cp, c.tp),
+            me: c.dp,
+            size: self.topo.dp,
+        }
+    }
+
+    /// The dp x cp group (main-grad reduction, ZeRO-1 sharding domain):
+    /// same (pp, tp); member order is (dp, cp) with cp fastest — i.e.
+    /// ascending global rank.
+    pub fn dpcp_group(&self) -> Group {
+        let c = self.coord;
+        Group {
+            key: format!("dpcp@pp{}tp{}", c.pp, c.tp),
+            me: c.dp * self.topo.cp + c.cp,
+            size: self.topo.dp * self.topo.cp,
+        }
+    }
+
+    /// All ranks (global grad-norm reduction).
+    pub fn world_group(&self) -> Group {
+        Group {
+            key: "world".to_string(),
+            me: self.rank,
+            size: self.topo.world(),
+        }
+    }
+}
+
+/// Run `f` SPMD: one scoped OS thread per rank over a shared `World`,
+/// results returned in rank order. Deterministic given deterministic `f`:
+/// every collective folds in member order regardless of thread scheduling.
+pub fn run_spmd<T, F>(topo: Topology, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&RankCtx) -> T + Sync,
+{
+    let n = topo.world();
+    let world = World::new(n);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (rank, slot) in out.iter_mut().enumerate() {
+            let world = world.clone();
+            let f = &f;
+            s.spawn(move || {
+                let ctx = RankCtx::new(topo, rank, Comm::new(world));
+                *slot = Some(f(&ctx));
+            });
+        }
+    });
+    out.into_iter()
+        .map(|o| o.expect("rank thread panicked before producing a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::{BTreeMap, BTreeSet};
+
+    use crate::comm::{RedOp, RedPrec};
+    use crate::tensor::{DType, Tensor};
+
+    fn t2222() -> Topology {
+        Topology::new(2, 2, 2, 2, 2).unwrap()
+    }
+
+    #[test]
+    fn validates_sizes() {
+        assert!(Topology::new(0, 1, 1, 1, 1).is_err());
+        assert!(Topology::new(1, 1, 1, 1, 0).is_err());
+        assert!(Topology::new(1, 1, 1, 1, 1).is_ok());
+        assert_eq!(Topology::single().world(), 1);
+    }
+
+    #[test]
+    fn rank_coord_roundtrip_dp2_tp2_pp2_cp2() {
+        let topo = t2222();
+        assert_eq!(topo.world(), 16);
+        let mut seen = BTreeSet::new();
+        for rank in 0..topo.world() {
+            let c = topo.coord_of(rank);
+            assert_eq!(topo.rank_of(c), rank, "roundtrip at rank {rank}");
+            assert!(seen.insert((c.dp, c.tp, c.pp, c.cp)), "coord collision {c:?}");
+        }
+        // tp fastest: ranks 0 and 1 differ only in tp
+        assert_eq!(topo.coord_of(0), Coord { dp: 0, tp: 0, pp: 0, cp: 0 });
+        assert_eq!(topo.coord_of(1), Coord { dp: 0, tp: 1, pp: 0, cp: 0 });
+        // then cp
+        assert_eq!(topo.coord_of(2), Coord { dp: 0, tp: 0, pp: 0, cp: 1 });
+        // then dp
+        assert_eq!(topo.coord_of(4), Coord { dp: 1, tp: 0, pp: 0, cp: 0 });
+        // pp outermost
+        assert_eq!(topo.coord_of(8), Coord { dp: 0, tp: 0, pp: 1, cp: 0 });
+    }
+
+    /// Every rank lands in exactly one instance of each group kind, member
+    /// indices enumerate 0..size within each instance, and keys of
+    /// different instances never collide.
+    #[test]
+    fn groups_partition_the_world() {
+        let topo = t2222();
+        for kind in ["tp", "dp", "cp", "dpcp", "world"] {
+            let mut members: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+            let mut expected_size = 0;
+            for rank in 0..topo.world() {
+                let ctx = RankCtx::new(topo, rank, Comm::new(World::new(1)));
+                let g = match kind {
+                    "tp" => ctx.tp_group(),
+                    "dp" => ctx.dp_group(),
+                    "cp" => ctx.cp_group(),
+                    "dpcp" => ctx.dpcp_group(),
+                    _ => ctx.world_group(),
+                };
+                expected_size = g.size;
+                members.entry(g.key).or_default().push(g.me);
+            }
+            let mut total = 0;
+            for (key, mes) in &members {
+                assert_eq!(mes.len(), expected_size, "{kind} group '{key}' size");
+                let set: BTreeSet<usize> = mes.iter().copied().collect();
+                let want: BTreeSet<usize> = (0..expected_size).collect();
+                assert_eq!(set, want, "{kind} '{key}' member ids");
+                total += mes.len();
+            }
+            assert_eq!(total, topo.world(), "{kind} groups must cover every rank once");
+        }
+    }
+
+    #[test]
+    fn group_keys_disjoint_across_kinds() {
+        let topo = t2222();
+        let ctx = RankCtx::new(topo, 3, Comm::new(World::new(1)));
+        let keys = [
+            ctx.tp_group().key,
+            ctx.dp_group().key,
+            ctx.cp_group().key,
+            ctx.dpcp_group().key,
+            ctx.world_group().key,
+        ];
+        let set: BTreeSet<&String> = keys.iter().collect();
+        assert_eq!(set.len(), keys.len(), "group keys collide: {keys:?}");
+    }
+
+    #[test]
+    fn pp_rank_fixes_dp_tp_cp() {
+        let topo = t2222();
+        for rank in 0..topo.world() {
+            let ctx = RankCtx::new(topo, rank, Comm::new(World::new(1)));
+            for pp in 0..topo.pp {
+                let peer = ctx.pp_rank(pp);
+                let pc = topo.coord_of(peer);
+                assert_eq!((pc.dp, pc.tp, pc.cp), (ctx.coord.dp, ctx.coord.tp, ctx.coord.cp));
+                assert_eq!(pc.pp, pp);
+            }
+            assert_eq!(ctx.pp_rank(ctx.coord.pp), rank);
+        }
+    }
+
+    #[test]
+    fn stage_predicates() {
+        let topo = Topology::new(1, 1, 3, 1, 1).unwrap();
+        let first = RankCtx::new(topo, 0, Comm::new(World::new(1)));
+        let last = RankCtx::new(topo, 2, Comm::new(World::new(1)));
+        assert!(first.is_first_stage() && !first.is_last_stage());
+        assert!(!last.is_first_stage() && last.is_last_stage());
+    }
+
+    #[test]
+    fn run_spmd_returns_rank_order() {
+        let topo = Topology::new(2, 2, 1, 1, 1).unwrap();
+        let out = run_spmd(topo, |ctx| (ctx.rank, ctx.coord.dp, ctx.coord.tp));
+        assert_eq!(out, vec![(0, 0, 0), (1, 0, 1), (2, 1, 0), (3, 1, 1)]);
+    }
+
+    /// Determinism across repeated runs: collectives over every group kind
+    /// must produce bit-identical results run-to-run (what the merger's
+    /// bitwise replica comparison relies on).
+    #[test]
+    fn run_spmd_is_deterministic() {
+        let topo = Topology::new(2, 2, 1, 2, 1).unwrap();
+        let run = || {
+            run_spmd(topo, |ctx| {
+                let x = Tensor::full(&[4], 0.1 + ctx.rank as f32 * 0.3, DType::Bf16);
+                let tp = ctx.tp_group();
+                let a = ctx.comm.all_reduce(&tp.key, tp.me, tp.size, &x,
+                                            RedOp::Sum, RedPrec::Bf16);
+                let dpcp = ctx.dpcp_group();
+                let b = ctx.comm.all_reduce(&dpcp.key, dpcp.me, dpcp.size, &a,
+                                            RedOp::Sum, RedPrec::Bf16);
+                let w = ctx.world_group();
+                let c = ctx.comm.all_reduce(&w.key, w.me, w.size, &b,
+                                            RedOp::Sum, RedPrec::F32);
+                (a.data, b.data, c.data)
+            })
+        };
+        let r1 = run();
+        let r2 = run();
+        for (rank, (a, b)) in r1.iter().zip(&r2).enumerate() {
+            assert_eq!(a.0.to_vec().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       b.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       "tp all-reduce differs at rank {rank}");
+            assert_eq!(a.1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       b.1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       "dpcp all-reduce differs at rank {rank}");
+            assert_eq!(a.2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       b.2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       "world all-reduce differs at rank {rank}");
+        }
+        // group collectives agree within each group
+        assert_eq!(r1[0].0, r1[1].0, "tp group members must agree");
+    }
+}

@@ -1,42 +1,37 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Module runtime: loads the artifact manifest produced by
+//! `python/compile/aot.py` and executes the model's AOT modules from the
+//! Rust hot path.
 //!
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
-//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//! Two interchangeable backends sit behind one `Executor`:
 //!
-//! One process-wide `Executor` is shared by all simulated rank threads:
-//! executables are compiled once per module key and cached. The xla crate's
-//! wrappers are raw-pointer newtypes (`!Send`), but the underlying PJRT CPU
-//! client is internally synchronized; `Shared*` wrappers assert Send/Sync
-//! and a single execute mutex serializes device calls (the testbed has one
-//! CPU core — there is no parallelism to lose; see EXPERIMENTS.md §Perf).
+//!  - **native** (default): a pure-Rust implementation of the module set
+//!    with the same precision contract as the lowered HLO (bf16 storage,
+//!    f32 accumulation, f32 statistics, software-emulated fp8). Zero
+//!    external dependencies — `cargo test` is green on a machine with no
+//!    XLA toolchain. The manifest is still required: it is the ABI contract
+//!    (shapes/dtypes) both backends validate against.
+//!  - **pjrt** (`--features pjrt`): compiles the HLO-text artifacts with
+//!    the vendored `xla` crate and executes them on the PJRT CPU client
+//!    (see `pjrt.rs` for the interchange-format details).
+//!
+//! Selection: the `pjrt` backend is used when compiled in, unless
+//! `TTRACE_BACKEND=native` overrides; `TTRACE_BACKEND=pjrt` without the
+//! feature is an error rather than a silent fallback.
 
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::tensor::{DType, Tensor};
-use crate::util::bf16;
 pub use manifest::{Manifest, ModuleInfo, TensorSpec};
-
-struct SharedClient(xla::PjRtClient);
-// SAFETY: PJRT CPU client methods are thread-safe (the same client object
-// serves concurrent JAX threads); we never move the raw pointer's ownership
-// across threads, only share &self.
-unsafe impl Send for SharedClient {}
-unsafe impl Sync for SharedClient {}
-
-struct SharedExec(xla::PjRtLoadedExecutable);
-// SAFETY: see SharedClient; executions are additionally serialized by
-// `exec_lock`.
-unsafe impl Send for SharedExec {}
-unsafe impl Sync for SharedExec {}
 
 /// Cumulative execution statistics (inspected by the perf pass / benches).
 #[derive(Default, Clone, Debug)]
@@ -48,30 +43,100 @@ pub struct ExecStats {
     pub per_module: HashMap<String, (u64, f64)>,
 }
 
+enum Backend {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtBackend),
+}
+
+impl Backend {
+    fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
 pub struct Executor {
-    client: SharedClient,
-    dir: PathBuf,
     pub manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<SharedExec>>>,
-    exec_lock: Mutex<()>,
+    backend: Backend,
     stats: Mutex<ExecStats>,
 }
 
+/// The rebuild command quoted in every missing-artifact error.
+pub const ARTIFACT_BUILD_CMD: &str = "cd python && python -m compile.aot --out ../artifacts";
+
 impl Executor {
-    /// Load the artifact manifest; compilation happens lazily per module.
+    /// Load the artifact manifest; module compilation (pjrt) happens lazily.
+    ///
+    /// A missing manifest is an actionable error, not a panic: it names the
+    /// exact rebuild command and the search order `default_artifacts_dir`
+    /// walked.
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Arc<Executor>> {
         let dir = artifacts_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            let cwd = std::env::current_dir()
+                .map(|d| d.display().to_string())
+                .unwrap_or_else(|_| ".".into());
+            bail!(
+                "artifacts manifest not found at {path}\n\
+                 \n\
+                 Build the AOT artifacts first:\n\
+                 \x20   {cmd}\n\
+                 (or run `make artifacts` / `make verify` from the repo root)\n\
+                 \n\
+                 Search order: $TTRACE_ARTIFACTS if set, else the nearest\n\
+                 ancestor of {cwd} containing artifacts/manifest.json.",
+                path = manifest_path.display(),
+                cmd = ARTIFACT_BUILD_CMD,
+            );
+        }
+        let manifest = Manifest::load(&manifest_path)?;
+        let backend = Self::choose_backend(&dir)?;
         Ok(Arc::new(Executor {
-            client: SharedClient(client),
-            dir,
             manifest,
-            cache: Mutex::new(HashMap::new()),
-            exec_lock: Mutex::new(()),
+            backend,
             stats: Mutex::new(ExecStats::default()),
         }))
+    }
+
+    fn choose_backend(dir: &Path) -> Result<Backend> {
+        let requested = std::env::var("TTRACE_BACKEND").unwrap_or_default();
+        match requested.as_str() {
+            "native" => Ok(Backend::Native),
+            "pjrt" => {
+                #[cfg(feature = "pjrt")]
+                {
+                    Ok(Backend::Pjrt(pjrt::PjrtBackend::new(dir.to_path_buf())?))
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    let _ = dir;
+                    bail!("TTRACE_BACKEND=pjrt but this binary was built without \
+                           the `pjrt` feature — rebuild with `cargo build --features pjrt`")
+                }
+            }
+            "" => {
+                #[cfg(feature = "pjrt")]
+                {
+                    Ok(Backend::Pjrt(pjrt::PjrtBackend::new(dir.to_path_buf())?))
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    let _ = dir;
+                    Ok(Backend::Native)
+                }
+            }
+            other => bail!("unknown TTRACE_BACKEND '{other}' (native|pjrt)"),
+        }
+    }
+
+    /// Active backend name ("native" or "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn stats(&self) -> ExecStats {
@@ -82,45 +147,15 @@ impl Executor {
         *self.stats.lock().unwrap() = ExecStats::default();
     }
 
-    fn compiled(&self, key: &str) -> Result<Arc<SharedExec>> {
-        if let Some(e) = self.cache.lock().unwrap().get(key) {
-            return Ok(e.clone());
-        }
-        let info = self
-            .manifest
-            .get(key)
-            .ok_or_else(|| anyhow!("module '{key}' not in manifest — regenerate artifacts \
-                                    (make artifacts) or fix the config plan"))?;
-        let path = self.dir.join(&info.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .0
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling '{key}': {e:?}"))?;
-        let exe = Arc::new(SharedExec(exe));
-        let dt = t0.elapsed().as_secs_f64();
-        let mut st = self.stats.lock().unwrap();
-        st.compile_s += dt;
-        drop(st);
-        self.cache
-            .lock()
-            .unwrap()
-            .entry(key.to_string())
-            .or_insert_with(|| exe.clone());
-        Ok(exe)
-    }
-
     /// Execute module `key` on `inputs`; validates shapes/dtypes against the
-    /// manifest ABI and returns the outputs as host tensors.
+    /// manifest ABI on the way in AND out, returning host tensors rounded to
+    /// the ABI dtype grid.
     pub fn run(&self, key: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let info = self
             .manifest
             .get(key)
-            .ok_or_else(|| anyhow!("module '{key}' not in manifest"))?
+            .ok_or_else(|| anyhow!("module '{key}' not in manifest — regenerate artifacts \
+                                    ({ARTIFACT_BUILD_CMD}) or fix the config plan"))?
             .clone();
         if inputs.len() != info.inputs.len() {
             bail!("module '{key}': {} inputs supplied, ABI wants {}",
@@ -136,107 +171,44 @@ impl Executor {
                       t.dtype, spec.dtype);
             }
         }
-        let exe = self.compiled(key)?;
-
-        let tm = Instant::now();
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| tensor_to_literal(t))
-            .collect::<Result<_>>()?;
-        let marshal_in = tm.elapsed().as_secs_f64();
 
         let t0 = Instant::now();
-        let guard = self.exec_lock.lock().unwrap();
-        let result = exe
-            .0
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("executing '{key}': {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of '{key}': {e:?}"))?;
-        drop(guard);
-        let exec_dt = t0.elapsed().as_secs_f64();
+        let (tensors, compile_dt, marshal_dt) = match &self.backend {
+            Backend::Native => (native::run_module(&info, inputs)?, 0.0, 0.0),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.run(key, &info, inputs)?,
+        };
+        let exec_dt = t0.elapsed().as_secs_f64() - compile_dt - marshal_dt;
 
-        let tm2 = Instant::now();
-        // aot.py lowers with return_tuple=True: always a tuple, even for one
-        // output.
-        let outs = lit
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling result of '{key}': {e:?}"))?;
-        if outs.len() != info.outputs.len() {
-            bail!("module '{key}': {} outputs, ABI wants {}", outs.len(),
+        if tensors.len() != info.outputs.len() {
+            bail!("module '{key}': {} outputs, ABI wants {}", tensors.len(),
                   info.outputs.len());
         }
-        let tensors: Vec<Tensor> = outs
-            .iter()
+        let tensors: Vec<Tensor> = tensors
+            .into_iter()
             .zip(&info.outputs)
-            .map(|(l, spec)| literal_to_tensor(l, spec))
+            .enumerate()
+            .map(|(i, (mut t, spec))| {
+                if t.dims != spec.shape {
+                    bail!("module '{key}' output {i}: shape {:?} != ABI {:?}",
+                          t.dims, spec.shape);
+                }
+                t.dtype = spec.dtype;
+                if spec.dtype == DType::Bf16 {
+                    crate::util::bf16::round_slice_bf16(&mut t.data);
+                }
+                Ok(t)
+            })
             .collect::<Result<_>>()?;
-        let marshal = marshal_in + tm2.elapsed().as_secs_f64();
 
         let mut st = self.stats.lock().unwrap();
         st.executions += 1;
-        st.execute_s += exec_dt;
-        st.marshal_s += marshal;
+        st.compile_s += compile_dt;
+        st.execute_s += exec_dt.max(1e-9);
+        st.marshal_s += marshal_dt;
         let e = st.per_module.entry(key.to_string()).or_insert((0, 0.0));
         e.0 += 1;
-        e.1 += exec_dt;
+        e.1 += exec_dt.max(1e-9);
         Ok(tensors)
     }
-}
-
-/// Host tensor -> device literal, marshaling through the device dtype.
-fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let mk = |ty, bytes: &[u8]| {
-        xla::Literal::create_from_shape_and_untyped_data(ty, &t.dims, bytes)
-            .map_err(|e| anyhow!("literal create: {e:?}"))
-    };
-    match t.dtype {
-        DType::F32 => {
-            let bytes = unsafe {
-                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
-            };
-            mk(xla::ElementType::F32, bytes)
-        }
-        DType::Bf16 => {
-            let packed = bf16::pack_bf16(&t.data);
-            let bytes = unsafe {
-                std::slice::from_raw_parts(packed.as_ptr() as *const u8, packed.len() * 2)
-            };
-            mk(xla::ElementType::Bf16, bytes)
-        }
-        DType::I32 => {
-            let ints: Vec<i32> = t.data.iter().map(|&x| x as i32).collect();
-            let bytes = unsafe {
-                std::slice::from_raw_parts(ints.as_ptr() as *const u8, ints.len() * 4)
-            };
-            mk(xla::ElementType::S32, bytes)
-        }
-    }
-}
-
-/// Device literal -> host tensor (f32 storage), checking the ABI spec.
-fn literal_to_tensor(l: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
-    let shape = l.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    if dims != spec.shape {
-        bail!("output shape {:?} != ABI {:?}", dims, spec.shape);
-    }
-    let data: Vec<f32> = match spec.dtype {
-        DType::I32 => {
-            let v = l
-                .to_vec::<i32>()
-                .map_err(|e| anyhow!("literal i32 read: {e:?}"))?;
-            v.into_iter().map(|x| x as f32).collect()
-        }
-        _ => {
-            // bf16 -> f32 conversion is exact; f32 -> f32 is identity.
-            let conv = l
-                .convert(xla::PrimitiveType::F32)
-                .map_err(|e| anyhow!("literal convert: {e:?}"))?;
-            conv.to_vec::<f32>()
-                .map_err(|e| anyhow!("literal f32 read: {e:?}"))?
-        }
-    };
-    Ok(Tensor::new(&dims, data, spec.dtype))
 }

@@ -1,0 +1,996 @@
+//! Native (pure-Rust) module executor — the default runtime backend.
+//!
+//! Implements the exact module set `python/compile/model.py` lowers to HLO,
+//! with the same precision contract (bf16 storage, f32 matmul accumulation,
+//! f32 softmax/normalization statistics, f32 cross-entropy, software
+//! quantize-dequantize fp8). The reference and every candidate rank execute
+//! the *same* implementations, so — exactly as with the PJRT backend —
+//! reference/candidate differences can only come from parallelization
+//! semantics or an armed bug, never from divergent module math.
+//!
+//! Per-output-element reduction order is fixed (row-major over the
+//! contraction axis), which is what makes column-parallel shards
+//! bit-identical slices of the reference result and keeps the merger's
+//! bitwise replica comparison meaningful.
+//!
+//! The PJRT backend (`--features pjrt`) executes the AOT HLO artifacts
+//! instead; this backend still reads `manifest.json` for the module ABI, so
+//! the artifact pipeline stays the single source of truth for shapes.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{DType, Tensor};
+use crate::util::bf16::round_bf16;
+
+use super::manifest::ModuleInfo;
+
+const LN_EPS: f32 = 1e-5;
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi), f32-rounded
+const GELU_A: f32 = 0.044_715;
+const E4M3_MAX: f32 = 448.0;
+const E5M2_MAX: f32 = 57344.0;
+
+/// Execute module `info` on validated inputs. Outputs are f32 buffers with
+/// the ABI dtype tag; the caller rounds bf16 outputs through the grid.
+pub fn run_module(info: &ModuleInfo, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let i = inputs;
+    let out = match info.name.as_str() {
+        "embed_fwd" => embed_fwd(i[0], i[1], i[2]),
+        "embed_bwd" => embed_bwd(i[0], i[1], i[2], i[3]),
+        "ln_fwd" => ln_fwd(i[0], i[1], i[2]),
+        "ln_bwd" => ln_bwd(i[0], i[1], i[2], i[3]),
+        "linear_fwd" => linear_fwd(i[0], i[1], Some(i[2])),
+        "linear_bwd" => linear_bwd(i[0], i[1], i[3], true),
+        "linearnb_fwd" => linear_fwd(i[0], i[1], None),
+        "linearnb_bwd" => linear_bwd(i[0], i[1], i[2], false),
+        "attn_fwd" => attn_fwd(i[0], i[1], i[2], i[3]),
+        "attn_bwd" => attn_bwd(i[0], i[1], i[2], i[3], i[4]),
+        "mlp_fwd" => mlp_fwd(i[0], i[1], i[2], i[3]),
+        "mlp_bwd" => mlp_bwd(i[0], i[1], i[2], i[3], i[4]),
+        "lmhead_fwd" => lmhead_fwd(i[0], i[1]),
+        "logits_max" => logits_max(i[0]),
+        "xent_local" => xent_local(i[0], i[1], i[2], i[3]),
+        "lmhead_bwd" => lmhead_bwd(i[0], i[1], i[2], i[3], i[4], i[5], i[6]),
+        "linear_fp8_fwd" => linear_fp8_fwd(i[0], i[1], Some(i[2]), sc(i[3]), sc(i[4])),
+        "linear_fp8_bwd" => linear_fp8_bwd(i[0], i[1], sc(i[2]), sc(i[3]), sc(i[4]), i[5], true),
+        "linearnb_fp8_fwd" => linear_fp8_fwd(i[0], i[1], None, sc(i[2]), sc(i[3])),
+        "linearnb_fp8_bwd" => {
+            linear_fp8_bwd(i[0], i[1], sc(i[2]), sc(i[3]), sc(i[4]), i[5], false)
+        }
+        "mlp_fp8_fwd" => mlp_fp8_fwd(i[0], i[1], i[2], i[3],
+                                     [sc(i[4]), sc(i[5]), sc(i[6]), sc(i[7])]),
+        "mlp_fp8_bwd" => mlp_fp8_bwd(i[0], i[1], i[2], i[3],
+                                     [sc(i[4]), sc(i[5]), sc(i[6]), sc(i[7])],
+                                     sc(i[8]), i[9]),
+        "router_fwd" => router_fwd(i[0], i[1]),
+        "router_bwd" => router_bwd(i[0], i[1], i[2]),
+        "experts_fwd" => experts_fwd(i[0], i[1], i[2], i[3], i[4]),
+        "experts_bwd" => experts_bwd(i[0], i[1], i[2], i[3], i[4], i[5]),
+        other => bail!("native backend: unknown module family '{other}'"),
+    };
+    Ok(out)
+}
+
+#[inline]
+fn sc(t: &Tensor) -> f32 {
+    t.data[0]
+}
+
+// ---------------------------------------------------------------------------
+// f32-accumulating matmul primitives (bf16 operands live on the bf16 grid
+// already; accumulation order is the contraction index, ascending)
+// ---------------------------------------------------------------------------
+
+/// [M,K] @ [K,N] -> [M,N]
+fn mm(x: &[f32], m: usize, k: usize, n: usize, w: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for r in 0..m {
+        let xr = &x[r * k..(r + 1) * k];
+        let or = &mut out[r * n..(r + 1) * n];
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[kk * n..(kk + 1) * n];
+            for (o, &wv) in or.iter_mut().zip(wr) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// [M,K] @ [N,K]^T -> [M,N]
+fn mm_tb(x: &[f32], m: usize, k: usize, n: usize, w: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for r in 0..m {
+        let xr = &x[r * k..(r + 1) * k];
+        for c in 0..n {
+            let wr = &w[c * k..(c + 1) * k];
+            let mut acc = 0.0f32;
+            for (xv, wv) in xr.iter().zip(wr) {
+                acc += xv * wv;
+            }
+            out[r * n + c] = acc;
+        }
+    }
+    out
+}
+
+/// [K,M]^T @ [K,N] -> [M,N] (weight-gradient shape: x^T @ dy)
+fn mm_ta(x: &[f32], k: usize, m: usize, n: usize, dy: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for kk in 0..k {
+        let xr = &x[kk * m..(kk + 1) * m];
+        let dr = &dy[kk * n..(kk + 1) * n];
+        for (c, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let or = &mut out[c * n..(c + 1) * n];
+            for (o, &dv) in or.iter_mut().zip(dr) {
+                *o += xv * dv;
+            }
+        }
+    }
+    out
+}
+
+/// Sum over all leading rows: [R, N] -> [N].
+fn col_sum(x: &[f32], rows: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for r in 0..rows {
+        for (o, v) in out.iter_mut().zip(&x[r * n..(r + 1) * n]) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[inline]
+fn gelu_f(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + GELU_A * x * x * x)).tanh())
+}
+
+#[inline]
+fn gelu_grad_f(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_A * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
+}
+
+/// exp(x - max)/sum over a row, in place (jax.nn.softmax semantics).
+fn softmax_row(s: &mut [f32]) {
+    let m = s.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for v in s.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in s.iter_mut() {
+        *v /= sum;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fp8 emulation (round-to-nearest-even onto the e4m3fn / e5m2 grid)
+// ---------------------------------------------------------------------------
+
+fn round_half_even(v: f32) -> f32 {
+    let f = v.floor();
+    let d = v - f;
+    if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// Round onto an fp grid with `mant` explicit mantissa bits, minimum normal
+/// exponent `min_exp`, saturating at `maxv` (the fp8 cast semantics of the
+/// device modules).
+fn round_to_fp(x: f32, mant: i32, min_exp: i32, maxv: f32) -> f32 {
+    if x == 0.0 || x.is_nan() {
+        return x;
+    }
+    let xc = x.clamp(-maxv, maxv);
+    let biased = ((xc.abs().to_bits() >> 23) & 0xFF) as i32;
+    let mut e = if biased == 0 { -126 } else { biased - 127 };
+    if e < min_exp {
+        e = min_exp;
+    }
+    let step = (2f32).powi(e - mant);
+    (round_half_even(xc / step) * step).clamp(-maxv, maxv)
+}
+
+#[inline]
+fn qdq_e4m3(x: f32, scale: f32) -> f32 {
+    round_to_fp(x * scale, 3, -6, E4M3_MAX) / scale
+}
+
+#[inline]
+fn qdq_e5m2(x: f32, scale: f32) -> f32 {
+    round_to_fp((x * scale).clamp(-E5M2_MAX, E5M2_MAX), 2, -14, E5M2_MAX) / scale
+}
+
+fn qdq_vec_e4m3(x: &[f32], scale: f32) -> Vec<f32> {
+    x.iter().map(|&v| qdq_e4m3(v, scale)).collect()
+}
+
+fn qdq_vec_e5m2(x: &[f32], scale: f32) -> Vec<f32> {
+    x.iter().map(|&v| qdq_e5m2(v, scale)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// modules
+// ---------------------------------------------------------------------------
+
+fn embed_fwd(tokens: &Tensor, table: &Tensor, offset: &Tensor) -> Vec<Tensor> {
+    let (vp, d) = (table.dims[0], table.dims[1]);
+    let off = offset.data[0] as i64;
+    let n = tokens.numel();
+    let mut out = vec![0.0f32; n * d];
+    for (ti, &tok) in tokens.data.iter().enumerate() {
+        let idx = tok as i64 - off;
+        if idx >= 0 && (idx as usize) < vp {
+            let row = &table.data[idx as usize * d..(idx as usize + 1) * d];
+            out[ti * d..(ti + 1) * d].copy_from_slice(row);
+        }
+    }
+    let mut dims = tokens.dims.clone();
+    dims.push(d);
+    vec![Tensor::new(&dims, out, DType::Bf16)]
+}
+
+fn embed_bwd(tokens: &Tensor, table: &Tensor, offset: &Tensor, dy: &Tensor) -> Vec<Tensor> {
+    let (vp, d) = (table.dims[0], table.dims[1]);
+    let off = offset.data[0] as i64;
+    let mut dtable = vec![0.0f32; vp * d];
+    for (ti, &tok) in tokens.data.iter().enumerate() {
+        let idx = tok as i64 - off;
+        if idx >= 0 && (idx as usize) < vp {
+            let dst = &mut dtable[idx as usize * d..(idx as usize + 1) * d];
+            for (o, v) in dst.iter_mut().zip(&dy.data[ti * d..(ti + 1) * d]) {
+                *o += v;
+            }
+        }
+    }
+    vec![Tensor::new(&[vp, d], dtable, DType::Bf16)]
+}
+
+/// Per-row layernorm statistics: (mean, rstd, xhat).
+fn ln_stats(x: &[f32], rows: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut mean = vec![0.0f32; rows];
+    let mut rstd = vec![0.0f32; rows];
+    let mut xhat = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let m: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - m) * (v - m)).sum::<f32>() / d as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        mean[r] = m;
+        rstd[r] = rs;
+        for (o, &v) in xhat[r * d..(r + 1) * d].iter_mut().zip(row) {
+            *o = (v - m) * rs;
+        }
+    }
+    (mean, rstd, xhat)
+}
+
+fn ln_fwd(x: &Tensor, gamma: &Tensor, beta: &Tensor) -> Vec<Tensor> {
+    let d = *x.dims.last().unwrap();
+    let rows = x.numel() / d;
+    let (_, _, xhat) = ln_stats(&x.data, rows, d);
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        for c in 0..d {
+            out[r * d + c] = xhat[r * d + c] * gamma.data[c] + beta.data[c];
+        }
+    }
+    vec![Tensor::new(&x.dims, out, DType::Bf16)]
+}
+
+fn ln_bwd(x: &Tensor, gamma: &Tensor, _beta: &Tensor, dy: &Tensor) -> Vec<Tensor> {
+    let d = *x.dims.last().unwrap();
+    let rows = x.numel() / d;
+    let (_, rstd, xhat) = ln_stats(&x.data, rows, d);
+    let mut dx = vec![0.0f32; rows * d];
+    let mut dgamma = vec![0.0f32; d];
+    let mut dbeta = vec![0.0f32; d];
+    for r in 0..rows {
+        let dyr = &dy.data[r * d..(r + 1) * d];
+        let xhr = &xhat[r * d..(r + 1) * d];
+        let mut sum_dxhat = 0.0f32;
+        let mut sum_dxhat_xhat = 0.0f32;
+        for c in 0..d {
+            let dxh = dyr[c] * gamma.data[c];
+            sum_dxhat += dxh;
+            sum_dxhat_xhat += dxh * xhr[c];
+            dgamma[c] += dyr[c] * xhr[c];
+            dbeta[c] += dyr[c];
+        }
+        let m1 = sum_dxhat / d as f32;
+        let m2 = sum_dxhat_xhat / d as f32;
+        for c in 0..d {
+            let dxh = dyr[c] * gamma.data[c];
+            dx[r * d + c] = rstd[r] * (dxh - m1 - xhr[c] * m2);
+        }
+    }
+    vec![
+        Tensor::new(&x.dims, dx, DType::Bf16),
+        Tensor::new(&[d], dgamma, DType::Bf16),
+        Tensor::new(&[d], dbeta, DType::Bf16),
+    ]
+}
+
+fn linear_fwd(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Vec<Tensor> {
+    let (din, dout) = (w.dims[0], w.dims[1]);
+    let rows = x.numel() / din;
+    let mut y = mm(&x.data, rows, din, dout, &w.data);
+    if let Some(b) = b {
+        for r in 0..rows {
+            for c in 0..dout {
+                y[r * dout + c] += b.data[c];
+            }
+        }
+    }
+    let mut dims = x.dims.clone();
+    *dims.last_mut().unwrap() = dout;
+    vec![Tensor::new(&dims, y, DType::Bf16)]
+}
+
+fn linear_bwd(x: &Tensor, w: &Tensor, dy: &Tensor, with_bias: bool) -> Vec<Tensor> {
+    let (din, dout) = (w.dims[0], w.dims[1]);
+    let rows = x.numel() / din;
+    let dx = mm_tb(&dy.data, rows, dout, din, &w.data);
+    let dw = mm_ta(&x.data, rows, din, dout, &dy.data);
+    let mut out = vec![
+        Tensor::new(&x.dims, dx, DType::Bf16),
+        Tensor::new(&[din, dout], dw, DType::Bf16),
+    ];
+    if with_bias {
+        out.push(Tensor::new(&[dout], col_sum(&dy.data, rows, dout), DType::Bf16));
+    }
+    out
+}
+
+fn attn_fwd(q: &Tensor, k: &Tensor, v: &Tensor, mask: &Tensor) -> Vec<Tensor> {
+    let (b, h, sq, hd) = (q.dims[0], q.dims[1], q.dims[2], q.dims[3]);
+    let skv = k.dims[2];
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; b * h * sq * hd];
+    let mut s = vec![0.0f32; skv];
+    for bi in 0..b {
+        for hi in 0..h {
+            let qb = &q.data[(bi * h + hi) * sq * hd..];
+            let kb = &k.data[(bi * h + hi) * skv * hd..];
+            let vb = &v.data[(bi * h + hi) * skv * hd..];
+            let ob = (bi * h + hi) * sq * hd;
+            for qi in 0..sq {
+                let qr = &qb[qi * hd..(qi + 1) * hd];
+                for (j, sj) in s.iter_mut().enumerate() {
+                    let kr = &kb[j * hd..(j + 1) * hd];
+                    let mut acc = 0.0f32;
+                    for (a, bb) in qr.iter().zip(kr) {
+                        acc += a * bb;
+                    }
+                    *sj = acc * scale + mask.data[qi * skv + j];
+                }
+                softmax_row(&mut s);
+                // MXU-style P·V: bf16 probabilities, f32 accumulation
+                for sj in s.iter_mut() {
+                    *sj = round_bf16(*sj);
+                }
+                let or = &mut out[ob + qi * hd..ob + (qi + 1) * hd];
+                for (j, &p) in s.iter().enumerate() {
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vr = &vb[j * hd..(j + 1) * hd];
+                    for (o, &vv) in or.iter_mut().zip(vr) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+    }
+    vec![Tensor::new(&q.dims, out, DType::Bf16)]
+}
+
+fn attn_bwd(q: &Tensor, k: &Tensor, v: &Tensor, mask: &Tensor, dout: &Tensor) -> Vec<Tensor> {
+    let (b, h, sq, hd) = (q.dims[0], q.dims[1], q.dims[2], q.dims[3]);
+    let skv = k.dims[2];
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dq = vec![0.0f32; b * h * sq * hd];
+    let mut dk = vec![0.0f32; b * h * skv * hd];
+    let mut dv = vec![0.0f32; b * h * skv * hd];
+    let mut p = vec![0.0f32; sq * skv];
+    let mut ds = vec![0.0f32; sq * skv];
+    for bi in 0..b {
+        for hi in 0..h {
+            let base_q = (bi * h + hi) * sq * hd;
+            let base_kv = (bi * h + hi) * skv * hd;
+            let qb = &q.data[base_q..base_q + sq * hd];
+            let kb = &k.data[base_kv..base_kv + skv * hd];
+            let vb = &v.data[base_kv..base_kv + skv * hd];
+            let dob = &dout.data[base_q..base_q + sq * hd];
+            // scores + softmax (f32, per query row)
+            for qi in 0..sq {
+                let row = &mut p[qi * skv..(qi + 1) * skv];
+                let qr = &qb[qi * hd..(qi + 1) * hd];
+                for (j, pv) in row.iter_mut().enumerate() {
+                    let kr = &kb[j * hd..(j + 1) * hd];
+                    let mut acc = 0.0f32;
+                    for (a, bb) in qr.iter().zip(kr) {
+                        acc += a * bb;
+                    }
+                    *pv = acc * scale + mask.data[qi * skv + j];
+                }
+                softmax_row(row);
+            }
+            // dv[k] = sum_q p[q,k] * do[q]; dp = do @ v^T; ds = p*(dp-delta)*scale
+            for qi in 0..sq {
+                let pr = &p[qi * skv..(qi + 1) * skv];
+                let dor = &dob[qi * hd..(qi + 1) * hd];
+                let dsr = &mut ds[qi * skv..(qi + 1) * skv];
+                let mut delta = 0.0f32;
+                for j in 0..skv {
+                    let vr = &vb[j * hd..(j + 1) * hd];
+                    let mut dpj = 0.0f32;
+                    for (a, bb) in dor.iter().zip(vr) {
+                        dpj += a * bb;
+                    }
+                    dsr[j] = dpj;
+                    delta += dpj * pr[j];
+                }
+                for j in 0..skv {
+                    let dvj = &mut dv[base_kv + j * hd..base_kv + (j + 1) * hd];
+                    for (o, &d) in dvj.iter_mut().zip(dor) {
+                        *o += pr[j] * d;
+                    }
+                    dsr[j] = pr[j] * (dsr[j] - delta) * scale;
+                }
+            }
+            // dq = ds @ k; dk = ds^T @ q
+            for qi in 0..sq {
+                let dsr = &ds[qi * skv..(qi + 1) * skv];
+                let dqr = &mut dq[base_q + qi * hd..base_q + (qi + 1) * hd];
+                for (j, &dsv) in dsr.iter().enumerate() {
+                    if dsv == 0.0 {
+                        continue;
+                    }
+                    let kr = &kb[j * hd..(j + 1) * hd];
+                    for (o, &kv) in dqr.iter_mut().zip(kr) {
+                        *o += dsv * kv;
+                    }
+                    let dkj = &mut dk[base_kv + j * hd..base_kv + (j + 1) * hd];
+                    let qr = &qb[qi * hd..(qi + 1) * hd];
+                    for (o, &qv) in dkj.iter_mut().zip(qr) {
+                        *o += dsv * qv;
+                    }
+                }
+            }
+        }
+    }
+    vec![
+        Tensor::new(&q.dims, dq, DType::Bf16),
+        Tensor::new(&k.dims, dk, DType::Bf16),
+        Tensor::new(&v.dims, dv, DType::Bf16),
+    ]
+}
+
+/// Forward pass of the dense MLP, returning the bf16-rounded intermediates
+/// the backward needs: (h bf16, a bf16, y f32).
+fn mlp_core(x: &[f32], rows: usize, d: usize, fp: usize, w1: &[f32], b1: &[f32],
+            w2: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut h = mm(x, rows, d, fp, w1);
+    for r in 0..rows {
+        for c in 0..fp {
+            h[r * fp + c] = round_bf16(h[r * fp + c] + b1[c]);
+        }
+    }
+    let a: Vec<f32> = h.iter().map(|&v| round_bf16(gelu_f(v))).collect();
+    let y = mm(&a, rows, fp, d, w2);
+    (h, a, y)
+}
+
+fn mlp_fwd(x: &Tensor, w1: &Tensor, b1: &Tensor, w2: &Tensor) -> Vec<Tensor> {
+    let (d, fp) = (w1.dims[0], w1.dims[1]);
+    let rows = x.numel() / d;
+    let (_, _, y) = mlp_core(&x.data, rows, d, fp, &w1.data, &b1.data, &w2.data);
+    vec![Tensor::new(&x.dims, y, DType::Bf16)]
+}
+
+fn mlp_bwd(x: &Tensor, w1: &Tensor, b1: &Tensor, w2: &Tensor, dy: &Tensor) -> Vec<Tensor> {
+    let (d, fp) = (w1.dims[0], w1.dims[1]);
+    let rows = x.numel() / d;
+    let (h, a, _) = mlp_core(&x.data, rows, d, fp, &w1.data, &b1.data, &w2.data);
+    let dw2 = mm_ta(&a, rows, fp, d, &dy.data);
+    let da = mm_tb(&dy.data, rows, d, fp, &w2.data);
+    let dh: Vec<f32> = da.iter().zip(&h).map(|(&g, &hv)| g * gelu_grad_f(hv)).collect();
+    let db1 = col_sum(&dh, rows, fp);
+    let dw1 = mm_ta(&x.data, rows, d, fp, &dh);
+    let dx = mm_tb(&dh, rows, fp, d, &w1.data);
+    vec![
+        Tensor::new(&x.dims, dx, DType::Bf16),
+        Tensor::new(&[d, fp], dw1, DType::Bf16),
+        Tensor::new(&[fp], db1, DType::Bf16),
+        Tensor::new(&[fp, d], dw2, DType::Bf16),
+    ]
+}
+
+fn lmhead_fwd(x: &Tensor, table: &Tensor) -> Vec<Tensor> {
+    let (vp, d) = (table.dims[0], table.dims[1]);
+    let rows = x.numel() / d;
+    let logits = mm_tb(&x.data, rows, d, vp, &table.data);
+    let mut dims = x.dims.clone();
+    *dims.last_mut().unwrap() = vp;
+    vec![Tensor::new(&dims, logits, DType::F32)]
+}
+
+fn logits_max(logits: &Tensor) -> Vec<Tensor> {
+    let vp = *logits.dims.last().unwrap();
+    let rows = logits.numel() / vp;
+    let out: Vec<f32> = (0..rows)
+        .map(|r| logits.data[r * vp..(r + 1) * vp]
+            .iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)))
+        .collect();
+    vec![Tensor::new(&logits.dims[..logits.dims.len() - 1], out, DType::F32)]
+}
+
+fn xent_local(logits: &Tensor, targets: &Tensor, offset: &Tensor, gmax: &Tensor) -> Vec<Tensor> {
+    let vp = *logits.dims.last().unwrap();
+    let rows = logits.numel() / vp;
+    let off = offset.data[0] as i64;
+    let mut sumexp = vec![0.0f32; rows];
+    let mut tlogit = vec![0.0f32; rows];
+    for r in 0..rows {
+        let row = &logits.data[r * vp..(r + 1) * vp];
+        let g = gmax.data[r];
+        sumexp[r] = row.iter().map(|&l| (l - g).exp()).sum();
+        let idx = targets.data[r] as i64 - off;
+        if idx >= 0 && (idx as usize) < vp {
+            tlogit[r] = row[idx as usize] - g;
+        }
+    }
+    let dims = &gmax.dims;
+    vec![
+        Tensor::new(dims, sumexp, DType::F32),
+        Tensor::new(dims, tlogit, DType::F32),
+    ]
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lmhead_bwd(x: &Tensor, table: &Tensor, targets: &Tensor, offset: &Tensor,
+              gmax: &Tensor, gsum: &Tensor, scale: &Tensor) -> Vec<Tensor> {
+    let (vp, d) = (table.dims[0], table.dims[1]);
+    let rows = x.numel() / d;
+    let off = offset.data[0] as i64;
+    let mut dlogits = mm_tb(&x.data, rows, d, vp, &table.data);
+    for r in 0..rows {
+        let g = gmax.data[r];
+        let s = gsum.data[r];
+        let sc_r = scale.data[r];
+        let idx = targets.data[r] as i64 - off;
+        let row = &mut dlogits[r * vp..(r + 1) * vp];
+        for (j, l) in row.iter_mut().enumerate() {
+            let mut v = (*l - g).exp() / s;
+            if idx == j as i64 {
+                v -= 1.0;
+            }
+            *l = v * sc_r;
+        }
+    }
+    let dx = mm(&dlogits, rows, vp, d, &table.data);
+    let dtable = mm_ta(&dlogits, rows, vp, d, &x.data);
+    vec![
+        Tensor::new(&x.dims, dx, DType::Bf16),
+        Tensor::new(&[vp, d], dtable, DType::Bf16),
+    ]
+}
+
+fn linear_fp8_fwd(x: &Tensor, w: &Tensor, b: Option<&Tensor>, sx: f32, sw: f32) -> Vec<Tensor> {
+    let (din, dout) = (w.dims[0], w.dims[1]);
+    let rows = x.numel() / din;
+    let xq = qdq_vec_e4m3(&x.data, sx);
+    let wq = qdq_vec_e4m3(&w.data, sw);
+    let mut y = mm(&xq, rows, din, dout, &wq);
+    if let Some(b) = b {
+        for r in 0..rows {
+            for c in 0..dout {
+                y[r * dout + c] += b.data[c];
+            }
+        }
+    }
+    let mut dims = x.dims.clone();
+    *dims.last_mut().unwrap() = dout;
+    vec![Tensor::new(&dims, y, DType::Bf16)]
+}
+
+fn linear_fp8_bwd(x: &Tensor, w: &Tensor, sx: f32, sw: f32, sdy: f32, dy: &Tensor,
+                  with_bias: bool) -> Vec<Tensor> {
+    let (din, dout) = (w.dims[0], w.dims[1]);
+    let rows = x.numel() / din;
+    let xq = qdq_vec_e4m3(&x.data, sx);
+    let wq = qdq_vec_e4m3(&w.data, sw);
+    let dyq = qdq_vec_e5m2(&dy.data, sdy);
+    let dx = mm_tb(&dyq, rows, dout, din, &wq);
+    let dw = mm_ta(&xq, rows, din, dout, &dyq);
+    let mut out = vec![
+        Tensor::new(&x.dims, dx, DType::Bf16),
+        Tensor::new(&[din, dout], dw, DType::Bf16),
+    ];
+    if with_bias {
+        // bias grad uses the *unquantized* upstream gradient
+        out.push(Tensor::new(&[dout], col_sum(&dy.data, rows, dout), DType::Bf16));
+    }
+    out
+}
+
+fn mlp_fp8_fwd(x: &Tensor, w1: &Tensor, b1: &Tensor, w2: &Tensor,
+               s: [f32; 4]) -> Vec<Tensor> {
+    let [sx, sw1, sh, sw2] = s;
+    let (d, fp) = (w1.dims[0], w1.dims[1]);
+    let rows = x.numel() / d;
+    let (_, a, y) = mlp_fp8_core(&x.data, rows, d, fp, &w1.data, &b1.data, &w2.data,
+                                 sx, sw1, sh, sw2);
+    let amax = a.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    vec![
+        Tensor::new(&x.dims, y, DType::Bf16),
+        Tensor::scalar(amax, DType::F32),
+    ]
+}
+
+/// fp8 MLP forward internals: (h bf16, a bf16, y f32).
+#[allow(clippy::too_many_arguments)]
+fn mlp_fp8_core(x: &[f32], rows: usize, d: usize, fp: usize, w1: &[f32], b1: &[f32],
+                w2: &[f32], sx: f32, sw1: f32, sh: f32, sw2: f32)
+                -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let xq = qdq_vec_e4m3(x, sx);
+    let w1q = qdq_vec_e4m3(w1, sw1);
+    let mut h = mm(&xq, rows, d, fp, &w1q);
+    for r in 0..rows {
+        for c in 0..fp {
+            h[r * fp + c] = round_bf16(h[r * fp + c] + b1[c]);
+        }
+    }
+    let a: Vec<f32> = h.iter().map(|&v| round_bf16(gelu_f(v))).collect();
+    let aq = qdq_vec_e4m3(&a, sh);
+    let w2q = qdq_vec_e4m3(w2, sw2);
+    let y = mm(&aq, rows, fp, d, &w2q);
+    (h, a, y)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn mlp_fp8_bwd(x: &Tensor, w1: &Tensor, b1: &Tensor, w2: &Tensor, s: [f32; 4],
+               sdy: f32, dy: &Tensor) -> Vec<Tensor> {
+    let [sx, sw1, sh, sw2] = s;
+    let (d, fp) = (w1.dims[0], w1.dims[1]);
+    let rows = x.numel() / d;
+    let (h, a, _) = mlp_fp8_core(&x.data, rows, d, fp, &w1.data, &b1.data, &w2.data,
+                                 sx, sw1, sh, sw2);
+    let aq = qdq_vec_e4m3(&a, sh);
+    let w2q = qdq_vec_e4m3(&w2.data, sw2);
+    let dyq = qdq_vec_e5m2(&dy.data, sdy);
+    let da = mm_tb(&dyq, rows, d, fp, &w2q);
+    let dw2 = mm_ta(&aq, rows, fp, d, &dyq);
+    // gelu'(h) in f32, gradient rounded through bf16 then e5m2-quantized
+    let dh_b: Vec<f32> = da.iter().zip(&h)
+        .map(|(&g, &hv)| round_bf16(g * gelu_grad_f(hv)))
+        .collect();
+    let dhq = qdq_vec_e5m2(&dh_b, sdy);
+    let xq = qdq_vec_e4m3(&x.data, sx);
+    let w1q = qdq_vec_e4m3(&w1.data, sw1);
+    let dx = mm_tb(&dhq, rows, fp, d, &w1q);
+    let dw1 = mm_ta(&xq, rows, d, fp, &dhq);
+    let db1 = col_sum(&dh_b, rows, fp);
+    vec![
+        Tensor::new(&x.dims, dx, DType::Bf16),
+        Tensor::new(&[d, fp], dw1, DType::Bf16),
+        Tensor::new(&[fp], db1, DType::Bf16),
+        Tensor::new(&[fp, d], dw2, DType::Bf16),
+    ]
+}
+
+/// Top-1 router combine weights: softmax gate masked to the argmax expert.
+fn router_fwd(x: &Tensor, wr: &Tensor) -> Vec<Tensor> {
+    let (d, e) = (wr.dims[0], wr.dims[1]);
+    let rows = x.numel() / d;
+    let mut g = mm(&x.data, rows, d, e, &wr.data);
+    for r in 0..rows {
+        let row = &mut g[r * e..(r + 1) * e];
+        softmax_row(row);
+        // argmax (first max wins, jnp.argmax semantics)
+        let mut best = 0;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        for (j, v) in row.iter_mut().enumerate() {
+            if j != best {
+                *v = 0.0;
+            }
+        }
+    }
+    let mut dims = x.dims.clone();
+    *dims.last_mut().unwrap() = e;
+    vec![Tensor::new(&dims, g, DType::F32)]
+}
+
+fn router_bwd(x: &Tensor, wr: &Tensor, dcombine: &Tensor) -> Vec<Tensor> {
+    let (d, e) = (wr.dims[0], wr.dims[1]);
+    let rows = x.numel() / d;
+    let mut g = mm(&x.data, rows, d, e, &wr.data);
+    let mut dlogits = vec![0.0f32; rows * e];
+    for r in 0..rows {
+        let row = &mut g[r * e..(r + 1) * e];
+        softmax_row(row);
+        let mut best = 0;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        // combine = g * onehot(argmax); argmax is non-differentiable
+        let dg: Vec<f32> = (0..e)
+            .map(|j| if j == best { dcombine.data[r * e + j] } else { 0.0 })
+            .collect();
+        let dot: f32 = dg.iter().zip(row.iter()).map(|(a, b)| a * b).sum();
+        for j in 0..e {
+            dlogits[r * e + j] = row[j] * (dg[j] - dot);
+        }
+    }
+    let dx = mm_tb(&dlogits, rows, e, d, &wr.data);
+    let dwr = mm_ta(&x.data, rows, d, e, &dlogits);
+    vec![
+        Tensor::new(&x.dims, dx, DType::Bf16),
+        Tensor::new(&[d, e], dwr, DType::Bf16),
+    ]
+}
+
+fn experts_fwd(x: &Tensor, w1: &Tensor, b1: &Tensor, w2: &Tensor,
+               combine: &Tensor) -> Vec<Tensor> {
+    let (e, d, fp) = (w1.dims[0], w1.dims[1], w1.dims[2]);
+    let rows = x.numel() / d;
+    let mut out = vec![0.0f32; rows * d];
+    for ei in 0..e {
+        let (_, _, y) = mlp_core(&x.data, rows, d, fp,
+                                 &w1.data[ei * d * fp..(ei + 1) * d * fp],
+                                 &b1.data[ei * fp..(ei + 1) * fp],
+                                 &w2.data[ei * fp * d..(ei + 1) * fp * d]);
+        for r in 0..rows {
+            let c = combine.data[r * e + ei];
+            if c == 0.0 {
+                continue;
+            }
+            for cc in 0..d {
+                // expert output rounds through bf16 before the f32 combine
+                out[r * d + cc] += round_bf16(y[r * d + cc]) * c;
+            }
+        }
+    }
+    vec![Tensor::new(&x.dims, out, DType::Bf16)]
+}
+
+fn experts_bwd(x: &Tensor, w1: &Tensor, b1: &Tensor, w2: &Tensor, combine: &Tensor,
+               dy: &Tensor) -> Vec<Tensor> {
+    let (e, d, fp) = (w1.dims[0], w1.dims[1], w1.dims[2]);
+    let rows = x.numel() / d;
+    let mut dx = vec![0.0f32; rows * d];
+    let mut dw1 = vec![0.0f32; e * d * fp];
+    let mut db1 = vec![0.0f32; e * fp];
+    let mut dw2 = vec![0.0f32; e * fp * d];
+    let mut dcombine = vec![0.0f32; rows * e];
+    for ei in 0..e {
+        let w1e = &w1.data[ei * d * fp..(ei + 1) * d * fp];
+        let b1e = &b1.data[ei * fp..(ei + 1) * fp];
+        let w2e = &w2.data[ei * fp * d..(ei + 1) * fp * d];
+        let (h, a, y) = mlp_core(&x.data, rows, d, fp, w1e, b1e, w2e);
+        // dcombine[r, e] = sum_d y_e[r, d] * dy[r, d]  (y_e in f32 after the
+        // bf16 expert-output cast)
+        let ye: Vec<f32> = y.iter().map(|&v| round_bf16(v)).collect();
+        let mut dye = vec![0.0f32; rows * d];
+        for r in 0..rows {
+            let c = combine.data[r * e + ei];
+            let mut acc = 0.0f32;
+            for cc in 0..d {
+                acc += ye[r * d + cc] * dy.data[r * d + cc];
+                dye[r * d + cc] = dy.data[r * d + cc] * c;
+            }
+            dcombine[r * e + ei] = acc;
+        }
+        // mlp vjp with upstream dye
+        let dw2e = mm_ta(&a, rows, fp, d, &dye);
+        let da = mm_tb(&dye, rows, d, fp, w2e);
+        let dh: Vec<f32> = da.iter().zip(&h).map(|(&g, &hv)| g * gelu_grad_f(hv)).collect();
+        let db1e = col_sum(&dh, rows, fp);
+        let dw1e = mm_ta(&x.data, rows, d, fp, &dh);
+        let dxe = mm_tb(&dh, rows, fp, d, w1e);
+        for (o, v) in dx.iter_mut().zip(&dxe) {
+            *o += v;
+        }
+        dw1[ei * d * fp..(ei + 1) * d * fp].copy_from_slice(&dw1e);
+        db1[ei * fp..(ei + 1) * fp].copy_from_slice(&db1e);
+        dw2[ei * fp * d..(ei + 1) * fp * d].copy_from_slice(&dw2e);
+    }
+    vec![
+        Tensor::new(&x.dims, dx, DType::Bf16),
+        Tensor::new(&[e, d, fp], dw1, DType::Bf16),
+        Tensor::new(&[e, fp], db1, DType::Bf16),
+        Tensor::new(&[e, fp, d], dw2, DType::Bf16),
+        Tensor::new(&combine.dims, dcombine, DType::F32),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_shapes_and_transposes_agree() {
+        // x [2,3], w [3,2]
+        let x = vec![1., 2., 3., 4., 5., 6.];
+        let w = vec![1., 0., 0., 1., 1., 1.];
+        let y = mm(&x, 2, 3, 2, &w);
+        assert_eq!(y, vec![4., 5., 10., 11.]);
+        // w^T stored as [2,3]
+        let wt = vec![1., 0., 1., 0., 1., 1.];
+        assert_eq!(mm_tb(&x, 2, 3, 2, &wt), y);
+        // x^T @ x : [3,3] diagonal check
+        let g = mm_ta(&x, 2, 3, 3, &x);
+        assert_eq!(g[0], 1. * 1. + 4. * 4.);
+    }
+
+    #[test]
+    fn column_split_matmul_is_bitexact_slice() {
+        // TP column parallelism must produce literal slices of the full
+        // result — the invariant the whole differential setup rests on.
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (4, 8, 6);
+        let mut x = vec![0.0; m * k];
+        let mut w = vec![0.0; k * n];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut w, 0.2);
+        let full = mm(&x, m, k, n, &w);
+        for shard in 0..2 {
+            let ws: Vec<f32> = (0..k)
+                .flat_map(|r| w[r * n + shard * n / 2..r * n + (shard + 1) * n / 2].to_vec())
+                .collect();
+            let part = mm(&x, m, k, n / 2, &ws);
+            for r in 0..m {
+                for c in 0..n / 2 {
+                    let f = full[r * n + shard * n / 2 + c];
+                    assert_eq!(part[r * (n / 2) + c].to_bits(), f.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ln_normalizes_rows() {
+        let mut rng = Rng::new(1);
+        let mut x = vec![0.0; 4 * 32];
+        rng.fill_normal(&mut x, 2.0);
+        crate::util::bf16::round_slice_bf16(&mut x);
+        let xt = Tensor::new(&[4, 32], x, DType::Bf16);
+        let gamma = Tensor::full(&[32], 1.0, DType::Bf16);
+        let beta = Tensor::zeros(&[32], DType::Bf16);
+        let y = &ln_fwd(&xt, &gamma, &beta)[0];
+        for r in 0..4 {
+            let row = &y.data[r * 32..(r + 1) * 32];
+            let mean: f32 = row.iter().sum::<f32>() / 32.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 32.0;
+            assert!(mean.abs() < 1e-4, "row {r} mean {mean}");
+            assert!((var.sqrt() - 1.0).abs() < 1e-2, "row {r} std {}", var.sqrt());
+        }
+    }
+
+    #[test]
+    fn ln_bwd_matches_finite_difference() {
+        let d = 8;
+        let mut rng = Rng::new(2);
+        let mut xv = vec![0.0; d];
+        rng.fill_normal(&mut xv, 1.0);
+        let x = Tensor::new(&[1, 1, d], xv.clone(), DType::Bf16);
+        let gamma = Tensor::new(&[d], (0..d).map(|i| 1.0 + 0.1 * i as f32).collect(),
+                                DType::Bf16);
+        let beta = Tensor::zeros(&[d], DType::Bf16);
+        let dy = Tensor::full(&[1, 1, d], 1.0, DType::Bf16);
+        let dx = &ln_bwd(&x, &gamma, &beta, &dy)[0];
+        let f = |xs: &[f32]| -> f32 {
+            let xt = Tensor::new(&[1, 1, d], xs.to_vec(), DType::F32);
+            ln_fwd(&xt, &gamma, &beta)[0].data.iter().sum()
+        };
+        let eps = 1e-3;
+        for j in 0..d {
+            let mut xp = xv.clone();
+            xp[j] += eps;
+            let mut xm = xv.clone();
+            xm[j] -= eps;
+            let fd = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!((fd - dx.data[j]).abs() < 2e-2, "elem {j}: fd {fd} vs {}", dx.data[j]);
+        }
+    }
+
+    #[test]
+    fn attn_rows_are_shard_invariant() {
+        // computing a subset of query rows must give bit-identical rows —
+        // the property context parallelism relies on
+        let mut rng = Rng::new(3);
+        let (b, h, s, hd) = (1, 2, 8, 4);
+        let mk = |std: f32, rng: &mut Rng| {
+            let mut v = vec![0.0; b * h * s * hd];
+            rng.fill_normal(&mut v, std);
+            crate::util::bf16::round_slice_bf16(&mut v);
+            Tensor::new(&[b, h, s, hd], v, DType::Bf16)
+        };
+        let q = mk(1.0, &mut rng);
+        let k = mk(1.0, &mut rng);
+        let v = mk(1.0, &mut rng);
+        let mask = Tensor::zeros(&[s, s], DType::F32);
+        let full = &attn_fwd(&q, &k, &v, &mask)[0];
+        // take query rows 2..4 only
+        let qs = q.narrow(2, 2, 2);
+        let ms = mask.narrow(0, 2, 2);
+        let part = &attn_fwd(&qs, &k, &v, &ms)[0];
+        for bi in 0..b * h {
+            for qi in 0..2 {
+                for c in 0..hd {
+                    let fv = full.data[bi * s * hd + (qi + 2) * hd + c];
+                    let pv = part.data[bi * 2 * hd + qi * hd + c];
+                    assert_eq!(fv.to_bits(), pv.to_bits(), "row {qi} col {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fp8_grid_properties() {
+        // representable e4m3 values are fixed points
+        for v in [1.0f32, 1.125, 240.0, 448.0, -0.875] {
+            assert_eq!(round_to_fp(v, 3, -6, 448.0), v, "{v}");
+        }
+        // saturation
+        assert_eq!(round_to_fp(1000.0, 3, -6, 448.0), 448.0);
+        assert_eq!(round_to_fp(-1000.0, 3, -6, 448.0), -448.0);
+        // rounding collapses sub-step detail
+        let q = round_to_fp(1.06, 3, -6, 448.0);
+        assert!((q - 1.0).abs() < 1e-6 || (q - 1.125).abs() < 1e-6);
+        // qdq with scale is scale-consistent
+        let x = 3.7f32;
+        let s = 448.0 / 4.0;
+        let got = qdq_e4m3(x, s);
+        assert!((got - x).abs() / x < 0.07, "{got}");
+    }
+
+    #[test]
+    fn softmax_router_top1() {
+        let x = Tensor::new(&[1, 1, 2], vec![1.0, 0.5], DType::Bf16);
+        let wr = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0], DType::Bf16);
+        let c = &router_fwd(&x, &wr)[0];
+        // expert 0 has the larger logit; combine = softmax prob at argmax
+        assert!(c.data[0] > 0.5 && c.data[1] == 0.0);
+    }
+
+    #[test]
+    fn xent_local_matches_scalar_math() {
+        let logits = Tensor::new(&[1, 1, 4], vec![0.0, 1.0, 2.0, 3.0], DType::F32);
+        let targets = Tensor::new(&[1, 1], vec![2.0], DType::I32);
+        let off = Tensor::scalar(0.0, DType::I32);
+        let gmax = Tensor::new(&[1, 1], vec![3.0], DType::F32);
+        let out = xent_local(&logits, &targets, &off, &gmax);
+        let expect: f32 = (0..4).map(|j| ((j as f32) - 3.0).exp()).sum();
+        assert!((out[0].data[0] - expect).abs() < 1e-6);
+        assert!((out[1].data[0] - (2.0 - 3.0)).abs() < 1e-6);
+        // target out of shard -> tlogit 0
+        let off2 = Tensor::scalar(4.0, DType::I32);
+        let out2 = xent_local(&logits, &targets, &off2, &gmax);
+        assert_eq!(out2[1].data[0], 0.0);
+    }
+}

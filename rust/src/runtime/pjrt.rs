@@ -1,0 +1,172 @@
+//! PJRT backend (`--features pjrt`): compiles the AOT HLO-text artifacts
+//! with the vendored `xla` crate and executes them on the PJRT CPU client.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! One process-wide backend is shared by all simulated rank threads:
+//! executables are compiled once per module key and cached. The xla crate's
+//! wrappers are raw-pointer newtypes (`!Send`), but the underlying PJRT CPU
+//! client is internally synchronized; `Shared*` wrappers assert Send/Sync
+//! and a single execute mutex serializes device calls (the testbed has one
+//! CPU core — there is no parallelism to lose).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::{DType, Tensor};
+use crate::util::bf16;
+
+use super::manifest::{ModuleInfo, TensorSpec};
+
+struct SharedClient(xla::PjRtClient);
+// SAFETY: PJRT CPU client methods are thread-safe (the same client object
+// serves concurrent JAX threads); we never move the raw pointer's ownership
+// across threads, only share &self.
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+
+struct SharedExec(xla::PjRtLoadedExecutable);
+// SAFETY: see SharedClient; executions are additionally serialized by
+// `exec_lock`.
+unsafe impl Send for SharedExec {}
+unsafe impl Sync for SharedExec {}
+
+pub struct PjrtBackend {
+    client: SharedClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<SharedExec>>>,
+    exec_lock: Mutex<()>,
+}
+
+impl PjrtBackend {
+    pub fn new(dir: PathBuf) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtBackend {
+            client: SharedClient(client),
+            dir,
+            cache: Mutex::new(HashMap::new()),
+            exec_lock: Mutex::new(()),
+        })
+    }
+
+    fn compiled(&self, key: &str, info: &ModuleInfo) -> Result<(Arc<SharedExec>, f64)> {
+        if let Some(e) = self.cache.lock().unwrap().get(key) {
+            return Ok((e.clone(), 0.0));
+        }
+        let path = self.dir.join(&info.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling '{key}': {e:?}"))?;
+        let exe = Arc::new(SharedExec(exe));
+        let dt = t0.elapsed().as_secs_f64();
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(key.to_string())
+            .or_insert_with(|| exe.clone());
+        Ok((exe, dt))
+    }
+
+    /// Execute a pre-validated module call. Returns the raw output tensors
+    /// plus (compile seconds, marshal seconds) for the stats ledger.
+    pub fn run(&self, key: &str, info: &ModuleInfo, inputs: &[&Tensor])
+               -> Result<(Vec<Tensor>, f64, f64)> {
+        let (exe, compile_dt) = self.compiled(key, info)?;
+
+        let tm = Instant::now();
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+        let marshal_in = tm.elapsed().as_secs_f64();
+
+        let guard = self.exec_lock.lock().unwrap();
+        let result = exe
+            .0
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing '{key}': {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of '{key}': {e:?}"))?;
+        drop(guard);
+
+        let tm2 = Instant::now();
+        // aot.py lowers with return_tuple=True: always a tuple, even for one
+        // output.
+        let outs = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of '{key}': {e:?}"))?;
+        let tensors: Vec<Tensor> = outs
+            .iter()
+            .zip(&info.outputs)
+            .map(|(l, spec)| literal_to_tensor(l, spec))
+            .collect::<Result<_>>()?;
+        let marshal = marshal_in + tm2.elapsed().as_secs_f64();
+        Ok((tensors, compile_dt, marshal))
+    }
+}
+
+/// Host tensor -> device literal, marshaling through the device dtype.
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let mk = |ty, bytes: &[u8]| {
+        xla::Literal::create_from_shape_and_untyped_data(ty, &t.dims, bytes)
+            .map_err(|e| anyhow!("literal create: {e:?}"))
+    };
+    match t.dtype {
+        DType::F32 => {
+            let bytes = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            mk(xla::ElementType::F32, bytes)
+        }
+        DType::Bf16 => {
+            let packed = bf16::pack_bf16(&t.data);
+            let bytes = unsafe {
+                std::slice::from_raw_parts(packed.as_ptr() as *const u8, packed.len() * 2)
+            };
+            mk(xla::ElementType::Bf16, bytes)
+        }
+        DType::I32 => {
+            let ints: Vec<i32> = t.data.iter().map(|&x| x as i32).collect();
+            let bytes = unsafe {
+                std::slice::from_raw_parts(ints.as_ptr() as *const u8, ints.len() * 4)
+            };
+            mk(xla::ElementType::S32, bytes)
+        }
+    }
+}
+
+/// Device literal -> host tensor (f32 storage), checking the ABI spec.
+fn literal_to_tensor(l: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+    let shape = l.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = match spec.dtype {
+        DType::I32 => {
+            let v = l
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("literal i32 read: {e:?}"))?;
+            v.into_iter().map(|x| x as f32).collect()
+        }
+        _ => {
+            // bf16 -> f32 conversion is exact; f32 -> f32 is identity.
+            let conv = l
+                .convert(xla::PrimitiveType::F32)
+                .map_err(|e| anyhow!("literal convert: {e:?}"))?;
+            conv.to_vec::<f32>()
+                .map_err(|e| anyhow!("literal f32 read: {e:?}"))?
+        }
+    };
+    Ok(Tensor::new(&dims, data, spec.dtype))
+}
