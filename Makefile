@@ -1,13 +1,18 @@
 # Tier-1 verify and artifact pipeline.
 #
-#   make artifacts   build the AOT HLO artifacts (python + jax required)
-#   make verify      artifacts (if missing) + cargo build --release + cargo test -q
-#   make test        cargo test only (assumes artifacts exist)
+#   make artifacts     build the AOT HLO artifacts (python + jax required)
+#   make verify        artifacts (if missing) + cargo build --release + cargo test -q
+#   make test          cargo test only (assumes artifacts exist)
+#   make bench-smoke   every bench in short mode; writes BENCH_<name>.json
+#                      (the per-PR perf trajectory; CI uploads them)
 #   make clean-artifacts
 
 PYTHON ?= python
 
-.PHONY: verify test artifacts clean-artifacts
+BENCHES = table1_bugs fig1_loss_curves fig7_thresholds fig8_bug_vs_fp \
+          fig9_fp8 ablation_thresholds overhead_naive_vs_ttrace theorem_bounds
+
+.PHONY: verify test bench-smoke artifacts clean-artifacts
 
 # Rebuild the manifest when any lowering input changes; aot.py is
 # incremental, so unchanged module keys are skipped.
@@ -22,6 +27,15 @@ verify: artifacts/manifest.json
 
 test:
 	cargo test -q
+
+# Short-mode run of each paper bench with per-stage wall clock dumped to
+# BENCH_<name>.json in the repo root. Knobs: TTRACE_THREADS, BENCH_JSON_DIR.
+bench-smoke: artifacts/manifest.json
+	@for b in $(BENCHES); do \
+	  echo "== bench $$b (smoke) =="; \
+	  BENCH_SMOKE=1 cargo bench --bench $$b || exit 1; \
+	done
+	@echo "-- bench trajectory --" && ls -l BENCH_*.json
 
 clean-artifacts:
 	rm -rf artifacts

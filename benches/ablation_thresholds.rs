@@ -11,17 +11,24 @@ use ttrace::dist::Topology;
 use ttrace::model::{ParCfg, TINY};
 use ttrace::runtime::Executor;
 use ttrace::ttrace::{ttrace_check, CheckCfg};
-use ttrace::util::bench::{fmt_s, time_once, Table};
+use ttrace::util::bench::{fmt_s, smoke, time_once, BenchJson, Table};
 
 fn main() {
     let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
     let mut p = ParCfg::single();
     p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
     p.sp = true;
+    let mut bj = BenchJson::new("ablation_thresholds");
 
+    let safeties: &[f64] = if smoke() {
+        &[4.0, 8.0] // short mode: the default + one neighbour
+    } else {
+        &[2.0, 4.0, 8.0, 16.0, 32.0, 64.0]
+    };
     let mut t = Table::new(&["safety", "clean tp2+sp", "bug12 detected",
                              "margin(min fail rel/thr)"]);
-    for safety in [2.0, 4.0, 8.0, 16.0, 32.0, 64.0] {
+    let sweep_t0 = std::time::Instant::now();
+    for &safety in safeties {
         let cfg = CheckCfg { safety, ..CheckCfg::default() };
         let clean = ttrace_check(&TINY, &p, 2, &exec, &GenData, BugSet::none(),
                                  &cfg, false).unwrap();
@@ -36,6 +43,7 @@ fn main() {
                 if !buggy.outcome.pass { "yes" } else { "MISSED" }.into(),
                 if margin.is_finite() { format!("{margin:.1}x") } else { "-".into() }]);
     }
+    bj.stage("safety_sweep", sweep_t0.elapsed().as_secs_f64());
     t.print();
     t.write_csv("results/ablation_thresholds.csv").unwrap();
 
@@ -45,6 +53,8 @@ fn main() {
         ttrace_check(&TINY, &p, 2, &exec, &GenData, BugSet::none(), &cfg, false)
             .unwrap()
     });
+    bj.stage("check_pipeline", total);
     println!("\nfull check pipeline (estimate + 2 traced runs + diff): {}",
              fmt_s(total));
+    bj.write().unwrap();
 }

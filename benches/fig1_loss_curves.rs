@@ -10,13 +10,15 @@ use ttrace::dist::Topology;
 use ttrace::model::{step::run_training_full, Engine, ParCfg, TINY};
 use ttrace::runtime::Executor;
 use ttrace::ttrace::NoopHooks;
-use ttrace::util::bench::Table;
+use ttrace::util::bench::{smoke_or, BenchJson, Table};
 
 fn main() {
     let iters: u64 = std::env::var("FIG1_ITERS").ok()
-        .and_then(|s| s.parse().ok()).unwrap_or(300);
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(smoke_or(300, 30) as u64);
     let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
     let data = CorpusData::builtin(TINY.v);
+    let mut bj = BenchJson::new("fig1_loss_curves");
 
     let run = |bugs: BugSet| -> (Vec<f64>, Vec<f64>) {
         let mut p = ParCfg::single();
@@ -29,9 +31,10 @@ fn main() {
     };
 
     eprintln!("fig1: training correct run ({iters} iters)...");
-    let (correct, norm_ok) = run(BugSet::none());
+    let (correct, norm_ok) = bj.time_stage("correct_run", || run(BugSet::none()));
     eprintln!("fig1: training buggy run (bug 1)...");
-    let (buggy, norm_bug) = run(BugSet::one(BugId::B1TpEmbeddingMask));
+    let (buggy, norm_bug) =
+        bj.time_stage("buggy_run", || run(BugSet::one(BugId::B1TpEmbeddingMask)));
 
     let mut t = Table::new(&["iter", "loss_correct", "loss_buggy", "rel_gap",
                              "gnorm_correct", "gnorm_buggy"]);
@@ -57,4 +60,5 @@ fn main() {
                           iterations — the bug stays silent in the loss curve"),
     }
     println!("wrote results/fig1_loss_curves.csv");
+    bj.write().unwrap();
 }

@@ -14,17 +14,20 @@ use ttrace::model::{ParCfg, SMALL};
 use ttrace::runtime::Executor;
 use ttrace::ttrace::canonical::names;
 use ttrace::ttrace::threshold;
-use ttrace::util::bench::Table;
+use ttrace::util::bench::{smoke_or, BenchJson, Table};
 use ttrace::util::bf16::EPS_BF16;
 
 fn main() {
     let layers: usize = std::env::var("FIG7_LAYERS").ok()
-        .and_then(|s| s.parse().ok()).unwrap_or(24);
+        .and_then(|s| s.parse().ok()).unwrap_or_else(|| smoke_or(24, 6));
     let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
     let p = ParCfg::single();
+    let mut bj = BenchJson::new("fig7_thresholds");
     eprintln!("fig7: estimating FP round-off for a {layers}-layer model...");
-    let est = threshold::estimate(&SMALL, &p, layers, &exec, &GenData,
-                                  EPS_BF16, 1).unwrap();
+    let est = bj.time_stage("estimate", || {
+        threshold::estimate(&SMALL, &p, layers, &exec, &GenData, EPS_BF16, 1)
+            .unwrap()
+    });
     let eps = EPS_BF16 as f64;
 
     let col = |key: &str, rel: &HashMap<String, f64>| -> String {
@@ -68,4 +71,5 @@ fn main() {
     tc.write_csv("results/fig7c_param_grads.csv").unwrap();
     println!("\nwrote results/fig7{{a,b,c}}_*.csv — gradual growth (no \
               exponential blow-up) indicates smooth layers (Thm 5.1/5.2)");
+    bj.write().unwrap();
 }

@@ -17,7 +17,7 @@ use ttrace::runtime::Executor;
 use ttrace::ttrace::canonical::names;
 use ttrace::ttrace::collector::{Collector, Mode};
 use ttrace::ttrace::{threshold, reference_of};
-use ttrace::util::bench::Table;
+use ttrace::util::bench::{smoke_or, BenchJson, Table};
 use ttrace::util::bf16::EPS_BF16;
 
 fn collect(m: &ttrace::model::ModelCfg, p: &ParCfg, layers: usize,
@@ -30,9 +30,10 @@ fn collect(m: &ttrace::model::ModelCfg, p: &ParCfg, layers: usize,
 
 fn main() {
     let layers: usize = std::env::var("FIG8_LAYERS").ok()
-        .and_then(|s| s.parse().ok()).unwrap_or(8);
+        .and_then(|s| s.parse().ok()).unwrap_or_else(|| smoke_or(8, 4));
     let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
     let eps = EPS_BF16 as f64;
+    let mut bj = BenchJson::new("fig8_bug_vs_fp");
 
     let mut cand_p = ParCfg::single();
     cand_p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
@@ -41,18 +42,32 @@ fn main() {
     let ref_p = reference_of(&cand_p);
 
     eprintln!("fig8: reference / estimate / correct-tp2 / bug1 / bug11 runs...");
-    let est = threshold::estimate(&SMALL, &ref_p, layers, &exec, &GenData,
-                                  EPS_BF16, 1).unwrap();
-    let reference = collect(&SMALL, &ref_p, layers, &exec, BugSet::none());
-    let correct = collect(&SMALL, &cand_p, layers, &exec, BugSet::none());
-    let bug1 = collect(&SMALL, &cand_p, layers, &exec,
-                       BugSet::one(BugId::B1TpEmbeddingMask));
-    let bug11 = collect(&SMALL, &bug11_p, layers, &exec,
-                        BugSet::one(BugId::B11TpOverlapGrads));
+    let est = bj.time_stage("estimate", || {
+        threshold::estimate(&SMALL, &ref_p, layers, &exec, &GenData,
+                            EPS_BF16, 1).unwrap()
+    });
+    let reference = bj.time_stage("reference", || {
+        collect(&SMALL, &ref_p, layers, &exec, BugSet::none())
+    });
+    let correct = bj.time_stage("correct_tp2", || {
+        collect(&SMALL, &cand_p, layers, &exec, BugSet::none())
+    });
+    let bug1 = bj.time_stage("bug1", || {
+        collect(&SMALL, &cand_p, layers, &exec,
+                BugSet::one(BugId::B1TpEmbeddingMask))
+    });
+    let bug11 = bj.time_stage("bug11", || {
+        collect(&SMALL, &bug11_p, layers, &exec,
+                BugSet::one(BugId::B11TpOverlapGrads))
+    });
 
-    let rel_correct = threshold::trace_rel(&reference, &correct).unwrap();
-    let rel_bug1 = threshold::trace_rel(&reference, &bug1).unwrap();
-    let rel_bug11 = threshold::trace_rel(&reference, &bug11).unwrap();
+    let (rels, rel_dt) = ttrace::util::bench::time_once(|| {
+        (threshold::trace_rel(&reference, &correct).unwrap(),
+         threshold::trace_rel(&reference, &bug1).unwrap(),
+         threshold::trace_rel(&reference, &bug11).unwrap())
+    });
+    bj.stage("trace_rel", rel_dt);
+    let (rel_correct, rel_bug1, rel_bug11) = rels;
 
     let col = |rel: &HashMap<String, f64>, key: &str| -> String {
         rel.get(key).map(|r| format!("{:.2}", r / eps)).unwrap_or("-".into())
@@ -84,4 +99,5 @@ fn main() {
             &rel_bug11);
     println!("bug errors sit orders of magnitude above both FP curves \
               (paper: ~100x eps vs ~eps)");
+    bj.write().unwrap();
 }

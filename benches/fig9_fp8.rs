@@ -9,18 +9,21 @@ use ttrace::model::{ParCfg, SMALL};
 use ttrace::runtime::Executor;
 use ttrace::ttrace::canonical::names;
 use ttrace::ttrace::threshold;
-use ttrace::util::bench::Table;
+use ttrace::util::bench::{smoke_or, BenchJson, Table};
 use ttrace::util::bf16::EPS_BF16;
 
 fn main() {
     let layers: usize = std::env::var("FIG9_LAYERS").ok()
-        .and_then(|s| s.parse().ok()).unwrap_or(16);
+        .and_then(|s| s.parse().ok()).unwrap_or_else(|| smoke_or(16, 4));
     let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
     let mut p = ParCfg::single();
     p.fp8 = true;
+    let mut bj = BenchJson::new("fig9_fp8");
     eprintln!("fig9: estimating FP8-model round-off for {layers} layers...");
-    let est = threshold::estimate(&SMALL, &p, layers, &exec, &GenData,
-                                  EPS_BF16, 1).unwrap();
+    let est = bj.time_stage("estimate", || {
+        threshold::estimate(&SMALL, &p, layers, &exec, &GenData, EPS_BF16, 1)
+            .unwrap()
+    });
     let eps = EPS_BF16 as f64;
 
     let mut t = Table::new(&["layer", "Attn(X)/eps", "MLP/eps", "Layer(X)/eps",
@@ -50,4 +53,5 @@ fn main() {
     println!("\nmax layer-to-layer growth ratio of Layer(X): {max_ratio_growth:.2} \
               — {} (exponential blow-up would be a sustained ratio >> 1)",
              if max_ratio_growth < 3.0 { "bounded / smooth" } else { "CHECK" });
+    bj.write().unwrap();
 }

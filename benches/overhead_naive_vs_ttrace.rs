@@ -1,8 +1,9 @@
 //! E6 / §6.4 system overhead: wall-clock of the naive practice (train
 //! reference + candidate until the loss curves show a 3% gap) vs TTrace
 //! (one instrumented iteration + differential check). The paper reports
-//! 6h40m vs 54s on 8xL40S; here both sides run on the same 1-core testbed
-//! so the *ratio* is the reproducible quantity.
+//! 6h40m vs 54s on 8xL40S; here both sides run on the same testbed so the
+//! *ratio* is the reproducible quantity. `BENCH_SMOKE=1` shortens the
+//! probe window; `OVH_ITERS` overrides it either way.
 
 use ttrace::bugs::{BugId, BugSet};
 use ttrace::data::CorpusData;
@@ -10,15 +11,17 @@ use ttrace::dist::Topology;
 use ttrace::model::{mean_losses, run_training, Engine, ParCfg, TINY};
 use ttrace::runtime::Executor;
 use ttrace::ttrace::{ttrace_check, CheckCfg, NoopHooks};
-use ttrace::util::bench::{fmt_s, time_once, Table};
+use ttrace::util::bench::{fmt_s, smoke_or, time_once, BenchJson, Table};
 
 fn main() {
     let probe_iters: u64 = std::env::var("OVH_ITERS").ok()
-        .and_then(|s| s.parse().ok()).unwrap_or(150);
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(smoke_or(150, 20) as u64);
     let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
     let data = CorpusData::builtin(TINY.v);
     let mut p = ParCfg::single();
     p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+    let mut bj = BenchJson::new("overhead_naive_vs_ttrace");
 
     // --- naive practice: train both, watch the loss gap ---
     eprintln!("overhead: naive practice ({probe_iters} iters x 2 runs)...");
@@ -30,6 +33,7 @@ fn main() {
         let bug = mean_losses(&run_training(&e_bug, &data, &NoopHooks, probe_iters));
         ok.iter().zip(&bug).position(|(a, b)| ((a - b).abs() / a) > 0.03)
     });
+    bj.stage("naive_probe", naive_s);
     let per_iter = naive_s / (probe_iters as f64 * 2.0);
 
     // --- TTrace: one iteration + check ---
@@ -39,6 +43,7 @@ fn main() {
                      BugSet::one(BugId::B1TpEmbeddingMask),
                      &CheckCfg::default(), false).unwrap()
     });
+    bj.stage("ttrace_check", ttrace_s);
 
     let mut t = Table::new(&["method", "wall clock", "verdict"]);
     let naive_verdict = match naive_out {
@@ -53,6 +58,7 @@ fn main() {
             format!("detected={}", !run.outcome.pass)]);
     t.print();
     t.write_csv("results/overhead.csv").unwrap();
+    bj.write().unwrap();
     println!("\nspeedup (probe window vs TTrace): {:.1}x; \
               per-iteration training cost {}; paper reports 6h40m vs 54s (~440x)",
              naive_s / ttrace_s, fmt_s(per_iter));

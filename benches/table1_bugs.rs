@@ -1,16 +1,19 @@
 //! E2 / Table 1: run TTrace against all 14 injected silent bugs (each in
 //! its native parallel configuration) and print the detection/localization
 //! table, followed by the clean-configuration sweep (no false positives).
+//! `BENCH_SMOKE=1` skips the clean sweep (the bug table is the core signal).
 
 use ttrace::bugs::table1::{run_all, run_clean_sweep};
 use ttrace::model::TINY;
 use ttrace::runtime::Executor;
-use ttrace::util::bench::{fmt_s, time_once, Table};
+use ttrace::util::bench::{fmt_s, smoke, time_once, BenchJson, Table};
 
 fn main() {
     let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let mut bj = BenchJson::new("table1_bugs");
 
     let (rows, dt) = time_once(|| run_all(&TINY, 2, &exec).unwrap());
+    bj.stage("bug_table", dt);
     let mut t = Table::new(&["ID", "New", "Type", "Description", "Impact",
                              "Config", "Detected", "Localized at", "Loc ok"]);
     for r in &rows {
@@ -29,12 +32,18 @@ fn main() {
     let detected = rows.iter().filter(|r| r.detected).count();
     println!("\n{detected}/14 bugs detected in {}", fmt_s(dt));
 
-    println!("\nclean sweep (same configs, no bug armed — §6.2):");
-    let sweep = run_clean_sweep(&TINY, 2, &exec).unwrap();
-    let mut t2 = Table::new(&["config", "verdict"]);
-    for (cfg, pass) in &sweep {
-        t2.row(&[cfg.clone(),
-                 if *pass { "PASS" } else { "FALSE POSITIVE" }.into()]);
+    if smoke() {
+        println!("\n(smoke mode: clean sweep skipped)");
+    } else {
+        println!("\nclean sweep (same configs, no bug armed — §6.2):");
+        let (sweep, sweep_dt) = time_once(|| run_clean_sweep(&TINY, 2, &exec).unwrap());
+        bj.stage("clean_sweep", sweep_dt);
+        let mut t2 = Table::new(&["config", "verdict"]);
+        for (cfg, pass) in &sweep {
+            t2.row(&[cfg.clone(),
+                     if *pass { "PASS" } else { "FALSE POSITIVE" }.into()]);
+        }
+        t2.print();
     }
-    t2.print();
+    bj.write().unwrap();
 }

@@ -10,7 +10,7 @@ use ttrace::model::{ParCfg, SMALL};
 use ttrace::runtime::Executor;
 use ttrace::ttrace::canonical::names;
 use ttrace::ttrace::threshold;
-use ttrace::util::bench::Table;
+use ttrace::util::bench::{smoke_or, BenchJson, Table};
 use ttrace::util::bf16::EPS_BF16;
 
 /// least-squares slope of y over x
@@ -25,12 +25,15 @@ fn slope(xs: &[f64], ys: &[f64]) -> f64 {
 
 fn main() {
     let layers: usize = std::env::var("THM_LAYERS").ok()
-        .and_then(|s| s.parse().ok()).unwrap_or(24);
+        .and_then(|s| s.parse().ok()).unwrap_or_else(|| smoke_or(24, 6));
     let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
     let p = ParCfg::single();
+    let mut bj = BenchJson::new("theorem_bounds");
     eprintln!("theorem_bounds: estimating over {layers} layers...");
-    let est = threshold::estimate(&SMALL, &p, layers, &exec, &GenData,
-                                  EPS_BF16, 1).unwrap();
+    let est = bj.time_stage("estimate", || {
+        threshold::estimate(&SMALL, &p, layers, &exec, &GenData, EPS_BF16, 1)
+            .unwrap()
+    });
     let eps = EPS_BF16 as f64;
 
     // Thm 5.2: activation rel-err vs depth
@@ -84,4 +87,5 @@ fn main() {
     }
     csv.write_csv("results/theorem_bounds.csv").unwrap();
     println!("wrote results/theorem_bounds.csv");
+    bj.write().unwrap();
 }

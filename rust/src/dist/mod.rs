@@ -21,9 +21,25 @@
 //! of dp-rank 1), so every key embeds the coordinates the group holds
 //! fixed. `comm::Comm` appends a per-group sequence number on top.
 
+use std::cell::Cell;
+
 use anyhow::{bail, Result};
 
 use crate::comm::{Comm, World};
+
+thread_local! {
+    /// The simulated rank executing on this OS thread (set by `run_spmd`).
+    static CURRENT_RANK: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// The simulated rank bound to the current thread, if any. `run_spmd` binds
+/// one rank per worker thread for the duration of the rank closure; code
+/// running outside `run_spmd` (tests, single-threaded tools) sees `None`.
+/// The trace collector uses this to keep per-rank lock-free buffers and to
+/// order merged trace entries deterministically by rank.
+pub fn current_rank() -> Option<usize> {
+    CURRENT_RANK.with(|c| c.get())
+}
 
 /// The 4D (+ virtual pipeline) parallel topology of a training run.
 ///
@@ -199,11 +215,24 @@ where
     let n = topo.world();
     let world = World::new(n);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    // Tell the kernel thread pool how many rank threads are live so nested
+    // (rank x kernel) parallelism divides — not multiplies — the CPU. The
+    // Drop guard keeps the counter balanced even if a rank panics (the test
+    // harness catches panics and the process lives on).
+    struct RankGuard(usize);
+    impl Drop for RankGuard {
+        fn drop(&mut self) {
+            crate::util::par::exit_ranks(self.0);
+        }
+    }
+    crate::util::par::enter_ranks(n);
+    let _guard = RankGuard(n);
     std::thread::scope(|s| {
         for (rank, slot) in out.iter_mut().enumerate() {
             let world = world.clone();
             let f = &f;
             s.spawn(move || {
+                CURRENT_RANK.with(|c| c.set(Some(rank)));
                 let ctx = RankCtx::new(topo, rank, Comm::new(world));
                 *slot = Some(f(&ctx));
             });

@@ -23,15 +23,19 @@ impl<'a> Engine<'a> {
     /// rank 0 records a partial entry to avoid double-counting in the sum.
     pub(crate) fn acc_grad(&self, ctx: &RankCtx, st: &mut RankState,
                            hooks: &dyn Hooks, iter: u64, micro: u32,
-                           name: &str, grad: &Tensor) {
+                           name: &str, grad: Tensor) {
         self.acc_grad_as(ctx, st, hooks, iter, micro, name, name, grad);
     }
 
     /// Like `acc_grad` but records under a different canonical module name
     /// (the tied LM-head contribution to the embedding grad).
+    ///
+    /// Takes the gradient by value: after accumulation the buffer moves
+    /// into the trace (`record_owned`), so the per-micro ParamGrad entries
+    /// — the most numerous trace kind — never clone a tensor.
     pub(crate) fn acc_grad_as(&self, ctx: &RankCtx, st: &mut RankState,
                               hooks: &dyn Hooks, iter: u64, micro: u32,
-                              record_as: &str, name: &str, grad: &Tensor) {
+                              record_as: &str, name: &str, grad: Tensor) {
         use crate::model::params::GradSync;
         let topo = self.p.topo;
         let p = st.params.get_mut(name);
@@ -41,12 +45,16 @@ impl<'a> Engine<'a> {
         let tp_duplicates =
             topo.tp > 1 && p.sync != GradSync::Sharded && !seq_sharded_over_tp;
         let suppress = partial && tp_duplicates && ctx.coord.tp != 0;
+        p.accumulate(&grad);
         if !suppress {
-            let spec = if partial { p.spec.clone().as_partial() } else { p.spec.clone() };
-            hooks.record(&CanonId::new(iter, micro, Kind::ParamGrad, record_as),
-                         grad, &spec);
+            let spec = if partial {
+                p.spec.clone().as_partial()
+            } else {
+                p.spec.clone()
+            };
+            hooks.record_owned(&CanonId::new(iter, micro, Kind::ParamGrad, record_as),
+                               grad, &spec);
         }
-        p.accumulate(grad);
     }
 
     /// The per-token loss-gradient scale. Correct semantics: every token of
@@ -81,7 +89,7 @@ impl<'a> Engine<'a> {
         let offset = Tensor::scalar((self.sh.vp * ctx.coord.tp) as f32, DType::I32);
         let table = st.params.model("embedding.word_embeddings.weight").clone();
         let mut outs = self.run_mod(
-            &self.sh.k_lmhead_bwd(),
+            &self.keys.lmhead_bwd,
             &[&tape.x_head, &table, &tape.targets, &offset, &tape.gmax,
               &tape.gsum, &scale]);
         let dtable = outs.remove(1);
@@ -91,7 +99,7 @@ impl<'a> Engine<'a> {
         // Recorded under its own id — the embedding's own ParamGrad entry is
         // the scatter-add from embed_bwd.
         self.acc_grad_as(ctx, st, hooks, iter, micro, "output_layer.weight",
-                         "embedding.word_embeddings.weight", &dtable);
+                         "embedding.word_embeddings.weight", dtable);
 
         // bwd of the sp all-gather before the head: reduce-scatter; the
         // vocab-parallel dx is a partial sum over tp -> all-reduce without sp
@@ -109,15 +117,15 @@ impl<'a> Engine<'a> {
         // final layernorm backward
         let gw = st.params.model("final_layernorm.weight").clone();
         let gb = st.params.model("final_layernorm.bias").clone();
-        let mut ln_outs = self.run_mod(&self.sh.k_ln_bwd(),
+        let mut ln_outs = self.run_mod(&self.keys.ln_bwd,
                                        &[&tape.resid, &gw, &gb, &d_ln_out]);
         let dbeta = ln_outs.remove(2);
         let dgamma = ln_outs.remove(1);
         let dresid = ln_outs.remove(0);
         self.rec(hooks, iter, micro, Kind::ActGrad, &names::final_ln(),
                  &dresid, self.spec_sp(ctx));
-        self.acc_grad(ctx, st, hooks, iter, micro, "final_layernorm.weight", &dgamma);
-        self.acc_grad(ctx, st, hooks, iter, micro, "final_layernorm.bias", &dbeta);
+        self.acc_grad(ctx, st, hooks, iter, micro, "final_layernorm.weight", dgamma);
+        self.acc_grad(ctx, st, hooks, iter, micro, "final_layernorm.bias", dbeta);
         dresid
     }
 
@@ -164,7 +172,7 @@ impl<'a> Engine<'a> {
             let w2 = st.params.model(&format!("{pre}.mlp.experts.fc2.weight")).clone();
             let combine = inner.combine_full.as_ref().unwrap();
             let mut outs = self.run_mod(
-                &self.sh.k_experts_bwd(),
+                &self.keys.experts_bwd,
                 &[&inner.mlp_in, &w1, &b1, &w2, combine, &d_mlp_red]);
             let dcombine = outs.remove(4);
             let dw2 = outs.remove(3);
@@ -172,11 +180,11 @@ impl<'a> Engine<'a> {
             let dw1 = outs.remove(1);
             let dx = outs.remove(0);
             self.acc_grad(ctx, st, hooks, iter, micro,
-                          &format!("{pre}.mlp.experts.fc1.weight"), &dw1);
+                          &format!("{pre}.mlp.experts.fc1.weight"), dw1);
             self.acc_grad(ctx, st, hooks, iter, micro,
-                          &format!("{pre}.mlp.experts.fc1.bias"), &db1);
+                          &format!("{pre}.mlp.experts.fc1.bias"), db1);
             self.acc_grad(ctx, st, hooks, iter, micro,
-                          &format!("{pre}.mlp.experts.fc2.weight"), &dw2);
+                          &format!("{pre}.mlp.experts.fc2.weight"), dw2);
             // bwd of the sp all-gather of combine: reduce-scatter (f32)
             let dcombine_local = if self.p.sp {
                 self.sp_scatter_grad(ctx, &dcombine, crate::comm::RedPrec::F32)
@@ -184,14 +192,14 @@ impl<'a> Engine<'a> {
                 dcombine
             };
             let wr = st.params.model(&format!("{pre}.mlp.router.weight")).clone();
-            let mut r_outs = self.run_mod(&self.sh.k_router_bwd(),
+            let mut r_outs = self.run_mod(&self.keys.router_bwd,
                                           &[&inner.ln2_out, &wr, &dcombine_local]);
             let dwr = r_outs.remove(1);
             let dxr = r_outs.remove(0);
             self.rec(hooks, iter, micro, Kind::ActGrad, &names::router(layer),
                      &dxr, self.spec_sp(ctx));
             self.acc_grad(ctx, st, hooks, iter, micro,
-                          &format!("{pre}.mlp.router.weight"), &dwr);
+                          &format!("{pre}.mlp.router.weight"), dwr);
             (dx, Some(dxr))
         } else {
             let w1 = st.params.model(&format!("{pre}.mlp.fc1.weight")).clone();
@@ -201,7 +209,7 @@ impl<'a> Engine<'a> {
                 let s = &inner.scales; // [qkv sx,sw, proj sx,sw, mlp sx,sw1,sh,sw2]
                 let sdy = Self::fp8_scale_e5m2(self.fp8_amax(ctx, &d_mlp_red));
                 let mut outs = self.run_mod(
-                    &self.sh.k_mlp_fp8_bwd(),
+                    &self.keys.mlp_fp8_bwd,
                     &[&inner.mlp_in, &w1, &b1, &w2,
                       &Tensor::scalar(s[4], DType::F32),
                       &Tensor::scalar(s[5], DType::F32),
@@ -211,16 +219,16 @@ impl<'a> Engine<'a> {
                 (outs.remove(0), outs.remove(0), outs.remove(0), outs.remove(0))
             } else {
                 let mut outs = self.run_mod(
-                    &self.sh.k_mlp_bwd(),
+                    &self.keys.mlp_bwd,
                     &[&inner.mlp_in, &w1, &b1, &w2, &d_mlp_red]);
                 (outs.remove(0), outs.remove(0), outs.remove(0), outs.remove(0))
             };
             self.acc_grad(ctx, st, hooks, iter, micro,
-                          &format!("{pre}.mlp.fc1.weight"), &dw1);
+                          &format!("{pre}.mlp.fc1.weight"), dw1);
             self.acc_grad(ctx, st, hooks, iter, micro,
-                          &format!("{pre}.mlp.fc1.bias"), &db1);
+                          &format!("{pre}.mlp.fc1.bias"), db1);
             self.acc_grad(ctx, st, hooks, iter, micro,
-                          &format!("{pre}.mlp.fc2.weight"), &dw2);
+                          &format!("{pre}.mlp.fc2.weight"), dw2);
             (dx, None)
         };
         // column-parallel dx is a partial sum over tp
@@ -234,7 +242,7 @@ impl<'a> Engine<'a> {
         // pre-MLP layernorm backward
         let g2 = st.params.model(&format!("{pre}.pre_mlp_layernorm.weight")).clone();
         let b2 = st.params.model(&format!("{pre}.pre_mlp_layernorm.bias")).clone();
-        let mut ln2_outs = self.run_mod(&self.sh.k_ln_bwd(),
+        let mut ln2_outs = self.run_mod(&self.keys.ln_bwd,
                                         &[&inner.resid1, &g2, &b2, &dx_ln2]);
         let db2 = ln2_outs.remove(2);
         let dg2 = ln2_outs.remove(1);
@@ -242,9 +250,9 @@ impl<'a> Engine<'a> {
         self.rec(hooks, iter, micro, Kind::ActGrad, &names::pre_mlp_ln(layer),
                  &dx_r1, self.spec_sp(ctx));
         self.acc_grad(ctx, st, hooks, iter, micro,
-                      &format!("{pre}.pre_mlp_layernorm.weight"), &dg2);
+                      &format!("{pre}.pre_mlp_layernorm.weight"), dg2);
         self.acc_grad(ctx, st, hooks, iter, micro,
-                      &format!("{pre}.pre_mlp_layernorm.bias"), &db2);
+                      &format!("{pre}.pre_mlp_layernorm.bias"), db2);
 
         let d_resid1 = dy.add_bf16(&dx_r1);
 
@@ -253,7 +261,7 @@ impl<'a> Engine<'a> {
         let dbias_proj = seq::bias_grad(&d_resid1);
         self.acc_grad(ctx, st, hooks, iter, micro,
                       &format!("{pre}.self_attention.linear_proj.bias"),
-                      &dbias_proj);
+                      dbias_proj);
         let d_proj_partial = self.rowpar_reduce_bwd(ctx, &d_resid1);
         let wp = st.params.model(&format!(
             "{pre}.self_attention.linear_proj.weight")).clone();
@@ -261,18 +269,18 @@ impl<'a> Engine<'a> {
             let s = &inner.scales;
             let sdy = Self::fp8_scale_e5m2(self.fp8_amax(ctx, &d_proj_partial));
             let mut outs = self.run_mod(
-                &self.sh.k_proj_fp8_bwd(),
+                &self.keys.proj_fp8_bwd,
                 &[&inner.attn_out, &wp, &Tensor::scalar(s[2], DType::F32),
                   &Tensor::scalar(s[3], DType::F32),
                   &Tensor::scalar(sdy, DType::F32), &d_proj_partial]);
             (outs.remove(0), outs.remove(0))
         } else {
-            let mut outs = self.run_mod(&self.sh.k_proj_bwd(),
+            let mut outs = self.run_mod(&self.keys.proj_bwd,
                                         &[&inner.attn_out, &wp, &d_proj_partial]);
             (outs.remove(0), outs.remove(0))
         };
         self.acc_grad(ctx, st, hooks, iter, micro,
-                      &format!("{pre}.self_attention.linear_proj.weight"), &dwp);
+                      &format!("{pre}.self_attention.linear_proj.weight"), dwp);
         self.rec(hooks, iter, micro, Kind::ActGrad, &names::proj(layer), &d_attn,
                  self.spec_cp(ctx, self.sh.d, true));
 
@@ -281,7 +289,7 @@ impl<'a> Engine<'a> {
             .reshape(&[self.sh.b, self.sh.t_cp, self.sh.hp, self.sh.hd])
             .permute(&[0, 2, 1, 3]);
         let mut a_outs = self.run_mod(
-            &self.sh.k_attn_bwd(),
+            &self.keys.attn_bwd,
             &[&inner.q, &inner.k_full, &inner.v_full, &inner.mask, &do_heads]);
         let dv_full = a_outs.remove(2);
         let dk_full = a_outs.remove(1);
@@ -301,20 +309,20 @@ impl<'a> Engine<'a> {
             let s = &inner.scales;
             let sdy = Self::fp8_scale_e5m2(self.fp8_amax(ctx, &dqkv));
             let mut outs = self.run_mod(
-                &self.sh.k_qkv_fp8_bwd(),
+                &self.keys.qkv_fp8_bwd,
                 &[&inner.qkv_in, &wq, &Tensor::scalar(s[0], DType::F32),
                   &Tensor::scalar(s[1], DType::F32),
                   &Tensor::scalar(sdy, DType::F32), &dqkv]);
             (outs.remove(0), outs.remove(0), outs.remove(0))
         } else {
-            let mut outs = self.run_mod(&self.sh.k_qkv_bwd(),
+            let mut outs = self.run_mod(&self.keys.qkv_bwd,
                                         &[&inner.qkv_in, &wq, &bq, &dqkv]);
             (outs.remove(0), outs.remove(0), outs.remove(0))
         };
         self.acc_grad(ctx, st, hooks, iter, micro,
-                      &format!("{pre}.self_attention.linear_qkv.weight"), &dwq);
+                      &format!("{pre}.self_attention.linear_qkv.weight"), dwq);
         self.acc_grad(ctx, st, hooks, iter, micro,
-                      &format!("{pre}.self_attention.linear_qkv.bias"), &dbq);
+                      &format!("{pre}.self_attention.linear_qkv.bias"), dbq);
         let dx_ln1 = self.colpar_dx_reduce(ctx, &dx_qkv);
         self.rec(hooks, iter, micro, Kind::ActGrad, &names::qkv(layer), &dx_ln1,
                  self.spec_sp(ctx));
@@ -322,7 +330,7 @@ impl<'a> Engine<'a> {
         // input layernorm backward
         let g1 = st.params.model(&format!("{pre}.input_layernorm.weight")).clone();
         let b1 = st.params.model(&format!("{pre}.input_layernorm.bias")).clone();
-        let mut ln1_outs = self.run_mod(&self.sh.k_ln_bwd(),
+        let mut ln1_outs = self.run_mod(&self.keys.ln_bwd,
                                         &[&tape.x, &g1, &b1, &dx_ln1]);
         let db1 = ln1_outs.remove(2);
         let dg1 = ln1_outs.remove(1);
@@ -330,9 +338,9 @@ impl<'a> Engine<'a> {
         self.rec(hooks, iter, micro, Kind::ActGrad, &names::input_ln(layer),
                  &dx0, self.spec_sp(ctx));
         self.acc_grad(ctx, st, hooks, iter, micro,
-                      &format!("{pre}.input_layernorm.weight"), &dg1);
+                      &format!("{pre}.input_layernorm.weight"), dg1);
         self.acc_grad(ctx, st, hooks, iter, micro,
-                      &format!("{pre}.input_layernorm.bias"), &db1);
+                      &format!("{pre}.input_layernorm.bias"), db1);
 
         d_resid1.add_bf16(&dx0)
     }
@@ -360,9 +368,9 @@ impl<'a> Engine<'a> {
         };
         let off = Tensor::scalar(offset as f32, DType::I32);
         let table = st.params.model("embedding.word_embeddings.weight").clone();
-        let dtable = self.run_mod(&self.sh.k_embed_bwd(),
+        let dtable = self.run_mod(&self.keys.embed_bwd,
                                   &[tokens, &table, &off, &d_full]).remove(0);
         self.acc_grad(ctx, st, hooks, iter, micro,
-                      "embedding.word_embeddings.weight", &dtable);
+                      "embedding.word_embeddings.weight", dtable);
     }
 }

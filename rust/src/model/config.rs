@@ -262,6 +262,73 @@ impl Shapes {
     }
 }
 
+/// All module keys of a (ModelCfg, ParCfg), formatted once at engine
+/// construction. `Shapes::k_*` builds each key with `format!` — fine at
+/// setup, too hot for the per-module execution path, where the engine runs
+/// thousands of modules per iteration.
+#[derive(Clone, Debug)]
+pub struct ModKeys {
+    pub embed_fwd: String,
+    pub embed_bwd: String,
+    pub ln_fwd: String,
+    pub ln_bwd: String,
+    pub qkv_fwd: String,
+    pub qkv_bwd: String,
+    pub qkv_fp8_fwd: String,
+    pub qkv_fp8_bwd: String,
+    pub attn_fwd: String,
+    pub attn_bwd: String,
+    pub proj_fwd: String,
+    pub proj_bwd: String,
+    pub proj_fp8_fwd: String,
+    pub proj_fp8_bwd: String,
+    pub mlp_fwd: String,
+    pub mlp_bwd: String,
+    pub mlp_fp8_fwd: String,
+    pub mlp_fp8_bwd: String,
+    pub lmhead_fwd: String,
+    pub lmhead_bwd: String,
+    pub logits_max: String,
+    pub xent_local: String,
+    pub router_fwd: String,
+    pub router_bwd: String,
+    pub experts_fwd: String,
+    pub experts_bwd: String,
+}
+
+impl ModKeys {
+    pub fn new(sh: &Shapes) -> ModKeys {
+        ModKeys {
+            embed_fwd: sh.k_embed_fwd(),
+            embed_bwd: sh.k_embed_bwd(),
+            ln_fwd: sh.k_ln_fwd(),
+            ln_bwd: sh.k_ln_bwd(),
+            qkv_fwd: sh.k_qkv_fwd(),
+            qkv_bwd: sh.k_qkv_bwd(),
+            qkv_fp8_fwd: sh.k_qkv_fp8_fwd(),
+            qkv_fp8_bwd: sh.k_qkv_fp8_bwd(),
+            attn_fwd: sh.k_attn_fwd(),
+            attn_bwd: sh.k_attn_bwd(),
+            proj_fwd: sh.k_proj_fwd(),
+            proj_bwd: sh.k_proj_bwd(),
+            proj_fp8_fwd: sh.k_proj_fp8_fwd(),
+            proj_fp8_bwd: sh.k_proj_fp8_bwd(),
+            mlp_fwd: sh.k_mlp_fwd(),
+            mlp_bwd: sh.k_mlp_bwd(),
+            mlp_fp8_fwd: sh.k_mlp_fp8_fwd(),
+            mlp_fp8_bwd: sh.k_mlp_fp8_bwd(),
+            lmhead_fwd: sh.k_lmhead_fwd(),
+            lmhead_bwd: sh.k_lmhead_bwd(),
+            logits_max: sh.k_logits_max(),
+            xent_local: sh.k_xent_local(),
+            router_fwd: sh.k_router_fwd(),
+            router_bwd: sh.k_router_bwd(),
+            experts_fwd: sh.k_experts_fwd(),
+            experts_bwd: sh.k_experts_bwd(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -24,7 +24,7 @@ use crate::ttrace::canonical::LayerMap;
 use crate::ttrace::hooks::{CanonId, Hooks, Kind};
 use crate::ttrace::shard::ShardSpec;
 
-use super::config::{ModelCfg, ParCfg, Shapes};
+use super::config::{ModKeys, ModelCfg, ParCfg, Shapes};
 use super::params::{build as build_params, ParamSet};
 use super::seq;
 
@@ -36,6 +36,8 @@ pub struct Engine<'a> {
     pub p: ParCfg,
     pub layers: usize,
     pub sh: Shapes,
+    /// module keys, formatted once — the per-module hot path never allocates
+    pub keys: ModKeys,
     pub lr: f32,
     pub exec: &'a Executor,
     pub bugs: BugSet,
@@ -106,7 +108,8 @@ impl<'a> Engine<'a> {
                bugs: BugSet) -> Result<Engine<'a>> {
         p.validate(&m, layers)?;
         let sh = Shapes::derive(&m, &p);
-        Ok(Engine { m, p, layers, sh, lr: 1e-3, exec, bugs })
+        let keys = ModKeys::new(&sh);
+        Ok(Engine { m, p, layers, sh, keys, lr: 1e-3, exec, bugs })
     }
 
     pub fn init_rank(&self, ctx: &RankCtx) -> RankState {

@@ -34,7 +34,7 @@ impl<'a> Engine<'a> {
         };
         let table = st.params.model("embedding.word_embeddings.weight");
         let off = Tensor::scalar(offset as f32, DType::I32);
-        let partial = &self.run_mod(&self.sh.k_embed_fwd(),
+        let partial = &self.run_mod(&self.keys.embed_fwd,
                                     &[tokens, table, &off])[0];
         let out = if self.p.sp {
             self.rowpar_reduce(ctx, partial)
@@ -61,7 +61,7 @@ impl<'a> Engine<'a> {
         // input layernorm
         let g1 = params.model(&format!("layers.{layer}.input_layernorm.weight"));
         let b1 = params.model(&format!("layers.{layer}.input_layernorm.bias"));
-        let ln1_out = self.run_mod(&self.sh.k_ln_fwd(), &[&x, g1, b1]).remove(0);
+        let ln1_out = self.run_mod(&self.keys.ln_fwd, &[&x, g1, b1]).remove(0);
         if let Some(h) = h {
             self.rec(h, iter, micro, Kind::Act, &names::input_ln(layer),
                      &ln1_out, self.spec_sp(ctx));
@@ -94,11 +94,11 @@ impl<'a> Engine<'a> {
             };
             let sw = Self::fp8_scale_e4m3(self.fp8_amax(ctx, wq));
             scales.extend([sx, sw]);
-            self.run_mod(&self.sh.k_qkv_fp8_fwd(),
+            self.run_mod(&self.keys.qkv_fp8_fwd,
                          &[&qkv_in, wq, bq, &Tensor::scalar(sx, DType::F32),
                            &Tensor::scalar(sw, DType::F32)]).remove(0)
         } else {
-            self.run_mod(&self.sh.k_qkv_fwd(), &[&qkv_in, wq, bq]).remove(0)
+            self.run_mod(&self.keys.qkv_fwd, &[&qkv_in, wq, bq]).remove(0)
         };
         if let Some(h) = h {
             self.rec(h, iter, micro, Kind::Act, &names::qkv(layer), &qkv_out,
@@ -111,7 +111,7 @@ impl<'a> Engine<'a> {
         let v_full = self.cp_gather_kv(ctx, &v);
         let positions = seq::seq_positions(self.sh.s, self.p.topo.cp, ctx.coord.cp);
         let mask = seq::causal_mask(&positions, self.sh.s);
-        let attn_heads = self.run_mod(&self.sh.k_attn_fwd(),
+        let attn_heads = self.run_mod(&self.keys.attn_fwd,
                                       &[&q, &k_full, &v_full, &mask]).remove(0);
         let attn_out = attn_heads.permute(&[0, 2, 1, 3])
             .reshape(&[self.sh.b, self.sh.t_cp, self.sh.dp]);
@@ -129,11 +129,11 @@ impl<'a> Engine<'a> {
             let sx = Self::fp8_scale_e4m3(self.fp8_amax(ctx, &attn_out));
             let sw = Self::fp8_scale_e4m3(self.fp8_amax(ctx, wp));
             scales.extend([sx, sw]);
-            self.run_mod(&self.sh.k_proj_fp8_fwd(),
+            self.run_mod(&self.keys.proj_fp8_fwd,
                          &[&attn_out, wp, &Tensor::scalar(sx, DType::F32),
                            &Tensor::scalar(sw, DType::F32)]).remove(0)
         } else {
-            self.run_mod(&self.sh.k_proj_fwd(), &[&attn_out, wp]).remove(0)
+            self.run_mod(&self.keys.proj_fwd, &[&attn_out, wp]).remove(0)
         };
         let proj_red = self.rowpar_reduce(ctx, &proj_partial);
         let proj_out = seq::add_bias_bf16(&proj_red, bp);
@@ -147,7 +147,7 @@ impl<'a> Engine<'a> {
         // pre-MLP layernorm
         let g2 = params.model(&format!("layers.{layer}.pre_mlp_layernorm.weight"));
         let b2 = params.model(&format!("layers.{layer}.pre_mlp_layernorm.bias"));
-        let ln2_out = self.run_mod(&self.sh.k_ln_fwd(), &[&resid1, g2, b2]).remove(0);
+        let ln2_out = self.run_mod(&self.keys.ln_fwd, &[&resid1, g2, b2]).remove(0);
         if let Some(h) = h {
             self.rec(h, iter, micro, Kind::Act, &names::pre_mlp_ln(layer),
                      &ln2_out, self.spec_sp(ctx));
@@ -158,7 +158,7 @@ impl<'a> Engine<'a> {
         let (mlp_partial, combine_full) = if self.p.moe {
             let wr = params.model(&format!("layers.{layer}.mlp.router.weight"));
             // router runs on the SP-sharded sequence (ln2_out)
-            let combine_local = self.run_mod(&self.sh.k_router_fwd(),
+            let combine_local = self.run_mod(&self.keys.router_fwd,
                                              &[&ln2_out, wr]).remove(0);
             if let Some(h) = h {
                 self.rec(h, iter, micro, Kind::Act, &names::router(layer),
@@ -169,7 +169,7 @@ impl<'a> Engine<'a> {
             let w1 = params.model(&format!("layers.{layer}.mlp.experts.fc1.weight"));
             let b1e = params.model(&format!("layers.{layer}.mlp.experts.fc1.bias"));
             let w2 = params.model(&format!("layers.{layer}.mlp.experts.fc2.weight"));
-            let y = self.run_mod(&self.sh.k_experts_fwd(),
+            let y = self.run_mod(&self.keys.experts_fwd,
                                  &[&mlp_in, w1, b1e, w2, &combine_full]).remove(0);
             (y, Some(combine_full))
         } else {
@@ -186,7 +186,7 @@ impl<'a> Engine<'a> {
                 let sw2 = Self::fp8_scale_e4m3(self.fp8_amax(ctx, w2));
                 scales.extend([sx, sw1, sh_scale, sw2]);
                 let mut outs = self.run_mod(
-                    &self.sh.k_mlp_fp8_fwd(),
+                    &self.keys.mlp_fp8_fwd,
                     &[&mlp_in, w1, b1m, w2,
                       &Tensor::scalar(sx, DType::F32),
                       &Tensor::scalar(sw1, DType::F32),
@@ -199,7 +199,7 @@ impl<'a> Engine<'a> {
                 }
                 (outs.remove(0), None)
             } else {
-                (self.run_mod(&self.sh.k_mlp_fwd(),
+                (self.run_mod(&self.keys.mlp_fwd,
                               &[&mlp_in, w1, b1m, w2]).remove(0), None)
             }
         };
@@ -256,7 +256,7 @@ impl<'a> Engine<'a> {
         let params: &ParamSet = &st.params;
         let gw = params.model("final_layernorm.weight");
         let gb = params.model("final_layernorm.bias");
-        let ln_out = self.run_mod(&self.sh.k_ln_fwd(), &[&resid, gw, gb]).remove(0);
+        let ln_out = self.run_mod(&self.keys.ln_fwd, &[&resid, gw, gb]).remove(0);
         self.rec(hooks, iter, micro, Kind::Act, &names::final_ln(), &ln_out,
                  self.spec_sp(ctx));
 
@@ -268,16 +268,16 @@ impl<'a> Engine<'a> {
         }
 
         let table = params.model("embedding.word_embeddings.weight");
-        let logits = self.run_mod(&self.sh.k_lmhead_fwd(),
+        let logits = self.run_mod(&self.keys.lmhead_fwd,
                                   &[&x_head, table]).remove(0);
         self.rec(hooks, iter, micro, Kind::Act, &names::output_layer(), &logits,
                  self.spec_cp(ctx, self.m.v, true));
 
         let tpg = ctx.tp_group();
         let offset = Tensor::scalar((self.sh.vp * ctx.coord.tp) as f32, DType::I32);
-        let lmax = self.run_mod(&self.sh.k_logits_max(), &[&logits]).remove(0);
+        let lmax = self.run_mod(&self.keys.logits_max, &[&logits]).remove(0);
         let gmax = self.ar_max(ctx, &tpg, &lmax);
-        let mut se_tl = self.run_mod(&self.sh.k_xent_local(),
+        let mut se_tl = self.run_mod(&self.keys.xent_local,
                                      &[&logits, targets, &offset, &gmax]);
         let tlogit = se_tl.remove(1);
         let sumexp = se_tl.remove(0);

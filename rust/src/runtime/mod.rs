@@ -151,12 +151,12 @@ impl Executor {
     /// manifest ABI on the way in AND out, returning host tensors rounded to
     /// the ABI dtype grid.
     pub fn run(&self, key: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        // borrow, don't clone: the ABI record is read-only on this path
         let info = self
             .manifest
             .get(key)
             .ok_or_else(|| anyhow!("module '{key}' not in manifest — regenerate artifacts \
-                                    ({ARTIFACT_BUILD_CMD}) or fix the config plan"))?
-            .clone();
+                                    ({ARTIFACT_BUILD_CMD}) or fix the config plan"))?;
         if inputs.len() != info.inputs.len() {
             bail!("module '{key}': {} inputs supplied, ABI wants {}",
                   inputs.len(), info.inputs.len());
@@ -206,9 +206,13 @@ impl Executor {
         st.compile_s += compile_dt;
         st.execute_s += exec_dt.max(1e-9);
         st.marshal_s += marshal_dt;
-        let e = st.per_module.entry(key.to_string()).or_insert((0, 0.0));
-        e.0 += 1;
-        e.1 += exec_dt.max(1e-9);
+        // hot path: avoid the per-call key allocation of the entry() API
+        if let Some(e) = st.per_module.get_mut(key) {
+            e.0 += 1;
+            e.1 += exec_dt.max(1e-9);
+        } else {
+            st.per_module.insert(key.to_string(), (1, exec_dt.max(1e-9)));
+        }
         Ok(tensors)
     }
 }

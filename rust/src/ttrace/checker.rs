@@ -104,7 +104,64 @@ pub fn comp_order(id: &CanonId) -> (u64, u32, u32, i64, i64, i64) {
     }
 }
 
+/// Per-key outcome of the (parallel) merge+compare stage.
+enum KeyVerdict {
+    MissingInCandidate,
+    MergeError(String),
+    Check(TensorCheck),
+}
+
+/// Merge both sides of one canonical id and compare — the unit of work the
+/// checker fans out across the thread pool.
+fn check_one(reference: &Trace, candidate: &Trace,
+             estimate: &HashMap<String, f64>, cfg: &CheckCfg, floor: f64,
+             id: &CanonId, key: &str) -> KeyVerdict {
+    let Some(cand_entries) = candidate.get(key) else {
+        return KeyVerdict::MissingInCandidate;
+    };
+    let ref_entries = reference.get(key).unwrap();
+    let ref_full = match merger::merge(ref_entries) {
+        Ok(m) => m.full,
+        Err(e) => return KeyVerdict::MergeError(format!("reference: {e:#}")),
+    };
+    let cand = match merger::merge(cand_entries) {
+        Ok(m) => m,
+        Err(e) => return KeyVerdict::MergeError(format!("{e:#}")),
+    };
+    if cand.full.dims != ref_full.dims {
+        return KeyVerdict::MergeError(format!(
+            "global dims {:?} != reference {:?}", cand.full.dims, ref_full.dims));
+    }
+    let rel_err = ref_full.rel_err(&cand.full);
+    let mut threshold = estimate
+        .get(key)
+        .map(|&e| (cfg.safety * e).max(floor))
+        .unwrap_or(floor);
+    if id.kind == Kind::Param {
+        let norm = ref_full.fro_norm();
+        if norm > 0.0 {
+            let allowance = 3.0 * cfg.lr * (ref_full.numel() as f64).sqrt() / norm;
+            threshold = threshold.max(allowance);
+        }
+    }
+    let pass = rel_err.is_finite() && rel_err <= threshold
+        && cand.conflict_elems == 0;
+    KeyVerdict::Check(TensorCheck {
+        key: key.to_string(),
+        id: id.clone(),
+        rel_err,
+        threshold,
+        conflict_elems: cand.conflict_elems,
+        pass,
+    })
+}
+
 /// Differential testing of a candidate trace against the reference trace.
+///
+/// The per-canonical-id merge+compare work is independent across ids, so it
+/// fans out over `util::par`'s scoped pool; every id writes its verdict into
+/// its own result slot and the outcome is assembled sequentially in
+/// computation order — identical output for any worker count.
 pub fn check_traces(reference: &Trace, candidate: &Trace,
                     estimate: &HashMap<String, f64>, cfg: &CheckCfg)
                     -> Result<CheckOutcome> {
@@ -118,55 +175,25 @@ pub fn check_traces(reference: &Trace, candidate: &Trace,
         .collect();
     keys.sort_by_key(|(id, _)| comp_order(id));
 
-    for (id, key) in keys {
-        let Some(cand_entries) = candidate.get(&key) else {
-            out.missing_in_candidate.push(key);
-            continue;
-        };
-        let ref_entries = reference.get(&key).unwrap();
-        let ref_full = match merger::merge(ref_entries) {
-            Ok(m) => m.full,
-            Err(e) => {
-                out.merge_errors.push((key, format!("reference: {e:#}")));
-                continue;
+    // small chunks: merge cost varies a lot per tensor, round-robin balances
+    const CHUNK: usize = 8;
+    let mut verdicts: Vec<Option<KeyVerdict>> = Vec::new();
+    verdicts.resize_with(keys.len(), || None);
+    crate::util::par::par_items(
+        keys.chunks(CHUNK).zip(verdicts.chunks_mut(CHUNK)),
+        |_, (ks, slots)| {
+            for ((id, key), slot) in ks.iter().zip(slots.iter_mut()) {
+                *slot = Some(check_one(reference, candidate, estimate, cfg,
+                                       floor, id, key));
             }
-        };
-        let cand = match merger::merge(cand_entries) {
-            Ok(m) => m,
-            Err(e) => {
-                out.merge_errors.push((key, format!("{e:#}")));
-                continue;
-            }
-        };
-        if cand.full.dims != ref_full.dims {
-            out.merge_errors.push((key.clone(),
-                format!("global dims {:?} != reference {:?}",
-                        cand.full.dims, ref_full.dims)));
-            continue;
-        }
-        let rel_err = ref_full.rel_err(&cand.full);
-        let mut threshold = estimate
-            .get(&key)
-            .map(|&e| (cfg.safety * e).max(floor))
-            .unwrap_or(floor);
-        if id.kind == Kind::Param {
-            let norm = ref_full.fro_norm();
-            if norm > 0.0 {
-                let allowance =
-                    3.0 * cfg.lr * (ref_full.numel() as f64).sqrt() / norm;
-                threshold = threshold.max(allowance);
-            }
-        }
-        let pass = rel_err.is_finite() && rel_err <= threshold
-            && cand.conflict_elems == 0;
-        out.checks.push(TensorCheck {
-            key,
-            id,
-            rel_err,
-            threshold,
-            conflict_elems: cand.conflict_elems,
-            pass,
         });
+
+    for ((_, key), verdict) in keys.into_iter().zip(verdicts) {
+        match verdict.expect("every key got a verdict") {
+            KeyVerdict::MissingInCandidate => out.missing_in_candidate.push(key),
+            KeyVerdict::MergeError(e) => out.merge_errors.push((key, e)),
+            KeyVerdict::Check(c) => out.checks.push(c),
+        }
     }
 
     for key in candidate.entries.keys() {

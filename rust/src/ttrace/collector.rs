@@ -2,9 +2,22 @@
 //! every traced tensor (with its shard mapping) into an in-memory trace,
 //! optionally rewriting module inputs from the consistent generator (the
 //! bug-localization mode of §4.3/§4.2).
+//!
+//! ## Contention-free recording
+//!
+//! Every simulated rank runs on its own OS thread (`dist::run_spmd`), and
+//! all of them share one collector. Recording goes into a *thread-local*
+//! buffer — no lock, no cross-rank cache traffic on the training hot path.
+//! Each buffer is flushed into the shared collector exactly once, when its
+//! rank thread exits (scoped-thread join guarantees the flush happened
+//! before `run_spmd` returns) or when `into_trace` drains the calling
+//! thread. `into_trace` then merges the per-rank segments in ascending
+//! rank order, so the assembled trace — and its serialized JSON — is
+//! byte-identical run-to-run and across worker counts.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -132,9 +145,43 @@ pub enum Mode {
     Perturb { modules: Vec<String>, eps: f32 },
 }
 
-/// Thread-safe collector shared by every simulated rank of a run.
+/// The cross-thread rendezvous of one collector: per-rank entry segments,
+/// appended once per recording thread (at thread exit / drain), never on
+/// the per-record path.
+#[derive(Default)]
+struct Shared {
+    flushed: Mutex<Vec<(usize, Vec<(String, Entry)>)>>,
+}
+
+/// One thread's pending records for one collector.
+struct LocalBuf {
+    shared: Arc<Shared>,
+    rank: usize,
+    items: Vec<(String, Entry)>,
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        if !self.items.is_empty() {
+            self.shared
+                .flushed
+                .lock()
+                .unwrap()
+                .push((self.rank, std::mem::take(&mut self.items)));
+        }
+    }
+}
+
+thread_local! {
+    /// Live buffers of this thread, one per (collector, rank) it records
+    /// for. Flushed by `Drop` at thread exit.
+    static LOCAL: RefCell<Vec<LocalBuf>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Thread-safe collector shared by every simulated rank of a run. Recording
+/// is lock-free per rank (thread-local buffers, merged at rank join).
 pub struct Collector {
-    trace: Mutex<Trace>,
+    shared: Arc<Shared>,
     mode: Mode,
     /// kinds to record (e.g. skip params for activation-only studies)
     kinds: Option<Vec<Kind>>,
@@ -142,12 +189,11 @@ pub struct Collector {
 
 impl Collector {
     pub fn new() -> Collector {
-        Collector { trace: Mutex::new(Trace::default()), mode: Mode::Record,
-                    kinds: None }
+        Collector { shared: Arc::default(), mode: Mode::Record, kinds: None }
     }
 
     pub fn with_mode(mode: Mode) -> Collector {
-        Collector { trace: Mutex::new(Trace::default()), mode, kinds: None }
+        Collector { shared: Arc::default(), mode, kinds: None }
     }
 
     pub fn only_kinds(mut self, kinds: &[Kind]) -> Collector {
@@ -155,8 +201,62 @@ impl Collector {
         self
     }
 
+    fn wants(&self, kind: Kind) -> bool {
+        match &self.kinds {
+            Some(kinds) => kinds.contains(&kind),
+            None => true,
+        }
+    }
+
+    /// Append one entry to this thread's buffer for this collector (no
+    /// lock: the shared state is only touched when a buffer flushes).
+    fn push(&self, key: String, entry: Entry) {
+        let rank = crate::dist::current_rank().unwrap_or(0);
+        LOCAL.with(|l| {
+            let mut bufs = l.borrow_mut();
+            if let Some(buf) = bufs
+                .iter_mut()
+                .find(|b| Arc::ptr_eq(&b.shared, &self.shared) && b.rank == rank)
+            {
+                buf.items.push((key, entry));
+            } else {
+                bufs.push(LocalBuf {
+                    shared: self.shared.clone(),
+                    rank,
+                    items: vec![(key, entry)],
+                });
+            }
+        });
+    }
+
+    /// Assemble the trace. All rank threads must have joined (true by
+    /// construction after `run_spmd`); the calling thread's own pending
+    /// buffers are drained here. Segments merge in ascending rank order,
+    /// making the entry order deterministic regardless of scheduling.
     pub fn into_trace(self) -> Trace {
-        self.trace.into_inner().unwrap()
+        LOCAL.with(|l| {
+            let mut bufs = l.borrow_mut();
+            let mut i = 0;
+            while i < bufs.len() {
+                if Arc::ptr_eq(&bufs[i].shared, &self.shared) {
+                    // Drop flushes the buffer into `shared`
+                    drop(bufs.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        });
+        let mut segments = std::mem::take(&mut *self.shared.flushed.lock().unwrap());
+        // stable: equal ranks (sequential reuse of one collector) keep
+        // their flush order
+        segments.sort_by_key(|(rank, _)| *rank);
+        let mut trace = Trace::default();
+        for (_, items) in segments {
+            for (key, entry) in items {
+                trace.entries.entry(key).or_default().push(entry);
+            }
+        }
+        trace
     }
 }
 
@@ -168,17 +268,17 @@ impl Default for Collector {
 
 impl Hooks for Collector {
     fn record(&self, id: &CanonId, t: &Tensor, spec: &ShardSpec) {
-        if let Some(kinds) = &self.kinds {
-            if !kinds.contains(&id.kind) {
-                return;
-            }
+        if !self.wants(id.kind) {
+            return; // filtered kinds never pay the clone
         }
-        let mut trace = self.trace.lock().unwrap();
-        trace
-            .entries
-            .entry(id.key())
-            .or_default()
-            .push(Entry { spec: spec.clone(), data: t.clone() });
+        self.push(id.key(), Entry { spec: spec.clone(), data: t.clone() });
+    }
+
+    fn record_owned(&self, id: &CanonId, t: Tensor, spec: &ShardSpec) {
+        if !self.wants(id.kind) {
+            return;
+        }
+        self.push(id.key(), Entry { spec: spec.clone(), data: t });
     }
 
     fn rewrite_input(&self, id: &CanonId, spec: &ShardSpec, t: &Tensor)
@@ -253,6 +353,38 @@ mod tests {
         let spec = ShardSpec::full(&[8]);
         assert!(c.rewrite_input(&id(Kind::Act, "layers.0.input"), &spec, &t).is_some());
         assert!(c.rewrite_input(&id(Kind::Act, "layers.1.input"), &spec, &t).is_none());
+    }
+
+    #[test]
+    fn spmd_records_merge_in_rank_order() {
+        use crate::dist::{run_spmd, Topology};
+        // whatever order the rank threads get scheduled (and flush) in,
+        // the assembled trace lists shards in ascending rank order
+        for _ in 0..4 {
+            let c = Collector::new();
+            let topo = Topology::new(4, 1, 1, 1, 1).unwrap();
+            run_spmd(topo, |ctx| {
+                let t = Tensor::full(&[2], ctx.rank as f32, DType::F32);
+                c.record(&id(Kind::Act, "m"), &t,
+                         &ShardSpec::split(&[8], 0, ctx.rank, 4));
+            });
+            let trace = c.into_trace();
+            let entries = trace.get("i0/m0/act/m").unwrap();
+            assert_eq!(entries.len(), 4);
+            for (i, e) in entries.iter().enumerate() {
+                assert_eq!(e.data.data[0], i as f32, "shard {i} out of rank order");
+            }
+        }
+    }
+
+    #[test]
+    fn record_owned_moves_into_the_trace() {
+        let c = Collector::new();
+        let t = Tensor::new(&[2], vec![4.0, 8.0], DType::Bf16);
+        c.record_owned(&id(Kind::ParamGrad, "w"), t, &ShardSpec::full(&[2]));
+        let trace = c.into_trace();
+        assert_eq!(trace.get("i0/m0/param_grad/w").unwrap()[0].data.data,
+                   vec![4.0, 8.0]);
     }
 
     #[test]

@@ -90,6 +90,14 @@ pub trait Hooks: Sync {
     /// Record a tensor at a traced site.
     fn record(&self, id: &CanonId, t: &Tensor, spec: &ShardSpec);
 
+    /// Record a tensor the caller is done with, transferring ownership —
+    /// implementations that store the tensor (the collector) take it by
+    /// move instead of cloning the buffer. Call sites where the tensor has
+    /// further uses keep calling `record`.
+    fn record_owned(&self, id: &CanonId, t: Tensor, spec: &ShardSpec) {
+        self.record(id, &t, spec);
+    }
+
     /// Offer to overwrite a module *input* (forward activation or backward
     /// gradient). Return `Some(local_replacement)` to rewrite; the
     /// replacement must be the `spec`-shard of a logical full tensor that
@@ -104,6 +112,7 @@ pub struct NoopHooks;
 
 impl Hooks for NoopHooks {
     fn record(&self, _id: &CanonId, _t: &Tensor, _spec: &ShardSpec) {}
+    fn record_owned(&self, _id: &CanonId, _t: Tensor, _spec: &ShardSpec) {}
 }
 
 #[cfg(test)]

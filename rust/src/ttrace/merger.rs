@@ -24,10 +24,43 @@ pub struct Merged {
     pub conflict_shards: Vec<usize>,
 }
 
+/// local->global index LUT of one dimension.
+fn lut_for(e: &Entry, d: usize, global: &[usize]) -> Vec<usize> {
+    match e.spec.maps.iter().find(|m| m.dim == d) {
+        None => (0..global[d]).collect(),
+        Some(m) => m
+            .pieces
+            .iter()
+            .flat_map(|p| p.global_start..p.global_start + p.len)
+            .collect(),
+    }
+}
+
+/// Collapse a LUT into maximal contiguous runs `(local_start, global_start,
+/// len)` — the unit the innermost dimension merges slice-at-a-time.
+fn runs_of(lut: &[usize]) -> Vec<(usize, usize, usize)> {
+    let mut runs = Vec::new();
+    let mut i = 0;
+    while i < lut.len() {
+        let start = i;
+        while i + 1 < lut.len() && lut[i + 1] == lut[i] + 1 {
+            i += 1;
+        }
+        runs.push((start, lut[start], i - start + 1));
+        i += 1;
+    }
+    runs
+}
+
 /// Merge all recorded shards of one canonical id into the logical full
 /// tensor. Errors on structural problems (mismatched global dims, local
 /// shape mismatch, omission); value conflicts are reported, not fatal —
 /// the checker turns them into findings.
+///
+/// Hot path: the innermost dimension is piecewise contiguous in the global
+/// tensor (shard maps are unions of intervals), so shards merge one run —
+/// not one element — at a time; only the outer dimensions walk a
+/// multi-index.
 pub fn merge(entries: &[Entry]) -> Result<Merged> {
     if entries.is_empty() {
         bail!("no shards to merge");
@@ -64,41 +97,54 @@ pub fn merge(entries: &[Entry]) -> Result<Merged> {
             bail!("shard {si}: tensor dims {:?} != spec local dims {:?}",
                   e.data.dims, local_dims);
         }
-        // per-dim local->global index LUTs
-        let luts: Vec<Vec<usize>> = (0..global.len())
-            .map(|d| {
-                match e.spec.maps.iter().find(|m| m.dim == d) {
-                    None => (0..global[d]).collect(),
-                    Some(m) => m
-                        .pieces
-                        .iter()
-                        .flat_map(|p| p.global_start..p.global_start + p.len)
-                        .collect(),
-                }
-            })
-            .collect();
         let rank = local_dims.len();
-        let mut idx = vec![0usize; rank.max(1)];
+        let n_outer_dims = rank.saturating_sub(1);
+        // outer dims keep element LUTs; the innermost dim becomes runs
+        let luts: Vec<Vec<usize>> = (0..n_outer_dims)
+            .map(|d| lut_for(e, d, global))
+            .collect();
+        let runs: Vec<(usize, usize, usize)> = if rank == 0 {
+            vec![(0, 0, 1)]
+        } else {
+            runs_of(&lut_for(e, rank - 1, global))
+        };
+        let outer: usize = local_dims[..n_outer_dims].iter().product();
+        let inner = if rank == 0 { 1 } else { local_dims[rank - 1] };
+        let mut idx = vec![0usize; n_outer_dims];
         let mut had_conflict = false;
-        for &v in &e.data.data {
-            let mut g = 0usize;
-            for d in 0..rank {
-                g += luts[d][idx[d]] * gstrides[d];
+        for o in 0..outer {
+            let mut g0 = 0usize;
+            for d in 0..n_outer_dims {
+                g0 += luts[d][idx[d]] * gstrides[d];
             }
-            if partial {
-                full[g] += v;
-                covered[g] = true;
-            } else if covered[g] {
-                if full[g].to_bits() != v.to_bits() {
-                    conflict_elems += 1;
-                    had_conflict = true;
+            let lbase = o * inner;
+            for &(lo, go, len) in &runs {
+                let src = &e.data.data[lbase + lo..lbase + lo + len];
+                let dst = g0 + go; // the innermost global stride is 1
+                if partial {
+                    for (fv, &sv) in full[dst..dst + len].iter_mut().zip(src) {
+                        *fv += sv;
+                    }
+                    for c in &mut covered[dst..dst + len] {
+                        *c = true;
+                    }
+                } else {
+                    for (j, &sv) in src.iter().enumerate() {
+                        let g = dst + j;
+                        if covered[g] {
+                            if full[g].to_bits() != sv.to_bits() {
+                                conflict_elems += 1;
+                                had_conflict = true;
+                            }
+                        } else {
+                            full[g] = sv;
+                            covered[g] = true;
+                        }
+                    }
                 }
-            } else {
-                full[g] = v;
-                covered[g] = true;
             }
-            // increment local multi-index
-            for d in (0..rank).rev() {
+            // increment the outer multi-index
+            for d in (0..n_outer_dims).rev() {
                 idx[d] += 1;
                 if idx[d] < local_dims[d] {
                     break;

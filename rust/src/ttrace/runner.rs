@@ -44,20 +44,19 @@ pub fn ttrace_check(m: &ModelCfg, candidate_p: &ParCfg, layers: usize,
                                   cfg.eps as f32, 1)?;
 
     // Step 3: run reference and candidate for one iteration, collecting.
-    let reference = run_trace(m, &ref_p, layers, exec, data,
-                              BugSet::none(), Mode::Record)?;
-    let candidate = run_trace(m, candidate_p, layers, exec, data, bugs,
-                              Mode::Record)?;
+    // The two runs are independent (separate engines, collectors and SPMD
+    // worlds), so they execute concurrently; each one's trace is assembled
+    // on its own thread, deterministically.
+    let (reference, candidate) = run_pair(m, &ref_p, candidate_p, layers, exec,
+                                          data, bugs, Mode::Record, Mode::Record)?;
 
     // Step 4: differential testing.
     let outcome = check_traces(&reference, &candidate, &est.rel, cfg)?;
 
     // Step 5: input-rewrite localization on failure.
     let rewrite_outcome = if localize && !outcome.pass {
-        let ref_rw = run_trace(m, &ref_p, layers, exec, data,
-                               BugSet::none(), Mode::Rewrite)?;
-        let cand_rw = run_trace(m, candidate_p, layers, exec, data, bugs,
-                                Mode::Rewrite)?;
+        let (ref_rw, cand_rw) = run_pair(m, &ref_p, candidate_p, layers, exec,
+                                         data, bugs, Mode::Rewrite, Mode::Rewrite)?;
         Some(check_traces(&ref_rw, &cand_rw, &est.rel, cfg)?)
     } else {
         None
@@ -96,4 +95,19 @@ fn run_trace(m: &ModelCfg, p: &ParCfg, layers: usize, exec: &Executor,
     let collector = Collector::with_mode(mode);
     run_training(&engine, data, &collector, 1);
     Ok(collector.into_trace())
+}
+
+/// Run the (trusted) reference and the candidate concurrently — the wall
+/// clock of the trace step is max(reference, candidate) instead of the sum.
+#[allow(clippy::too_many_arguments)]
+fn run_pair(m: &ModelCfg, ref_p: &ParCfg, cand_p: &ParCfg, layers: usize,
+            exec: &Executor, data: &dyn DataSource, bugs: BugSet,
+            ref_mode: Mode, cand_mode: Mode) -> Result<(Trace, Trace)> {
+    let (r, c) = std::thread::scope(|s| {
+        let r = s.spawn(|| run_trace(m, ref_p, layers, exec, data,
+                                     BugSet::none(), ref_mode));
+        let c = run_trace(m, cand_p, layers, exec, data, bugs, cand_mode);
+        (r.join().expect("reference trace thread panicked"), c)
+    });
+    Ok((r?, c?))
 }

@@ -53,14 +53,38 @@ pub fn run_collected(m: &ModelCfg, p: &ParCfg, layers: usize, exec: &Executor,
 }
 
 /// Per-key relative difference between two traces (each key merged first).
+/// The per-key merges are independent — they fan out across the scoped
+/// thread pool with one result slot per key (deterministic for any worker
+/// count).
 pub fn trace_rel(a: &Trace, b: &Trace) -> Result<HashMap<String, f64>> {
+    let keys: Vec<&String> = a.entries.keys().collect();
+    // slot: None = key absent in b; Some(Ok(None)) = dims mismatch (skipped,
+    // as before); Some(Ok(Some(v))) = comparable.
+    let mut slots: Vec<Option<Result<Option<f64>>>> = Vec::new();
+    slots.resize_with(keys.len(), || None);
+    const CHUNK: usize = 8;
+    crate::util::par::par_items(
+        keys.chunks(CHUNK).zip(slots.chunks_mut(CHUNK)),
+        |_, (ks, out)| {
+            for (key, slot) in ks.iter().zip(out.iter_mut()) {
+                let ea = a.get(key.as_str()).unwrap();
+                let Some(eb) = b.get(key.as_str()) else {
+                    continue;
+                };
+                *slot = Some((|| {
+                    let fa = merger::merge(ea)?.full;
+                    let fb = merger::merge(eb)?.full;
+                    Ok((fa.dims == fb.dims).then(|| fa.rel_err(&fb)))
+                })());
+            }
+        });
     let mut rel = HashMap::new();
-    for (key, ea) in &a.entries {
-        if let Some(eb) = b.get(key) {
-            let fa = merger::merge(ea)?.full;
-            let fb = merger::merge(eb)?.full;
-            if fa.dims == fb.dims {
-                rel.insert(key.clone(), fa.rel_err(&fb));
+    for (key, slot) in keys.into_iter().zip(slots) {
+        match slot {
+            None | Some(Ok(None)) => {}
+            Some(Err(e)) => return Err(e),
+            Some(Ok(Some(v))) => {
+                rel.insert(key.clone(), v);
             }
         }
     }

@@ -4,8 +4,19 @@
 //! warmup, timed iterations, mean/min/p50 stats, and aligned table output
 //! so every bench prints the rows/series of the paper table or figure it
 //! regenerates. Results can also be dumped as CSV for plotting.
+//!
+//! ## Perf trajectory (`BENCH_<name>.json`)
+//!
+//! Every bench also records per-stage wall clock through [`BenchJson`] and
+//! writes `BENCH_<name>.json` (into `$BENCH_JSON_DIR`, default the working
+//! directory). `make bench-smoke` runs all benches in short mode
+//! (`BENCH_SMOKE=1`, see [`smoke`]) and CI uploads the JSON files as
+//! artifacts, so kernel/checker perf is tracked per-PR.
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
 pub struct Stats {
@@ -98,6 +109,81 @@ impl Table {
     }
 }
 
+/// True when the bench should run its short mode (`BENCH_SMOKE=1`) — a few
+/// seconds per bench, enough to seed the perf trajectory without the full
+/// figure-quality sweep.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Pick `full` normally, `short` under `BENCH_SMOKE=1` (env overrides via
+/// the bench-specific variable still win — call this only for defaults).
+pub fn smoke_or(full: usize, short: usize) -> usize {
+    if smoke() { short } else { full }
+}
+
+/// Per-stage wall-clock recorder; serializes to `BENCH_<name>.json`.
+pub struct BenchJson {
+    name: String,
+    stages: Vec<(String, f64)>,
+    threads: usize,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> BenchJson {
+        BenchJson {
+            name: name.to_string(),
+            stages: Vec::new(),
+            threads: crate::util::par::threads(),
+        }
+    }
+
+    /// Record a stage that was timed externally.
+    pub fn stage(&mut self, label: &str, seconds: f64) {
+        self.stages.push((label.to_string(), seconds));
+    }
+
+    /// Time `f` and record it as `label`.
+    pub fn time_stage<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = time_once(f);
+        self.stage(label, dt);
+        out
+    }
+
+    /// Write `BENCH_<name>.json` into `$BENCH_JSON_DIR` (default: the
+    /// working directory) and return the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+        self.write_in(std::path::Path::new(&dir))
+    }
+
+    /// Write `BENCH_<name>.json` into an explicit directory.
+    pub fn write_in(&self, dir: &std::path::Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut stages = Vec::new();
+        let mut total = 0.0f64;
+        for (label, s) in &self.stages {
+            let mut o = Json::obj();
+            o.set("label", Json::from_str_(label));
+            o.set("s", Json::from_f64(*s));
+            stages.push(o);
+            total += s;
+        }
+        let mut root = Json::obj();
+        root.set("name", Json::from_str_(&self.name));
+        root.set("smoke", Json::Bool(smoke()));
+        root.set("threads", Json::from_usize(self.threads));
+        root.set("total_s", Json::from_f64(total));
+        root.set("stages", Json::Arr(stages));
+        std::fs::write(&path, root.to_string_pretty())?;
+        eprintln!("bench trajectory: wrote {}", path.display());
+        Ok(path)
+    }
+}
+
 /// Human format for seconds.
 pub fn fmt_s(s: f64) -> String {
     if s < 1e-6 {
@@ -141,5 +227,24 @@ mod tests {
         assert!(fmt_s(2.0).ends_with('s'));
         assert!(fmt_s(0.002).ends_with("ms"));
         assert!(fmt_s(2e-6).ends_with("µs"));
+    }
+
+    #[test]
+    fn bench_json_roundtrip() {
+        // write_in (not the env var): mutating the process environment from
+        // a test races other threads' getenv
+        let dir = std::env::temp_dir().join("ttrace_bench_json_test");
+        let mut b = BenchJson::new("unit");
+        b.stage("warm", 0.25);
+        let v = b.time_stage("work", || 7usize);
+        assert_eq!(v, 7);
+        let path = b.write_in(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), "BENCH_unit.json");
+        let j = Json::parse_file(&path).unwrap();
+        assert_eq!(j.req("name").unwrap().as_str().unwrap(), "unit");
+        let stages = j.req("stages").unwrap().as_arr().unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].req("label").unwrap().as_str().unwrap(), "warm");
+        assert!(j.req("total_s").unwrap().as_f64().unwrap() >= 0.25);
     }
 }

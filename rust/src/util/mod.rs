@@ -6,5 +6,6 @@ pub mod bench;
 pub mod bf16;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,162 @@
+//! Deterministic scoped parallelism (no rayon in the offline crate set).
+//!
+//! Everything here preserves bit-determinism by construction: work items
+//! are statically assigned to workers (round-robin by item index) and every
+//! item owns a disjoint slice of the output, so results are independent of
+//! scheduling and of the worker count. The *only* thing the thread count
+//! may change is wall-clock time — `rust/tests/determinism.rs` asserts
+//! exactly that.
+//!
+//! The worker count is resolved once from `TTRACE_THREADS` (default: the
+//! machine's available parallelism) and can be overridden at runtime with
+//! `set_threads` (tests use this to prove thread-count invariance).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// 0 = not yet resolved (re-reads the environment on next `threads()`).
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// The worker count for parallel regions (>= 1).
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let n = std::env::var("TTRACE_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    THREADS.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Override the worker count; `0` resets to the environment default.
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Simulated SPMD ranks currently executing (`dist::run_spmd` maintains
+/// this). Parallel regions divide their width by it so nested
+/// rank-level + kernel-level parallelism doesn't oversubscribe the CPU.
+static ACTIVE_RANKS: AtomicUsize = AtomicUsize::new(0);
+
+pub fn enter_ranks(n: usize) {
+    ACTIVE_RANKS.fetch_add(n, Ordering::Relaxed);
+}
+
+pub fn exit_ranks(n: usize) {
+    ACTIVE_RANKS.fetch_sub(n, Ordering::Relaxed);
+}
+
+/// The worker count a parallel region should actually use right now: the
+/// configured width divided by the number of live SPMD ranks (each rank is
+/// already a thread). Never changes results — only how wide the fan-out is.
+pub fn effective_threads() -> usize {
+    let ranks = ACTIVE_RANKS.load(Ordering::Relaxed).max(1);
+    (threads() / ranks).max(1)
+}
+
+/// Serializes tests that sweep the global worker count — the setting is
+/// process-global, so concurrent sweeps would shrink each other's coverage.
+#[cfg(test)]
+pub(crate) static TEST_THREADS_LOCK: std::sync::Mutex<()> =
+    std::sync::Mutex::new(());
+
+/// Run `f(index, item)` for every item, fanning the items across up to
+/// `threads()` scoped workers. Items are assigned round-robin by index, so
+/// the item->worker mapping is static; `f` must only write state owned by
+/// its item (e.g. a `chunks_mut` slice), which makes the result identical
+/// for every worker count.
+pub fn par_items<I, T, F>(items: I, f: F)
+where
+    I: Iterator<Item = T>,
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    let t = effective_threads();
+    if t <= 1 {
+        for (i, item) in items.enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, T)>> = (0..t).map(|_| Vec::new()).collect();
+    for (i, item) in items.enumerate() {
+        buckets[i % t].push((i, item));
+    }
+    // Nothing to fan out (0 or 1 item): run inline, skip the spawn cost.
+    if buckets[1..].iter().all(|b| b.is_empty()) {
+        for (i, item) in buckets.remove(0) {
+            f(i, item);
+        }
+        return;
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let mut rest = buckets.split_off(1);
+        for bucket in rest.drain(..) {
+            if bucket.is_empty() {
+                continue;
+            }
+            s.spawn(move || {
+                for (i, item) in bucket {
+                    f(i, item);
+                }
+            });
+        }
+        // worker 0 runs on the calling thread
+        for (i, item) in buckets.remove(0) {
+            f(i, item);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_items_covers_every_index_once() {
+        let mut out = vec![0u32; 103];
+        par_items(out.chunks_mut(7), |i, chunk| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (i * 7 + j) as u32 + 1;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn results_identical_across_worker_counts() {
+        let _guard = TEST_THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let run = |t: usize| -> Vec<f32> {
+            set_threads(t);
+            let mut out = vec![0.0f32; 64];
+            par_items(out.chunks_mut(5), |i, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = ((i * 5 + j) as f32).sin();
+                }
+            });
+            out
+        };
+        let a = run(1);
+        let b = run(4);
+        set_threads(0);
+        let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, bb);
+    }
+
+    #[test]
+    fn empty_and_single_item_run_inline() {
+        par_items(std::iter::empty::<usize>(), |_, _| panic!("no items"));
+        let mut hits = vec![0usize; 1];
+        par_items(hits.chunks_mut(1), |i, c| c[0] = i + 41);
+        assert_eq!(hits[0], 41);
+    }
+}

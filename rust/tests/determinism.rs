@@ -1,0 +1,61 @@
+//! Bit-determinism contract tests: the whole TTrace pipeline — native
+//! kernels, SPMD collectives, trace collection, merge + differential check
+//! — must produce byte-identical traces and identical verdicts run-to-run
+//! AND for any worker-thread count. This is what licenses the blocked /
+//! multi-threaded fast path: parallelism may only change wall clock,
+//! never a single bit of any recorded tensor.
+
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::GenData;
+use ttrace::dist::Topology;
+use ttrace::model::{ParCfg, TINY};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::{ttrace_check, CheckCfg};
+use ttrace::util::par;
+
+/// One full check: returns (reference trace bytes, candidate trace bytes,
+/// verdict, localized module).
+fn run_check(exec: &Executor, bugs: BugSet) -> (String, String, bool, Option<String>) {
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+    let run = ttrace_check(&TINY, &p, 2, exec, &GenData, bugs,
+                           &CheckCfg::default(), false).unwrap();
+    (
+        run.reference.to_json().to_string_compact(),
+        run.candidate.to_json().to_string_compact(),
+        run.outcome.pass,
+        run.outcome.localized_module(),
+    )
+}
+
+/// Single test fn: the worker-count override is process-global, so the
+/// sweep must not interleave with itself.
+#[test]
+fn traces_and_verdicts_are_thread_count_invariant() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+
+    // clean run and a Table-1 bug (B1: TP wrong embedding mask), at 1 and
+    // 4 workers plus a repeat at 4 (run-to-run determinism)
+    par::set_threads(1);
+    let clean_t1 = run_check(&exec, BugSet::none());
+    let bug_t1 = run_check(&exec, BugSet::one(BugId::B1TpEmbeddingMask));
+    par::set_threads(4);
+    let clean_t4 = run_check(&exec, BugSet::none());
+    let bug_t4 = run_check(&exec, BugSet::one(BugId::B1TpEmbeddingMask));
+    let bug_t4_again = run_check(&exec, BugSet::one(BugId::B1TpEmbeddingMask));
+    par::set_threads(0); // restore the environment default
+
+    // byte-identical traces across worker counts
+    assert_eq!(clean_t1.0, clean_t4.0, "clean reference trace differs");
+    assert_eq!(clean_t1.1, clean_t4.1, "clean candidate trace differs");
+    assert_eq!(bug_t1.0, bug_t4.0, "buggy reference trace differs");
+    assert_eq!(bug_t1.1, bug_t4.1, "buggy candidate trace differs");
+    // byte-identical traces run-to-run at the same worker count
+    assert_eq!(bug_t4.0, bug_t4_again.0, "reference trace differs run-to-run");
+    assert_eq!(bug_t4.1, bug_t4_again.1, "candidate trace differs run-to-run");
+
+    // identical verdicts + localization
+    assert!(clean_t1.2 && clean_t4.2, "clean run must pass at every width");
+    assert!(!bug_t1.2 && !bug_t4.2, "bug 1 must be detected at every width");
+    assert_eq!(bug_t1.3, bug_t4.3, "localization differs across worker counts");
+}
