@@ -1,0 +1,95 @@
+//! Offline-store pipeline bench: trace collection, `.ttrc` write, store
+//! open (checksum pass), then the streaming offline check against the
+//! in-memory checker on the same data — the cost of decoupling collection
+//! from checking. Also reports `.ttrc` vs JSON dump sizes. `BENCH_SMOKE=1`
+//! shrinks the repeat count; wired into `make bench-smoke`.
+
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::GenData;
+use ttrace::dist::Topology;
+use ttrace::model::{run_training, Engine, ParCfg, TINY};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::store::{check_stores, write_trace, StoreReader, StoreWriter};
+use ttrace::ttrace::{check_traces, reference_of, threshold, CheckCfg,
+                     Collector, Trace};
+use ttrace::util::bench::{fmt_bytes, fmt_s, smoke_or, time, time_once,
+                          BenchJson, Table};
+
+fn collect(p: &ParCfg, exec: &Executor, bugs: BugSet) -> Trace {
+    let engine = Engine::new(TINY, p.clone(), 2, exec, bugs).unwrap();
+    let collector = Collector::new();
+    run_training(&engine, &GenData, &collector, 1);
+    collector.into_trace()
+}
+
+fn main() {
+    let reps = smoke_or(20, 3);
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+    let ref_p = reference_of(&p);
+    let cfg = CheckCfg::default();
+    let mut bj = BenchJson::new("offline_check");
+
+    eprintln!("offline_check: collecting traces (tp2 candidate, bug 1)...");
+    let est = bj.time_stage("estimate", || {
+        threshold::estimate(&TINY, &ref_p, 2, &exec, &GenData,
+                            cfg.eps as f32, 1).unwrap()
+    });
+    let reference = bj.time_stage("record_reference", || {
+        collect(&ref_p, &exec, BugSet::none())
+    });
+    let candidate = bj.time_stage("record_candidate", || {
+        collect(&p, &exec, BugSet::one(BugId::B1TpEmbeddingMask))
+    });
+
+    let dir = std::env::temp_dir().join("ttrace_bench_offline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ref_path = dir.join("ref.ttrc");
+    let cand_path = dir.join("cand.ttrc");
+    let json_path = dir.join("ref.trace.json");
+
+    bj.time_stage("write_stores", || {
+        let mut w = StoreWriter::create(&ref_path).unwrap();
+        write_trace(&reference, &mut w).unwrap();
+        w.set_estimate(&est.rel, cfg.eps);
+        w.finish().unwrap();
+        let mut w = StoreWriter::create(&cand_path).unwrap();
+        write_trace(&candidate, &mut w).unwrap();
+        w.finish().unwrap();
+    });
+    bj.time_stage("write_json", || reference.save(&json_path).unwrap());
+
+    let (ref_store, open_s) = time_once(|| StoreReader::open(&ref_path).unwrap());
+    let cand_store = StoreReader::open(&cand_path).unwrap();
+    bj.stage("open_stores", open_s);
+
+    let st_mem = time(1, reps, || {
+        let out = check_traces(&reference, &candidate, &est.rel, &cfg).unwrap();
+        assert!(!out.pass, "bug 1 must fail the in-memory check");
+    });
+    let st_off = time(1, reps, || {
+        let out = check_stores(&ref_store, &cand_store, ref_store.estimate(),
+                               &cfg).unwrap();
+        assert!(!out.pass, "bug 1 must fail the offline check");
+    });
+    bj.stage("check_in_memory", st_mem.mean_s);
+    bj.stage("check_offline", st_off.mean_s);
+
+    let ttrc_bytes = std::fs::metadata(&ref_path).unwrap().len();
+    let json_bytes = std::fs::metadata(&json_path).unwrap().len();
+
+    let mut t = Table::new(&["stage", "mean", "min"]);
+    t.row(&["in-memory check".into(), fmt_s(st_mem.mean_s),
+            fmt_s(st_mem.min_s)]);
+    t.row(&["streaming offline check".into(), fmt_s(st_off.mean_s),
+            fmt_s(st_off.min_s)]);
+    t.print();
+    t.write_csv("results/offline_check.csv").unwrap();
+    println!("\nreference store: {} ({} ids, {} shards); JSON dump: {} \
+              ({:.1}x larger); offline vs in-memory check: {:.2}x",
+             fmt_bytes(ttrc_bytes), ref_store.len(), ref_store.shard_count(),
+             fmt_bytes(json_bytes), json_bytes as f64 / ttrc_bytes as f64,
+             st_off.mean_s / st_mem.mean_s);
+    bj.write().unwrap();
+}

@@ -1,16 +1,29 @@
 //! `ttrace` — CLI for the TTrace reproduction.
 //!
 //! Subcommands:
-//!   check   run the full differential check of a candidate configuration
-//!           (optionally with an injected bug) against its reference
-//!   train   run training and print the loss curve
-//!   bugs    list the 14 reproducible Table-1 bugs
+//!   check          run the full differential check of a candidate
+//!                  configuration (optionally with an injected bug)
+//!                  against its reference, in-process
+//!   record         run one traced iteration and persist it as a binary
+//!                  `.ttrc` store (reference or candidate side)
+//!   check-offline  differential check of two `.ttrc` stores recorded by
+//!                  separate `record` invocations (separate processes or
+//!                  machines — the paper's deployment mode)
+//!   inspect        describe a `.ttrc` store (ids, shapes, shard layouts)
+//!   train          run training and print the loss curve
+//!   bugs           list the 14 reproducible Table-1 bugs
 //!
 //! Examples:
 //!   ttrace check --model tiny --tp 2 --layers 2
 //!   ttrace check --model tiny --tp 2 --bug 1 --localize
+//!   ttrace record --tp 2 --reference --out ref.ttrc
+//!   ttrace record --tp 2 --bug 1 --out cand.ttrc
+//!   ttrace check-offline ref.ttrc cand.ttrc
+//!   ttrace inspect ref.ttrc
 //!   ttrace train --model e2e --steps 100 --tp 2
 //!   ttrace bugs
+
+use std::path::Path;
 
 use anyhow::{bail, Result};
 
@@ -19,18 +32,25 @@ use ttrace::data::{CorpusData, DataSource, GenData};
 use ttrace::dist::Topology;
 use ttrace::model::{mean_losses, preset, run_training, Engine, ParCfg};
 use ttrace::runtime::Executor;
-use ttrace::ttrace::{localized_module, report, ttrace_check, CheckCfg, NoopHooks};
-use ttrace::util::bench::{fmt_s, time_once};
+use ttrace::ttrace::store::{check_stores, layout_of, write_trace, StoreReader,
+                            StoreWriter};
+use ttrace::ttrace::{localized_module, reference_of, report, threshold,
+                     ttrace_check, CheckCfg, Collector, NoopHooks};
+use ttrace::util::bench::{fmt_bytes, fmt_s, time_once};
 use ttrace::util::cli::Cli;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match argv.first().map(|s| s.as_str()) {
         Some("check") => run(check(&argv[1..])),
+        Some("record") => run(record(&argv[1..])),
+        Some("check-offline") => run(check_offline(&argv[1..])),
+        Some("inspect") => run(inspect(&argv[1..])),
         Some("train") => run(train(&argv[1..])),
         Some("bugs") => run(bugs()),
         _ => {
-            eprintln!("usage: ttrace <check|train|bugs> [options]\n\
+            eprintln!("usage: ttrace <check|record|check-offline|inspect|\
+                       train|bugs> [options]\n\
                        run `ttrace check --help` etc. for details");
             2
         }
@@ -137,6 +157,154 @@ fn check(argv: &[String]) -> Result<i32> {
         println!("wrote {out}");
     }
     Ok(if run_out.outcome.pass { 0 } else { 1 })
+}
+
+fn record(argv: &[String]) -> Result<i32> {
+    let cli = parcfg_cli(Cli::new("run one traced iteration and persist it \
+                                   as a binary .ttrc trace store"))
+        .opt("bug", "0", "Table-1 bug number (0 = none). Injected into a \
+                          candidate run; with --reference it only arms the \
+                          bug's parallel config (dp/fp8/moe/...) so the \
+                          recorded reference matches that candidate")
+        .req("out", "output .ttrc path")
+        .opt("json", "", "also dump the trace as (bit-exact) debug JSON here")
+        .flag("reference", "record this config's single-device reference and \
+                            embed per-tensor threshold estimates");
+    let args = cli.parse_from(argv)?;
+    let (m, mut p, layers) = parse_parcfg(&args)?;
+    let is_ref = args.flag("reference");
+    let bug_no = args.get_usize("bug")?;
+    // Arming must happen on both sides — some bugs change the parallel
+    // config (dp, fp8, moe), and the reference is derived from the *armed*
+    // candidate config, exactly as in-process `ttrace_check` does. Only a
+    // candidate run actually injects the fault; the reference is trusted.
+    let bugs = if bug_no == 0 {
+        BugSet::none()
+    } else {
+        let bug = find_bug(bug_no)?;
+        bug.arm_parcfg(&mut p);
+        if is_ref { BugSet::none() } else { BugSet::one(bug) }
+    };
+    if is_ref {
+        p = reference_of(&p);
+    }
+    let cfg = CheckCfg::default();
+    let exec = Executor::load(ttrace::default_artifacts_dir())?;
+    let data = data_source(args.get("data"), m.v)?;
+    let out = std::path::PathBuf::from(args.get("out"));
+    let est = if is_ref {
+        // the §5.2 estimates ride along in the store so `check-offline`
+        // derives the same thresholds as the in-process workflow
+        Some(threshold::estimate(&m, &p, layers, &exec, data.as_ref(),
+                                 cfg.eps as f32, 1)?)
+    } else {
+        None
+    };
+    let engine = Engine::new(m, p.clone(), layers, &exec, bugs)?;
+    let collector = Collector::new();
+    let (_, dt) = time_once(|| run_training(&engine, data.as_ref(),
+                                            &collector, 1));
+    // only touch --out once the run has succeeded: a failure above must
+    // not truncate a previously recorded store at the same path
+    let mut w = StoreWriter::create(&out)?;
+    if let Some(est) = &est {
+        w.set_estimate(&est.rel, cfg.eps);
+    }
+    let json_path = args.get("json").to_string();
+    let summary = if json_path.is_empty() {
+        collector.write_store(&mut w)?;
+        w.finish()?
+    } else {
+        let trace = collector.into_trace();
+        trace.save(Path::new(&json_path))?;
+        write_trace(&trace, &mut w)?;
+        w.finish()?
+    };
+    println!("recorded {} ({}) on {}: {} ids / {} shards, {} payload, \
+              {} file, run {}",
+             out.display(), if is_ref { "reference" } else { "candidate" },
+             p.topo.describe(), summary.ids, summary.shards,
+             fmt_bytes(summary.payload_bytes), fmt_bytes(summary.file_bytes),
+             fmt_s(dt));
+    if !json_path.is_empty() {
+        println!("wrote JSON dump {} ({})", json_path,
+                 fmt_bytes(std::fs::metadata(&json_path)?.len()));
+    }
+    Ok(0)
+}
+
+fn check_offline(argv: &[String]) -> Result<i32> {
+    let cli = Cli::new("differential check of two .ttrc stores recorded by \
+                        separate `ttrace record` runs")
+        .pos("reference.ttrc", "store from `ttrace record --reference`")
+        .pos("candidate.ttrc", "store from the candidate run")
+        .opt("safety", "8", "threshold safety multiplier")
+        .opt("rows", "32", "max report rows before passing tensors are elided")
+        .opt("out", "", "write the JSON report to this path");
+    let args = cli.parse_from(argv)?;
+    let reference = StoreReader::open(Path::new(args.pos(0)))?;
+    let candidate = StoreReader::open(Path::new(args.pos(1)))?;
+    let mut cfg = CheckCfg { safety: args.get_f64("safety")?,
+                             ..CheckCfg::default() };
+    if let Some(eps) = reference.estimate_eps() {
+        cfg.eps = eps; // thresholds must use the eps the estimates used
+    }
+    if reference.estimate().is_empty() {
+        eprintln!("note: {} carries no threshold estimates (recorded without \
+                   --reference?); falling back to the floor threshold",
+                  args.pos(0));
+    }
+    let (res, dt) = time_once(|| check_stores(&reference, &candidate,
+                                              reference.estimate(), &cfg));
+    let outcome = res?;
+    println!("{}", report::render(&outcome, &cfg, args.get_usize("rows")?));
+    println!("offline check time: {} ({} ids; {} + {} of payload read \
+              one canonical id at a time)",
+             fmt_s(dt), reference.len(),
+             fmt_bytes(reference.payload_bytes()),
+             fmt_bytes(candidate.payload_bytes()));
+    let out = args.get("out");
+    if !out.is_empty() {
+        std::fs::write(out, report::to_json(&outcome, &cfg).to_string_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(if outcome.pass { 0 } else { 1 })
+}
+
+fn inspect(argv: &[String]) -> Result<i32> {
+    let cli = Cli::new("describe a .ttrc trace store")
+        .pos("store.ttrc", "the store to describe")
+        .opt("limit", "40", "max canonical ids to list (0 = all)");
+    let args = cli.parse_from(argv)?;
+    let store = StoreReader::open(Path::new(args.pos(0)))?;
+    println!("{}: ttrc v{}, {} canonical ids, {} shards, {} payload \
+              ({} file)",
+             args.pos(0), store.version(), store.len(), store.shard_count(),
+             fmt_bytes(store.payload_bytes()), fmt_bytes(store.file_bytes()));
+    if let Some(eps) = store.estimate_eps() {
+        println!("embedded threshold estimates: {} tensors (eps {:.3e})",
+                 store.estimate().len(), eps);
+    }
+    let limit = args.get_usize("limit")?;
+    println!();
+    println!("{:<52} {:<5} {:<18} {:>6} {:>10}  layout",
+             "canonical id", "dtype", "global dims", "shards", "bytes");
+    let mut shown = 0usize;
+    for key in store.keys() {
+        if limit != 0 && shown >= limit {
+            println!("... {} more ids (raise --limit) ...",
+                     store.len() - shown);
+            break;
+        }
+        shown += 1;
+        let metas = store.shards(key).expect("key from the index");
+        let bytes: u64 = metas.iter().map(|m| m.len).sum();
+        println!("{:<52} {:<5} {:<18} {:>6} {:>10}  {}",
+                 key, metas[0].dtype.name(),
+                 format!("{:?}", metas[0].spec.global_dims), metas.len(),
+                 bytes, layout_of(metas));
+    }
+    Ok(0)
 }
 
 fn train(argv: &[String]) -> Result<i32> {

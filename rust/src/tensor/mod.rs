@@ -208,6 +208,31 @@ impl Tensor {
         t
     }
 
+    // ---- raw bytes (the `.ttrc` store's Raw32 payload encoding) ---------
+
+    /// The payload as little-endian f32 bit patterns, 4 bytes/element.
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        out
+    }
+
+    /// Bit-exact inverse of `to_le_bytes`.
+    pub fn from_le_bytes(dims: &[usize], bytes: &[u8], dtype: DType) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("payload is {} bytes, but shape {:?} needs {}",
+                  bytes.len(), dims, n * 4);
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect();
+        Ok(Tensor::new(dims, data, dtype))
+    }
+
     // ---- norms / comparisons -------------------------------------------
 
     /// Frobenius norm (f64 accumulation — the checker must not itself
@@ -336,6 +361,19 @@ mod tests {
         let b = t(&[1], &[crate::util::bf16::EPS_BF16 / 4.0]);
         assert_eq!(a.add_bf16(&b).data[0], 1.0); // swallowed by rounding
         assert!(a.add(&b).data[0] > 1.0); // f32 add keeps it
+    }
+
+    #[test]
+    fn le_bytes_roundtrip_is_bit_exact() {
+        let vals = vec![1.5f32, -0.0, f32::NAN, f32::INFINITY, 3.4e38, 1e-45];
+        let x = Tensor::new(&[6], vals.clone(), DType::F32);
+        let b = x.to_le_bytes();
+        assert_eq!(b.len(), 24);
+        let back = Tensor::from_le_bytes(&[6], &b, DType::F32).unwrap();
+        let got: Vec<u32> = back.data.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+        assert!(Tensor::from_le_bytes(&[5], &b, DType::F32).is_err());
     }
 
     #[test]

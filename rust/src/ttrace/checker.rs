@@ -18,7 +18,7 @@ use anyhow::Result;
 use crate::util::bf16::EPS_BF16;
 
 use super::canonical::names;
-use super::collector::Trace;
+use super::collector::{Entry, Trace};
 use super::hooks::{CanonId, Kind};
 use super::merger;
 
@@ -104,22 +104,24 @@ pub fn comp_order(id: &CanonId) -> (u64, u32, u32, i64, i64, i64) {
     }
 }
 
-/// Per-key outcome of the (parallel) merge+compare stage.
-enum KeyVerdict {
+/// Per-key outcome of the (parallel) merge+compare stage. Shared with the
+/// streaming offline checker (`ttrace::store::check_stores`).
+pub(crate) enum KeyVerdict {
     MissingInCandidate,
     MergeError(String),
     Check(TensorCheck),
 }
 
 /// Merge both sides of one canonical id and compare — the unit of work the
-/// checker fans out across the thread pool.
-fn check_one(reference: &Trace, candidate: &Trace,
-             estimate: &HashMap<String, f64>, cfg: &CheckCfg, floor: f64,
-             id: &CanonId, key: &str) -> KeyVerdict {
-    let Some(cand_entries) = candidate.get(key) else {
+/// in-memory and offline checkers fan out across the thread pool. The
+/// entries may come from a `Trace` or from a `.ttrc` store; the verdict is
+/// a pure function of the bits either way.
+pub(crate) fn check_one_id(ref_entries: &[Entry], cand_entries: Option<&[Entry]>,
+                           estimate: &HashMap<String, f64>, cfg: &CheckCfg,
+                           floor: f64, id: &CanonId, key: &str) -> KeyVerdict {
+    let Some(cand_entries) = cand_entries else {
         return KeyVerdict::MissingInCandidate;
     };
-    let ref_entries = reference.get(key).unwrap();
     let ref_full = match merger::merge(ref_entries) {
         Ok(m) => m.full,
         Err(e) => return KeyVerdict::MergeError(format!("reference: {e:#}")),
@@ -183,8 +185,9 @@ pub fn check_traces(reference: &Trace, candidate: &Trace,
         keys.chunks(CHUNK).zip(verdicts.chunks_mut(CHUNK)),
         |_, (ks, slots)| {
             for ((id, key), slot) in ks.iter().zip(slots.iter_mut()) {
-                *slot = Some(check_one(reference, candidate, estimate, cfg,
-                                       floor, id, key));
+                *slot = Some(check_one_id(
+                    reference.get(key).expect("key came from the reference"),
+                    candidate.get(key), estimate, cfg, floor, id, key));
             }
         });
 

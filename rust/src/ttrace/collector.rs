@@ -76,6 +76,12 @@ impl Trace {
     }
 
     // ---- persistence (traces are dumped to disk when a run ends) --------
+    //
+    // JSON is the human-readable debug format next to the binary `.ttrc`
+    // store (`ttrace::store`); both are bit-exact. Finite f32 values ride
+    // the f64 number path (exact — every f32 is an f64, and decimal ->
+    // f64 -> f32 is innocuous double rounding); non-finite values become
+    // bit-pattern hex strings so NaN payloads survive too.
 
     pub fn to_json(&self) -> Json {
         let mut entries = Json::obj();
@@ -89,7 +95,7 @@ impl Trace {
                     o.set("dims", Json::Arr(e.data.dims.iter()
                         .map(|&d| Json::from_usize(d)).collect()));
                     o.set("data", Json::Arr(e.data.data.iter()
-                        .map(|&v| Json::from_f64(v as f64)).collect()));
+                        .map(|&v| f32_to_json(v)).collect()));
                     o
                 })
                 .collect();
@@ -111,7 +117,7 @@ impl Trace {
                 let dims: Vec<usize> = e.req("dims")?.as_arr()?
                     .iter().map(|d| d.as_usize()).collect::<Result<_>>()?;
                 let data: Vec<f32> = e.req("data")?.as_arr()?
-                    .iter().map(|v| Ok(v.as_f64()? as f32)).collect::<Result<_>>()?;
+                    .iter().map(f32_from_json).collect::<Result<_>>()?;
                 shards.push(Entry { spec, data: Tensor::new(&dims, data, dtype) });
             }
             trace.entries.insert(key.clone(), shards);
@@ -130,6 +136,28 @@ impl Trace {
     pub fn load(path: &std::path::Path) -> Result<Trace> {
         Trace::from_json(&Json::parse_file(path)?)
     }
+}
+
+/// Bit-exact f32 -> JSON element: finite values as numbers (the f64 value
+/// is exactly the f32; its shortest-roundtrip text parses back to the same
+/// bits), non-finite as f32 bit-pattern hex strings.
+fn f32_to_json(v: f32) -> Json {
+    if v.is_finite() {
+        Json::from_f64(v as f64)
+    } else {
+        Json::from_str_(&format!("0x{:08x}", v.to_bits()))
+    }
+}
+
+/// Inverse of `f32_to_json`; also accepts plain numbers from older trace
+/// dumps.
+fn f32_from_json(j: &Json) -> Result<f32> {
+    if let Ok(s) = j.as_str() {
+        let hex = s.strip_prefix("0x")
+            .ok_or_else(|| anyhow::anyhow!("bad f32 element '{s}'"))?;
+        return Ok(f32::from_bits(u32::from_str_radix(hex, 16)?));
+    }
+    Ok(j.as_f64()? as f32)
 }
 
 /// How module inputs are treated during collection.
@@ -229,11 +257,12 @@ impl Collector {
         });
     }
 
-    /// Assemble the trace. All rank threads must have joined (true by
-    /// construction after `run_spmd`); the calling thread's own pending
-    /// buffers are drained here. Segments merge in ascending rank order,
-    /// making the entry order deterministic regardless of scheduling.
-    pub fn into_trace(self) -> Trace {
+    /// Drain every flushed (and this thread's pending) buffer of this
+    /// collector and hand back the per-rank segments in ascending rank
+    /// order — the deterministic entry order both `into_trace` and
+    /// `write_store` build on. All rank threads must have joined (true by
+    /// construction after `run_spmd`).
+    fn drain_segments(&self) -> Vec<(usize, Vec<(String, Entry)>)> {
         LOCAL.with(|l| {
             let mut bufs = l.borrow_mut();
             let mut i = 0;
@@ -250,13 +279,33 @@ impl Collector {
         // stable: equal ranks (sequential reuse of one collector) keep
         // their flush order
         segments.sort_by_key(|(rank, _)| *rank);
+        segments
+    }
+
+    /// Assemble the trace. Segments merge in ascending rank order, making
+    /// the entry order deterministic regardless of scheduling.
+    pub fn into_trace(self) -> Trace {
         let mut trace = Trace::default();
-        for (_, items) in segments {
+        for (_, items) in self.drain_segments() {
             for (key, entry) in items {
                 trace.entries.entry(key).or_default().push(entry);
             }
         }
         trace
+    }
+
+    /// Stream this run's records straight into a `.ttrc` store writer —
+    /// per-rank segments append in ascending rank order (the same
+    /// byte-stable ordering contract as `into_trace`), and each entry is
+    /// released as soon as its payload hits the file, so persisting never
+    /// builds a second in-memory `Trace`.
+    pub fn write_store(self, w: &mut super::store::StoreWriter) -> Result<()> {
+        for (_, items) in self.drain_segments() {
+            for (key, entry) in items {
+                w.append(&key, &entry)?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -396,5 +445,28 @@ mod tests {
         let back = Trace::from_json(&trace.to_json()).unwrap();
         let e = &back.get("i0/m0/main_grad/w").unwrap()[0];
         assert_eq!(e.data, t);
+    }
+
+    #[test]
+    fn trace_json_roundtrip_is_bit_exact() {
+        // full text round trip (serialize -> parse -> deserialize) over the
+        // hard cases: negative zero, NaN with a payload, infinities,
+        // subnormals, extreme magnitudes, and a value that needs all 9
+        // significant decimal digits
+        let vals = vec![1.5, -2.25, 0.1f32, -0.0f32, f32::NAN,
+                        f32::from_bits(0x7fc0_0abc), f32::INFINITY,
+                        f32::NEG_INFINITY, f32::from_bits(1), 3.4e38f32,
+                        0.123_456_79_f32];
+        let c = Collector::new();
+        let t = Tensor::new(&[11], vals.clone(), DType::F32);
+        c.record(&id(Kind::MainGrad, "w"), &t, &ShardSpec::full(&[11]));
+        let trace = c.into_trace();
+        let text = trace.to_json().to_string_compact();
+        let back = Trace::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let e = &back.get("i0/m0/main_grad/w").unwrap()[0];
+        let got: Vec<u32> = e.data.data.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+        assert_eq!(e.data.dtype, DType::F32);
     }
 }

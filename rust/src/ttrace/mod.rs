@@ -1,6 +1,8 @@
 //! TTrace — the paper's contribution: trace collection, canonical tensor
 //! mapping, consistent tensor generation, shard merging, perturbation-based
-//! threshold estimation, differential checking and bug localization.
+//! threshold estimation, differential checking and bug localization; plus
+//! the `.ttrc` binary trace store (`store`) that decouples collection from
+//! checking so reference and candidate can come from separate processes.
 
 pub mod annot;
 pub mod canonical;
@@ -12,6 +14,7 @@ pub mod merger;
 pub mod report;
 pub mod runner;
 pub mod shard;
+pub mod store;
 pub mod threshold;
 
 pub use checker::{check_traces, CheckCfg, CheckOutcome};
@@ -19,3 +22,4 @@ pub use runner::{localized_module, reference_of, ttrace_check, TtraceRun};
 pub use collector::{Collector, Trace};
 pub use hooks::{CanonId, Hooks, Kind, NoopHooks};
 pub use shard::ShardSpec;
+pub use store::{check_stores, StoreReader, StoreWriter};

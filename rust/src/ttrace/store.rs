@@ -1,0 +1,1100 @@
+//! `.ttrc` — the binary trace store (the production-shaped persistence
+//! layer the paper's deployment assumes: the framework under test dumps
+//! traces to shared storage and the checker compares them out-of-band).
+//!
+//! ## Format (version 1, little-endian throughout)
+//!
+//! ```text
+//! [0..4)   magic  b"TTRC"
+//! [4..6)   format version (u16)
+//! [6..8)   reserved (0)
+//! [8..S)   payload blob: raw tensor bytes, one slot per recorded shard,
+//!          in record order (ascending rank, the PR-2 ordering contract)
+//! [S..I)   string table: u32 count, then (u32 len, utf-8 bytes) each —
+//!          every canonical id appears exactly once
+//! [I..E)   index: u32 id count, then per canonical id (sorted by key):
+//!          u32 string idx, u32 shard count, then per shard: dtype tag,
+//!          payload encoding tag, `ShardSpec` (partial flag, global dims,
+//!          dim maps) and u64 payload offset — the local shape and payload
+//!          length are derived (`spec.local_dims()`, numel x encoding
+//!          width), so they cannot disagree with the spec
+//! [E..T)   threshold estimates (empty unless recorded with --reference):
+//!          u64 eps bits (f64; 0 = none), u32 count, then per entry
+//!          u32 string idx + u64 f64 bits of the §5.2 relative estimate
+//! [T..)    trailer (32 bytes): u64 S, u64 I, u64 E, u64 FNV-1a checksum
+//!          of every byte before the checksum field
+//! ```
+//!
+//! Payload encodings are bit-exact: `Raw32` stores the f32 bit patterns;
+//! `Packed16` stores only the upper 16 bits and is chosen automatically
+//! when every element's low 16 bits are zero — true for all bf16-rounded
+//! tensors (bf16 *is* the top half of the f32 pattern), which is most of a
+//! trace, so stores run ~2 bytes/element against ~10+ for the JSON dump.
+//!
+//! `StoreWriter` streams shards as they are appended (the collector flushes
+//! into it at rank join) and only buffers index metadata; `StoreReader`
+//! loads the index up front and reads one canonical id's shard set at a
+//! time via positioned reads, never materializing a full `Trace`. On top of
+//! the two sits [`check_stores`], the streaming offline checker: peak
+//! memory is one canonical id's shards per worker instead of two whole
+//! traces.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::{DType, Tensor};
+use crate::util::rng::{fnv1a_update, FNV_OFFSET_BASIS};
+
+use super::checker::{check_one_id, comp_order, CheckCfg, CheckOutcome, KeyVerdict};
+use super::collector::{Entry, Trace};
+use super::hooks::CanonId;
+use super::shard::{DimMap, Piece, ShardSpec};
+
+const MAGIC: &[u8; 4] = b"TTRC";
+const VERSION: u16 = 1;
+const HEADER_LEN: u64 = 8;
+const TRAILER_LEN: u64 = 32;
+
+/// How a shard's payload bytes encode its f32 values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Encoding {
+    /// 4 bytes/element: the f32 bit pattern, little-endian.
+    Raw32,
+    /// 2 bytes/element: the upper half of the f32 bit pattern — lossless
+    /// exactly when every element's low 16 bits are zero (bf16 values).
+    Packed16,
+}
+
+/// One shard's index entry: everything but the payload bytes. `dims` and
+/// `len` are derived from the spec and encoding when the index is read —
+/// they are not stored on disk.
+#[derive(Clone, Debug)]
+pub struct ShardMeta {
+    pub spec: ShardSpec,
+    pub dtype: DType,
+    /// local (recorded) dims — always `spec.local_dims()`
+    pub dims: Vec<usize>,
+    pub encoding: Encoding,
+    /// absolute file offset of the payload
+    pub offset: u64,
+    /// payload length in bytes
+    pub len: u64,
+}
+
+/// What `StoreWriter::finish` reports.
+#[derive(Clone, Debug)]
+pub struct StoreSummary {
+    pub ids: usize,
+    pub shards: usize,
+    pub payload_bytes: u64,
+    pub file_bytes: u64,
+}
+
+// ---- little-endian serialization helpers -------------------------------
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn dtype_tag(d: DType) -> u8 {
+    match d {
+        DType::Bf16 => 0,
+        DType::F32 => 1,
+        DType::I32 => 2,
+    }
+}
+
+fn put_shard(buf: &mut Vec<u8>, m: &ShardMeta) {
+    put_u8(buf, dtype_tag(m.dtype));
+    put_u8(buf, match m.encoding {
+        Encoding::Raw32 => 0,
+        Encoding::Packed16 => 1,
+    });
+    put_u8(buf, m.spec.partial as u8);
+    put_u8(buf, m.spec.global_dims.len() as u8);
+    for &d in &m.spec.global_dims {
+        put_u32(buf, d as u32);
+    }
+    put_u8(buf, m.spec.maps.len() as u8);
+    for map in &m.spec.maps {
+        put_u8(buf, map.dim as u8);
+        put_u16(buf, map.pieces.len() as u16);
+        for p in &map.pieces {
+            put_u32(buf, p.global_start as u32);
+            put_u32(buf, p.len as u32);
+        }
+    }
+    put_u64(buf, m.offset);
+}
+
+/// Pack `data` into 2 bytes/element if that loses nothing (all low 16 bits
+/// of every f32 pattern are zero — bf16-rounded values).
+fn packed16(data: &[f32]) -> Option<Vec<u8>> {
+    if !data.iter().all(|v| v.to_bits() & 0xFFFF == 0) {
+        return None;
+    }
+    let mut out = Vec::with_capacity(data.len() * 2);
+    for v in data {
+        out.extend_from_slice(&(((v.to_bits() >> 16) as u16).to_le_bytes()));
+    }
+    Some(out)
+}
+
+// ---- positioned reads ---------------------------------------------------
+
+#[cfg(unix)]
+fn read_exact_at(file: &fs::File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    std::os::unix::fs::FileExt::read_exact_at(file, buf, off)
+}
+
+#[cfg(not(unix))]
+fn read_exact_at(file: &fs::File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = file;
+    f.seek(SeekFrom::Start(off))?;
+    f.read_exact(buf)
+}
+
+fn checksum_of(file: &fs::File, len: u64, path: &Path) -> Result<u64> {
+    let mut h = FNV_OFFSET_BASIS;
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut off = 0u64;
+    while off < len {
+        let n = ((len - off) as usize).min(buf.len());
+        read_exact_at(file, &mut buf[..n], off)
+            .map_err(|e| anyhow!("{}: reading [{off}, {}): {e}",
+                                 path.display(), off + n as u64))?;
+        h = fnv1a_update(h, &buf[..n]);
+        off += n as u64;
+    }
+    Ok(h)
+}
+
+// ---- writer -------------------------------------------------------------
+
+/// Streaming `.ttrc` writer: payloads go to disk as they are appended (in
+/// the caller's order — the collector appends per-rank segments in
+/// ascending rank order), only index metadata stays in memory until
+/// `finish` seals the file. Same inputs produce byte-identical files.
+pub struct StoreWriter {
+    path: PathBuf,
+    file: fs::File,
+    hash: u64,
+    offset: u64,
+    index: BTreeMap<String, Vec<ShardMeta>>,
+    estimate: BTreeMap<String, f64>,
+    estimate_eps: f64,
+}
+
+impl StoreWriter {
+    pub fn create(path: &Path) -> Result<StoreWriter> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)
+                    .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
+            }
+        }
+        let file = fs::File::create(path)
+            .map_err(|e| anyhow!("creating {}: {e}", path.display()))?;
+        let mut w = StoreWriter {
+            path: path.to_path_buf(),
+            file,
+            hash: FNV_OFFSET_BASIS,
+            offset: 0,
+            index: BTreeMap::new(),
+            estimate: BTreeMap::new(),
+            estimate_eps: 0.0,
+        };
+        let mut head = Vec::with_capacity(HEADER_LEN as usize);
+        head.extend_from_slice(MAGIC);
+        put_u16(&mut head, VERSION);
+        put_u16(&mut head, 0); // reserved
+        w.write_bytes(&head)?;
+        Ok(w)
+    }
+
+    fn write_bytes(&mut self, b: &[u8]) -> Result<()> {
+        self.hash = fnv1a_update(self.hash, b);
+        self.file
+            .write_all(b)
+            .map_err(|e| anyhow!("writing {}: {e}", self.path.display()))?;
+        self.offset += b.len() as u64;
+        Ok(())
+    }
+
+    /// Append one recorded shard under its canonical id. The payload is
+    /// written immediately; the entry's tensor is not retained.
+    pub fn append(&mut self, key: &str, entry: &Entry) -> Result<()> {
+        // the format stores no local shape — it derives it from the spec,
+        // so a mismatched entry must be rejected here, not discovered later
+        if entry.data.dims != entry.spec.local_dims() {
+            bail!("'{key}': tensor dims {:?} don't match the shard spec's \
+                   local dims {:?}", entry.data.dims, entry.spec.local_dims());
+        }
+        // the spec serializes with narrow fields (u8 dim count/index, u32
+        // extents, u16 piece count) — refuse anything that would wrap
+        // instead of writing a checksum-valid store that decodes wrong
+        let spec = &entry.spec;
+        if spec.global_dims.len() > u8::MAX as usize
+            || spec.maps.len() > u8::MAX as usize
+            || spec.global_dims.iter().any(|&d| d > u32::MAX as usize)
+            || spec.maps.iter().any(|m| {
+                m.dim > u8::MAX as usize
+                    || m.pieces.len() > u16::MAX as usize
+                    || m.pieces.iter().any(|p| {
+                        p.global_start > u32::MAX as usize
+                            || p.len > u32::MAX as usize
+                    })
+            })
+        {
+            bail!("'{key}': shard spec exceeds the .ttrc v{VERSION} field \
+                   widths (u8 ranks, u32 extents, u16 pieces): {spec:?}");
+        }
+        let (encoding, bytes) = match packed16(&entry.data.data) {
+            Some(b) => (Encoding::Packed16, b),
+            None => (Encoding::Raw32, entry.data.to_le_bytes()),
+        };
+        let meta = ShardMeta {
+            spec: entry.spec.clone(),
+            dtype: entry.data.dtype,
+            dims: entry.data.dims.clone(),
+            encoding,
+            offset: self.offset,
+            len: bytes.len() as u64,
+        };
+        self.write_bytes(&bytes)?;
+        self.index.entry(key.to_string()).or_default().push(meta);
+        Ok(())
+    }
+
+    /// Embed the §5.2 per-tensor threshold estimates (reference stores
+    /// only), so `check-offline` derives the same thresholds as the
+    /// in-process workflow. `eps` is the machine epsilon the estimate was
+    /// computed with.
+    pub fn set_estimate(&mut self, rel: &HashMap<String, f64>, eps: f64) {
+        self.estimate = rel.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        self.estimate_eps = eps;
+    }
+
+    /// Write string table, index, estimates and trailer; seal the file.
+    pub fn finish(mut self) -> Result<StoreSummary> {
+        let index = std::mem::take(&mut self.index);
+        let estimate = std::mem::take(&mut self.estimate);
+        let eps = self.estimate_eps;
+
+        let mut names: BTreeSet<String> = index.keys().cloned().collect();
+        names.extend(estimate.keys().cloned());
+        let sid: HashMap<String, u32> = names
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.clone(), i as u32))
+            .collect();
+
+        let string_table_offset = self.offset;
+        let mut buf = Vec::new();
+        put_u32(&mut buf, names.len() as u32);
+        for s in &names {
+            put_str(&mut buf, s);
+        }
+        self.write_bytes(&buf)?;
+
+        let index_offset = self.offset;
+        let mut buf = Vec::new();
+        put_u32(&mut buf, index.len() as u32);
+        let mut shards = 0usize;
+        for (key, metas) in &index {
+            put_u32(&mut buf, sid[key]);
+            put_u32(&mut buf, metas.len() as u32);
+            for m in metas {
+                put_shard(&mut buf, m);
+                shards += 1;
+            }
+        }
+        self.write_bytes(&buf)?;
+
+        let estimates_offset = self.offset;
+        let mut buf = Vec::new();
+        put_u64(&mut buf, eps.to_bits());
+        put_u32(&mut buf, estimate.len() as u32);
+        for (key, v) in &estimate {
+            put_u32(&mut buf, sid[key]);
+            put_u64(&mut buf, v.to_bits());
+        }
+        self.write_bytes(&buf)?;
+
+        let mut tail = Vec::with_capacity(24);
+        put_u64(&mut tail, string_table_offset);
+        put_u64(&mut tail, index_offset);
+        put_u64(&mut tail, estimates_offset);
+        self.write_bytes(&tail)?;
+        let checksum = self.hash;
+        self.file
+            .write_all(&checksum.to_le_bytes())
+            .map_err(|e| anyhow!("writing {}: {e}", self.path.display()))?;
+        self.offset += 8;
+        self.file
+            .flush()
+            .map_err(|e| anyhow!("flushing {}: {e}", self.path.display()))?;
+        Ok(StoreSummary {
+            ids: index.len(),
+            shards,
+            payload_bytes: string_table_offset - HEADER_LEN,
+            file_bytes: self.offset,
+        })
+    }
+}
+
+/// Write a fully-assembled trace into `w`, key order. (The collector
+/// streams without building a `Trace` — see `Collector::write_store`; this
+/// path serves traces that are already in memory.)
+pub fn write_trace(trace: &Trace, w: &mut StoreWriter) -> Result<()> {
+    for (key, entries) in &trace.entries {
+        for e in entries {
+            w.append(key, e)?;
+        }
+    }
+    Ok(())
+}
+
+// ---- reader -------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor over a metadata section; every
+/// error names the file and the absolute offset it occurred at.
+struct Cursor<'a> {
+    path: &'a Path,
+    buf: &'a [u8],
+    pos: usize,
+    /// absolute file offset of `buf[0]`
+    base: u64,
+}
+
+impl<'a> Cursor<'a> {
+    fn abs(&self) -> u64 {
+        self.base + self.pos as u64
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!("{}: truncated metadata at offset {} (need {n} bytes, \
+                   {} left) — the file is corrupt",
+                  self.path.display(), self.abs(), self.buf.len() - self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let at = self.abs();
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow!("{}: invalid utf-8 string at offset {at}",
+                                 self.path.display()))
+    }
+}
+
+fn read_shard(c: &mut Cursor) -> Result<ShardMeta> {
+    let at = c.abs();
+    let dtype = match c.u8()? {
+        0 => DType::Bf16,
+        1 => DType::F32,
+        2 => DType::I32,
+        t => bail!("{}: unknown dtype tag {t} at offset {at}", c.path.display()),
+    };
+    let encoding = match c.u8()? {
+        0 => Encoding::Raw32,
+        1 => Encoding::Packed16,
+        t => bail!("{}: unknown payload encoding tag {t} at offset {}",
+                   c.path.display(), at + 1),
+    };
+    let partial = c.u8()? != 0;
+    let ng = c.u8()? as usize;
+    let mut global_dims = Vec::with_capacity(ng);
+    for _ in 0..ng {
+        global_dims.push(c.u32()? as usize);
+    }
+    let nmaps = c.u8()? as usize;
+    let mut maps = Vec::with_capacity(nmaps);
+    for _ in 0..nmaps {
+        let dim = c.u8()? as usize;
+        if dim >= global_dims.len() {
+            bail!("{}: shard map dim {dim} out of range for global dims \
+                   {global_dims:?} (near offset {})", c.path.display(), c.abs());
+        }
+        let np = c.u16()? as usize;
+        let mut pieces = Vec::with_capacity(np);
+        for _ in 0..np {
+            let global_start = c.u32()? as usize;
+            let len = c.u32()? as usize;
+            pieces.push(Piece { global_start, len });
+        }
+        maps.push(DimMap { dim, pieces });
+    }
+    let offset = c.u64()?;
+    let spec = ShardSpec { global_dims, maps, partial };
+    // local shape and payload length are a function of the spec + encoding
+    let dims = spec.local_dims();
+    let numel: usize = dims.iter().product();
+    let len = match encoding {
+        Encoding::Raw32 => numel as u64 * 4,
+        Encoding::Packed16 => numel as u64 * 2,
+    };
+    Ok(ShardMeta { spec, dtype, dims, encoding, offset, len })
+}
+
+/// Random-access `.ttrc` reader. `open` validates magic, version, checksum
+/// and every index entry's payload slot; after that, `read_entries` loads
+/// one canonical id's shard set at a time via positioned reads (safe to
+/// call from many threads at once), so checking never needs a whole trace
+/// in memory.
+#[derive(Debug)]
+pub struct StoreReader {
+    path: PathBuf,
+    file: fs::File,
+    file_len: u64,
+    version: u16,
+    /// first byte past the payload blob (= string table offset)
+    payload_end: u64,
+    index: BTreeMap<String, Vec<ShardMeta>>,
+    estimate: HashMap<String, f64>,
+    estimate_eps: Option<f64>,
+    #[cfg(not(unix))]
+    seek_lock: std::sync::Mutex<()>,
+}
+
+impl StoreReader {
+    pub fn open(path: &Path) -> Result<StoreReader> {
+        let file = fs::File::open(path)
+            .map_err(|e| anyhow!("opening {}: {e}", path.display()))?;
+        let file_len = file
+            .metadata()
+            .map_err(|e| anyhow!("stat {}: {e}", path.display()))?
+            .len();
+        if file_len < HEADER_LEN + TRAILER_LEN {
+            bail!("{}: too small to be a .ttrc store ({file_len} bytes; a \
+                   valid store is at least {} bytes)",
+                  path.display(), HEADER_LEN + TRAILER_LEN);
+        }
+        let mut head = [0u8; HEADER_LEN as usize];
+        read_exact_at(&file, &mut head, 0)
+            .map_err(|e| anyhow!("{}: reading header: {e}", path.display()))?;
+        if &head[0..4] != MAGIC {
+            bail!("{}: not a .ttrc store (bad magic {:02x?} at offset 0, \
+                   expected {:02x?} = \"TTRC\")",
+                  path.display(), &head[0..4], MAGIC);
+        }
+        let version = u16::from_le_bytes([head[4], head[5]]);
+        if version != VERSION {
+            bail!("{}: unsupported .ttrc version {version} at offset 4 \
+                   (this build reads version {VERSION})", path.display());
+        }
+        // The checksum covers every byte before its own 8-byte slot; a
+        // truncated or bit-flipped file cannot pass it.
+        let computed = checksum_of(&file, file_len - 8, path)?;
+        let mut tail = [0u8; 8];
+        read_exact_at(&file, &mut tail, file_len - 8)
+            .map_err(|e| anyhow!("{}: reading checksum: {e}", path.display()))?;
+        let stored = u64::from_le_bytes(tail);
+        if stored != computed {
+            bail!("{}: checksum mismatch (stored {stored:#018x} at offset {}, \
+                   computed {computed:#018x}) — the file is corrupt or \
+                   truncated", path.display(), file_len - 8);
+        }
+        let mut tr = [0u8; 24];
+        read_exact_at(&file, &mut tr, file_len - TRAILER_LEN)
+            .map_err(|e| anyhow!("{}: reading trailer: {e}", path.display()))?;
+        let st_off = u64::from_le_bytes(tr[0..8].try_into().unwrap());
+        let idx_off = u64::from_le_bytes(tr[8..16].try_into().unwrap());
+        let est_off = u64::from_le_bytes(tr[16..24].try_into().unwrap());
+        let sections_end = file_len - TRAILER_LEN;
+        if !(HEADER_LEN <= st_off && st_off <= idx_off && idx_off <= est_off
+             && est_off <= sections_end) {
+            bail!("{}: corrupt section offsets in trailer at offset \
+                   {sections_end} (string table {st_off}, index {idx_off}, \
+                   estimates {est_off}, file length {file_len})",
+                  path.display());
+        }
+
+        let mut sec = vec![0u8; (sections_end - st_off) as usize];
+        read_exact_at(&file, &mut sec, st_off)
+            .map_err(|e| anyhow!("{}: reading metadata sections: {e}",
+                                 path.display()))?;
+
+        // string table
+        let mut c = Cursor { path, buf: &sec, pos: 0, base: st_off };
+        let n = c.u32()? as usize;
+        let mut strings = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            strings.push(c.str()?);
+        }
+        if c.abs() != idx_off {
+            bail!("{}: string table ends at offset {} but the index starts \
+                   at {idx_off}", path.display(), c.abs());
+        }
+
+        // index
+        let n_ids = c.u32()? as usize;
+        let mut index: BTreeMap<String, Vec<ShardMeta>> = BTreeMap::new();
+        for _ in 0..n_ids {
+            let kidx = c.u32()? as usize;
+            let key = strings
+                .get(kidx)
+                .ok_or_else(|| anyhow!("{}: index references string {kidx} \
+                                        of {}", path.display(), strings.len()))?
+                .clone();
+            let n_shards = c.u32()? as usize;
+            let mut metas = Vec::with_capacity(n_shards.min(1 << 20));
+            for si in 0..n_shards {
+                let m = read_shard(&mut c)?;
+                // shape and length derive from the spec, so the only way a
+                // payload can be wrong is by falling outside the blob
+                // (checked add: a crafted offset must not wrap past it)
+                let end = m.offset.checked_add(m.len);
+                if m.offset < HEADER_LEN || end.is_none()
+                    || end.unwrap() > st_off {
+                    bail!("{}: truncated payload for '{key}' shard {si}: \
+                           [{}, +{}) exceeds the payload region \
+                           [{HEADER_LEN}, {st_off})",
+                          path.display(), m.offset, m.len);
+                }
+                metas.push(m);
+            }
+            index.insert(key, metas);
+        }
+        if c.abs() != est_off {
+            bail!("{}: index ends at offset {} but the estimates section \
+                   starts at {est_off}", path.display(), c.abs());
+        }
+
+        // threshold estimates
+        let eps = f64::from_bits(c.u64()?);
+        let ne = c.u32()? as usize;
+        let mut estimate = HashMap::with_capacity(ne.min(1 << 20));
+        for _ in 0..ne {
+            let kidx = c.u32()? as usize;
+            let key = strings
+                .get(kidx)
+                .ok_or_else(|| anyhow!("{}: estimates reference string {kidx} \
+                                        of {}", path.display(), strings.len()))?
+                .clone();
+            estimate.insert(key, f64::from_bits(c.u64()?));
+        }
+
+        Ok(StoreReader {
+            path: path.to_path_buf(),
+            file,
+            file_len,
+            version,
+            payload_end: st_off,
+            index,
+            estimate,
+            estimate_eps: if eps > 0.0 { Some(eps) } else { None },
+            #[cfg(not(unix))]
+            seek_lock: std::sync::Mutex::new(()),
+        })
+    }
+
+    fn read_at(&self, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+        #[cfg(not(unix))]
+        let _guard = self.seek_lock.lock().unwrap();
+        read_exact_at(&self.file, buf, off)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
+    /// Number of canonical ids in the store.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.index.values().map(|v| v.len()).sum()
+    }
+
+    pub fn payload_bytes(&self) -> u64 {
+        self.payload_end - HEADER_LEN
+    }
+
+    pub fn file_bytes(&self) -> u64 {
+        self.file_len
+    }
+
+    /// Canonical ids, sorted (BTreeMap key order — same as `Trace`).
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.index.keys()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.index.contains_key(key)
+    }
+
+    /// Index metadata of one canonical id's shards (no payload I/O).
+    pub fn shards(&self, key: &str) -> Option<&[ShardMeta]> {
+        self.index.get(key).map(|v| v.as_slice())
+    }
+
+    /// Embedded §5.2 threshold estimates (empty for candidate stores).
+    pub fn estimate(&self) -> &HashMap<String, f64> {
+        &self.estimate
+    }
+
+    /// The machine epsilon the embedded estimates were computed with.
+    pub fn estimate_eps(&self) -> Option<f64> {
+        self.estimate_eps
+    }
+
+    /// Load one canonical id's shard set (positioned reads; thread-safe).
+    /// Returns `None` for ids the store doesn't hold.
+    pub fn read_entries(&self, key: &str) -> Result<Option<Vec<Entry>>> {
+        let Some(metas) = self.index.get(key) else {
+            return Ok(None);
+        };
+        let mut out = Vec::with_capacity(metas.len());
+        for (si, m) in metas.iter().enumerate() {
+            let mut buf = vec![0u8; m.len as usize];
+            self.read_at(&mut buf, m.offset).map_err(|e| {
+                anyhow!("{}: reading payload of '{key}' shard {si} at \
+                         [{}, {}): {e}",
+                        self.path.display(), m.offset, m.offset + m.len)
+            })?;
+            let data = match m.encoding {
+                Encoding::Raw32 => {
+                    Tensor::from_le_bytes(&m.dims, &buf, m.dtype).map_err(|e| {
+                        anyhow!("{}: payload of '{key}' shard {si}: {e}",
+                                self.path.display())
+                    })?
+                }
+                Encoding::Packed16 => {
+                    let vals: Vec<f32> = buf
+                        .chunks_exact(2)
+                        .map(|c| {
+                            let hi = u16::from_le_bytes([c[0], c[1]]) as u32;
+                            f32::from_bits(hi << 16)
+                        })
+                        .collect();
+                    Tensor::new(&m.dims, vals, m.dtype)
+                }
+            };
+            out.push(Entry { spec: m.spec.clone(), data });
+        }
+        Ok(Some(out))
+    }
+}
+
+/// One-line human summary of a shard layout (for `ttrace inspect`).
+pub fn layout_of(metas: &[ShardMeta]) -> String {
+    let n = metas.len();
+    if metas.iter().all(|m| m.spec.is_full()) {
+        return if n == 1 { "full".to_string() } else { format!("replicated x{n}") };
+    }
+    let dims: BTreeSet<usize> = metas
+        .iter()
+        .flat_map(|m| m.spec.maps.iter().map(|mp| mp.dim))
+        .collect();
+    let dims: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+    let partial = metas.iter().any(|m| m.spec.partial);
+    format!("{n} shards over dim{} {}{}",
+            if dims.len() > 1 { "s" } else { "" },
+            dims.join(","),
+            if partial { " (partial sums)" } else { "" })
+}
+
+// ---- streaming offline checker ------------------------------------------
+
+/// Differential testing of two `.ttrc` stores — the out-of-band deployment
+/// mode of the paper: reference and candidate were recorded by separate
+/// processes (or machines) and are compared from files alone.
+///
+/// Iterates the reference's canonical ids in model-computation order and
+/// fans the per-id load+merge+compare across `util::par`'s scoped pool;
+/// each worker holds at most one canonical id's shard set (both sides) at
+/// a time, so peak memory is bounded regardless of trace size. Verdicts
+/// land in per-key result slots, making the outcome identical to the
+/// in-memory `check_traces` for any worker count.
+pub fn check_stores(reference: &StoreReader, candidate: &StoreReader,
+                    estimate: &HashMap<String, f64>, cfg: &CheckCfg)
+                    -> Result<CheckOutcome> {
+    let floor = cfg.floor * cfg.eps;
+    let mut keys: Vec<(CanonId, String)> = reference
+        .keys()
+        .filter_map(|k| CanonId::parse(k).map(|id| (id, k.clone())))
+        .collect();
+    keys.sort_by_key(|(id, _)| comp_order(id));
+
+    const CHUNK: usize = 8;
+    let mut slots: Vec<Option<Result<KeyVerdict>>> = Vec::new();
+    slots.resize_with(keys.len(), || None);
+    crate::util::par::par_items(
+        keys.chunks(CHUNK).zip(slots.chunks_mut(CHUNK)),
+        |_, (ks, out)| {
+            for ((id, key), slot) in ks.iter().zip(out.iter_mut()) {
+                *slot = Some(check_store_one(reference, candidate, estimate,
+                                             cfg, floor, id, key));
+            }
+        });
+
+    let mut out = CheckOutcome::default();
+    for ((_, key), slot) in keys.into_iter().zip(slots) {
+        match slot.expect("every key got a verdict")? {
+            KeyVerdict::MissingInCandidate => out.missing_in_candidate.push(key),
+            KeyVerdict::MergeError(e) => out.merge_errors.push((key, e)),
+            KeyVerdict::Check(c) => out.checks.push(c),
+        }
+    }
+    for key in candidate.keys() {
+        if !reference.contains(key) {
+            out.missing_in_reference.push(key.clone());
+        }
+    }
+    out.pass = out.checks.iter().all(|c| c.pass)
+        && out.merge_errors.is_empty()
+        && out.missing_in_candidate.is_empty();
+    Ok(out)
+}
+
+/// Load + merge + compare one canonical id from both stores. The loaded
+/// shard sets are dropped when this returns — the streaming memory bound.
+fn check_store_one(reference: &StoreReader, candidate: &StoreReader,
+                   estimate: &HashMap<String, f64>, cfg: &CheckCfg,
+                   floor: f64, id: &CanonId, key: &str) -> Result<KeyVerdict> {
+    // index-only miss check first — don't pay a reference payload read for
+    // an id the candidate doesn't even hold
+    if !candidate.contains(key) {
+        return Ok(KeyVerdict::MissingInCandidate);
+    }
+    let ref_entries = reference
+        .read_entries(key)?
+        .expect("key came from the reference index");
+    let cand_entries = candidate.read_entries(key)?;
+    Ok(check_one_id(&ref_entries, cand_entries.as_deref(), estimate, cfg,
+                    floor, id, key))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttrace::checker::check_traces;
+    use crate::util::bf16::round_bf16;
+    use crate::util::prop::{check, Gen};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("ttrace_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.data.iter().map(|v| v.to_bits()).collect()
+    }
+
+    fn entry(spec: ShardSpec, dims: &[usize], vals: Vec<f32>, dtype: DType) -> Entry {
+        Entry { spec, data: Tensor::new(dims, vals, dtype) }
+    }
+
+    /// A small two-id store: a tp-split bf16 tensor and an f32 tensor with
+    /// non-finite values.
+    fn sample_entries() -> Vec<(String, Entry)> {
+        vec![
+            ("i0/m0/act/layers.0.mlp".into(),
+             entry(ShardSpec::split(&[4], 0, 0, 2), &[2],
+                   vec![round_bf16(0.33), round_bf16(-1.7)], DType::Bf16)),
+            ("i0/m0/act/layers.0.mlp".into(),
+             entry(ShardSpec::split(&[4], 0, 1, 2), &[2],
+                   vec![round_bf16(2.5), round_bf16(0.01)], DType::Bf16)),
+            ("i0/m0/main_grad/w".into(),
+             entry(ShardSpec::full(&[4]), &[4],
+                   vec![0.1, -0.0, f32::NAN, f32::INFINITY], DType::F32)),
+        ]
+    }
+
+    fn write_sample(path: &Path) -> StoreSummary {
+        let mut w = StoreWriter::create(path).unwrap();
+        for (k, e) in sample_entries() {
+            w.append(&k, &e).unwrap();
+        }
+        let mut est = HashMap::new();
+        est.insert("i0/m0/act/layers.0.mlp".to_string(), 0.001953125);
+        w.set_estimate(&est, 0.0078125);
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let path = tmp("roundtrip.ttrc");
+        let summary = write_sample(&path);
+        assert_eq!(summary.ids, 2);
+        assert_eq!(summary.shards, 3);
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.shard_count(), 3);
+        let want: BTreeMap<String, Vec<Entry>> = {
+            let mut m: BTreeMap<String, Vec<Entry>> = BTreeMap::new();
+            for (k, e) in sample_entries() {
+                m.entry(k).or_default().push(e);
+            }
+            m
+        };
+        for (key, entries) in &want {
+            let got = r.read_entries(key).unwrap().unwrap();
+            assert_eq!(got.len(), entries.len(), "{key}");
+            for (g, w) in got.iter().zip(entries) {
+                assert_eq!(g.spec, w.spec, "{key}");
+                assert_eq!(g.data.dims, w.data.dims, "{key}");
+                assert_eq!(g.data.dtype, w.data.dtype, "{key}");
+                assert_eq!(bits(&g.data), bits(&w.data), "{key}");
+            }
+        }
+        assert!(r.read_entries("i9/m9/act/nope").unwrap().is_none());
+        // estimates ride along, f64-exact
+        assert_eq!(r.estimate().len(), 1);
+        assert_eq!(r.estimate()["i0/m0/act/layers.0.mlp"].to_bits(),
+                   0.001953125f64.to_bits());
+        assert_eq!(r.estimate_eps(), Some(0.0078125));
+    }
+
+    #[test]
+    fn bf16_payloads_pack_to_two_bytes() {
+        let path = tmp("packing.ttrc");
+        write_sample(&path);
+        let r = StoreReader::open(&path).unwrap();
+        let acts = r.shards("i0/m0/act/layers.0.mlp").unwrap();
+        assert!(acts.iter().all(|m| m.encoding == Encoding::Packed16));
+        assert_eq!(acts[0].len, 4); // 2 bf16 elements x 2 bytes
+        let grads = r.shards("i0/m0/main_grad/w").unwrap();
+        assert_eq!(grads[0].encoding, Encoding::Raw32); // 0.1 needs all 32 bits
+    }
+
+    #[test]
+    fn store_files_are_byte_stable() {
+        let pa = tmp("stable_a.ttrc");
+        let pb = tmp("stable_b.ttrc");
+        write_sample(&pa);
+        write_sample(&pb);
+        assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+    }
+
+    #[test]
+    fn reader_errors_name_file_and_offset() {
+        // not a store at all
+        let bogus = tmp("bogus.ttrc");
+        std::fs::write(&bogus, b"definitely not a trace store, but long \
+                                 enough to get past the size check").unwrap();
+        let err = format!("{:#}", StoreReader::open(&bogus).unwrap_err());
+        assert!(err.contains("bad magic"), "{err}");
+        assert!(err.contains("bogus.ttrc"), "{err}");
+
+        // too small
+        let tiny = tmp("tiny.ttrc");
+        std::fs::write(&tiny, b"TTRC").unwrap();
+        let err = format!("{:#}", StoreReader::open(&tiny).unwrap_err());
+        assert!(err.contains("too small"), "{err}");
+
+        // unsupported version (byte 4), detected before the checksum
+        let vers = tmp("version.ttrc");
+        write_sample(&vers);
+        let mut b = std::fs::read(&vers).unwrap();
+        b[4] = 9;
+        std::fs::write(&vers, &b).unwrap();
+        let err = format!("{:#}", StoreReader::open(&vers).unwrap_err());
+        assert!(err.contains("version 9"), "{err}");
+
+        // a flipped payload byte fails the checksum
+        let corrupt = tmp("corrupt.ttrc");
+        write_sample(&corrupt);
+        let mut b = std::fs::read(&corrupt).unwrap();
+        b[10] ^= 0xFF;
+        std::fs::write(&corrupt, &b).unwrap();
+        let err = format!("{:#}", StoreReader::open(&corrupt).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("corrupt.ttrc"), "{err}");
+
+        // a truncated file fails the checksum too
+        let trunc = tmp("trunc.ttrc");
+        write_sample(&trunc);
+        let b = std::fs::read(&trunc).unwrap();
+        std::fs::write(&trunc, &b[..b.len() - 40]).unwrap();
+        let err = format!("{:#}", StoreReader::open(&trunc).unwrap_err());
+        assert!(err.contains("checksum mismatch") || err.contains("truncated"),
+                "{err}");
+    }
+
+    #[test]
+    fn check_stores_matches_check_traces() {
+        let mk = |key: &str, vals: &[f32]| -> (String, Entry) {
+            (key.to_string(),
+             entry(ShardSpec::full(&[vals.len()]), &[vals.len()],
+                   vals.to_vec(), DType::Bf16))
+        };
+        let ref_entries = vec![
+            mk("i0/m0/act/layers.0.mlp", &[1.0, 2.0]),
+            mk("i0/m0/act/layers.1.mlp", &[3.0, 4.0]),
+        ];
+        let cand_entries = vec![
+            mk("i0/m0/act/layers.0.mlp", &[1.0, 2.0]),
+            mk("i0/m0/act/layers.1.mlp", &[3.0, 8.0]), // diverges
+        ];
+        let to_trace = |items: &[(String, Entry)]| -> Trace {
+            let mut t = Trace::default();
+            for (k, e) in items {
+                t.entries.entry(k.clone()).or_default().push(e.clone());
+            }
+            t
+        };
+        let ref_trace = to_trace(&ref_entries);
+        let cand_trace = to_trace(&cand_entries);
+
+        let rp = tmp("cmp_ref.ttrc");
+        let cp = tmp("cmp_cand.ttrc");
+        let mut w = StoreWriter::create(&rp).unwrap();
+        write_trace(&ref_trace, &mut w).unwrap();
+        w.finish().unwrap();
+        let mut w = StoreWriter::create(&cp).unwrap();
+        write_trace(&cand_trace, &mut w).unwrap();
+        w.finish().unwrap();
+
+        let cfg = CheckCfg::default();
+        let est = HashMap::new();
+        let mem = check_traces(&ref_trace, &cand_trace, &est, &cfg).unwrap();
+        let off = check_stores(&StoreReader::open(&rp).unwrap(),
+                               &StoreReader::open(&cp).unwrap(),
+                               &est, &cfg).unwrap();
+        assert_eq!(mem.pass, off.pass);
+        assert_eq!(mem.checks.len(), off.checks.len());
+        for (a, b) in mem.checks.iter().zip(&off.checks) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.rel_err.to_bits(), b.rel_err.to_bits());
+            assert_eq!(a.threshold.to_bits(), b.threshold.to_bits());
+            assert_eq!(a.pass, b.pass);
+        }
+        assert_eq!(mem.first_divergence().map(|c| c.key.clone()),
+                   off.first_divergence().map(|c| c.key.clone()));
+    }
+
+    #[test]
+    fn prop_store_roundtrip_random_shapes_dtypes_specs() {
+        check("store roundtrip", |rng| {
+            let path = tmp(&format!("prop_{}.ttrc", rng.below(u64::MAX)));
+            let mut written: Vec<(String, Entry)> = Vec::new();
+            let n_keys = Gen::range(rng, 1, 3);
+            for ki in 0..n_keys {
+                let key = format!("i0/m0/act/layers.{ki}.prop");
+                let rank = Gen::range(rng, 1, 3);
+                let dims: Vec<usize> =
+                    (0..rank).map(|_| Gen::pow2(rng, 2, 8)).collect();
+                let dtype = *Gen::choice(rng, &[DType::Bf16, DType::F32,
+                                                DType::I32]);
+                let mode = Gen::range(rng, 0, 2);
+                let specs: Vec<ShardSpec> = match mode {
+                    // single full shard
+                    0 => vec![ShardSpec::full(&dims)],
+                    // replicated pair
+                    1 => vec![ShardSpec::full(&dims); 2],
+                    // 2-way split along a random dim
+                    _ => {
+                        let d = Gen::range(rng, 0, rank - 1);
+                        (0..2).map(|i| ShardSpec::split(&dims, d, i, 2))
+                              .collect()
+                    }
+                };
+                // replicated copies must hold identical bits
+                let full_n: usize = dims.iter().product();
+                let mut full = Gen::vec_normal(rng, full_n, 1.0);
+                match dtype {
+                    DType::Bf16 => crate::util::bf16::round_slice_bf16(&mut full),
+                    DType::I32 => full.iter_mut().for_each(|v| *v = v.round()),
+                    DType::F32 => {
+                        // poison with the hard cases sometimes
+                        if !full.is_empty() && rng.below(2) == 0 {
+                            full[0] = f32::from_bits(0x7fc0_0abc); // NaN+payload
+                            if full.len() > 1 {
+                                full[1] = -0.0;
+                            }
+                        }
+                    }
+                }
+                let full_t = Tensor::new(&dims, full, dtype);
+                for spec in specs {
+                    let local = spec.extract_local(&full_t);
+                    let mut local = local;
+                    local.dtype = dtype;
+                    written.push((key.clone(), Entry { spec, data: local }));
+                }
+            }
+            let mut w = StoreWriter::create(&path).map_err(|e| e.to_string())?;
+            for (k, e) in &written {
+                w.append(k, e).map_err(|e| e.to_string())?;
+            }
+            w.finish().map_err(|e| e.to_string())?;
+            let r = StoreReader::open(&path).map_err(|e| e.to_string())?;
+            let mut want: BTreeMap<String, Vec<&Entry>> = BTreeMap::new();
+            for (k, e) in &written {
+                want.entry(k.clone()).or_default().push(e);
+            }
+            for (key, entries) in &want {
+                let got = r.read_entries(key).map_err(|e| e.to_string())?
+                    .ok_or_else(|| format!("{key} missing"))?;
+                if got.len() != entries.len() {
+                    return Err(format!("{key}: {} shards, wanted {}",
+                                       got.len(), entries.len()));
+                }
+                for (g, w) in got.iter().zip(entries) {
+                    if g.spec != w.spec || g.data.dims != w.data.dims
+                        || g.data.dtype != w.data.dtype
+                        || bits(&g.data) != bits(&w.data) {
+                        return Err(format!("{key}: shard mismatch"));
+                    }
+                }
+            }
+            let _ = std::fs::remove_file(&path);
+            Ok(())
+        });
+    }
+}

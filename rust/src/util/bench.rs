@@ -184,6 +184,21 @@ impl BenchJson {
     }
 }
 
+/// Human format for byte counts.
+pub fn fmt_bytes(n: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let f = n as f64;
+    if f < KIB {
+        format!("{n}B")
+    } else if f < KIB * KIB {
+        format!("{:.1}KiB", f / KIB)
+    } else if f < KIB * KIB * KIB {
+        format!("{:.1}MiB", f / (KIB * KIB))
+    } else {
+        format!("{:.2}GiB", f / (KIB * KIB * KIB))
+    }
+}
+
 /// Human format for seconds.
 pub fn fmt_s(s: f64) -> String {
     if s < 1e-6 {
@@ -227,6 +242,9 @@ mod tests {
         assert!(fmt_s(2.0).ends_with('s'));
         assert!(fmt_s(0.002).ends_with("ms"));
         assert!(fmt_s(2e-6).ends_with("µs"));
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+        assert!(fmt_bytes(3 * 1024 * 1024).ends_with("MiB"));
     }
 
     #[test]

@@ -16,10 +16,18 @@ pub struct Opt {
     pub is_flag: bool,
 }
 
+/// A required positional argument (e.g. `check-offline <ref> <cand>`).
+#[derive(Clone, Debug)]
+pub struct PosOpt {
+    pub name: &'static str,
+    pub help: &'static str,
+}
+
 #[derive(Default)]
 pub struct Cli {
     pub about: &'static str,
     opts: Vec<Opt>,
+    pos: Vec<PosOpt>,
 }
 
 #[derive(Debug, Default)]
@@ -31,7 +39,7 @@ pub struct Args {
 
 impl Cli {
     pub fn new(about: &'static str) -> Self {
-        Cli { about, opts: Vec::new() }
+        Cli { about, opts: Vec::new(), pos: Vec::new() }
     }
 
     /// Register `--name <value>` with a default.
@@ -53,8 +61,27 @@ impl Cli {
         self
     }
 
+    /// Register a required positional argument. Registration order is the
+    /// command-line order; commands with registered positionals reject a
+    /// wrong argument count at parse time.
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.pos.push(PosOpt { name, help });
+        self
+    }
+
     pub fn usage(&self, prog: &str) -> String {
-        let mut s = format!("{}\n\nUSAGE: {prog} [OPTIONS]\n\nOPTIONS:\n", self.about);
+        let pos_usage: String =
+            self.pos.iter().map(|p| format!(" <{}>", p.name)).collect();
+        let mut s = format!("{}\n\nUSAGE: {prog} [OPTIONS]{pos_usage}\n",
+                            self.about);
+        if !self.pos.is_empty() {
+            s.push_str("\nARGS:\n");
+            for p in &self.pos {
+                s.push_str(&format!("{:<42} {}\n", format!("  <{}>", p.name),
+                                    p.help));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
         for o in &self.opts {
             let head = if o.is_flag {
                 format!("  --{}", o.name)
@@ -122,6 +149,13 @@ impl Cli {
                 bail!("missing required --{}\n{}", o.name, self.usage("<prog>"));
             }
         }
+        if !self.pos.is_empty() && args.positional.len() != self.pos.len() {
+            let names: Vec<String> =
+                self.pos.iter().map(|p| format!("<{}>", p.name)).collect();
+            bail!("expected {} positional argument(s): {} (got {})\n{}",
+                  self.pos.len(), names.join(" "), args.positional.len(),
+                  self.usage("<prog>"));
+        }
         Ok(args)
     }
 
@@ -156,6 +190,12 @@ impl Args {
             .flags
             .get(name)
             .unwrap_or_else(|| panic!("flag --{name} was not registered"))
+    }
+
+    /// The i-th positional argument (in-bounds after a parse that
+    /// registered positionals).
+    pub fn pos(&self, i: usize) -> &str {
+        &self.positional[i]
     }
 }
 
@@ -192,5 +232,19 @@ mod tests {
         assert!(cli.parse_from(&v(&[])).is_err());
         assert!(cli.parse_from(&v(&["--nope", "1"])).is_err());
         assert!(cli.parse_from(&v(&["--must", "1"])).is_ok());
+    }
+
+    #[test]
+    fn registered_positionals_check_arity() {
+        let cli = Cli::new("t").pos("ref", "reference file")
+                               .pos("cand", "candidate file")
+                               .opt("mode", "x", "");
+        assert!(cli.parse_from(&v(&["a"])).is_err());
+        assert!(cli.parse_from(&v(&["a", "b", "c"])).is_err());
+        let a = cli.parse_from(&v(&["a", "--mode=y", "b"])).unwrap();
+        assert_eq!(a.pos(0), "a");
+        assert_eq!(a.pos(1), "b");
+        assert_eq!(a.get("mode"), "y");
+        assert!(cli.usage("p").contains("<ref> <cand>"));
     }
 }

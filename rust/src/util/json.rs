@@ -69,6 +69,17 @@ impl Json {
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
+            // non-finite doubles serialize as 16-digit bit-pattern strings
+            Json::Str(s) => {
+                if let Some(hex) = s.strip_prefix("0x") {
+                    if hex.len() == 16 {
+                        if let Ok(bits) = u64::from_str_radix(hex, 16) {
+                            return Ok(f64::from_bits(bits));
+                        }
+                    }
+                }
+                bail!("not a number: {self:?}")
+            }
             _ => bail!("not a number: {self:?}"),
         }
     }
@@ -128,7 +139,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if n.is_nan() || n.is_infinite() {
+                    // JSON has no non-finite literals; emit the bit pattern
+                    // as a string (as_f64 reads it back exactly)
+                    let _ = write!(out, "\"0x{:016x}\"", n.to_bits());
+                } else if *n == 0.0 && n.is_sign_negative() {
+                    out.push_str("-0.0"); // the i64 path would drop the sign
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -426,6 +443,22 @@ mod tests {
         let arr = v.req("k").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 3);
         assert!(v.req("missing").is_err());
+    }
+
+    #[test]
+    fn non_finite_and_negative_zero_roundtrip() {
+        // -0.0 keeps its sign through text
+        let z = Json::Num(-0.0);
+        assert_eq!(z.to_string_compact(), "-0.0");
+        let back = Json::parse(&z.to_string_compact()).unwrap();
+        assert!(back.as_f64().unwrap().is_sign_negative());
+        // non-finite values become bit-pattern strings and read back exactly
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let j = Json::Num(v);
+            let text = j.to_string_compact();
+            let got = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(got.to_bits(), v.to_bits(), "{text}");
+        }
     }
 
     #[test]

@@ -76,10 +76,20 @@ impl Rng {
     }
 }
 
+/// FNV-1a 64-bit offset basis — the hash state before any byte.
+pub const FNV_OFFSET_BASIS: u64 = 0xcbf29ce484222325;
+
 /// FNV-1a 64-bit hash — stable across runs/platforms, used to derive RNG
 /// seeds from canonical tensor identifiers.
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
+    fnv1a_update(FNV_OFFSET_BASIS, bytes)
+}
+
+/// Incremental FNV-1a step: fold `bytes` into an existing hash state
+/// (seed with [`FNV_OFFSET_BASIS`]). Chunked hashing of a stream equals
+/// one-shot hashing of the concatenation — the `.ttrc` store checksums
+/// files this way.
+pub fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
@@ -136,5 +146,15 @@ mod tests {
         // Pinned value: the seed derivation is part of the trace format.
         assert_eq!(fnv1a(b"ttrace"), fnv1a(b"ttrace"));
         assert_ne!(fnv1a(b"ttrace"), fnv1a(b"ttracf"));
+    }
+
+    #[test]
+    fn fnv_chunked_equals_one_shot() {
+        let data = b"the .ttrc checksum is computed in 64KiB chunks";
+        let mut h = FNV_OFFSET_BASIS;
+        for chunk in data.chunks(7) {
+            h = fnv1a_update(h, chunk);
+        }
+        assert_eq!(h, fnv1a(data));
     }
 }

@@ -1,0 +1,158 @@
+//! Offline `.ttrc` workflow end-to-end, the way the paper deploys it:
+//! `ttrace record` runs in separate *processes* for the reference and the
+//! candidate, and `ttrace check-offline` must reproduce the in-process
+//! verdict — same pass/fail and same first-failing canonical id — from the
+//! store files alone, for a clean run and for Table-1 bugs. Also pins the
+//! size contract: the binary store is at least 5x smaller than the JSON
+//! debug dump of the same trace.
+
+use std::process::Command;
+
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::GenData;
+use ttrace::dist::Topology;
+use ttrace::model::{ParCfg, TINY};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::{ttrace_check, CheckCfg};
+use ttrace::util::json::Json;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ttrace"))
+}
+
+fn run_ok(args: &[&str]) {
+    let out = bin().args(args).output().expect("spawn ttrace");
+    assert!(out.status.success(), "ttrace {args:?} failed:\nstdout: {}\nstderr: {}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr));
+}
+
+#[test]
+fn offline_check_reproduces_in_process_verdicts() {
+    let dir = std::env::temp_dir().join("ttrace_offline_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let refp = dir.join("ref.ttrc");
+    let ref_json = dir.join("ref.trace.json");
+
+    // every candidate below is a tp=2 / dp=1 / micro=1 config, so they all
+    // share one single-device reference — record it (with embedded
+    // threshold estimates) once
+    run_ok(&["record", "--tp", "2", "--reference",
+             "--out", refp.to_str().unwrap(),
+             "--json", ref_json.to_str().unwrap()]);
+
+    // size contract: the binary store beats the JSON debug dump >= 5x
+    let ttrc_bytes = std::fs::metadata(&refp).unwrap().len();
+    let json_bytes = std::fs::metadata(&ref_json).unwrap().len();
+    assert!(ttrc_bytes * 5 <= json_bytes,
+            ".ttrc is {ttrc_bytes}B vs JSON {json_bytes}B — expected >= 5x \
+             smaller ({:.2}x)", json_bytes as f64 / ttrc_bytes as f64);
+
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let cases: [(usize, Option<BugId>); 4] = [
+        (0, None),
+        (1, Some(BugId::B1TpEmbeddingMask)),
+        (11, Some(BugId::B11TpOverlapGrads)),
+        (12, Some(BugId::B12SpLnSync)),
+    ];
+    for (bug_no, bug) in cases {
+        // candidate side, its own process
+        let cand = dir.join(format!("cand{bug_no}.ttrc"));
+        let report = dir.join(format!("report{bug_no}.json"));
+        let bug_no_s = bug_no.to_string();
+        let mut args = vec!["record", "--tp", "2",
+                            "--out", cand.to_str().unwrap()];
+        if bug_no != 0 {
+            args.push("--bug");
+            args.push(bug_no_s.as_str());
+        }
+        run_ok(&args);
+
+        // offline check, a third process, from the files alone
+        let out = bin()
+            .args(["check-offline", refp.to_str().unwrap(),
+                   cand.to_str().unwrap(), "--out", report.to_str().unwrap()])
+            .output()
+            .expect("spawn ttrace check-offline");
+        let code = out.status.code().expect("check-offline had no exit code");
+        assert!(code == 0 || code == 1,
+                "check-offline errored for bug {bug_no}:\n{}",
+                String::from_utf8_lossy(&out.stderr));
+
+        // the same differential check, in-process
+        let mut p = ParCfg::single();
+        p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+        let bugs = match bug {
+            None => BugSet::none(),
+            Some(b) => {
+                b.arm_parcfg(&mut p);
+                BugSet::one(b)
+            }
+        };
+        let run = ttrace_check(&TINY, &p, 2, &exec, &GenData, bugs,
+                               &CheckCfg::default(), false).unwrap();
+
+        assert_eq!(code == 0, run.outcome.pass,
+                   "offline verdict differs from in-process for bug {bug_no}");
+        let j = Json::parse_file(&report).unwrap();
+        assert_eq!(j.req("pass").unwrap().as_bool().unwrap(), run.outcome.pass,
+                   "report verdict differs for bug {bug_no}");
+        let offline_first = j.req("checks").unwrap().as_arr().unwrap().iter()
+            .find(|c| !c.req("pass").unwrap().as_bool().unwrap())
+            .map(|c| c.req("key").unwrap().as_str().unwrap().to_string());
+        let inproc_first = run.outcome.first_divergence().map(|c| c.key.clone());
+        assert_eq!(offline_first, inproc_first,
+                   "first failing canonical id differs for bug {bug_no}");
+    }
+
+    // inspect smoke: exits 0 and reports the store's id count
+    let out = bin().args(["inspect", refp.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(text.contains("canonical ids"), "{text}");
+}
+
+/// A bug whose arming changes the *reference-relevant* config (bug 4 arms
+/// dp=2, so the reference needs n_micro=2): `record --reference --bug N`
+/// must arm the same config without injecting the fault, or the stores
+/// cannot reproduce the in-process verdict.
+#[test]
+fn offline_check_handles_reference_affecting_bug_config() {
+    let dir = std::env::temp_dir().join("ttrace_offline_it_bug4");
+    std::fs::create_dir_all(&dir).unwrap();
+    let refp = dir.join("ref4.ttrc");
+    let cand = dir.join("cand4.ttrc");
+    let report = dir.join("report4.json");
+    run_ok(&["record", "--tp", "2", "--bug", "4", "--reference",
+             "--out", refp.to_str().unwrap()]);
+    run_ok(&["record", "--tp", "2", "--bug", "4",
+             "--out", cand.to_str().unwrap()]);
+    let out = bin()
+        .args(["check-offline", refp.to_str().unwrap(), cand.to_str().unwrap(),
+               "--out", report.to_str().unwrap()])
+        .output()
+        .expect("spawn ttrace check-offline");
+    let code = out.status.code().expect("check-offline had no exit code");
+    assert!(code == 0 || code == 1, "check-offline errored:\n{}",
+            String::from_utf8_lossy(&out.stderr));
+
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+    BugId::B4DpLossScale.arm_parcfg(&mut p);
+    let run = ttrace_check(&TINY, &p, 2, &exec, &GenData,
+                           BugSet::one(BugId::B4DpLossScale),
+                           &CheckCfg::default(), false).unwrap();
+    assert!(!run.outcome.pass, "bug 4 must be detected in-process");
+    assert_eq!(code == 0, run.outcome.pass,
+               "offline verdict differs from in-process for bug 4");
+    let j = Json::parse_file(&report).unwrap();
+    // the mis-scaled-loss candidate diverges, not merely misses ids: the
+    // reference config arming worked, and the first divergence agrees
+    let offline_first = j.req("checks").unwrap().as_arr().unwrap().iter()
+        .find(|c| !c.req("pass").unwrap().as_bool().unwrap())
+        .map(|c| c.req("key").unwrap().as_str().unwrap().to_string());
+    let inproc_first = run.outcome.first_divergence().map(|c| c.key.clone());
+    assert_eq!(offline_first, inproc_first,
+               "first failing canonical id differs for bug 4");
+}
