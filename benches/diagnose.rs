@@ -1,0 +1,83 @@
+//! Diagnosis-layer bench: what the dependency-aware localization
+//! (DAG + divergence frontier + per-shard attribution) costs on top of the
+//! plain streaming offline check, on a conflict-heavy Table-1 bug.
+//! `BENCH_SMOKE=1` shrinks the repeat count; wired into `make bench-smoke`.
+
+use ttrace::bugs::table1::bug_config;
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::GenData;
+use ttrace::model::TINY;
+use ttrace::runtime::Executor;
+use ttrace::ttrace::diagnose::{diagnose_stores, RunMeta};
+use ttrace::ttrace::store::{check_stores, write_trace, StoreReader, StoreWriter};
+use ttrace::ttrace::{reference_of, ttrace_check, CheckCfg};
+use ttrace::util::bench::{fmt_s, smoke_or, time, BenchJson, Table};
+
+fn main() {
+    let reps = smoke_or(20, 3);
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let cfg = CheckCfg::default();
+    let mut bj = BenchJson::new("diagnose");
+
+    // bug 11 (tp grad all-reduce skipped under overlap): a replica-conflict
+    // frontier, the densest shard-attribution path
+    let bug = BugId::B11TpOverlapGrads;
+    let p = bug_config(bug);
+    eprintln!("diagnose: collecting traces ({} candidate, bug 11)...",
+              p.topo.describe());
+    let run = bj.time_stage("trace_pair", || {
+        ttrace_check(&TINY, &p, 2, &exec, &GenData, BugSet::one(bug), &cfg,
+                     false).unwrap()
+    });
+    assert!(!run.outcome.pass, "bug 11 must be detected");
+
+    let dir = std::env::temp_dir().join("ttrace_bench_diagnose");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ref_path = dir.join("ref.ttrc");
+    let cand_path = dir.join("cand.ttrc");
+    bj.time_stage("write_stores", || {
+        let mut w = StoreWriter::create(&ref_path).unwrap();
+        w.set_estimate(&run.estimate, cfg.eps);
+        w.set_run_meta(&RunMeta::of_parcfg(&reference_of(&p)));
+        write_trace(&run.reference, &mut w).unwrap();
+        w.finish().unwrap();
+        let mut w = StoreWriter::create(&cand_path).unwrap();
+        w.set_run_meta(&RunMeta::of_parcfg(&p));
+        write_trace(&run.candidate, &mut w).unwrap();
+        w.finish().unwrap();
+    });
+    let ref_store = StoreReader::open(&ref_path).unwrap();
+    let cand_store = StoreReader::open(&cand_path).unwrap();
+
+    // plain streaming check vs check + frontier + shard attribution
+    let st_check = time(1, reps, || {
+        let out = check_stores(&ref_store, &cand_store, ref_store.estimate(),
+                               &cfg).unwrap();
+        assert!(!out.pass);
+    });
+    let st_diag = time(1, reps, || {
+        let (out, d) = diagnose_stores(&ref_store, &cand_store, &cfg).unwrap();
+        assert!(!out.pass && d.module.is_some());
+    });
+    bj.stage("check_stores", st_check.mean_s);
+    bj.stage("diagnose_stores", st_diag.mean_s);
+
+    let (out, d) = diagnose_stores(&ref_store, &cand_store, &cfg).unwrap();
+    let mut t = Table::new(&["stage", "mean", "min"]);
+    t.row(&["check_stores (plain verdict)".into(), fmt_s(st_check.mean_s),
+            fmt_s(st_check.min_s)]);
+    t.row(&["diagnose_stores (+frontier)".into(), fmt_s(st_diag.mean_s),
+            fmt_s(st_diag.min_s)]);
+    t.print();
+    t.write_csv("results/diagnose.csv").unwrap();
+    println!("\nfrontier: {} suspect(s), {} fallout of {} failing checks; \
+              blamed {} / {} / {}; diagnosis overhead {:.2}x over the plain \
+              check",
+             d.frontier.len(), d.fallout,
+             out.checks.iter().filter(|c| !c.pass).count(),
+             d.module.as_deref().unwrap_or("-"),
+             d.phase.map(|ph| ph.name()).unwrap_or("-"),
+             d.dims.first().map(|(dim, _)| dim.name()).unwrap_or("-"),
+             st_diag.mean_s / st_check.mean_s);
+    bj.write().unwrap();
+}

@@ -15,8 +15,13 @@ fn main() {
     let (rows, dt) = time_once(|| run_all(&TINY, 2, &exec).unwrap());
     bj.stage("bug_table", dt);
     let mut t = Table::new(&["ID", "New", "Type", "Description", "Impact",
-                             "Config", "Detected", "Localized at", "Loc ok"]);
+                             "Config", "Detected", "Localized at", "Loc ok",
+                             "Diagnosis (module@phase/dim)", "Diag ok"]);
     for r in &rows {
+        let diag = format!("{}@{}/{}",
+                           r.diagnosed_module.as_deref().unwrap_or("-"),
+                           r.diagnosed_phase.as_deref().unwrap_or("-"),
+                           r.diagnosed_dim.as_deref().unwrap_or("-"));
         t.row(&[r.number.to_string(),
                 if r.new { "Y" } else { "n" }.into(),
                 r.btype.into(),
@@ -25,12 +30,16 @@ fn main() {
                 r.config.clone(),
                 if r.detected { "YES" } else { "MISSED" }.into(),
                 r.localized.clone().unwrap_or_else(|| "-".into()),
-                if r.localization_ok { "yes" } else { "NO" }.into()]);
+                if r.localization_ok { "yes" } else { "NO" }.into(),
+                diag,
+                if r.diagnosis_ok { "yes" } else { "NO" }.into()]);
     }
     t.print();
     t.write_csv("results/table1_bugs.csv").unwrap();
     let detected = rows.iter().filter(|r| r.detected).count();
-    println!("\n{detected}/14 bugs detected in {}", fmt_s(dt));
+    let diagnosed = rows.iter().filter(|r| r.diagnosis_ok).count();
+    println!("\n{detected}/14 bugs detected, {diagnosed}/14 diagnosed to \
+              ground truth in {}", fmt_s(dt));
 
     if smoke() {
         println!("\n(smoke mode: clean sweep skipped)");

@@ -78,6 +78,11 @@ pub struct BugInfo {
     pub expect_module: &'static str,
     /// which trace kinds are expected to diverge
     pub expect_kinds: &'static str,
+    /// ground-truth parallelism dimension `ttrace::diagnose` must
+    /// implicate ("tp"/"cp"/"dp"/"pp"; "none" = single-device semantics)
+    pub expect_dim: &'static str,
+    /// ground-truth training phase ("fprop"/"bprop"/"wgrad"/"optimizer")
+    pub expect_phase: &'static str,
 }
 
 impl BugId {
@@ -99,6 +104,8 @@ impl BugId {
                 impact: "Wrong forward, gradients",
                 expect_module: "embedding.word_embeddings",
                 expect_kinds: "act",
+                expect_dim: "tp",
+                expect_phase: "fprop",
             },
             B2ArWrongInput => BugInfo {
                 id: *self, number: 2, new: false, btype: WCp,
@@ -106,6 +113,8 @@ impl BugId {
                 impact: "Wrong gradients",
                 expect_module: "layers.",
                 expect_kinds: "act_grad,param_grad",
+                expect_dim: "none",
+                expect_phase: "bprop",
             },
             B3CpLossScale => BugInfo {
                 id: *self, number: 3, new: false, btype: WCp,
@@ -113,6 +122,8 @@ impl BugId {
                 impact: "Wrong gradients",
                 expect_module: "output_layer",
                 expect_kinds: "act_grad,param_grad",
+                expect_dim: "cp",
+                expect_phase: "bprop",
             },
             B4DpLossScale => BugInfo {
                 id: *self, number: 4, new: false, btype: WCp,
@@ -120,6 +131,8 @@ impl BugId {
                 impact: "Wrong gradients",
                 expect_module: "output_layer",
                 expect_kinds: "act_grad,param_grad",
+                expect_dim: "dp",
+                expect_phase: "bprop",
             },
             B5ZeroUntiedEmbedding => BugInfo {
                 id: *self, number: 5, new: false, btype: WCm,
@@ -127,6 +140,8 @@ impl BugId {
                 impact: "Wrong parameter update",
                 expect_module: "embedding.word_embeddings",
                 expect_kinds: "main_grad,param",
+                expect_dim: "pp",
+                expect_phase: "wgrad",
             },
             B6SpRouterSync => BugInfo {
                 id: *self, number: 6, new: false, btype: MCm,
@@ -134,6 +149,8 @@ impl BugId {
                 impact: "Wrong gradients",
                 expect_module: "mlp.router",
                 expect_kinds: "main_grad",
+                expect_dim: "tp",
+                expect_phase: "wgrad",
             },
             B7Fp8WrongGroup => BugInfo {
                 id: *self, number: 7, new: false, btype: WCm,
@@ -141,6 +158,8 @@ impl BugId {
                 impact: "Wrong forward, gradients",
                 expect_module: "layers.",
                 expect_kinds: "act",
+                expect_dim: "tp",
+                expect_phase: "fprop",
             },
             B8ArFp8Cast => BugInfo {
                 id: *self, number: 8, new: false, btype: WCp,
@@ -148,6 +167,8 @@ impl BugId {
                 impact: "Wrong loss",
                 expect_module: "layers.",
                 expect_kinds: "act,loss",
+                expect_dim: "none",
+                expect_phase: "fprop",
             },
             B9ZeroUpdateFailure => BugInfo {
                 id: *self, number: 9, new: false, btype: WCm,
@@ -155,6 +176,8 @@ impl BugId {
                 impact: "No parameter update",
                 expect_module: "",
                 expect_kinds: "param",
+                expect_dim: "dp",
+                expect_phase: "optimizer",
             },
             B10PpStageDivision => BugInfo {
                 id: *self, number: 10, new: false, btype: WCp,
@@ -162,6 +185,8 @@ impl BugId {
                 impact: "Wrong model get trained",
                 expect_module: "layers.",
                 expect_kinds: "act",
+                expect_dim: "pp",
+                expect_phase: "fprop",
             },
             B11TpOverlapGrads => BugInfo {
                 id: *self, number: 11, new: false, btype: WCm,
@@ -169,6 +194,8 @@ impl BugId {
                 impact: "Wrong gradients",
                 expect_module: "layers.",
                 expect_kinds: "act_grad,param_grad",
+                expect_dim: "tp",
+                expect_phase: "bprop",
             },
             B12SpLnSync => BugInfo {
                 id: *self, number: 12, new: true, btype: MCm,
@@ -176,6 +203,8 @@ impl BugId {
                 impact: "Wrong gradients",
                 expect_module: "layernorm",
                 expect_kinds: "main_grad",
+                expect_dim: "tp",
+                expect_phase: "wgrad",
             },
             B13CpAttnGrads => BugInfo {
                 id: *self, number: 13, new: true, btype: WCp,
@@ -183,6 +212,8 @@ impl BugId {
                 impact: "Wrong gradients",
                 expect_module: "self_attention",
                 expect_kinds: "act_grad,param_grad",
+                expect_dim: "cp",
+                expect_phase: "bprop",
             },
             B14TpCpLnGrads => BugInfo {
                 id: *self, number: 14, new: true, btype: WCp,
@@ -190,6 +221,8 @@ impl BugId {
                 impact: "Wrong gradients",
                 expect_module: "layernorm",
                 expect_kinds: "main_grad",
+                expect_dim: "tp",
+                expect_phase: "wgrad",
             },
         }
     }

@@ -22,6 +22,13 @@ pub struct Table1Row {
     pub detected: bool,
     pub localized: Option<String>,
     pub localization_ok: bool,
+    /// dependency-aware diagnosis: blamed module, implicated dimension,
+    /// phase (from `ttrace::diagnose`)
+    pub diagnosed_module: Option<String>,
+    pub diagnosed_dim: Option<String>,
+    pub diagnosed_phase: Option<String>,
+    /// diagnosis matches the bug's ground-truth module+dimension+phase
+    pub diagnosis_ok: bool,
 }
 
 /// The armed parallel configuration for one bug on the given model.
@@ -47,6 +54,15 @@ pub fn run_one(bug: BugId, m: &ModelCfg, layers: usize, exec: &Executor)
         }
         None => false,
     };
+    let (diagnosed_module, diagnosed_dim, diagnosed_phase) = match &run.diagnosis {
+        Some(d) => (d.module.clone(),
+                    d.dims.first().map(|(dim, _)| dim.name().to_string()),
+                    d.phase.map(|p| p.name().to_string())),
+        None => (None, None, None),
+    };
+    let diagnosis_ok = diagnosis_matches(&info, diagnosed_module.as_deref(),
+                                         diagnosed_dim.as_deref(),
+                                         diagnosed_phase.as_deref());
     Ok(Table1Row {
         number: info.number,
         new: info.new,
@@ -62,7 +78,30 @@ pub fn run_one(bug: BugId, m: &ModelCfg, layers: usize, exec: &Executor)
         detected,
         localized,
         localization_ok,
+        diagnosed_module,
+        diagnosed_dim,
+        diagnosed_phase,
+        diagnosis_ok,
     })
+}
+
+/// Ground-truth match rule shared by the test suite and the bench table:
+/// the blamed module must contain the expected substring, the top
+/// implicated dimension must equal the expected one (none expected ->
+/// none implicated), and the phase must match.
+pub fn diagnosis_matches(info: &crate::bugs::BugInfo, module: Option<&str>,
+                         dim: Option<&str>, phase: Option<&str>) -> bool {
+    let m_ok = match module {
+        Some(m) => info.expect_module.is_empty() || m.contains(info.expect_module),
+        None => false,
+    };
+    let dim_ok = if info.expect_dim == "none" {
+        dim.is_none()
+    } else {
+        dim == Some(info.expect_dim)
+    };
+    let ph_ok = phase == Some(info.expect_phase);
+    m_ok && dim_ok && ph_ok
 }
 
 /// Run the whole table.

@@ -9,7 +9,11 @@
 //!   check-offline  differential check of two `.ttrc` stores recorded by
 //!                  separate `record` invocations (separate processes or
 //!                  machines — the paper's deployment mode)
-//!   inspect        describe a `.ttrc` store (ids, shapes, shard layouts)
+//!   diagnose       differential check of two `.ttrc` stores + the
+//!                  dependency-aware diagnosis: divergence frontier,
+//!                  blamed module, phase, implicated parallelism dimension
+//!   inspect        describe a `.ttrc` store (ids, shapes, shard layouts);
+//!                  `--id` dumps one tensor's shards and summary stats
 //!   train          run training and print the loss curve
 //!   bugs           list the 14 reproducible Table-1 bugs
 //!
@@ -19,7 +23,9 @@
 //!   ttrace record --tp 2 --reference --out ref.ttrc
 //!   ttrace record --tp 2 --bug 1 --out cand.ttrc
 //!   ttrace check-offline ref.ttrc cand.ttrc
+//!   ttrace diagnose ref.ttrc cand.ttrc
 //!   ttrace inspect ref.ttrc
+//!   ttrace inspect ref.ttrc --id i0/m0/act/layers.0.mlp
 //!   ttrace train --model e2e --steps 100 --tp 2
 //!   ttrace bugs
 
@@ -32,8 +38,9 @@ use ttrace::data::{CorpusData, DataSource, GenData};
 use ttrace::dist::Topology;
 use ttrace::model::{mean_losses, preset, run_training, Engine, ParCfg};
 use ttrace::runtime::Executor;
-use ttrace::ttrace::store::{check_stores, layout_of, write_trace, StoreReader,
-                            StoreWriter};
+use ttrace::ttrace::diagnose::{diagnose_stores, RunMeta};
+use ttrace::ttrace::store::{check_stores, layout_of, write_trace, Encoding,
+                            StoreReader, StoreWriter};
 use ttrace::ttrace::{localized_module, reference_of, report, threshold,
                      ttrace_check, CheckCfg, Collector, NoopHooks};
 use ttrace::util::bench::{fmt_bytes, fmt_s, time_once};
@@ -45,12 +52,13 @@ fn main() {
         Some("check") => run(check(&argv[1..])),
         Some("record") => run(record(&argv[1..])),
         Some("check-offline") => run(check_offline(&argv[1..])),
+        Some("diagnose") => run(diagnose_cmd(&argv[1..])),
         Some("inspect") => run(inspect(&argv[1..])),
         Some("train") => run(train(&argv[1..])),
         Some("bugs") => run(bugs()),
         _ => {
-            eprintln!("usage: ttrace <check|record|check-offline|inspect|\
-                       train|bugs> [options]\n\
+            eprintln!("usage: ttrace <check|record|check-offline|diagnose|\
+                       inspect|train|bugs> [options]\n\
                        run `ttrace check --help` etc. for details");
             2
         }
@@ -145,6 +153,9 @@ fn check(argv: &[String]) -> Result<i32> {
     });
     let run_out = run_res?;
     println!("{}", report::render(&run_out.outcome, &cfg, 32));
+    if let Some(d) = &run_out.diagnosis {
+        println!("{}", report::render_diagnosis(d, &cfg));
+    }
     if args.flag("localize") {
         if let Some(module) = localized_module(&run_out) {
             println!("localization: {module}");
@@ -153,7 +164,11 @@ fn check(argv: &[String]) -> Result<i32> {
     println!("total check time: {}", fmt_s(dt));
     let out = args.get("out");
     if !out.is_empty() {
-        std::fs::write(out, report::to_json(&run_out.outcome, &cfg).to_string_pretty())?;
+        let mut j = report::to_json(&run_out.outcome, &cfg);
+        if let Some(d) = &run_out.diagnosis {
+            j.set("diagnosis", report::diagnosis_json(d));
+        }
+        std::fs::write(out, j.to_string_pretty())?;
         println!("wrote {out}");
     }
     Ok(if run_out.outcome.pass { 0 } else { 1 })
@@ -210,6 +225,9 @@ fn record(argv: &[String]) -> Result<i32> {
     if let Some(est) = &est {
         w.set_estimate(&est.rel, cfg.eps);
     }
+    // the run's parallel layout rides along so `diagnose` can map shard
+    // rank tags to (tp, cp, dp, pp) coordinates offline
+    w.set_run_meta(&RunMeta::of_parcfg(&p));
     let json_path = args.get("json").to_string();
     let summary = if json_path.is_empty() {
         collector.write_store(&mut w)?;
@@ -233,15 +251,20 @@ fn record(argv: &[String]) -> Result<i32> {
     Ok(0)
 }
 
-fn check_offline(argv: &[String]) -> Result<i32> {
-    let cli = Cli::new("differential check of two .ttrc stores recorded by \
-                        separate `ttrace record` runs")
+/// Shared head of the two-store subcommands (`check-offline`, `diagnose`):
+/// positional/option registration, store opening, and the CheckCfg with
+/// the eps override from the reference's embedded estimates.
+fn store_pair_cli(about: &'static str) -> Cli {
+    Cli::new(about)
         .pos("reference.ttrc", "store from `ttrace record --reference`")
         .pos("candidate.ttrc", "store from the candidate run")
         .opt("safety", "8", "threshold safety multiplier")
         .opt("rows", "32", "max report rows before passing tensors are elided")
-        .opt("out", "", "write the JSON report to this path");
-    let args = cli.parse_from(argv)?;
+        .opt("out", "", "write the JSON report to this path")
+}
+
+fn open_store_pair(args: &ttrace::util::cli::Args)
+                   -> Result<(StoreReader, StoreReader, CheckCfg)> {
     let reference = StoreReader::open(Path::new(args.pos(0)))?;
     let candidate = StoreReader::open(Path::new(args.pos(1)))?;
     let mut cfg = CheckCfg { safety: args.get_f64("safety")?,
@@ -254,6 +277,14 @@ fn check_offline(argv: &[String]) -> Result<i32> {
                    --reference?); falling back to the floor threshold",
                   args.pos(0));
     }
+    Ok((reference, candidate, cfg))
+}
+
+fn check_offline(argv: &[String]) -> Result<i32> {
+    let cli = store_pair_cli("differential check of two .ttrc stores \
+                              recorded by separate `ttrace record` runs");
+    let args = cli.parse_from(argv)?;
+    let (reference, candidate, cfg) = open_store_pair(&args)?;
     let (res, dt) = time_once(|| check_stores(&reference, &candidate,
                                               reference.estimate(), &cfg));
     let outcome = res?;
@@ -271,12 +302,43 @@ fn check_offline(argv: &[String]) -> Result<i32> {
     Ok(if outcome.pass { 0 } else { 1 })
 }
 
+/// Differential check + dependency-aware diagnosis of two `.ttrc` stores,
+/// from the files alone (the offline twin of `check --bug N`).
+fn diagnose_cmd(argv: &[String]) -> Result<i32> {
+    let cli = store_pair_cli("differential check + dependency-aware bug \
+                              localization over two .ttrc stores: divergence \
+                              frontier, blamed module, phase, implicated \
+                              parallelism dimension");
+    let args = cli.parse_from(argv)?;
+    let (reference, candidate, cfg) = open_store_pair(&args)?;
+    let (res, dt) = time_once(|| diagnose_stores(&reference, &candidate, &cfg));
+    let (outcome, diag) = res?;
+    println!("{}", report::render(&outcome, &cfg, args.get_usize("rows")?));
+    println!("{}", report::render_diagnosis(&diag, &cfg));
+    println!("diagnose time: {} ({} ids; frontier analyzed from the stores \
+              one canonical id at a time)", fmt_s(dt), reference.len());
+    let out = args.get("out");
+    if !out.is_empty() {
+        let mut j = report::to_json(&outcome, &cfg);
+        j.set("diagnosis", report::diagnosis_json(&diag));
+        std::fs::write(out, j.to_string_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(if outcome.pass { 0 } else { 1 })
+}
+
 fn inspect(argv: &[String]) -> Result<i32> {
     let cli = Cli::new("describe a .ttrc trace store")
         .pos("store.ttrc", "the store to describe")
-        .opt("limit", "40", "max canonical ids to list (0 = all)");
+        .opt("limit", "40", "max canonical ids to list (0 = all)")
+        .opt("id", "", "dump one canonical id: shard specs, dtype, ranks \
+                        and summary stats (min/max/mean/checksum)");
     let args = cli.parse_from(argv)?;
     let store = StoreReader::open(Path::new(args.pos(0)))?;
+    let id = args.get("id");
+    if !id.is_empty() {
+        return inspect_id(&store, args.pos(0), id);
+    }
     println!("{}: ttrc v{}, {} canonical ids, {} shards, {} payload \
               ({} file)",
              args.pos(0), store.version(), store.len(), store.shard_count(),
@@ -284,6 +346,15 @@ fn inspect(argv: &[String]) -> Result<i32> {
     if let Some(eps) = store.estimate_eps() {
         println!("embedded threshold estimates: {} tensors (eps {:.3e})",
                  store.estimate().len(), eps);
+    }
+    if let Some(m) = store.run_meta() {
+        println!("recorded on {} (micro {}{}{}{}{}{})",
+                 m.topo.describe(), m.n_micro,
+                 if m.sp { ", sp" } else { "" },
+                 if m.fp8 { ", fp8" } else { "" },
+                 if m.moe { ", moe" } else { "" },
+                 if m.zero1 { ", zero1" } else { "" },
+                 if m.overlap { ", overlap" } else { "" });
     }
     let limit = args.get_usize("limit")?;
     println!();
@@ -303,6 +374,63 @@ fn inspect(argv: &[String]) -> Result<i32> {
                  key, metas[0].dtype.name(),
                  format!("{:?}", metas[0].spec.global_dims), metas.len(),
                  bytes, layout_of(metas));
+    }
+    Ok(0)
+}
+
+/// `inspect --id`: dump one canonical id's shard specs, dtype and summary
+/// stats (min/max/mean/checksum), loading its payloads from the store.
+fn inspect_id(store: &StoreReader, store_name: &str, id: &str) -> Result<i32> {
+    let Some(metas) = store.shards(id) else {
+        bail!("{store_name}: no canonical id '{id}' in the store (run \
+               `ttrace inspect {store_name}` for the id list)");
+    };
+    let entries = store
+        .read_entries(id)?
+        .expect("id came from the store index");
+    println!("{id}: {} shard(s), dtype {}, global dims {:?}, layout: {}{}",
+             metas.len(), metas[0].dtype.name(), metas[0].spec.global_dims,
+             layout_of(metas),
+             if metas[0].spec.partial { " [partial sums]" } else { "" });
+    for (i, (m, e)) in metas.iter().zip(&entries).enumerate() {
+        let t = &e.data;
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in &t.data {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        if t.data.is_empty() {
+            mn = 0.0;
+            mx = 0.0;
+        }
+        let checksum = ttrace::util::rng::fnv1a(&t.to_le_bytes());
+        let maps: Vec<String> = m
+            .spec
+            .maps
+            .iter()
+            .map(|mp| format!("dim{} {}", mp.dim,
+                              mp.pieces.iter()
+                                  .map(|p| format!("[{},{})", p.global_start,
+                                                   p.global_start + p.len))
+                                  .collect::<Vec<_>>()
+                                  .join("+")))
+            .collect();
+        println!("  shard {i}: rank {}, local dims {:?}, {} ({} payload \
+                  bytes at offset {})",
+                 m.rank, t.dims,
+                 match m.encoding {
+                     Encoding::Raw32 => "raw32",
+                     Encoding::Packed16 => "packed16",
+                 },
+                 m.len, m.offset);
+        println!("    spec: {}", if maps.is_empty() { "full".to_string() }
+                                 else { maps.join(", ") });
+        println!("    stats: min {mn:.6e}  max {mx:.6e}  mean {:.6e}  \
+                  checksum {checksum:#018x}", t.mean());
+    }
+    if let Some(est) = store.estimate().get(id) {
+        println!("  embedded threshold estimate: {est:.6e}");
     }
     Ok(0)
 }

@@ -135,8 +135,12 @@ pub(crate) fn check_one_id(ref_entries: &[Entry], cand_entries: Option<&[Entry]>
             "global dims {:?} != reference {:?}", cand.full.dims, ref_full.dims));
     }
     let rel_err = ref_full.rel_err(&cand.full);
+    // A degenerate estimate (NaN/inf from an all-zero reference tensor,
+    // or a negative value from a corrupt store) must never poison the
+    // threshold: fall back to the floor instead.
     let mut threshold = estimate
         .get(key)
+        .filter(|e| e.is_finite() && **e >= 0.0)
         .map(|&e| (cfg.safety * e).max(floor))
         .unwrap_or(floor);
     if id.kind == Kind::Param {
@@ -223,6 +227,7 @@ mod tests {
         t.entries.insert(key.to_string(), vec![Entry {
             spec: ShardSpec::full(&[vals.len()]),
             data: Tensor::new(&[vals.len()], vals.to_vec(), DType::Bf16),
+            rank: 0,
         }]);
         t
     }
@@ -254,6 +259,25 @@ mod tests {
         // 8 * 0.1 = 0.8 > floor 0.04
         let thr = est.get("k").map(|&e| (cfg.safety * e).max(cfg.floor * cfg.eps)).unwrap();
         assert!((thr - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_estimates_fall_back_to_the_floor() {
+        // an all-zero reference tensor yields an infinite §5.2 estimate
+        // (rel_err divides by a zero norm) — the derived threshold must
+        // stay finite and equal to the floor
+        let r = trace_with("i0/m0/act/layers.0.mlp", &[1.0, 2.0]);
+        let c = trace_with("i0/m0/act/layers.0.mlp", &[1.0, 2.0]);
+        for bad in [f64::INFINITY, f64::NAN, -1.0] {
+            let mut est = HashMap::new();
+            est.insert("i0/m0/act/layers.0.mlp".to_string(), bad);
+            let cfg = CheckCfg::default();
+            let out = check_traces(&r, &c, &est, &cfg).unwrap();
+            let thr = out.checks[0].threshold;
+            assert!(thr.is_finite(), "threshold {thr} from estimate {bad}");
+            assert_eq!(thr, cfg.floor * cfg.eps);
+            assert!(out.pass);
+        }
     }
 
     #[test]

@@ -29,11 +29,15 @@ use super::hooks::{CanonId, Hooks, Kind};
 use super::shard::ShardSpec;
 
 /// One recorded shard: the local tensor plus its mapping into the logical
-/// full tensor.
+/// full tensor, tagged with the simulated rank that recorded it. The rank
+/// tag is what lets `ttrace::diagnose::shardmap` attribute a divergence to
+/// rank *coordinates* (tp/cp/dp/pp) instead of just a shard index.
 #[derive(Clone, Debug)]
 pub struct Entry {
     pub spec: ShardSpec,
     pub data: Tensor,
+    /// global rank of the recording thread (0 outside `run_spmd`)
+    pub rank: u32,
 }
 
 /// A trace: canonical id -> all recorded shards (one per recording rank).
@@ -91,6 +95,7 @@ impl Trace {
                 .map(|e| {
                     let mut o = Json::obj();
                     o.set("spec", e.spec.to_json());
+                    o.set("rank", Json::from_usize(e.rank as usize));
                     o.set("dtype", Json::from_str_(e.data.dtype.name()));
                     o.set("dims", Json::Arr(e.data.dims.iter()
                         .map(|&d| Json::from_usize(d)).collect()));
@@ -118,7 +123,11 @@ impl Trace {
                     .iter().map(|d| d.as_usize()).collect::<Result<_>>()?;
                 let data: Vec<f32> = e.req("data")?.as_arr()?
                     .iter().map(f32_from_json).collect::<Result<_>>()?;
-                shards.push(Entry { spec, data: Tensor::new(&dims, data, dtype) });
+                // rank is optional for older dumps (pre-diagnose traces)
+                let rank = e.get("rank").map(|r| r.as_usize()).transpose()?
+                    .unwrap_or(0) as u32;
+                shards.push(Entry { spec, data: Tensor::new(&dims, data, dtype),
+                                    rank });
             }
             trace.entries.insert(key.clone(), shards);
         }
@@ -236,10 +245,13 @@ impl Collector {
         }
     }
 
-    /// Append one entry to this thread's buffer for this collector (no
-    /// lock: the shared state is only touched when a buffer flushes).
-    fn push(&self, key: String, entry: Entry) {
+    /// Append one record to this thread's buffer for this collector (no
+    /// lock: the shared state is only touched when a buffer flushes). The
+    /// `Entry` is built here, stamped with the recording rank — push is
+    /// the only construction site, so the attribution can't be bypassed.
+    fn push(&self, key: String, spec: &ShardSpec, data: Tensor) {
         let rank = crate::dist::current_rank().unwrap_or(0);
+        let entry = Entry { spec: spec.clone(), data, rank: rank as u32 };
         LOCAL.with(|l| {
             let mut bufs = l.borrow_mut();
             if let Some(buf) = bufs
@@ -320,14 +332,14 @@ impl Hooks for Collector {
         if !self.wants(id.kind) {
             return; // filtered kinds never pay the clone
         }
-        self.push(id.key(), Entry { spec: spec.clone(), data: t.clone() });
+        self.push(id.key(), spec, t.clone());
     }
 
     fn record_owned(&self, id: &CanonId, t: Tensor, spec: &ShardSpec) {
         if !self.wants(id.kind) {
             return;
         }
-        self.push(id.key(), Entry { spec: spec.clone(), data: t });
+        self.push(id.key(), spec, t);
     }
 
     fn rewrite_input(&self, id: &CanonId, spec: &ShardSpec, t: &Tensor)
@@ -422,6 +434,7 @@ mod tests {
             assert_eq!(entries.len(), 4);
             for (i, e) in entries.iter().enumerate() {
                 assert_eq!(e.data.data[0], i as f32, "shard {i} out of rank order");
+                assert_eq!(e.rank as usize, i, "shard {i} mis-stamped rank");
             }
         }
     }

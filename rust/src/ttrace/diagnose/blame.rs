@@ -1,0 +1,172 @@
+//! Divergence-frontier computation (diagnosis layer 2).
+//!
+//! `CheckOutcome::localized_module` blames the *first* failing tensor in
+//! computation order — which points at downstream fallout as readily as
+//! at the root cause whenever a bug's error propagates. The frontier
+//! separates the two: a failing check whose upstream producers (per the
+//! dataflow [`Dag`](super::dag::Dag)) all passed is a **primary
+//! suspect**; everything failing below a failure is propagated fallout.
+//! Suspects are ranked by how far past their threshold they landed
+//! (`rel_err / threshold`; bitwise replica conflicts rank above
+//! everything), and each one is classified by training phase.
+
+use super::super::checker::{CheckOutcome, TensorCheck};
+use super::super::hooks::Kind;
+use super::dag::Dag;
+
+/// Which phase of a training step a traced tensor belongs to — the
+/// coordinate (next to module and parallel dimension) a diagnosis names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// forward activations and the loss
+    Fprop,
+    /// activation gradients
+    Bprop,
+    /// per-micro and accumulated/reduced parameter gradients
+    Wgrad,
+    /// post-optimizer parameter values
+    Optimizer,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Fprop => "fprop",
+            Phase::Bprop => "bprop",
+            Phase::Wgrad => "wgrad",
+            Phase::Optimizer => "optimizer",
+        }
+    }
+}
+
+pub fn phase_of(kind: Kind) -> Phase {
+    match kind {
+        Kind::Act | Kind::Loss => Phase::Fprop,
+        Kind::ActGrad => Phase::Bprop,
+        Kind::ParamGrad | Kind::MainGrad => Phase::Wgrad,
+        Kind::Param => Phase::Optimizer,
+    }
+}
+
+/// How far past its threshold a check landed. Replica conflicts are a
+/// bitwise-certain signal, so they outrank any relative error.
+pub fn excess(c: &TensorCheck) -> f64 {
+    if c.conflict_elems > 0 {
+        return f64::INFINITY;
+    }
+    if c.threshold > 0.0 {
+        c.rel_err / c.threshold
+    } else {
+        f64::INFINITY
+    }
+}
+
+pub struct FrontierSplit {
+    /// indices into `outcome.checks` of the primary suspects, in
+    /// computation order
+    pub frontier: Vec<usize>,
+    /// failing checks suppressed as propagated fallout
+    pub fallout: usize,
+}
+
+/// Split the failing checks into the divergence frontier and fallout.
+/// Missing-in-candidate ids and structural merge errors count as failing
+/// producers (their downstream failures are fallout, not new suspects).
+pub fn split(outcome: &CheckOutcome, dag: &Dag) -> FrontierSplit {
+    let mut status: Vec<Option<bool>> = vec![None; dag.len()];
+    for c in &outcome.checks {
+        if let Some(i) = dag.index_of(&c.key) {
+            status[i] = Some(c.pass);
+        }
+    }
+    for k in &outcome.missing_in_candidate {
+        if let Some(i) = dag.index_of(k) {
+            status[i] = Some(false);
+        }
+    }
+    for (k, _) in &outcome.merge_errors {
+        if let Some(i) = dag.index_of(k) {
+            status[i] = Some(false);
+        }
+    }
+
+    let mut frontier = Vec::new();
+    let mut fallout = 0usize;
+    for (ci, c) in outcome.checks.iter().enumerate() {
+        if c.pass {
+            continue;
+        }
+        let Some(i) = dag.index_of(&c.key) else {
+            frontier.push(ci);
+            continue;
+        };
+        let clean = dag.upstream[i]
+            .iter()
+            .all(|&u| status[u] != Some(false));
+        if clean {
+            frontier.push(ci);
+        } else {
+            fallout += 1;
+        }
+    }
+    FrontierSplit { frontier, fallout }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttrace::hooks::CanonId;
+
+    fn check(key: &str, pass: bool) -> TensorCheck {
+        TensorCheck {
+            key: key.to_string(),
+            id: CanonId::parse(key).unwrap(),
+            rel_err: if pass { 0.0 } else { 1.0 },
+            threshold: 0.1,
+            conflict_elems: 0,
+            pass,
+        }
+    }
+
+    #[test]
+    fn fallout_is_suppressed_behind_the_frontier() {
+        // act chain: l0 passes, l1 FAILS, l2 FAILS (fallout of l1)
+        let mut o = CheckOutcome::default();
+        o.checks.push(check("i0/m0/act/layers.0.mlp", true));
+        o.checks.push(check("i0/m0/act/layers.1.mlp", false));
+        o.checks.push(check("i0/m0/act/layers.2.mlp", false));
+        let keys: Vec<String> = o.checks.iter().map(|c| c.key.clone()).collect();
+        let dag = Dag::build(&keys);
+        let s = split(&o, &dag);
+        assert_eq!(s.frontier, vec![1]);
+        assert_eq!(s.fallout, 1);
+    }
+
+    #[test]
+    fn missing_upstream_counts_as_failing() {
+        let mut o = CheckOutcome::default();
+        o.checks.push(check("i0/m0/act/layers.1.mlp", false));
+        o.missing_in_candidate.push("i0/m0/act/layers.0.mlp".to_string());
+        let mut keys: Vec<String> = o.checks.iter().map(|c| c.key.clone()).collect();
+        keys.extend(o.missing_in_candidate.iter().cloned());
+        let dag = Dag::build(&keys);
+        let s = split(&o, &dag);
+        // the failing act sits downstream of a missing id -> fallout
+        assert!(s.frontier.is_empty());
+        assert_eq!(s.fallout, 1);
+    }
+
+    #[test]
+    fn phases_and_excess() {
+        assert_eq!(phase_of(Kind::Act), Phase::Fprop);
+        assert_eq!(phase_of(Kind::Loss), Phase::Fprop);
+        assert_eq!(phase_of(Kind::ActGrad), Phase::Bprop);
+        assert_eq!(phase_of(Kind::ParamGrad), Phase::Wgrad);
+        assert_eq!(phase_of(Kind::MainGrad), Phase::Wgrad);
+        assert_eq!(phase_of(Kind::Param), Phase::Optimizer);
+        let mut c = check("i0/m0/act/layers.0.mlp", false);
+        assert!((excess(&c) - 10.0).abs() < 1e-9);
+        c.conflict_elems = 3;
+        assert!(excess(&c).is_infinite());
+    }
+}

@@ -1,0 +1,279 @@
+//! The dataflow DAG over canonical ids (diagnosis layer 1).
+//!
+//! Localization needs to know, for every `TensorCheck`, which traced
+//! tensors *fed* it: a failing tensor whose producers all passed is a
+//! primary suspect; a failing tensor downstream of another failure is
+//! (probably) propagated fallout. The DAG is rebuilt from the canonical-id
+//! set of a trace alone — it encodes the engine's structure, not a
+//! particular run:
+//!
+//!  - **fprop/bprop chain**: within one (iteration, microbatch), the
+//!    Act → Loss → ActGrad sequence in `checker::comp_order` *is* the
+//!    execution order of the single residual stream (forward by depth,
+//!    loss, backward by reverse depth), so each chain node depends on its
+//!    predecessor.
+//!  - **tape edges**: every ActGrad also consumes the matching module's
+//!    forward activation (manual backprop reuses the tape).
+//!  - **wgrad edges**: a per-micro ParamGrad consumes the gradient flowing
+//!    at its module (the module's ActGrad — computed by the same backward
+//!    call) and the module's forward input tape.
+//!  - **micro edges**: a MainGrad accumulates every micro's ParamGrad of
+//!    the same parameter (plus the tied LM-head contribution for the word
+//!    embeddings).
+//!  - **optimizer / iteration edges**: a Param consumes its MainGrad and
+//!    its previous-iteration value; the first chain node of an iteration
+//!    consumes the previous iteration's params.
+
+use std::collections::HashMap;
+
+use super::super::canonical::names;
+use super::super::checker::comp_order;
+use super::super::hooks::{CanonId, Kind};
+
+/// The dependency graph: nodes are canonical ids in computation order,
+/// `upstream[i]` lists the producers of node `i`.
+pub struct Dag {
+    pub nodes: Vec<(CanonId, String)>,
+    index: HashMap<String, usize>,
+    pub upstream: Vec<Vec<usize>>,
+}
+
+/// The canonical module whose traced Act/ActGrad carries a parameter's
+/// gradient signal (e.g. `layers.0.mlp.fc1.weight` -> `layers.0.mlp`).
+pub fn act_module_of_param(name: &str) -> Option<String> {
+    let base = name
+        .strip_suffix(".weight")
+        .or_else(|| name.strip_suffix(".bias"))
+        .unwrap_or(name);
+    if base == "embedding.word_embeddings" {
+        return Some(names::embedding());
+    }
+    if base == "output_layer" {
+        return Some(names::output_layer());
+    }
+    if base == "final_layernorm" {
+        return Some(names::final_ln());
+    }
+    let l = names::layer_of(base)?;
+    Some(if base.ends_with("input_layernorm") {
+        names::input_ln(l)
+    } else if base.ends_with("pre_mlp_layernorm") {
+        names::pre_mlp_ln(l)
+    } else if base.ends_with("linear_qkv") {
+        names::qkv(l)
+    } else if base.ends_with("linear_proj") {
+        names::proj(l)
+    } else if base.ends_with("router") {
+        names::router(l)
+    } else if base.contains(".mlp") {
+        names::mlp(l)
+    } else {
+        names::layer_out(l)
+    })
+}
+
+impl Dag {
+    /// Build the DAG from a set of canonical-id keys (unparsable keys are
+    /// skipped). Edges only ever point at nodes that exist in the set, so
+    /// kind-filtered traces degrade gracefully.
+    pub fn build(keys: &[String]) -> Dag {
+        let mut nodes: Vec<(CanonId, String)> = keys
+            .iter()
+            .filter_map(|k| CanonId::parse(k).map(|id| (id, k.clone())))
+            .collect();
+        nodes.sort_by_key(|(id, _)| comp_order(id));
+        nodes.dedup_by(|a, b| a.1 == b.1);
+
+        let index: HashMap<String, usize> = nodes
+            .iter()
+            .enumerate()
+            .map(|(i, (_, k))| (k.clone(), i))
+            .collect();
+        let mut upstream: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+
+        // Scoped: the helper maps borrow module names out of `nodes`, and
+        // must be gone before `nodes` moves into the returned Dag.
+        {
+        // group helper maps: (iter, module) -> node indices, per kind
+        let mut param_grads: HashMap<(u64, &str), Vec<usize>> = HashMap::new();
+        let mut main_grads: HashMap<(u64, &str), Vec<usize>> = HashMap::new();
+        let mut params: HashMap<(u64, &str), Vec<usize>> = HashMap::new();
+        for (i, (id, _)) in nodes.iter().enumerate() {
+            let slot = match id.kind {
+                Kind::ParamGrad => &mut param_grads,
+                Kind::MainGrad => &mut main_grads,
+                Kind::Param => &mut params,
+                _ => continue,
+            };
+            slot.entry((id.iter, id.module.as_str())).or_default().push(i);
+        }
+
+        // fprop -> loss -> bprop chain (+ iteration edges at the head)
+        let mut last_chain: HashMap<(u64, u32), usize> = HashMap::new();
+        for (i, (id, _)) in nodes.iter().enumerate() {
+            if !matches!(id.kind, Kind::Act | Kind::Loss | Kind::ActGrad) {
+                continue;
+            }
+            let group = (id.iter, id.micro);
+            if let Some(&prev) = last_chain.get(&group) {
+                upstream[i].push(prev);
+            } else if id.iter > 0 {
+                // the iteration's first traced tensor consumes the params
+                // the previous iteration's optimizer step produced
+                for ((it, _), nodes_of) in &params {
+                    if *it == id.iter - 1 {
+                        upstream[i].extend(nodes_of.iter().copied());
+                    }
+                }
+            }
+            last_chain.insert(group, i);
+        }
+
+        for (i, (id, _)) in nodes.iter().enumerate() {
+            match id.kind {
+                // tape edge: bwd consumes the module's fwd activation
+                Kind::ActGrad => {
+                    let act = CanonId::new(id.iter, id.micro, Kind::Act,
+                                           id.module.clone());
+                    if let Some(&a) = index.get(&act.key()) {
+                        upstream[i].push(a);
+                    }
+                }
+                // wgrad edges: the module's flowing gradient + fwd input
+                Kind::ParamGrad => {
+                    if let Some(m) = act_module_of_param(&id.module) {
+                        for kind in [Kind::ActGrad, Kind::Act] {
+                            let dep = CanonId::new(id.iter, id.micro, kind,
+                                                   m.clone());
+                            if let Some(&j) = index.get(&dep.key()) {
+                                upstream[i].push(j);
+                            }
+                        }
+                    }
+                }
+                // micro edges (+ the tied LM-head -> embedding grad)
+                Kind::MainGrad => {
+                    if let Some(v) = param_grads
+                        .get(&(id.iter, id.module.as_str()))
+                    {
+                        upstream[i].extend(v.iter().copied());
+                    }
+                    if id.module == "embedding.word_embeddings.weight" {
+                        if let Some(v) = param_grads
+                            .get(&(id.iter, "output_layer.weight"))
+                        {
+                            upstream[i].extend(v.iter().copied());
+                        }
+                    }
+                }
+                // optimizer + iteration edges
+                Kind::Param => {
+                    if let Some(v) = main_grads
+                        .get(&(id.iter, id.module.as_str()))
+                    {
+                        upstream[i].extend(v.iter().copied());
+                    }
+                    if id.iter > 0 {
+                        if let Some(v) = params
+                            .get(&(id.iter - 1, id.module.as_str()))
+                        {
+                            upstream[i].extend(v.iter().copied());
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        }
+
+        Dag { nodes, index, upstream }
+    }
+
+    pub fn index_of(&self, key: &str) -> Option<usize> {
+        self.index.get(key).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(ids: &[CanonId]) -> Vec<String> {
+        ids.iter().map(|id| id.key()).collect()
+    }
+
+    #[test]
+    fn chain_follows_computation_order() {
+        let act0 = CanonId::new(0, 0, Kind::Act, "layers.0.mlp");
+        let act1 = CanonId::new(0, 0, Kind::Act, "layers.1.mlp");
+        let loss = CanonId::new(0, 0, Kind::Loss, "loss");
+        let g1 = CanonId::new(0, 0, Kind::ActGrad, "layers.1.mlp");
+        let g0 = CanonId::new(0, 0, Kind::ActGrad, "layers.0.mlp");
+        let dag = Dag::build(&keys(&[g0.clone(), loss.clone(), act1.clone(),
+                                     g1.clone(), act0.clone()]));
+        assert_eq!(dag.len(), 5);
+        // sorted: act0, act1, loss, g1, g0
+        let i = |id: &CanonId| dag.index_of(&id.key()).unwrap();
+        assert!(dag.upstream[i(&act0)].is_empty());
+        assert_eq!(dag.upstream[i(&act1)], vec![i(&act0)]);
+        assert_eq!(dag.upstream[i(&loss)], vec![i(&act1)]);
+        // g1: chain (loss) + tape (act1)
+        assert_eq!(dag.upstream[i(&g1)], vec![i(&loss), i(&act1)]);
+        assert_eq!(dag.upstream[i(&g0)], vec![i(&g1), i(&act0)]);
+    }
+
+    #[test]
+    fn wgrad_micro_and_optimizer_edges() {
+        let gm = CanonId::new(0, 0, Kind::ActGrad, "layers.0.mlp");
+        let pg0 = CanonId::new(0, 0, Kind::ParamGrad, "layers.0.mlp.fc1.weight");
+        let pg1 = CanonId::new(0, 1, Kind::ParamGrad, "layers.0.mlp.fc1.weight");
+        let mg = CanonId::new(0, 0, Kind::MainGrad, "layers.0.mlp.fc1.weight");
+        let pp = CanonId::new(0, 0, Kind::Param, "layers.0.mlp.fc1.weight");
+        let dag = Dag::build(&keys(&[gm.clone(), pg0.clone(), pg1.clone(),
+                                     mg.clone(), pp.clone()]));
+        let i = |id: &CanonId| dag.index_of(&id.key()).unwrap();
+        // param grad consumes the module's flowing gradient
+        assert!(dag.upstream[i(&pg0)].contains(&i(&gm)));
+        // main grad accumulates both micros' param grads
+        assert!(dag.upstream[i(&mg)].contains(&i(&pg0)));
+        assert!(dag.upstream[i(&mg)].contains(&i(&pg1)));
+        // the optimizer output consumes the main grad
+        assert_eq!(dag.upstream[i(&pp)], vec![i(&mg)]);
+    }
+
+    #[test]
+    fn param_module_mapping() {
+        assert_eq!(act_module_of_param("layers.3.self_attention.linear_qkv.weight")
+                       .unwrap(),
+                   "layers.3.self_attention.linear_qkv");
+        assert_eq!(act_module_of_param("layers.0.mlp.router.weight").unwrap(),
+                   "layers.0.mlp.router");
+        assert_eq!(act_module_of_param("layers.0.mlp.experts.fc2.weight").unwrap(),
+                   "layers.0.mlp");
+        assert_eq!(act_module_of_param("layers.2.input_layernorm.bias").unwrap(),
+                   "layers.2.input_layernorm");
+        assert_eq!(act_module_of_param("embedding.word_embeddings.weight").unwrap(),
+                   "embedding.word_embeddings");
+        assert_eq!(act_module_of_param("final_layernorm.weight").unwrap(),
+                   "final_layernorm");
+        assert_eq!(act_module_of_param("output_layer.weight").unwrap(),
+                   "output_layer");
+    }
+
+    #[test]
+    fn iteration_edges_link_params_to_next_iter() {
+        let p0 = CanonId::new(0, 0, Kind::Param, "w");
+        let act = CanonId::new(1, 0, Kind::Act, "layers.0.mlp");
+        let dag = Dag::build(&keys(&[p0.clone(), act.clone()]));
+        let i = |id: &CanonId| dag.index_of(&id.key()).unwrap();
+        assert_eq!(dag.upstream[i(&act)], vec![i(&p0)]);
+    }
+}

@@ -1,0 +1,33 @@
+//! `ttrace::diagnose` — dependency-aware bug localization (paper §3 step
+//! 4, §6; cf. Mycroft's dependency tracing and FLARE's
+//! subsystem-naming diagnosis).
+//!
+//! Detection says *a* tensor diverged; diagnosis must say **which module
+//! broke, in which phase, over which parallelism dimension** — and must
+//! not blame downstream fallout. Four layers:
+//!
+//!  1. [`dag`] — the dataflow DAG over canonical ids (fprop module order,
+//!     bprop reversal, tape edges, param→grad→optimizer edges, micro and
+//!     iteration edges), rebuilt from the id set alone.
+//!  2. [`blame`] — the **divergence frontier**: failing tensors whose
+//!     upstream producers all passed (primary suspects), ranked by
+//!     threshold excess; everything below a failure is fallout. Plus the
+//!     fprop/bprop/wgrad/optimizer phase taxonomy.
+//!  3. [`shardmap`] — per-shard re-comparison attributing divergence to
+//!     rank coordinates, implicating a tp/cp/dp/pp dimension when the
+//!     failure pattern correlates with one axis of the topology.
+//!  4. [`verdict`] — the structured [`Diagnosis`], assembled identically
+//!     from in-memory traces (`ttrace check`) or from `.ttrc` stores
+//!     alone (`ttrace diagnose ref.ttrc cand.ttrc`), whose run-metadata
+//!     section carries the topology.
+
+pub mod blame;
+pub mod dag;
+pub mod shardmap;
+pub mod verdict;
+
+pub use blame::Phase;
+pub use dag::Dag;
+pub use shardmap::Dim;
+pub use verdict::{diagnose, diagnose_stores, Diagnosis, EntrySource,
+                  RunMeta, Suspect};

@@ -1,0 +1,408 @@
+//! Per-shard divergence attribution (diagnosis layer 3).
+//!
+//! The checker compares *merged* logical tensors; this module re-runs the
+//! comparison per candidate shard, maps each shard's recording rank to its
+//! (tp, cp, dp, pp) coordinate in the run's `dist::Topology`, and looks
+//! for structure that implicates one parallelism dimension:
+//!
+//!  - **replica conflicts** (bitwise disagreement between shards that
+//!    claim the same region) separated along exactly one axis — the
+//!    missing/wrong collective ran over that axis's group;
+//!  - **pass/fail separation**: some shards match the reference, others
+//!    don't, and the two sets differ along one axis;
+//!  - **uniform rescale**: the merged candidate is the reference times a
+//!    constant that equals an axis size (or its inverse) — a classic
+//!    missing/extra `1/n` scaling (loss scale, grad averaging);
+//!  - **shard-axis residency**: every shard of a tensor sharded along one
+//!    axis diverges independently — weaker evidence, used as a tiebreak;
+//!  - **single-axis prior**: when the topology has exactly one
+//!    non-trivial axis, it is implicated by default.
+//!
+//! Scores accumulate over the frontier's ids; the ranked list (with the
+//! evidence notes) goes into the `Diagnosis`.
+
+use std::collections::HashMap;
+
+use crate::dist::{Coord, Topology};
+
+use super::super::collector::Entry;
+use super::super::merger;
+use super::super::shard::ShardSpec;
+
+/// A parallelism dimension of the 4D process grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dim {
+    Tp,
+    Cp,
+    Dp,
+    Pp,
+}
+
+impl Dim {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dim::Tp => "tp",
+            Dim::Cp => "cp",
+            Dim::Dp => "dp",
+            Dim::Pp => "pp",
+        }
+    }
+
+    pub fn all() -> [Dim; 4] {
+        [Dim::Tp, Dim::Cp, Dim::Dp, Dim::Pp]
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Dim::Tp => 0,
+            Dim::Cp => 1,
+            Dim::Dp => 2,
+            Dim::Pp => 3,
+        }
+    }
+
+    fn size(self, topo: &Topology) -> usize {
+        match self {
+            Dim::Tp => topo.tp,
+            Dim::Cp => topo.cp,
+            Dim::Dp => topo.dp,
+            Dim::Pp => topo.pp,
+        }
+    }
+
+    fn of_coord(self, c: Coord) -> usize {
+        match self {
+            Dim::Tp => c.tp,
+            Dim::Cp => c.cp,
+            Dim::Dp => c.dp,
+            Dim::Pp => c.pp,
+        }
+    }
+}
+
+/// One candidate shard's verdict against its slice of the merged
+/// reference.
+pub struct ShardStat {
+    pub rank: u32,
+    pub rel_err: f64,
+    pub fail: bool,
+}
+
+/// Everything the per-id re-analysis learned about one failing tensor.
+pub struct IdReport {
+    pub key: String,
+    /// partial-sum shards can't be compared per shard (only their sum is
+    /// meaningful) — `shards` stays empty for them
+    pub partial: bool,
+    pub shards: Vec<ShardStat>,
+    /// ranks whose replica shards disagreed bitwise with an earlier shard
+    pub conflict_ranks: Vec<u32>,
+    /// every recording rank with its shard spec
+    pub recorded: Vec<(u32, ShardSpec)>,
+    /// `candidate ≈ scale * reference` fit, when the residual is noise
+    pub scale: Option<f64>,
+}
+
+/// Fit `candidate ≈ s * reference`; report `s` only when the fit residual
+/// is round-off-level noise and `s` differs meaningfully from 1.
+fn fit_scale(reference: &[f32], candidate: &[f32], threshold: f64) -> Option<f64> {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in reference.iter().zip(candidate) {
+        num += (*x as f64) * (*y as f64);
+        den += (*x as f64) * (*x as f64);
+    }
+    if den == 0.0 {
+        return None;
+    }
+    let s = num / den;
+    if !s.is_finite() || s <= 0.0 {
+        return None;
+    }
+    let mut diff = 0.0f64;
+    for (x, y) in reference.iter().zip(candidate) {
+        let d = (*y as f64) - s * (*x as f64);
+        diff += d * d;
+    }
+    let base = s * s * den;
+    if base == 0.0 {
+        return None;
+    }
+    let resid = (diff / base).sqrt();
+    let noise = threshold.max(1e-3);
+    if resid <= 4.0 * noise && (s - 1.0).abs() > noise {
+        Some(s)
+    } else {
+        None
+    }
+}
+
+/// Re-run the comparison of one failing canonical id at shard
+/// granularity. Structural problems (merge failure, shape mismatch)
+/// degrade to an empty report — the frontier already carries the finding.
+pub fn analyze_id(key: &str, ref_entries: &[Entry], cand_entries: &[Entry],
+                  threshold: f64) -> IdReport {
+    let mut rep = IdReport {
+        key: key.to_string(),
+        partial: cand_entries.iter().any(|e| e.spec.partial),
+        shards: Vec::new(),
+        conflict_ranks: Vec::new(),
+        recorded: cand_entries.iter().map(|e| (e.rank, e.spec.clone())).collect(),
+        scale: None,
+    };
+    let Ok(ref_m) = merger::merge(ref_entries) else {
+        return rep;
+    };
+    let Ok(cand_m) = merger::merge(cand_entries) else {
+        return rep;
+    };
+    if cand_m.full.dims != ref_m.full.dims {
+        return rep;
+    }
+    for &si in &cand_m.conflict_shards {
+        rep.conflict_ranks.push(cand_entries[si].rank);
+    }
+    rep.scale = fit_scale(&ref_m.full.data, &cand_m.full.data, threshold);
+    if !rep.partial {
+        for e in cand_entries {
+            if e.spec.global_dims != ref_m.full.dims {
+                continue;
+            }
+            let ref_local = e.spec.extract_local(&ref_m.full);
+            let rel = ref_local.rel_err(&e.data);
+            rep.shards.push(ShardStat {
+                rank: e.rank,
+                rel_err: rel,
+                fail: !rel.is_finite() || rel > threshold,
+            });
+        }
+    }
+    rep
+}
+
+/// The ranked dimension implication plus the human-readable evidence.
+pub struct Implication {
+    /// (dimension, score), strongest evidence first; empty for
+    /// single-device semantics or when no structure was found
+    pub dims: Vec<(Dim, f64)>,
+    pub notes: Vec<String>,
+}
+
+/// Aggregate the per-id reports into a dimension implication. `sp` (the
+/// run's sequence-parallel flag) breaks ties between equal-sized axes on
+/// the uniform-rescale signal: under SP the replicated-parameter grad
+/// reductions run over the tp group.
+pub fn implicate(reports: &[IdReport], topo: &Topology, sp: bool) -> Implication {
+    let world = topo.world();
+    let coord_of = |rank: u32| -> Option<Coord> {
+        if (rank as usize) < world {
+            Some(topo.coord_of(rank as usize))
+        } else {
+            None
+        }
+    };
+    let separated = |a: Coord, b: Coord, d: Dim| -> bool {
+        d.of_coord(a) != d.of_coord(b)
+            && Dim::all()
+                .iter()
+                .all(|&o| o == d || o.of_coord(a) == o.of_coord(b))
+    };
+
+    let mut score = [0.0f64; 4];
+    let mut notes: Vec<String> = Vec::new();
+    for rep in reports {
+        // replica conflicts separated along one axis
+        if !rep.conflict_ranks.is_empty() {
+            let conf: Vec<Coord> = rep
+                .conflict_ranks
+                .iter()
+                .filter_map(|&r| coord_of(r))
+                .collect();
+            let agree: Vec<Coord> = rep
+                .recorded
+                .iter()
+                .filter(|(r, _)| !rep.conflict_ranks.contains(r))
+                .filter_map(|(r, _)| coord_of(*r))
+                .collect();
+            for d in Dim::all() {
+                if d.size(topo) > 1
+                    && conf.iter().any(|&a| {
+                        agree.iter().any(|&b| separated(a, b, d))
+                    })
+                {
+                    score[d.idx()] += 2.0;
+                    notes.push(format!(
+                        "{}: replica shards disagree bitwise across {}",
+                        rep.key, d.name()));
+                }
+            }
+        }
+        // pass/fail separation along one axis
+        let fails: Vec<Coord> = rep
+            .shards
+            .iter()
+            .filter(|s| s.fail)
+            .filter_map(|s| coord_of(s.rank))
+            .collect();
+        let passes: Vec<Coord> = rep
+            .shards
+            .iter()
+            .filter(|s| !s.fail)
+            .filter_map(|s| coord_of(s.rank))
+            .collect();
+        for d in Dim::all() {
+            if d.size(topo) > 1
+                && fails.iter().any(|&a| {
+                    passes.iter().any(|&b| separated(a, b, d))
+                })
+            {
+                score[d.idx()] += 2.0;
+                notes.push(format!(
+                    "{}: divergence isolated to specific {} ranks",
+                    rep.key, d.name()));
+            }
+        }
+        // uniform rescale matching an axis size (or its inverse)
+        if let Some(s) = rep.scale {
+            let mut matched: Vec<Dim> = Vec::new();
+            for d in Dim::all() {
+                let n = d.size(topo) as f64;
+                if d.size(topo) > 1
+                    && ((s - n).abs() <= 0.02 * n || (s * n - 1.0).abs() <= 0.02)
+                {
+                    matched.push(d);
+                }
+            }
+            if !matched.is_empty() {
+                for &d in &matched {
+                    score[d.idx()] += 1.0;
+                }
+                if matched.len() > 1 && sp {
+                    // SP runs the replicated-param grad reduction over tp
+                    score[Dim::Tp.idx()] += 0.25;
+                }
+                notes.push(format!(
+                    "{}: candidate ≈ {:.4} x reference — a missing/extra \
+                     {} scaling factor",
+                    rep.key, s,
+                    matched.iter().map(|d| d.name()).collect::<Vec<_>>()
+                        .join("/")));
+            }
+        }
+        // residency tiebreak: every shard of an axis-sharded tensor failed
+        let all_fail = !rep.shards.is_empty()
+            && rep.shards.iter().all(|s| s.fail);
+        if all_fail && rep.conflict_ranks.is_empty() {
+            for d in Dim::all() {
+                if d.size(topo) <= 1 {
+                    continue;
+                }
+                let hit = rep.recorded.iter().any(|(ra, sa)| {
+                    rep.recorded.iter().any(|(rb, sb)| {
+                        match (coord_of(*ra), coord_of(*rb)) {
+                            (Some(a), Some(b)) => {
+                                separated(a, b, d) && sa != sb
+                            }
+                            _ => false,
+                        }
+                    })
+                });
+                if hit {
+                    score[d.idx()] += 0.5;
+                }
+            }
+        }
+    }
+
+    // single non-trivial axis: implicated by default
+    let nontrivial: Vec<Dim> = Dim::all()
+        .into_iter()
+        .filter(|&d| d.size(topo) > 1)
+        .collect();
+    if nontrivial.len() == 1 {
+        score[nontrivial[0].idx()] += 1.0;
+    }
+
+    // dedup repeated notes (many frontier ids produce the same evidence)
+    let mut seen: HashMap<String, ()> = HashMap::new();
+    notes.retain(|n| {
+        // keep one note per (evidence kind x dim), keyed by the tail
+        let tail = n.splitn(2, ": ").nth(1).unwrap_or(n).to_string();
+        seen.insert(tail, ()).is_none()
+    });
+    notes.truncate(8);
+
+    let mut dims: Vec<(Dim, f64)> = Dim::all()
+        .into_iter()
+        .map(|d| (d, score[d.idx()]))
+        .filter(|(_, s)| *s > 0.0)
+        .collect();
+    dims.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    Implication { dims, notes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, Tensor};
+
+    fn entry(spec: ShardSpec, vals: &[f32], rank: u32) -> Entry {
+        let dims = spec.local_dims();
+        Entry { spec, data: Tensor::new(&dims, vals.to_vec(), DType::F32), rank }
+    }
+
+    #[test]
+    fn conflict_separation_implicates_the_axis() {
+        // topology tp=2: two replicas of a full tensor disagree
+        let topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+        let spec = ShardSpec::full(&[2]);
+        let r = vec![entry(spec.clone(), &[1.0, 2.0], 0)];
+        let c = vec![entry(spec.clone(), &[1.0, 2.0], 0),
+                     entry(spec, &[9.0, 2.0], 1)];
+        let rep = analyze_id("i0/m0/main_grad/w", &r, &c, 0.01);
+        assert_eq!(rep.conflict_ranks, vec![1]);
+        let imp = implicate(&[rep], &topo, false);
+        assert_eq!(imp.dims.first().map(|(d, _)| *d), Some(Dim::Tp));
+    }
+
+    #[test]
+    fn per_shard_separation_implicates_the_axis() {
+        // dp=2 (tp=1): the dp1 shard of a split tensor diverges, dp0 is fine
+        let topo = Topology::new(2, 1, 1, 1, 1).unwrap();
+        let s0 = ShardSpec::split(&[4], 0, 0, 2);
+        let s1 = ShardSpec::split(&[4], 0, 1, 2);
+        let r = vec![entry(s0.clone(), &[1.0, 2.0], 0),
+                     entry(s1.clone(), &[3.0, 4.0], 1)];
+        let c = vec![entry(s0, &[1.0, 2.0], 0),
+                     entry(s1, &[30.0, 40.0], 1)];
+        let rep = analyze_id("i0/m0/act/layers.0.mlp", &r, &c, 0.01);
+        assert!(rep.shards.iter().any(|s| s.fail));
+        assert!(rep.shards.iter().any(|s| !s.fail));
+        let imp = implicate(&[rep], &topo, false);
+        assert_eq!(imp.dims.first().map(|(d, _)| *d), Some(Dim::Dp));
+    }
+
+    #[test]
+    fn uniform_rescale_matches_the_axis_size() {
+        // cp=2, candidate = 2 x reference -> the missing 1/cp scaling
+        let topo = Topology::new(1, 1, 1, 2, 1).unwrap();
+        let spec = ShardSpec::full(&[4]);
+        let r = vec![entry(spec.clone(), &[1.0, -2.0, 3.0, 0.5], 0)];
+        let c = vec![entry(spec, &[2.0, -4.0, 6.0, 1.0], 0)];
+        let rep = analyze_id("i0/m0/act_grad/output_layer", &r, &c, 0.01);
+        let s = rep.scale.expect("exact rescale must fit");
+        assert!((s - 2.0).abs() < 1e-9, "{s}");
+        let imp = implicate(&[rep], &topo, false);
+        assert_eq!(imp.dims.first().map(|(d, _)| *d), Some(Dim::Cp));
+        assert!(imp.notes.iter().any(|n| n.contains("cp")), "{:?}", imp.notes);
+    }
+
+    #[test]
+    fn near_identical_tensors_do_not_fit_a_scale() {
+        let spec = ShardSpec::full(&[3]);
+        let r = vec![entry(spec.clone(), &[1.0, 2.0, 3.0], 0)];
+        let c = vec![entry(spec, &[1.0, 2.0, 3.001], 0)];
+        let rep = analyze_id("i0/m0/act/x", &r, &c, 0.01);
+        assert!(rep.scale.is_none());
+    }
+}

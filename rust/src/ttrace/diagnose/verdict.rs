@@ -1,0 +1,285 @@
+//! Diagnosis assembly (diagnosis layer 4): run the DAG + frontier +
+//! shard-attribution pipeline over a `CheckOutcome` and render a single
+//! structured verdict naming **module, phase, implicated parallelism
+//! dimension and the frontier tensors** — the same answer whether the
+//! entries come from in-memory `Trace`s (`ttrace check`) or from `.ttrc`
+//! stores (`ttrace diagnose ref.ttrc cand.ttrc`).
+
+use anyhow::Result;
+
+use crate::dist::Topology;
+use crate::model::ParCfg;
+
+use super::super::checker::{CheckCfg, CheckOutcome};
+use super::super::collector::{Entry, Trace};
+use super::super::hooks::CanonId;
+use super::super::store::{check_stores, StoreReader};
+use super::blame::{self, Phase};
+use super::dag::Dag;
+use super::shardmap::{self, Dim, IdReport};
+
+/// The parallel layout + feature flags of the run that produced a trace —
+/// what turns per-shard rank tags into grid coordinates. Embedded in
+/// `.ttrc` stores by `ttrace record`; built from the `ParCfg` in-process.
+#[derive(Clone, Debug)]
+pub struct RunMeta {
+    pub topo: Topology,
+    pub sp: bool,
+    pub fp8: bool,
+    pub moe: bool,
+    pub zero1: bool,
+    pub overlap: bool,
+    pub n_micro: usize,
+}
+
+impl RunMeta {
+    pub fn of_parcfg(p: &ParCfg) -> RunMeta {
+        RunMeta {
+            topo: p.topo,
+            sp: p.sp,
+            fp8: p.fp8,
+            moe: p.moe,
+            zero1: p.zero1,
+            overlap: p.overlap,
+            n_micro: p.n_micro,
+        }
+    }
+
+    /// Single-device semantics (also the fallback when a store carries no
+    /// embedded metadata).
+    pub fn single() -> RunMeta {
+        RunMeta {
+            topo: Topology::single(),
+            sp: false,
+            fp8: false,
+            moe: false,
+            zero1: false,
+            overlap: false,
+            n_micro: 1,
+        }
+    }
+}
+
+/// Where a diagnosis loads shard entries from: an in-memory `Trace` or a
+/// positioned-read `.ttrc` store. Only the frontier's ids are ever
+/// fetched, so the offline path stays streaming.
+pub trait EntrySource {
+    fn entries_of(&self, key: &str) -> Result<Option<Vec<Entry>>>;
+}
+
+impl EntrySource for Trace {
+    fn entries_of(&self, key: &str) -> Result<Option<Vec<Entry>>> {
+        Ok(self.get(key).map(|e| e.to_vec()))
+    }
+}
+
+impl EntrySource for StoreReader {
+    fn entries_of(&self, key: &str) -> Result<Option<Vec<Entry>>> {
+        self.read_entries(key)
+    }
+}
+
+/// One primary suspect on the divergence frontier.
+#[derive(Clone, Debug)]
+pub struct Suspect {
+    pub key: String,
+    pub module: String,
+    pub phase: Phase,
+    pub rel_err: f64,
+    pub threshold: f64,
+    pub conflict_elems: usize,
+    /// `rel_err / threshold` (infinite for replica conflicts)
+    pub excess: f64,
+}
+
+/// The structured diagnosis (paper §3 step 4 / §6: name the module, the
+/// phase and the parallelism dimension, not just the first bad tensor).
+#[derive(Clone, Debug)]
+pub struct Diagnosis {
+    pub pass: bool,
+    /// module of the computation-order-first primary suspect (the
+    /// first-divergence semantics of the paper, restricted to the
+    /// frontier so propagated fallout can't steal the blame)
+    pub module: Option<String>,
+    pub phase: Option<Phase>,
+    /// implicated parallelism dimensions, strongest evidence first;
+    /// empty = single-device semantics / no axis-correlated structure
+    pub dims: Vec<(Dim, f64)>,
+    /// primary suspects ranked by threshold excess (conflicts first)
+    pub frontier: Vec<Suspect>,
+    /// failing checks suppressed as propagated fallout
+    pub fallout: usize,
+    pub notes: Vec<String>,
+    pub topo: Topology,
+}
+
+/// Per-shard attribution is bounded: the frontier's first ids (in
+/// computation order) are re-analyzed, the rest only ranked.
+pub const MAX_ANALYZED_IDS: usize = 16;
+
+/// Diagnose a failing differential-check outcome. `reference`/`candidate`
+/// supply the raw shard entries of frontier ids; `meta` is the
+/// *candidate* run's layout.
+pub fn diagnose(outcome: &CheckOutcome, reference: &dyn EntrySource,
+                candidate: &dyn EntrySource, meta: &RunMeta)
+                -> Result<Diagnosis> {
+    let mut d = Diagnosis {
+        pass: outcome.pass,
+        module: None,
+        phase: None,
+        dims: Vec::new(),
+        frontier: Vec::new(),
+        fallout: 0,
+        notes: Vec::new(),
+        topo: meta.topo,
+    };
+    if outcome.pass {
+        return Ok(d);
+    }
+
+    let keys: Vec<String> = outcome
+        .checks
+        .iter()
+        .map(|c| c.key.clone())
+        .chain(outcome.missing_in_candidate.iter().cloned())
+        .chain(outcome.merge_errors.iter().map(|(k, _)| k.clone()))
+        .collect();
+    let dag = Dag::build(&keys);
+    let split = blame::split(outcome, &dag);
+    d.fallout = split.fallout;
+
+    if let Some(&ci) = split.frontier.first() {
+        let c = &outcome.checks[ci];
+        d.module = Some(c.id.module.clone());
+        d.phase = Some(blame::phase_of(c.id.kind));
+    } else if let Some((k, e)) = outcome.merge_errors.first() {
+        if let Some(id) = CanonId::parse(k) {
+            d.module = Some(id.module.clone());
+            d.phase = Some(blame::phase_of(id.kind));
+        }
+        d.notes.push(format!("structural merge failure at '{k}': {e}"));
+    }
+    if let Some(k) = outcome.missing_in_candidate.first() {
+        d.notes.push(format!(
+            "{} id(s) missing in the candidate (first: {k})",
+            outcome.missing_in_candidate.len()));
+    }
+
+    // per-shard attribution over the head of the frontier
+    let mut reports: Vec<IdReport> = Vec::new();
+    for &ci in split.frontier.iter().take(MAX_ANALYZED_IDS) {
+        let c = &outcome.checks[ci];
+        let re = reference.entries_of(&c.key)?;
+        let ce = candidate.entries_of(&c.key)?;
+        let (Some(re), Some(ce)) = (re, ce) else {
+            continue;
+        };
+        reports.push(shardmap::analyze_id(&c.key, &re, &ce, c.threshold));
+    }
+    let imp = shardmap::implicate(&reports, &meta.topo, meta.sp);
+    d.dims = imp.dims;
+    d.notes.extend(imp.notes);
+
+    let mut suspects: Vec<Suspect> = split
+        .frontier
+        .iter()
+        .map(|&ci| {
+            let c = &outcome.checks[ci];
+            Suspect {
+                key: c.key.clone(),
+                module: c.id.module.clone(),
+                phase: blame::phase_of(c.id.kind),
+                rel_err: c.rel_err,
+                threshold: c.threshold,
+                conflict_elems: c.conflict_elems,
+                excess: blame::excess(c),
+            }
+        })
+        .collect();
+    // rank by excess; equal excess keeps computation order (stable sort)
+    suspects.sort_by(|a, b| {
+        b.excess
+            .partial_cmp(&a.excess)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    d.frontier = suspects;
+    Ok(d)
+}
+
+/// The offline wiring: differential-check two `.ttrc` stores and diagnose
+/// the outcome from the files alone. The candidate store's embedded
+/// `RunMeta` supplies the topology; the reference store's embedded
+/// estimates supply the thresholds (as in `check-offline`).
+pub fn diagnose_stores(reference: &StoreReader, candidate: &StoreReader,
+                       cfg: &CheckCfg) -> Result<(CheckOutcome, Diagnosis)> {
+    let mut cfg = cfg.clone();
+    if let Some(eps) = reference.estimate_eps() {
+        cfg.eps = eps; // thresholds must use the eps the estimates used
+    }
+    let outcome = check_stores(reference, candidate, reference.estimate(),
+                               &cfg)?;
+    let (meta, meta_note) = match candidate.run_meta() {
+        Some(m) => (m.clone(), None),
+        None => (RunMeta::single(),
+                 Some("candidate store carries no run metadata — \
+                       parallelism dimensions cannot be implicated"
+                      .to_string())),
+    };
+    let mut diag = diagnose(&outcome, reference, candidate, &meta)?;
+    if let Some(n) = meta_note {
+        diag.notes.insert(0, n);
+    }
+    Ok((outcome, diag))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, Tensor};
+    use crate::ttrace::checker::check_traces;
+    use crate::ttrace::shard::ShardSpec;
+    use std::collections::HashMap;
+
+    fn trace_of(items: &[(&str, Vec<f32>, u32)]) -> Trace {
+        let mut t = Trace::default();
+        for (key, vals, rank) in items {
+            t.entries.entry(key.to_string()).or_default().push(Entry {
+                spec: ShardSpec::full(&[vals.len()]),
+                data: Tensor::new(&[vals.len()], vals.clone(), DType::Bf16),
+                rank: *rank,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn frontier_blames_the_first_uncaused_failure() {
+        // act chain l0 -> l1 -> l2; the bug corrupts l1 and (propagated) l2
+        let r = trace_of(&[("i0/m0/act/layers.0.mlp", vec![1.0, 2.0], 0),
+                           ("i0/m0/act/layers.1.mlp", vec![1.0, 2.0], 0),
+                           ("i0/m0/act/layers.2.mlp", vec![1.0, 2.0], 0)]);
+        let c = trace_of(&[("i0/m0/act/layers.0.mlp", vec![1.0, 2.0], 0),
+                           ("i0/m0/act/layers.1.mlp", vec![4.0, 2.0], 0),
+                           ("i0/m0/act/layers.2.mlp", vec![1.0, 5.0], 0)]);
+        let cfg = CheckCfg::default();
+        let out = check_traces(&r, &c, &HashMap::new(), &cfg).unwrap();
+        assert!(!out.pass);
+        let d = diagnose(&out, &r, &c, &RunMeta::single()).unwrap();
+        assert_eq!(d.module.as_deref(), Some("layers.1.mlp"));
+        assert_eq!(d.phase, Some(Phase::Fprop));
+        assert_eq!(d.frontier.len(), 1);
+        assert_eq!(d.fallout, 1);
+        assert!(d.dims.is_empty(), "single device implies no dimension");
+    }
+
+    #[test]
+    fn passing_outcome_diagnoses_clean() {
+        let r = trace_of(&[("i0/m0/act/layers.0.mlp", vec![1.0], 0)]);
+        let c = trace_of(&[("i0/m0/act/layers.0.mlp", vec![1.0], 0)]);
+        let cfg = CheckCfg::default();
+        let out = check_traces(&r, &c, &HashMap::new(), &cfg).unwrap();
+        let d = diagnose(&out, &r, &c, &RunMeta::single()).unwrap();
+        assert!(d.pass);
+        assert!(d.frontier.is_empty() && d.module.is_none());
+    }
+}

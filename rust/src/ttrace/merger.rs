@@ -177,7 +177,7 @@ mod tests {
     use crate::util::prop::{check, Gen};
 
     fn entry(spec: ShardSpec, data: Tensor) -> Entry {
-        Entry { spec, data }
+        Entry { spec, data, rank: 0 }
     }
 
     #[test]

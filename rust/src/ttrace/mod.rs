@@ -2,12 +2,15 @@
 //! mapping, consistent tensor generation, shard merging, perturbation-based
 //! threshold estimation, differential checking and bug localization; plus
 //! the `.ttrc` binary trace store (`store`) that decouples collection from
-//! checking so reference and candidate can come from separate processes.
+//! checking so reference and candidate can come from separate processes,
+//! and the dependency-aware diagnosis layer (`diagnose`) that turns a
+//! failing check into a module/phase/dimension verdict.
 
 pub mod annot;
 pub mod canonical;
 pub mod checker;
 pub mod collector;
+pub mod diagnose;
 pub mod gen;
 pub mod hooks;
 pub mod merger;
@@ -18,6 +21,7 @@ pub mod store;
 pub mod threshold;
 
 pub use checker::{check_traces, CheckCfg, CheckOutcome};
+pub use diagnose::{diagnose_stores, Diagnosis, RunMeta};
 pub use runner::{localized_module, reference_of, ttrace_check, TtraceRun};
 pub use collector::{Collector, Trace};
 pub use hooks::{CanonId, Hooks, Kind, NoopHooks};

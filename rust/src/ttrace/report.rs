@@ -5,6 +5,7 @@
 use crate::util::json::Json;
 
 use super::checker::{CheckCfg, CheckOutcome};
+use super::diagnose::Diagnosis;
 
 /// Render the report as text (the paper's step-4 artifact).
 pub fn render(outcome: &CheckOutcome, cfg: &CheckCfg, max_rows: usize) -> String {
@@ -16,15 +17,21 @@ pub fn render(outcome: &CheckOutcome, cfg: &CheckCfg, max_rows: usize) -> String
     s.push_str(&format!("{:<52} {:>12} {:>12} {:>9} {}\n",
                         "tensor (iter/micro/kind/module)", "rel_err/eps",
                         "thresh/eps", "conflicts", "status"));
-    let mut shown = 0;
+    // Row budget: every FAIL row is always shown; only *passing* rows are
+    // elided (and counted) past `max_rows`. Failing rows must not consume
+    // the budget — a report with many failures would otherwise hide the
+    // passing context rows entirely.
+    let mut shown_pass = 0;
     let mut hidden_pass = 0;
     for c in &outcome.checks {
         let fail = !c.pass;
-        if shown >= max_rows && !fail {
-            hidden_pass += 1;
-            continue;
+        if !fail {
+            if shown_pass >= max_rows {
+                hidden_pass += 1;
+                continue;
+            }
+            shown_pass += 1;
         }
-        shown += 1;
         s.push_str(&format!(
             "{:<52} {:>12.3} {:>12.3} {:>9} {}\n",
             truncate(&c.key, 52),
@@ -88,6 +95,106 @@ pub fn to_json(outcome: &CheckOutcome, cfg: &CheckCfg) -> Json {
     root
 }
 
+/// Render the dependency-aware diagnosis (module / phase / implicated
+/// parallelism dimension / frontier) appended below the differential
+/// report by the `check` and `diagnose` subcommands.
+pub fn render_diagnosis(d: &Diagnosis, cfg: &CheckCfg) -> String {
+    let mut s = String::new();
+    if d.pass {
+        s.push_str("DIAGNOSIS: nothing to diagnose — the candidate passed.\n");
+        return s;
+    }
+    s.push_str(&format!(
+        "DIAGNOSIS — {} primary suspect(s) on the divergence frontier \
+         ({} downstream casualt{} suppressed as fallout)\n",
+        d.frontier.len(), d.fallout,
+        if d.fallout == 1 { "y" } else { "ies" }));
+    if let Some(m) = &d.module {
+        s.push_str(&format!("  blamed module:  {m}\n"));
+    }
+    if let Some(p) = &d.phase {
+        s.push_str(&format!("  phase:          {}\n", p.name()));
+    }
+    if d.dims.is_empty() {
+        s.push_str(&format!(
+            "  implicated dim: none (single-device semantics on {})\n",
+            d.topo.describe()));
+    } else {
+        let dims: Vec<String> = d
+            .dims
+            .iter()
+            .map(|(dim, score)| format!("{} (score {score:.2})", dim.name()))
+            .collect();
+        s.push_str(&format!("  implicated dim: {} on {}\n", dims.join(", "),
+                            d.topo.describe()));
+    }
+    if !d.frontier.is_empty() {
+        s.push_str("  frontier (ranked by threshold excess):\n");
+        for f in d.frontier.iter().take(8) {
+            s.push_str(&format!(
+                "    {:<52} {:>10.3} {:>10.3} {}\n",
+                truncate(&f.key, 52),
+                f.rel_err / cfg.eps,
+                f.threshold / cfg.eps,
+                if f.conflict_elems > 0 {
+                    format!("CONFLICT x{}", f.conflict_elems)
+                } else {
+                    format!("excess {:.1}x", f.excess)
+                }));
+        }
+        if d.frontier.len() > 8 {
+            s.push_str(&format!("    ... {} more frontier tensors ...\n",
+                                d.frontier.len() - 8));
+        }
+    }
+    for n in &d.notes {
+        s.push_str(&format!("  note: {n}\n"));
+    }
+    s
+}
+
+/// Machine-readable diagnosis (embedded under `"diagnosis"` in the JSON
+/// report when a diagnosis ran).
+pub fn diagnosis_json(d: &Diagnosis) -> Json {
+    let mut root = Json::obj();
+    root.set("pass", Json::Bool(d.pass));
+    if let Some(m) = &d.module {
+        root.set("module", Json::from_str_(m));
+    }
+    if let Some(p) = &d.phase {
+        root.set("phase", Json::from_str_(p.name()));
+    }
+    root.set("topology", Json::from_str_(&d.topo.describe()));
+    root.set("implicated_dims", Json::Arr(
+        d.dims
+            .iter()
+            .map(|(dim, score)| {
+                let mut o = Json::obj();
+                o.set("dim", Json::from_str_(dim.name()));
+                o.set("score", Json::from_f64(*score));
+                o
+            })
+            .collect()));
+    root.set("fallout", Json::from_usize(d.fallout));
+    root.set("frontier", Json::Arr(
+        d.frontier
+            .iter()
+            .map(|f| {
+                let mut o = Json::obj();
+                o.set("key", Json::from_str_(&f.key));
+                o.set("module", Json::from_str_(&f.module));
+                o.set("phase", Json::from_str_(f.phase.name()));
+                o.set("rel_err", Json::from_f64(f.rel_err));
+                o.set("threshold", Json::from_f64(f.threshold));
+                o.set("conflicts", Json::from_usize(f.conflict_elems));
+                o
+            })
+            .collect()));
+    root.set("notes", Json::Arr(
+        d.notes.iter().map(|n| Json::from_str_(n)).collect()));
+    root
+}
+
 fn truncate(s: &str, n: usize) -> String {
     if s.len() <= n {
         s.to_string()
@@ -133,5 +240,85 @@ mod tests {
         let txt = j.to_string_pretty();
         let back = crate::util::json::Json::parse(&txt).unwrap();
         assert!(!back.req("pass").unwrap().as_bool().unwrap());
+    }
+
+    fn check_row(i: usize, pass: bool) -> TensorCheck {
+        TensorCheck {
+            key: format!("i0/m0/act/layers.{i}.mlp"),
+            id: CanonId::new(0, 0, Kind::Act, format!("layers.{i}.mlp")),
+            rel_err: if pass { 0.001 } else { 0.9 },
+            threshold: 0.03,
+            conflict_elems: 0,
+            pass,
+        }
+    }
+
+    #[test]
+    fn elision_always_shows_fails_and_counts_only_passes() {
+        // 2 FAILs surrounded by 3 passes, budget of 1 row: every FAIL must
+        // render, exactly 1 pass renders, and the elision line counts the
+        // 2 hidden *passes* — failing rows never consume the budget.
+        let mut o = CheckOutcome::default();
+        for (i, pass) in [(0, true), (1, false), (2, true), (3, false),
+                          (4, true)] {
+            o.checks.push(check_row(i, pass));
+        }
+        o.pass = false;
+        let cfg = CheckCfg::default();
+        let text = render(&o, &cfg, 1);
+        // two FAIL status rows (the VERDICT line says "FAIL —", not " FAIL\n")
+        assert_eq!(text.matches(" FAIL\n").count(), 2, "{text}");
+        assert!(text.contains("layers.1.mlp"), "{text}");
+        assert!(text.contains("layers.3.mlp"), "{text}");
+        assert!(text.contains("... 2 passing tensors elided ..."), "{text}");
+        // the one shown pass is the first one in order
+        assert!(text.contains("layers.0.mlp"), "{text}");
+        assert!(!text.contains("layers.2.mlp"), "{text}");
+    }
+
+    #[test]
+    fn no_elision_line_when_everything_fits() {
+        let mut o = CheckOutcome::default();
+        o.checks.push(check_row(0, true));
+        o.pass = true;
+        let text = render(&o, &CheckCfg::default(), 10);
+        assert!(!text.contains("elided"), "{text}");
+    }
+
+    #[test]
+    fn diagnosis_renders_module_phase_and_dim() {
+        use crate::dist::Topology;
+        use crate::ttrace::diagnose::{Dim, Phase, Suspect};
+        let d = Diagnosis {
+            pass: false,
+            module: Some("layers.0.mlp".to_string()),
+            phase: Some(Phase::Wgrad),
+            dims: vec![(Dim::Tp, 3.0)],
+            frontier: vec![Suspect {
+                key: "i0/m0/main_grad/layers.0.mlp.fc1.weight".to_string(),
+                module: "layers.0.mlp.fc1.weight".to_string(),
+                phase: Phase::Wgrad,
+                rel_err: 0.5,
+                threshold: 0.03,
+                conflict_elems: 4,
+                excess: f64::INFINITY,
+            }],
+            fallout: 7,
+            notes: vec!["replicas disagree".to_string()],
+            topo: Topology::new(1, 2, 1, 1, 1).unwrap(),
+        };
+        let cfg = CheckCfg::default();
+        let text = render_diagnosis(&d, &cfg);
+        assert!(text.contains("blamed module:  layers.0.mlp"), "{text}");
+        assert!(text.contains("phase:          wgrad"), "{text}");
+        assert!(text.contains("implicated dim: tp"), "{text}");
+        assert!(text.contains("CONFLICT x4"), "{text}");
+        assert!(text.contains("7 downstream"), "{text}");
+        let j = diagnosis_json(&d);
+        let back = crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back.req("module").unwrap().as_str().unwrap(), "layers.0.mlp");
+        assert_eq!(back.req("phase").unwrap().as_str().unwrap(), "wgrad");
+        let dims = back.req("implicated_dims").unwrap().as_arr().unwrap();
+        assert_eq!(dims[0].req("dim").unwrap().as_str().unwrap(), "tp");
     }
 }

@@ -3,6 +3,8 @@
 //! iteration with trace collection, merge + differentially test, and (on
 //! failure) optionally re-run in input-rewrite mode to localize the bug.
 
+use std::collections::HashMap;
+
 use anyhow::Result;
 
 use crate::bugs::BugSet;
@@ -12,6 +14,7 @@ use crate::runtime::Executor;
 
 use super::checker::{check_traces, CheckCfg, CheckOutcome};
 use super::collector::{Collector, Mode, Trace};
+use super::diagnose::{diagnose, Diagnosis, RunMeta};
 use super::threshold;
 
 /// Reference configuration for a candidate: single device, same numerics
@@ -30,6 +33,10 @@ pub struct TtraceRun {
     pub candidate: Trace,
     /// outcome of the rewrite-mode (localization) pass, if performed
     pub rewrite_outcome: Option<CheckOutcome>,
+    /// the §5.2 per-tensor threshold estimates the check used
+    pub estimate: HashMap<String, f64>,
+    /// dependency-aware diagnosis of a failing outcome (None on PASS)
+    pub diagnosis: Option<Diagnosis>,
 }
 
 /// Run the complete TTrace check for `candidate_p` against its reference.
@@ -62,7 +69,18 @@ pub fn ttrace_check(m: &ModelCfg, candidate_p: &ParCfg, layers: usize,
         None
     };
 
-    Ok(TtraceRun { outcome, reference, candidate, rewrite_outcome })
+    // Dependency-aware diagnosis of a failing outcome (frontier, phase,
+    // implicated parallelism dimension) — the in-process twin of
+    // `diagnose_stores`.
+    let diagnosis = if outcome.pass {
+        None
+    } else {
+        Some(diagnose(&outcome, &reference, &candidate,
+                      &RunMeta::of_parcfg(candidate_p))?)
+    };
+
+    Ok(TtraceRun { outcome, reference, candidate, rewrite_outcome,
+                   estimate: est.rel, diagnosis })
 }
 
 /// The module TTrace blames: the *earliest* (in model-computation order)

@@ -2,7 +2,7 @@
 //! layer the paper's deployment assumes: the framework under test dumps
 //! traces to shared storage and the checker compares them out-of-band).
 //!
-//! ## Format (version 1, little-endian throughout)
+//! ## Format (version 2, little-endian throughout)
 //!
 //! ```text
 //! [0..4)   magic  b"TTRC"
@@ -14,15 +14,21 @@
 //!          every canonical id appears exactly once
 //! [I..E)   index: u32 id count, then per canonical id (sorted by key):
 //!          u32 string idx, u32 shard count, then per shard: dtype tag,
-//!          payload encoding tag, `ShardSpec` (partial flag, global dims,
-//!          dim maps) and u64 payload offset — the local shape and payload
-//!          length are derived (`spec.local_dims()`, numel x encoding
-//!          width), so they cannot disagree with the spec
-//! [E..T)   threshold estimates (empty unless recorded with --reference):
+//!          payload encoding tag, u32 recording rank, `ShardSpec` (partial
+//!          flag, global dims, dim maps) and u64 payload offset — the
+//!          local shape and payload length are derived
+//!          (`spec.local_dims()`, numel x encoding width), so they cannot
+//!          disagree with the spec
+//! [E..M)   threshold estimates (empty unless recorded with --reference):
 //!          u64 eps bits (f64; 0 = none), u32 count, then per entry
 //!          u32 string idx + u64 f64 bits of the §5.2 relative estimate
-//! [T..)    trailer (32 bytes): u64 S, u64 I, u64 E, u64 FNV-1a checksum
-//!          of every byte before the checksum field
+//! [M..T)   run metadata (u8 present flag; when 1: dp,tp,pp,cp,vpp and
+//!          n_micro as u32, then a flags byte sp|fp8|moe|zero1|overlap) —
+//!          the parallel layout of the recording run, which
+//!          `ttrace::diagnose` needs to turn per-shard rank tags into
+//!          (tp, cp, dp, pp) coordinates offline
+//! [T..)    trailer (40 bytes): u64 S, u64 I, u64 E, u64 M, u64 FNV-1a
+//!          checksum of every byte before the checksum field
 //! ```
 //!
 //! Payload encodings are bit-exact: `Raw32` stores the f32 bit patterns;
@@ -51,13 +57,14 @@ use crate::util::rng::{fnv1a_update, FNV_OFFSET_BASIS};
 
 use super::checker::{check_one_id, comp_order, CheckCfg, CheckOutcome, KeyVerdict};
 use super::collector::{Entry, Trace};
+use super::diagnose::RunMeta;
 use super::hooks::CanonId;
 use super::shard::{DimMap, Piece, ShardSpec};
 
 const MAGIC: &[u8; 4] = b"TTRC";
-const VERSION: u16 = 1;
+const VERSION: u16 = 2;
 const HEADER_LEN: u64 = 8;
-const TRAILER_LEN: u64 = 32;
+const TRAILER_LEN: u64 = 40;
 
 /// How a shard's payload bytes encode its f32 values.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -79,6 +86,8 @@ pub struct ShardMeta {
     /// local (recorded) dims — always `spec.local_dims()`
     pub dims: Vec<usize>,
     pub encoding: Encoding,
+    /// global rank of the recording thread (diagnosis attribution)
+    pub rank: u32,
     /// absolute file offset of the payload
     pub offset: u64,
     /// payload length in bytes
@@ -131,6 +140,7 @@ fn put_shard(buf: &mut Vec<u8>, m: &ShardMeta) {
         Encoding::Raw32 => 0,
         Encoding::Packed16 => 1,
     });
+    put_u32(buf, m.rank);
     put_u8(buf, m.spec.partial as u8);
     put_u8(buf, m.spec.global_dims.len() as u8);
     for &d in &m.spec.global_dims {
@@ -205,6 +215,7 @@ pub struct StoreWriter {
     index: BTreeMap<String, Vec<ShardMeta>>,
     estimate: BTreeMap<String, f64>,
     estimate_eps: f64,
+    run_meta: Option<RunMeta>,
 }
 
 impl StoreWriter {
@@ -225,6 +236,7 @@ impl StoreWriter {
             index: BTreeMap::new(),
             estimate: BTreeMap::new(),
             estimate_eps: 0.0,
+            run_meta: None,
         };
         let mut head = Vec::with_capacity(HEADER_LEN as usize);
         head.extend_from_slice(MAGIC);
@@ -280,6 +292,7 @@ impl StoreWriter {
             dtype: entry.data.dtype,
             dims: entry.data.dims.clone(),
             encoding,
+            rank: entry.rank,
             offset: self.offset,
             len: bytes.len() as u64,
         };
@@ -295,6 +308,13 @@ impl StoreWriter {
     pub fn set_estimate(&mut self, rel: &HashMap<String, f64>, eps: f64) {
         self.estimate = rel.iter().map(|(k, v)| (k.clone(), *v)).collect();
         self.estimate_eps = eps;
+    }
+
+    /// Embed the recording run's parallel layout (topology + feature
+    /// flags). `ttrace diagnose` needs it to map per-shard rank tags to
+    /// (tp, cp, dp, pp) coordinates when working from the store alone.
+    pub fn set_run_meta(&mut self, meta: &RunMeta) {
+        self.run_meta = Some(meta.clone());
     }
 
     /// Write string table, index, estimates and trailer; seal the file.
@@ -343,10 +363,31 @@ impl StoreWriter {
         }
         self.write_bytes(&buf)?;
 
-        let mut tail = Vec::with_capacity(24);
+        let meta_offset = self.offset;
+        let mut buf = Vec::new();
+        match &self.run_meta {
+            None => put_u8(&mut buf, 0),
+            Some(m) => {
+                put_u8(&mut buf, 1);
+                for v in [m.topo.dp, m.topo.tp, m.topo.pp, m.topo.cp,
+                          m.topo.vpp, m.n_micro] {
+                    put_u32(&mut buf, v as u32);
+                }
+                let flags = (m.sp as u8)
+                    | (m.fp8 as u8) << 1
+                    | (m.moe as u8) << 2
+                    | (m.zero1 as u8) << 3
+                    | (m.overlap as u8) << 4;
+                put_u8(&mut buf, flags);
+            }
+        }
+        self.write_bytes(&buf)?;
+
+        let mut tail = Vec::with_capacity(32);
         put_u64(&mut tail, string_table_offset);
         put_u64(&mut tail, index_offset);
         put_u64(&mut tail, estimates_offset);
+        put_u64(&mut tail, meta_offset);
         self.write_bytes(&tail)?;
         let checksum = self.hash;
         self.file
@@ -445,6 +486,7 @@ fn read_shard(c: &mut Cursor) -> Result<ShardMeta> {
         t => bail!("{}: unknown payload encoding tag {t} at offset {}",
                    c.path.display(), at + 1),
     };
+    let rank = c.u32()?;
     let partial = c.u8()? != 0;
     let ng = c.u8()? as usize;
     let mut global_dims = Vec::with_capacity(ng);
@@ -477,7 +519,7 @@ fn read_shard(c: &mut Cursor) -> Result<ShardMeta> {
         Encoding::Raw32 => numel as u64 * 4,
         Encoding::Packed16 => numel as u64 * 2,
     };
-    Ok(ShardMeta { spec, dtype, dims, encoding, offset, len })
+    Ok(ShardMeta { spec, dtype, dims, encoding, rank, offset, len })
 }
 
 /// Random-access `.ttrc` reader. `open` validates magic, version, checksum
@@ -496,6 +538,7 @@ pub struct StoreReader {
     index: BTreeMap<String, Vec<ShardMeta>>,
     estimate: HashMap<String, f64>,
     estimate_eps: Option<f64>,
+    run_meta: Option<RunMeta>,
     #[cfg(not(unix))]
     seek_lock: std::sync::Mutex<()>,
 }
@@ -538,18 +581,20 @@ impl StoreReader {
                    computed {computed:#018x}) — the file is corrupt or \
                    truncated", path.display(), file_len - 8);
         }
-        let mut tr = [0u8; 24];
+        let mut tr = [0u8; 32];
         read_exact_at(&file, &mut tr, file_len - TRAILER_LEN)
             .map_err(|e| anyhow!("{}: reading trailer: {e}", path.display()))?;
         let st_off = u64::from_le_bytes(tr[0..8].try_into().unwrap());
         let idx_off = u64::from_le_bytes(tr[8..16].try_into().unwrap());
         let est_off = u64::from_le_bytes(tr[16..24].try_into().unwrap());
+        let meta_off = u64::from_le_bytes(tr[24..32].try_into().unwrap());
         let sections_end = file_len - TRAILER_LEN;
         if !(HEADER_LEN <= st_off && st_off <= idx_off && idx_off <= est_off
-             && est_off <= sections_end) {
+             && est_off <= meta_off && meta_off <= sections_end) {
             bail!("{}: corrupt section offsets in trailer at offset \
                    {sections_end} (string table {st_off}, index {idx_off}, \
-                   estimates {est_off}, file length {file_len})",
+                   estimates {est_off}, run meta {meta_off}, file length \
+                   {file_len})",
                   path.display());
         }
 
@@ -617,6 +662,33 @@ impl StoreReader {
                 .clone();
             estimate.insert(key, f64::from_bits(c.u64()?));
         }
+        if c.abs() != meta_off {
+            bail!("{}: estimates end at offset {} but the run-meta section \
+                   starts at {meta_off}", path.display(), c.abs());
+        }
+
+        // run metadata (topology + feature flags of the recording run)
+        let run_meta = if c.u8()? == 0 {
+            None
+        } else {
+            let mut v = [0usize; 6];
+            for slot in v.iter_mut() {
+                *slot = c.u32()? as usize;
+            }
+            let flags = c.u8()?;
+            let topo = crate::dist::Topology::new(v[0], v[1], v[2], v[3], v[4])
+                .map_err(|e| anyhow!("{}: invalid run-meta topology: {e}",
+                                     path.display()))?;
+            Some(RunMeta {
+                topo,
+                sp: flags & 1 != 0,
+                fp8: flags & 2 != 0,
+                moe: flags & 4 != 0,
+                zero1: flags & 8 != 0,
+                overlap: flags & 16 != 0,
+                n_micro: v[5],
+            })
+        };
 
         Ok(StoreReader {
             path: path.to_path_buf(),
@@ -627,6 +699,7 @@ impl StoreReader {
             index,
             estimate,
             estimate_eps: if eps > 0.0 { Some(eps) } else { None },
+            run_meta,
             #[cfg(not(unix))]
             seek_lock: std::sync::Mutex::new(()),
         })
@@ -691,6 +764,11 @@ impl StoreReader {
         self.estimate_eps
     }
 
+    /// The recording run's parallel layout, if the writer embedded it.
+    pub fn run_meta(&self) -> Option<&RunMeta> {
+        self.run_meta.as_ref()
+    }
+
     /// Load one canonical id's shard set (positioned reads; thread-safe).
     /// Returns `None` for ids the store doesn't hold.
     pub fn read_entries(&self, key: &str) -> Result<Option<Vec<Entry>>> {
@@ -723,7 +801,7 @@ impl StoreReader {
                     Tensor::new(&m.dims, vals, m.dtype)
                 }
             };
-            out.push(Entry { spec: m.spec.clone(), data });
+            out.push(Entry { spec: m.spec.clone(), data, rank: m.rank });
         }
         Ok(Some(out))
     }
@@ -836,19 +914,20 @@ mod tests {
     }
 
     fn entry(spec: ShardSpec, dims: &[usize], vals: Vec<f32>, dtype: DType) -> Entry {
-        Entry { spec, data: Tensor::new(dims, vals, dtype) }
+        Entry { spec, data: Tensor::new(dims, vals, dtype), rank: 0 }
     }
 
     /// A small two-id store: a tp-split bf16 tensor and an f32 tensor with
-    /// non-finite values.
+    /// non-finite values. The split shards carry distinct recording ranks.
     fn sample_entries() -> Vec<(String, Entry)> {
         vec![
             ("i0/m0/act/layers.0.mlp".into(),
              entry(ShardSpec::split(&[4], 0, 0, 2), &[2],
                    vec![round_bf16(0.33), round_bf16(-1.7)], DType::Bf16)),
             ("i0/m0/act/layers.0.mlp".into(),
-             entry(ShardSpec::split(&[4], 0, 1, 2), &[2],
-                   vec![round_bf16(2.5), round_bf16(0.01)], DType::Bf16)),
+             Entry { rank: 1, ..entry(ShardSpec::split(&[4], 0, 1, 2), &[2],
+                                      vec![round_bf16(2.5), round_bf16(0.01)],
+                                      DType::Bf16) }),
             ("i0/m0/main_grad/w".into(),
              entry(ShardSpec::full(&[4]), &[4],
                    vec![0.1, -0.0, f32::NAN, f32::INFINITY], DType::F32)),
@@ -887,12 +966,15 @@ mod tests {
             assert_eq!(got.len(), entries.len(), "{key}");
             for (g, w) in got.iter().zip(entries) {
                 assert_eq!(g.spec, w.spec, "{key}");
+                assert_eq!(g.rank, w.rank, "{key}");
                 assert_eq!(g.data.dims, w.data.dims, "{key}");
                 assert_eq!(g.data.dtype, w.data.dtype, "{key}");
                 assert_eq!(bits(&g.data), bits(&w.data), "{key}");
             }
         }
         assert!(r.read_entries("i9/m9/act/nope").unwrap().is_none());
+        // no run meta was set
+        assert!(r.run_meta().is_none());
         // estimates ride along, f64-exact
         assert_eq!(r.estimate().len(), 1);
         assert_eq!(r.estimate()["i0/m0/act/layers.0.mlp"].to_bits(),
@@ -910,6 +992,32 @@ mod tests {
         assert_eq!(acts[0].len, 4); // 2 bf16 elements x 2 bytes
         let grads = r.shards("i0/m0/main_grad/w").unwrap();
         assert_eq!(grads[0].encoding, Encoding::Raw32); // 0.1 needs all 32 bits
+    }
+
+    #[test]
+    fn run_meta_roundtrips() {
+        let path = tmp("runmeta.ttrc");
+        let mut w = StoreWriter::create(&path).unwrap();
+        for (k, e) in sample_entries() {
+            w.append(&k, &e).unwrap();
+        }
+        let meta = RunMeta {
+            topo: crate::dist::Topology::new(2, 2, 1, 1, 1).unwrap(),
+            sp: true,
+            fp8: false,
+            moe: true,
+            zero1: false,
+            overlap: true,
+            n_micro: 3,
+        };
+        w.set_run_meta(&meta);
+        w.finish().unwrap();
+        let r = StoreReader::open(&path).unwrap();
+        let got = r.run_meta().expect("meta was embedded");
+        assert_eq!(got.topo, meta.topo);
+        assert_eq!((got.sp, got.fp8, got.moe, got.zero1, got.overlap),
+                   (true, false, true, false, true));
+        assert_eq!(got.n_micro, 3);
     }
 
     #[test]
@@ -1061,11 +1169,12 @@ mod tests {
                     }
                 }
                 let full_t = Tensor::new(&dims, full, dtype);
-                for spec in specs {
+                for (si, spec) in specs.into_iter().enumerate() {
                     let local = spec.extract_local(&full_t);
                     let mut local = local;
                     local.dtype = dtype;
-                    written.push((key.clone(), Entry { spec, data: local }));
+                    written.push((key.clone(),
+                                  Entry { spec, data: local, rank: si as u32 }));
                 }
             }
             let mut w = StoreWriter::create(&path).map_err(|e| e.to_string())?;
@@ -1086,7 +1195,8 @@ mod tests {
                                        got.len(), entries.len()));
                 }
                 for (g, w) in got.iter().zip(entries) {
-                    if g.spec != w.spec || g.data.dims != w.data.dims
+                    if g.spec != w.spec || g.rank != w.rank
+                        || g.data.dims != w.data.dims
                         || g.data.dtype != w.data.dtype
                         || bits(&g.data) != bits(&w.data) {
                         return Err(format!("{key}: shard mismatch"));

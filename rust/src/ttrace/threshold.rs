@@ -96,7 +96,64 @@ mod tests {
     use super::*;
     use crate::data::GenData;
     use crate::model::TINY;
-    use crate::util::bf16::EPS_BF16;
+    use crate::tensor::{DType, Tensor};
+    use crate::ttrace::collector::Entry;
+    use crate::ttrace::shard::ShardSpec;
+    use crate::util::bf16::{round_bf16, EPS_BF16};
+
+    fn trace_of(items: &[(&str, Vec<f32>)]) -> Trace {
+        let mut t = Trace::default();
+        for (key, vals) in items {
+            t.entries.insert(key.to_string(), vec![Entry {
+                spec: ShardSpec::full(&[vals.len()]),
+                data: Tensor::new(&[vals.len()], vals.clone(), DType::Bf16),
+                rank: 0,
+            }]);
+        }
+        t
+    }
+
+    /// Edge cases of the §5.2 estimate: empty tensors, an all-zero
+    /// reference, single-element shapes and bf16-rounded values. The
+    /// estimates themselves must be well-defined (or cleanly infinite for
+    /// the zero-reference case), and the *thresholds* the checker derives
+    /// from them must never go NaN/inf.
+    #[test]
+    fn trace_rel_edge_cases_and_thresholds_stay_finite() {
+        let base = trace_of(&[
+            ("i0/m0/act/empty", vec![]),
+            ("i0/m0/act/zeros", vec![0.0, 0.0, 0.0]),
+            ("i0/m0/act/single", vec![round_bf16(0.731)]),
+            ("i0/m0/act/bf16", vec![round_bf16(1.5), round_bf16(-0.25)]),
+        ]);
+        let pert = trace_of(&[
+            ("i0/m0/act/empty", vec![]),
+            // all-zero reference, nonzero perturbed run: infinite rel
+            ("i0/m0/act/zeros", vec![0.0, 1e-3, 0.0]),
+            ("i0/m0/act/single", vec![round_bf16(0.7322)]),
+            ("i0/m0/act/bf16", vec![round_bf16(1.508), round_bf16(-0.2495)]),
+        ]);
+        let rel = trace_rel(&base, &pert).unwrap();
+        assert_eq!(rel.len(), 4);
+        assert_eq!(rel["i0/m0/act/empty"], 0.0);
+        assert!(rel["i0/m0/act/zeros"].is_infinite());
+        assert!(rel["i0/m0/act/single"].is_finite()
+                && rel["i0/m0/act/single"] > 0.0);
+        assert!(rel["i0/m0/act/bf16"].is_finite());
+        assert!(!rel.values().any(|v| v.is_nan()));
+
+        // the thresholds the checker derives from these estimates must be
+        // finite for every case — the infinite estimate falls to the floor
+        let cfg = crate::ttrace::CheckCfg::default();
+        let out = crate::ttrace::check_traces(&base, &base, &rel, &cfg).unwrap();
+        assert_eq!(out.checks.len(), 4);
+        for c in &out.checks {
+            assert!(c.threshold.is_finite() && c.threshold > 0.0,
+                    "{}: threshold {}", c.key, c.threshold);
+            assert!(!c.rel_err.is_nan(), "{}", c.key);
+            assert!(c.pass, "{} must pass against itself", c.key);
+        }
+    }
 
     #[test]
     fn estimate_produces_small_nonzero_noise() {

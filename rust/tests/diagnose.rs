@@ -1,0 +1,130 @@
+//! `ttrace::diagnose` against the Table-1 bug zoo, the way the acceptance
+//! bar reads: every armed bug is checked in-process, both traces are then
+//! persisted as `.ttrc` stores (threshold estimates + run metadata
+//! embedded) and diagnosed again **from the files alone**; the offline
+//! diagnosis must (a) agree with the in-process one (verdict parity:
+//! module, phase, implicated dimension, frontier), and (b) hit the bug's
+//! ground-truth module prefix, parallelism dimension and phase for at
+//! least 9 of the bugs.
+
+use ttrace::bugs::table1::{bug_config, diagnosis_matches};
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::GenData;
+use ttrace::model::TINY;
+use ttrace::runtime::Executor;
+use ttrace::ttrace::diagnose::{diagnose_stores, RunMeta};
+use ttrace::ttrace::store::{write_trace, StoreReader, StoreWriter};
+use ttrace::ttrace::{reference_of, ttrace_check, CheckCfg};
+
+#[test]
+fn diagnose_localizes_table1_bugs_offline_with_parity() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let dir = std::env::temp_dir().join("ttrace_diagnose_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = CheckCfg::default();
+    let mut hits = 0usize;
+    let mut misses: Vec<String> = Vec::new();
+
+    for bug in BugId::all() {
+        let info = bug.info();
+        let p = bug_config(bug);
+        let run = ttrace_check(&TINY, &p, 2, &exec, &GenData, BugSet::one(bug),
+                               &cfg, false).unwrap();
+        assert!(!run.outcome.pass, "bug {} must be detected", info.number);
+        let diag = run.diagnosis.as_ref()
+            .expect("failing runs carry a diagnosis");
+
+        // persist both sides and diagnose offline, from the files alone
+        let rp = dir.join(format!("ref{}.ttrc", info.number));
+        let cp = dir.join(format!("cand{}.ttrc", info.number));
+        let mut w = StoreWriter::create(&rp).unwrap();
+        w.set_estimate(&run.estimate, cfg.eps);
+        w.set_run_meta(&RunMeta::of_parcfg(&reference_of(&p)));
+        write_trace(&run.reference, &mut w).unwrap();
+        w.finish().unwrap();
+        let mut w = StoreWriter::create(&cp).unwrap();
+        w.set_run_meta(&RunMeta::of_parcfg(&p));
+        write_trace(&run.candidate, &mut w).unwrap();
+        w.finish().unwrap();
+
+        let rs = StoreReader::open(&rp).unwrap();
+        let cs = StoreReader::open(&cp).unwrap();
+        let (off_outcome, off) = diagnose_stores(&rs, &cs, &cfg).unwrap();
+
+        // ---- verdict parity: in-process vs offline ----
+        assert_eq!(run.outcome.pass, off_outcome.pass,
+                   "bug {}: pass/fail parity", info.number);
+        assert_eq!(diag.module, off.module,
+                   "bug {}: blamed-module parity", info.number);
+        assert_eq!(diag.phase.map(|p| p.name()), off.phase.map(|p| p.name()),
+                   "bug {}: phase parity", info.number);
+        let dims_in: Vec<&str> =
+            diag.dims.iter().map(|(d, _)| d.name()).collect();
+        let dims_off: Vec<&str> =
+            off.dims.iter().map(|(d, _)| d.name()).collect();
+        assert_eq!(dims_in, dims_off,
+                   "bug {}: implicated-dimension parity", info.number);
+        let front_in: Vec<&String> =
+            diag.frontier.iter().map(|f| &f.key).collect();
+        let front_off: Vec<&String> =
+            off.frontier.iter().map(|f| &f.key).collect();
+        assert_eq!(front_in, front_off,
+                   "bug {}: frontier parity", info.number);
+
+        // ---- ground truth (scored on the offline result) ----
+        let module = off.module.clone();
+        let dim = off.dims.first().map(|(d, _)| d.name().to_string());
+        let phase = off.phase.map(|p| p.name().to_string());
+        if diagnosis_matches(&info, module.as_deref(), dim.as_deref(),
+                             phase.as_deref()) {
+            hits += 1;
+        } else {
+            misses.push(format!(
+                "bug {} ({}): diagnosed module={module:?} dim={dim:?} \
+                 phase={phase:?}, expected module~'{}' dim={} phase={}",
+                info.number, info.description, info.expect_module,
+                info.expect_dim, info.expect_phase));
+        }
+    }
+
+    eprintln!("diagnose ground-truth hits: {hits}/14");
+    for m in &misses {
+        eprintln!("  miss: {m}");
+    }
+    // acceptance bar: >= 9 bugs localized to ground-truth module AND
+    // dimension AND phase, offline from .ttrc stores alone
+    assert!(hits >= 9, "only {hits}/14 bugs diagnosed to ground truth:\n{}",
+            misses.join("\n"));
+}
+
+/// A clean (no-bug) parallel run produces no diagnosis in-process and a
+/// PASS diagnosis offline.
+#[test]
+fn clean_run_diagnoses_clean() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let mut p = ttrace::model::ParCfg::single();
+    p.topo = ttrace::dist::Topology::new(1, 2, 1, 1, 1).unwrap();
+    let run = ttrace_check(&TINY, &p, 2, &exec, &GenData, BugSet::none(),
+                           &CheckCfg::default(), false).unwrap();
+    assert!(run.outcome.pass);
+    assert!(run.diagnosis.is_none());
+
+    let dir = std::env::temp_dir().join("ttrace_diagnose_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let rp = dir.join("clean_ref.ttrc");
+    let cp = dir.join("clean_cand.ttrc");
+    let cfg = CheckCfg::default();
+    let mut w = StoreWriter::create(&rp).unwrap();
+    w.set_estimate(&run.estimate, cfg.eps);
+    write_trace(&run.reference, &mut w).unwrap();
+    w.finish().unwrap();
+    let mut w = StoreWriter::create(&cp).unwrap();
+    w.set_run_meta(&RunMeta::of_parcfg(&p));
+    write_trace(&run.candidate, &mut w).unwrap();
+    w.finish().unwrap();
+    let (outcome, diag) = diagnose_stores(&StoreReader::open(&rp).unwrap(),
+                                          &StoreReader::open(&cp).unwrap(),
+                                          &cfg).unwrap();
+    assert!(outcome.pass);
+    assert!(diag.pass && diag.frontier.is_empty() && diag.module.is_none());
+}
