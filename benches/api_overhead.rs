@@ -1,0 +1,143 @@
+//! Facade-overhead bench: the same hand-rolled data-parallel SGD trainer
+//! step (see `examples/external_trainer.rs`) driven uninstrumented vs
+//! instrumented through the `ttrace::api` Session/Tracer facade — the
+//! per-step cost an external framework pays to record through the public
+//! API, plus the one-off `finish` (drain + differential check) cost.
+//! `BENCH_SMOKE=1` shrinks the repeat count; wired into `make bench-smoke`.
+
+use ttrace::comm::{RedOp, RedPrec};
+use ttrace::dist::run_spmd;
+use ttrace::prelude::*;
+use ttrace::util::bench::{fmt_s, smoke_or, time, time_once, BenchJson, Table};
+use ttrace::util::rng::Rng;
+
+const DP: usize = 4;
+const B: usize = 16;
+const N_IN: usize = 64;
+const N_OUT: usize = 32;
+const LR: f32 = 0.05;
+
+fn randn(seed: u64, dims: &[usize]) -> Tensor {
+    let mut data = vec![0.0f32; dims.iter().product()];
+    Rng::new(seed).fill_normal(&mut data, 1.0);
+    Tensor::new(dims, data, DType::F32)
+}
+
+fn batch(gmicro: u32) -> (Tensor, Tensor) {
+    (randn(1_000 + gmicro as u64, &[B, N_IN]),
+     randn(2_000 + gmicro as u64, &[B, N_OUT]))
+}
+
+fn forward(w: &Tensor, x: &Tensor) -> Tensor {
+    let mut y = vec![0.0f32; B * N_OUT];
+    for b in 0..B {
+        for o in 0..N_OUT {
+            let mut acc = 0.0f32;
+            for i in 0..N_IN {
+                acc += w.data[o * N_IN + i] * x.data[b * N_IN + i];
+            }
+            y[b * N_OUT + o] = acc;
+        }
+    }
+    Tensor::new(&[B, N_OUT], y, DType::F32)
+}
+
+fn wgrad(x: &Tensor, y: &Tensor, t: &Tensor) -> Tensor {
+    let mut g = vec![0.0f32; N_OUT * N_IN];
+    for b in 0..B {
+        for o in 0..N_OUT {
+            let d = y.data[b * N_OUT + o] - t.data[b * N_OUT + o];
+            for i in 0..N_IN {
+                g[o * N_IN + i] += d * x.data[b * N_IN + i];
+            }
+        }
+    }
+    Tensor::new(&[N_OUT, N_IN], g, DType::F32)
+}
+
+/// One data-parallel training iteration; records through the tracer when a
+/// session is given, and is byte-for-byte the uninstrumented trainer when
+/// not — the subtraction of the two is the facade's collection overhead.
+fn train(dp: usize, micros_per_rank: usize, session: Option<&Session>) {
+    let topo = Topology::new(dp, 1, 1, 1, 1).unwrap();
+    run_spmd(topo, |ctx| {
+        let mut w = randn(7, &[N_OUT, N_IN]);
+        let tr = session.map(|s| s.tracer());
+        let mut acc: Option<Tensor> = None;
+        for m in 0..micros_per_rank {
+            let gmicro = (m * dp + ctx.coord.dp) as u32;
+            if let Some(tr) = &tr {
+                tr.micro(gmicro);
+            }
+            let (x, t) = batch(gmicro);
+            let y = forward(&w, &x);
+            let g = wgrad(&x, &y, &t);
+            if let Some(tr) = &tr {
+                tr.act("linear", &y, &ShardSpec::full(&y.dims));
+                tr.param_grad("w", &g, &ShardSpec::full(&g.dims));
+            }
+            acc = Some(match acc {
+                None => g,
+                Some(a) => a.add(&g),
+            });
+        }
+        let dpg = ctx.dp_group();
+        let sum = ctx.comm.all_reduce(&dpg.key, dpg.me, dpg.size,
+                                      acc.as_ref().unwrap(),
+                                      RedOp::Sum, RedPrec::F32);
+        let g = sum.scale(1.0 / (dp * micros_per_rank) as f32);
+        for (wi, gi) in w.data.iter_mut().zip(&g.data) {
+            *wi -= LR * gi;
+        }
+        if let Some(tr) = &tr {
+            tr.main_grad("w", &g, &ShardSpec::full(&g.dims));
+            tr.param("w", &w, &ShardSpec::full(&w.dims));
+        }
+    });
+}
+
+fn main() {
+    let reps = smoke_or(30, 4);
+    let mut bj = BenchJson::new("api_overhead");
+
+    eprintln!("api_overhead: dp={DP} trainer step, {reps} reps ...");
+    let st_plain = time(1, reps, || train(DP, 1, None));
+    bj.stage("uninstrumented_step", st_plain.mean_s);
+
+    // Each instrumented rep records into a fresh session so collection
+    // doesn't accumulate across reps.
+    let st_traced = time(1, reps, || {
+        let session = Session::builder()
+            .topology(Topology::new(DP, 1, 1, 1, 1).unwrap())
+            .build();
+        train(DP, 1, Some(&session));
+    });
+    bj.stage("instrumented_step", st_traced.mean_s);
+
+    // the one-off end: drain + differential check against a dp=1 reference
+    let (report, finish_s) = time_once(|| {
+        let reference = Session::builder().n_micro(DP).build();
+        train(1, DP, Some(&reference));
+        let candidate = Session::builder()
+            .topology(Topology::new(DP, 1, 1, 1, 1).unwrap())
+            .build();
+        train(DP, 1, Some(&candidate));
+        candidate.finish_against(reference).unwrap()
+    });
+    assert!(report.passed(), "the clean trainer must PASS:\n{}",
+            report.render(32));
+    bj.stage("record_both_and_finish", finish_s);
+
+    let overhead = st_traced.mean_s / st_plain.mean_s;
+    let mut t = Table::new(&["variant", "mean", "min"]);
+    t.row(&["uninstrumented step".into(), fmt_s(st_plain.mean_s),
+            fmt_s(st_plain.min_s)]);
+    t.row(&["instrumented step (api)".into(), fmt_s(st_traced.mean_s),
+            fmt_s(st_traced.min_s)]);
+    t.print();
+    t.write_csv("results/api_overhead.csv").unwrap();
+    println!("\nfacade collection overhead: {overhead:.2}x per step \
+              ({} tensors checked on finish, {})",
+             report.outcome.as_ref().unwrap().checks.len(), fmt_s(finish_s));
+    bj.write().unwrap();
+}

@@ -9,8 +9,9 @@
 use ttrace::bugs::{BugId, BugSet};
 use ttrace::data::GenData;
 use ttrace::model::TINY;
+use ttrace::prelude::*;
 use ttrace::runtime::Executor;
-use ttrace::ttrace::{localized_module, report, ttrace_check, CheckCfg};
+use ttrace::ttrace::report;
 
 fn main() -> anyhow::Result<()> {
     let number: u32 = std::env::args().nth(1)
@@ -38,6 +39,11 @@ fn main() -> anyhow::Result<()> {
     if let Some(rw) = &run.rewrite_outcome {
         println!("=== step 5: input-rewrite localization pass ===");
         println!("{}", report::render(rw, &cfg, 16));
+    }
+
+    if let Some(d) = &run.diagnosis {
+        println!("=== dependency-aware diagnosis ===");
+        println!("{}", report::render_diagnosis(d, &cfg));
     }
 
     match localized_module(&run) {

@@ -6,15 +6,19 @@
 //! 3. run candidate (TP=2) and reference for ONE iteration with tracing,
 //! 4. differentially test and print the report: expected verdict PASS.
 //!
+//! Everything TTrace-side comes through `ttrace::prelude` — the same
+//! facade an external trainer embeds (`examples/external_trainer.rs`).
+//!
 //!     cargo run --release --example quickstart
 
 use ttrace::bugs::BugSet;
 use ttrace::data::GenData;
-use ttrace::dist::{Coord, Topology};
+use ttrace::dist::Coord;
 use ttrace::model::{params, ParCfg, TINY};
+use ttrace::prelude::*;
 use ttrace::runtime::Executor;
 use ttrace::ttrace::annot::{default_annotations, Annotations};
-use ttrace::ttrace::{report, ttrace_check, CheckCfg};
+use ttrace::ttrace::report;
 
 fn main() -> anyhow::Result<()> {
     let exec = Executor::load(ttrace::default_artifacts_dir())?;

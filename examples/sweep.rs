@@ -7,10 +7,9 @@
 
 use ttrace::bugs::BugSet;
 use ttrace::data::GenData;
-use ttrace::dist::Topology;
 use ttrace::model::{ParCfg, TINY};
+use ttrace::prelude::*;
 use ttrace::runtime::Executor;
-use ttrace::ttrace::{ttrace_check, CheckCfg};
 use ttrace::util::bench::{fmt_s, time_once, Table};
 
 fn main() -> anyhow::Result<()> {

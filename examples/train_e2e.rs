@@ -13,10 +13,10 @@
 
 use ttrace::bugs::BugSet;
 use ttrace::data::CorpusData;
-use ttrace::dist::Topology;
 use ttrace::model::{mean_losses, preset, run_training, Engine, ParCfg};
+use ttrace::prelude::*;
 use ttrace::runtime::Executor;
-use ttrace::ttrace::{report, ttrace_check, CheckCfg, NoopHooks};
+use ttrace::ttrace::report;
 use ttrace::util::bench::{fmt_s, time_once, Table};
 use ttrace::util::cli::Cli;
 

@@ -15,6 +15,16 @@
 //! Python never runs on the request path: the binary loads `artifacts/` and
 //! executes via PJRT (`runtime`).
 
+// Clippy policy (CI runs `cargo clippy -- -D warnings`): correctness lints
+// are hard errors; the three style lints below are allowed crate-wide
+// because a hand-rolled numerics/SPMD codebase trips them by design —
+// kernel loops index by position, math uses single-letter names matching
+// the paper, and engine entry points thread (ctx, state, hooks, data, ...)
+// through every call.
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::many_single_char_names)]
+#![allow(clippy::needless_range_loop)]
+
 pub mod bugs;
 pub mod comm;
 pub mod data;
@@ -24,6 +34,25 @@ pub mod runtime;
 pub mod tensor;
 pub mod ttrace;
 pub mod util;
+
+/// Everything an external training framework needs to embed TTrace — the
+/// `Session`/`Tracer`/`Report` facade plus the handful of data types its
+/// calls exchange. `use ttrace::prelude::*;` is the one import of the
+/// "<10 lines of code" integration (see `examples/external_trainer.rs`).
+pub mod prelude {
+    pub use crate::dist::Topology;
+    pub use crate::tensor::{DType, Tensor};
+    pub use crate::ttrace::api::{Reference, Report, Session, SessionBuilder,
+                                 Sink, Tolerance, TraceMode, Tracer};
+    pub use crate::ttrace::checker::{CheckCfg, CheckOutcome};
+    pub use crate::ttrace::collector::Trace;
+    pub use crate::ttrace::diagnose::{Diagnosis, Dim, Phase, RunMeta};
+    pub use crate::ttrace::hooks::{CanonId, Hooks, Kind, NoopHooks};
+    pub use crate::ttrace::shard::ShardSpec;
+    pub use crate::ttrace::store::{StoreReader, StoreSummary, StoreWriter};
+    pub use crate::ttrace::{localized_module, reference_of, ttrace_check,
+                            TtraceRun};
+}
 
 /// Locate the artifacts directory: `$TTRACE_ARTIFACTS` or the nearest
 /// ancestor directory containing `artifacts/manifest.json`.

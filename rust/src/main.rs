@@ -37,12 +37,12 @@ use ttrace::bugs::{BugId, BugSet};
 use ttrace::data::{CorpusData, DataSource, GenData};
 use ttrace::dist::Topology;
 use ttrace::model::{mean_losses, preset, run_training, Engine, ParCfg};
+use ttrace::prelude::{localized_module, reference_of, ttrace_check, CheckCfg,
+                      NoopHooks, Report, Session, Sink, StoreReader,
+                      Tolerance};
 use ttrace::runtime::Executor;
-use ttrace::ttrace::diagnose::{diagnose_stores, RunMeta};
-use ttrace::ttrace::store::{check_stores, layout_of, write_trace, Encoding,
-                            StoreReader, StoreWriter};
-use ttrace::ttrace::{localized_module, reference_of, report, threshold,
-                     ttrace_check, CheckCfg, Collector, NoopHooks};
+use ttrace::ttrace::store::{layout_of, Encoding};
+use ttrace::ttrace::{report, threshold};
 use ttrace::util::bench::{fmt_bytes, fmt_s, time_once};
 use ttrace::util::cli::Cli;
 
@@ -207,6 +207,7 @@ fn record(argv: &[String]) -> Result<i32> {
     let exec = Executor::load(ttrace::default_artifacts_dir())?;
     let data = data_source(args.get("data"), m.v)?;
     let out = std::path::PathBuf::from(args.get("out"));
+    let json_path = args.get("json").to_string();
     let est = if is_ref {
         // the §5.2 estimates ride along in the store so `check-offline`
         // derives the same thresholds as the in-process workflow
@@ -215,29 +216,23 @@ fn record(argv: &[String]) -> Result<i32> {
     } else {
         None
     };
-    let engine = Engine::new(m, p.clone(), layers, &exec, bugs)?;
-    let collector = Collector::new();
-    let (_, dt) = time_once(|| run_training(&engine, data.as_ref(),
-                                            &collector, 1));
-    // only touch --out once the run has succeeded: a failure above must
-    // not truncate a previously recorded store at the same path
-    let mut w = StoreWriter::create(&out)?;
+    // The session streams into the store at finish — which only touches
+    // --out once the run has succeeded, so a failure above can't truncate
+    // a previously recorded store at the same path. `parallelism` embeds
+    // the run's layout so `diagnose` can map shard rank tags to
+    // (tp, cp, dp, pp) coordinates offline.
+    let mut builder = Session::builder().parallelism(&p).sink(
+        if json_path.is_empty() { Sink::Store(out.clone()) }
+        else { Sink::Tee(out.clone()) });
     if let Some(est) = &est {
-        w.set_estimate(&est.rel, cfg.eps);
+        builder = builder.embed_estimate(&est.rel, cfg.eps);
     }
-    // the run's parallel layout rides along so `diagnose` can map shard
-    // rank tags to (tp, cp, dp, pp) coordinates offline
-    w.set_run_meta(&RunMeta::of_parcfg(&p));
-    let json_path = args.get("json").to_string();
-    let summary = if json_path.is_empty() {
-        collector.write_store(&mut w)?;
-        w.finish()?
-    } else {
-        let trace = collector.into_trace();
-        trace.save(Path::new(&json_path))?;
-        write_trace(&trace, &mut w)?;
-        w.finish()?
-    };
+    let session = builder.build();
+    let engine = Engine::new(m, p.clone(), layers, &exec, bugs)?;
+    let (_, dt) = time_once(|| run_training(&engine, data.as_ref(),
+                                            session.hooks(), 1));
+    let rep = session.finish()?;
+    let (_, summary) = rep.store.as_ref().expect("store sink persists");
     println!("recorded {} ({}) on {}: {} ids / {} shards, {} payload, \
               {} file, run {}",
              out.display(), if is_ref { "reference" } else { "candidate" },
@@ -245,6 +240,8 @@ fn record(argv: &[String]) -> Result<i32> {
              fmt_bytes(summary.payload_bytes), fmt_bytes(summary.file_bytes),
              fmt_s(dt));
     if !json_path.is_empty() {
+        rep.trace.as_ref().expect("tee sink keeps the trace")
+            .save(Path::new(&json_path))?;
         println!("wrote JSON dump {} ({})", json_path,
                  fmt_bytes(std::fs::metadata(&json_path)?.len()));
     }
@@ -252,8 +249,9 @@ fn record(argv: &[String]) -> Result<i32> {
 }
 
 /// Shared head of the two-store subcommands (`check-offline`, `diagnose`):
-/// positional/option registration, store opening, and the CheckCfg with
-/// the eps override from the reference's embedded estimates.
+/// positional/option registration, store opening, and the tolerance policy
+/// (the eps override from the reference's embedded estimates is applied by
+/// `Report::from_readers`).
 fn store_pair_cli(about: &'static str) -> Cli {
     Cli::new(about)
         .pos("reference.ttrc", "store from `ttrace record --reference`")
@@ -264,31 +262,28 @@ fn store_pair_cli(about: &'static str) -> Cli {
 }
 
 fn open_store_pair(args: &ttrace::util::cli::Args)
-                   -> Result<(StoreReader, StoreReader, CheckCfg)> {
+                   -> Result<(StoreReader, StoreReader, Tolerance)> {
     let reference = StoreReader::open(Path::new(args.pos(0)))?;
     let candidate = StoreReader::open(Path::new(args.pos(1)))?;
-    let mut cfg = CheckCfg { safety: args.get_f64("safety")?,
-                             ..CheckCfg::default() };
-    if let Some(eps) = reference.estimate_eps() {
-        cfg.eps = eps; // thresholds must use the eps the estimates used
-    }
+    let tolerance = Tolerance::new().safety(args.get_f64("safety")?);
     if reference.estimate().is_empty() {
         eprintln!("note: {} carries no threshold estimates (recorded without \
                    --reference?); falling back to the floor threshold",
                   args.pos(0));
     }
-    Ok((reference, candidate, cfg))
+    Ok((reference, candidate, tolerance))
 }
 
 fn check_offline(argv: &[String]) -> Result<i32> {
     let cli = store_pair_cli("differential check of two .ttrc stores \
                               recorded by separate `ttrace record` runs");
     let args = cli.parse_from(argv)?;
-    let (reference, candidate, cfg) = open_store_pair(&args)?;
-    let (res, dt) = time_once(|| check_stores(&reference, &candidate,
-                                              reference.estimate(), &cfg));
-    let outcome = res?;
-    println!("{}", report::render(&outcome, &cfg, args.get_usize("rows")?));
+    let (reference, candidate, tolerance) = open_store_pair(&args)?;
+    // verdict-only path: skips the diagnosis this subcommand never prints
+    let (res, dt) = time_once(|| Report::check_readers(&reference, &candidate,
+                                                       &tolerance));
+    let rep = res?;
+    println!("{}", rep.render(args.get_usize("rows")?));
     println!("offline check time: {} ({} ids; {} + {} of payload read \
               one canonical id at a time)",
              fmt_s(dt), reference.len(),
@@ -296,10 +291,12 @@ fn check_offline(argv: &[String]) -> Result<i32> {
              fmt_bytes(candidate.payload_bytes()));
     let out = args.get("out");
     if !out.is_empty() {
-        std::fs::write(out, report::to_json(&outcome, &cfg).to_string_pretty())?;
+        let outcome = rep.outcome.as_ref().expect("offline reports check");
+        std::fs::write(out, report::to_json(outcome, &rep.cfg)
+            .to_string_pretty())?;
         println!("wrote {out}");
     }
-    Ok(if outcome.pass { 0 } else { 1 })
+    Ok(rep.exit_code())
 }
 
 /// Differential check + dependency-aware diagnosis of two `.ttrc` stores,
@@ -310,21 +307,20 @@ fn diagnose_cmd(argv: &[String]) -> Result<i32> {
                               frontier, blamed module, phase, implicated \
                               parallelism dimension");
     let args = cli.parse_from(argv)?;
-    let (reference, candidate, cfg) = open_store_pair(&args)?;
-    let (res, dt) = time_once(|| diagnose_stores(&reference, &candidate, &cfg));
-    let (outcome, diag) = res?;
-    println!("{}", report::render(&outcome, &cfg, args.get_usize("rows")?));
-    println!("{}", report::render_diagnosis(&diag, &cfg));
+    let (reference, candidate, tolerance) = open_store_pair(&args)?;
+    let (res, dt) = time_once(|| Report::from_readers(&reference, &candidate,
+                                                      &tolerance));
+    let rep = res?;
+    println!("{}", rep.render(args.get_usize("rows")?));
+    println!("{}", rep.render_diagnosis());
     println!("diagnose time: {} ({} ids; frontier analyzed from the stores \
               one canonical id at a time)", fmt_s(dt), reference.len());
     let out = args.get("out");
     if !out.is_empty() {
-        let mut j = report::to_json(&outcome, &cfg);
-        j.set("diagnosis", report::diagnosis_json(&diag));
-        std::fs::write(out, j.to_string_pretty())?;
+        std::fs::write(out, rep.to_json().to_string_pretty())?;
         println!("wrote {out}");
     }
-    Ok(if outcome.pass { 0 } else { 1 })
+    Ok(rep.exit_code())
 }
 
 fn inspect(argv: &[String]) -> Result<i32> {

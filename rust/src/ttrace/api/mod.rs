@@ -1,0 +1,643 @@
+//! `ttrace::api` — the framework-agnostic public facade.
+//!
+//! Everything under `ttrace::ttrace::*` is the machinery of the paper
+//! (collection, canonical mapping, merging, thresholds, checking,
+//! diagnosis); this module is the *surface* an external training framework
+//! integrates against — the paper's "fewer than 10 lines of code changes"
+//! deployment story. Three pieces:
+//!
+//!  - [`SessionBuilder`] / [`Session`] — configure one traced run: the
+//!    candidate's parallel layout ([`RunMeta`]), the tolerance policy
+//!    ([`Tolerance`]), the trace mode ([`TraceMode`]), where recorded
+//!    entries go ([`Sink`]: in-memory trace, streaming `.ttrc` store, or
+//!    both), and optionally the reference to differentially check against
+//!    ([`Reference`]).
+//!  - [`Tracer`] — the cheap per-rank handle a trainer calls from its
+//!    training loop: `act`/`act_grad`/`param`/`param_grad`/`main_grad`
+//!    (plus `step`/`micro` iteration scoping and an owned-move variant).
+//!  - [`Report`] — the unified result of [`Session::finish`]: the
+//!    differential-check outcome, the threshold estimates that were used,
+//!    and the dependency-aware diagnosis, behind one type for both the
+//!    in-memory and the offline ([`Report::from_stores`]) paths.
+//!
+//! A minimal embedding (see `examples/external_trainer.rs` for the full
+//! program, and the README for the line-by-line diff):
+//!
+//! ```no_run
+//! use ttrace::prelude::*;
+//!
+//! # fn train(dp: usize, micros: usize, s: &Session) {}
+//! # fn main() -> anyhow::Result<()> {
+//! let reference = Session::builder().n_micro(4).build();
+//! train(1, 4, &reference); // your trainer, single device
+//! let candidate = Session::builder()
+//!     .topology(Topology::new(4, 1, 1, 1, 1)?)
+//!     .build();
+//! train(4, 1, &candidate); // your trainer, data parallel
+//! let report = candidate.finish_against(reference)?;
+//! assert!(report.passed(), "{}", report.render(32));
+//! # Ok(())
+//! # }
+//! ```
+
+mod report;
+mod tracer;
+
+pub use report::Report;
+pub use tracer::Tracer;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::dist::Topology;
+use crate::model::ParCfg;
+
+use super::checker::{check_traces, CheckCfg};
+use super::collector::{Collector, Mode, Trace};
+use super::diagnose::{diagnose, RunMeta};
+use super::hooks::{Hooks, Kind};
+use super::store::{write_trace, StoreReader, StoreWriter};
+
+/// The tolerance policy of a differential check: how far past the
+/// estimated FP round-off a tensor may land before it is flagged. A thin
+/// builder over [`CheckCfg`] (paper §4.4/§5.2):
+///
+/// `threshold(id) = max(safety x estimate(id), floor x eps)`
+#[derive(Clone, Debug, Default)]
+pub struct Tolerance {
+    cfg: CheckCfg,
+}
+
+impl Tolerance {
+    pub fn new() -> Tolerance {
+        Tolerance::default()
+    }
+
+    /// Wrap an explicit [`CheckCfg`] (the internal configuration type).
+    pub fn from_cfg(cfg: CheckCfg) -> Tolerance {
+        Tolerance { cfg }
+    }
+
+    /// Multiplier on the estimated per-tensor FP round-off (default 8).
+    pub fn safety(mut self, safety: f64) -> Tolerance {
+        self.cfg.safety = safety;
+        self
+    }
+
+    /// Threshold floor, in units of machine epsilon (default 4).
+    pub fn floor(mut self, floor: f64) -> Tolerance {
+        self.cfg.floor = floor;
+        self
+    }
+
+    /// Machine epsilon of the training precision (default: bf16's).
+    pub fn eps(mut self, eps: f64) -> Tolerance {
+        self.cfg.eps = eps;
+        self
+    }
+
+    /// Learning rate of the run — post-optimizer parameter comparisons get
+    /// an extra sign-descent allowance proportional to it.
+    pub fn lr(mut self, lr: f64) -> Tolerance {
+        self.cfg.lr = lr;
+        self
+    }
+
+    /// The underlying [`CheckCfg`].
+    pub fn check_cfg(&self) -> &CheckCfg {
+        &self.cfg
+    }
+}
+
+/// How module inputs are treated while the session records (the public
+/// face of the collector's mode, paper §4.2/§4.3).
+#[derive(Clone, Debug)]
+pub enum TraceMode {
+    /// plain tracing (the default)
+    Record,
+    /// input-rewrite localization: every offered module input is replaced
+    /// with a generated tensor that is identical across candidate and
+    /// reference, so errors cannot propagate between modules
+    Rewrite,
+    /// §5.2 threshold estimation: perturb the inputs of the named modules
+    /// at relative magnitude `eps`
+    Perturb {
+        modules: Vec<String>,
+        eps: f32,
+    },
+}
+
+impl TraceMode {
+    fn into_mode(self) -> Mode {
+        match self {
+            TraceMode::Record => Mode::Record,
+            TraceMode::Rewrite => Mode::Rewrite,
+            TraceMode::Perturb { modules, eps } => Mode::Perturb { modules, eps },
+        }
+    }
+}
+
+/// Where a session's recorded entries end up when it finishes.
+#[derive(Clone, Debug)]
+pub enum Sink {
+    /// keep the assembled [`Trace`] in memory (`Report::trace`)
+    Memory,
+    /// stream into a binary `.ttrc` store at this path — entries are
+    /// released as their payload hits the file, so persisting never builds
+    /// a second in-memory trace
+    Store(PathBuf),
+    /// both: the in-memory trace *and* a `.ttrc` store at this path
+    Tee(PathBuf),
+}
+
+impl Sink {
+    /// A `.ttrc` store sink at `path`.
+    pub fn store(path: impl Into<PathBuf>) -> Sink {
+        Sink::Store(path.into())
+    }
+
+    /// An in-memory trace plus a `.ttrc` store at `path`.
+    pub fn tee(path: impl Into<PathBuf>) -> Sink {
+        Sink::Tee(path.into())
+    }
+}
+
+/// The trusted side a finishing session is differentially checked against.
+pub enum Reference {
+    /// record only — [`Session::finish`] returns a report with no verdict
+    None,
+    /// an in-memory reference trace plus its §5.2 per-tensor threshold
+    /// estimates (empty map = floor thresholds only)
+    InMemory {
+        trace: Trace,
+        estimate: HashMap<String, f64>,
+    },
+    /// a `.ttrc` store recorded by `ttrace record --reference` (embedded
+    /// estimates and their eps are honored)
+    Store(PathBuf),
+}
+
+impl Reference {
+    /// An in-memory reference trace with no threshold estimates (the
+    /// checker falls back to the floor threshold).
+    pub fn trace(trace: Trace) -> Reference {
+        Reference::InMemory { trace, estimate: HashMap::new() }
+    }
+
+    /// An in-memory reference trace with §5.2 threshold estimates.
+    pub fn in_memory(trace: Trace, estimate: HashMap<String, f64>) -> Reference {
+        Reference::InMemory { trace, estimate }
+    }
+
+    /// A `.ttrc` reference store on disk.
+    pub fn store(path: impl Into<PathBuf>) -> Reference {
+        Reference::Store(path.into())
+    }
+}
+
+/// Builder for a [`Session`]. All knobs default to a single-device,
+/// in-memory, plain-record session with the default tolerance.
+pub struct SessionBuilder {
+    meta: RunMeta,
+    tolerance: Tolerance,
+    mode: TraceMode,
+    sink: Sink,
+    kinds: Option<Vec<Kind>>,
+    reference: Reference,
+    embed: Option<(HashMap<String, f64>, f64)>,
+    diagnose: bool,
+}
+
+impl SessionBuilder {
+    pub fn new() -> SessionBuilder {
+        SessionBuilder {
+            meta: RunMeta::single(),
+            tolerance: Tolerance::default(),
+            mode: TraceMode::Record,
+            sink: Sink::Memory,
+            kinds: None,
+            reference: Reference::None,
+            embed: None,
+            diagnose: true,
+        }
+    }
+
+    /// The run's process-grid topology (dp x tp x pp x cp, + vpp). Shard
+    /// rank tags are interpreted against it when a diagnosis implicates a
+    /// parallelism dimension.
+    pub fn topology(mut self, topo: Topology) -> SessionBuilder {
+        self.meta.topo = topo;
+        self
+    }
+
+    /// Microbatches per iteration *per data-parallel rank*.
+    pub fn n_micro(mut self, n_micro: usize) -> SessionBuilder {
+        self.meta.n_micro = n_micro;
+        self
+    }
+
+    /// Sequence parallelism flag (a diagnosis tiebreak hint).
+    pub fn sp(mut self, sp: bool) -> SessionBuilder {
+        self.meta.sp = sp;
+        self
+    }
+
+    /// Take topology and every feature flag from an in-repo [`ParCfg`] at
+    /// once (what the built-in runner and CLI do).
+    pub fn parallelism(mut self, p: &ParCfg) -> SessionBuilder {
+        self.meta = RunMeta::of_parcfg(p);
+        self
+    }
+
+    /// Set the full run metadata explicitly (external frameworks that
+    /// track their own layout descriptor).
+    pub fn run_meta(mut self, meta: RunMeta) -> SessionBuilder {
+        self.meta = meta;
+        self
+    }
+
+    /// The tolerance policy used when this session is checked.
+    pub fn tolerance(mut self, tolerance: Tolerance) -> SessionBuilder {
+        self.tolerance = tolerance;
+        self
+    }
+
+    /// The trace mode (plain record, input rewrite, or perturbation).
+    pub fn mode(mut self, mode: TraceMode) -> SessionBuilder {
+        self.mode = mode;
+        self
+    }
+
+    /// Where recorded entries go at [`Session::finish`].
+    pub fn sink(mut self, sink: Sink) -> SessionBuilder {
+        self.sink = sink;
+        self
+    }
+
+    /// Record only the listed kinds (e.g. activation-only studies).
+    pub fn kinds(mut self, kinds: &[Kind]) -> SessionBuilder {
+        self.kinds = Some(kinds.to_vec());
+        self
+    }
+
+    /// Attach the trusted reference this session is differentially checked
+    /// against when it finishes.
+    pub fn check_against(mut self, reference: Reference) -> SessionBuilder {
+        self.reference = reference;
+        self
+    }
+
+    /// Embed §5.2 per-tensor threshold estimates (computed with machine
+    /// epsilon `eps`) into the store this session writes — what makes a
+    /// recorded reference usable by `check-offline` with the same
+    /// thresholds as the in-process workflow.
+    pub fn embed_estimate(mut self, rel: &HashMap<String, f64>, eps: f64)
+                          -> SessionBuilder {
+        self.embed = Some((rel.clone(), eps));
+        self
+    }
+
+    /// Whether a failing check is also diagnosed at finish (default true).
+    /// Turn off for verdict-only workflows that would discard the
+    /// DAG/frontier/shard-attribution work.
+    pub fn diagnose(mut self, diagnose: bool) -> SessionBuilder {
+        self.diagnose = diagnose;
+        self
+    }
+
+    pub fn build(self) -> Session {
+        let mut collector = Collector::with_mode(self.mode.into_mode());
+        if let Some(kinds) = &self.kinds {
+            collector = collector.only_kinds(kinds);
+        }
+        Session {
+            collector,
+            meta: self.meta,
+            tolerance: self.tolerance,
+            sink: self.sink,
+            reference: self.reference,
+            embed: self.embed,
+            diagnose: self.diagnose,
+        }
+    }
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder::new()
+    }
+}
+
+/// One traced run of a training framework. The session is `Sync`: share it
+/// by reference across rank threads and give each rank its own [`Tracer`]
+/// (`session.tracer()`); recording is lock-free per rank. When the run is
+/// over, [`Session::finish`] drains the collection into the configured
+/// [`Sink`] and — if a [`Reference`] is attached — differentially checks
+/// and diagnoses it, returning the unified [`Report`].
+pub struct Session {
+    collector: Collector,
+    meta: RunMeta,
+    tolerance: Tolerance,
+    sink: Sink,
+    reference: Reference,
+    embed: Option<(HashMap<String, f64>, f64)>,
+    diagnose: bool,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// A cheap per-rank recording handle. Call this once per rank thread
+    /// (the handle keeps a per-clone iteration/microbatch cursor and is
+    /// deliberately not `Sync`).
+    pub fn tracer(&self) -> Tracer<'_> {
+        Tracer::new(&self.collector)
+    }
+
+    /// The session's collector as a [`Hooks`] implementation — what the
+    /// in-repo engine (and any framework with its own hook plumbing) runs
+    /// against.
+    pub fn hooks(&self) -> &dyn Hooks {
+        &self.collector
+    }
+
+    /// The run metadata this session was configured with.
+    pub fn meta(&self) -> &RunMeta {
+        &self.meta
+    }
+
+    /// Attach (or replace) the reference after the run — for workflows
+    /// where the reference trace only exists once both runs finished.
+    pub fn attach_reference(&mut self, reference: Reference) {
+        self.reference = reference;
+    }
+
+    /// Replace the tolerance policy after the run (the thresholds only
+    /// matter at [`Session::finish`]).
+    pub fn set_tolerance(&mut self, tolerance: Tolerance) {
+        self.tolerance = tolerance;
+    }
+
+    /// Enable/disable the diagnosis at finish after the run (see
+    /// [`SessionBuilder::diagnose`]).
+    pub fn set_diagnose(&mut self, diagnose: bool) {
+        self.diagnose = diagnose;
+    }
+
+    /// Finish the reference `Session` (which must use an in-memory sink),
+    /// then finish this session checked against it. The reference's
+    /// embedded estimates (if any) become the check's thresholds.
+    pub fn finish_against(mut self, reference: Session) -> Result<Report> {
+        let ref_report = reference.finish()?;
+        let estimate = ref_report.estimate.clone();
+        let trace = ref_report.trace.ok_or_else(|| {
+            anyhow!("the reference session used a store-only sink; attach it \
+                     with Reference::store(path) instead")
+        })?;
+        self.reference = Reference::InMemory { trace, estimate };
+        self.finish()
+    }
+
+    /// Drain every rank's records into the sink; if a reference is
+    /// attached, run the differential check and the dependency-aware
+    /// diagnosis. All rank threads must have joined (true by construction
+    /// after `dist::run_spmd`).
+    pub fn finish(self) -> Result<Report> {
+        let Session { collector, meta, tolerance, sink, reference, embed,
+                      diagnose: want_diagnosis } = self;
+
+        // 1. drain the collection into the sink
+        let (trace, store) = match sink {
+            Sink::Memory => (Some(collector.into_trace()), None),
+            Sink::Store(path) => {
+                let mut w = StoreWriter::create(&path)?;
+                if let Some((rel, eps)) = &embed {
+                    w.set_estimate(rel, *eps);
+                }
+                w.set_run_meta(&meta);
+                collector.write_store(&mut w)?;
+                let summary = w.finish()?;
+                (None, Some((path, summary)))
+            }
+            Sink::Tee(path) => {
+                let trace = collector.into_trace();
+                let mut w = StoreWriter::create(&path)?;
+                if let Some((rel, eps)) = &embed {
+                    w.set_estimate(rel, *eps);
+                }
+                w.set_run_meta(&meta);
+                write_trace(&trace, &mut w)?;
+                let summary = w.finish()?;
+                (Some(trace), Some((path, summary)))
+            }
+        };
+
+        let mut cfg = tolerance.check_cfg().clone();
+
+        // 2. resolve the reference side and check
+        let (reference_trace, estimate) = match reference {
+            Reference::None => {
+                let estimate = embed.map(|(rel, _)| rel).unwrap_or_default();
+                return Ok(Report {
+                    outcome: None,
+                    diagnosis: None,
+                    estimate,
+                    cfg,
+                    meta,
+                    trace,
+                    reference_trace: None,
+                    store,
+                });
+            }
+            Reference::InMemory { trace, estimate } => (trace, estimate),
+            Reference::Store(path) => {
+                let reader = StoreReader::open(&path)?;
+                if let Some(eps) = reader.estimate_eps() {
+                    // thresholds must use the eps the estimates used
+                    cfg.eps = eps;
+                }
+                let estimate = reader.estimate().clone();
+                (read_trace(&reader)?, estimate)
+            }
+        };
+
+        // the candidate side: the in-memory trace when the sink kept one,
+        // otherwise re-read the store this session just wrote
+        let candidate_trace = match (trace, &store) {
+            (Some(t), _) => t,
+            (None, Some((path, _))) => read_trace(&StoreReader::open(path)?)?,
+            (None, None) => unreachable!("every sink yields a trace or a store"),
+        };
+
+        let outcome = check_traces(&reference_trace, &candidate_trace,
+                                   &estimate, &cfg)?;
+        let diagnosis = if want_diagnosis {
+            Some(diagnose(&outcome, &reference_trace, &candidate_trace,
+                          &meta)?)
+        } else {
+            None
+        };
+        Ok(Report {
+            outcome: Some(outcome),
+            diagnosis,
+            estimate,
+            cfg,
+            meta,
+            trace: Some(candidate_trace),
+            reference_trace: Some(reference_trace),
+            store,
+        })
+    }
+}
+
+/// Materialize a whole `.ttrc` store as an in-memory [`Trace`] (the
+/// mixed in-memory/offline check paths; the two-store path streams via
+/// [`Report::from_stores`] instead).
+fn read_trace(reader: &StoreReader) -> Result<Trace> {
+    let mut trace = Trace::default();
+    for key in reader.keys() {
+        let entries = reader
+            .read_entries(key)?
+            .expect("key came from the store index");
+        trace.entries.insert(key.clone(), entries);
+    }
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, Tensor};
+    use crate::ttrace::shard::ShardSpec;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("ttrace_api_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    /// Record one tensor under each tracer sugar call.
+    fn record_run(session: &Session, scale: f32) {
+        let t = session.tracer();
+        t.step(0);
+        let spec = ShardSpec::full(&[2]);
+        t.act("linear", &Tensor::new(&[2], vec![1.0, 2.0], DType::F32), &spec);
+        t.micro(1);
+        t.act("linear", &Tensor::new(&[2], vec![3.0, 4.0], DType::F32), &spec);
+        t.main_grad("w", &Tensor::new(&[2], vec![0.5 * scale, 1.0 * scale],
+                                      DType::F32), &spec);
+        t.param("w", &Tensor::new(&[2], vec![0.9, 0.8], DType::F32), &spec);
+    }
+
+    #[test]
+    fn tracer_scopes_iterations_and_micros() {
+        let session = Session::builder().build();
+        record_run(&session, 1.0);
+        let report = session.finish().unwrap();
+        assert!(report.outcome.is_none(), "record-only session has no verdict");
+        assert!(report.passed());
+        let trace = report.trace.expect("memory sink keeps the trace");
+        let keys: Vec<&String> = trace.keys().collect();
+        // act at micro 0 and 1; main_grad/param pinned to micro 0
+        assert!(trace.get("i0/m0/act/linear").is_some(), "{keys:?}");
+        assert!(trace.get("i0/m1/act/linear").is_some(), "{keys:?}");
+        assert!(trace.get("i0/m0/main_grad/w").is_some(), "{keys:?}");
+        assert!(trace.get("i0/m0/param/w").is_some(), "{keys:?}");
+        assert_eq!(trace.len(), 4);
+    }
+
+    #[test]
+    fn finish_against_checks_and_diagnoses() {
+        let reference = Session::builder().build();
+        record_run(&reference, 1.0);
+        // identical candidate passes
+        let candidate = Session::builder().build();
+        record_run(&candidate, 1.0);
+        let report = candidate.finish_against(reference).unwrap();
+        assert!(report.passed(), "{}", report.render(32));
+        assert!(report.diagnosis.as_ref().unwrap().pass);
+
+        // a candidate with a doubled main grad fails on that id
+        let reference = Session::builder().build();
+        record_run(&reference, 1.0);
+        let candidate = Session::builder().build();
+        record_run(&candidate, 2.0);
+        let report = candidate.finish_against(reference).unwrap();
+        assert!(!report.passed());
+        assert_eq!(report.exit_code(), 1);
+        assert_eq!(report.localized_module().as_deref(), Some("w"));
+        let d = report.diagnosis.as_ref().unwrap();
+        assert_eq!(d.module.as_deref(), Some("w"));
+    }
+
+    #[test]
+    fn store_sink_roundtrips_through_the_offline_path() {
+        let rp = tmp("api_ref.ttrc");
+        let cp = tmp("api_cand.ttrc");
+        let reference = Session::builder().sink(Sink::store(&rp)).build();
+        record_run(&reference, 1.0);
+        let rr = reference.finish().unwrap();
+        let (path, summary) = rr.store.as_ref().expect("store sink persists");
+        assert_eq!(path, &rp);
+        assert_eq!(summary.ids, 4);
+
+        let candidate = Session::builder().sink(Sink::store(&cp)).build();
+        record_run(&candidate, 2.0);
+        candidate.finish().unwrap();
+
+        let report = Report::from_stores(&rp, &cp, &Tolerance::default()).unwrap();
+        assert!(!report.passed());
+        assert_eq!(report.localized_module().as_deref(), Some("w"));
+    }
+
+    #[test]
+    fn tee_sink_keeps_trace_and_store() {
+        let path = tmp("api_tee.ttrc");
+        let session = Session::builder().sink(Sink::tee(&path)).build();
+        record_run(&session, 1.0);
+        let report = session.finish().unwrap();
+        assert!(report.trace.is_some());
+        assert!(report.store.is_some());
+        let reader = StoreReader::open(&path).unwrap();
+        assert_eq!(reader.len(), report.trace.as_ref().unwrap().len());
+    }
+
+    #[test]
+    fn store_reference_against_memory_candidate() {
+        let rp = tmp("api_mixed_ref.ttrc");
+        let reference = Session::builder().sink(Sink::store(&rp)).build();
+        record_run(&reference, 1.0);
+        reference.finish().unwrap();
+
+        let candidate = Session::builder()
+            .check_against(Reference::store(&rp))
+            .build();
+        record_run(&candidate, 1.0);
+        let report = candidate.finish().unwrap();
+        assert!(report.passed(), "{}", report.render(32));
+        assert_eq!(report.outcome.as_ref().unwrap().checks.len(), 4);
+    }
+
+    #[test]
+    fn tolerance_builder_maps_onto_check_cfg() {
+        let t = Tolerance::new().safety(16.0).floor(2.0).eps(0.01).lr(0.5);
+        let cfg = t.check_cfg();
+        assert_eq!(cfg.safety, 16.0);
+        assert_eq!(cfg.floor, 2.0);
+        assert_eq!(cfg.eps, 0.01);
+        assert_eq!(cfg.lr, 0.5);
+    }
+
+    #[test]
+    fn kind_filter_applies_to_tracer_calls() {
+        let session = Session::builder().kinds(&[Kind::MainGrad]).build();
+        record_run(&session, 1.0);
+        let trace = session.finish().unwrap().trace.unwrap();
+        assert_eq!(trace.len(), 1);
+        assert!(trace.get("i0/m0/main_grad/w").is_some());
+    }
+}

@@ -1,0 +1,213 @@
+//! The unified result of a TTrace session: differential-check outcome,
+//! threshold estimates, and dependency-aware diagnosis behind one type —
+//! whether the traces lived in memory ([`Session::finish`]) or in `.ttrc`
+//! stores on disk ([`Report::from_stores`]).
+//!
+//! [`Session::finish`]: super::Session::finish
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+use super::super::checker::{CheckCfg, CheckOutcome};
+use super::super::collector::Trace;
+use super::super::diagnose::{diagnose_stores, Diagnosis, Dim, RunMeta};
+use super::super::report as report_fmt;
+use super::super::store::{check_stores, StoreReader, StoreSummary};
+use super::Tolerance;
+
+/// What one finished session (or one offline store pair) produced.
+///
+/// `outcome` is `None` for record-only sessions (no [`Reference`] was
+/// attached); whenever a differential check ran, `diagnosis` is populated
+/// too — a passing check carries a clean diagnosis.
+///
+/// [`Reference`]: super::Reference
+pub struct Report {
+    /// the differential-check outcome (`None`: nothing was checked)
+    pub outcome: Option<CheckOutcome>,
+    /// the dependency-aware diagnosis of the outcome (present whenever a
+    /// check ran; `diagnosis.pass` mirrors the verdict)
+    pub diagnosis: Option<Diagnosis>,
+    /// the §5.2 per-tensor threshold estimates the check used (empty:
+    /// floor thresholds only)
+    pub estimate: HashMap<String, f64>,
+    /// the resolved check configuration (after any eps override from an
+    /// estimate-carrying reference store)
+    pub cfg: CheckCfg,
+    /// the candidate run's parallel layout
+    pub meta: RunMeta,
+    /// the candidate trace, when the sink kept one in memory
+    pub trace: Option<Trace>,
+    /// the reference trace, when the check ran against an in-memory one
+    pub reference_trace: Option<Trace>,
+    /// the `.ttrc` store this session wrote, when the sink persisted one
+    pub store: Option<(PathBuf, StoreSummary)>,
+}
+
+impl Report {
+    /// `true` when nothing was checked or the check passed.
+    pub fn passed(&self) -> bool {
+        self.outcome.as_ref().map(|o| o.pass).unwrap_or(true)
+    }
+
+    /// Conventional process exit code: 0 pass, 1 fail.
+    pub fn exit_code(&self) -> i32 {
+        if self.passed() { 0 } else { 1 }
+    }
+
+    /// The module TTrace blames: the diagnosis' frontier module when a
+    /// diagnosis ran, otherwise the first divergence in computation order.
+    pub fn localized_module(&self) -> Option<String> {
+        if let Some(d) = &self.diagnosis {
+            if let Some(m) = &d.module {
+                return Some(m.clone());
+            }
+        }
+        self.outcome.as_ref().and_then(|o| o.localized_module())
+    }
+
+    /// The strongest implicated parallelism dimension, if the diagnosis
+    /// found axis-correlated structure.
+    pub fn implicated_dim(&self) -> Option<Dim> {
+        self.diagnosis
+            .as_ref()
+            .and_then(|d| d.dims.first().map(|(dim, _)| *dim))
+    }
+
+    /// Render the differential report (paper §3 step 4). At most
+    /// `max_rows` *passing* tensors are listed; failing rows always show.
+    pub fn render(&self, max_rows: usize) -> String {
+        match &self.outcome {
+            Some(o) => report_fmt::render(o, &self.cfg, max_rows),
+            None => "TTrace recording session — no reference attached, \
+                     nothing was checked.\n"
+                .to_string(),
+        }
+    }
+
+    /// Render the dependency-aware diagnosis (module / phase / implicated
+    /// dimension / frontier).
+    pub fn render_diagnosis(&self) -> String {
+        match &self.diagnosis {
+            Some(d) => report_fmt::render_diagnosis(d, &self.cfg),
+            None => "DIAGNOSIS: nothing to diagnose — the candidate \
+                     passed.\n"
+                .to_string(),
+        }
+    }
+
+    /// Machine-readable report (the JSON the CLI's `--out` writes).
+    pub fn to_json(&self) -> Json {
+        let mut root = match &self.outcome {
+            Some(o) => report_fmt::to_json(o, &self.cfg),
+            None => {
+                let mut j = Json::obj();
+                j.set("pass", Json::Bool(true));
+                j.set("checked", Json::Bool(false));
+                j
+            }
+        };
+        if let Some(d) = &self.diagnosis {
+            root.set("diagnosis", report_fmt::diagnosis_json(d));
+        }
+        root
+    }
+
+    /// Differentially check and diagnose two `.ttrc` stores from the files
+    /// alone — the paper's out-of-band deployment mode (reference and
+    /// candidate recorded by separate processes or machines). Streaming:
+    /// peak memory is one canonical id's shard set per worker. The
+    /// reference's embedded estimates (and their eps) set the thresholds;
+    /// the candidate's embedded run metadata maps shard ranks to grid
+    /// coordinates.
+    pub fn from_stores(reference: impl AsRef<Path>, candidate: impl AsRef<Path>,
+                       tolerance: &Tolerance) -> Result<Report> {
+        let r = StoreReader::open(reference.as_ref())?;
+        let c = StoreReader::open(candidate.as_ref())?;
+        Report::from_readers(&r, &c, tolerance)
+    }
+
+    /// [`Report::from_stores`] over already-opened readers.
+    pub fn from_readers(reference: &StoreReader, candidate: &StoreReader,
+                        tolerance: &Tolerance) -> Result<Report> {
+        Report::offline(reference, candidate, tolerance, true)
+    }
+
+    /// [`Report::from_readers`] without the dependency-aware diagnosis —
+    /// the verdict alone, skipping the DAG/frontier/shard-attribution work
+    /// (and its payload re-reads) on failure. `check-offline` uses this.
+    pub fn check_readers(reference: &StoreReader, candidate: &StoreReader,
+                         tolerance: &Tolerance) -> Result<Report> {
+        Report::offline(reference, candidate, tolerance, false)
+    }
+
+    fn offline(reference: &StoreReader, candidate: &StoreReader,
+               tolerance: &Tolerance, diagnose: bool) -> Result<Report> {
+        if !reference.is_empty() && !candidate.is_empty()
+            && !reference.keys().any(|k| candidate.contains(k))
+        {
+            bail!("{} and {} share no canonical ids — the stores were \
+                   recorded from unrelated runs (different models or trace \
+                   kinds) and cannot be differentially checked",
+                  reference.path().display(), candidate.path().display());
+        }
+        let mut cfg = tolerance.check_cfg().clone();
+        if let Some(eps) = reference.estimate_eps() {
+            cfg.eps = eps; // thresholds must use the eps the estimates used
+        }
+        let (outcome, diagnosis) = if diagnose {
+            let (o, d) = diagnose_stores(reference, candidate, &cfg)?;
+            (o, Some(d))
+        } else {
+            (check_stores(reference, candidate, reference.estimate(), &cfg)?,
+             None)
+        };
+        let meta = candidate.run_meta().cloned().unwrap_or_else(RunMeta::single);
+        Ok(Report {
+            outcome: Some(outcome),
+            diagnosis,
+            estimate: reference.estimate().clone(),
+            cfg,
+            meta,
+            trace: None,
+            reference_trace: None,
+            store: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record_only() -> Report {
+        Report {
+            outcome: None,
+            diagnosis: None,
+            estimate: HashMap::new(),
+            cfg: CheckCfg::default(),
+            meta: RunMeta::single(),
+            trace: None,
+            reference_trace: None,
+            store: None,
+        }
+    }
+
+    #[test]
+    fn record_only_report_renders_and_passes() {
+        let r = record_only();
+        assert!(r.passed());
+        assert_eq!(r.exit_code(), 0);
+        assert!(r.localized_module().is_none());
+        assert!(r.implicated_dim().is_none());
+        assert!(r.render(8).contains("nothing was checked"));
+        assert!(r.render_diagnosis().contains("nothing to diagnose"));
+        let j = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert!(j.req("pass").unwrap().as_bool().unwrap());
+        assert!(!j.req("checked").unwrap().as_bool().unwrap());
+    }
+}

@@ -1,0 +1,183 @@
+//! The per-rank recording handle of a [`Session`](super::Session) — the
+//! ~6 calls an external training loop adds to adopt TTrace (paper §4.3's
+//! "fewer than 10 lines of code" integration).
+//!
+//! A `Tracer` couples the session's collector with an iteration/microbatch
+//! cursor (`step`/`micro`), so trainer code never builds canonical ids by
+//! hand. The cursor lives in the handle (not the session), which is why a
+//! `Tracer` is deliberately **not** `Sync`: create one per rank thread via
+//! `session.tracer()` — the session itself is `Sync` and recording stays
+//! lock-free per rank.
+
+use std::cell::Cell;
+
+use crate::tensor::Tensor;
+
+use super::super::collector::Collector;
+use super::super::hooks::{CanonId, Hooks, Kind};
+use super::super::shard::ShardSpec;
+
+/// Cheap, clonable per-rank recording handle. Cloning shares the
+/// session's collector but gives the clone its own iteration/micro cursor.
+#[derive(Clone)]
+pub struct Tracer<'s> {
+    collector: &'s Collector,
+    iter: Cell<u64>,
+    micro: Cell<u32>,
+}
+
+impl<'s> Tracer<'s> {
+    pub(super) fn new(collector: &'s Collector) -> Tracer<'s> {
+        Tracer { collector, iter: Cell::new(0), micro: Cell::new(0) }
+    }
+
+    /// Enter training iteration `iter` (resets the microbatch cursor to 0).
+    pub fn step(&self, iter: u64) {
+        self.iter.set(iter);
+        self.micro.set(0);
+    }
+
+    /// Enter *global* microbatch `micro` of the current iteration. Under
+    /// data parallelism the global index interleaves ranks
+    /// (`local_micro * dp + dp_rank`), so the single-device reference —
+    /// which walks micros `0..dp*n_micro` — records the same ids.
+    pub fn micro(&self, micro: u32) {
+        self.micro.set(micro);
+    }
+
+    /// Record a tensor of any [`Kind`] at the cursor position. `spec` maps
+    /// the local tensor into the logical full tensor; replicated values use
+    /// `ShardSpec::full` and are recorded by every rank that holds them
+    /// (the merger cross-checks replicas bitwise).
+    ///
+    /// `MainGrad` and `Param` entries are per-iteration, not per-micro, so
+    /// they always record at microbatch 0 regardless of the cursor.
+    pub fn record(&self, kind: Kind, module: &str, t: &Tensor, spec: &ShardSpec) {
+        Hooks::record(self.collector, &self.id(kind, module), t, spec);
+    }
+
+    /// [`Tracer::record`], transferring ownership of a tensor the caller is
+    /// done with — the collector stores it without cloning the buffer.
+    pub fn record_owned(&self, kind: Kind, module: &str, t: Tensor,
+                        spec: &ShardSpec) {
+        Hooks::record_owned(self.collector, &self.id(kind, module), t, spec);
+    }
+
+    /// Record a module's output activation (forward).
+    pub fn act(&self, module: &str, t: &Tensor, spec: &ShardSpec) {
+        self.record(Kind::Act, module, t, spec);
+    }
+
+    /// Record the gradient w.r.t. a module's input (backward).
+    pub fn act_grad(&self, module: &str, t: &Tensor, spec: &ShardSpec) {
+        self.record(Kind::ActGrad, module, t, spec);
+    }
+
+    /// Record the scalar (or per-token) training loss.
+    pub fn loss(&self, module: &str, t: &Tensor, spec: &ShardSpec) {
+        self.record(Kind::Loss, module, t, spec);
+    }
+
+    /// Record a per-microbatch parameter gradient.
+    pub fn param_grad(&self, name: &str, t: &Tensor, spec: &ShardSpec) {
+        self.record(Kind::ParamGrad, name, t, spec);
+    }
+
+    /// Record an accumulated/reduced main gradient (pre-optimizer).
+    pub fn main_grad(&self, name: &str, t: &Tensor, spec: &ShardSpec) {
+        self.record(Kind::MainGrad, name, t, spec);
+    }
+
+    /// Record a parameter value after the optimizer step.
+    pub fn param(&self, name: &str, t: &Tensor, spec: &ShardSpec) {
+        self.record(Kind::Param, name, t, spec);
+    }
+
+    /// Offer a module *input* for rewriting (the §4.3 localization mode).
+    /// Returns the replacement shard when the session runs in
+    /// [`TraceMode::Rewrite`](super::TraceMode::Rewrite) — call it at every
+    /// module boundary and use the returned tensor when present:
+    ///
+    /// ```ignore
+    /// let x = tracer.rewrite("layers.0.input", &spec, &x).unwrap_or(x);
+    /// ```
+    pub fn rewrite(&self, module: &str, spec: &ShardSpec, t: &Tensor)
+                   -> Option<Tensor> {
+        self.collector.rewrite_input(&self.id(Kind::Act, module), spec, t)
+    }
+
+    /// Canonical id at the cursor. `MainGrad`/`Param` are per-iteration
+    /// values (micro 0 by convention, matching the in-repo engine).
+    fn id(&self, kind: Kind, module: &str) -> CanonId {
+        let micro = match kind {
+            Kind::MainGrad | Kind::Param => 0,
+            _ => self.micro.get(),
+        };
+        CanonId::new(self.iter.get(), micro, kind, module)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+    use crate::ttrace::collector::Mode;
+
+    #[test]
+    fn cursor_moves_and_grad_kinds_pin_micro_zero() {
+        let c = Collector::new();
+        let t = Tensor::zeros(&[1], DType::F32);
+        let spec = ShardSpec::full(&[1]);
+        {
+            let tr = Tracer::new(&c);
+            tr.step(2);
+            tr.micro(3);
+            tr.act("m", &t, &spec);
+            tr.act_grad("m", &t, &spec);
+            tr.param_grad("w", &t, &spec);
+            tr.main_grad("w", &t, &spec);
+            tr.param("w", &t, &spec);
+            tr.loss("loss", &t, &spec);
+        }
+        let trace = c.into_trace();
+        for key in ["i2/m3/act/m", "i2/m3/act_grad/m", "i2/m3/param_grad/w",
+                    "i2/m0/main_grad/w", "i2/m0/param/w", "i2/m3/loss/loss"] {
+            assert!(trace.get(key).is_some(), "missing {key} in {:?}",
+                    trace.keys().collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn clones_have_independent_cursors() {
+        let c = Collector::new();
+        let t = Tensor::zeros(&[1], DType::F32);
+        let spec = ShardSpec::full(&[1]);
+        {
+            let a = Tracer::new(&c);
+            let b = a.clone();
+            a.step(1);
+            b.step(7);
+            a.act("m", &t, &spec);
+            b.act("m", &t, &spec);
+        }
+        let trace = c.into_trace();
+        assert!(trace.get("i1/m0/act/m").is_some());
+        assert!(trace.get("i7/m0/act/m").is_some());
+    }
+
+    #[test]
+    fn record_owned_moves_and_rewrite_passes_through() {
+        let c = Collector::with_mode(Mode::Rewrite);
+        let spec = ShardSpec::full(&[2]);
+        let t = Tensor::new(&[2], vec![5.0, 6.0], DType::Bf16);
+        {
+            let tr = Tracer::new(&c);
+            let rw = tr.rewrite("m", &spec, &t);
+            assert!(rw.is_some(), "rewrite mode must offer a replacement");
+            tr.record_owned(Kind::Act, "m", t, &spec);
+        }
+        let trace = c.into_trace();
+        assert_eq!(trace.get("i0/m0/act/m").unwrap()[0].data.data,
+                   vec![5.0, 6.0]);
+    }
+}

@@ -5,8 +5,13 @@
 //! checking so reference and candidate can come from separate processes,
 //! and the dependency-aware diagnosis layer (`diagnose`) that turns a
 //! failing check into a module/phase/dimension verdict.
+//!
+//! External frameworks integrate through [`api`] — the stable
+//! `Session`/`Tracer`/`Report` facade (re-exported by `ttrace::prelude`)
+//! — rather than against these internals directly.
 
 pub mod annot;
+pub mod api;
 pub mod canonical;
 pub mod checker;
 pub mod collector;
@@ -20,6 +25,8 @@ pub mod shard;
 pub mod store;
 pub mod threshold;
 
+pub use api::{Reference, Report, Session, SessionBuilder, Sink, Tolerance,
+              TraceMode, Tracer};
 pub use checker::{check_traces, CheckCfg, CheckOutcome};
 pub use diagnose::{diagnose_stores, Diagnosis, RunMeta};
 pub use runner::{localized_module, reference_of, ttrace_check, TtraceRun};

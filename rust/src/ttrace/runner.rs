@@ -2,6 +2,12 @@
 //! thresholds on the reference, run candidate and reference for one
 //! iteration with trace collection, merge + differentially test, and (on
 //! failure) optionally re-run in input-rewrite mode to localize the bug.
+//!
+//! This is a thin consumer of the public facade: trace collection goes
+//! through [`Session`] (the in-repo engine records via
+//! `session.hooks()`), and the check + diagnosis come back as a
+//! [`Report`]. `TtraceRun` repackages the report's pieces for the
+//! in-repo tests, benches and figures.
 
 use std::collections::HashMap;
 
@@ -9,22 +15,38 @@ use anyhow::Result;
 
 use crate::bugs::BugSet;
 use crate::data::DataSource;
-use crate::model::{run_training, Engine, ModelCfg, ParCfg};
+use crate::model::{run_training, Engine, ModelCfg, ParCfg, Schedule};
 use crate::runtime::Executor;
 
-use super::checker::{check_traces, CheckCfg, CheckOutcome};
-use super::collector::{Collector, Mode, Trace};
-use super::diagnose::{diagnose, Diagnosis, RunMeta};
+use super::api::{Reference, Report, Session, Tolerance, TraceMode};
+use super::checker::{CheckCfg, CheckOutcome};
+use super::collector::Trace;
+use super::diagnose::Diagnosis;
 use super::threshold;
 
 /// Reference configuration for a candidate: single device, same numerics
 /// class (fp8/moe), microbatch count covering the global batch.
+///
+/// Exhaustive over `ParCfg` by construction: parallelism-related knobs are
+/// overridden explicitly, and *everything else* rides through the struct
+/// update — a new flag added to `ParCfg` carries over to the reference
+/// (matching the candidate's semantics class) instead of silently
+/// reverting to a default and desyncing the two configs.
 pub fn reference_of(p: &ParCfg) -> ParCfg {
-    let mut r = ParCfg::single();
-    r.n_micro = p.n_micro * p.topo.dp;
-    r.fp8 = p.fp8;
-    r.moe = p.moe;
-    r
+    ParCfg {
+        // single device: one rank, no parallel axes
+        topo: crate::dist::Topology::single(),
+        // the reference walks the whole global batch itself
+        n_micro: p.n_micro * p.topo.dp,
+        // parallelism-only mechanisms that don't exist on one device
+        sp: false,
+        zero1: false,
+        overlap: false,
+        recompute: false,
+        schedule: Schedule::GPipe,
+        // numerics-class flags (fp8, moe, ...) copy from the candidate
+        ..p.clone()
+    }
 }
 
 pub struct TtraceRun {
@@ -51,36 +73,34 @@ pub fn ttrace_check(m: &ModelCfg, candidate_p: &ParCfg, layers: usize,
                                   cfg.eps as f32, 1)?;
 
     // Step 3: run reference and candidate for one iteration, collecting.
-    // The two runs are independent (separate engines, collectors and SPMD
-    // worlds), so they execute concurrently; each one's trace is assembled
-    // on its own thread, deterministically.
-    let (reference, candidate) = run_pair(m, &ref_p, candidate_p, layers, exec,
-                                          data, bugs, Mode::Record, Mode::Record)?;
+    // Step 4: differential testing (+ the dependency-aware diagnosis).
+    let mut report = run_checked(m, &ref_p, candidate_p, layers, exec, data,
+                                 bugs, cfg, &est.rel, TraceMode::Record,
+                                 true)?;
+    let outcome = report.outcome.take().expect("a reference was attached");
 
-    // Step 4: differential testing.
-    let outcome = check_traces(&reference, &candidate, &est.rel, cfg)?;
-
-    // Step 5: input-rewrite localization on failure.
+    // Step 5: input-rewrite localization on failure. Only the outcome is
+    // kept, so the session skips the (discarded) diagnosis work.
     let rewrite_outcome = if localize && !outcome.pass {
-        let (ref_rw, cand_rw) = run_pair(m, &ref_p, candidate_p, layers, exec,
-                                         data, bugs, Mode::Rewrite, Mode::Rewrite)?;
-        Some(check_traces(&ref_rw, &cand_rw, &est.rel, cfg)?)
+        let mut rw = run_checked(m, &ref_p, candidate_p, layers, exec, data,
+                                 bugs, cfg, &est.rel, TraceMode::Rewrite,
+                                 false)?;
+        Some(rw.outcome.take().expect("a reference was attached"))
     } else {
         None
     };
 
-    // Dependency-aware diagnosis of a failing outcome (frontier, phase,
-    // implicated parallelism dimension) — the in-process twin of
-    // `diagnose_stores`.
-    let diagnosis = if outcome.pass {
-        None
-    } else {
-        Some(diagnose(&outcome, &reference, &candidate,
-                      &RunMeta::of_parcfg(candidate_p))?)
-    };
-
-    Ok(TtraceRun { outcome, reference, candidate, rewrite_outcome,
-                   estimate: est.rel, diagnosis })
+    Ok(TtraceRun {
+        outcome,
+        reference: report.reference_trace.take()
+            .expect("in-memory check keeps the reference trace"),
+        candidate: report.trace.take()
+            .expect("memory sink keeps the candidate trace"),
+        rewrite_outcome,
+        estimate: est.rel,
+        // TtraceRun's contract: a diagnosis only accompanies a failure
+        diagnosis: report.diagnosis.take().filter(|d| !d.pass),
+    })
 }
 
 /// The module TTrace blames: the *earliest* (in model-computation order)
@@ -107,25 +127,160 @@ pub fn localized_module(run: &TtraceRun) -> Option<String> {
     }
 }
 
-fn run_trace(m: &ModelCfg, p: &ParCfg, layers: usize, exec: &Executor,
-             data: &dyn DataSource, bugs: BugSet, mode: Mode) -> Result<Trace> {
+/// Run one engine configuration under a facade session and hand the (still
+/// unfinished) session back.
+fn run_session(m: &ModelCfg, p: &ParCfg, layers: usize, exec: &Executor,
+               data: &dyn DataSource, bugs: BugSet, mode: TraceMode)
+               -> Result<Session> {
     let engine = Engine::new(*m, p.clone(), layers, exec, bugs)?;
-    let collector = Collector::with_mode(mode);
-    run_training(&engine, data, &collector, 1);
-    Ok(collector.into_trace())
+    let session = Session::builder().parallelism(p).mode(mode).build();
+    run_training(&engine, data, session.hooks(), 1);
+    Ok(session)
 }
 
 /// Run the (trusted) reference and the candidate concurrently — the wall
-/// clock of the trace step is max(reference, candidate) instead of the sum.
+/// clock of the trace step is max(reference, candidate) instead of the sum
+/// — then finish the candidate session against the reference trace.
 #[allow(clippy::too_many_arguments)]
-fn run_pair(m: &ModelCfg, ref_p: &ParCfg, cand_p: &ParCfg, layers: usize,
-            exec: &Executor, data: &dyn DataSource, bugs: BugSet,
-            ref_mode: Mode, cand_mode: Mode) -> Result<(Trace, Trace)> {
+fn run_checked(m: &ModelCfg, ref_p: &ParCfg, cand_p: &ParCfg, layers: usize,
+               exec: &Executor, data: &dyn DataSource, bugs: BugSet,
+               cfg: &CheckCfg, estimate: &HashMap<String, f64>,
+               mode: TraceMode, diagnose: bool) -> Result<Report> {
+    let ref_mode = mode.clone();
     let (r, c) = std::thread::scope(|s| {
-        let r = s.spawn(|| run_trace(m, ref_p, layers, exec, data,
-                                     BugSet::none(), ref_mode));
-        let c = run_trace(m, cand_p, layers, exec, data, bugs, cand_mode);
+        let r = s.spawn(|| {
+            run_session(m, ref_p, layers, exec, data, BugSet::none(), ref_mode)
+                .and_then(Session::finish)
+        });
+        let c = run_session(m, cand_p, layers, exec, data, bugs, mode);
         (r.join().expect("reference trace thread panicked"), c)
     });
-    Ok((r?, c?))
+    let reference = r?.trace.expect("memory sink keeps the reference trace");
+    let mut session = c?;
+    session.set_tolerance(Tolerance::from_cfg(cfg.clone()));
+    session.set_diagnose(diagnose);
+    session.attach_reference(Reference::in_memory(reference, estimate.clone()));
+    session.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Topology;
+    use crate::ttrace::checker::TensorCheck;
+    use crate::ttrace::hooks::CanonId;
+
+    // ---- reference_of ---------------------------------------------------
+
+    #[test]
+    fn reference_resets_parallelism_and_keeps_numerics() {
+        let mut p = ParCfg::single();
+        p.topo = Topology::new(2, 2, 2, 1, 1).unwrap();
+        p.sp = true;
+        p.n_micro = 3;
+        p.schedule = Schedule::OneF1B;
+        p.recompute = true;
+        p.fp8 = true;
+        p.moe = true;
+        p.zero1 = true;
+        p.overlap = true;
+        let r = reference_of(&p);
+        // single device, covering the whole global batch
+        assert_eq!(r.topo.world(), 1);
+        assert_eq!(r.topo.vpp, 1);
+        assert_eq!(r.n_micro, 3 * 2, "n_micro must absorb the dp factor");
+        // parallel-only mechanisms are off
+        assert!(!r.sp && !r.zero1 && !r.overlap && !r.recompute);
+        assert_eq!(r.schedule, Schedule::GPipe);
+        // numerics-class flags ride through the struct update
+        assert!(r.fp8, "fp8 must match the candidate's numerics class");
+        assert!(r.moe, "moe must match the candidate's numerics class");
+    }
+
+    // ---- localized_module tie-break -------------------------------------
+
+    fn failing(key: &str) -> TensorCheck {
+        TensorCheck {
+            key: key.to_string(),
+            id: CanonId::parse(key).unwrap(),
+            rel_err: 1.0,
+            threshold: 0.1,
+            conflict_elems: 0,
+            pass: false,
+        }
+    }
+
+    fn outcome(fail_keys: &[&str]) -> CheckOutcome {
+        let mut o = CheckOutcome::default();
+        for k in fail_keys {
+            o.checks.push(failing(k));
+        }
+        o.pass = fail_keys.is_empty();
+        o
+    }
+
+    fn run_of(plain: CheckOutcome, rw: Option<CheckOutcome>) -> TtraceRun {
+        TtraceRun {
+            outcome: plain,
+            reference: Trace::default(),
+            candidate: Trace::default(),
+            rewrite_outcome: rw,
+            estimate: HashMap::new(),
+            diagnosis: None,
+        }
+    }
+
+    #[test]
+    fn localize_plain_only() {
+        // no rewrite pass ran: the plain divergence is the verdict
+        let run = run_of(outcome(&["i0/m0/act/layers.1.mlp"]), None);
+        assert_eq!(localized_module(&run).as_deref(), Some("layers.1.mlp"));
+    }
+
+    #[test]
+    fn localize_rewrite_only() {
+        // the plain pass found nothing (e.g. error cancels downstream) but
+        // rewrite mode isolates the module
+        let run = run_of(outcome(&[]),
+                         Some(outcome(&["i0/m0/act/layers.0.mlp"])));
+        assert_eq!(localized_module(&run).as_deref(), Some("layers.0.mlp"));
+    }
+
+    #[test]
+    fn localize_tie_prefers_the_rewrite_finding() {
+        // same computation order on both sides (two unknown module names
+        // share a depth rank): rewrite mode stops propagation, so its
+        // finding is the trustworthy one — the `<=` in the tie-break
+        let run = run_of(outcome(&["i0/m0/act/plain_side"]),
+                         Some(outcome(&["i0/m0/act/rewrite_side"])));
+        use super::super::checker::comp_order;
+        let p = CanonId::parse("i0/m0/act/plain_side").unwrap();
+        let r = CanonId::parse("i0/m0/act/rewrite_side").unwrap();
+        assert_eq!(comp_order(&p), comp_order(&r), "tie precondition");
+        assert_eq!(localized_module(&run).as_deref(), Some("rewrite_side"));
+    }
+
+    #[test]
+    fn localize_rewrite_earlier_wins() {
+        // rewrite mode pins the divergence upstream of the plain pass's
+        // first finding — the earlier (rewrite) module is the bug site
+        let run = run_of(outcome(&["i0/m0/act/layers.2.mlp"]),
+                         Some(outcome(&["i0/m0/act/layers.0.mlp"])));
+        assert_eq!(localized_module(&run).as_deref(), Some("layers.0.mlp"));
+    }
+
+    #[test]
+    fn localize_plain_earlier_wins() {
+        // rewritten inputs can mask a bug (wrong stage division): the plain
+        // run's earlier divergence keeps the blame
+        let run = run_of(outcome(&["i0/m0/act/layers.0.mlp"]),
+                         Some(outcome(&["i0/m0/act/layers.2.mlp"])));
+        assert_eq!(localized_module(&run).as_deref(), Some("layers.0.mlp"));
+    }
+
+    #[test]
+    fn localize_nothing_found() {
+        let run = run_of(outcome(&[]), Some(outcome(&[])));
+        assert_eq!(localized_module(&run), None);
+    }
 }

@@ -690,6 +690,26 @@ impl StoreReader {
             })
         };
 
+        // A store's shards and its embedded topology must agree: diagnosis
+        // maps each shard's recording rank to a (tp, cp, dp, pp) coordinate
+        // of that topology, so an out-of-range rank means the metadata and
+        // the payload come from different runs (a mismatched-topology
+        // store). Reject it here, by name, instead of mis-attributing.
+        if let Some(m) = &run_meta {
+            let world = m.topo.world() as u32;
+            for (key, metas) in &index {
+                for (si, sm) in metas.iter().enumerate() {
+                    if sm.rank >= world {
+                        bail!("{}: shard {si} of '{key}' was recorded by \
+                               rank {} but the embedded run topology {} has \
+                               only {world} rank(s) — the store's topology \
+                               metadata does not match its shards",
+                              path.display(), sm.rank, m.topo.describe());
+                    }
+                }
+            }
+        }
+
         Ok(StoreReader {
             path: path.to_path_buf(),
             file,

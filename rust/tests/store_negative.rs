@@ -1,0 +1,134 @@
+//! Negative offline paths: a `check-offline`/`diagnose` workflow handed a
+//! broken `.ttrc` store must fail with an error that names the file — not
+//! panic, and not silently mis-attribute. Covered: a store whose embedded
+//! topology doesn't match its shard rank tags, a v1 (rank-less format)
+//! store read by the v2 reader, a truncated trailer, and a pair of stores
+//! recorded from unrelated runs.
+
+use std::path::{Path, PathBuf};
+
+use ttrace::prelude::*;
+use ttrace::ttrace::collector::Entry;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ttrace_store_negative");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn entry(vals: &[f32], rank: u32) -> Entry {
+    Entry {
+        spec: ShardSpec::full(&[vals.len()]),
+        data: Tensor::new(&[vals.len()], vals.to_vec(), DType::F32),
+        rank,
+    }
+}
+
+/// A small valid store: `keys` ids, one full shard each, single-device
+/// run metadata.
+fn write_store(path: &Path, keys: &[&str]) {
+    let mut w = StoreWriter::create(path).unwrap();
+    for key in keys {
+        w.append(key, &entry(&[1.0, 2.0], 0)).unwrap();
+    }
+    w.set_run_meta(&RunMeta::single());
+    w.finish().unwrap();
+}
+
+#[test]
+fn mismatched_topology_store_is_rejected_by_name() {
+    // shards recorded by ranks 0..2 but the embedded topology says the
+    // world has a single rank — diagnosis could not attribute these
+    let path = tmp("mismatched_topo.ttrc");
+    let mut w = StoreWriter::create(&path).unwrap();
+    for rank in 0..3u32 {
+        w.append("i0/m0/main_grad/w", &entry(&[1.0, 2.0], rank)).unwrap();
+    }
+    w.set_run_meta(&RunMeta::single());
+    w.finish().unwrap();
+
+    let err = format!("{:#}", StoreReader::open(&path).unwrap_err());
+    assert!(err.contains("mismatched_topo.ttrc"), "{err}");
+    assert!(err.contains("rank 1"), "{err}");
+    assert!(err.contains("topology"), "{err}");
+
+    // the same failure surfaces through the offline check/diagnose entry
+    // point, whichever side the broken store is on
+    let good = tmp("good_ref.ttrc");
+    write_store(&good, &["i0/m0/main_grad/w"]);
+    let err = format!("{:#}", Report::from_stores(&good, &path,
+                                                  &Tolerance::default())
+        .unwrap_err());
+    assert!(err.contains("mismatched_topo.ttrc"), "{err}");
+}
+
+#[test]
+fn v1_store_is_rejected_with_its_version_and_name() {
+    // a v1 store predates per-shard rank tags; the v2 reader must say so
+    // (by file and version) instead of misparsing the index
+    let path = tmp("old_version.ttrc");
+    write_store(&path, &["i0/m0/act/linear"]);
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[4] = 1; // format version field, checked before the checksum
+    bytes[5] = 0;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let err = format!("{:#}", StoreReader::open(&path).unwrap_err());
+    assert!(err.contains("old_version.ttrc"), "{err}");
+    assert!(err.contains("version 1"), "{err}");
+    assert!(err.contains("version 2"), "{err}");
+}
+
+#[test]
+fn truncated_trailer_is_rejected_by_name() {
+    let good = tmp("trunc_ref.ttrc");
+    write_store(&good, &["i0/m0/act/linear"]);
+
+    let path = tmp("truncated.ttrc");
+    write_store(&path, &["i0/m0/act/linear"]);
+    let bytes = std::fs::read(&path).unwrap();
+    // chop into the 40-byte trailer: offsets + checksum can't both survive
+    std::fs::write(&path, &bytes[..bytes.len() - 12]).unwrap();
+
+    let err = format!("{:#}", StoreReader::open(&path).unwrap_err());
+    assert!(err.contains("truncated.ttrc"), "{err}");
+
+    // and through the two-store workflow, with the broken store as the
+    // candidate side
+    let err = format!("{:#}", Report::from_stores(&good, &path,
+                                                  &Tolerance::default())
+        .unwrap_err());
+    assert!(err.contains("truncated.ttrc"), "{err}");
+}
+
+#[test]
+fn byte_corruption_fails_the_checksum_by_name() {
+    let path = tmp("bitflip.ttrc");
+    write_store(&path, &["i0/m0/act/linear"]);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let err = format!("{:#}", StoreReader::open(&path).unwrap_err());
+    assert!(err.contains("bitflip.ttrc"), "{err}");
+    assert!(err.contains("checksum"), "{err}");
+}
+
+#[test]
+fn unrelated_stores_are_rejected_as_a_pair() {
+    // both stores are individually valid, but share no canonical ids —
+    // differential checking them would only produce a wall of
+    // missing-tensor noise, so the pair is rejected with both names
+    let a = tmp("model_a.ttrc");
+    let b = tmp("model_b.ttrc");
+    write_store(&a, &["i0/m0/act/alpha", "i0/m0/main_grad/wa"]);
+    write_store(&b, &["i0/m0/act/beta", "i0/m0/main_grad/wb"]);
+
+    let err = format!("{:#}", Report::from_stores(&a, &b,
+                                                  &Tolerance::default())
+        .unwrap_err());
+    assert!(err.contains("model_a.ttrc"), "{err}");
+    assert!(err.contains("model_b.ttrc"), "{err}");
+    assert!(err.contains("no canonical ids"), "{err}");
+}
