@@ -1,0 +1,60 @@
+//! Static-lint cost bench: how long `ttrace::analyze` takes to derive the
+//! expected trace schema and per-rank collective plan from a config and
+//! lint it, as the world size grows — the price of a preflight check that
+//! runs before any training step (the paper's lightweight-checking claim
+//! extended to time zero). `BENCH_SMOKE=1` shrinks the repeat count and
+//! the world matrix; wired into `make bench-smoke`.
+
+use ttrace::bugs::BugSet;
+use ttrace::dist::Topology;
+use ttrace::model::{ParCfg, TINY};
+use ttrace::ttrace::analyze::{analyze, lint_config};
+use ttrace::util::bench::{fmt_s, smoke_or, time, smoke, BenchJson, Table};
+
+fn par(dp: usize, tp: usize, pp: usize, cp: usize) -> ParCfg {
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(dp, tp, pp, cp, 1).unwrap();
+    p.sp = tp > 1;
+    p
+}
+
+fn main() {
+    let reps = smoke_or(20, 3);
+    let mut bj = BenchJson::new("lint");
+
+    let mut worlds = vec![
+        ("1 (single)", ParCfg::single(), 2usize),
+        ("2 (tp2)", par(1, 2, 1, 1), 2),
+        ("4 (tp2×dp2)", par(2, 2, 1, 1), 2),
+        ("8 (tp2×dp2×pp2)", par(2, 2, 2, 1), 2),
+    ];
+    if !smoke() {
+        worlds.push(("16 (tp2×dp2×pp2×cp2)", par(2, 2, 2, 2), 2));
+        worlds.push(("32 (tp2×dp4×pp2×cp2)", par(4, 2, 2, 2), 2));
+    }
+
+    let mut t = Table::new(&["world", "schema ids", "plan ops",
+                             "analyze mean", "lint mean"]);
+    for (label, p, layers) in &worlds {
+        let a = analyze(&TINY, p, *layers, BugSet::none(), 1).unwrap();
+        let st_analyze = time(1, reps, || {
+            analyze(&TINY, p, *layers, BugSet::none(), 1).unwrap();
+        });
+        let st_lint = time(1, reps, || {
+            let findings = lint_config(&TINY, p, *layers, BugSet::none(), 1)
+                .unwrap();
+            assert!(findings.is_empty());
+        });
+        t.row(&[label.to_string(), a.schema.len().to_string(),
+                a.plan.op_count().to_string(), fmt_s(st_analyze.mean_s),
+                fmt_s(st_lint.mean_s)]);
+        let world = p.topo.world();
+        bj.stage(&format!("analyze_w{world}"), st_analyze.mean_s);
+        bj.stage(&format!("lint_w{world}"), st_lint.mean_s);
+    }
+    t.print();
+    t.write_csv("results/lint.csv").unwrap();
+    println!("\nlint = build clean + armed analyses and diff them; the cost \
+              is config-derived only (no step, no artifacts).");
+    bj.write().unwrap();
+}

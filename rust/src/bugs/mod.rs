@@ -83,6 +83,11 @@ pub struct BugInfo {
     pub expect_dim: &'static str,
     /// ground-truth training phase ("fprop"/"bprop"/"wgrad"/"optimizer")
     pub expect_phase: &'static str,
+    /// whether `ttrace::analyze` can flag the bug *statically* — from the
+    /// armed config alone, before any training step. True for wrong/missing
+    /// collectives and wrong groups/stage layouts; false for purely numeric
+    /// faults (wrong operands/scales) that only values can reveal.
+    pub expect_static: bool,
 }
 
 impl BugId {
@@ -106,6 +111,7 @@ impl BugId {
                 expect_kinds: "act",
                 expect_dim: "tp",
                 expect_phase: "fprop",
+                expect_static: false,
             },
             B2ArWrongInput => BugInfo {
                 id: *self, number: 2, new: false, btype: WCp,
@@ -115,6 +121,7 @@ impl BugId {
                 expect_kinds: "act_grad,param_grad",
                 expect_dim: "none",
                 expect_phase: "bprop",
+                expect_static: false,
             },
             B3CpLossScale => BugInfo {
                 id: *self, number: 3, new: false, btype: WCp,
@@ -124,6 +131,7 @@ impl BugId {
                 expect_kinds: "act_grad,param_grad",
                 expect_dim: "cp",
                 expect_phase: "bprop",
+                expect_static: false,
             },
             B4DpLossScale => BugInfo {
                 id: *self, number: 4, new: false, btype: WCp,
@@ -133,6 +141,7 @@ impl BugId {
                 expect_kinds: "act_grad,param_grad",
                 expect_dim: "dp",
                 expect_phase: "bprop",
+                expect_static: false,
             },
             B5ZeroUntiedEmbedding => BugInfo {
                 id: *self, number: 5, new: false, btype: WCm,
@@ -142,6 +151,7 @@ impl BugId {
                 expect_kinds: "main_grad,param",
                 expect_dim: "pp",
                 expect_phase: "wgrad",
+                expect_static: true,
             },
             B6SpRouterSync => BugInfo {
                 id: *self, number: 6, new: false, btype: MCm,
@@ -151,6 +161,7 @@ impl BugId {
                 expect_kinds: "main_grad",
                 expect_dim: "tp",
                 expect_phase: "wgrad",
+                expect_static: true,
             },
             B7Fp8WrongGroup => BugInfo {
                 id: *self, number: 7, new: false, btype: WCm,
@@ -160,6 +171,7 @@ impl BugId {
                 expect_kinds: "act",
                 expect_dim: "tp",
                 expect_phase: "fprop",
+                expect_static: true,
             },
             B8ArFp8Cast => BugInfo {
                 id: *self, number: 8, new: false, btype: WCp,
@@ -169,6 +181,7 @@ impl BugId {
                 expect_kinds: "act,loss",
                 expect_dim: "none",
                 expect_phase: "fprop",
+                expect_static: false,
             },
             B9ZeroUpdateFailure => BugInfo {
                 id: *self, number: 9, new: false, btype: WCm,
@@ -178,6 +191,7 @@ impl BugId {
                 expect_kinds: "param",
                 expect_dim: "dp",
                 expect_phase: "optimizer",
+                expect_static: true,
             },
             B10PpStageDivision => BugInfo {
                 id: *self, number: 10, new: false, btype: WCp,
@@ -187,6 +201,7 @@ impl BugId {
                 expect_kinds: "act",
                 expect_dim: "pp",
                 expect_phase: "fprop",
+                expect_static: true,
             },
             B11TpOverlapGrads => BugInfo {
                 id: *self, number: 11, new: false, btype: WCm,
@@ -196,6 +211,7 @@ impl BugId {
                 expect_kinds: "act_grad,param_grad",
                 expect_dim: "tp",
                 expect_phase: "bprop",
+                expect_static: true,
             },
             B12SpLnSync => BugInfo {
                 id: *self, number: 12, new: true, btype: MCm,
@@ -205,6 +221,7 @@ impl BugId {
                 expect_kinds: "main_grad",
                 expect_dim: "tp",
                 expect_phase: "wgrad",
+                expect_static: true,
             },
             B13CpAttnGrads => BugInfo {
                 id: *self, number: 13, new: true, btype: WCp,
@@ -214,6 +231,7 @@ impl BugId {
                 expect_kinds: "act_grad,param_grad",
                 expect_dim: "cp",
                 expect_phase: "bprop",
+                expect_static: true,
             },
             B14TpCpLnGrads => BugInfo {
                 id: *self, number: 14, new: true, btype: WCp,
@@ -223,6 +241,7 @@ impl BugId {
                 expect_kinds: "main_grad",
                 expect_dim: "tp",
                 expect_phase: "wgrad",
+                expect_static: true,
             },
         }
     }

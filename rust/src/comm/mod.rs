@@ -42,11 +42,36 @@ pub struct World {
     pub n: usize,
     points: Mutex<HashMap<String, Point>>,
     cv: Condvar,
+    /// Expected member count per registered group *kind* (the key prefix
+    /// before '@', or the whole key) — see [`World::expect_group_size`].
+    expected_sizes: Mutex<HashMap<String, usize>>,
 }
 
 impl World {
     pub fn new(n: usize) -> Arc<World> {
-        Arc::new(World { n, points: Mutex::new(HashMap::new()), cv: Condvar::new() })
+        Arc::new(World {
+            n,
+            points: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            expected_sizes: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Register the group size the topology implies for a group kind
+    /// (`"tp"`, `"dpcp"`, ...). `dist::run_spmd` registers every kind it
+    /// mints keys for; collectives on a registered kind then reject a
+    /// caller-supplied `m` that disagrees — a wrong-group bug dies loudly
+    /// at the call site instead of silently misreducing (or deadlocking
+    /// against a differently-sized rendezvous). Unregistered kinds stay
+    /// permissive (ad-hoc groups, tests).
+    pub fn expect_group_size(&self, kind: &str, size: usize) {
+        self.expected_sizes.lock().unwrap().insert(kind.to_string(), size);
+    }
+
+    /// The registered size for a group key, if its kind was registered.
+    fn expected_size_of(&self, group: &str) -> Option<usize> {
+        let kind = group.split('@').next().unwrap_or(group);
+        self.expected_sizes.lock().unwrap().get(kind).copied()
     }
 
     /// All `m` members deposit a tensor under `key`; each receives clones
@@ -136,8 +161,26 @@ impl Comm {
         format!("{group}#{c}")
     }
 
+    /// Check a caller's (me, m) against the group size the topology
+    /// registered for this key's kind. Every collective funnels through
+    /// `all_gather`, so this is the single enforcement point.
+    fn validate_group(&self, group: &str, me: usize, m: usize) {
+        if let Some(expect) = self.world.expected_size_of(group) {
+            if m != expect || me >= m {
+                let rank = crate::dist::current_rank()
+                    .map(|r| format!(" (rank {r})"))
+                    .unwrap_or_default();
+                panic!(
+                    "wrong group on '{group}'{rank}: caller passed size {m} \
+                     (member {me}) but the topology's group size is {expect}"
+                );
+            }
+        }
+    }
+
     /// All-gather: returns every member's tensor, in member order.
     pub fn all_gather(&self, group: &str, me: usize, m: usize, x: &Tensor) -> Vec<Tensor> {
+        self.validate_group(group, me, m);
         let key = self.next_key(group);
         self.world.exchange(&key, me, m, x.clone())
     }
@@ -306,6 +349,36 @@ mod tests {
         let bf_sum = reduce_parts(&parts, RedOp::Sum, RedPrec::Bf16).data[0];
         assert!(f32_sum > 1.0);
         assert_eq!(bf_sum, 1.0);
+    }
+
+    #[test]
+    fn registered_group_size_is_enforced() {
+        let world = World::new(4);
+        world.expect_group_size("tp", 2);
+        let comm = Comm::new(world.clone());
+        let x = Tensor::scalar(1.0, DType::F32);
+        // wrong size dies at the call site (before any rendezvous)
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            comm.all_reduce("tp@pp0dp0cp0", 0, 4, &x, RedOp::Sum, RedPrec::F32)
+        }));
+        assert!(err.is_err(), "wrong group size must panic");
+        // member index out of the registered range dies too
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            comm.all_gather("tp@pp0dp0cp0", 2, 2, &x)
+        }));
+        assert!(err.is_err(), "out-of-range member must panic");
+        // the right size passes, and unregistered kinds stay permissive
+        let results = spawn_ranks(2, |r, w| {
+            w.expect_group_size("tp", 2);
+            let comm = Comm::new(w);
+            let x = Tensor::scalar((r + 1) as f32, DType::F32);
+            let a = comm.all_reduce("tp@pp0dp0cp0", r, 2, &x,
+                                    RedOp::Sum, RedPrec::F32).data[0];
+            let b = comm.all_reduce("adhoc", r, 2, &x,
+                                    RedOp::Sum, RedPrec::F32).data[0];
+            (a, b)
+        });
+        assert_eq!(results, vec![(3.0, 3.0), (3.0, 3.0)]);
     }
 
     #[test]

@@ -214,6 +214,15 @@ where
 {
     let n = topo.world();
     let world = World::new(n);
+    // Register the topology's group sizes so every collective call is
+    // checked against them — a caller passing the wrong member count for
+    // a tp/cp/dp group dies with the group key instead of misreducing.
+    world.expect_group_size("tp", topo.tp);
+    world.expect_group_size("cp", topo.cp);
+    world.expect_group_size("dp", topo.dp);
+    world.expect_group_size("dpcp", topo.dp * topo.cp);
+    world.expect_group_size("world", n);
+    world.expect_group_size("embtie", 2);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     // Tell the kernel thread pool how many rank threads are live so nested
     // (rank x kernel) parallelism divides — not multiplies — the CPU. The

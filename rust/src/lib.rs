@@ -42,6 +42,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::dist::Topology;
     pub use crate::tensor::{DType, Tensor};
+    pub use crate::ttrace::analyze::{lint_config, Finding};
     pub use crate::ttrace::api::{Reference, Report, Session, SessionBuilder,
                                  Sink, Tolerance, TraceMode, Tracer};
     pub use crate::ttrace::checker::{CheckCfg, CheckOutcome};

@@ -14,6 +14,10 @@
 //!                  blamed module, phase, implicated parallelism dimension
 //!   inspect        describe a `.ttrc` store (ids, shapes, shard layouts);
 //!                  `--id` dumps one tensor's shards and summary stats
+//!   lint           pre-run static lint: diff the config's expected trace
+//!                  schema and collective plan against a clean layout —
+//!                  flags misconfigurations before any step runs;
+//!                  `--store` also schema-diffs a recorded `.ttrc` store
 //!   train          run training and print the loss curve
 //!   bugs           list the 14 reproducible Table-1 bugs
 //!
@@ -26,6 +30,8 @@
 //!   ttrace diagnose ref.ttrc cand.ttrc
 //!   ttrace inspect ref.ttrc
 //!   ttrace inspect ref.ttrc --id i0/m0/act/layers.0.mlp
+//!   ttrace lint --tp 2 --sp --bug 12
+//!   ttrace lint --tp 2 --store cand.ttrc --out findings.json
 //!   ttrace train --model e2e --steps 100 --tp 2
 //!   ttrace bugs
 
@@ -41,6 +47,9 @@ use ttrace::prelude::{localized_module, reference_of, ttrace_check, CheckCfg,
                       NoopHooks, Report, Session, Sink, StoreReader,
                       Tolerance};
 use ttrace::runtime::Executor;
+use ttrace::ttrace::analyze::{self, diff_schema, findings_json,
+                              render_findings, ExpectedSchema,
+                              ObservedSchema};
 use ttrace::ttrace::store::{layout_of, Encoding};
 use ttrace::ttrace::{report, threshold};
 use ttrace::util::bench::{fmt_bytes, fmt_s, time_once};
@@ -54,11 +63,12 @@ fn main() {
         Some("check-offline") => run(check_offline(&argv[1..])),
         Some("diagnose") => run(diagnose_cmd(&argv[1..])),
         Some("inspect") => run(inspect(&argv[1..])),
+        Some("lint") => run(lint(&argv[1..])),
         Some("train") => run(train(&argv[1..])),
         Some("bugs") => run(bugs()),
         _ => {
             eprintln!("usage: ttrace <check|record|check-offline|diagnose|\
-                       inspect|train|bugs> [options]\n\
+                       inspect|lint|train|bugs> [options]\n\
                        run `ttrace check --help` etc. for details");
             2
         }
@@ -431,6 +441,59 @@ fn inspect_id(store: &StoreReader, store_name: &str, id: &str) -> Result<i32> {
     Ok(0)
 }
 
+/// Pre-run static lint: derive the expected trace schema and collective
+/// plan from `(ModelCfg, ParCfg)` alone and diff them against the clean
+/// layout — no training step, no compiled artifacts. Exit 0 when clean,
+/// 1 when any finding fires.
+fn lint(argv: &[String]) -> Result<i32> {
+    let cli = parcfg_cli(Cli::new("pre-run static lint of the expected \
+                                   trace schema and collective plan"))
+        .opt("bug", "0", "arm Table-1 bug number (0 = none) and lint the \
+                          armed config — nothing is executed")
+        .opt("iters", "1", "iterations the expected schema should cover")
+        .opt("store", "", "also schema-diff this recorded .ttrc store \
+                           against the expected schema")
+        .opt("out", "", "write the JSON findings to this path");
+    let args = cli.parse_from(argv)?;
+    let (m, mut p, layers) = parse_parcfg(&args)?;
+    let bug_no = args.get_usize("bug")?;
+    let bugs = if bug_no == 0 {
+        BugSet::none()
+    } else {
+        let bug = find_bug(bug_no)?;
+        bug.arm_parcfg(&mut p);
+        BugSet::one(bug)
+    };
+    let iters = args.get_usize("iters")? as u64;
+    let (res, dt) = time_once(|| analyze::lint_config(&m, &p, layers, bugs,
+                                                      iters));
+    let mut findings = res?;
+    let store_path = args.get("store");
+    if !store_path.is_empty() {
+        // instrumentation lint: the recorded id set vs what the (armed)
+        // config's run should have recorded
+        let store = StoreReader::open(Path::new(store_path))?;
+        let observed = ObservedSchema::of_store(&store);
+        let expected = ExpectedSchema::build(&m, &p, layers, bugs,
+                                             observed.infer_iters())?;
+        findings.extend(diff_schema(&expected, &observed));
+    }
+    if findings.is_empty() {
+        println!("lint clean: '{}' on {} — no findings ({})", m.name,
+                 p.topo.describe(), fmt_s(dt));
+    } else {
+        println!("{}", render_findings(&findings));
+        println!("{} finding(s) on {} ({})", findings.len(),
+                 p.topo.describe(), fmt_s(dt));
+    }
+    let out = args.get("out");
+    if !out.is_empty() {
+        std::fs::write(out, findings_json(&findings).to_string_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(if findings.is_empty() { 0 } else { 1 })
+}
+
 fn train(argv: &[String]) -> Result<i32> {
     let cli = parcfg_cli(Cli::new("train and print the loss curve"))
         .opt("steps", "10", "training iterations")
@@ -476,12 +539,13 @@ fn train(argv: &[String]) -> Result<i32> {
 }
 
 fn bugs() -> Result<i32> {
-    println!("{:<4} {:<4} {:<5} {:<42} {}", "ID", "New", "Type",
-             "Description", "Impact");
+    println!("{:<4} {:<4} {:<5} {:<7} {:<42} {}", "ID", "New", "Type",
+             "Static", "Description", "Impact");
     for b in BugId::all() {
         let i = b.info();
-        println!("{:<4} {:<4} {:<5} {:<42} {}", i.number,
+        println!("{:<4} {:<4} {:<5} {:<7} {:<42} {}", i.number,
                  if i.new { "yes" } else { "" }, i.btype.name(),
+                 if i.expect_static { "lint" } else { "" },
                  i.description, i.impact);
     }
     Ok(0)

@@ -114,25 +114,51 @@ impl ParamSet {
 /// 1/sqrt(2L), ones for LN weight, zeros for biases/LN bias.
 const INIT_STD: f32 = 0.02;
 
-/// Declarative parameter table for the dense/MoE GPT model.
+/// How a parameter's logical full tensor is initialized (`build` resolves
+/// this through the consistent generator; `ttrace::analyze` ignores it).
+#[derive(Clone, Copy, Debug)]
+enum InitRule {
+    /// N(0, std) seeded by the parameter name
+    Normal(f32),
+    /// constant fill (LN weights, biases)
+    Const(f32),
+}
+
+/// One row of the declarative parameter table: everything knowable about a
+/// parameter *without allocating it* — canonical name, this rank's
+/// `ShardSpec` into the reference tensor, and the grad-sync rule.
+#[derive(Clone, Debug)]
+pub struct ParamDecl {
+    pub name: String,
+    pub spec: ShardSpec,
+    pub sync: GradSync,
+    init: InitRule,
+}
+
+/// Declarative parameter table for the dense/MoE GPT model — the single
+/// source of truth for parameter names, shard specs and sync rules, shared
+/// by `build` (which allocates tensors from it) and the static analyzer
+/// (`ttrace::analyze`, which only needs the schema).
 /// `layer_range` is the global layer ids this rank's stage owns.
-pub fn build(m: &ModelCfg, p: &ParCfg, coord: Coord, layers: usize,
+pub fn decls(m: &ModelCfg, p: &ParCfg, coord: Coord, layers: usize,
              layer_range: &[usize], holds_embedding: bool,
-             holds_lmhead: bool) -> ParamSet {
+             holds_lmhead: bool) -> Vec<ParamDecl> {
     let tp = p.topo.tp;
     let tpi = coord.tp;
     let d = m.d;
     let resid_std = INIT_STD / ((2.0 * layers as f32).sqrt());
 
-    let mut params: Vec<Param> = Vec::new();
+    let mut out: Vec<ParamDecl> = Vec::new();
+    let mut push = |name: String, spec: ShardSpec, sync: GradSync, init: InitRule| {
+        out.push(ParamDecl { name, spec, sync, init });
+    };
 
     if holds_embedding || holds_lmhead {
         // Tied word embeddings: held by the first stage (embedding) and the
         // last stage (LM head); grads are synchronized between them.
-        let name = "embedding.word_embeddings.weight".to_string();
-        let spec = ShardSpec::split(&[m.v, d], 0, tpi, tp);
-        let init = gen::full_normal(&name, &[m.v, d], INIT_STD, DType::Bf16);
-        params.push(Param::new(name, spec, GradSync::Sharded, init));
+        push("embedding.word_embeddings.weight".to_string(),
+             ShardSpec::split(&[m.v, d], 0, tpi, tp),
+             GradSync::Sharded, InitRule::Normal(INIT_STD));
     }
 
     for &l in layer_range {
@@ -140,87 +166,86 @@ pub fn build(m: &ModelCfg, p: &ParCfg, coord: Coord, layers: usize,
         let ln_sync = if p.sp { GradSync::ReplicatedSeqSharded } else { GradSync::Replicated };
 
         for ln in ["input_layernorm", "pre_mlp_layernorm"] {
-            let wname = format!("{pre}.{ln}.weight");
-            params.push(Param::new(
-                wname,
-                ShardSpec::full(&[d]),
-                ln_sync,
-                gen::full_const(&[d], 1.0, DType::Bf16),
-            ));
-            let bname = format!("{pre}.{ln}.bias");
-            params.push(Param::new(
-                bname,
-                ShardSpec::full(&[d]),
-                ln_sync,
-                gen::full_const(&[d], 0.0, DType::Bf16),
-            ));
+            push(format!("{pre}.{ln}.weight"), ShardSpec::full(&[d]),
+                 ln_sync, InitRule::Const(1.0));
+            push(format!("{pre}.{ln}.bias"), ShardSpec::full(&[d]),
+                 ln_sync, InitRule::Const(0.0));
         }
 
         // fused QKV (column-parallel; shard owns matching head-slices of
         // each of the Q/K/V thirds)
-        let wname = format!("{pre}.self_attention.linear_qkv.weight");
-        let wspec = ShardSpec::full(&[d, 3 * d]).and_qkv_split(1, d, tpi, tp);
-        let winit = gen::full_normal(&wname, &[d, 3 * d], INIT_STD, DType::Bf16);
-        params.push(Param::new(wname, wspec, GradSync::Sharded, winit));
-        let bname = format!("{pre}.self_attention.linear_qkv.bias");
-        let bspec = ShardSpec::full(&[3 * d]).and_qkv_split(0, d, tpi, tp);
-        params.push(Param::new(bname, bspec, GradSync::Sharded,
-                               gen::full_const(&[3 * d], 0.0, DType::Bf16)));
+        push(format!("{pre}.self_attention.linear_qkv.weight"),
+             ShardSpec::full(&[d, 3 * d]).and_qkv_split(1, d, tpi, tp),
+             GradSync::Sharded, InitRule::Normal(INIT_STD));
+        push(format!("{pre}.self_attention.linear_qkv.bias"),
+             ShardSpec::full(&[3 * d]).and_qkv_split(0, d, tpi, tp),
+             GradSync::Sharded, InitRule::Const(0.0));
 
         // output projection (row-parallel: input dim sharded)
-        let wname = format!("{pre}.self_attention.linear_proj.weight");
-        let wspec = ShardSpec::split(&[d, d], 0, tpi, tp);
-        let winit = gen::full_normal(&wname, &[d, d], resid_std, DType::Bf16);
-        params.push(Param::new(wname, wspec, GradSync::Sharded, winit));
+        push(format!("{pre}.self_attention.linear_proj.weight"),
+             ShardSpec::split(&[d, d], 0, tpi, tp),
+             GradSync::Sharded, InitRule::Normal(resid_std));
         // proj bias is added after the (reduce-scattered) output under SP,
         // so each tp rank sees a different sequence shard -> same sync rule
         // as the LN params.
-        let bname = format!("{pre}.self_attention.linear_proj.bias");
-        params.push(Param::new(bname, ShardSpec::full(&[d]), ln_sync,
-                               gen::full_const(&[d], 0.0, DType::Bf16)));
+        push(format!("{pre}.self_attention.linear_proj.bias"),
+             ShardSpec::full(&[d]), ln_sync, InitRule::Const(0.0));
 
         if p.moe {
-            let rname = format!("{pre}.mlp.router.weight");
             let rsync = if p.sp { GradSync::ReplicatedSeqSharded } else { GradSync::Replicated };
-            let rinit = gen::full_normal(&rname, &[d, m.e], INIT_STD, DType::Bf16);
-            params.push(Param::new(rname, ShardSpec::full(&[d, m.e]), rsync, rinit));
-
-            let w1name = format!("{pre}.mlp.experts.fc1.weight");
-            let w1spec = ShardSpec::split(&[m.e, d, m.f], 2, tpi, tp);
-            let w1init = gen::full_normal(&w1name, &[m.e, d, m.f], INIT_STD, DType::Bf16);
-            params.push(Param::new(w1name, w1spec, GradSync::Sharded, w1init));
-            let b1name = format!("{pre}.mlp.experts.fc1.bias");
-            let b1spec = ShardSpec::split(&[m.e, m.f], 1, tpi, tp);
-            params.push(Param::new(b1name, b1spec, GradSync::Sharded,
-                                   gen::full_const(&[m.e, m.f], 0.0, DType::Bf16)));
-            let w2name = format!("{pre}.mlp.experts.fc2.weight");
-            let w2spec = ShardSpec::split(&[m.e, m.f, d], 1, tpi, tp);
-            let w2init = gen::full_normal(&w2name, &[m.e, m.f, d], resid_std, DType::Bf16);
-            params.push(Param::new(w2name, w2spec, GradSync::Sharded, w2init));
+            push(format!("{pre}.mlp.router.weight"),
+                 ShardSpec::full(&[d, m.e]), rsync, InitRule::Normal(INIT_STD));
+            push(format!("{pre}.mlp.experts.fc1.weight"),
+                 ShardSpec::split(&[m.e, d, m.f], 2, tpi, tp),
+                 GradSync::Sharded, InitRule::Normal(INIT_STD));
+            push(format!("{pre}.mlp.experts.fc1.bias"),
+                 ShardSpec::split(&[m.e, m.f], 1, tpi, tp),
+                 GradSync::Sharded, InitRule::Const(0.0));
+            push(format!("{pre}.mlp.experts.fc2.weight"),
+                 ShardSpec::split(&[m.e, m.f, d], 1, tpi, tp),
+                 GradSync::Sharded, InitRule::Normal(resid_std));
         } else {
-            let w1name = format!("{pre}.mlp.fc1.weight");
-            let w1spec = ShardSpec::split(&[d, m.f], 1, tpi, tp);
-            let w1init = gen::full_normal(&w1name, &[d, m.f], INIT_STD, DType::Bf16);
-            params.push(Param::new(w1name, w1spec, GradSync::Sharded, w1init));
-            let b1name = format!("{pre}.mlp.fc1.bias");
-            let b1spec = ShardSpec::split(&[m.f], 0, tpi, tp);
-            params.push(Param::new(b1name, b1spec, GradSync::Sharded,
-                                   gen::full_const(&[m.f], 0.0, DType::Bf16)));
-            let w2name = format!("{pre}.mlp.fc2.weight");
-            let w2spec = ShardSpec::split(&[m.f, d], 0, tpi, tp);
-            let w2init = gen::full_normal(&w2name, &[m.f, d], resid_std, DType::Bf16);
-            params.push(Param::new(w2name, w2spec, GradSync::Sharded, w2init));
+            push(format!("{pre}.mlp.fc1.weight"),
+                 ShardSpec::split(&[d, m.f], 1, tpi, tp),
+                 GradSync::Sharded, InitRule::Normal(INIT_STD));
+            push(format!("{pre}.mlp.fc1.bias"),
+                 ShardSpec::split(&[m.f], 0, tpi, tp),
+                 GradSync::Sharded, InitRule::Const(0.0));
+            push(format!("{pre}.mlp.fc2.weight"),
+                 ShardSpec::split(&[m.f, d], 0, tpi, tp),
+                 GradSync::Sharded, InitRule::Normal(resid_std));
         }
     }
 
     if holds_lmhead {
         let sync = if p.sp { GradSync::ReplicatedSeqSharded } else { GradSync::Replicated };
-        params.push(Param::new("final_layernorm.weight".to_string(),
-                               ShardSpec::full(&[d]), sync,
-                               gen::full_const(&[d], 1.0, DType::Bf16)));
-        params.push(Param::new("final_layernorm.bias".to_string(),
-                               ShardSpec::full(&[d]), sync,
-                               gen::full_const(&[d], 0.0, DType::Bf16)));
+        push("final_layernorm.weight".to_string(), ShardSpec::full(&[d]),
+             sync, InitRule::Const(1.0));
+        push("final_layernorm.bias".to_string(), ShardSpec::full(&[d]),
+             sync, InitRule::Const(0.0));
+    }
+
+    out
+}
+
+/// Allocate the per-rank parameter set from the declarative table.
+/// Initialization draws each logical full tensor from the consistent
+/// generator and slices the rank's shard.
+pub fn build(m: &ModelCfg, p: &ParCfg, coord: Coord, layers: usize,
+             layer_range: &[usize], holds_embedding: bool,
+             holds_lmhead: bool) -> ParamSet {
+    let table = decls(m, p, coord, layers, layer_range, holds_embedding,
+                      holds_lmhead);
+    let mut params: Vec<Param> = Vec::with_capacity(table.len());
+    for decl in table {
+        let init = match decl.init {
+            InitRule::Normal(std) =>
+                gen::full_normal(&decl.name, &decl.spec.global_dims, std,
+                                 DType::Bf16),
+            InitRule::Const(v) =>
+                gen::full_const(&decl.spec.global_dims, v, DType::Bf16),
+        };
+        params.push(Param::new(decl.name, decl.spec, decl.sync, init));
     }
 
     let order: Vec<String> = params.iter().map(|p| p.name.clone()).collect();

@@ -1,0 +1,552 @@
+//! Lint rules over the expected schema and collective plan.
+//!
+//! Two rule families:
+//!
+//! * **Plan rules** — diff the armed config's expected plan against the
+//!   clean plan of the same layout (missing grad syncs, wrong-group
+//!   collectives, dropped reductions, rescale bugs), plus structural
+//!   checks on a single plan (participant sets, per-group op-sequence
+//!   consistency across members — the skew that deadlocks a real run —
+//!   and send/recv pairing).
+//! * **Schema rules** — diff an observed id set (a recorded trace, a
+//!   `.ttrc` store, or another config's expected schema) against the
+//!   expected schema: missing / extra trace points, mis-sharded specs,
+//!   wrong structural dtypes.
+//!
+//! Every finding names the canonical id or group key it is about, so a
+//! report reads directly against `inspect` output and `comm`'s runtime
+//! group-size assertion.
+
+use std::collections::BTreeMap;
+
+use crate::ttrace::collector::Trace;
+use crate::ttrace::hooks::{CanonId, Kind};
+use crate::ttrace::shard::ShardSpec;
+use crate::ttrace::store::StoreReader;
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+use super::plan::{CollectivePlan, OpKind, PlannedOp};
+use super::schema::ExpectedSchema;
+use super::Analysis;
+
+/// One lint finding. `subject` is the canonical id or group key the rule
+/// fired on; `detail` is the human-readable explanation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub rank: Option<usize>,
+    pub subject: String,
+    pub detail: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        match self.rank {
+            Some(r) => format!("[{}] {} (rank {}): {}", self.rule,
+                               self.subject, r, self.detail),
+            None => format!("[{}] {}: {}", self.rule, self.subject,
+                            self.detail),
+        }
+    }
+}
+
+/// Render findings one per line (empty string when clean).
+pub fn render_findings(findings: &[Finding]) -> String {
+    findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+}
+
+/// Findings as a JSON report (`{count, findings: [...]}`).
+pub fn findings_json(findings: &[Finding]) -> Json {
+    let mut arr = Vec::with_capacity(findings.len());
+    for f in findings {
+        let mut o = Json::obj();
+        o.set("rule", Json::from_str_(f.rule));
+        o.set("rank", match f.rank {
+            Some(r) => Json::from_usize(r),
+            None => Json::Null,
+        });
+        o.set("subject", Json::from_str_(&f.subject));
+        o.set("detail", Json::from_str_(&f.detail));
+        arr.push(o);
+    }
+    let mut root = Json::obj();
+    root.set("count", Json::from_usize(findings.len()));
+    root.set("findings", Json::Arr(arr));
+    root
+}
+
+// ---------------------------------------------------------------------------
+// observed id sets
+
+/// An id set observed from a recording (or from a second expected
+/// schema), normalized for diffing.
+#[derive(Clone, Debug, Default)]
+pub struct ObservedSchema {
+    pub entries: BTreeMap<String, Vec<ObservedShard>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ObservedShard {
+    pub rank: usize,
+    pub spec: ShardSpec,
+    /// `None` when the source doesn't carry a dtype.
+    pub dtype: Option<DType>,
+}
+
+impl ObservedSchema {
+    /// From an in-memory recorded trace.
+    pub fn of_trace(t: &Trace) -> ObservedSchema {
+        let mut entries = BTreeMap::new();
+        for (key, es) in &t.entries {
+            let mut shards: Vec<ObservedShard> = es.iter().map(|e| {
+                ObservedShard {
+                    rank: e.rank as usize,
+                    spec: e.spec.clone(),
+                    dtype: Some(e.data.dtype),
+                }
+            }).collect();
+            shards.sort_by_key(|s| s.rank);
+            entries.insert(key.clone(), shards);
+        }
+        ObservedSchema { entries }
+    }
+
+    /// From a `.ttrc` store's index (no payload reads).
+    pub fn of_store(s: &StoreReader) -> ObservedSchema {
+        let mut entries = BTreeMap::new();
+        for key in s.keys() {
+            let metas = s.shards(key).expect("key from the index");
+            let mut shards: Vec<ObservedShard> = metas.iter().map(|m| {
+                ObservedShard {
+                    rank: m.rank as usize,
+                    spec: m.spec.clone(),
+                    dtype: Some(m.dtype),
+                }
+            }).collect();
+            shards.sort_by_key(|s| s.rank);
+            entries.insert(key.clone(), shards);
+        }
+        ObservedSchema { entries }
+    }
+
+    /// Treat another expected schema as the observation (config-vs-config
+    /// diffs, e.g. an armed bug's layout against the clean one).
+    pub fn of_expected(s: &ExpectedSchema) -> ObservedSchema {
+        let mut entries = BTreeMap::new();
+        for (key, shards) in &s.entries {
+            entries.insert(key.clone(), shards.iter().map(|e| {
+                ObservedShard {
+                    rank: e.rank,
+                    spec: e.spec.clone(),
+                    dtype: Some(e.dtype),
+                }
+            }).collect());
+        }
+        ObservedSchema { entries }
+    }
+
+    /// Iteration count covered by the observation (max parsed iter + 1),
+    /// so the expected schema can be expanded to match a recording.
+    pub fn infer_iters(&self) -> u64 {
+        self.entries.keys()
+            .filter_map(|k| CanonId::parse(k))
+            .map(|id| id.iter + 1)
+            .max()
+            .unwrap_or(1)
+    }
+}
+
+fn fmt_spec(spec: &ShardSpec) -> String {
+    format!("{:?} local {:?}{}", spec.global_dims, spec.local_dims(),
+            if spec.partial { " (partial)" } else { "" })
+}
+
+/// dtype is only structurally determined (and therefore enforced) for
+/// the param / main-grad / loss snapshots.
+fn dtype_is_structural(key: &str) -> bool {
+    matches!(CanonId::parse(key).map(|id| id.kind),
+             Some(Kind::Param) | Some(Kind::MainGrad) | Some(Kind::Loss))
+}
+
+/// Diff an observed id set against the expected schema: missing / extra
+/// trace points, per-rank shard-spec mismatches, wrong structural dtypes.
+/// Findings come back in model computation order (via the diagnose DAG
+/// over the expected id set).
+pub fn diff_schema(expected: &ExpectedSchema, observed: &ObservedSchema)
+                   -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (key, exp) in &expected.entries {
+        let Some(obs) = observed.entries.get(key) else {
+            findings.push(Finding {
+                rule: "missing-trace-point",
+                rank: None,
+                subject: key.clone(),
+                detail: format!("expected from {} rank(s), never recorded",
+                                exp.len()),
+            });
+            continue;
+        };
+        let by_rank: BTreeMap<usize, &ObservedShard> =
+            obs.iter().map(|o| (o.rank, o)).collect();
+        for e in exp {
+            let Some(o) = by_rank.get(&e.rank) else {
+                findings.push(Finding {
+                    rule: "missing-trace-point",
+                    rank: Some(e.rank),
+                    subject: key.clone(),
+                    detail: "this rank never recorded the id".to_string(),
+                });
+                continue;
+            };
+            if o.spec != e.spec {
+                findings.push(Finding {
+                    rule: "shard-spec-mismatch",
+                    rank: Some(e.rank),
+                    subject: key.clone(),
+                    detail: format!("expected {}, recorded {}",
+                                    fmt_spec(&e.spec), fmt_spec(&o.spec)),
+                });
+            } else if dtype_is_structural(key) {
+                if let Some(dt) = o.dtype {
+                    if dt != e.dtype {
+                        findings.push(Finding {
+                            rule: "dtype-mismatch",
+                            rank: Some(e.rank),
+                            subject: key.clone(),
+                            detail: format!("expected {}, recorded {}",
+                                            e.dtype.name(), dt.name()),
+                        });
+                    }
+                }
+            }
+        }
+        for o in obs {
+            if !exp.iter().any(|e| e.rank == o.rank) {
+                findings.push(Finding {
+                    rule: "extra-trace-point",
+                    rank: Some(o.rank),
+                    subject: key.clone(),
+                    detail: "recorded by a rank the schema does not expect"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    for key in observed.entries.keys() {
+        if !expected.entries.contains_key(key) {
+            findings.push(Finding {
+                rule: "extra-trace-point",
+                rank: None,
+                subject: key.clone(),
+                detail: "recorded id is not in the expected schema"
+                    .to_string(),
+            });
+        }
+    }
+    // order by model computation order so upstream problems lead
+    let dag = expected.dag();
+    findings.sort_by_key(|f| {
+        (dag.index_of(&f.subject).unwrap_or(usize::MAX), f.subject.clone(),
+         f.rank)
+    });
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// plan rules
+
+fn missing_rule(site: &str) -> &'static str {
+    if site.starts_with("grad_sync:") {
+        "missing-grad-sync"
+    } else if site == "embtie" {
+        "missing-embtie-sync"
+    } else if site.starts_with("zero1:") {
+        "missing-zero1-broadcast"
+    } else if site.starts_with("colpar_dx:") {
+        "missing-colpar-reduce"
+    } else if site.starts_with("cp_kv_grad:") {
+        "missing-cp-grad-reduce"
+    } else {
+        "missing-collective"
+    }
+}
+
+fn by_site(ops: &[PlannedOp]) -> BTreeMap<&str, Vec<&PlannedOp>> {
+    let mut m: BTreeMap<&str, Vec<&PlannedOp>> = BTreeMap::new();
+    for op in ops {
+        m.entry(op.site.as_str()).or_default().push(op);
+    }
+    m
+}
+
+/// Diff the armed config's plan against the clean plan of the same
+/// layout, per rank and call site.
+pub fn diff_plan(clean: &CollectivePlan, observed: &CollectivePlan)
+                 -> Vec<Finding> {
+    let mut acc = FindingAcc::default();
+    for (cr, or) in clean.ranks.iter().zip(&observed.ranks) {
+        let c_by = by_site(&cr.ops);
+        let o_by = by_site(&or.ops);
+        for (site, cops) in &c_by {
+            let empty = Vec::new();
+            let oops = o_by.get(site).unwrap_or(&empty);
+            if oops.len() < cops.len() {
+                let c = cops[0];
+                acc.add(Finding {
+                    rule: missing_rule(site),
+                    rank: Some(cr.rank),
+                    subject: c.group.clone(),
+                    detail: format!(
+                        "site '{}': the topology expects {} {} op(s) on \
+                         group '{}' but the config issues {}",
+                        site, cops.len(), c.kind.name(), c.group,
+                        oops.len()),
+                });
+                continue;
+            }
+            if oops.len() > cops.len() {
+                let o = oops[cops.len()];
+                acc.add(Finding {
+                    rule: "extra-collective",
+                    rank: Some(or.rank),
+                    subject: o.group.clone(),
+                    detail: format!(
+                        "site '{}': {} op(s) on group '{}' where the \
+                         topology expects {}",
+                        site, oops.len(), o.group, cops.len()),
+                });
+                continue;
+            }
+            for (c, o) in cops.iter().zip(oops.iter()) {
+                if c.group != o.group {
+                    acc.add(Finding {
+                        rule: "wrong-group",
+                        rank: Some(or.rank),
+                        subject: o.group.clone(),
+                        detail: format!(
+                            "site '{}': {} runs on group '{}' but the \
+                             topology expects group '{}'",
+                            site, o.kind.name(), o.group, c.group),
+                    });
+                } else if c.post_scale != o.post_scale {
+                    acc.add(Finding {
+                        rule: "grad-reduce-rescale",
+                        rank: Some(or.rank),
+                        subject: o.group.clone(),
+                        detail: format!(
+                            "site '{}': reduced result is rescaled by {} \
+                             (expected {})",
+                            site, o.post_scale, c.post_scale),
+                    });
+                } else if c.kind != o.kind || c.op != o.op || c.prec != o.prec
+                    || c.elems != o.elems
+                {
+                    acc.add(Finding {
+                        rule: "collective-mismatch",
+                        rank: Some(or.rank),
+                        subject: o.group.clone(),
+                        detail: format!(
+                            "site '{}': {} of {} elems (expected {} of {})",
+                            site, o.kind.name(), o.elems, c.kind.name(),
+                            c.elems),
+                    });
+                }
+            }
+        }
+        for (site, oops) in &o_by {
+            if !c_by.contains_key(site) {
+                acc.add(Finding {
+                    rule: "extra-collective",
+                    rank: Some(or.rank),
+                    subject: oops[0].group.clone(),
+                    detail: format!(
+                        "site '{}': {} op(s) the topology does not expect",
+                        site, oops.len()),
+                });
+            }
+        }
+    }
+    acc.into_findings()
+}
+
+/// Structural checks on one plan: group participant sets, op-sequence
+/// consistency across members (length skew would deadlock a run;
+/// signature skew would silently mis-reduce), and send/recv pairing.
+pub fn check_plan(plan: &CollectivePlan) -> Vec<Finding> {
+    let mut acc = FindingAcc::default();
+
+    // group key -> member rank -> (me, declared sizes, op signatures)
+    type Sig = (OpKind, Option<crate::comm::RedOp>,
+                Option<crate::comm::RedPrec>, usize);
+    #[derive(Default)]
+    struct Member {
+        me: Vec<usize>,
+        sizes: Vec<usize>,
+        sigs: Vec<Sig>,
+    }
+    let mut groups: BTreeMap<&str, BTreeMap<usize, Member>> = BTreeMap::new();
+    let mut sends: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+    let mut recvs: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+    for r in &plan.ranks {
+        for op in &r.ops {
+            if op.group.starts_with("p2p:") {
+                let slot = match op.kind {
+                    OpKind::Send => sends.entry(op.group.as_str()),
+                    _ => recvs.entry(op.group.as_str()),
+                };
+                let (n, elems) = slot.or_insert((0, 0));
+                *n += 1;
+                *elems += op.elems;
+                continue;
+            }
+            let m = groups.entry(op.group.as_str()).or_default()
+                .entry(r.rank).or_default();
+            if !m.me.contains(&op.me) {
+                m.me.push(op.me);
+            }
+            if !m.sizes.contains(&op.size) {
+                m.sizes.push(op.size);
+            }
+            m.sigs.push((op.kind, op.op, op.prec, op.elems));
+        }
+    }
+
+    for (key, members) in &groups {
+        let mut sizes: Vec<usize> = members.values()
+            .flat_map(|m| m.sizes.iter().copied()).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        if sizes.len() != 1 {
+            acc.add(Finding {
+                rule: "participant-mismatch",
+                rank: None,
+                subject: key.to_string(),
+                detail: format!("ranks disagree on the group size: {sizes:?}"),
+            });
+            continue;
+        }
+        let size = sizes[0];
+        let mut mes: Vec<usize> = members.values()
+            .flat_map(|m| m.me.iter().copied()).collect();
+        mes.sort_unstable();
+        mes.dedup();
+        if members.len() != size || mes != (0..size).collect::<Vec<_>>() {
+            acc.add(Finding {
+                rule: "participant-mismatch",
+                rank: None,
+                subject: key.to_string(),
+                detail: format!(
+                    "{} of {} member position(s) issue ops (positions \
+                     {mes:?})",
+                    members.len(), size),
+            });
+            continue;
+        }
+        let mut lens: Vec<usize> =
+            members.values().map(|m| m.sigs.len()).collect();
+        lens.sort_unstable();
+        lens.dedup();
+        if lens.len() != 1 {
+            acc.add(Finding {
+                rule: "collective-order-skew",
+                rank: None,
+                subject: key.to_string(),
+                detail: format!(
+                    "members issue differing op counts {lens:?} on this \
+                     group — a run would deadlock"),
+            });
+            continue;
+        }
+        let first = members.values().next().expect("non-empty group");
+        for (rank, m) in members {
+            for (i, (a, b)) in first.sigs.iter().zip(&m.sigs).enumerate() {
+                if a != b {
+                    acc.add(Finding {
+                        rule: "collective-mismatch",
+                        rank: Some(*rank),
+                        subject: key.to_string(),
+                        detail: format!(
+                            "op #{i} on this group disagrees across members \
+                             ({:?} vs {:?})",
+                            a, b),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+
+    for (key, (n, elems)) in &sends {
+        match recvs.get(key) {
+            Some((rn, relems)) if rn == n && relems == elems => {}
+            Some((rn, _)) => acc.add(Finding {
+                rule: "p2p-mismatch",
+                rank: None,
+                subject: key.to_string(),
+                detail: format!("{n} send(s) vs {rn} recv(s), or payload \
+                                 sizes differ"),
+            }),
+            None => acc.add(Finding {
+                rule: "p2p-mismatch",
+                rank: None,
+                subject: key.to_string(),
+                detail: format!("{n} send(s) with no matching recv"),
+            }),
+        }
+    }
+    for (key, (n, _)) in &recvs {
+        if !sends.contains_key(key) {
+            acc.add(Finding {
+                rule: "p2p-mismatch",
+                rank: None,
+                subject: key.to_string(),
+                detail: format!("{n} recv(s) with no matching send"),
+            });
+        }
+    }
+    acc.into_findings()
+}
+
+/// All static rules over an (possibly bug-armed) analysis vs the clean
+/// analysis of the same layout.
+pub fn lint_analysis(clean: &Analysis, observed: &Analysis) -> Vec<Finding> {
+    let mut findings = diff_plan(&clean.plan, &observed.plan);
+    findings.extend(check_plan(&observed.plan));
+    findings.extend(diff_schema(&clean.schema,
+                                &ObservedSchema::of_expected(&observed.schema)));
+    findings
+}
+
+/// Deduplicating accumulator: repeated (rule, subject) pairs collapse
+/// into one finding with a repeat count in the detail (a missing tp sync
+/// fires once per rank and parameter otherwise).
+#[derive(Default)]
+struct FindingAcc {
+    order: Vec<(String, String)>,
+    seen: BTreeMap<(String, String), (Finding, usize)>,
+}
+
+impl FindingAcc {
+    fn add(&mut self, f: Finding) {
+        let key = (f.rule.to_string(), f.subject.clone());
+        if let Some((_, n)) = self.seen.get_mut(&key) {
+            *n += 1;
+        } else {
+            self.order.push(key.clone());
+            self.seen.insert(key, (f, 1));
+        }
+    }
+
+    fn into_findings(mut self) -> Vec<Finding> {
+        let mut out = Vec::with_capacity(self.order.len());
+        for key in &self.order {
+            let (mut f, n) = self.seen.remove(key).expect("keyed by order");
+            if n > 1 {
+                f.detail.push_str(&format!(" [×{n} across ranks/sites]"));
+            }
+            out.push(f);
+        }
+        out
+    }
+}

@@ -1,0 +1,58 @@
+//! Pre-run static analysis of instrumentation schemas and collective
+//! plans.
+//!
+//! Everything here is derived from `(ModelCfg, ParCfg)` alone — no
+//! training step, no executor, no artifacts. Two artifacts fall out of a
+//! config:
+//!
+//! * [`ExpectedSchema`] — the full canonical-id set a clean run records,
+//!   with the expected `ShardSpec` and dtype per `(iter, micro, rank)`.
+//! * [`CollectivePlan`] — the ordered per-rank collective choreography
+//!   (kind, group key, participants, payload, reduction op/precision).
+//!
+//! [`lint_config`] diffs an armed config against the clean plan/schema of
+//! the same layout and runs structural plan checks, statically flagging
+//! the members of the bug zoo whose misconfiguration is visible before
+//! the first step (`BugInfo::expect_static`). The `lint` CLI subcommand
+//! and `Session::preflight` are thin wrappers over this module.
+
+pub mod lint;
+pub mod plan;
+pub mod schema;
+
+pub use lint::{check_plan, diff_plan, diff_schema, findings_json,
+               lint_analysis, render_findings, Finding, ObservedSchema,
+               ObservedShard};
+pub use plan::{CollectivePlan, OpKind, PlannedOp, RankPlan};
+pub use schema::{ExpectedSchema, ExpectedShard};
+
+use anyhow::Result;
+
+use crate::bugs::BugSet;
+use crate::model::{ModelCfg, ParCfg};
+
+/// Expected schema + plan for one config.
+#[derive(Clone, Debug)]
+pub struct Analysis {
+    pub schema: ExpectedSchema,
+    pub plan: CollectivePlan,
+}
+
+/// Build the full static analysis of a config (validated first).
+pub fn analyze(m: &ModelCfg, p: &ParCfg, layers: usize, bugs: BugSet,
+               iters: u64) -> Result<Analysis> {
+    Ok(Analysis {
+        schema: ExpectedSchema::build(m, p, layers, bugs, iters)?,
+        plan: CollectivePlan::build(m, p, layers, bugs, iters)?,
+    })
+}
+
+/// Lint a (possibly bug-armed) config: diff it against the clean
+/// analysis of the same layout and run the structural plan checks.
+/// Empty result means the config is statically clean.
+pub fn lint_config(m: &ModelCfg, p: &ParCfg, layers: usize, bugs: BugSet,
+                   iters: u64) -> Result<Vec<Finding>> {
+    let observed = analyze(m, p, layers, bugs, iters)?;
+    let clean = analyze(m, p, layers, BugSet::none(), iters)?;
+    Ok(lint_analysis(&clean, &observed))
+}

@@ -1,0 +1,488 @@
+//! Expected collective plan, derived from `(ModelCfg, ParCfg)` alone.
+//!
+//! `CollectivePlan::build` walks every rank of the topology through the
+//! engine's training-iteration choreography — forward flush, backward
+//! flush, gradient finalization, optimizer step — and emits the ordered
+//! sequence of collective operations each rank would issue: kind, group
+//! key (minted through the same [`RankCtx`] group constructors the
+//! runtime uses, so keys match `comm`'s registry byte-for-byte),
+//! position/size in the group, reduction op + precision, payload element
+//! count, and a stable `site` label tying the op back to its purpose
+//! (`grad_sync:<param>`, `colpar_dx:mlp`, `embtie`, ...).
+//!
+//! Every conditional the engine applies to its communication — sp/cp/tp
+//! gating, size-1 skips, recompute replays, and the statically visible
+//! bug-zoo behaviors (wrong amax group, skipped grad syncs, ...) — is
+//! mirrored here, which is what lets `lint` diff an armed config's plan
+//! against the clean plan of the same layout and flag wrong-group /
+//! missing-collective / rescale bugs without executing a step.
+
+use anyhow::Result;
+
+use crate::bugs::{BugId, BugSet};
+use crate::comm::{Comm, RedOp, RedPrec, World};
+use crate::dist::{Coord, Group, RankCtx};
+use crate::model::params::{decls, GradSync, ParamDecl};
+use crate::model::{ModelCfg, ParCfg};
+use crate::ttrace::canonical::LayerMap;
+
+/// The kind of a planned communication op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    AllGather,
+    AllReduce,
+    ReduceScatter,
+    Broadcast,
+    Send,
+    Recv,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::AllGather => "all_gather",
+            OpKind::AllReduce => "all_reduce",
+            OpKind::ReduceScatter => "reduce_scatter",
+            OpKind::Broadcast => "broadcast",
+            OpKind::Send => "send",
+            OpKind::Recv => "recv",
+        }
+    }
+}
+
+/// One collective op a rank is expected to issue, in program order.
+#[derive(Clone, Debug)]
+pub struct PlannedOp {
+    pub kind: OpKind,
+    /// Group key as `comm` will see it (`tp@pp0dp0cp0`, `world`,
+    /// `p2p:0->1:act`, ...).
+    pub group: String,
+    /// This rank's position within the group.
+    pub me: usize,
+    /// Expected participant count of the group.
+    pub size: usize,
+    pub op: Option<RedOp>,
+    pub prec: Option<RedPrec>,
+    /// Payload element count handed to the op (the local input tensor).
+    pub elems: usize,
+    /// Post-reduction rescale the engine applies (1.0 = none) — nonzero
+    /// deviations are the statically visible form of rescale bugs.
+    pub post_scale: f32,
+    /// Stable label for the call site (used by lint to align plans).
+    pub site: String,
+}
+
+/// The ordered op sequence of one rank.
+#[derive(Clone, Debug)]
+pub struct RankPlan {
+    pub rank: usize,
+    pub coord: Coord,
+    pub ops: Vec<PlannedOp>,
+}
+
+/// Per-rank expected collective plans for the whole world.
+#[derive(Clone, Debug, Default)]
+pub struct CollectivePlan {
+    pub ranks: Vec<RankPlan>,
+}
+
+impl CollectivePlan {
+    /// Derive the plan for `iters` training iterations of `(m, p)` with
+    /// `bugs` armed (statically visible behaviors only).
+    pub fn build(m: &ModelCfg, p: &ParCfg, layers: usize, bugs: BugSet,
+                 iters: u64) -> Result<CollectivePlan> {
+        p.validate(m, layers)?;
+        let topo = p.topo;
+        let lmap = LayerMap::new(layers, topo.pp, topo.vpp)?;
+        let mut ranks = Vec::with_capacity(topo.world());
+        for rank in 0..topo.world() {
+            let ctx = RankCtx::new(topo, rank, Comm::new(World::new(1)));
+            let c = ctx.coord;
+            let pp_for_layers =
+                if bugs.on(BugId::B10PpStageDivision) && topo.pp > 1 {
+                    (c.pp + 1) % topo.pp
+                } else {
+                    c.pp
+                };
+            let chunks: Vec<Vec<usize>> = (0..topo.vpp)
+                .map(|v| lmap.chunk_layers(pp_for_layers, v))
+                .collect();
+            let holds_embedding = c.pp == 0;
+            let holds_lmhead = c.pp == topo.pp - 1;
+            let all_layers: Vec<usize> =
+                chunks.iter().flatten().copied().collect();
+            let table = decls(m, p, c, layers, &all_layers, holds_embedding,
+                              holds_lmhead);
+            let mut b = RankBuilder {
+                m,
+                p,
+                bugs,
+                ctx: &ctx,
+                ops: Vec::new(),
+            };
+            for _ in 0..iters {
+                b.train_iter(&chunks, &table, holds_embedding, holds_lmhead);
+            }
+            ranks.push(RankPlan { rank, coord: c, ops: b.ops });
+        }
+        Ok(CollectivePlan { ranks })
+    }
+
+    pub fn rank(&self, rank: usize) -> Option<&RankPlan> {
+        self.ranks.iter().find(|r| r.rank == rank)
+    }
+
+    /// Total op count across all ranks.
+    pub fn op_count(&self) -> usize {
+        self.ranks.iter().map(|r| r.ops.len()).sum()
+    }
+}
+
+/// Builds one rank's op sequence; methods mirror the engine's collective
+/// helpers one-for-one, including their no-op conditions.
+struct RankBuilder<'a> {
+    m: &'a ModelCfg,
+    p: &'a ParCfg,
+    bugs: BugSet,
+    ctx: &'a RankCtx,
+    ops: Vec<PlannedOp>,
+}
+
+impl RankBuilder<'_> {
+    // -- payload-size shorthands ------------------------------------------
+    fn t_cp(&self) -> usize {
+        self.m.s / self.p.topo.cp
+    }
+
+    fn t_sp(&self) -> usize {
+        if self.p.sp { self.t_cp() / self.p.topo.tp } else { self.t_cp() }
+    }
+
+    fn kv_local(&self) -> usize {
+        // one k (or v) head-shard: [b, heads/tp, t, head_dim]
+        self.m.b * (self.m.d / self.p.topo.tp)
+    }
+
+    // -- op emission -------------------------------------------------------
+    fn push(&mut self, kind: OpKind, g: &Group, op: Option<RedOp>,
+            prec: Option<RedPrec>, elems: usize, post_scale: f32,
+            site: &str) {
+        self.ops.push(PlannedOp {
+            kind,
+            group: g.key.clone(),
+            me: g.me,
+            size: g.size,
+            op,
+            prec,
+            elems,
+            post_scale,
+            site: site.to_string(),
+        });
+    }
+
+    /// `Engine::ar_*`: all-reduce with the size-1 early return.
+    fn ar(&mut self, g: &Group, op: RedOp, prec: RedPrec, elems: usize,
+          site: &str) {
+        if g.size > 1 {
+            self.push(OpKind::AllReduce, g, Some(op), Some(prec),
+                      elems, 1.0, site);
+        }
+    }
+
+    /// `Engine::sp_gather`: tp all-gather, only under sp with tp > 1.
+    fn sp_gather(&mut self, elems: usize, site: &str) {
+        if self.p.sp && self.p.topo.tp > 1 {
+            let g = self.ctx.tp_group();
+            self.push(OpKind::AllGather, &g, None, None, elems, 1.0, site);
+        }
+    }
+
+    /// `Engine::sp_scatter_grad`: tp reduce-scatter, only under sp with
+    /// tp > 1.
+    fn sp_scatter(&mut self, prec: RedPrec, elems: usize, site: &str) {
+        if self.p.sp && self.p.topo.tp > 1 {
+            let g = self.ctx.tp_group();
+            self.push(OpKind::ReduceScatter, &g, Some(RedOp::Sum), Some(prec),
+                      elems, 1.0, site);
+        }
+    }
+
+    /// `Engine::rowpar_reduce`: reduce a row-parallel partial over tp —
+    /// reduce-scatter under sp, all-reduce otherwise, nothing at tp=1.
+    fn rowpar(&mut self, elems: usize, site: &str) {
+        let g = self.ctx.tp_group();
+        if g.size == 1 {
+            return;
+        }
+        if self.p.sp {
+            self.push(OpKind::ReduceScatter, &g, Some(RedOp::Sum),
+                      Some(RedPrec::Bf16), elems, 1.0, site);
+        } else {
+            self.push(OpKind::AllReduce, &g, Some(RedOp::Sum),
+                      Some(RedPrec::Bf16), elems, 1.0, site);
+        }
+    }
+
+    /// `Engine::colpar_dx_reduce`: dx reduction of a column-parallel
+    /// linear. B11 (overlap misconfiguration) drops it entirely.
+    fn colpar_dx(&mut self, elems: usize, site: &str) {
+        if self.bugs.on(BugId::B11TpOverlapGrads) && self.p.overlap {
+            return;
+        }
+        if self.p.sp {
+            self.sp_scatter(RedPrec::Bf16, elems, site);
+        } else {
+            let g = self.ctx.tp_group();
+            self.ar(&g, RedOp::Sum, RedPrec::Bf16, elems, site);
+        }
+    }
+
+    /// `Engine::fp8_amax`: scalar max-reduce of an amax statistic — over
+    /// tp, or (B7) over the wrong (dp) group.
+    fn fp8_amax(&mut self, site: &str) {
+        let g = if self.bugs.on(BugId::B7Fp8WrongGroup) {
+            self.ctx.dp_group()
+        } else {
+            self.ctx.tp_group()
+        };
+        self.ar(&g, RedOp::Max, RedPrec::F32, 1, site);
+    }
+
+    fn p2p(&mut self, kind: OpKind, src: usize, dst: usize, tag: &str,
+           elems: usize) {
+        let g = Group {
+            key: format!("p2p:{src}->{dst}:{tag}"),
+            me: if kind == OpKind::Send { 0 } else { 1 },
+            size: 2,
+        };
+        self.push(kind, &g, None, None, elems, 1.0, &format!("p2p:{tag}"));
+    }
+
+    // -- per-phase choreography -------------------------------------------
+
+    /// Collectives of one transformer layer's forward pass (also replayed
+    /// by the backward flush under activation recomputation).
+    fn fwd_layer(&mut self) {
+        let (m, p) = (self.m, self.p);
+        let act = m.b * self.t_sp() * m.d;
+        self.sp_gather(act, "fwd:qkv_in_gather");
+        if p.fp8 {
+            self.fp8_amax("fp8_amax:qkv_x");
+            self.fp8_amax("fp8_amax:qkv_w");
+        }
+        if p.topo.cp > 1 {
+            let g = self.ctx.cp_group();
+            let kv = self.kv_local() * self.t_cp();
+            self.push(OpKind::AllGather, &g, None, None, kv, 1.0,
+                      "cp_kv_gather:k");
+            self.push(OpKind::AllGather, &g, None, None, kv, 1.0,
+                      "cp_kv_gather:v");
+        }
+        if p.fp8 {
+            self.fp8_amax("fp8_amax:proj_x");
+            self.fp8_amax("fp8_amax:proj_w");
+        }
+        self.rowpar(m.b * self.t_cp() * m.d, "rowpar:proj");
+        self.sp_gather(act, "fwd:mlp_in_gather");
+        if p.moe {
+            self.sp_gather(m.b * self.t_sp() * m.e, "fwd:combine_gather");
+        } else if p.fp8 {
+            self.fp8_amax("fp8_amax:mlp_x");
+            self.fp8_amax("fp8_amax:mlp_w1");
+            self.fp8_amax("fp8_amax:mlp_w2");
+        }
+        self.rowpar(m.b * self.t_cp() * m.d, "rowpar:mlp");
+    }
+
+    /// Collectives of one transformer layer's backward pass.
+    fn bwd_layer(&mut self) {
+        let (m, p) = (self.m, self.p);
+        if p.recompute {
+            // the tape holds no inner activations: the backward flush
+            // replays the layer forward (collectives and all) first
+            self.fwd_layer();
+        }
+        let act_sp = m.b * self.t_sp() * m.d;
+        let act_cp = m.b * self.t_cp() * m.d;
+        self.sp_gather(act_sp, "bwd:dmlp_gather");
+        if p.moe {
+            self.sp_scatter(RedPrec::F32, m.b * self.t_cp() * m.e,
+                            "bwd:dcombine_scatter");
+        } else if p.fp8 {
+            self.fp8_amax("fp8_amax:mlp_dy");
+        }
+        self.colpar_dx(act_cp, "colpar_dx:mlp");
+        self.sp_gather(act_sp, "bwd:dresid_gather");
+        if p.fp8 {
+            self.fp8_amax("fp8_amax:proj_dy");
+        }
+        if p.topo.cp > 1 && !self.bugs.on(BugId::B13CpAttnGrads) {
+            let g = self.ctx.cp_group();
+            let kv = self.kv_local() * m.s;
+            self.ar(&g, RedOp::Sum, RedPrec::Bf16, kv,
+                    "cp_kv_grad:k");
+            self.ar(&g, RedOp::Sum, RedPrec::Bf16, kv, "cp_kv_grad:v");
+        }
+        if p.fp8 {
+            self.fp8_amax("fp8_amax:qkv_dy");
+        }
+        self.colpar_dx(act_cp, "colpar_dx:qkv");
+    }
+
+    /// One full training iteration: forward flush, backward flush,
+    /// gradient finalization, optimizer step.
+    fn train_iter(&mut self, chunks: &[Vec<usize>], table: &[ParamDecl],
+                  holds_embedding: bool, holds_lmhead: bool) {
+        let (m, p) = (self.m, self.p);
+        let topo = p.topo;
+        let c = self.ctx.coord;
+        let last_chunk = topo.vpp * topo.pp - 1;
+        let edge = m.b * self.t_sp() * m.d;
+
+        // ---- forward flush ----
+        for (v, chunk) in chunks.iter().enumerate() {
+            for _mi in 0..p.n_micro {
+                let g = v * topo.pp + c.pp;
+                if g == 0 {
+                    // vocab-split embedding lookup leaves a tp partial
+                    self.rowpar(m.b * self.t_cp() * m.d, "embed_reduce");
+                } else {
+                    let prev_pp = (g - 1) % topo.pp;
+                    if prev_pp != c.pp {
+                        self.p2p(OpKind::Recv, self.ctx.pp_rank(prev_pp),
+                                 self.ctx.rank, "act", edge);
+                    }
+                }
+                for _ in chunk {
+                    self.fwd_layer();
+                }
+                if g == last_chunk {
+                    self.sp_gather(edge, "head:ln_gather");
+                    let row = m.b * self.t_cp();
+                    let tp = self.ctx.tp_group();
+                    self.ar(&tp, RedOp::Max, RedPrec::F32, row,
+                            "head:gmax");
+                    self.ar(&tp, RedOp::Sum, RedPrec::F32, row,
+                            "head:gsum");
+                    self.ar(&tp, RedOp::Sum, RedPrec::F32, row, "head:tsum");
+                    if topo.cp > 1 {
+                        let cpg = self.ctx.cp_group();
+                        self.ar(&cpg, RedOp::Sum, RedPrec::F32, 1,
+                                "head:loss");
+                    }
+                } else {
+                    let next_pp = (g + 1) % topo.pp;
+                    if next_pp != c.pp {
+                        self.p2p(OpKind::Send, self.ctx.rank,
+                                 self.ctx.pp_rank(next_pp), "act", edge);
+                    }
+                }
+            }
+        }
+
+        // ---- backward flush ----
+        for (v, chunk) in chunks.iter().enumerate().rev() {
+            for _mi in (0..p.n_micro).rev() {
+                let g = v * topo.pp + c.pp;
+                if g == last_chunk {
+                    if p.sp {
+                        self.sp_scatter(RedPrec::Bf16,
+                                        m.b * self.t_cp() * m.d,
+                                        "head:dx_reduce");
+                    } else {
+                        let tp = self.ctx.tp_group();
+                        self.ar(&tp, RedOp::Sum, RedPrec::Bf16,
+                                m.b * self.t_cp() * m.d, "head:dx_reduce");
+                    }
+                } else {
+                    let next_pp = (g + 1) % topo.pp;
+                    if next_pp != c.pp {
+                        self.p2p(OpKind::Recv, self.ctx.pp_rank(next_pp),
+                                 self.ctx.rank, "grad", edge);
+                    }
+                }
+                for _ in chunk.iter().rev() {
+                    self.bwd_layer();
+                }
+                if g == 0 {
+                    self.sp_gather(edge, "embed:dx_gather");
+                } else {
+                    let prev_pp = (g - 1) % topo.pp;
+                    if prev_pp != c.pp {
+                        self.p2p(OpKind::Send, self.ctx.rank,
+                                 self.ctx.pp_rank(prev_pp), "grad", edge);
+                    }
+                }
+            }
+        }
+
+        // ---- gradient finalization ----
+        let tpg = self.ctx.tp_group();
+        if tpg.size > 1 {
+            for d in table {
+                if d.sync != GradSync::ReplicatedSeqSharded {
+                    continue;
+                }
+                let is_ln = d.name.contains("layernorm")
+                    || d.name.contains("linear_proj.bias");
+                let is_router = d.name.contains("router");
+                if (self.bugs.on(BugId::B12SpLnSync) && is_ln)
+                    || (self.bugs.on(BugId::B6SpRouterSync) && is_router)
+                {
+                    continue;
+                }
+                let post = if self.bugs.on(BugId::B14TpCpLnGrads) && is_ln
+                    && topo.cp > 1
+                {
+                    1.0 / tpg.size as f32
+                } else {
+                    1.0
+                };
+                let elems: usize = d.spec.local_dims().iter().product();
+                self.push(OpKind::AllReduce, &tpg, Some(RedOp::Sum),
+                          Some(RedPrec::F32), elems, post,
+                          &format!("grad_sync:{}", d.name));
+            }
+        }
+        if topo.pp > 1 && (holds_embedding || holds_lmhead)
+            && !(self.bugs.on(BugId::B5ZeroUntiedEmbedding) && p.zero1)
+        {
+            if let Some(emb) = table.iter()
+                .find(|d| d.name == "embedding.word_embeddings.weight")
+            {
+                let g = Group {
+                    key: format!("embtie@dp{}tp{}cp{}", c.dp, c.tp, c.cp),
+                    me: if holds_embedding { 0 } else { 1 },
+                    size: 2,
+                };
+                let elems: usize = emb.spec.local_dims().iter().product();
+                self.push(OpKind::AllReduce, &g, Some(RedOp::Sum),
+                          Some(RedPrec::F32), elems, 1.0, "embtie");
+            }
+        }
+        let dpcp = self.ctx.dpcp_group();
+        if dpcp.size > 1 {
+            for d in table {
+                let elems: usize = d.spec.local_dims().iter().product();
+                self.push(OpKind::AllReduce, &dpcp, Some(RedOp::Sum),
+                          Some(RedPrec::F32), elems, 1.0,
+                          &format!("dpcp:{}", d.name));
+            }
+        }
+        // global grad-norm: issued unconditionally, even at world size 1
+        let w = self.ctx.world_group();
+        self.push(OpKind::AllReduce, &w, Some(RedOp::Sum), Some(RedPrec::F32),
+                  1, 1.0, "grad_norm");
+
+        // ---- optimizer step (ZeRO-1 parameter broadcast) ----
+        if p.zero1 && dpcp.size > 1
+            && !self.bugs.on(BugId::B9ZeroUpdateFailure)
+        {
+            for d in table {
+                let elems: usize = d.spec.local_dims().iter().product();
+                self.push(OpKind::Broadcast, &dpcp, None, None, elems,
+                          1.0, &format!("zero1:{}", d.name));
+            }
+        }
+    }
+}

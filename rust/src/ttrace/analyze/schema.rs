@@ -1,0 +1,349 @@
+//! Expected trace schema, derived from `(ModelCfg, ParCfg)` alone.
+//!
+//! `ExpectedSchema::build` replays the engine's *instrumentation plan*
+//! without executing anything: for every rank of the topology it derives
+//! which canonical ids (`i{iter}/m{micro}/{kind}/{module}`) the run will
+//! record and with which [`ShardSpec`] — embedding/layer/head activations
+//! per (chunk, microbatch), activation gradients on the backward flush,
+//! per-microbatch parameter gradients (including the tp-duplicate
+//! suppression rule of `acc_grad`), and the per-iteration
+//! main-grad/param snapshots. The spec constructors below are the exact
+//! config-only twins of the engine's `spec_sp`/`spec_cp`/`spec_qkv`
+//! helpers (both go through [`seq::seq_spec`], so specs compare
+//! bit-for-bit with recorded ones), and the parameter table is the same
+//! [`decls`] the engine builds its `ParamSet` from.
+//!
+//! The schema is what `lint` diffs a recorded `.ttrc` store (or a second
+//! config) against, and it feeds the diagnose DAG builder
+//! ([`ExpectedSchema::dag`]) so static findings can be ordered by model
+//! computation order — the config-driven entry point the diagnose pass
+//! previously only had for recorded id sets.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::bugs::{BugId, BugSet};
+use crate::dist::Coord;
+use crate::model::params::{decls, GradSync};
+use crate::model::seq;
+use crate::model::{ModelCfg, ParCfg};
+use crate::tensor::DType;
+use crate::ttrace::canonical::{names, LayerMap};
+use crate::ttrace::diagnose::Dag;
+use crate::ttrace::hooks::{CanonId, Kind};
+use crate::ttrace::shard::ShardSpec;
+
+/// One expected shard of a canonical id: who records it and how it maps
+/// into the global tensor. `dtype` is the tensor dtype the engine records
+/// (structurally fixed for `param`/`main_grad`/`loss`; best-effort bf16
+/// for activations — the lint layer only enforces the structural ones).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExpectedShard {
+    pub rank: usize,
+    pub spec: ShardSpec,
+    pub dtype: DType,
+}
+
+/// The full expected trace schema of a configuration: canonical id →
+/// expected shards, one per recording rank (ranks ascending).
+#[derive(Clone, Debug, Default)]
+pub struct ExpectedSchema {
+    pub entries: BTreeMap<String, Vec<ExpectedShard>>,
+}
+
+/// `[b, s, d]` activation domain: cp stripes on the sequence dim, plus the
+/// sp sub-range when sequence parallelism is on (engine `spec_sp`).
+pub(crate) fn spec_sp(m: &ModelCfg, p: &ParCfg, c: Coord) -> ShardSpec {
+    let topo = p.topo;
+    seq::seq_spec(&[m.b, m.s, m.d], 1, c.cp, topo.cp,
+                  if p.sp { c.tp } else { 0 },
+                  if p.sp { topo.tp } else { 1 })
+}
+
+/// `[b, s, width]` domain: cp stripes only, optionally tp-split on the
+/// feature dim (engine `spec_cp`).
+pub(crate) fn spec_cp(m: &ModelCfg, p: &ParCfg, c: Coord, width: usize,
+                      tp_split: bool) -> ShardSpec {
+    let topo = p.topo;
+    let spec = seq::seq_spec(&[m.b, m.s, width], 1, c.cp, topo.cp, 0, 1);
+    if tp_split && topo.tp > 1 {
+        spec.and_split(2, c.tp, topo.tp)
+    } else {
+        spec
+    }
+}
+
+/// `[b, s, 3d]` fused-qkv domain: cp stripes plus the interleaved q/k/v
+/// tp split (engine `spec_qkv`).
+pub(crate) fn spec_qkv(m: &ModelCfg, p: &ParCfg, c: Coord) -> ShardSpec {
+    let topo = p.topo;
+    let spec = seq::seq_spec(&[m.b, m.s, 3 * m.d], 1, c.cp, topo.cp, 0, 1);
+    if topo.tp > 1 {
+        spec.and_qkv_split(2, m.d, c.tp, topo.tp)
+    } else {
+        spec
+    }
+}
+
+/// `[b, s, e]` router-combine domain (engine `spec_router`).
+pub(crate) fn spec_router(m: &ModelCfg, p: &ParCfg, c: Coord) -> ShardSpec {
+    let topo = p.topo;
+    seq::seq_spec(&[m.b, m.s, m.e], 1, c.cp, topo.cp,
+                  if p.sp { c.tp } else { 0 },
+                  if p.sp { topo.tp } else { 1 })
+}
+
+/// Whether a rank records a `param_grad` for a declaration with grad-sync
+/// class `sync`, and if so whether the shard carries partial sums — the
+/// static twin of `acc_grad`'s tp-duplicate suppression: a replicated
+/// grad that is partial (cp stripes, or sequence-sharded over tp) is only
+/// recorded by the tp=0 rank. `None` means suppressed.
+pub(crate) fn param_grad_disposition(p: &ParCfg, c: Coord, sync: GradSync)
+                                     -> Option<bool> {
+    let topo = p.topo;
+    let seq_sharded_over_tp =
+        p.sp && topo.tp > 1 && sync == GradSync::ReplicatedSeqSharded;
+    let partial = topo.cp > 1 || seq_sharded_over_tp;
+    let tp_duplicates =
+        topo.tp > 1 && sync != GradSync::Sharded && !seq_sharded_over_tp;
+    if partial && tp_duplicates && c.tp != 0 {
+        None
+    } else {
+        Some(partial)
+    }
+}
+
+impl ExpectedSchema {
+    /// Derive the schema for `iters` training iterations of `(m, p)`.
+    /// `bugs` conditions the statically visible bug behaviors (today:
+    /// B10's rotated stage division); dynamic-only bugs leave the schema
+    /// untouched by construction.
+    pub fn build(m: &ModelCfg, p: &ParCfg, layers: usize, bugs: BugSet,
+                 iters: u64) -> Result<ExpectedSchema> {
+        p.validate(m, layers)?;
+        let topo = p.topo;
+        let lmap = LayerMap::new(layers, topo.pp, topo.vpp)?;
+        let last_chunk = topo.vpp * topo.pp - 1;
+        let mut entries: BTreeMap<String, Vec<ExpectedShard>> = BTreeMap::new();
+
+        for rank in 0..topo.world() {
+            let c = topo.coord_of(rank);
+            let mut push = |id: CanonId, spec: ShardSpec, dtype: DType| {
+                entries.entry(id.key()).or_default().push(ExpectedShard {
+                    rank,
+                    spec,
+                    dtype,
+                });
+            };
+            // B10 hands each stage its neighbor's layer chunk at init.
+            let pp_for_layers =
+                if bugs.on(BugId::B10PpStageDivision) && topo.pp > 1 {
+                    (c.pp + 1) % topo.pp
+                } else {
+                    c.pp
+                };
+            let chunks: Vec<Vec<usize>> = (0..topo.vpp)
+                .map(|v| lmap.chunk_layers(pp_for_layers, v))
+                .collect();
+            let holds_embedding = c.pp == 0;
+            let holds_lmhead = c.pp == topo.pp - 1;
+            let all_layers: Vec<usize> =
+                chunks.iter().flatten().copied().collect();
+            let table = decls(m, p, c, layers, &all_layers, holds_embedding,
+                              holds_lmhead);
+            let emb = table.iter()
+                .find(|d| d.name == "embedding.word_embeddings.weight");
+
+            for iter in 0..iters {
+                for (v, chunk) in chunks.iter().enumerate() {
+                    for mi in 0..p.n_micro {
+                        let micro = (mi * topo.dp + c.dp) as u32;
+                        let g = v * topo.pp + c.pp;
+
+                        // ---- forward flush ----
+                        if g == 0 {
+                            push(CanonId::new(iter, micro, Kind::Act,
+                                              names::embedding()),
+                                 spec_sp(m, p, c), DType::Bf16);
+                        }
+                        for &l in chunk {
+                            for (module, spec) in [
+                                (names::input_ln(l), spec_sp(m, p, c)),
+                                (names::qkv(l), spec_qkv(m, p, c)),
+                                (names::core_attn(l),
+                                 spec_cp(m, p, c, m.d, true)),
+                                (names::proj(l), spec_sp(m, p, c)),
+                                (names::pre_mlp_ln(l), spec_sp(m, p, c)),
+                            ] {
+                                push(CanonId::new(iter, micro, Kind::Act,
+                                                  module),
+                                     spec, DType::Bf16);
+                            }
+                            if p.moe {
+                                push(CanonId::new(iter, micro, Kind::Act,
+                                                  names::router(l)),
+                                     spec_router(m, p, c), DType::Bf16);
+                            }
+                            push(CanonId::new(iter, micro, Kind::Act,
+                                              names::mlp(l)),
+                                 spec_sp(m, p, c), DType::Bf16);
+                            push(CanonId::new(iter, micro, Kind::Act,
+                                              names::layer_out(l)),
+                                 spec_sp(m, p, c), DType::Bf16);
+                        }
+                        if g == last_chunk {
+                            push(CanonId::new(iter, micro, Kind::Act,
+                                              names::final_ln()),
+                                 spec_sp(m, p, c), DType::Bf16);
+                            push(CanonId::new(iter, micro, Kind::Act,
+                                              names::output_layer()),
+                                 spec_cp(m, p, c, m.v, true), DType::Bf16);
+                            push(CanonId::new(iter, micro, Kind::Loss, "loss"),
+                                 ShardSpec::full(&[]), DType::F32);
+                        }
+
+                        // ---- backward flush ----
+                        if g == last_chunk {
+                            // lmhead grad accumulates into the tied
+                            // embedding table, recorded under the lmhead
+                            // alias
+                            if let Some(emb) = emb {
+                                if let Some(partial) =
+                                    param_grad_disposition(p, c, emb.sync)
+                                {
+                                    let spec = if partial {
+                                        emb.spec.clone().as_partial()
+                                    } else {
+                                        emb.spec.clone()
+                                    };
+                                    push(CanonId::new(iter, micro,
+                                                      Kind::ParamGrad,
+                                                      "output_layer.weight"),
+                                         spec, DType::Bf16);
+                                }
+                            }
+                            push(CanonId::new(iter, micro, Kind::ActGrad,
+                                              names::output_layer()),
+                                 spec_sp(m, p, c), DType::Bf16);
+                            push(CanonId::new(iter, micro, Kind::ActGrad,
+                                              names::final_ln()),
+                                 spec_sp(m, p, c), DType::Bf16);
+                            for d in table.iter()
+                                .filter(|d| d.name.starts_with("final_layernorm."))
+                            {
+                                if let Some(partial) =
+                                    param_grad_disposition(p, c, d.sync)
+                                {
+                                    let spec = if partial {
+                                        d.spec.clone().as_partial()
+                                    } else {
+                                        d.spec.clone()
+                                    };
+                                    push(CanonId::new(iter, micro,
+                                                      Kind::ParamGrad, d.name.as_str()),
+                                         spec, DType::Bf16);
+                                }
+                            }
+                        }
+                        for &l in chunk.iter().rev() {
+                            if p.moe {
+                                push(CanonId::new(iter, micro, Kind::ActGrad,
+                                                  names::router(l)),
+                                     spec_sp(m, p, c), DType::Bf16);
+                            }
+                            for (module, spec) in [
+                                (names::mlp(l), spec_sp(m, p, c)),
+                                (names::pre_mlp_ln(l), spec_sp(m, p, c)),
+                                (names::proj(l), spec_cp(m, p, c, m.d, true)),
+                                (names::core_attn(l), spec_qkv(m, p, c)),
+                                (names::qkv(l), spec_sp(m, p, c)),
+                                (names::input_ln(l), spec_sp(m, p, c)),
+                            ] {
+                                push(CanonId::new(iter, micro, Kind::ActGrad,
+                                                  module),
+                                     spec, DType::Bf16);
+                            }
+                            let prefix = format!("layers.{l}.");
+                            for d in table.iter()
+                                .filter(|d| d.name.starts_with(&prefix))
+                            {
+                                if let Some(partial) =
+                                    param_grad_disposition(p, c, d.sync)
+                                {
+                                    let spec = if partial {
+                                        d.spec.clone().as_partial()
+                                    } else {
+                                        d.spec.clone()
+                                    };
+                                    push(CanonId::new(iter, micro,
+                                                      Kind::ParamGrad, d.name.as_str()),
+                                         spec, DType::Bf16);
+                                }
+                            }
+                        }
+                        if g == 0 {
+                            push(CanonId::new(iter, micro, Kind::ActGrad,
+                                              names::embedding()),
+                                 spec_cp(m, p, c, m.d, false), DType::Bf16);
+                            if let Some(emb) = emb {
+                                if let Some(partial) =
+                                    param_grad_disposition(p, c, emb.sync)
+                                {
+                                    let spec = if partial {
+                                        emb.spec.clone().as_partial()
+                                    } else {
+                                        emb.spec.clone()
+                                    };
+                                    push(CanonId::new(iter, micro,
+                                                      Kind::ParamGrad,
+                                                      emb.name.as_str()),
+                                         spec, DType::Bf16);
+                                }
+                            }
+                        }
+                    }
+                }
+                // ---- per-iteration snapshots (post-finalize / post-step):
+                // every held parameter, microbatch tag 0, full (synced) spec
+                for d in &table {
+                    push(CanonId::new(iter, 0, Kind::MainGrad, d.name.as_str()),
+                         d.spec.clone(), DType::F32);
+                    push(CanonId::new(iter, 0, Kind::Param, d.name.as_str()),
+                         d.spec.clone(), DType::Bf16);
+                }
+            }
+        }
+        Ok(ExpectedSchema { entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All expected canonical ids, in key order.
+    pub fn keys(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn shards(&self, key: &str) -> Option<&[ExpectedShard]> {
+        self.entries.get(key).map(|v| v.as_slice())
+    }
+
+    /// Total expected shard count across all ids.
+    pub fn shard_count(&self) -> usize {
+        self.entries.values().map(|v| v.len()).sum()
+    }
+
+    /// The diagnose dependency DAG over the expected id set — the same
+    /// builder diagnosis runs on recorded traces, here fed from configs
+    /// alone. Lint uses it to order schema findings by model computation
+    /// order.
+    pub fn dag(&self) -> Dag {
+        Dag::build(&self.keys())
+    }
+}

@@ -51,9 +51,11 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, Result};
 
+use crate::bugs::BugSet;
 use crate::dist::Topology;
-use crate::model::ParCfg;
+use crate::model::{ModelCfg, ParCfg};
 
+use super::analyze::{lint_config, Finding};
 use super::checker::{check_traces, CheckCfg};
 use super::collector::{Collector, Mode, Trace};
 use super::diagnose::{diagnose, RunMeta};
@@ -370,6 +372,26 @@ impl Session {
         &self.meta
     }
 
+    /// Pre-run static lint of this session's configured layout against
+    /// `m`/`layers`: derive the expected trace schema and collective plan
+    /// from the metadata alone and diff them against a clean layout — no
+    /// training step runs. Call right after `build()` and before the
+    /// first iteration; an empty result means the layout is statically
+    /// consistent. (A trainer that wants to fail fast can
+    /// `assert!(session.preflight(&m, layers)?.is_empty())`.)
+    pub fn preflight(&self, m: &ModelCfg, layers: usize)
+                     -> Result<Vec<Finding>> {
+        let mut p = ParCfg::single();
+        p.topo = self.meta.topo;
+        p.sp = self.meta.sp;
+        p.fp8 = self.meta.fp8;
+        p.moe = self.meta.moe;
+        p.zero1 = self.meta.zero1;
+        p.overlap = self.meta.overlap;
+        p.n_micro = self.meta.n_micro;
+        lint_config(m, &p, layers, BugSet::none(), 1)
+    }
+
     /// Attach (or replace) the reference after the run — for workflows
     /// where the reference trace only exists once both runs finished.
     pub fn attach_reference(&mut self, reference: Reference) {
@@ -630,6 +652,21 @@ mod tests {
         assert_eq!(cfg.floor, 2.0);
         assert_eq!(cfg.eps, 0.01);
         assert_eq!(cfg.lr, 0.5);
+    }
+
+    #[test]
+    fn preflight_is_clean_for_consistent_layouts() {
+        use crate::model::TINY;
+        let session = Session::builder().build();
+        let findings = session.preflight(&TINY, 2).unwrap();
+        assert!(findings.is_empty(), "{findings:?}");
+
+        let mut p = ParCfg::single();
+        p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+        p.sp = true;
+        let session = Session::builder().parallelism(&p).build();
+        let findings = session.preflight(&TINY, 2).unwrap();
+        assert!(findings.is_empty(), "{findings:?}");
     }
 
     #[test]

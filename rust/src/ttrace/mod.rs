@@ -4,12 +4,15 @@
 //! the `.ttrc` binary trace store (`store`) that decouples collection from
 //! checking so reference and candidate can come from separate processes,
 //! and the dependency-aware diagnosis layer (`diagnose`) that turns a
-//! failing check into a module/phase/dimension verdict.
+//! failing check into a module/phase/dimension verdict. The `analyze`
+//! module lints all of this statically — expected schema and collective
+//! plan from the config alone, before any step runs.
 //!
 //! External frameworks integrate through [`api`] — the stable
 //! `Session`/`Tracer`/`Report` facade (re-exported by `ttrace::prelude`)
 //! — rather than against these internals directly.
 
+pub mod analyze;
 pub mod annot;
 pub mod api;
 pub mod canonical;
@@ -25,6 +28,7 @@ pub mod shard;
 pub mod store;
 pub mod threshold;
 
+pub use analyze::{lint_config, CollectivePlan, ExpectedSchema, Finding};
 pub use api::{Reference, Report, Session, SessionBuilder, Sink, Tolerance,
               TraceMode, Tracer};
 pub use checker::{check_traces, CheckCfg, CheckOutcome};

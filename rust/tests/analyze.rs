@@ -1,0 +1,239 @@
+//! `ttrace::analyze` against the acceptance bar: (a) `lint_config` must
+//! statically flag exactly the Table-1 bugs whose misconfiguration is
+//! visible before the first step (`BugInfo::expect_static`), naming the
+//! canonical id or group key, with zero findings on every clean layout;
+//! (b) the expected trace schema derived from the config alone must agree
+//! *exactly* (id set, ranks, shard specs) with what a real 1-iteration
+//! run records, including the degenerate layouts (single device, one
+//! microbatch, pp=1); (c) injected instrumentation errors — a dropped
+//! trace point, a wrong ShardSpec — must be flagged by the schema diff.
+
+use ttrace::bugs::table1::bug_config;
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::GenData;
+use ttrace::dist::Topology;
+use ttrace::model::{run_training, Engine, ParCfg, TINY};
+use ttrace::prelude::Session;
+use ttrace::runtime::Executor;
+use ttrace::ttrace::analyze::{diff_schema, lint_config, ExpectedSchema,
+                              ObservedSchema};
+use ttrace::ttrace::canonical::names;
+use ttrace::ttrace::hooks::{CanonId, Kind};
+use ttrace::ttrace::shard::ShardSpec;
+
+fn par(dp: usize, tp: usize, pp: usize, cp: usize, vpp: usize) -> ParCfg {
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(dp, tp, pp, cp, vpp).unwrap();
+    p
+}
+
+/// The clean layout matrix: every feature dimension the lint rules touch,
+/// armed with no bug. Zero findings on all of them.
+fn clean_matrix() -> Vec<(ParCfg, usize)> {
+    let mut cases = vec![
+        (ParCfg::single(), 2),
+        (par(1, 2, 1, 1, 1), 2),
+        (par(1, 1, 1, 2, 1), 2),
+        (par(2, 1, 1, 1, 1), 2),
+        (par(1, 1, 2, 1, 1), 2),
+        (par(1, 1, 2, 1, 2), 4),
+    ];
+    let mut p = ParCfg::single();
+    p.n_micro = 2;
+    cases.push((p, 2));
+    let mut p = par(1, 2, 1, 1, 1);
+    p.sp = true;
+    cases.push((p.clone(), 2));
+    p.moe = true; // sp+moe: the clean cousin of B6
+    cases.push((p, 2));
+    let mut p = par(2, 2, 1, 1, 1);
+    p.n_micro = 2;
+    cases.push((p, 2));
+    let mut p = par(1, 2, 1, 1, 1);
+    p.fp8 = true; // clean cousin of B7/B8
+    cases.push((p, 2));
+    let mut p = par(2, 1, 1, 1, 1);
+    p.zero1 = true; // clean cousin of B9
+    cases.push((p, 2));
+    let mut p = par(1, 2, 1, 1, 1);
+    p.recompute = true;
+    cases.push((p, 2));
+    let mut p = par(1, 2, 1, 2, 1);
+    p.sp = true; // clean cousin of B14
+    cases.push((p, 2));
+    cases
+}
+
+#[test]
+fn clean_configs_lint_clean() {
+    for (p, layers) in clean_matrix() {
+        let findings = lint_config(&TINY, &p, layers, BugSet::none(), 1)
+            .unwrap();
+        assert!(findings.is_empty(), "{} (sp {}, fp8 {}, moe {}, zero1 {}) \
+                 should lint clean: {findings:#?}",
+                p.topo.describe(), p.sp, p.fp8, p.moe, p.zero1);
+    }
+    // multi-iteration schemas stay clean too
+    let findings = lint_config(&TINY, &par(1, 2, 1, 1, 1), 2,
+                               BugSet::none(), 3).unwrap();
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn lint_flags_exactly_the_statically_visible_bugs() {
+    for bug in BugId::all() {
+        let info = bug.info();
+        let p = bug_config(bug);
+        let findings = lint_config(&TINY, &p, 2, BugSet::one(bug), 1)
+            .unwrap();
+        if info.expect_static {
+            assert!(!findings.is_empty(),
+                    "bug {} is statically visible but lints clean",
+                    info.number);
+            for f in &findings {
+                assert!(!f.subject.is_empty(),
+                        "bug {}: finding without a subject: {f:?}",
+                        info.number);
+            }
+        } else {
+            assert!(findings.is_empty(),
+                    "bug {} is dynamic-only but lint found {findings:#?}",
+                    info.number);
+        }
+    }
+}
+
+#[test]
+fn lint_names_the_offending_group_or_id() {
+    let hit = |bug: BugId, rule: &str, subject_prefix: &str| {
+        let p = bug_config(bug);
+        let findings = lint_config(&TINY, &p, 2, BugSet::one(bug), 1)
+            .unwrap();
+        assert!(findings.iter().any(|f| f.rule == rule
+                                    && f.subject.starts_with(subject_prefix)),
+                "bug {}: expected a '{rule}' finding on '{subject_prefix}*', \
+                 got {findings:#?}",
+                bug.info().number);
+    };
+    // B5: embedding/lm-head tie sync dropped under ZeRO-1
+    hit(BugId::B5ZeroUntiedEmbedding, "missing-embtie-sync", "embtie@");
+    // B6: router weights never synced across the sp region
+    hit(BugId::B6SpRouterSync, "missing-grad-sync", "tp@");
+    // B7: fp8 amax reduced over the dp group instead of tp
+    hit(BugId::B7Fp8WrongGroup, "wrong-group", "dp@");
+    // B9: updated params never re-broadcast from the ZeRO-1 owner
+    hit(BugId::B9ZeroUpdateFailure, "missing-zero1-broadcast", "dpcp@");
+    // B11: bwd input-grad reduction skipped when overlap is on
+    hit(BugId::B11TpOverlapGrads, "missing-colpar-reduce", "tp@");
+    // B12: layernorm grads never summed over the sp region
+    hit(BugId::B12SpLnSync, "missing-grad-sync", "tp@");
+    // B13: attention k/v grads never reduced over cp
+    hit(BugId::B13CpAttnGrads, "missing-cp-grad-reduce", "cp@");
+    // B14: ln grad sync rescaled by 1/tp when cp is on
+    hit(BugId::B14TpCpLnGrads, "grad-reduce-rescale", "tp@");
+
+    // B10: stages load each other's layer chunks — the schema diff names
+    // the displaced layer ids
+    let p = bug_config(BugId::B10PpStageDivision);
+    let findings = lint_config(&TINY, &p, 2,
+                               BugSet::one(BugId::B10PpStageDivision), 1)
+        .unwrap();
+    assert!(findings.iter().any(|f| {
+        (f.rule == "missing-trace-point" || f.rule == "extra-trace-point")
+            && f.subject.contains("layers.")
+    }), "{findings:#?}");
+}
+
+/// The tentpole's exactness bar: the schema derived from `(ModelCfg,
+/// ParCfg)` alone must agree with a real recorded run — same canonical
+/// ids, same ranks, bit-identical `ShardSpec`s — on the degenerate
+/// layouts (single device, pp=1, one microbatch) and each parallel
+/// dimension in isolation.
+#[test]
+fn expected_schema_matches_recorded_runs_exactly() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let mut cases = vec![
+        (ParCfg::single(), 2usize),
+        (par(1, 2, 1, 1, 1), 2),
+        (par(1, 1, 1, 2, 1), 2),
+        (par(2, 1, 1, 1, 1), 2),
+        (par(1, 1, 2, 1, 1), 2),
+        (par(1, 1, 2, 1, 2), 4),
+    ];
+    let mut p = ParCfg::single();
+    p.n_micro = 2;
+    cases.push((p, 2));
+    let mut p = par(1, 2, 1, 1, 1);
+    p.sp = true;
+    cases.push((p, 2));
+
+    for (p, layers) in cases {
+        let expected = ExpectedSchema::build(&TINY, &p, layers,
+                                             BugSet::none(), 1).unwrap();
+        let session = Session::builder().parallelism(&p).build();
+        let engine = Engine::new(TINY, p.clone(), layers, &exec,
+                                 BugSet::none()).unwrap();
+        run_training(&engine, &GenData, session.hooks(), 1);
+        let trace = session.finish().unwrap().trace
+            .expect("memory sink keeps the trace");
+        let observed = ObservedSchema::of_trace(&trace);
+
+        let desc = p.topo.describe();
+        let ekeys = expected.keys();
+        let okeys: Vec<String> = observed.entries.keys().cloned().collect();
+        assert_eq!(ekeys, okeys, "id set on {desc} (micro {})", p.n_micro);
+        for (key, exp) in &expected.entries {
+            let obs = &observed.entries[key];
+            assert_eq!(exp.len(), obs.len(),
+                       "shard count for {key} on {desc}");
+            for (e, o) in exp.iter().zip(obs) {
+                assert_eq!(e.rank, o.rank, "rank for {key} on {desc}");
+                assert_eq!(e.spec, o.spec,
+                           "shard spec for {key} rank {} on {desc}", e.rank);
+            }
+        }
+    }
+}
+
+#[test]
+fn schema_diff_flags_injected_instrumentation_errors() {
+    let p = par(1, 2, 1, 1, 1);
+    let expected = ExpectedSchema::build(&TINY, &p, 2, BugSet::none(), 1)
+        .unwrap();
+    let mut observed = ObservedSchema::of_expected(&expected);
+    assert!(diff_schema(&expected, &observed).is_empty(),
+            "the schema must agree with itself");
+
+    // 1. a dropped trace point (an integration that forgot one hook)
+    let dropped = CanonId::new(0, 0, Kind::Act, names::mlp(0)).key();
+    assert!(observed.entries.remove(&dropped).is_some(),
+            "{dropped} is in the schema");
+    // 2. a mis-sharded trace point (recorded full instead of tp-split)
+    let wrong = CanonId::new(0, 0, Kind::Act, names::qkv(1)).key();
+    let shard = &mut observed.entries.get_mut(&wrong).unwrap()[0];
+    shard.spec = ShardSpec::full(&shard.spec.global_dims);
+
+    let findings = diff_schema(&expected, &observed);
+    assert!(findings.iter().any(|f| f.rule == "missing-trace-point"
+                                && f.subject == dropped),
+            "{findings:#?}");
+    assert!(findings.iter().any(|f| f.rule == "shard-spec-mismatch"
+                                && f.subject == wrong),
+            "{findings:#?}");
+    assert_eq!(findings.len(), 2, "{findings:#?}");
+}
+
+#[test]
+fn expected_schema_dag_covers_every_id() {
+    let mut p = par(1, 2, 2, 1, 1);
+    p.sp = true;
+    let expected = ExpectedSchema::build(&TINY, &p, 2, BugSet::none(), 1)
+        .unwrap();
+    assert!(!expected.is_empty());
+    let dag = expected.dag();
+    assert_eq!(dag.len(), expected.len(),
+               "every canonical id gets a DAG node");
+    for key in expected.keys() {
+        assert!(dag.index_of(&key).is_some(), "{key} missing from the DAG");
+    }
+}
