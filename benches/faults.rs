@@ -1,0 +1,108 @@
+//! Fault-path bench: hang-detection latency against the rendezvous
+//! deadline (an injected stalled collective must terminate the join in
+//! ~O(deadline), not wall forever), the write-side cost of TTCK
+//! checkpoints, and salvage throughput on a torn checkpointed store.
+//! `BENCH_SMOKE=1` shrinks the deadline sweep; wired into
+//! `make bench-smoke`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ttrace::bugs::BugSet;
+use ttrace::data::GenData;
+use ttrace::dist::{SpmdOpts, Topology};
+use ttrace::model::{run_training, try_run_training, Engine, ParCfg, TINY};
+use ttrace::runtime::Executor;
+use ttrace::ttrace::hooks::NoopHooks;
+use ttrace::ttrace::store::{write_trace, StoreReader, StoreWriter};
+use ttrace::ttrace::{Collector, FaultPlan};
+use ttrace::util::bench::{fmt_bytes, fmt_s, smoke, time_once, BenchJson,
+                          Table};
+
+fn main() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let mut bj = BenchJson::new("faults");
+    let mut t = Table::new(&["stage", "result", "time"]);
+
+    // 1. hang-detection latency: rank 1 stalls the dpcp gradient sync;
+    // the join must come back with a structured verdict in ~O(deadline)
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(2, 1, 1, 1, 1).unwrap();
+    let engine = Engine::new(TINY, p.clone(), 2, &exec, BugSet::none())
+        .unwrap();
+    let deadlines: &[u64] = if smoke() { &[100] } else { &[100, 250, 500] };
+    for &dl_ms in deadlines {
+        let plan = Arc::new(FaultPlan::new(0).stall(1, "dpcp@"));
+        let opts = SpmdOpts {
+            deadline: Some(Duration::from_millis(dl_ms)),
+            faults: Some(plan),
+        };
+        let (results, s) = time_once(|| {
+            try_run_training(&engine, &GenData, &NoopHooks, 1, opts)
+        });
+        let hangs = results
+            .iter()
+            .filter_map(|r| r.as_ref().err())
+            .filter_map(|f| f.hang())
+            .count();
+        assert!(hangs > 0, "stall must produce a hang verdict");
+        bj.stage(&format!("hang_detect_{dl_ms}ms"), s);
+        t.row(&[format!("hang detect, deadline {dl_ms}ms"),
+                format!("{hangs} verdict(s)"), fmt_s(s)]);
+    }
+
+    // 2. checkpoint write overhead: the same trace sealed without and
+    // with TTCK blocks every 8 shards
+    let collector = Collector::new();
+    run_training(&engine, &GenData, &collector, 1);
+    let trace = collector.into_trace();
+
+    let dir = std::env::temp_dir().join("ttrace_bench_faults");
+    std::fs::create_dir_all(&dir).unwrap();
+    let plain_path = dir.join("plain.ttrc");
+    let ckpt_path = dir.join("ckpt.ttrc");
+    let (_, s_plain) = time_once(|| {
+        let mut w = StoreWriter::create(&plain_path).unwrap();
+        write_trace(&trace, &mut w).unwrap();
+        w.finish().unwrap();
+    });
+    let (_, s_ckpt) = time_once(|| {
+        let mut w = StoreWriter::create(&ckpt_path).unwrap();
+        w.set_checkpoint_every(8);
+        write_trace(&trace, &mut w).unwrap();
+        w.finish().unwrap();
+    });
+    let plain_bytes = std::fs::metadata(&plain_path).unwrap().len();
+    let ckpt_bytes = std::fs::metadata(&ckpt_path).unwrap().len();
+    bj.stage("write_plain", s_plain);
+    bj.stage("write_checkpointed", s_ckpt);
+    t.row(&["write, no checkpoints".into(), fmt_bytes(plain_bytes),
+            fmt_s(s_plain)]);
+    t.row(&["write, checkpoint every 8".into(), fmt_bytes(ckpt_bytes),
+            fmt_s(s_ckpt)]);
+
+    // 3. salvage throughput: tear the checkpointed store at 2/3 and
+    // recover the longest valid prefix
+    let bytes = std::fs::read(&ckpt_path).unwrap();
+    let torn = bytes.len() * 2 / 3;
+    std::fs::write(&ckpt_path, &bytes[..torn]).unwrap();
+    let ((_, info), s_salv) =
+        time_once(|| StoreReader::open_salvage(&ckpt_path).unwrap());
+    assert!(!info.complete, "a torn store must not open complete");
+    assert!(info.recovered_ids > 0, "salvage recovered nothing");
+    bj.stage("salvage_torn", s_salv);
+    t.row(&[format!("salvage torn store ({} of {})", fmt_bytes(torn as u64),
+                    fmt_bytes(bytes.len() as u64)),
+            format!("{} ids / {} shards", info.recovered_ids,
+                    info.recovered_shards),
+            fmt_s(s_salv)]);
+
+    t.print();
+    t.write_csv("results/faults.csv").unwrap();
+    println!("\ncheckpoint overhead: {:.1}% bytes, {:.2}x write time; \
+              salvage recovered bytes [0, {}) of the torn file",
+             (ckpt_bytes as f64 / plain_bytes as f64 - 1.0) * 100.0,
+             s_ckpt / s_plain.max(1e-9),
+             info.valid_prefix);
+    bj.write().unwrap();
+}

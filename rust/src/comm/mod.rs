@@ -11,11 +11,29 @@
 //! Reduction precision is explicit: `RedPrec::Bf16` rounds after every
 //! accumulation step (what a bf16 ring all-reduce does on real hardware),
 //! `RedPrec::F32` accumulates in f32 (main-grad reductions).
+//!
+//! ## Robustness
+//!
+//! A collective wait is bounded by a deadline (default
+//! [`DEFAULT_DEADLINE`], overridable via [`World::set_deadline`]). A rank
+//! whose peers never arrive does not block forever: the wait expires into
+//! a structured [`HangReport`] naming the op kind, group key, arrived vs
+//! missing ranks, and every rank's last-completed collective (a
+//! lightweight progress ledger the rendezvous maintains as it goes). A
+//! rank that panics mid-run is marked crashed ([`World::mark_crashed`],
+//! done by `dist::try_run_spmd`), which wakes its waiting peers with a
+//! [`PeerCrash`] instead of letting them ride out the full deadline.
+//! Both failures are raised as [`CommFailure`] panic payloads
+//! (`std::panic::panic_any`) so the engine's infallible collective call
+//! sites stay infallible; `dist::try_run_spmd` catches and downcasts them
+//! into per-rank verdicts.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
 
 use crate::tensor::{DType, Tensor};
+use crate::ttrace::faults::{CollAction, FaultPlan};
 use crate::util::bf16;
 
 /// Reduction operator.
@@ -32,6 +50,199 @@ pub enum RedPrec {
     Bf16,
 }
 
+/// The communication-op kinds a [`HangReport`] can name. Collective names
+/// match `ttrace::analyze::plan::OpKind::name` so a hang can be joined
+/// against the pre-run collective plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    AllGather,
+    AllReduce,
+    ReduceScatter,
+    Broadcast,
+    Barrier,
+    Send,
+    Recv,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::AllGather => "all_gather",
+            OpKind::AllReduce => "all_reduce",
+            OpKind::ReduceScatter => "reduce_scatter",
+            OpKind::Broadcast => "broadcast",
+            OpKind::Barrier => "barrier",
+            OpKind::Send => "send",
+            OpKind::Recv => "recv",
+        }
+    }
+}
+
+impl std::fmt::Display for OpKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One rank's entry in the progress ledger: the last communication op it
+/// completed (`None` if it never finished one).
+#[derive(Clone, Debug)]
+pub struct RankProgress {
+    pub rank: usize,
+    pub last: Option<String>,
+}
+
+/// A structured hang verdict: a collective wait hit its deadline.
+///
+/// Ranks are **global** ranks whenever the group's membership was
+/// registered ([`World::register_members`], done by `dist` for every
+/// topology-derived group); for ad-hoc groups they fall back to member
+/// indices within the group.
+#[derive(Clone, Debug)]
+pub struct HangReport {
+    /// The op kind that hung.
+    pub op: OpKind,
+    /// The full rendezvous key, including the per-group sequence number.
+    pub key: String,
+    /// The group key (rendezvous key minus the sequence suffix).
+    pub group: String,
+    /// The rank that timed out waiting.
+    pub waiter: usize,
+    /// Ranks that reached the rendezvous before the deadline.
+    pub arrived: Vec<usize>,
+    /// Ranks that never arrived — the hang suspects.
+    pub missing: Vec<usize>,
+    /// How long the waiter actually waited.
+    pub waited: Duration,
+    /// Every rank's last-completed communication op at timeout time.
+    pub progress: Vec<RankProgress>,
+}
+
+impl HangReport {
+    /// Multi-line rendering for CLI verdicts: the headline plus the
+    /// missing ranks' last-completed ops (where the run actually died).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "HANG: {} on '{}' — rank {} gave up after {}ms\n  arrived: {:?}  missing: {:?}",
+            self.op, self.key, self.waiter, self.waited.as_millis(),
+            self.arrived, self.missing);
+        for m in &self.missing {
+            let last = self.progress.iter()
+                .find(|p| p.rank == *m)
+                .and_then(|p| p.last.as_deref())
+                .unwrap_or("nothing");
+            s.push_str(&format!("\n  rank {m} last completed: {last}"));
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for HangReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f,
+               "hang: {} on '{}' timed out after {}ms (rank {} waiting; \
+                arrived {:?}, missing {:?})",
+               self.op, self.key, self.waited.as_millis(), self.waiter,
+               self.arrived, self.missing)
+    }
+}
+
+/// A wait was abandoned because a peer rank crashed and can never arrive.
+#[derive(Clone, Debug)]
+pub struct PeerCrash {
+    pub op: OpKind,
+    pub key: String,
+    /// The rank that was waiting (global when known, else member index).
+    pub waiter: usize,
+    /// The crashed rank(s) blocking this rendezvous.
+    pub crashed: Vec<usize>,
+}
+
+impl std::fmt::Display for PeerCrash {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "peer crashed: {} on '{}' can never complete — rank {} \
+                   was waiting on crashed rank(s) {:?}",
+               self.op, self.key, self.waiter, self.crashed)
+    }
+}
+
+/// Structured communication failures, raised as `std::panic::panic_any`
+/// payloads so the engine's collective call sites keep their infallible
+/// signatures. `dist::try_run_spmd` catches and downcasts these into
+/// per-rank `RankFailure` verdicts.
+#[derive(Clone, Debug)]
+pub enum CommFailure {
+    /// A collective wait hit its deadline.
+    Hang(HangReport),
+    /// A peer crashed while this rank was waiting on it.
+    PeerCrashed(PeerCrash),
+    /// The rendezvous state itself desynced (vanished point, duplicate
+    /// p2p send, missing deposit) — names the key and rank.
+    Desync {
+        key: String,
+        rank: Option<usize>,
+        detail: String,
+    },
+    /// An injected fault (fault plan) fired on this rank.
+    Injected { rank: usize, site: String },
+}
+
+impl std::fmt::Display for CommFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommFailure::Hang(h) => h.fmt(f),
+            CommFailure::PeerCrashed(p) => p.fmt(f),
+            CommFailure::Desync { key, rank, detail } => {
+                let rank = rank.map(|r| format!(" (rank {r})")).unwrap_or_default();
+                write!(f, "comm desync at '{key}'{rank}: {detail}")
+            }
+            CommFailure::Injected { rank, site } => {
+                write!(f, "injected fault on rank {rank}: {site}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommFailure {}
+
+/// How long a rank waits at a rendezvous before declaring a hang. Far
+/// above any legitimate inter-collective compute gap in the simulated
+/// engine, so healthy runs never false-positive; fault tests shrink it
+/// via [`World::set_deadline`].
+pub const DEFAULT_DEADLINE: Duration = Duration::from_secs(120);
+
+/// Recover a lock (or a condvar wait) from a peer's panic: a rank that
+/// dies while holding the mutex poisons it, but every mutation of the
+/// rendezvous map completes inside one critical section, so the state is
+/// structurally sound — surviving ranks keep going and the dead rank is
+/// reported through its own failure, not a cascade of poisoned-lock
+/// panics on every thread.
+fn relock<T>(r: Result<T, PoisonError<T>>) -> T {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The group key of a rendezvous key: everything before the trailing
+/// `#<seq>` that `Comm::next_key` appends.
+fn group_of_key(key: &str) -> &str {
+    key.rsplit_once('#').map_or(key, |(g, _)| g)
+}
+
+/// The source rank of a p2p rendezvous key (`p2p:<src>-><dst>:<tag>#n`).
+fn p2p_src(key: &str) -> Option<usize> {
+    key.strip_prefix("p2p:")?.split_once("->")?.0.parse().ok()
+}
+
+/// Raise a structured desync failure naming the rendezvous key and the
+/// current rank (the satellite contract: no bare unwraps on the deposit
+/// paths — a desync says *where* and *who*).
+fn desync(key: &str, detail: String) -> ! {
+    std::panic::panic_any(CommFailure::Desync {
+        key: key.to_string(),
+        rank: crate::dist::current_rank(),
+        detail,
+    })
+}
+
 struct Point {
     deposits: Vec<Option<Tensor>>,
     taken: usize,
@@ -45,6 +256,17 @@ pub struct World {
     /// Expected member count per registered group *kind* (the key prefix
     /// before '@', or the whole key) — see [`World::expect_group_size`].
     expected_sizes: Mutex<HashMap<String, usize>>,
+    /// Wait deadline for every rendezvous in this world.
+    deadline: Mutex<Duration>,
+    /// Registered membership per group key: `members[key][me]` is the
+    /// global rank of member `me` — lets hang reports name global ranks.
+    members: Mutex<HashMap<String, Vec<usize>>>,
+    /// Progress ledger: each global rank's last-completed op.
+    progress: Mutex<Vec<Option<String>>>,
+    /// Global ranks that panicked (marked by `dist::try_run_spmd`).
+    crashed: Mutex<Vec<usize>>,
+    /// Armed fault-injection plan, if any.
+    faults: Mutex<Option<Arc<FaultPlan>>>,
 }
 
 impl World {
@@ -54,6 +276,11 @@ impl World {
             points: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
             expected_sizes: Mutex::new(HashMap::new()),
+            deadline: Mutex::new(DEFAULT_DEADLINE),
+            members: Mutex::new(HashMap::new()),
+            progress: Mutex::new(vec![None; n]),
+            crashed: Mutex::new(Vec::new()),
+            faults: Mutex::new(None),
         })
     }
 
@@ -65,20 +292,131 @@ impl World {
     /// against a differently-sized rendezvous). Unregistered kinds stay
     /// permissive (ad-hoc groups, tests).
     pub fn expect_group_size(&self, kind: &str, size: usize) {
-        self.expected_sizes.lock().unwrap().insert(kind.to_string(), size);
+        relock(self.expected_sizes.lock()).insert(kind.to_string(), size);
     }
 
     /// The registered size for a group key, if its kind was registered.
     fn expected_size_of(&self, group: &str) -> Option<usize> {
         let kind = group.split('@').next().unwrap_or(group);
-        self.expected_sizes.lock().unwrap().get(kind).copied()
+        relock(self.expected_sizes.lock()).get(kind).copied()
+    }
+
+    /// Set the rendezvous wait deadline (default [`DEFAULT_DEADLINE`]).
+    pub fn set_deadline(&self, d: Duration) {
+        *relock(self.deadline.lock()) = d;
+    }
+
+    pub fn deadline(&self) -> Duration {
+        *relock(self.deadline.lock())
+    }
+
+    /// Register a group's membership: `globals[me]` is the global rank of
+    /// member `me`. Hang reports on the group then name global ranks.
+    pub fn register_members(&self, key: &str, globals: Vec<usize>) {
+        relock(self.members.lock()).insert(key.to_string(), globals);
+    }
+
+    fn members_of(&self, group: &str) -> Option<Vec<usize>> {
+        relock(self.members.lock()).get(group).cloned()
+    }
+
+    /// Arm a fault-injection plan on every communicator of this world.
+    pub fn set_fault_plan(&self, plan: Arc<FaultPlan>) {
+        *relock(self.faults.lock()) = Some(plan);
+    }
+
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        relock(self.faults.lock()).clone()
+    }
+
+    /// Mark a global rank as crashed and wake every waiter so ranks
+    /// blocked on the dead rank fail over to [`PeerCrash`] immediately
+    /// instead of riding out the deadline.
+    pub fn mark_crashed(&self, rank: usize) {
+        {
+            let mut c = relock(self.crashed.lock());
+            if !c.contains(&rank) {
+                c.push(rank);
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    pub fn crashed_ranks(&self) -> Vec<usize> {
+        relock(self.crashed.lock()).clone()
+    }
+
+    /// Record `rank`'s last-completed op in the progress ledger.
+    fn note_progress(&self, rank: usize, what: String) {
+        let mut p = relock(self.progress.lock());
+        if rank < p.len() {
+            p[rank] = Some(what);
+        }
+    }
+
+    /// Snapshot of the progress ledger, one row per global rank.
+    pub fn progress_snapshot(&self) -> Vec<RankProgress> {
+        relock(self.progress.lock())
+            .iter()
+            .enumerate()
+            .map(|(rank, last)| RankProgress { rank, last: last.clone() })
+            .collect()
+    }
+
+    /// Crashed ranks that block `key` from ever completing: the crashed
+    /// set intersected with the group's registered members (or, for p2p
+    /// keys, the source rank). Unregistered groups are conservative — any
+    /// crash in the world blocks them (an in-process run is over anyway).
+    fn crashed_blockers(&self, key: &str) -> Option<Vec<usize>> {
+        let crashed = relock(self.crashed.lock());
+        if crashed.is_empty() {
+            return None;
+        }
+        if let Some(src) = p2p_src(key) {
+            return crashed.contains(&src).then(|| vec![src]);
+        }
+        let blockers = match self.members_of(group_of_key(key)) {
+            Some(members) => crashed.iter().copied()
+                .filter(|r| members.contains(r))
+                .collect(),
+            None => crashed.clone(),
+        };
+        (!blockers.is_empty()).then_some(blockers)
+    }
+
+    /// Build the hang verdict for a timed-out wait on `key`. Member
+    /// indices translate to global ranks via registered membership.
+    fn hang_report(&self, op: OpKind, key: &str, me: usize,
+                   present: &[bool], waited: Duration) -> HangReport {
+        let group = group_of_key(key).to_string();
+        let members = self.members_of(&group);
+        let to_global = |i: usize| {
+            members.as_ref().and_then(|v| v.get(i).copied()).unwrap_or(i)
+        };
+        let arrived = present.iter().enumerate()
+            .filter(|(_, p)| **p).map(|(i, _)| to_global(i)).collect();
+        let missing = present.iter().enumerate()
+            .filter(|(_, p)| !**p).map(|(i, _)| to_global(i)).collect();
+        HangReport {
+            op,
+            key: key.to_string(),
+            group,
+            waiter: crate::dist::current_rank().unwrap_or(me),
+            arrived,
+            missing,
+            waited,
+            progress: self.progress_snapshot(),
+        }
     }
 
     /// All `m` members deposit a tensor under `key`; each receives clones
     /// of all deposits in member order. The last member to leave removes
-    /// the rendezvous point.
-    fn exchange(&self, key: &str, me: usize, m: usize, x: Tensor) -> Vec<Tensor> {
-        let mut guard = self.points.lock().unwrap();
+    /// the rendezvous point. The wait is deadline-bounded: a timeout
+    /// raises [`CommFailure::Hang`], a crashed peer raises
+    /// [`CommFailure::PeerCrashed`].
+    fn exchange(&self, op: OpKind, key: &str, me: usize, m: usize,
+                x: Tensor) -> Vec<Tensor> {
+        let mut guard = relock(self.points.lock());
         {
             let point = guard.entry(key.to_string()).or_insert_with(|| Point {
                 deposits: vec![None; m],
@@ -93,6 +431,8 @@ impl World {
                 self.cv.notify_all();
             }
         }
+        let start = Instant::now();
+        let deadline = self.deadline();
         loop {
             let complete = guard
                 .get(key)
@@ -101,39 +441,97 @@ impl World {
             if complete {
                 break;
             }
-            guard = self.cv.wait(guard).unwrap();
+            if let Some(crashed) = self.crashed_blockers(key) {
+                std::panic::panic_any(CommFailure::PeerCrashed(PeerCrash {
+                    op,
+                    key: key.to_string(),
+                    waiter: crate::dist::current_rank().unwrap_or(me),
+                    crashed,
+                }));
+            }
+            let waited = start.elapsed();
+            let Some(remaining) = deadline.checked_sub(waited) else {
+                let present: Vec<bool> = guard.get(key)
+                    .map(|p| p.deposits.iter().map(|d| d.is_some()).collect())
+                    .unwrap_or_default();
+                let report = self.hang_report(op, key, me, &present, waited);
+                std::panic::panic_any(CommFailure::Hang(report));
+            };
+            guard = relock(self.cv.wait_timeout(guard, remaining)).0;
         }
-        let result;
+        let result: Vec<Tensor>;
         {
-            let point = guard.get_mut(key).unwrap();
-            result = point.deposits.iter().map(|d| d.clone().unwrap()).collect();
+            let point = guard.get_mut(key).unwrap_or_else(
+                || desync(key, format!(
+                    "member {me}: rendezvous point vanished before pickup")));
+            result = point.deposits.iter()
+                .map(|d| d.clone().unwrap_or_else(|| desync(key, format!(
+                    "member {me}: deposit missing from a complete rendezvous"))))
+                .collect();
             point.taken += 1;
             if point.taken == m {
                 guard.remove(key);
             }
+        }
+        drop(guard);
+        if let Some(rank) = crate::dist::current_rank() {
+            self.note_progress(rank, format!("{} '{key}'", op.name()));
         }
         result
     }
 
     /// Point-to-point send (buffered — does not block).
     fn p2p_send(&self, key: &str, x: Tensor) {
-        let mut guard = self.points.lock().unwrap();
+        let mut guard = relock(self.points.lock());
         let prev = guard.insert(
             key.to_string(),
             Point { deposits: vec![Some(x)], taken: 0 },
         );
-        assert!(prev.is_none(), "p2p key collision at '{key}'");
+        if prev.is_some() {
+            desync(key, "duplicate p2p send — key collision".to_string());
+        }
         self.cv.notify_all();
     }
 
     fn p2p_recv(&self, key: &str) -> Tensor {
-        let mut guard = self.points.lock().unwrap();
+        let mut guard = relock(self.points.lock());
+        let start = Instant::now();
+        let deadline = self.deadline();
         loop {
-            if guard.contains_key(key) {
-                let p = guard.remove(key).unwrap();
-                return p.deposits.into_iter().next().unwrap().unwrap();
+            if let Some(p) = guard.remove(key) {
+                drop(guard);
+                let t = p.deposits.into_iter().next().flatten()
+                    .unwrap_or_else(|| desync(key, "empty p2p deposit".to_string()));
+                if let Some(rank) = crate::dist::current_rank() {
+                    self.note_progress(rank, format!("recv '{key}'"));
+                }
+                return t;
             }
-            guard = self.cv.wait(guard).unwrap();
+            if let Some(src) = p2p_src(key) {
+                if self.crashed_ranks().contains(&src) {
+                    std::panic::panic_any(CommFailure::PeerCrashed(PeerCrash {
+                        op: OpKind::Recv,
+                        key: key.to_string(),
+                        waiter: crate::dist::current_rank().unwrap_or(0),
+                        crashed: vec![src],
+                    }));
+                }
+            }
+            let waited = start.elapsed();
+            let Some(remaining) = deadline.checked_sub(waited) else {
+                let report = HangReport {
+                    op: OpKind::Recv,
+                    key: key.to_string(),
+                    group: group_of_key(key).to_string(),
+                    waiter: crate::dist::current_rank().unwrap_or(0),
+                    arrived: Vec::new(),
+                    missing: p2p_src(key).into_iter().collect(),
+                    waited,
+                    progress: self.progress_snapshot(),
+                };
+                std::panic::panic_any(CommFailure::Hang(report));
+            };
+            guard = relock(self.cv.wait_timeout(guard, remaining)).0;
         }
     }
 }
@@ -155,7 +553,7 @@ impl Comm {
     }
 
     fn next_key(&self, group: &str) -> String {
-        let mut seq = self.seq.lock().unwrap();
+        let mut seq = relock(self.seq.lock());
         let c = seq.entry(group.to_string()).or_insert(0);
         *c += 1;
         format!("{group}#{c}")
@@ -163,7 +561,7 @@ impl Comm {
 
     /// Check a caller's (me, m) against the group size the topology
     /// registered for this key's kind. Every collective funnels through
-    /// `all_gather`, so this is the single enforcement point.
+    /// `gather`, so this is the single enforcement point.
     fn validate_group(&self, group: &str, me: usize, m: usize) {
         if let Some(expect) = self.world.expected_size_of(group) {
             if m != expect || me >= m {
@@ -178,18 +576,47 @@ impl Comm {
         }
     }
 
+    /// The fault-injection gate every communication op passes on its way
+    /// in: a stalled rank goes silent past every peer's deadline (so the
+    /// peers produce a genuine [`HangReport`]) and then fails itself with
+    /// an explicit injected-fault marker; a straggler arrives late.
+    fn fault_gate(&self, group: &str) {
+        let Some(plan) = self.world.fault_plan() else { return };
+        let Some(rank) = crate::dist::current_rank() else { return };
+        match plan.on_collective(rank, group) {
+            CollAction::Proceed => {}
+            CollAction::Delay(d) => std::thread::sleep(d),
+            CollAction::Stall => {
+                let d = self.world.deadline();
+                std::thread::sleep(d + d / 2 + Duration::from_millis(100));
+                std::panic::panic_any(CommFailure::Injected {
+                    rank,
+                    site: format!("stalled collective on '{group}'"),
+                });
+            }
+        }
+    }
+
+    /// The single rendezvous entry point for collectives: group check,
+    /// fault gate, key sequencing, exchange.
+    fn gather(&self, op: OpKind, group: &str, me: usize, m: usize,
+              x: &Tensor) -> Vec<Tensor> {
+        self.validate_group(group, me, m);
+        self.fault_gate(group);
+        let key = self.next_key(group);
+        self.world.exchange(op, &key, me, m, x.clone())
+    }
+
     /// All-gather: returns every member's tensor, in member order.
     pub fn all_gather(&self, group: &str, me: usize, m: usize, x: &Tensor) -> Vec<Tensor> {
-        self.validate_group(group, me, m);
-        let key = self.next_key(group);
-        self.world.exchange(&key, me, m, x.clone())
+        self.gather(OpKind::AllGather, group, me, m, x)
     }
 
     /// All-reduce with explicit op and accumulation precision. Folds in
     /// member order: `((x0 ⊕ x1) ⊕ x2) ⊕ ...`.
     pub fn all_reduce(&self, group: &str, me: usize, m: usize, x: &Tensor,
                       op: RedOp, prec: RedPrec) -> Tensor {
-        let parts = self.all_gather(group, me, m, x);
+        let parts = self.gather(OpKind::AllReduce, group, me, m, x);
         reduce_parts(&parts, op, prec)
     }
 
@@ -197,7 +624,8 @@ impl Comm {
     /// this member's 1/m slice.
     pub fn reduce_scatter(&self, group: &str, me: usize, m: usize, x: &Tensor,
                           dim: usize, op: RedOp, prec: RedPrec) -> Tensor {
-        let full = self.all_reduce(group, me, m, x, op, prec);
+        let parts = self.gather(OpKind::ReduceScatter, group, me, m, x);
+        let full = reduce_parts(&parts, op, prec);
         let len = full.dims[dim] / m;
         full.narrow(dim, me * len, len)
     }
@@ -205,24 +633,29 @@ impl Comm {
     /// Broadcast from `root` (member index) to the group.
     pub fn broadcast(&self, group: &str, me: usize, m: usize, root: usize,
                      x: &Tensor) -> Tensor {
-        let parts = self.all_gather(group, me, m, x);
+        let parts = self.gather(OpKind::Broadcast, group, me, m, x);
         parts[root].clone()
     }
 
     /// Barrier over a group.
     pub fn barrier(&self, group: &str, me: usize, m: usize) {
-        let _ = self.all_gather(group, me, m, &Tensor::zeros(&[], DType::F32));
+        let _ = self.gather(OpKind::Barrier, group, me, m,
+                            &Tensor::zeros(&[], DType::F32));
     }
 
     /// P2P send to global rank `dst` with a logical `tag`.
     pub fn send(&self, me_rank: usize, dst: usize, tag: &str, x: &Tensor) {
-        let key = self.next_key(&format!("p2p:{me_rank}->{dst}:{tag}"));
+        let group = format!("p2p:{me_rank}->{dst}:{tag}");
+        self.fault_gate(&group);
+        let key = self.next_key(&group);
         self.world.p2p_send(&key, x.clone());
     }
 
     /// P2P receive from global rank `src` with a logical `tag`.
     pub fn recv(&self, src: usize, me_rank: usize, tag: &str) -> Tensor {
-        let key = self.next_key(&format!("p2p:{src}->{me_rank}:{tag}"));
+        let group = format!("p2p:{src}->{me_rank}:{tag}");
+        self.fault_gate(&group);
+        let key = self.next_key(&group);
         self.world.p2p_recv(&key)
     }
 }
@@ -388,5 +821,122 @@ mod tests {
             Tensor::new(&[2], vec![0., 3.], DType::F32),
         ];
         assert_eq!(reduce_parts(&parts, RedOp::Max, RedPrec::F32).data, vec![1., 3.]);
+    }
+
+    // ---- robustness ------------------------------------------------------
+
+    /// Downcast a caught panic payload into the CommFailure it carries.
+    fn failure_of(p: Box<dyn std::any::Any + Send>) -> CommFailure {
+        *p.downcast::<CommFailure>().expect("a CommFailure payload")
+    }
+
+    #[test]
+    fn timed_out_collective_reports_a_hang() {
+        let world = World::new(2);
+        world.set_deadline(Duration::from_millis(40));
+        world.register_members("g", vec![5, 7]);
+        let comm = Comm::new(world.clone());
+        let x = Tensor::scalar(1.0, DType::F32);
+        // member 0 deposits; member 1 never arrives
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            comm.all_reduce("g", 0, 2, &x, RedOp::Sum, RedPrec::F32)
+        }))
+        .expect_err("the wait must time out");
+        match failure_of(err) {
+            CommFailure::Hang(h) => {
+                assert_eq!(h.op, OpKind::AllReduce);
+                assert_eq!(h.group, "g");
+                assert_eq!(h.key, "g#1");
+                // member indices mapped to the registered global ranks
+                assert_eq!(h.arrived, vec![5]);
+                assert_eq!(h.missing, vec![7]);
+                assert!(h.waited >= Duration::from_millis(40));
+                assert!(h.render().contains("missing: [7]"), "{}", h.render());
+            }
+            other => panic!("expected a hang, got {other}"),
+        }
+    }
+
+    #[test]
+    fn timed_out_p2p_recv_names_the_source() {
+        let world = World::new(2);
+        world.set_deadline(Duration::from_millis(30));
+        let comm = Comm::new(world);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            comm.recv(0, 1, "act")
+        }))
+        .expect_err("the recv must time out");
+        match failure_of(err) {
+            CommFailure::Hang(h) => {
+                assert_eq!(h.op, OpKind::Recv);
+                assert_eq!(h.missing, vec![0], "the missing rank is the source");
+            }
+            other => panic!("expected a hang, got {other}"),
+        }
+    }
+
+    #[test]
+    fn crashed_peer_unblocks_waiters_before_the_deadline() {
+        let world = World::new(2);
+        world.set_deadline(Duration::from_secs(30));
+        world.register_members("g", vec![0, 1]);
+        let w2 = world.clone();
+        let start = Instant::now();
+        let waiter = thread::spawn(move || {
+            let comm = Comm::new(w2);
+            let x = Tensor::scalar(1.0, DType::F32);
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                comm.all_gather("g", 0, 2, &x)
+            }))
+        });
+        thread::sleep(Duration::from_millis(30));
+        world.mark_crashed(1);
+        let err = waiter.join().unwrap().expect_err("the wait must abort");
+        assert!(start.elapsed() < Duration::from_secs(10),
+                "the waiter must not ride out the 30s deadline");
+        match failure_of(err) {
+            CommFailure::PeerCrashed(p) => {
+                assert_eq!(p.crashed, vec![1]);
+                assert_eq!(p.op, OpKind::AllGather);
+            }
+            other => panic!("expected a peer-crash, got {other}"),
+        }
+    }
+
+    #[test]
+    fn progress_ledger_snapshots_last_completed_op() {
+        let world = World::new(2);
+        let results = spawn_ranks(2, {
+            let world = world.clone();
+            move |r, _| {
+                // use the outer world (spawn_ranks makes its own otherwise)
+                let comm = Comm::new(world.clone());
+                let x = Tensor::scalar(r as f32, DType::F32);
+                comm.all_reduce("g", r, 2, &x, RedOp::Sum, RedPrec::F32).data[0]
+            }
+        });
+        assert_eq!(results, vec![1.0, 1.0]);
+        // outside run_spmd there is no current rank, so the ledger stays
+        // empty — it fills in only under real SPMD execution (see the
+        // dist-level tests); here we just assert the snapshot shape.
+        let snap = world.progress_snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap.iter().all(|p| p.last.is_none()));
+    }
+
+    #[test]
+    fn straggler_fault_delays_but_completes() {
+        let results = spawn_ranks(2, |r, w| {
+            w.set_fault_plan(Arc::new(
+                crate::ttrace::faults::FaultPlan::new(0)
+                    .straggler(0, "g", Duration::from_millis(10)),
+            ));
+            let comm = Comm::new(w);
+            let x = Tensor::scalar((r + 1) as f32, DType::F32);
+            // no current_rank outside run_spmd → the gate is a no-op here;
+            // this documents that fault plans only fire on SPMD threads
+            comm.all_reduce("g", r, 2, &x, RedOp::Sum, RedPrec::F32).data[0]
+        });
+        assert_eq!(results, vec![3.0, 3.0]);
     }
 }

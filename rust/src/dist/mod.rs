@@ -22,10 +22,13 @@
 //! fixed. `comm::Comm` appends a per-group sequence number on top.
 
 use std::cell::Cell;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::comm::{Comm, World};
+use crate::comm::{Comm, CommFailure, HangReport, PeerCrash, World};
+use crate::ttrace::faults::FaultPlan;
 
 thread_local! {
     /// The simulated rank executing on this OS thread (set by `run_spmd`).
@@ -204,14 +207,87 @@ impl RankCtx {
     }
 }
 
-/// Run `f` SPMD: one scoped OS thread per rank over a shared `World`,
-/// results returned in rank order. Deterministic given deterministic `f`:
-/// every collective folds in member order regardless of thread scheduling.
-pub fn run_spmd<T, F>(topo: Topology, f: F) -> Vec<T>
-where
-    T: Send,
-    F: Fn(&RankCtx) -> T + Sync,
-{
+/// Options for a fault-aware SPMD run ([`try_run_spmd_opts`]).
+#[derive(Clone, Default)]
+pub struct SpmdOpts {
+    /// Rendezvous wait deadline (default [`crate::comm::DEFAULT_DEADLINE`]).
+    pub deadline: Option<Duration>,
+    /// A fault-injection plan to arm on the run's `World` and collectives.
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+/// How one rank of a [`try_run_spmd`] run failed.
+#[derive(Debug)]
+pub enum RankFailure {
+    /// A collective wait hit its deadline — the structured hang verdict.
+    Hang(HangReport),
+    /// The rank was waiting on a peer that crashed.
+    PeerCrashed(PeerCrash),
+    /// The rank itself panicked (an injected crash, a desync, or an
+    /// organic bug) — `detail` carries the panic message.
+    Crashed { rank: usize, detail: String },
+}
+
+impl RankFailure {
+    /// The global rank this failure happened on.
+    pub fn rank(&self) -> usize {
+        match self {
+            RankFailure::Hang(h) => h.waiter,
+            RankFailure::PeerCrashed(p) => p.waiter,
+            RankFailure::Crashed { rank, .. } => *rank,
+        }
+    }
+
+    /// The hang verdict, if this failure is one.
+    pub fn hang(&self) -> Option<&HangReport> {
+        match self {
+            RankFailure::Hang(h) => Some(h),
+            _ => None,
+        }
+    }
+
+    /// Classify a caught panic payload from rank `rank`.
+    fn of_panic(rank: usize, payload: Box<dyn std::any::Any + Send>) -> RankFailure {
+        let payload = match payload.downcast::<CommFailure>() {
+            Ok(f) => {
+                return match *f {
+                    CommFailure::Hang(h) => RankFailure::Hang(h),
+                    CommFailure::PeerCrashed(p) => RankFailure::PeerCrashed(p),
+                    other => RankFailure::Crashed { rank, detail: other.to_string() },
+                }
+            }
+            Err(p) => p,
+        };
+        let detail = if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else if let Some(s) = payload.downcast_ref::<&'static str>() {
+            (*s).to_string()
+        } else {
+            "rank panicked with a non-string payload".to_string()
+        };
+        RankFailure::Crashed { rank, detail }
+    }
+}
+
+impl std::fmt::Display for RankFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RankFailure::Hang(h) => h.fmt(f),
+            RankFailure::PeerCrashed(p) => p.fmt(f),
+            RankFailure::Crashed { rank, detail } => {
+                write!(f, "rank {rank} crashed: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RankFailure {}
+
+/// Build the shared `World` for a topology: group-size registration (so a
+/// wrong-group call dies at the call site) plus full membership maps per
+/// group instance (so hang reports name *global* ranks, not member
+/// indices).
+fn setup_world(topo: Topology) -> Arc<World> {
     let n = topo.world();
     let world = World::new(n);
     // Register the topology's group sizes so every collective call is
@@ -223,6 +299,47 @@ where
     world.expect_group_size("dpcp", topo.dp * topo.cp);
     world.expect_group_size("world", n);
     world.expect_group_size("embtie", 2);
+    // Membership per group instance: members[key][me] = global rank.
+    let mut members: std::collections::HashMap<String, Vec<(usize, usize)>> =
+        std::collections::HashMap::new();
+    for rank in 0..n {
+        let ctx = RankCtx::new(topo, rank, Comm::new(world.clone()));
+        for g in [ctx.tp_group(), ctx.cp_group(), ctx.dp_group(),
+                  ctx.dpcp_group(), ctx.world_group()] {
+            members.entry(g.key).or_default().push((g.me, rank));
+        }
+        // The embedding-tie group (model/step.rs) pairs the first and last
+        // pipeline stages of each (dp, tp, cp) column, first stage first.
+        if topo.pp > 1 && (ctx.is_first_stage() || ctx.is_last_stage()) {
+            let c = ctx.coord;
+            let me = if ctx.is_first_stage() { 0 } else { 1 };
+            members
+                .entry(format!("embtie@dp{}tp{}cp{}", c.dp, c.tp, c.cp))
+                .or_default()
+                .push((me, rank));
+        }
+    }
+    for (key, mut v) in members {
+        v.sort_unstable();
+        world.register_members(&key, v.into_iter().map(|(_, r)| r).collect());
+    }
+    world
+}
+
+/// Run `f` SPMD: one scoped OS thread per rank over a shared `World`,
+/// results returned in rank order. Deterministic given deterministic `f`:
+/// every collective folds in member order regardless of thread scheduling.
+///
+/// A rank panic propagates at scope join (the classic fail-fast mode);
+/// use [`try_run_spmd`] to instead survive rank failures and get a
+/// per-rank `Result` with structured hang/crash verdicts.
+pub fn run_spmd<T, F>(topo: Topology, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&RankCtx) -> T + Sync,
+{
+    let n = topo.world();
+    let world = setup_world(topo);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     // Tell the kernel thread pool how many rank threads are live so nested
     // (rank x kernel) parallelism divides — not multiplies — the CPU. The
@@ -249,6 +366,70 @@ where
     });
     out.into_iter()
         .map(|o| o.expect("rank thread panicked before producing a result"))
+        .collect()
+}
+
+/// Fault-tolerant SPMD: like [`run_spmd`], but each rank's panic is
+/// caught and classified instead of taking the whole join down. A
+/// crashing rank is marked on the `World` so peers blocked on it fail
+/// over to [`RankFailure::PeerCrashed`] immediately; a rank whose wait
+/// deadline expires comes back as [`RankFailure::Hang`] with the full
+/// structured report. The join always completes.
+pub fn try_run_spmd<T, F>(topo: Topology, f: F) -> Vec<Result<T, RankFailure>>
+where
+    T: Send,
+    F: Fn(&RankCtx) -> T + Sync,
+{
+    try_run_spmd_opts(topo, SpmdOpts::default(), f)
+}
+
+/// [`try_run_spmd`] with an explicit deadline and/or armed fault plan.
+pub fn try_run_spmd_opts<T, F>(topo: Topology, opts: SpmdOpts, f: F)
+                               -> Vec<Result<T, RankFailure>>
+where
+    T: Send,
+    F: Fn(&RankCtx) -> T + Sync,
+{
+    let n = topo.world();
+    let world = setup_world(topo);
+    if let Some(d) = opts.deadline {
+        world.set_deadline(d);
+    }
+    if let Some(plan) = opts.faults {
+        world.set_fault_plan(plan);
+    }
+    let mut out: Vec<Option<Result<T, RankFailure>>> = (0..n).map(|_| None).collect();
+    struct RankGuard(usize);
+    impl Drop for RankGuard {
+        fn drop(&mut self) {
+            crate::util::par::exit_ranks(self.0);
+        }
+    }
+    crate::util::par::enter_ranks(n);
+    let _guard = RankGuard(n);
+    std::thread::scope(|s| {
+        for (rank, slot) in out.iter_mut().enumerate() {
+            let world = world.clone();
+            let f = &f;
+            s.spawn(move || {
+                CURRENT_RANK.with(|c| c.set(Some(rank)));
+                let ctx = RankCtx::new(topo, rank, Comm::new(world.clone()));
+                let r = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| f(&ctx)));
+                *slot = Some(match r {
+                    Ok(v) => Ok(v),
+                    Err(payload) => {
+                        // peers waiting on this rank must not block until
+                        // their deadline — wake them with the crash
+                        world.mark_crashed(rank);
+                        Err(RankFailure::of_panic(rank, payload))
+                    }
+                });
+            });
+        }
+    });
+    out.into_iter()
+        .map(|o| o.expect("rank slot must be filled — panics are caught"))
         .collect()
 }
 
@@ -370,6 +551,70 @@ mod tests {
         let topo = Topology::new(2, 2, 1, 1, 1).unwrap();
         let out = run_spmd(topo, |ctx| (ctx.rank, ctx.coord.dp, ctx.coord.tp));
         assert_eq!(out, vec![(0, 0, 0), (1, 0, 1), (2, 1, 0), (3, 1, 1)]);
+    }
+
+    #[test]
+    fn try_run_spmd_survives_a_rank_crash() {
+        let topo = Topology::new(2, 1, 1, 1, 1).unwrap();
+        let out = try_run_spmd(topo, |ctx| {
+            if ctx.rank == 1 {
+                panic!("boom on rank 1");
+            }
+            // rank 0 then waits on a collective rank 1 never reaches
+            let g = ctx.dp_group();
+            ctx.comm.barrier(&g.key, g.me, g.size);
+            ctx.rank
+        });
+        assert_eq!(out.len(), 2, "the join must complete for every rank");
+        match &out[0] {
+            Err(RankFailure::PeerCrashed(p)) => {
+                assert_eq!(p.crashed, vec![1]);
+                assert_eq!(p.waiter, 0);
+            }
+            other => panic!("rank 0 must see the peer crash, got {other:?}"),
+        }
+        match &out[1] {
+            Err(RankFailure::Crashed { rank, detail }) => {
+                assert_eq!(*rank, 1);
+                assert!(detail.contains("boom"), "panic message kept: {detail}");
+            }
+            other => panic!("rank 1 must report its own crash, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn try_run_spmd_reports_hang_with_global_ranks_and_progress() {
+        use std::time::Duration;
+
+        let topo = Topology::new(2, 1, 1, 1, 1).unwrap();
+        let opts = SpmdOpts {
+            deadline: Some(Duration::from_millis(150)),
+            faults: Some(std::sync::Arc::new(
+                crate::ttrace::faults::FaultPlan::new(0).stall(1, "dp@"))),
+        };
+        let out = try_run_spmd_opts(topo, opts, |ctx| {
+            // one healthy world barrier first, so the progress ledger has
+            // an entry for the rank that then goes missing
+            let w = ctx.world_group();
+            ctx.comm.barrier(&w.key, w.me, w.size);
+            let g = ctx.dp_group();
+            ctx.comm.barrier(&g.key, g.me, g.size);
+            ctx.rank
+        });
+        match &out[0] {
+            Err(RankFailure::Hang(h)) => {
+                assert_eq!(h.op, crate::comm::OpKind::Barrier);
+                assert!(h.group.starts_with("dp@"), "group key: {}", h.group);
+                assert_eq!(h.arrived, vec![0]);
+                assert_eq!(h.missing, vec![1]);
+                let p1 = h.progress.iter().find(|p| p.rank == 1).unwrap();
+                assert!(p1.last.as_deref().unwrap_or("").contains("world"),
+                        "rank 1's last completed op must be the world \
+                         barrier, got {:?}", p1.last);
+            }
+            other => panic!("rank 0 must hang with a report, got {other:?}"),
+        }
+        assert!(out[1].is_err(), "the stalled rank must fail, not hang");
     }
 
     /// Determinism across repeated runs: collectives over every group kind

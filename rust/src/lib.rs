@@ -40,7 +40,9 @@ pub mod util;
 /// calls exchange. `use ttrace::prelude::*;` is the one import of the
 /// "<10 lines of code" integration (see `examples/external_trainer.rs`).
 pub mod prelude {
-    pub use crate::dist::Topology;
+    pub use crate::comm::{CommFailure, HangReport};
+    pub use crate::dist::{try_run_spmd, try_run_spmd_opts, RankFailure,
+                          SpmdOpts, Topology};
     pub use crate::tensor::{DType, Tensor};
     pub use crate::ttrace::analyze::{lint_config, Finding};
     pub use crate::ttrace::api::{Reference, Report, Session, SessionBuilder,
@@ -48,9 +50,11 @@ pub mod prelude {
     pub use crate::ttrace::checker::{CheckCfg, CheckOutcome};
     pub use crate::ttrace::collector::Trace;
     pub use crate::ttrace::diagnose::{Diagnosis, Dim, Phase, RunMeta};
+    pub use crate::ttrace::faults::FaultPlan;
     pub use crate::ttrace::hooks::{CanonId, Hooks, Kind, NoopHooks};
     pub use crate::ttrace::shard::ShardSpec;
-    pub use crate::ttrace::store::{StoreReader, StoreSummary, StoreWriter};
+    pub use crate::ttrace::store::{SalvageInfo, StoreReader, StoreSummary,
+                                   StoreWriter};
     pub use crate::ttrace::{localized_module, reference_of, ttrace_check,
                             TtraceRun};
 }

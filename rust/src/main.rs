@@ -18,6 +18,10 @@
 //!                  schema and collective plan against a clean layout —
 //!                  flags misconfigurations before any step runs;
 //!                  `--store` also schema-diffs a recorded `.ttrc` store
+//!   check-hang     run training under a deadline with an injected fault
+//!                  plan (`ttrace::faults` grammar) and print the
+//!                  structured hang/crash verdicts — op kind, group key,
+//!                  missing ranks, per-rank last-completed progress
 //!   train          run training and print the loss curve
 //!   bugs           list the 14 reproducible Table-1 bugs
 //!
@@ -26,8 +30,12 @@
 //!   ttrace check --model tiny --tp 2 --bug 1 --localize
 //!   ttrace record --tp 2 --reference --out ref.ttrc
 //!   ttrace record --tp 2 --bug 1 --out cand.ttrc
+//!   ttrace record --dp 2 --out torn.ttrc --checkpoint-every 8 \
+//!                 --fault 'crash@1:0/0/layers.1'
 //!   ttrace check-offline ref.ttrc cand.ttrc
+//!   ttrace check-offline ref.ttrc torn.ttrc --salvage
 //!   ttrace diagnose ref.ttrc cand.ttrc
+//!   ttrace check-hang --dp 2 --fault 'stall@1:dp@' --deadline-ms 500
 //!   ttrace inspect ref.ttrc
 //!   ttrace inspect ref.ttrc --id i0/m0/act/layers.0.mlp
 //!   ttrace lint --tp 2 --sp --bug 12
@@ -36,16 +44,19 @@
 //!   ttrace bugs
 
 use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use ttrace::bugs::{BugId, BugSet};
 use ttrace::data::{CorpusData, DataSource, GenData};
 use ttrace::dist::Topology;
-use ttrace::model::{mean_losses, preset, run_training, Engine, ParCfg};
+use ttrace::model::{mean_losses, preset, run_training, try_run_training,
+                    Engine, ParCfg};
 use ttrace::prelude::{localized_module, reference_of, ttrace_check, CheckCfg,
-                      NoopHooks, Report, Session, Sink, StoreReader,
-                      Tolerance};
+                      FaultPlan, NoopHooks, RankFailure, Report, Session,
+                      Sink, SpmdOpts, StoreReader, Tolerance};
 use ttrace::runtime::Executor;
 use ttrace::ttrace::analyze::{self, diff_schema, findings_json,
                               render_findings, ExpectedSchema,
@@ -62,13 +73,14 @@ fn main() {
         Some("record") => run(record(&argv[1..])),
         Some("check-offline") => run(check_offline(&argv[1..])),
         Some("diagnose") => run(diagnose_cmd(&argv[1..])),
+        Some("check-hang") => run(check_hang(&argv[1..])),
         Some("inspect") => run(inspect(&argv[1..])),
         Some("lint") => run(lint(&argv[1..])),
         Some("train") => run(train(&argv[1..])),
         Some("bugs") => run(bugs()),
         _ => {
             eprintln!("usage: ttrace <check|record|check-offline|diagnose|\
-                       inspect|lint|train|bugs> [options]\n\
+                       check-hang|inspect|lint|train|bugs> [options]\n\
                        run `ttrace check --help` etc. for details");
             2
         }
@@ -193,6 +205,16 @@ fn record(argv: &[String]) -> Result<i32> {
                           recorded reference matches that candidate")
         .req("out", "output .ttrc path")
         .opt("json", "", "also dump the trace as (bit-exact) debug JSON here")
+        .opt("fault", "", "inject a deterministic fault plan (ttrace::faults \
+                           grammar, e.g. 'crash@1:0/0/layers.1' or \
+                           'truncate;seed:7') — the run survives and exits \
+                           nonzero")
+        .opt("checkpoint-every", "0", "write a crash-tolerance checkpoint \
+                                       into the store every N shard payloads \
+                                       (0 = off); a torn store salvages back \
+                                       to its last checkpoint")
+        .opt("deadline-ms", "0", "rendezvous wait deadline while a fault \
+                                  plan is armed (0 = the comm default)")
         .flag("reference", "record this config's single-device reference and \
                             embed per-tensor threshold estimates");
     let args = cli.parse_from(argv)?;
@@ -231,16 +253,50 @@ fn record(argv: &[String]) -> Result<i32> {
     // a previously recorded store at the same path. `parallelism` embeds
     // the run's layout so `diagnose` can map shard rank tags to
     // (tp, cp, dp, pp) coordinates offline.
-    let mut builder = Session::builder().parallelism(&p).sink(
-        if json_path.is_empty() { Sink::Store(out.clone()) }
-        else { Sink::Tee(out.clone()) });
+    let fault_spec = args.get("fault");
+    let plan = if fault_spec.is_empty() {
+        None
+    } else {
+        Some(Arc::new(FaultPlan::parse(fault_spec)?))
+    };
+    let mut builder = Session::builder().parallelism(&p)
+        .checkpoint_every(args.get_usize("checkpoint-every")?)
+        .sink(if json_path.is_empty() { Sink::Store(out.clone()) }
+              else { Sink::Tee(out.clone()) });
     if let Some(est) = &est {
         builder = builder.embed_estimate(&est.rel, cfg.eps);
     }
-    let session = builder.build();
+    if let Some(plan) = &plan {
+        builder = builder.faults(plan.clone());
+    }
+    let mut session = builder.build();
     let engine = Engine::new(m, p.clone(), layers, &exec, bugs)?;
-    let (_, dt) = time_once(|| run_training(&engine, data.as_ref(),
-                                            session.hooks(), 1));
+    let mut failed_ranks = 0usize;
+    let dt = if let Some(plan) = &plan {
+        // fault-tolerant run: a crashed or stalled rank must not deadlock
+        // the recorder — whatever its thread-local buffers flushed before
+        // dying still reaches the store below
+        let dl = args.get_usize("deadline-ms")?;
+        let opts = SpmdOpts {
+            deadline: (dl > 0).then(|| Duration::from_millis(dl as u64)),
+            faults: Some(plan.clone()),
+        };
+        let (results, dt) = time_once(|| {
+            try_run_training(&engine, data.as_ref(), session.hooks(), 1, opts)
+        });
+        for r in &results {
+            if let Err(f) = r {
+                failed_ranks += 1;
+                eprintln!("rank failure: {f}");
+            }
+        }
+        session.note_rank_failures(&results);
+        dt
+    } else {
+        let (_, dt) = time_once(|| run_training(&engine, data.as_ref(),
+                                                session.hooks(), 1));
+        dt
+    };
     let rep = session.finish()?;
     let (_, summary) = rep.store.as_ref().expect("store sink persists");
     println!("recorded {} ({}) on {}: {} ids / {} shards, {} payload, \
@@ -254,6 +310,21 @@ fn record(argv: &[String]) -> Result<i32> {
             .save(Path::new(&json_path))?;
         println!("wrote JSON dump {} ({})", json_path,
                  fmt_bytes(std::fs::metadata(&json_path)?.len()));
+    }
+    if let Some(plan) = &plan {
+        // store-byte faults tear the sealed file after the fact — the
+        // `open_salvage` / `check-offline --salvage` drill input
+        if plan.has_store_faults() {
+            for line in plan.corrupt_store(&out)? {
+                eprintln!("injected: {line}");
+            }
+        }
+        if failed_ranks > 0 || plan.has_store_faults() {
+            eprintln!("fault injection: {} rank(s) failed; store {} is a \
+                       drill artifact, not a clean recording",
+                      failed_ranks, out.display());
+            return Ok(1);
+        }
     }
     Ok(0)
 }
@@ -269,12 +340,29 @@ fn store_pair_cli(about: &'static str) -> Cli {
         .opt("safety", "8", "threshold safety multiplier")
         .opt("rows", "32", "max report rows before passing tensors are elided")
         .opt("out", "", "write the JSON report to this path")
+        .flag("salvage", "open the candidate through the torn-store salvage \
+                          path: recover the longest valid checkpointed \
+                          prefix and report unrecovered ids as INCOMPLETE \
+                          coverage instead of failing")
 }
 
 fn open_store_pair(args: &ttrace::util::cli::Args)
                    -> Result<(StoreReader, StoreReader, Tolerance)> {
     let reference = StoreReader::open(Path::new(args.pos(0)))?;
-    let candidate = StoreReader::open(Path::new(args.pos(1)))?;
+    let candidate = if args.flag("salvage") {
+        let (reader, info) = StoreReader::open_salvage(Path::new(args.pos(1)))?;
+        if info.complete {
+            eprintln!("salvage: {} is intact — full open", args.pos(1));
+        } else {
+            eprintln!("salvage: {} recovered {} id(s) / {} shard(s) from \
+                       bytes [0, {}) of {} — the rest of the file is torn",
+                      args.pos(1), info.recovered_ids, info.recovered_shards,
+                      info.valid_prefix, info.file_len);
+        }
+        reader
+    } else {
+        StoreReader::open(Path::new(args.pos(1)))?
+    };
     let tolerance = Tolerance::new().safety(args.get_f64("safety")?);
     if reference.estimate().is_empty() {
         eprintln!("note: {} carries no threshold estimates (recorded without \
@@ -331,6 +419,87 @@ fn diagnose_cmd(argv: &[String]) -> Result<i32> {
         println!("wrote {out}");
     }
     Ok(rep.exit_code())
+}
+
+/// Robustness drill: run training under a short rendezvous deadline with
+/// an injected fault plan and print the structured hang/crash verdicts —
+/// op kind, group key, arrived-vs-missing rank sets, each missing rank's
+/// last-completed collective, and (when the static plan can place it) the
+/// planned op the hang maps to. Exit 0 when every rank completed, 1 when
+/// any rank hung or crashed.
+fn check_hang(argv: &[String]) -> Result<i32> {
+    let cli = parcfg_cli(Cli::new("run training under a deadline with an \
+                                   injected fault plan and print the \
+                                   structured hang verdicts"))
+        .opt("bug", "0", "inject Table-1 bug number (0 = none)")
+        .opt("fault", "", "fault plan (ttrace::faults grammar), e.g. \
+                           'stall@1:dp@' or 'straggler@0:tp@:50'")
+        .opt("deadline-ms", "2000", "rendezvous wait deadline per collective")
+        .opt("steps", "1", "training iterations");
+    let args = cli.parse_from(argv)?;
+    let (m, mut p, layers) = parse_parcfg(&args)?;
+    let bug_no = args.get_usize("bug")?;
+    let bugs = if bug_no == 0 {
+        BugSet::none()
+    } else {
+        let bug = find_bug(bug_no)?;
+        bug.arm_parcfg(&mut p);
+        BugSet::one(bug)
+    };
+    let fault_spec = args.get("fault");
+    let plan = if fault_spec.is_empty() {
+        None
+    } else {
+        Some(Arc::new(FaultPlan::parse(fault_spec)?))
+    };
+    let deadline = Duration::from_millis(args.get_usize("deadline-ms")? as u64);
+    let steps = args.get_usize("steps")? as u64;
+    let exec = Executor::load(ttrace::default_artifacts_dir())?;
+    let data = data_source(args.get("data"), m.v)?;
+    let mut builder = Session::builder().parallelism(&p);
+    if let Some(plan) = &plan {
+        builder = builder.faults(plan.clone());
+    }
+    let mut session = builder.build();
+    let engine = Engine::new(m, p.clone(), layers, &exec, bugs)?;
+    let opts = SpmdOpts { deadline: Some(deadline), faults: plan.clone() };
+    let (results, dt) = time_once(|| {
+        try_run_training(&engine, data.as_ref(), session.hooks(), steps, opts)
+    });
+    // the statically derived collective plan places a hang's runtime key
+    // at a named call site ("which grad-sync never happened")
+    let static_plan = analyze::CollectivePlan::build(&m, &p, layers, bugs,
+                                                     steps)?;
+    let mut failures = 0usize;
+    for r in &results {
+        let Err(f) = r else { continue };
+        failures += 1;
+        match f {
+            RankFailure::Hang(h) => {
+                println!("{}", h.render());
+                if let Some(op) = static_plan.locate(h.waiter, &h.key) {
+                    println!("  planned op: {} at site '{}' ({} elems, \
+                              group size {})",
+                             op.kind.name(), op.site, op.elems, op.size);
+                }
+            }
+            other => println!("{other}"),
+        }
+    }
+    session.note_rank_failures(&results);
+    let rep = session.finish()?;
+    if failures == 0 {
+        println!("no hangs: {} rank(s) completed {} step(s) in {} \
+                  (deadline {}ms)",
+                 p.topo.world(), steps, fmt_s(dt), deadline.as_millis());
+        Ok(0)
+    } else {
+        println!("{} of {} rank(s) failed ({} structured hang verdict(s)) \
+                  in {} — deadline {}ms",
+                 failures, p.topo.world(), rep.hangs().len(), fmt_s(dt),
+                 deadline.as_millis());
+        Ok(1)
+    }
 }
 
 fn inspect(argv: &[String]) -> Result<i32> {

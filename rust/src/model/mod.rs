@@ -14,4 +14,5 @@ mod optimizer;
 
 pub use config::{preset, ModelCfg, ParCfg, Schedule, Shapes, E2E, SMALL, TINY};
 pub use engine::{Engine, RankState};
-pub use step::{mean_losses, run_training, run_training_full};
+pub use step::{mean_losses, run_training, run_training_full,
+               try_run_training};

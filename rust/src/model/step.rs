@@ -7,7 +7,8 @@ use std::collections::HashMap;
 
 use crate::bugs::BugId;
 use crate::data::DataSource;
-use crate::dist::{run_spmd, RankCtx};
+use crate::dist::{run_spmd, try_run_spmd_opts, RankCtx, RankFailure,
+                  SpmdOpts};
 use crate::tensor::Tensor;
 use crate::ttrace::hooks::{CanonId, Hooks, Kind};
 
@@ -262,6 +263,27 @@ pub fn run_training_full(engine: &Engine, data: &dyn DataSource,
             }
         }
         (losses, norms)
+    })
+}
+
+/// Fault-tolerant twin of [`run_training`]: runs under
+/// [`crate::dist::try_run_spmd_opts`], so an injected (or organic) rank
+/// crash, stall or straggler never deadlocks the harness — each rank comes
+/// back as `Ok(losses)` or a structured [`RankFailure`] (hang report,
+/// peer-crash, or panic detail). The `opts` carry the rendezvous deadline
+/// and the armed fault plan.
+pub fn try_run_training(engine: &Engine, data: &dyn DataSource,
+                        hooks: &dyn Hooks, iters: u64, opts: SpmdOpts)
+                        -> Vec<Result<Vec<f64>, RankFailure>> {
+    try_run_spmd_opts(engine.p.topo, opts, |ctx| {
+        let mut st = engine.init_rank(ctx);
+        let mut losses = Vec::new();
+        for it in 0..iters {
+            if let Some(l) = engine.train_iter(ctx, &mut st, hooks, data, it) {
+                losses.push(l);
+            }
+        }
+        losses
     })
 }
 

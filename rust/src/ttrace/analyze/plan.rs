@@ -132,6 +132,25 @@ impl CollectivePlan {
         self.ranks.iter().find(|r| r.rank == rank)
     }
 
+    /// Map a runtime collective key — as it appears in a `HangReport`,
+    /// with the `#seq` suffix `comm` appends per group — back to the
+    /// planned op `rank` was executing. The runtime numbers each group's
+    /// ops 1-based in issue order and the plan lists them in the same
+    /// order, so key `g#n` is the n-th planned op on group `g`. This is
+    /// what lets a hang verdict say *which* grad-sync or p2p edge a rank
+    /// never reached, not just its group key.
+    pub fn locate(&self, rank: usize, key: &str) -> Option<&PlannedOp> {
+        let (group, seq) = match key.rsplit_once('#') {
+            Some((g, s)) => (g, s.parse::<usize>().ok()?),
+            None => (key, 1),
+        };
+        self.rank(rank)?
+            .ops
+            .iter()
+            .filter(|o| o.group == group)
+            .nth(seq.checked_sub(1)?)
+    }
+
     /// Total op count across all ranks.
     pub fn op_count(&self) -> usize {
         self.ranks.iter().map(|r| r.ops.len()).sum()

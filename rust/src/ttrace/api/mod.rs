@@ -48,17 +48,20 @@ pub use tracer::Tracer;
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::bugs::BugSet;
-use crate::dist::Topology;
+use crate::comm::HangReport;
+use crate::dist::{RankFailure, Topology};
 use crate::model::{ModelCfg, ParCfg};
 
 use super::analyze::{lint_config, Finding};
 use super::checker::{check_traces, CheckCfg};
 use super::collector::{Collector, Mode, Trace};
-use super::diagnose::{diagnose, RunMeta};
+use super::diagnose::{diagnose, note_hangs, RunMeta};
+use super::faults::FaultPlan;
 use super::hooks::{Hooks, Kind};
 use super::store::{write_trace, StoreReader, StoreWriter};
 
@@ -210,6 +213,8 @@ pub struct SessionBuilder {
     reference: Reference,
     embed: Option<(HashMap<String, f64>, f64)>,
     diagnose: bool,
+    faults: Option<Arc<FaultPlan>>,
+    checkpoint_every: usize,
 }
 
 impl SessionBuilder {
@@ -223,6 +228,8 @@ impl SessionBuilder {
             reference: Reference::None,
             embed: None,
             diagnose: true,
+            faults: None,
+            checkpoint_every: 0,
         }
     }
 
@@ -309,10 +316,34 @@ impl SessionBuilder {
         self
     }
 
+    /// Arm a deterministic [`FaultPlan`] on this session's recording path:
+    /// `drop` faults silently discard matching entries and `crash` faults
+    /// panic the matching rank mid-record (robustness drills — see
+    /// `ttrace::faults`). Share the same plan with
+    /// `dist::SpmdOpts::faults` to also inject collective-level stalls
+    /// and stragglers.
+    pub fn faults(mut self, plan: Arc<FaultPlan>) -> SessionBuilder {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Write a crash-tolerance checkpoint into the `.ttrc` store every `n`
+    /// shard payloads (0 = off, the default). A checkpointed store that is
+    /// torn mid-write — rank crash, SIGKILL, full disk — salvages back to
+    /// its last checkpoint via `StoreReader::open_salvage` instead of
+    /// losing the whole recording. Only meaningful with a store sink.
+    pub fn checkpoint_every(mut self, n: usize) -> SessionBuilder {
+        self.checkpoint_every = n;
+        self
+    }
+
     pub fn build(self) -> Session {
         let mut collector = Collector::with_mode(self.mode.into_mode());
         if let Some(kinds) = &self.kinds {
             collector = collector.only_kinds(kinds);
+        }
+        if let Some(plan) = self.faults {
+            collector = collector.with_faults(plan);
         }
         Session {
             collector,
@@ -322,6 +353,8 @@ impl SessionBuilder {
             reference: self.reference,
             embed: self.embed,
             diagnose: self.diagnose,
+            checkpoint_every: self.checkpoint_every,
+            hangs: Vec::new(),
         }
     }
 }
@@ -346,6 +379,8 @@ pub struct Session {
     reference: Reference,
     embed: Option<(HashMap<String, f64>, f64)>,
     diagnose: bool,
+    checkpoint_every: usize,
+    hangs: Vec<HangReport>,
 }
 
 impl Session {
@@ -410,6 +445,29 @@ impl Session {
         self.diagnose = diagnose;
     }
 
+    /// Attach a hang verdict to the finishing report — a collective that
+    /// timed out is a harder fact than any numeric comparison, so the
+    /// report fails and the diagnosis leads with it.
+    pub fn note_hang(&mut self, hang: HangReport) {
+        self.hangs.push(hang);
+    }
+
+    /// Fold the per-rank outcomes of a fault-tolerant run
+    /// (`dist::try_run_spmd`) into this session: every [`RankFailure::Hang`]
+    /// becomes a hang verdict on the final [`Report`]. Crashes and
+    /// peer-crash unblocks carry no hang evidence of their own — the
+    /// partial trace they leave behind speaks through coverage instead.
+    pub fn note_rank_failures<T>(&mut self,
+                                 results: &[std::result::Result<T, RankFailure>]) {
+        for r in results {
+            if let Err(f) = r {
+                if let Some(h) = f.hang() {
+                    self.hangs.push(h.clone());
+                }
+            }
+        }
+    }
+
     /// Finish the reference `Session` (which must use an in-memory sink),
     /// then finish this session checked against it. The reference's
     /// embedded estimates (if any) become the check's thresholds.
@@ -430,13 +488,14 @@ impl Session {
     /// after `dist::run_spmd`).
     pub fn finish(self) -> Result<Report> {
         let Session { collector, meta, tolerance, sink, reference, embed,
-                      diagnose: want_diagnosis } = self;
+                      diagnose: want_diagnosis, checkpoint_every, hangs } = self;
 
         // 1. drain the collection into the sink
         let (trace, store) = match sink {
             Sink::Memory => (Some(collector.into_trace()), None),
             Sink::Store(path) => {
                 let mut w = StoreWriter::create(&path)?;
+                w.set_checkpoint_every(checkpoint_every);
                 if let Some((rel, eps)) = &embed {
                     w.set_estimate(rel, *eps);
                 }
@@ -448,6 +507,7 @@ impl Session {
             Sink::Tee(path) => {
                 let trace = collector.into_trace();
                 let mut w = StoreWriter::create(&path)?;
+                w.set_checkpoint_every(checkpoint_every);
                 if let Some((rel, eps)) = &embed {
                     w.set_estimate(rel, *eps);
                 }
@@ -473,6 +533,7 @@ impl Session {
                     trace,
                     reference_trace: None,
                     store,
+                    hangs,
                 });
             }
             Reference::InMemory { trace, estimate } => (trace, estimate),
@@ -498,8 +559,10 @@ impl Session {
         let outcome = check_traces(&reference_trace, &candidate_trace,
                                    &estimate, &cfg)?;
         let diagnosis = if want_diagnosis {
-            Some(diagnose(&outcome, &reference_trace, &candidate_trace,
-                          &meta)?)
+            let mut d = diagnose(&outcome, &reference_trace, &candidate_trace,
+                                 &meta)?;
+            note_hangs(&mut d, &hangs);
+            Some(d)
         } else {
             None
         };
@@ -512,6 +575,7 @@ impl Session {
             trace: Some(candidate_trace),
             reference_trace: Some(reference_trace),
             store,
+            hangs,
         })
     }
 }

@@ -10,13 +10,16 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
+use crate::comm::HangReport;
 use crate::util::json::Json;
 
 use super::super::checker::{CheckCfg, CheckOutcome};
 use super::super::collector::Trace;
-use super::super::diagnose::{diagnose_stores, Diagnosis, Dim, RunMeta};
+use super::super::diagnose::{diagnose_stores, note_hangs, Diagnosis, Dim,
+                             RunMeta};
 use super::super::report as report_fmt;
-use super::super::store::{check_stores, StoreReader, StoreSummary};
+use super::super::store::{check_stores, SalvageInfo, StoreReader,
+                          StoreSummary};
 use super::Tolerance;
 
 /// What one finished session (or one offline store pair) produced.
@@ -46,12 +49,18 @@ pub struct Report {
     pub reference_trace: Option<Trace>,
     /// the `.ttrc` store this session wrote, when the sink persisted one
     pub store: Option<(PathBuf, StoreSummary)>,
+    /// collectives that timed out during the run (attached via
+    /// `Session::note_rank_failures` / `Session::note_hang`); any hang
+    /// fails the report regardless of the numeric verdict
+    pub hangs: Vec<HangReport>,
 }
 
 impl Report {
-    /// `true` when nothing was checked or the check passed.
+    /// `true` when nothing was checked or the check passed — and no
+    /// collective hung: a run that never finished cannot pass.
     pub fn passed(&self) -> bool {
-        self.outcome.as_ref().map(|o| o.pass).unwrap_or(true)
+        self.hangs.is_empty()
+            && self.outcome.as_ref().map(|o| o.pass).unwrap_or(true)
     }
 
     /// Conventional process exit code: 0 pass, 1 fail.
@@ -78,15 +87,38 @@ impl Report {
             .and_then(|d| d.dims.first().map(|(dim, _)| *dim))
     }
 
+    /// The hang verdicts attached to this report — collectives that timed
+    /// out, each naming the op kind, group key, arrived-vs-missing rank
+    /// sets and per-rank last-completed progress.
+    pub fn hangs(&self) -> &[HangReport] {
+        &self.hangs
+    }
+
+    /// Fraction of the differential check's ids that could actually be
+    /// compared (1.0 for a complete run). Below 1.0 means the candidate is
+    /// a salvaged partial recording: the unrecovered ids are reported as
+    /// `incomplete` rows rather than failures.
+    pub fn coverage(&self) -> f64 {
+        self.outcome.as_ref().map(|o| o.coverage()).unwrap_or(1.0)
+    }
+
     /// Render the differential report (paper §3 step 4). At most
     /// `max_rows` *passing* tensors are listed; failing rows always show.
+    /// Hang verdicts render first — a run that never finished outranks
+    /// any tensor comparison.
     pub fn render(&self, max_rows: usize) -> String {
-        match &self.outcome {
+        let mut s = String::new();
+        for h in &self.hangs {
+            s.push_str(&h.render());
+            s.push('\n');
+        }
+        s.push_str(&match &self.outcome {
             Some(o) => report_fmt::render(o, &self.cfg, max_rows),
             None => "TTrace recording session — no reference attached, \
                      nothing was checked.\n"
                 .to_string(),
-        }
+        });
+        s
     }
 
     /// Render the dependency-aware diagnosis (module / phase / implicated
@@ -111,6 +143,26 @@ impl Report {
                 j
             }
         };
+        // any hang overrides the numeric verdict
+        root.set("pass", Json::Bool(self.passed()));
+        if !self.hangs.is_empty() {
+            root.set("hangs", Json::Arr(
+                self.hangs
+                    .iter()
+                    .map(|h| {
+                        let mut o = Json::obj();
+                        o.set("op", Json::from_str_(h.op.name()));
+                        o.set("key", Json::from_str_(&h.key));
+                        o.set("waiter", Json::from_usize(h.waiter));
+                        o.set("waited_ms",
+                              Json::from_usize(h.waited.as_millis() as usize));
+                        o.set("missing", Json::Arr(
+                            h.missing.iter().map(|&r| Json::from_usize(r))
+                                .collect()));
+                        o
+                    })
+                    .collect()));
+        }
         if let Some(d) = &self.diagnosis {
             root.set("diagnosis", report_fmt::diagnosis_json(d));
         }
@@ -131,6 +183,32 @@ impl Report {
         Report::from_readers(&r, &c, tolerance)
     }
 
+    /// [`Report::from_stores`], but the candidate may be a torn partial
+    /// store (a crashed or killed run): it is opened through
+    /// `StoreReader::open_salvage`, ids lost past the last valid
+    /// checkpoint become `incomplete` rows with a coverage fraction below
+    /// 1.0, and the salvage summary is returned alongside the report.
+    pub fn from_stores_salvage(reference: impl AsRef<Path>,
+                               candidate: impl AsRef<Path>,
+                               tolerance: &Tolerance)
+                               -> Result<(Report, SalvageInfo)> {
+        let r = StoreReader::open(reference.as_ref())?;
+        let (c, info) = StoreReader::open_salvage(candidate.as_ref())?;
+        let report = Report::from_readers(&r, &c, tolerance)?;
+        Ok((report, info))
+    }
+
+    /// Attach hang verdicts to an already-built report (the offline
+    /// equivalent of `Session::note_rank_failures`): the report fails and
+    /// the diagnosis, if present, leads with the hangs.
+    pub fn with_hangs(mut self, hangs: Vec<HangReport>) -> Report {
+        if let Some(d) = &mut self.diagnosis {
+            note_hangs(d, &hangs);
+        }
+        self.hangs.extend(hangs);
+        self
+    }
+
     /// [`Report::from_stores`] over already-opened readers.
     pub fn from_readers(reference: &StoreReader, candidate: &StoreReader,
                         tolerance: &Tolerance) -> Result<Report> {
@@ -147,7 +225,11 @@ impl Report {
 
     fn offline(reference: &StoreReader, candidate: &StoreReader,
                tolerance: &Tolerance, diagnose: bool) -> Result<Report> {
+        // A salvaged candidate legitimately overlaps in zero ids when the
+        // tear landed before its first checkpointed entry survived — that
+        // is 0% coverage, not an unrelated-runs user error.
         if !reference.is_empty() && !candidate.is_empty()
+            && !candidate.salvaged()
             && !reference.keys().any(|k| candidate.contains(k))
         {
             bail!("{} and {} share no canonical ids — the stores were \
@@ -176,6 +258,7 @@ impl Report {
             trace: None,
             reference_trace: None,
             store: None,
+            hangs: Vec::new(),
         })
     }
 }
@@ -194,6 +277,7 @@ mod tests {
             trace: None,
             reference_trace: None,
             store: None,
+            hangs: Vec::new(),
         }
     }
 

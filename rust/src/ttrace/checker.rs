@@ -63,10 +63,28 @@ pub struct CheckOutcome {
     pub missing_in_reference: Vec<String>,
     /// structural merge failures (omission, shape mismatch)
     pub merge_errors: Vec<(String, String)>,
+    /// reference ids the candidate could not hold because its store is a
+    /// salvaged partial recording (crash/truncation) — reported, with a
+    /// coverage fraction, instead of failing the check: absence of
+    /// evidence from a torn store is not evidence of divergence
+    pub incomplete: Vec<String>,
     pub pass: bool,
 }
 
 impl CheckOutcome {
+    /// Fraction of the reference's canonical ids the candidate actually
+    /// held — 1.0 for a complete candidate, < 1.0 when a salvaged partial
+    /// store left `incomplete` (or outright missing) rows.
+    pub fn coverage(&self) -> f64 {
+        let compared = self.checks.len() + self.merge_errors.len();
+        let total = compared + self.missing_in_candidate.len()
+            + self.incomplete.len();
+        if total == 0 {
+            return 1.0;
+        }
+        compared as f64 / total as f64
+    }
+
     /// First failing check in computation order — the localization signal
     /// (§3 step 5: with input rewriting this points at the buggy module).
     pub fn first_divergence(&self) -> Option<&TensorCheck> {

@@ -222,20 +222,49 @@ pub struct Collector {
     mode: Mode,
     /// kinds to record (e.g. skip params for activation-only studies)
     kinds: Option<Vec<Kind>>,
+    /// armed fault-injection plan (crash / dropped-entry faults)
+    faults: Option<Arc<super::faults::FaultPlan>>,
 }
 
 impl Collector {
     pub fn new() -> Collector {
-        Collector { shared: Arc::default(), mode: Mode::Record, kinds: None }
+        Collector { shared: Arc::default(), mode: Mode::Record, kinds: None,
+                    faults: None }
     }
 
     pub fn with_mode(mode: Mode) -> Collector {
-        Collector { shared: Arc::default(), mode, kinds: None }
+        Collector { shared: Arc::default(), mode, kinds: None, faults: None }
     }
 
     pub fn only_kinds(mut self, kinds: &[Kind]) -> Collector {
         self.kinds = Some(kinds.to_vec());
         self
+    }
+
+    /// Arm a fault plan on the record path (crash / dropped entries).
+    pub fn with_faults(mut self, plan: Arc<super::faults::FaultPlan>) -> Collector {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// The fault-injection gate on the record path: returns false to
+    /// silently drop the entry (`DropTrace`); a `Crash` fault panics the
+    /// recording rank right here. The thread-local buffer's `Drop` runs
+    /// during the unwind and flushes everything the rank recorded before
+    /// the crash — which is exactly what makes a crashed rank's partial
+    /// trace salvageable.
+    fn fault_gate(&self, id: &CanonId) -> bool {
+        let Some(plan) = &self.faults else { return true };
+        let rank = crate::dist::current_rank().unwrap_or(0);
+        match plan.on_record(rank, id.iter, id.micro, &id.module) {
+            super::faults::RecordAction::Keep => true,
+            super::faults::RecordAction::Drop => false,
+            super::faults::RecordAction::Crash => std::panic::panic_any(
+                crate::comm::CommFailure::Injected {
+                    rank,
+                    site: format!("crash while recording '{}'", id.key()),
+                }),
+        }
     }
 
     fn wants(&self, kind: Kind) -> bool {
@@ -332,11 +361,17 @@ impl Hooks for Collector {
         if !self.wants(id.kind) {
             return; // filtered kinds never pay the clone
         }
+        if !self.fault_gate(id) {
+            return;
+        }
         self.push(id.key(), spec, t.clone());
     }
 
     fn record_owned(&self, id: &CanonId, t: Tensor, spec: &ShardSpec) {
         if !self.wants(id.kind) {
+            return;
+        }
+        if !self.fault_gate(id) {
             return;
         }
         self.push(id.key(), spec, t);

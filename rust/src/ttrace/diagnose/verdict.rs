@@ -164,6 +164,13 @@ pub fn diagnose(outcome: &CheckOutcome, reference: &dyn EntrySource,
             "{} id(s) missing in the candidate (first: {k})",
             outcome.missing_in_candidate.len()));
     }
+    if let Some(k) = outcome.incomplete.first() {
+        d.notes.push(format!(
+            "candidate is a salvaged partial recording: coverage {:.0}% \
+             ({} id(s) unrecovered; first: {k}) — verdicts cover the \
+             recovered prefix only",
+            outcome.coverage() * 100.0, outcome.incomplete.len()));
+    }
 
     // per-shard attribution over the head of the frontier
     let mut reports: Vec<IdReport> = Vec::new();
@@ -204,6 +211,31 @@ pub fn diagnose(outcome: &CheckOutcome, reference: &dyn EntrySource,
     });
     d.frontier = suspects;
     Ok(d)
+}
+
+/// Fold communication hang reports into a diagnosis. A rank that never
+/// arrived at a collective is a harder fact than any numeric divergence:
+/// the run did not finish, so the hang is named first — op kind, group
+/// key, the missing rank set, and each missing rank's last completed
+/// collective from the progress ledger ("rank 3 never reached the dp
+/// grad-sync; last completed: all_gather 'tp@pp0dp1cp0#12'").
+pub fn note_hangs(d: &mut Diagnosis, hangs: &[crate::comm::HangReport]) {
+    for (i, h) in hangs.iter().enumerate() {
+        d.pass = false;
+        let mut msg = format!(
+            "hang: {} on '{}' timed out after {}ms — rank(s) {:?} never \
+             arrived (rank {} was waiting)",
+            h.op, h.key, h.waited.as_millis(), h.missing, h.waiter);
+        for m in &h.missing {
+            let last = h.progress.iter().find(|p| p.rank == *m)
+                .and_then(|p| p.last.as_deref());
+            msg.push_str(&match last {
+                Some(op) => format!("; rank {m} last completed: {op}"),
+                None => format!("; rank {m} completed no collective"),
+            });
+        }
+        d.notes.insert(i, msg);
+    }
 }
 
 /// The offline wiring: differential-check two `.ttrc` stores and diagnose

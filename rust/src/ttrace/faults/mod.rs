@@ -1,0 +1,439 @@
+//! Deterministic, seeded fault injection for robustness testing.
+//!
+//! TTrace exists to debug broken distributed training runs, so its own
+//! harness must be tested *against* broken runs: ranks that crash
+//! mid-step, ranks that never reach a collective, stragglers, silently
+//! dropped trace entries, and torn `.ttrc` files. A [`FaultPlan`] is a
+//! declarative list of such faults, armed on a run via the `--fault` CLI
+//! flag, [`crate::ttrace::api::SessionBuilder::faults`], or
+//! [`crate::dist::SpmdOpts`]. Every fault is deterministic: the same plan
+//! (and seed, for the store-corruption faults that pick their own
+//! offsets) reproduces the same failure bit-for-bit.
+//!
+//! The injection points are the narrow waists of the system:
+//!  - `Stall` / `Straggler` fire in [`crate::comm::Comm`] before a rank
+//!    deposits into a collective rendezvous — a stalled rank simply never
+//!    arrives, which is what exercises the peers' hang deadline.
+//!  - `Crash` / `DropTrace` fire in the collector's record path, where
+//!    the canonical id (iter, micro, module) and rank are both in hand.
+//!  - `Truncate` / `BitFlip` corrupt a sealed store file after the fact,
+//!    simulating a torn write for [`StoreReader::open_salvage`]
+//!    (`crate::ttrace::store::StoreReader::open_salvage`) to recover.
+
+use std::fmt;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// What a collective call site should do for this (rank, group).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollAction {
+    /// No fault armed here: proceed normally.
+    Proceed,
+    /// Straggler: arrive late by this much, then proceed normally.
+    Delay(Duration),
+    /// Stalled rank: never arrive at the rendezvous.
+    Stall,
+}
+
+/// What the collector's record path should do for this (rank, id).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecordAction {
+    /// No fault armed here: record normally.
+    Keep,
+    /// Silently drop this trace entry (a lossy-collection fault).
+    Drop,
+    /// Panic this rank right here (a mid-step crash).
+    Crash,
+}
+
+/// One injected fault.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Rank panics when it records the entry at (iter, micro, module).
+    Crash { rank: usize, iter: u64, micro: u32, module: String },
+    /// Rank never arrives at collectives whose group key contains `group`.
+    Stall { rank: usize, group: String },
+    /// Rank arrives `delay` late at collectives whose key contains `group`.
+    Straggler { rank: usize, group: String, delay: Duration },
+    /// Trace entries on `rank` whose module contains `module` are dropped.
+    DropTrace { rank: usize, module: String },
+    /// Cut the sealed store file short. `bytes` is the number of trailing
+    /// bytes to remove; `None` derives a cut point from the plan seed.
+    Truncate { bytes: Option<u64> },
+    /// XOR one bit of the sealed store file. `offset` is the byte to hit;
+    /// `None` derives byte and bit from the plan seed.
+    BitFlip { offset: Option<u64> },
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Fault::Crash { rank, iter, micro, module } => {
+                write!(f, "crash@{rank}:{iter}/{micro}/{module}")
+            }
+            Fault::Stall { rank, group } => write!(f, "stall@{rank}:{group}"),
+            Fault::Straggler { rank, group, delay } => {
+                write!(f, "straggler@{rank}:{group}:{}", delay.as_millis())
+            }
+            Fault::DropTrace { rank, module } => write!(f, "drop@{rank}:{module}"),
+            Fault::Truncate { bytes: Some(b) } => write!(f, "truncate:{b}"),
+            Fault::Truncate { bytes: None } => write!(f, "truncate"),
+            Fault::BitFlip { offset: Some(o) } => write!(f, "bitflip:{o}"),
+            Fault::BitFlip { offset: None } => write!(f, "bitflip"),
+        }
+    }
+}
+
+/// A deterministic set of faults to inject into one run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seeds the store-corruption faults that pick their own offsets.
+    pub seed: u64,
+    faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, faults: Vec::new() }
+    }
+
+    /// Parse a `;`-separated fault spec string (the `--fault` CLI format):
+    ///
+    /// ```text
+    /// crash@<rank>:<iter>/<micro>/<module>   rank panics recording that id
+    /// stall@<rank>:<group-substr>            rank never reaches the group
+    /// straggler@<rank>:<group-substr>:<ms>   rank arrives <ms> late
+    /// drop@<rank>:<module-substr>            rank's entries are dropped
+    /// truncate[:<bytes>]                     cut the sealed store short
+    /// bitflip[:<offset>]                     flip one stored bit
+    /// seed:<n>                               seed for derived offsets
+    /// ```
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new(0);
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            plan.push_spec(part)
+                .with_context(|| format!("fault spec '{part}'"))?;
+        }
+        if plan.is_empty() {
+            bail!("fault spec '{spec}' names no faults");
+        }
+        Ok(plan)
+    }
+
+    fn push_spec(&mut self, part: &str) -> Result<()> {
+        if let Some(n) = part.strip_prefix("seed:") {
+            self.seed = n.parse().context("seed must be an integer")?;
+            return Ok(());
+        }
+        let (head, args) = match part.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (part, None),
+        };
+        let (kind, rank) = match head.split_once('@') {
+            Some((k, r)) => {
+                let r: usize = r.parse()
+                    .with_context(|| format!("rank '{r}' must be an integer"))?;
+                (k, Some(r))
+            }
+            None => (head, None),
+        };
+        let need_rank = || rank.context("this fault needs a '@<rank>' suffix");
+        let need_args = || args.context("this fault needs ':<args>'");
+        match kind {
+            "crash" => {
+                let a = need_args()?;
+                let mut it = a.splitn(3, '/');
+                let (i, m, module) = (it.next(), it.next(), it.next());
+                let (Some(i), Some(m), Some(module)) = (i, m, module) else {
+                    bail!("crash wants ':<iter>/<micro>/<module>', got ':{a}'");
+                };
+                self.faults.push(Fault::Crash {
+                    rank: need_rank()?,
+                    iter: i.trim_start_matches('i').parse()
+                        .with_context(|| format!("iter '{i}'"))?,
+                    micro: m.trim_start_matches('m').parse()
+                        .with_context(|| format!("micro '{m}'"))?,
+                    module: module.to_string(),
+                });
+            }
+            "stall" => self.faults.push(Fault::Stall {
+                rank: need_rank()?,
+                group: need_args()?.to_string(),
+            }),
+            "straggler" => {
+                let a = need_args()?;
+                let (group, ms) = a.rsplit_once(':')
+                    .context("straggler wants ':<group>:<ms>'")?;
+                self.faults.push(Fault::Straggler {
+                    rank: need_rank()?,
+                    group: group.to_string(),
+                    delay: Duration::from_millis(
+                        ms.parse().with_context(|| format!("delay ms '{ms}'"))?),
+                });
+            }
+            "drop" => self.faults.push(Fault::DropTrace {
+                rank: need_rank()?,
+                module: need_args()?.to_string(),
+            }),
+            "truncate" => self.faults.push(Fault::Truncate {
+                bytes: args.map(str::parse).transpose()
+                    .context("truncate bytes must be an integer")?,
+            }),
+            "bitflip" => self.faults.push(Fault::BitFlip {
+                offset: args.map(str::parse).transpose()
+                    .context("bitflip offset must be an integer")?,
+            }),
+            other => bail!("unknown fault kind '{other}' (want crash, stall, \
+                            straggler, drop, truncate, bitflip, or seed)"),
+        }
+        Ok(())
+    }
+
+    // ---- builder API (tests, benches) -----------------------------------
+
+    pub fn crash(mut self, rank: usize, iter: u64, micro: u32,
+                 module: impl Into<String>) -> FaultPlan {
+        self.faults.push(Fault::Crash { rank, iter, micro, module: module.into() });
+        self
+    }
+
+    pub fn stall(mut self, rank: usize, group: impl Into<String>) -> FaultPlan {
+        self.faults.push(Fault::Stall { rank, group: group.into() });
+        self
+    }
+
+    pub fn straggler(mut self, rank: usize, group: impl Into<String>,
+                     delay: Duration) -> FaultPlan {
+        self.faults.push(Fault::Straggler { rank, group: group.into(), delay });
+        self
+    }
+
+    pub fn drop_trace(mut self, rank: usize, module: impl Into<String>) -> FaultPlan {
+        self.faults.push(Fault::DropTrace { rank, module: module.into() });
+        self
+    }
+
+    pub fn truncate(mut self, bytes: Option<u64>) -> FaultPlan {
+        self.faults.push(Fault::Truncate { bytes });
+        self
+    }
+
+    pub fn bit_flip(mut self, offset: Option<u64>) -> FaultPlan {
+        self.faults.push(Fault::BitFlip { offset });
+        self
+    }
+
+    // ---- queries (the injection points call these) ----------------------
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// True if the plan carries store-corruption faults (truncate/bitflip).
+    pub fn has_store_faults(&self) -> bool {
+        self.faults.iter().any(|f| matches!(
+            f, Fault::Truncate { .. } | Fault::BitFlip { .. }))
+    }
+
+    /// Collective gate: what should `rank`, about to enter a collective on
+    /// `group` (the rendezvous key), do? `Stall` wins over `Delay` if both
+    /// somehow match.
+    pub fn on_collective(&self, rank: usize, group: &str) -> CollAction {
+        let mut action = CollAction::Proceed;
+        for f in &self.faults {
+            match f {
+                Fault::Stall { rank: r, group: g }
+                    if *r == rank && group.contains(g.as_str()) => {
+                    return CollAction::Stall;
+                }
+                Fault::Straggler { rank: r, group: g, delay }
+                    if *r == rank && group.contains(g.as_str()) => {
+                    action = CollAction::Delay(*delay);
+                }
+                _ => {}
+            }
+        }
+        action
+    }
+
+    /// Record gate: what should the collector do with `rank`'s entry at
+    /// (iter, micro, module)? `Crash` wins over `Drop`.
+    pub fn on_record(&self, rank: usize, iter: u64, micro: u32,
+                     module: &str) -> RecordAction {
+        let mut action = RecordAction::Keep;
+        for f in &self.faults {
+            match f {
+                Fault::Crash { rank: r, iter: i, micro: m, module: md }
+                    if *r == rank && *i == iter && *m == micro
+                        && module == md.as_str() => {
+                    return RecordAction::Crash;
+                }
+                Fault::DropTrace { rank: r, module: md }
+                    if *r == rank && module.contains(md.as_str()) => {
+                    action = RecordAction::Drop;
+                }
+                _ => {}
+            }
+        }
+        action
+    }
+
+    /// Apply the plan's store-corruption faults to a sealed `.ttrc` file in
+    /// place, returning one description per corruption applied. Offsets
+    /// left unspecified derive deterministically from the plan seed and the
+    /// file length, and always land past the 8-byte header so the fault
+    /// exercises salvage rather than the trivial magic/version checks.
+    pub fn corrupt_store(&self, path: &Path) -> Result<Vec<String>> {
+        let mut applied = Vec::new();
+        let mut salt = 0u64;
+        for f in &self.faults {
+            match f {
+                Fault::Truncate { bytes } => {
+                    let len = std::fs::metadata(path)
+                        .with_context(|| format!("stat {}", path.display()))?
+                        .len();
+                    let cut = match bytes {
+                        Some(b) => (*b).min(len.saturating_sub(8)),
+                        None => {
+                            salt += 1;
+                            let span = len.saturating_sub(8).max(1);
+                            1 + splitmix64(self.seed ^ salt) % span
+                        }
+                    };
+                    let keep = len - cut;
+                    let file = std::fs::OpenOptions::new().write(true).open(path)
+                        .with_context(|| format!("open {}", path.display()))?;
+                    file.set_len(keep)
+                        .with_context(|| format!("truncate {}", path.display()))?;
+                    applied.push(format!(
+                        "truncated {} from {len} to {keep} bytes", path.display()));
+                }
+                Fault::BitFlip { offset } => {
+                    let mut data = std::fs::read(path)
+                        .with_context(|| format!("read {}", path.display()))?;
+                    if data.len() <= 8 {
+                        bail!("store {} too short to corrupt", path.display());
+                    }
+                    salt += 1;
+                    let h = splitmix64(self.seed ^ salt);
+                    let at = match offset {
+                        Some(o) => (*o as usize).min(data.len() - 1),
+                        None => 8 + (h as usize) % (data.len() - 8),
+                    };
+                    let bit = (h >> 32) % 8;
+                    data[at] ^= 1 << bit;
+                    std::fs::write(path, &data)
+                        .with_context(|| format!("rewrite {}", path.display()))?;
+                    applied.push(format!(
+                        "flipped bit {bit} of byte {at} in {}", path.display()));
+                }
+                _ => {}
+            }
+        }
+        Ok(applied)
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.seed != 0 {
+            write!(f, "seed:{}", self.seed)?;
+            if !self.faults.is_empty() {
+                write!(f, ";")?;
+            }
+        }
+        for (i, fault) in self.faults.iter().enumerate() {
+            if i > 0 {
+                write!(f, ";")?;
+            }
+            write!(f, "{fault}")?;
+        }
+        Ok(())
+    }
+}
+
+/// SplitMix64: the one-shot mixer seeding derived corruption offsets.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_kind() {
+        let spec = "seed:7;crash@1:0/0/layers.0.mlp;stall@2:dpcp;\
+                    straggler@0:tp:50;drop@3:attn;truncate:128;bitflip:4096";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.faults().len(), 6);
+        let rt = FaultPlan::parse(&plan.to_string()).unwrap();
+        assert_eq!(plan, rt, "display must round-trip through parse");
+    }
+
+    #[test]
+    fn parse_rejects_garbage_with_context() {
+        for bad in ["", "explode@1:x", "crash@1:nope", "stall:dp",
+                    "straggler@0:tp", "truncate:many"] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn collective_gate_matches_rank_and_group() {
+        let plan = FaultPlan::new(0)
+            .stall(2, "dpcp")
+            .straggler(1, "tp@", Duration::from_millis(5));
+        assert_eq!(plan.on_collective(2, "dpcp@pp0tp0#3"), CollAction::Stall);
+        assert_eq!(plan.on_collective(0, "dpcp@pp0tp0#3"), CollAction::Proceed);
+        assert_eq!(plan.on_collective(2, "tp@pp0dp0cp0#1"), CollAction::Proceed);
+        assert_eq!(plan.on_collective(1, "tp@pp0dp0cp0#1"),
+                   CollAction::Delay(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn record_gate_matches_exact_id_and_module_substring() {
+        let plan = FaultPlan::new(0)
+            .crash(1, 0, 2, "layers.0.mlp")
+            .drop_trace(0, "attn");
+        assert_eq!(plan.on_record(1, 0, 2, "layers.0.mlp"), RecordAction::Crash);
+        assert_eq!(plan.on_record(1, 0, 1, "layers.0.mlp"), RecordAction::Keep);
+        assert_eq!(plan.on_record(1, 1, 2, "layers.0.mlp"), RecordAction::Keep);
+        assert_eq!(plan.on_record(0, 0, 0, "layers.3.attn"), RecordAction::Drop);
+        assert_eq!(plan.on_record(0, 0, 0, "layers.3.mlp"), RecordAction::Keep);
+    }
+
+    #[test]
+    fn corrupt_store_is_deterministic_per_seed() {
+        let dir = std::env::temp_dir().join("ttrace_faults_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("corrupt_det.bin");
+        let orig: Vec<u8> = (0..255u8).cycle().take(4096).collect();
+
+        let run = |seed| {
+            std::fs::write(&p, &orig).unwrap();
+            let plan = FaultPlan::new(seed).truncate(None).bit_flip(None);
+            plan.corrupt_store(&p).unwrap();
+            std::fs::read(&p).unwrap()
+        };
+        let a = run(11);
+        let b = run(11);
+        let c = run(12);
+        assert_eq!(a, b, "same seed must corrupt identically");
+        assert!(a.len() < orig.len(), "truncate must shorten the file");
+        assert_ne!(a, c, "different seeds must corrupt differently");
+        // the header is never the (derived) target
+        assert_eq!(&a[..8], &orig[..8]);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -19,6 +19,7 @@ pub mod canonical;
 pub mod checker;
 pub mod collector;
 pub mod diagnose;
+pub mod faults;
 pub mod gen;
 pub mod hooks;
 pub mod merger;
@@ -33,6 +34,7 @@ pub use api::{Reference, Report, Session, SessionBuilder, Sink, Tolerance,
               TraceMode, Tracer};
 pub use checker::{check_traces, CheckCfg, CheckOutcome};
 pub use diagnose::{diagnose_stores, Diagnosis, RunMeta};
+pub use faults::FaultPlan;
 pub use runner::{localized_module, reference_of, ttrace_check, TtraceRun};
 pub use collector::{Collector, Trace};
 pub use hooks::{CanonId, Hooks, Kind, NoopHooks};

@@ -51,6 +51,14 @@ pub fn render(outcome: &CheckOutcome, cfg: &CheckCfg, max_rows: usize) -> String
                             outcome.missing_in_candidate.len(),
                             outcome.missing_in_candidate[0]));
     }
+    if !outcome.incomplete.is_empty() {
+        s.push_str(&format!(
+            "INCOMPLETE: {} tensors lost past the candidate's last valid \
+             checkpoint (first: {}) — coverage {:.0}%, verdicts apply to \
+             the recovered prefix only\n",
+            outcome.incomplete.len(), outcome.incomplete[0],
+            outcome.coverage() * 100.0));
+    }
     s.push('\n');
     if outcome.pass {
         s.push_str("VERDICT: PASS — candidate matches the reference within \
@@ -92,6 +100,11 @@ pub fn to_json(outcome: &CheckOutcome, cfg: &CheckCfg) -> Json {
         outcome.merge_errors.iter()
             .map(|(k, e)| Json::from_str_(&format!("{k}: {e}")))
             .collect()));
+    if !outcome.incomplete.is_empty() {
+        root.set("coverage", Json::from_f64(outcome.coverage()));
+        root.set("incomplete", Json::Arr(
+            outcome.incomplete.iter().map(|k| Json::from_str_(k)).collect()));
+    }
     root
 }
 

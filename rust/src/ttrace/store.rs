@@ -44,6 +44,21 @@
 //! the two sits [`check_stores`], the streaming offline checker: peak
 //! memory is one canonical id's shards per worker instead of two whole
 //! traces.
+//!
+//! ## Crash tolerance
+//!
+//! The writer streams into `<name>.ttrc.tmp` and atomically renames on
+//! `finish`, so a sealed path never holds a half-written file. For runs
+//! that may die mid-recording, [`StoreWriter::set_checkpoint_every`] embeds
+//! a self-delimiting `TTCK` checkpoint block in the payload region every N
+//! shards: the block carries an FNV-1a hash of the entire file prefix
+//! before it plus a serialized copy of the index so far (same encoding as
+//! the final sections), and is itself hash-sealed. A torn file — truncated
+//! tail, missing trailer, flipped byte — is recovered by
+//! [`StoreReader::open_salvage`], which rescans for the last checkpoint
+//! whose prefix hash and block hash both verify and serves every shard
+//! recorded before it. Checkpoints are off by default, so default stores
+//! stay byte-identical to earlier versions.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::fs;
@@ -65,6 +80,10 @@ const MAGIC: &[u8; 4] = b"TTRC";
 const VERSION: u16 = 2;
 const HEADER_LEN: u64 = 8;
 const TRAILER_LEN: u64 = 40;
+/// Checkpoint block magic (payload region, `set_checkpoint_every`).
+const CKPT_MAGIC: &[u8; 4] = b"TTCK";
+/// magic + self offset + prefix hash + 4 section offsets + blob length
+const CKPT_HEADER_LEN: u64 = 4 + 8 + 8 + 32 + 4;
 
 /// How a shard's payload bytes encode its f32 values.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -101,6 +120,21 @@ pub struct StoreSummary {
     pub shards: usize,
     pub payload_bytes: u64,
     pub file_bytes: u64,
+}
+
+/// What `StoreReader::open_salvage` recovered from a (possibly torn) store.
+#[derive(Clone, Debug)]
+pub struct SalvageInfo {
+    /// The file opened cleanly — nothing was lost.
+    pub complete: bool,
+    /// Canonical ids served by the recovered index.
+    pub recovered_ids: usize,
+    /// Shards served by the recovered index.
+    pub recovered_shards: usize,
+    /// Every byte in `[0, valid_prefix)` is hash-verified.
+    pub valid_prefix: u64,
+    /// Length of the file as found on disk.
+    pub file_len: u64,
 }
 
 // ---- little-endian serialization helpers -------------------------------
@@ -208,7 +242,10 @@ fn checksum_of(file: &fs::File, len: u64, path: &Path) -> Result<u64> {
 /// ascending rank order), only index metadata stays in memory until
 /// `finish` seals the file. Same inputs produce byte-identical files.
 pub struct StoreWriter {
+    /// final (sealed) path — `finish` renames `tmp` onto it
     path: PathBuf,
+    /// the `<path>.tmp` file all writes actually go to
+    tmp: PathBuf,
     file: fs::File,
     hash: u64,
     offset: u64,
@@ -216,6 +253,16 @@ pub struct StoreWriter {
     estimate: BTreeMap<String, f64>,
     estimate_eps: f64,
     run_meta: Option<RunMeta>,
+    /// write a `TTCK` checkpoint block every this many shards (0 = never)
+    checkpoint_every: usize,
+    shards_since_checkpoint: usize,
+}
+
+/// `<path>.tmp` — where an unsealed writer's bytes live.
+fn tmp_path_of(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
 }
 
 impl StoreWriter {
@@ -226,10 +273,12 @@ impl StoreWriter {
                     .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
             }
         }
-        let file = fs::File::create(path)
-            .map_err(|e| anyhow!("creating {}: {e}", path.display()))?;
+        let tmp = tmp_path_of(path);
+        let file = fs::File::create(&tmp)
+            .map_err(|e| anyhow!("creating {}: {e}", tmp.display()))?;
         let mut w = StoreWriter {
             path: path.to_path_buf(),
+            tmp,
             file,
             hash: FNV_OFFSET_BASIS,
             offset: 0,
@@ -237,6 +286,8 @@ impl StoreWriter {
             estimate: BTreeMap::new(),
             estimate_eps: 0.0,
             run_meta: None,
+            checkpoint_every: 0,
+            shards_since_checkpoint: 0,
         };
         let mut head = Vec::with_capacity(HEADER_LEN as usize);
         head.extend_from_slice(MAGIC);
@@ -246,11 +297,18 @@ impl StoreWriter {
         Ok(w)
     }
 
+    /// Embed a checkpoint block after every `n` appended shards (0 turns
+    /// checkpointing off — the default, which keeps files byte-identical
+    /// to stores written without this call).
+    pub fn set_checkpoint_every(&mut self, n: usize) {
+        self.checkpoint_every = n;
+    }
+
     fn write_bytes(&mut self, b: &[u8]) -> Result<()> {
         self.hash = fnv1a_update(self.hash, b);
         self.file
             .write_all(b)
-            .map_err(|e| anyhow!("writing {}: {e}", self.path.display()))?;
+            .map_err(|e| anyhow!("writing {}: {e}", self.tmp.display()))?;
         self.offset += b.len() as u64;
         Ok(())
     }
@@ -298,7 +356,41 @@ impl StoreWriter {
         };
         self.write_bytes(&bytes)?;
         self.index.entry(key.to_string()).or_default().push(meta);
+        if self.checkpoint_every > 0 {
+            self.shards_since_checkpoint += 1;
+            if self.shards_since_checkpoint >= self.checkpoint_every {
+                self.write_checkpoint()?;
+                self.shards_since_checkpoint = 0;
+            }
+        }
         Ok(())
+    }
+
+    /// Write one self-delimiting `TTCK` block into the payload region:
+    /// header (self offset, FNV-1a of the whole file prefix before the
+    /// block, the four section offsets, blob length), a serialized copy of
+    /// the sections so far, then an FNV-1a hash of the block itself.
+    /// `open_salvage` recovers a torn file from the last block whose
+    /// prefix hash and block hash both verify.
+    fn write_checkpoint(&mut self) -> Result<()> {
+        let prefix_hash = self.hash;
+        let self_off = self.offset;
+        let (blob, offs) = encode_sections(&self.index, &self.estimate,
+                                           self.estimate_eps, &self.run_meta,
+                                           self_off + CKPT_HEADER_LEN);
+        let mut block = Vec::with_capacity(CKPT_HEADER_LEN as usize
+                                           + blob.len() + 8);
+        block.extend_from_slice(CKPT_MAGIC);
+        put_u64(&mut block, self_off);
+        put_u64(&mut block, prefix_hash);
+        for o in offs {
+            put_u64(&mut block, o);
+        }
+        put_u32(&mut block, blob.len() as u32);
+        block.extend_from_slice(&blob);
+        let block_hash = fnv1a_update(FNV_OFFSET_BASIS, &block);
+        put_u64(&mut block, block_hash);
+        self.write_bytes(&block)
     }
 
     /// Embed the §5.2 per-tensor threshold estimates (reference stores
@@ -317,93 +409,101 @@ impl StoreWriter {
         self.run_meta = Some(meta.clone());
     }
 
-    /// Write string table, index, estimates and trailer; seal the file.
+    /// Write string table, index, estimates and trailer; seal the file by
+    /// renaming `<path>.tmp` onto the final path (atomic on POSIX, so the
+    /// sealed path never holds a half-written store).
     pub fn finish(mut self) -> Result<StoreSummary> {
-        let index = std::mem::take(&mut self.index);
-        let estimate = std::mem::take(&mut self.estimate);
-        let eps = self.estimate_eps;
-
-        let mut names: BTreeSet<String> = index.keys().cloned().collect();
-        names.extend(estimate.keys().cloned());
-        let sid: HashMap<String, u32> = names
-            .iter()
-            .enumerate()
-            .map(|(i, s)| (s.clone(), i as u32))
-            .collect();
-
         let string_table_offset = self.offset;
-        let mut buf = Vec::new();
-        put_u32(&mut buf, names.len() as u32);
-        for s in &names {
-            put_str(&mut buf, s);
-        }
-        self.write_bytes(&buf)?;
-
-        let index_offset = self.offset;
-        let mut buf = Vec::new();
-        put_u32(&mut buf, index.len() as u32);
-        let mut shards = 0usize;
-        for (key, metas) in &index {
-            put_u32(&mut buf, sid[key]);
-            put_u32(&mut buf, metas.len() as u32);
-            for m in metas {
-                put_shard(&mut buf, m);
-                shards += 1;
-            }
-        }
-        self.write_bytes(&buf)?;
-
-        let estimates_offset = self.offset;
-        let mut buf = Vec::new();
-        put_u64(&mut buf, eps.to_bits());
-        put_u32(&mut buf, estimate.len() as u32);
-        for (key, v) in &estimate {
-            put_u32(&mut buf, sid[key]);
-            put_u64(&mut buf, v.to_bits());
-        }
-        self.write_bytes(&buf)?;
-
-        let meta_offset = self.offset;
-        let mut buf = Vec::new();
-        match &self.run_meta {
-            None => put_u8(&mut buf, 0),
-            Some(m) => {
-                put_u8(&mut buf, 1);
-                for v in [m.topo.dp, m.topo.tp, m.topo.pp, m.topo.cp,
-                          m.topo.vpp, m.n_micro] {
-                    put_u32(&mut buf, v as u32);
-                }
-                let flags = (m.sp as u8)
-                    | (m.fp8 as u8) << 1
-                    | (m.moe as u8) << 2
-                    | (m.zero1 as u8) << 3
-                    | (m.overlap as u8) << 4;
-                put_u8(&mut buf, flags);
-            }
-        }
-        self.write_bytes(&buf)?;
-
+        let (blob, offs) = encode_sections(&self.index, &self.estimate,
+                                           self.estimate_eps, &self.run_meta,
+                                           self.offset);
+        self.write_bytes(&blob)?;
         let mut tail = Vec::with_capacity(32);
-        put_u64(&mut tail, string_table_offset);
-        put_u64(&mut tail, index_offset);
-        put_u64(&mut tail, estimates_offset);
-        put_u64(&mut tail, meta_offset);
+        for o in offs {
+            put_u64(&mut tail, o);
+        }
         self.write_bytes(&tail)?;
         let checksum = self.hash;
         self.file
             .write_all(&checksum.to_le_bytes())
-            .map_err(|e| anyhow!("writing {}: {e}", self.path.display()))?;
+            .map_err(|e| anyhow!("writing {}: {e}", self.tmp.display()))?;
         self.offset += 8;
         self.file
             .flush()
-            .map_err(|e| anyhow!("flushing {}: {e}", self.path.display()))?;
+            .map_err(|e| anyhow!("flushing {}: {e}", self.tmp.display()))?;
+        fs::rename(&self.tmp, &self.path)
+            .map_err(|e| anyhow!("sealing {}: renaming {} into place: {e}",
+                                 self.path.display(), self.tmp.display()))?;
         Ok(StoreSummary {
-            ids: index.len(),
-            shards,
+            ids: self.index.len(),
+            shards: self.index.values().map(|v| v.len()).sum(),
             payload_bytes: string_table_offset - HEADER_LEN,
             file_bytes: self.offset,
         })
     }
+}
+
+/// Serialize the four metadata sections (string table, index, estimates,
+/// run meta) as one blob that will start at absolute file offset `base`;
+/// returns the blob and the absolute offsets of the four sections. Shared
+/// between `finish` (followed by the trailer) and `write_checkpoint`
+/// (embedded in a `TTCK` block), so a salvaged index decodes through the
+/// exact same path as a sealed one.
+fn encode_sections(index: &BTreeMap<String, Vec<ShardMeta>>,
+                   estimate: &BTreeMap<String, f64>, eps: f64,
+                   run_meta: &Option<RunMeta>, base: u64)
+                   -> (Vec<u8>, [u64; 4]) {
+    let mut names: BTreeSet<String> = index.keys().cloned().collect();
+    names.extend(estimate.keys().cloned());
+    let sid: HashMap<String, u32> = names
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.clone(), i as u32))
+        .collect();
+
+    let mut buf = Vec::new();
+    let string_table_offset = base;
+    put_u32(&mut buf, names.len() as u32);
+    for s in &names {
+        put_str(&mut buf, s);
+    }
+
+    let index_offset = base + buf.len() as u64;
+    put_u32(&mut buf, index.len() as u32);
+    for (key, metas) in index {
+        put_u32(&mut buf, sid[key]);
+        put_u32(&mut buf, metas.len() as u32);
+        for m in metas {
+            put_shard(&mut buf, m);
+        }
+    }
+
+    let estimates_offset = base + buf.len() as u64;
+    put_u64(&mut buf, eps.to_bits());
+    put_u32(&mut buf, estimate.len() as u32);
+    for (key, v) in estimate {
+        put_u32(&mut buf, sid[key]);
+        put_u64(&mut buf, v.to_bits());
+    }
+
+    let meta_offset = base + buf.len() as u64;
+    match run_meta {
+        None => put_u8(&mut buf, 0),
+        Some(m) => {
+            put_u8(&mut buf, 1);
+            for v in [m.topo.dp, m.topo.tp, m.topo.pp, m.topo.cp,
+                      m.topo.vpp, m.n_micro] {
+                put_u32(&mut buf, v as u32);
+            }
+            let flags = (m.sp as u8)
+                | (m.fp8 as u8) << 1
+                | (m.moe as u8) << 2
+                | (m.zero1 as u8) << 3
+                | (m.overlap as u8) << 4;
+            put_u8(&mut buf, flags);
+        }
+    }
+    (buf, [string_table_offset, index_offset, estimates_offset, meta_offset])
 }
 
 /// Write a fully-assembled trace into `w`, key order. (The collector
@@ -533,14 +633,198 @@ pub struct StoreReader {
     file: fs::File,
     file_len: u64,
     version: u16,
-    /// first byte past the payload blob (= string table offset)
+    /// first byte past the payload blob (= string table offset; for a
+    /// salvaged reader, the offset of the recovered checkpoint block)
     payload_end: u64,
     index: BTreeMap<String, Vec<ShardMeta>>,
     estimate: HashMap<String, f64>,
     estimate_eps: Option<f64>,
     run_meta: Option<RunMeta>,
+    /// the index came from a checkpoint block of a torn file, not the
+    /// trailer of a sealed one — the trace may be incomplete
+    salvaged: bool,
     #[cfg(not(unix))]
     seek_lock: std::sync::Mutex<()>,
+}
+
+/// The four decoded metadata sections (shared between `open`, which reads
+/// them from the trailer-addressed tail, and `open_salvage`, which reads
+/// them from a checkpoint block).
+struct Sections {
+    index: BTreeMap<String, Vec<ShardMeta>>,
+    estimate: HashMap<String, f64>,
+    /// raw embedded eps (0.0 = no estimates were recorded)
+    eps: f64,
+    run_meta: Option<RunMeta>,
+}
+
+/// Decode string table + index + estimates + run meta from `sec`, a slice
+/// whose first byte sits at absolute file offset `st_off`. Each section
+/// must land exactly at its declared offset, and every shard payload must
+/// fit inside `[HEADER_LEN, payload_end)`.
+fn parse_sections(path: &Path, sec: &[u8], st_off: u64, idx_off: u64,
+                  est_off: u64, meta_off: u64, payload_end: u64)
+                  -> Result<Sections> {
+    // string table
+    let mut c = Cursor { path, buf: sec, pos: 0, base: st_off };
+    let n = c.u32()? as usize;
+    let mut strings = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        strings.push(c.str()?);
+    }
+    if c.abs() != idx_off {
+        bail!("{}: string table ends at offset {} but the index starts \
+               at {idx_off}", path.display(), c.abs());
+    }
+
+    // index
+    let n_ids = c.u32()? as usize;
+    let mut index: BTreeMap<String, Vec<ShardMeta>> = BTreeMap::new();
+    for _ in 0..n_ids {
+        let kidx = c.u32()? as usize;
+        let key = strings
+            .get(kidx)
+            .ok_or_else(|| anyhow!("{}: index references string {kidx} \
+                                    of {}", path.display(), strings.len()))?
+            .clone();
+        let n_shards = c.u32()? as usize;
+        let mut metas = Vec::with_capacity(n_shards.min(1 << 20));
+        for si in 0..n_shards {
+            let m = read_shard(&mut c)?;
+            // shape and length derive from the spec, so the only way a
+            // payload can be wrong is by falling outside the blob
+            // (checked add: a crafted offset must not wrap past it)
+            let end = m.offset.checked_add(m.len);
+            if m.offset < HEADER_LEN || end.is_none()
+                || end.unwrap() > payload_end {
+                bail!("{}: truncated payload for '{key}' shard {si}: \
+                       [{}, +{}) exceeds the payload region \
+                       [{HEADER_LEN}, {payload_end})",
+                      path.display(), m.offset, m.len);
+            }
+            metas.push(m);
+        }
+        index.insert(key, metas);
+    }
+    if c.abs() != est_off {
+        bail!("{}: index ends at offset {} but the estimates section \
+               starts at {est_off}", path.display(), c.abs());
+    }
+
+    // threshold estimates
+    let eps = f64::from_bits(c.u64()?);
+    let ne = c.u32()? as usize;
+    let mut estimate = HashMap::with_capacity(ne.min(1 << 20));
+    for _ in 0..ne {
+        let kidx = c.u32()? as usize;
+        let key = strings
+            .get(kidx)
+            .ok_or_else(|| anyhow!("{}: estimates reference string {kidx} \
+                                    of {}", path.display(), strings.len()))?
+            .clone();
+        estimate.insert(key, f64::from_bits(c.u64()?));
+    }
+    if c.abs() != meta_off {
+        bail!("{}: estimates end at offset {} but the run-meta section \
+               starts at {meta_off}", path.display(), c.abs());
+    }
+
+    // run metadata (topology + feature flags of the recording run)
+    let run_meta = if c.u8()? == 0 {
+        None
+    } else {
+        let mut v = [0usize; 6];
+        for slot in v.iter_mut() {
+            *slot = c.u32()? as usize;
+        }
+        let flags = c.u8()?;
+        let topo = crate::dist::Topology::new(v[0], v[1], v[2], v[3], v[4])
+            .map_err(|e| anyhow!("{}: invalid run-meta topology: {e}",
+                                 path.display()))?;
+        Some(RunMeta {
+            topo,
+            sp: flags & 1 != 0,
+            fp8: flags & 2 != 0,
+            moe: flags & 4 != 0,
+            zero1: flags & 8 != 0,
+            overlap: flags & 16 != 0,
+            n_micro: v[5],
+        })
+    };
+
+    // A store's shards and its embedded topology must agree: diagnosis
+    // maps each shard's recording rank to a (tp, cp, dp, pp) coordinate
+    // of that topology, so an out-of-range rank means the metadata and
+    // the payload come from different runs (a mismatched-topology
+    // store). Reject it here, by name, instead of mis-attributing.
+    if let Some(m) = &run_meta {
+        let world = m.topo.world() as u32;
+        for (key, metas) in &index {
+            for (si, sm) in metas.iter().enumerate() {
+                if sm.rank >= world {
+                    bail!("{}: shard {si} of '{key}' was recorded by \
+                           rank {} but the embedded run topology {} has \
+                           only {world} rank(s) — the store's topology \
+                           metadata does not match its shards",
+                          path.display(), sm.rank, m.topo.describe());
+                }
+            }
+        }
+    }
+
+    Ok(Sections { index, estimate, eps, run_meta })
+}
+
+/// Validate one candidate checkpoint block at absolute offset `i` of an
+/// in-memory file image: header sanity, prefix hash over `[0, i)`, block
+/// hash over the block itself, then a full section parse. `prefix_hash`
+/// is the caller's rolling FNV-1a of `bytes[0..i]`. Returns the offset
+/// one past the block (the hash-verified prefix length) and the decoded
+/// sections.
+fn try_checkpoint(path: &Path, bytes: &[u8], i: usize, prefix_hash: u64)
+                  -> Result<(u64, Sections)> {
+    let hdr_end = i + CKPT_HEADER_LEN as usize;
+    if hdr_end > bytes.len() {
+        bail!("{}: checkpoint header at offset {i} runs past the end of \
+               the file", path.display());
+    }
+    let u64_at = |o: usize| {
+        u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap())
+    };
+    if u64_at(i + 4) != i as u64 {
+        bail!("{}: offset {i}: magic bytes without a matching self-offset \
+               — not a checkpoint block", path.display());
+    }
+    if u64_at(i + 12) != prefix_hash {
+        bail!("{}: checkpoint at offset {i}: file prefix hash mismatch — \
+               bytes before the block are corrupt", path.display());
+    }
+    let st_off = u64_at(i + 20);
+    let idx_off = u64_at(i + 28);
+    let est_off = u64_at(i + 36);
+    let meta_off = u64_at(i + 44);
+    let blob_len =
+        u32::from_le_bytes(bytes[i + 52..i + 56].try_into().unwrap()) as usize;
+    let blob_end = hdr_end + blob_len;
+    if blob_end + 8 > bytes.len() {
+        bail!("{}: checkpoint at offset {i}: sections blob ({blob_len} \
+               bytes) runs past the end of the file", path.display());
+    }
+    if st_off != hdr_end as u64 {
+        bail!("{}: checkpoint at offset {i}: blob claims to start at \
+               {st_off}, expected {hdr_end}", path.display());
+    }
+    let stored =
+        u64::from_le_bytes(bytes[blob_end..blob_end + 8].try_into().unwrap());
+    let computed = fnv1a_update(FNV_OFFSET_BASIS, &bytes[i..blob_end]);
+    if stored != computed {
+        bail!("{}: checkpoint at offset {i}: block hash mismatch",
+              path.display());
+    }
+    // shards recorded before this block must lie entirely before it
+    let s = parse_sections(path, &bytes[hdr_end..blob_end], st_off, idx_off,
+                           est_off, meta_off, i as u64)?;
+    Ok(((blob_end + 8) as u64, s))
 }
 
 impl StoreReader {
@@ -603,126 +887,114 @@ impl StoreReader {
             .map_err(|e| anyhow!("{}: reading metadata sections: {e}",
                                  path.display()))?;
 
-        // string table
-        let mut c = Cursor { path, buf: &sec, pos: 0, base: st_off };
-        let n = c.u32()? as usize;
-        let mut strings = Vec::with_capacity(n.min(1 << 20));
-        for _ in 0..n {
-            strings.push(c.str()?);
-        }
-        if c.abs() != idx_off {
-            bail!("{}: string table ends at offset {} but the index starts \
-                   at {idx_off}", path.display(), c.abs());
-        }
-
-        // index
-        let n_ids = c.u32()? as usize;
-        let mut index: BTreeMap<String, Vec<ShardMeta>> = BTreeMap::new();
-        for _ in 0..n_ids {
-            let kidx = c.u32()? as usize;
-            let key = strings
-                .get(kidx)
-                .ok_or_else(|| anyhow!("{}: index references string {kidx} \
-                                        of {}", path.display(), strings.len()))?
-                .clone();
-            let n_shards = c.u32()? as usize;
-            let mut metas = Vec::with_capacity(n_shards.min(1 << 20));
-            for si in 0..n_shards {
-                let m = read_shard(&mut c)?;
-                // shape and length derive from the spec, so the only way a
-                // payload can be wrong is by falling outside the blob
-                // (checked add: a crafted offset must not wrap past it)
-                let end = m.offset.checked_add(m.len);
-                if m.offset < HEADER_LEN || end.is_none()
-                    || end.unwrap() > st_off {
-                    bail!("{}: truncated payload for '{key}' shard {si}: \
-                           [{}, +{}) exceeds the payload region \
-                           [{HEADER_LEN}, {st_off})",
-                          path.display(), m.offset, m.len);
-                }
-                metas.push(m);
-            }
-            index.insert(key, metas);
-        }
-        if c.abs() != est_off {
-            bail!("{}: index ends at offset {} but the estimates section \
-                   starts at {est_off}", path.display(), c.abs());
-        }
-
-        // threshold estimates
-        let eps = f64::from_bits(c.u64()?);
-        let ne = c.u32()? as usize;
-        let mut estimate = HashMap::with_capacity(ne.min(1 << 20));
-        for _ in 0..ne {
-            let kidx = c.u32()? as usize;
-            let key = strings
-                .get(kidx)
-                .ok_or_else(|| anyhow!("{}: estimates reference string {kidx} \
-                                        of {}", path.display(), strings.len()))?
-                .clone();
-            estimate.insert(key, f64::from_bits(c.u64()?));
-        }
-        if c.abs() != meta_off {
-            bail!("{}: estimates end at offset {} but the run-meta section \
-                   starts at {meta_off}", path.display(), c.abs());
-        }
-
-        // run metadata (topology + feature flags of the recording run)
-        let run_meta = if c.u8()? == 0 {
-            None
-        } else {
-            let mut v = [0usize; 6];
-            for slot in v.iter_mut() {
-                *slot = c.u32()? as usize;
-            }
-            let flags = c.u8()?;
-            let topo = crate::dist::Topology::new(v[0], v[1], v[2], v[3], v[4])
-                .map_err(|e| anyhow!("{}: invalid run-meta topology: {e}",
-                                     path.display()))?;
-            Some(RunMeta {
-                topo,
-                sp: flags & 1 != 0,
-                fp8: flags & 2 != 0,
-                moe: flags & 4 != 0,
-                zero1: flags & 8 != 0,
-                overlap: flags & 16 != 0,
-                n_micro: v[5],
-            })
-        };
-
-        // A store's shards and its embedded topology must agree: diagnosis
-        // maps each shard's recording rank to a (tp, cp, dp, pp) coordinate
-        // of that topology, so an out-of-range rank means the metadata and
-        // the payload come from different runs (a mismatched-topology
-        // store). Reject it here, by name, instead of mis-attributing.
-        if let Some(m) = &run_meta {
-            let world = m.topo.world() as u32;
-            for (key, metas) in &index {
-                for (si, sm) in metas.iter().enumerate() {
-                    if sm.rank >= world {
-                        bail!("{}: shard {si} of '{key}' was recorded by \
-                               rank {} but the embedded run topology {} has \
-                               only {world} rank(s) — the store's topology \
-                               metadata does not match its shards",
-                              path.display(), sm.rank, m.topo.describe());
-                    }
-                }
-            }
-        }
-
+        let s = parse_sections(path, &sec, st_off, idx_off, est_off,
+                               meta_off, st_off)?;
         Ok(StoreReader {
             path: path.to_path_buf(),
             file,
             file_len,
             version,
             payload_end: st_off,
-            index,
-            estimate,
-            estimate_eps: if eps > 0.0 { Some(eps) } else { None },
-            run_meta,
+            index: s.index,
+            estimate: s.estimate,
+            estimate_eps: if s.eps > 0.0 { Some(s.eps) } else { None },
+            run_meta: s.run_meta,
+            salvaged: false,
             #[cfg(not(unix))]
             seek_lock: std::sync::Mutex::new(()),
         })
+    }
+
+    /// Open a possibly-torn store. A cleanly sealed file opens normally
+    /// and reports `complete: true`; anything else — truncated tail,
+    /// missing trailer, corrupt metadata — is rescanned for the last
+    /// `TTCK` checkpoint block whose prefix hash and block hash both
+    /// verify, and the reader serves exactly the shards recorded before
+    /// it. If the sealed path does not exist, the writer's `<path>.tmp`
+    /// (left behind by a crash before `finish`) is salvaged instead.
+    /// Fails with an error naming the file and scanned byte range when no
+    /// checkpoint survives — it never panics on corrupt input.
+    pub fn open_salvage(path: &Path) -> Result<(StoreReader, SalvageInfo)> {
+        let tmp = tmp_path_of(path);
+        let path: &Path = if !path.exists() && tmp.exists() { &tmp } else { path };
+        match StoreReader::open(path) {
+            Ok(r) => {
+                let info = SalvageInfo {
+                    complete: true,
+                    recovered_ids: r.len(),
+                    recovered_shards: r.shard_count(),
+                    valid_prefix: r.file_len,
+                    file_len: r.file_len,
+                };
+                Ok((r, info))
+            }
+            Err(open_err) => StoreReader::salvage_scan(path, open_err),
+        }
+    }
+
+    /// One forward pass with a rolling FNV-1a prefix hash: at every
+    /// candidate `TTCK` magic, the rolling hash *is* the hash of
+    /// `[0, candidate)`, so each block validates in O(block) extra work.
+    /// The last block that verifies wins — the longest valid prefix.
+    fn salvage_scan(path: &Path, open_err: anyhow::Error)
+                    -> Result<(StoreReader, SalvageInfo)> {
+        let bytes = fs::read(path)
+            .map_err(|e| anyhow!("salvaging {}: {e}", path.display()))?;
+        let file_len = bytes.len() as u64;
+        if bytes.len() < HEADER_LEN as usize || &bytes[0..4] != MAGIC {
+            bail!("{}: cannot salvage — no .ttrc header at offset 0 \
+                   ({file_len} bytes on disk; open failed with: {open_err:#})",
+                  path.display());
+        }
+        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+        if version != VERSION {
+            bail!("{}: cannot salvage .ttrc version {version} at offset 4 \
+                   (this build reads version {VERSION})", path.display());
+        }
+        let mut h = fnv1a_update(FNV_OFFSET_BASIS,
+                                 &bytes[..HEADER_LEN as usize]);
+        let mut best: Option<(u64, u64, Sections)> = None;
+        let mut rejected = 0usize;
+        for i in HEADER_LEN as usize..bytes.len() {
+            if bytes[i..].starts_with(CKPT_MAGIC) {
+                match try_checkpoint(path, &bytes, i, h) {
+                    Ok((valid_prefix, s)) => best = Some((i as u64,
+                                                          valid_prefix, s)),
+                    Err(_) => rejected += 1,
+                }
+            }
+            h = fnv1a_update(h, &bytes[i..i + 1]);
+        }
+        let Some((ckpt_off, valid_prefix, s)) = best else {
+            bail!("{}: no salvageable checkpoint in bytes [0, {file_len}) \
+                   ({rejected} candidate block(s) rejected — record with \
+                   checkpoints enabled to make stores salvageable); open \
+                   failed with: {open_err:#}", path.display());
+        };
+        let file = fs::File::open(path)
+            .map_err(|e| anyhow!("opening {}: {e}", path.display()))?;
+        let reader = StoreReader {
+            path: path.to_path_buf(),
+            file,
+            file_len,
+            version,
+            payload_end: ckpt_off,
+            index: s.index,
+            estimate: s.estimate,
+            estimate_eps: if s.eps > 0.0 { Some(s.eps) } else { None },
+            run_meta: s.run_meta,
+            salvaged: true,
+            #[cfg(not(unix))]
+            seek_lock: std::sync::Mutex::new(()),
+        };
+        let info = SalvageInfo {
+            complete: false,
+            recovered_ids: reader.len(),
+            recovered_shards: reader.shard_count(),
+            valid_prefix,
+            file_len,
+        };
+        Ok((reader, info))
     }
 
     fn read_at(&self, buf: &mut [u8], off: u64) -> std::io::Result<()> {
@@ -737,6 +1009,13 @@ impl StoreReader {
 
     pub fn version(&self) -> u16 {
         self.version
+    }
+
+    /// True when this reader came from `open_salvage`'s checkpoint-rescan
+    /// path — the index is a hash-verified prefix of the recording, not
+    /// necessarily all of it.
+    pub fn salvaged(&self) -> bool {
+        self.salvaged
     }
 
     /// Number of canonical ids in the store.
@@ -882,6 +1161,12 @@ pub fn check_stores(reference: &StoreReader, candidate: &StoreReader,
     let mut out = CheckOutcome::default();
     for ((_, key), slot) in keys.into_iter().zip(slots) {
         match slot.expect("every key got a verdict")? {
+            // a salvaged candidate is an admitted-partial recording: ids
+            // past its recovered prefix are `incomplete` (reported with a
+            // coverage fraction), not evidence of divergence
+            KeyVerdict::MissingInCandidate if candidate.salvaged() => {
+                out.incomplete.push(key)
+            }
             KeyVerdict::MissingInCandidate => out.missing_in_candidate.push(key),
             KeyVerdict::MergeError(e) => out.merge_errors.push((key, e)),
             KeyVerdict::Check(c) => out.checks.push(c),
@@ -1047,6 +1332,148 @@ mod tests {
         write_sample(&pa);
         write_sample(&pb);
         assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+    }
+
+    #[test]
+    fn writer_streams_into_tmp_and_renames_on_seal() {
+        let path = tmp("atomic.ttrc");
+        let tmp_path = tmp("atomic.ttrc.tmp");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&tmp_path);
+        let mut w = StoreWriter::create(&path).unwrap();
+        for (k, e) in sample_entries() {
+            w.append(&k, &e).unwrap();
+        }
+        // mid-write, only the tmp file exists — a reader polling the
+        // sealed path never sees a half-written store
+        assert!(tmp_path.exists());
+        assert!(!path.exists());
+        w.finish().unwrap();
+        assert!(path.exists());
+        assert!(!tmp_path.exists());
+        assert!(StoreReader::open(&path).is_ok());
+    }
+
+    /// Write the sample with a checkpoint block after every shard.
+    fn write_checkpointed(path: &Path) -> StoreSummary {
+        let mut w = StoreWriter::create(path).unwrap();
+        w.set_checkpoint_every(1);
+        for (k, e) in sample_entries() {
+            w.append(&k, &e).unwrap();
+        }
+        w.finish().unwrap()
+    }
+
+    fn ckpt_offsets(bytes: &[u8]) -> Vec<usize> {
+        (0..bytes.len().saturating_sub(3))
+            .filter(|&i| &bytes[i..i + 4] == CKPT_MAGIC)
+            .collect()
+    }
+
+    #[test]
+    fn checkpointed_store_opens_normally_and_roundtrips() {
+        let plain = tmp("ckpt_plain.ttrc");
+        let ckpt = tmp("ckpt_on.ttrc");
+        write_sample(&plain);
+        write_checkpointed(&ckpt);
+        // checkpoints cost bytes but the sealed file is a normal store
+        assert!(std::fs::metadata(&ckpt).unwrap().len()
+                > std::fs::metadata(&plain).unwrap().len());
+        let r = StoreReader::open(&ckpt).unwrap();
+        assert!(!r.salvaged());
+        assert_eq!(r.shard_count(), 3);
+        let got = r.read_entries("i0/m0/act/layers.0.mlp").unwrap().unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(bits(&got[0].data),
+                   bits(&sample_entries()[0].1.data));
+    }
+
+    #[test]
+    fn salvage_of_sealed_store_is_complete() {
+        let path = tmp("salvage_sealed.ttrc");
+        write_checkpointed(&path);
+        let (r, info) = StoreReader::open_salvage(&path).unwrap();
+        assert!(info.complete);
+        assert!(!r.salvaged());
+        assert_eq!(info.recovered_shards, 3);
+        assert_eq!(info.valid_prefix, info.file_len);
+    }
+
+    #[test]
+    fn salvage_recovers_longest_valid_prefix_of_torn_store() {
+        let path = tmp("salvage_torn.ttrc");
+        write_checkpointed(&path);
+        let b = std::fs::read(&path).unwrap();
+        let offs = ckpt_offsets(&b);
+        assert_eq!(offs.len(), 3, "one checkpoint per appended shard");
+        // tear the file at the third checkpoint: shards 1–2 plus their
+        // checkpoints survive, shard 3's payload dangles unverified
+        std::fs::write(&path, &b[..offs[2]]).unwrap();
+        assert!(StoreReader::open(&path).is_err());
+        let (r, info) = StoreReader::open_salvage(&path).unwrap();
+        assert!(!info.complete);
+        assert!(r.salvaged());
+        assert_eq!(info.recovered_ids, 1);
+        assert_eq!(info.recovered_shards, 2);
+        assert!(info.valid_prefix <= info.file_len);
+        let got = r.read_entries("i0/m0/act/layers.0.mlp").unwrap().unwrap();
+        let want = sample_entries();
+        assert_eq!(got.len(), 2);
+        for (g, (_, w)) in got.iter().zip(&want[..2]) {
+            assert_eq!(g.spec, w.spec);
+            assert_eq!(bits(&g.data), bits(&w.data));
+        }
+        // the third shard's id was never checkpointed — honestly absent
+        assert!(r.read_entries("i0/m0/main_grad/w").unwrap().is_none());
+    }
+
+    #[test]
+    fn salvage_distrusts_checkpoints_after_a_bit_flip() {
+        let path = tmp("salvage_flip.ttrc");
+        write_checkpointed(&path);
+        let mut b = std::fs::read(&path).unwrap();
+        let offs = ckpt_offsets(&b);
+        // flip a payload byte between checkpoint 1 and checkpoint 2: every
+        // later checkpoint's prefix hash breaks, the first still verifies
+        b[offs[1] - 1] ^= 0x40;
+        std::fs::write(&path, &b).unwrap();
+        let (r, info) = StoreReader::open_salvage(&path).unwrap();
+        assert!(!info.complete);
+        assert_eq!(info.recovered_shards, 1);
+        assert_eq!(r.read_entries("i0/m0/act/layers.0.mlp").unwrap()
+                   .unwrap().len(), 1);
+    }
+
+    #[test]
+    fn salvage_falls_back_to_tmp_after_a_writer_crash() {
+        let path = tmp("salvage_crash.ttrc");
+        let tmp_path = tmp("salvage_crash.ttrc.tmp");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&tmp_path);
+        let mut w = StoreWriter::create(&path).unwrap();
+        w.set_checkpoint_every(1);
+        for (k, e) in sample_entries().into_iter().take(2) {
+            w.append(&k, &e).unwrap();
+        }
+        drop(w); // crash before finish: no sealed file, only the tmp
+        assert!(!path.exists());
+        let (r, info) = StoreReader::open_salvage(&path).unwrap();
+        assert!(!info.complete);
+        assert_eq!(info.recovered_shards, 2);
+        assert!(r.salvaged());
+    }
+
+    #[test]
+    fn salvage_without_checkpoints_fails_with_named_offsets() {
+        let path = tmp("salvage_none.ttrc");
+        write_sample(&path);
+        let b = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &b[..b.len() - 16]).unwrap();
+        let err = format!("{:#}",
+                          StoreReader::open_salvage(&path).unwrap_err());
+        assert!(err.contains("no salvageable checkpoint"), "{err}");
+        assert!(err.contains("salvage_none.ttrc"), "{err}");
+        assert!(err.contains("[0, "), "{err}");
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Fault-injection drills: TTrace must survive the runs it is supposed to
+//! debug. A stalled collective terminates within the rendezvous deadline
+//! and yields a structured hang verdict naming the op kind, group key and
+//! missing rank set (across multiple topologies); a rank that crashes
+//! mid-record leaves a partial store that the salvage path recovers into
+//! an `INCOMPLETE`-aware verdict with a coverage fraction below 1.0 — and
+//! in neither case does the SPMD join deadlock.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ttrace::bugs::BugSet;
+use ttrace::data::GenData;
+use ttrace::model::{run_training, try_run_training, Engine, ParCfg, TINY};
+use ttrace::prelude::*;
+use ttrace::runtime::Executor;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ttrace_faults_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn par(dp: usize, tp: usize, pp: usize, cp: usize, vpp: usize) -> ParCfg {
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(dp, tp, pp, cp, vpp).unwrap();
+    p
+}
+
+#[test]
+fn stalled_collective_yields_hang_verdicts_across_topologies() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    // (topology, stalled global rank, group-key prefix the stall targets):
+    // the dp gradient sync runs on the combined dpcp group; tp and cp
+    // stall inside the forward pass.
+    let cases = [
+        (par(2, 1, 1, 1, 1), 1usize, "dpcp@"),
+        (par(1, 2, 1, 1, 1), 1usize, "tp@"),
+        (par(1, 1, 1, 2, 1), 1usize, "cp@"),
+    ];
+    for (p, victim, prefix) in cases {
+        let plan = Arc::new(FaultPlan::new(0).stall(victim, prefix));
+        let mut session = Session::builder().parallelism(&p).build();
+        let engine =
+            Engine::new(TINY, p.clone(), 2, &exec, BugSet::none()).unwrap();
+        let opts = SpmdOpts {
+            deadline: Some(Duration::from_millis(400)),
+            faults: Some(plan),
+        };
+        let t0 = Instant::now();
+        let results =
+            try_run_training(&engine, &GenData, session.hooks(), 1, opts);
+        let elapsed = t0.elapsed();
+        assert!(elapsed < Duration::from_secs(60),
+                "join took {elapsed:?} on {} — hang detection must bound \
+                 the wait", p.topo.describe());
+        assert_eq!(results.len(), p.topo.world());
+
+        // at least one waiting rank must come back with the structured
+        // hang verdict (the victim itself dies of the injection; other
+        // ranks may fail over to peer-crash once it does)
+        let hangs: Vec<&HangReport> = results
+            .iter()
+            .filter_map(|r| r.as_ref().err())
+            .filter_map(|f| f.hang())
+            .collect();
+        assert!(!hangs.is_empty(),
+                "no hang verdict on {} ({prefix})", p.topo.describe());
+        for h in &hangs {
+            assert!(h.group.starts_with(prefix),
+                    "hang group '{}' does not match the stalled {prefix} \
+                     group on {}", h.group, p.topo.describe());
+            assert!(h.missing.contains(&victim),
+                    "missing set {:?} on '{}' does not name the stalled \
+                     rank {victim}", h.missing, h.group);
+            assert!(!h.op.name().is_empty());
+            assert_eq!(h.progress.len(), p.topo.world(),
+                       "progress ledger must cover every rank");
+            let text = h.render();
+            assert!(text.contains("HANG"), "{text}");
+            assert!(text.contains(&h.group), "{text}");
+        }
+
+        // the verdict flows through the facade: a hung run cannot pass
+        session.note_rank_failures(&results);
+        let rep = session.finish().unwrap();
+        assert!(!rep.hangs().is_empty());
+        assert!(!rep.passed(), "a hung run must not pass");
+        assert_eq!(rep.exit_code(), 1);
+        assert!(rep.render(8).contains("HANG"));
+    }
+}
+
+#[test]
+fn crashed_rank_salvages_partial_store_with_incomplete_coverage() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let p = par(2, 1, 1, 1, 1);
+
+    // the single-device twin of the dp=2 candidate (same global batch)
+    let pr = reference_of(&p);
+    let ref_path = tmp("crash_ref.ttrc");
+    let rs = Session::builder()
+        .parallelism(&pr)
+        .sink(Sink::store(&ref_path))
+        .build();
+    let engine =
+        Engine::new(TINY, pr.clone(), 2, &exec, BugSet::none()).unwrap();
+    run_training(&engine, &GenData, rs.hooks(), 1);
+    rs.finish().unwrap();
+
+    // candidate: dp rank 1 crashes mid-record during its forward pass
+    // (its global microbatch index is 1), with checkpoints every 2 shards
+    let cand_path = tmp("crash_cand.ttrc");
+    let plan = Arc::new(FaultPlan::new(0).crash(1, 0, 1, "layers.1.mlp"));
+    let mut cs = Session::builder()
+        .parallelism(&p)
+        .sink(Sink::store(&cand_path))
+        .checkpoint_every(2)
+        .faults(plan.clone())
+        .build();
+    let engine =
+        Engine::new(TINY, p.clone(), 2, &exec, BugSet::none()).unwrap();
+    let opts = SpmdOpts {
+        deadline: Some(Duration::from_secs(10)),
+        faults: Some(plan),
+    };
+    let t0 = Instant::now();
+    let results = try_run_training(&engine, &GenData, cs.hooks(), 1, opts);
+    assert!(t0.elapsed() < Duration::from_secs(60),
+            "join must complete despite the crashed rank");
+    assert!(results.iter().any(|r| r.is_err()), "crash fault did not fire");
+
+    // the session still seals a (partial) store: the crashed rank's
+    // thread-local buffers flushed during unwind
+    cs.note_rank_failures(&results);
+    let rep = cs.finish().unwrap();
+    assert!(rep.store.is_some());
+    StoreReader::open(&cand_path).expect("sealed partial store opens clean");
+
+    // now tear the file the way a killed writer would and salvage it
+    let bytes = std::fs::read(&cand_path).unwrap();
+    std::fs::write(&cand_path, &bytes[..bytes.len() * 3 / 5]).unwrap();
+    assert!(StoreReader::open(&cand_path).is_err(),
+            "a torn store must not open through the strict path");
+
+    let (report, info) = Report::from_stores_salvage(
+        &ref_path, &cand_path, &Tolerance::default()).unwrap();
+    assert!(!info.complete);
+    assert!(info.recovered_ids > 0, "salvage recovered nothing");
+    assert!(info.valid_prefix < info.file_len);
+    let outcome = report.outcome.as_ref().unwrap();
+    assert!(!outcome.incomplete.is_empty(),
+            "ids lost past the last checkpoint must surface as incomplete \
+             rows, not hard failures");
+    assert!(report.coverage() < 1.0, "coverage {}", report.coverage());
+    assert!(report.coverage() > 0.0, "coverage {}", report.coverage());
+    assert!(report.render(8).contains("INCOMPLETE"),
+            "{}", report.render(8));
+}
+
+#[test]
+fn drop_trace_fault_silently_discards_matching_modules() {
+    let plan = Arc::new(FaultPlan::new(0).drop_trace(0, "linear"));
+    let session = Session::builder().faults(plan).build();
+    let t = session.tracer();
+    t.step(0);
+    let spec = ShardSpec::full(&[2]);
+    t.act("linear", &Tensor::new(&[2], vec![1.0, 2.0], DType::F32), &spec);
+    t.act("other", &Tensor::new(&[2], vec![3.0, 4.0], DType::F32), &spec);
+    let trace = session.finish().unwrap().trace.unwrap();
+    assert!(trace.get("i0/m0/act/linear").is_none(),
+            "dropped module must not be recorded");
+    assert!(trace.get("i0/m0/act/other").is_some());
+}
