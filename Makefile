@@ -11,7 +11,8 @@ PYTHON ?= python
 
 BENCHES = table1_bugs fig1_loss_curves fig7_thresholds fig8_bug_vs_fp \
           fig9_fp8 ablation_thresholds overhead_naive_vs_ttrace \
-          theorem_bounds offline_check diagnose api_overhead lint faults
+          theorem_bounds offline_check diagnose api_overhead lint faults \
+          obs_overhead
 
 .PHONY: verify test bench-smoke artifacts clean-artifacts
 
@@ -30,12 +31,23 @@ test:
 	cargo test -q
 
 # Short-mode run of each paper bench with per-stage wall clock dumped to
-# BENCH_<name>.json in the repo root. Knobs: TTRACE_THREADS, BENCH_JSON_DIR.
+# BENCH_<name>.json in the repo root. BENCH_JSON_DIR is pinned to the repo
+# root (the bench binary's cwd is a cargo detail), stale files are cleared
+# first, and a missing dump fails the target — so the CI bench-trajectory
+# artifact can never silently upload empty. Knobs: TTRACE_THREADS.
 bench-smoke: artifacts/manifest.json
+	@rm -f BENCH_*.json
 	@for b in $(BENCHES); do \
 	  echo "== bench $$b (smoke) =="; \
-	  BENCH_SMOKE=1 cargo bench --bench $$b || exit 1; \
+	  BENCH_SMOKE=1 BENCH_JSON_DIR=$(CURDIR) cargo bench --bench $$b \
+	    || exit 1; \
 	done
+	@n=$$(ls BENCH_*.json 2>/dev/null | wc -l); \
+	want=$$(echo $(BENCHES) | wc -w); \
+	if [ "$$n" -ne "$$want" ]; then \
+	  echo "bench trajectory incomplete: $$n of $$want BENCH_*.json present"; \
+	  exit 1; \
+	fi
 	@echo "-- bench trajectory --" && ls -l BENCH_*.json
 
 clean-artifacts:

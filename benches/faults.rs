@@ -36,6 +36,7 @@ fn main() {
         let opts = SpmdOpts {
             deadline: Some(Duration::from_millis(dl_ms)),
             faults: Some(plan),
+            ..Default::default()
         };
         let (results, s) = time_once(|| {
             try_run_training(&engine, &GenData, &NoopHooks, 1, opts)

@@ -1,0 +1,128 @@
+//! Telemetry-overhead bench: the same instrumented data-parallel SGD
+//! trainer step (see `api_overhead.rs`) run with run telemetry off vs
+//! armed — the per-step cost of recording fwd/bwd spans for every traced
+//! tensor plus a first-class comm event for every collective rendezvous.
+//! The paper-style claim this guards: telemetry stays lightweight (low
+//! single-digit percent on a real step). `BENCH_SMOKE=1` shrinks the
+//! repeat count; wired into `make bench-smoke`.
+
+use ttrace::comm::{RedOp, RedPrec};
+use ttrace::dist::try_run_spmd_opts;
+use ttrace::prelude::*;
+use ttrace::util::bench::{fmt_s, smoke_or, time, BenchJson, Table};
+use ttrace::util::rng::Rng;
+
+const DP: usize = 4;
+const B: usize = 16;
+const N_IN: usize = 64;
+const N_OUT: usize = 32;
+const LR: f32 = 0.05;
+
+fn randn(seed: u64, dims: &[usize]) -> Tensor {
+    let mut data = vec![0.0f32; dims.iter().product()];
+    Rng::new(seed).fill_normal(&mut data, 1.0);
+    Tensor::new(dims, data, DType::F32)
+}
+
+fn forward(w: &Tensor, x: &Tensor) -> Tensor {
+    let mut y = vec![0.0f32; B * N_OUT];
+    for b in 0..B {
+        for o in 0..N_OUT {
+            let mut acc = 0.0f32;
+            for i in 0..N_IN {
+                acc += w.data[o * N_IN + i] * x.data[b * N_IN + i];
+            }
+            y[b * N_OUT + o] = acc;
+        }
+    }
+    Tensor::new(&[B, N_OUT], y, DType::F32)
+}
+
+fn wgrad(x: &Tensor, y: &Tensor, t: &Tensor) -> Tensor {
+    let mut g = vec![0.0f32; N_OUT * N_IN];
+    for b in 0..B {
+        for o in 0..N_OUT {
+            let d = y.data[b * N_OUT + o] - t.data[b * N_OUT + o];
+            for i in 0..N_IN {
+                g[o * N_IN + i] += d * x.data[b * N_IN + i];
+            }
+        }
+    }
+    Tensor::new(&[N_OUT, N_IN], g, DType::F32)
+}
+
+/// One instrumented data-parallel training step. The *only* difference
+/// between the two bench variants is whether `tel` arms the session and
+/// the world — the recording path itself is identical.
+fn step(session: &Session, tel: Option<&Telemetry>) {
+    let topo = Topology::new(DP, 1, 1, 1, 1).unwrap();
+    let opts = ttrace::dist::SpmdOpts {
+        telemetry: tel.cloned(),
+        ..Default::default()
+    };
+    let results = try_run_spmd_opts(topo, opts, |ctx| {
+        let mut w = randn(7, &[N_OUT, N_IN]);
+        let tr = session.tracer();
+        let gmicro = ctx.coord.dp as u32;
+        tr.micro(gmicro);
+        let x = randn(1_000 + gmicro as u64, &[B, N_IN]);
+        let t = randn(2_000 + gmicro as u64, &[B, N_OUT]);
+        let y = forward(&w, &x);
+        let g = wgrad(&x, &y, &t);
+        tr.act("linear", &y, &ShardSpec::full(&y.dims));
+        tr.param_grad("w", &g, &ShardSpec::full(&g.dims));
+        let dpg = ctx.dp_group();
+        let sum = ctx.comm.all_reduce(&dpg.key, dpg.me, dpg.size, &g,
+                                      RedOp::Sum, RedPrec::F32);
+        let g = sum.scale(1.0 / DP as f32);
+        for (wi, gi) in w.data.iter_mut().zip(&g.data) {
+            *wi -= LR * gi;
+        }
+        tr.main_grad("w", &g, &ShardSpec::full(&g.dims));
+        tr.param("w", &w, &ShardSpec::full(&w.dims));
+    });
+    for r in results {
+        r.expect("no faults armed — every rank completes");
+    }
+}
+
+fn main() {
+    let reps = smoke_or(30, 4);
+    let mut bj = BenchJson::new("obs_overhead");
+
+    eprintln!("obs_overhead: dp={DP} instrumented step, {reps} reps ...");
+    // Each rep builds a fresh session so collection never accumulates.
+    let st_off = time(1, reps, || {
+        let session = Session::builder()
+            .topology(Topology::new(DP, 1, 1, 1, 1).unwrap())
+            .build();
+        step(&session, None);
+    });
+    bj.stage("telemetry_off_step", st_off.mean_s);
+
+    let mut last_events = 0usize;
+    let st_on = time(1, reps, || {
+        let tel = Telemetry::new();
+        let session = Session::builder()
+            .topology(Topology::new(DP, 1, 1, 1, 1).unwrap())
+            .telemetry(tel.clone())
+            .build();
+        step(&session, Some(&tel));
+        let (events, _) = tel.drain();
+        last_events = events.len();
+    });
+    bj.stage("telemetry_on_step", st_on.mean_s);
+
+    let overhead = st_on.mean_s / st_off.mean_s;
+    let mut t = Table::new(&["variant", "mean", "min"]);
+    t.row(&["telemetry off".into(), fmt_s(st_off.mean_s),
+            fmt_s(st_off.min_s)]);
+    t.row(&["telemetry on".into(), fmt_s(st_on.mean_s), fmt_s(st_on.min_s)]);
+    t.print();
+    t.write_csv("results/obs_overhead.csv").unwrap();
+    println!("\ntelemetry overhead: {overhead:.3}x per step \
+              ({:.1}% — {last_events} events/step: {} trace entries + {} \
+              comm rendezvous per rank)",
+             (overhead - 1.0) * 100.0, 4 * DP, DP);
+    bj.write().unwrap();
+}

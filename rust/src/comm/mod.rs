@@ -29,12 +29,14 @@
 //! into per-rank verdicts.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::tensor::{DType, Tensor};
 use crate::ttrace::faults::{CollAction, FaultPlan};
+use crate::ttrace::obs::{CommInfo, Telemetry};
 use crate::util::bf16;
+use crate::util::rng::{fnv1a_update, FNV_OFFSET_BASIS};
 
 /// Reduction operator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -85,11 +87,14 @@ impl std::fmt::Display for OpKind {
 }
 
 /// One rank's entry in the progress ledger: the last communication op it
-/// completed (`None` if it never finished one).
+/// completed (`None` if it never finished one) and how long ago that was
+/// — the monotonic stall age a hang verdict shows per missing rank.
 #[derive(Clone, Debug)]
 pub struct RankProgress {
     pub rank: usize,
     pub last: Option<String>,
+    /// Time since the last completed op (`None` when `last` is `None`).
+    pub age: Option<Duration>,
 }
 
 /// A structured hang verdict: a collective wait hit its deadline.
@@ -116,6 +121,9 @@ pub struct HangReport {
     pub waited: Duration,
     /// Every rank's last-completed communication op at timeout time.
     pub progress: Vec<RankProgress>,
+    /// Each missing rank's trailing collective window (from telemetry,
+    /// when armed): the last few ops it completed before going silent.
+    pub recent: Vec<(usize, Vec<String>)>,
 }
 
 impl HangReport {
@@ -127,11 +135,19 @@ impl HangReport {
             self.op, self.key, self.waiter, self.waited.as_millis(),
             self.arrived, self.missing);
         for m in &self.missing {
-            let last = self.progress.iter()
-                .find(|p| p.rank == *m)
-                .and_then(|p| p.last.as_deref())
-                .unwrap_or("nothing");
-            s.push_str(&format!("\n  rank {m} last completed: {last}"));
+            let row = self.progress.iter().find(|p| p.rank == *m);
+            let last = row.and_then(|p| p.last.as_deref()).unwrap_or("nothing");
+            let age = row
+                .and_then(|p| p.age)
+                .map(|a| format!(" (stuck for {}ms)", a.as_millis()))
+                .unwrap_or_default();
+            s.push_str(&format!("\n  rank {m} last completed: {last}{age}"));
+            if let Some((_, window)) = self.recent.iter().find(|(r, _)| r == m) {
+                if !window.is_empty() {
+                    s.push_str(&format!("\n  rank {m} recent: {}",
+                                        window.join(" -> ")));
+                }
+            }
         }
         s
     }
@@ -227,6 +243,33 @@ fn group_of_key(key: &str) -> &str {
     key.rsplit_once('#').map_or(key, |(g, _)| g)
 }
 
+/// FNV-1a over a tensor's payload bits — the divergence witness a
+/// collective trace entry carries (two ranks contributing different bits
+/// to the same rendezvous show different checksums on the same key).
+fn payload_checksum(x: &Tensor) -> u64 {
+    let mut h = FNV_OFFSET_BASIS;
+    for v in &x.data {
+        h = fnv1a_update(h, &v.to_le_bytes());
+    }
+    h
+}
+
+fn red_tag(op: Option<RedOp>) -> u8 {
+    match op {
+        None => 0,
+        Some(RedOp::Sum) => 1,
+        Some(RedOp::Max) => 2,
+    }
+}
+
+fn prec_tag(prec: Option<RedPrec>) -> u8 {
+    match prec {
+        None => 0,
+        Some(RedPrec::F32) => 1,
+        Some(RedPrec::Bf16) => 2,
+    }
+}
+
 /// The source rank of a p2p rendezvous key (`p2p:<src>-><dst>:<tag>#n`).
 fn p2p_src(key: &str) -> Option<usize> {
     key.strip_prefix("p2p:")?.split_once("->")?.0.parse().ok()
@@ -261,12 +304,17 @@ pub struct World {
     /// Registered membership per group key: `members[key][me]` is the
     /// global rank of member `me` — lets hang reports name global ranks.
     members: Mutex<HashMap<String, Vec<usize>>>,
-    /// Progress ledger: each global rank's last-completed op.
-    progress: Mutex<Vec<Option<String>>>,
+    /// Progress ledger: each global rank's last-completed op and when it
+    /// completed (the stall-age clock).
+    progress: Mutex<Vec<Option<(String, Instant)>>>,
     /// Global ranks that panicked (marked by `dist::try_run_spmd`).
     crashed: Mutex<Vec<usize>>,
     /// Armed fault-injection plan, if any.
     faults: Mutex<Option<Arc<FaultPlan>>>,
+    /// Run telemetry, when armed (`SpmdOpts::telemetry`): every collective
+    /// becomes a first-class span. `OnceLock` keeps the disarmed hot path
+    /// to a single atomic load — no lock traffic when telemetry is off.
+    obs: OnceLock<Telemetry>,
 }
 
 impl World {
@@ -281,7 +329,18 @@ impl World {
             progress: Mutex::new(vec![None; n]),
             crashed: Mutex::new(Vec::new()),
             faults: Mutex::new(None),
+            obs: OnceLock::new(),
         })
+    }
+
+    /// Arm run telemetry: collectives and p2p ops record spans into it.
+    /// First arm wins (a world serves exactly one run).
+    pub fn set_telemetry(&self, t: Telemetry) {
+        let _ = self.obs.set(t);
+    }
+
+    pub fn telemetry(&self) -> Option<&Telemetry> {
+        self.obs.get()
     }
 
     /// Register the group size the topology implies for a group kind
@@ -350,17 +409,29 @@ impl World {
     fn note_progress(&self, rank: usize, what: String) {
         let mut p = relock(self.progress.lock());
         if rank < p.len() {
-            p[rank] = Some(what);
+            p[rank] = Some((what, Instant::now()));
         }
     }
 
-    /// Snapshot of the progress ledger, one row per global rank.
+    /// Snapshot of the progress ledger, one row per global rank, with the
+    /// stall age (time since that rank last completed an op).
     pub fn progress_snapshot(&self) -> Vec<RankProgress> {
         relock(self.progress.lock())
             .iter()
             .enumerate()
-            .map(|(rank, last)| RankProgress { rank, last: last.clone() })
+            .map(|(rank, last)| RankProgress {
+                rank,
+                last: last.as_ref().map(|(what, _)| what.clone()),
+                age: last.as_ref().map(|(_, at)| at.elapsed()),
+            })
             .collect()
+    }
+
+    /// Each missing rank's trailing collective window from telemetry
+    /// (empty when telemetry is off).
+    fn recent_windows(&self, missing: &[usize]) -> Vec<(usize, Vec<String>)> {
+        let Some(tel) = self.telemetry() else { return Vec::new() };
+        missing.iter().map(|&m| (m, tel.recent_of(m))).collect()
     }
 
     /// Crashed ranks that block `key` from ever completing: the crashed
@@ -395,8 +466,9 @@ impl World {
         };
         let arrived = present.iter().enumerate()
             .filter(|(_, p)| **p).map(|(i, _)| to_global(i)).collect();
-        let missing = present.iter().enumerate()
+        let missing: Vec<usize> = present.iter().enumerate()
             .filter(|(_, p)| !**p).map(|(i, _)| to_global(i)).collect();
+        let recent = self.recent_windows(&missing);
         HangReport {
             op,
             key: key.to_string(),
@@ -406,6 +478,7 @@ impl World {
             missing,
             waited,
             progress: self.progress_snapshot(),
+            recent,
         }
     }
 
@@ -519,15 +592,18 @@ impl World {
             }
             let waited = start.elapsed();
             let Some(remaining) = deadline.checked_sub(waited) else {
+                let missing: Vec<usize> = p2p_src(key).into_iter().collect();
+                let recent = self.recent_windows(&missing);
                 let report = HangReport {
                     op: OpKind::Recv,
                     key: key.to_string(),
                     group: group_of_key(key).to_string(),
                     waiter: crate::dist::current_rank().unwrap_or(0),
                     arrived: Vec::new(),
-                    missing: p2p_src(key).into_iter().collect(),
+                    missing,
                     waited,
                     progress: self.progress_snapshot(),
+                    recent,
                 };
                 std::panic::panic_any(CommFailure::Hang(report));
             };
@@ -598,25 +674,46 @@ impl Comm {
     }
 
     /// The single rendezvous entry point for collectives: group check,
-    /// fault gate, key sequencing, exchange.
+    /// fault gate, key sequencing, exchange. When telemetry is armed the
+    /// rendezvous becomes a first-class span (enter → exit wall time, op
+    /// kind, group key, reduce op/precision, element count, payload
+    /// checksum).
     fn gather(&self, op: OpKind, group: &str, me: usize, m: usize,
-              x: &Tensor) -> Vec<Tensor> {
+              x: &Tensor, red: Option<RedOp>, prec: Option<RedPrec>)
+              -> Vec<Tensor> {
         self.validate_group(group, me, m);
         self.fault_gate(group);
         let key = self.next_key(group);
-        self.world.exchange(op, &key, me, m, x.clone())
+        let tel = self.world.telemetry();
+        let entered = tel.map(|t| (t.now_us(), payload_checksum(x)));
+        let parts = self.world.exchange(op, &key, me, m, x.clone());
+        if let (Some(tel), Some((t0, checksum))) = (tel, entered) {
+            tel.note_comm(CommInfo {
+                op: op.name().to_string(),
+                group: group.to_string(),
+                key,
+                me: me as u32,
+                size: m as u32,
+                red: red_tag(red),
+                prec: prec_tag(prec),
+                elems: x.data.len() as u64,
+                checksum,
+            }, t0);
+        }
+        parts
     }
 
     /// All-gather: returns every member's tensor, in member order.
     pub fn all_gather(&self, group: &str, me: usize, m: usize, x: &Tensor) -> Vec<Tensor> {
-        self.gather(OpKind::AllGather, group, me, m, x)
+        self.gather(OpKind::AllGather, group, me, m, x, None, None)
     }
 
     /// All-reduce with explicit op and accumulation precision. Folds in
     /// member order: `((x0 ⊕ x1) ⊕ x2) ⊕ ...`.
     pub fn all_reduce(&self, group: &str, me: usize, m: usize, x: &Tensor,
                       op: RedOp, prec: RedPrec) -> Tensor {
-        let parts = self.gather(OpKind::AllReduce, group, me, m, x);
+        let parts = self.gather(OpKind::AllReduce, group, me, m, x,
+                                Some(op), Some(prec));
         reduce_parts(&parts, op, prec)
     }
 
@@ -624,7 +721,8 @@ impl Comm {
     /// this member's 1/m slice.
     pub fn reduce_scatter(&self, group: &str, me: usize, m: usize, x: &Tensor,
                           dim: usize, op: RedOp, prec: RedPrec) -> Tensor {
-        let parts = self.gather(OpKind::ReduceScatter, group, me, m, x);
+        let parts = self.gather(OpKind::ReduceScatter, group, me, m, x,
+                                Some(op), Some(prec));
         let full = reduce_parts(&parts, op, prec);
         let len = full.dims[dim] / m;
         full.narrow(dim, me * len, len)
@@ -633,14 +731,14 @@ impl Comm {
     /// Broadcast from `root` (member index) to the group.
     pub fn broadcast(&self, group: &str, me: usize, m: usize, root: usize,
                      x: &Tensor) -> Tensor {
-        let parts = self.gather(OpKind::Broadcast, group, me, m, x);
+        let parts = self.gather(OpKind::Broadcast, group, me, m, x, None, None);
         parts[root].clone()
     }
 
     /// Barrier over a group.
     pub fn barrier(&self, group: &str, me: usize, m: usize) {
         let _ = self.gather(OpKind::Barrier, group, me, m,
-                            &Tensor::zeros(&[], DType::F32));
+                            &Tensor::zeros(&[], DType::F32), None, None);
     }
 
     /// P2P send to global rank `dst` with a logical `tag`.
@@ -648,7 +746,22 @@ impl Comm {
         let group = format!("p2p:{me_rank}->{dst}:{tag}");
         self.fault_gate(&group);
         let key = self.next_key(&group);
+        let tel = self.world.telemetry();
+        let entered = tel.map(|t| (t.now_us(), payload_checksum(x)));
         self.world.p2p_send(&key, x.clone());
+        if let (Some(tel), Some((t0, checksum))) = (tel, entered) {
+            tel.note_comm(CommInfo {
+                op: OpKind::Send.name().to_string(),
+                group: group.clone(),
+                key,
+                me: me_rank as u32,
+                size: 2,
+                red: 0,
+                prec: 0,
+                elems: x.data.len() as u64,
+                checksum,
+            }, t0);
+        }
     }
 
     /// P2P receive from global rank `src` with a logical `tag`.
@@ -656,7 +769,23 @@ impl Comm {
         let group = format!("p2p:{src}->{me_rank}:{tag}");
         self.fault_gate(&group);
         let key = self.next_key(&group);
-        self.world.p2p_recv(&key)
+        let tel = self.world.telemetry();
+        let t0 = tel.map(|t| t.now_us());
+        let x = self.world.p2p_recv(&key);
+        if let (Some(tel), Some(t0)) = (tel, t0) {
+            tel.note_comm(CommInfo {
+                op: OpKind::Recv.name().to_string(),
+                group: group.clone(),
+                key,
+                me: me_rank as u32,
+                size: 2,
+                red: 0,
+                prec: 0,
+                elems: x.data.len() as u64,
+                checksum: payload_checksum(&x),
+            }, t0);
+        }
+        x
     }
 }
 
@@ -922,6 +1051,66 @@ mod tests {
         let snap = world.progress_snapshot();
         assert_eq!(snap.len(), 2);
         assert!(snap.iter().all(|p| p.last.is_none()));
+    }
+
+    #[test]
+    fn armed_telemetry_records_collective_spans() {
+        let tel = crate::ttrace::obs::Telemetry::new();
+        let results = spawn_ranks(2, {
+            let tel = tel.clone();
+            move |r, w| {
+                w.set_telemetry(tel.clone());
+                let comm = Comm::new(w);
+                let x = Tensor::full(&[8], (r + 1) as f32, DType::F32);
+                comm.all_reduce("g", r, 2, &x, RedOp::Sum, RedPrec::F32).data[0]
+            }
+        });
+        assert_eq!(results, vec![3.0, 3.0]);
+        let (events, counters) = tel.drain();
+        assert_eq!(counters.comm_ops, 2, "one span per member");
+        assert_eq!(counters.bytes_by_group["g"], 2 * 8 * 4);
+        let infos: Vec<_> = events.iter()
+            .filter_map(|e| e.comm.as_ref())
+            .collect();
+        assert_eq!(infos.len(), 2);
+        for info in &infos {
+            assert_eq!(info.op, "all_reduce");
+            assert_eq!(info.key, "g#1");
+            assert_eq!(info.elems, 8);
+            assert_eq!(info.red, 1, "sum");
+            assert_eq!(info.prec, 1, "f32");
+        }
+        // different payload bits -> different checksums on the same key
+        assert_ne!(infos[0].checksum, infos[1].checksum);
+    }
+
+    #[test]
+    fn p2p_telemetry_spans_both_ends() {
+        let tel = crate::ttrace::obs::Telemetry::new();
+        spawn_ranks(2, {
+            let tel = tel.clone();
+            move |r, w| {
+                w.set_telemetry(tel.clone());
+                let comm = Comm::new(w);
+                if r == 0 {
+                    comm.send(0, 1, "act", &Tensor::scalar(7.0, DType::F32));
+                } else {
+                    let t = comm.recv(0, 1, "act");
+                    assert_eq!(t.data[0], 7.0);
+                }
+            }
+        });
+        let (events, counters) = tel.drain();
+        assert_eq!(counters.comm_ops, 2);
+        let ops: Vec<&str> = events.iter()
+            .filter_map(|e| e.comm.as_ref().map(|c| c.op.as_str()))
+            .collect();
+        assert!(ops.contains(&"send") && ops.contains(&"recv"), "{ops:?}");
+        // the same payload crossed the wire: checksums agree end to end
+        let sums: Vec<u64> = events.iter()
+            .filter_map(|e| e.comm.as_ref().map(|c| c.checksum))
+            .collect();
+        assert_eq!(sums[0], sums[1]);
     }
 
     #[test]

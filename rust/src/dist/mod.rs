@@ -214,6 +214,9 @@ pub struct SpmdOpts {
     pub deadline: Option<Duration>,
     /// A fault-injection plan to arm on the run's `World` and collectives.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Run telemetry to arm on the `World`: every collective/p2p op then
+    /// records a first-class span (see `ttrace::obs`).
+    pub telemetry: Option<crate::ttrace::obs::Telemetry>,
 }
 
 /// How one rank of a [`try_run_spmd`] run failed.
@@ -397,6 +400,9 @@ where
     }
     if let Some(plan) = opts.faults {
         world.set_fault_plan(plan);
+    }
+    if let Some(tel) = opts.telemetry {
+        world.set_telemetry(tel);
     }
     let mut out: Vec<Option<Result<T, RankFailure>>> = (0..n).map(|_| None).collect();
     struct RankGuard(usize);
@@ -587,10 +593,12 @@ mod tests {
         use std::time::Duration;
 
         let topo = Topology::new(2, 1, 1, 1, 1).unwrap();
+        let tel = crate::ttrace::obs::Telemetry::new();
         let opts = SpmdOpts {
             deadline: Some(Duration::from_millis(150)),
             faults: Some(std::sync::Arc::new(
                 crate::ttrace::faults::FaultPlan::new(0).stall(1, "dp@"))),
+            telemetry: Some(tel.clone()),
         };
         let out = try_run_spmd_opts(topo, opts, |ctx| {
             // one healthy world barrier first, so the progress ledger has
@@ -611,6 +619,21 @@ mod tests {
                 assert!(p1.last.as_deref().unwrap_or("").contains("world"),
                         "rank 1's last completed op must be the world \
                          barrier, got {:?}", p1.last);
+                // the stall age is monotonic: rank 1 finished the world
+                // barrier, then sat out the whole 150ms deadline
+                let age = p1.age.expect("a completed op must carry an age");
+                assert!(age >= Duration::from_millis(100),
+                        "stall age must cover the deadline wait, got {age:?}");
+                assert!(h.render().contains("stuck for"), "{}", h.render());
+                // telemetry hands the hang report the missing rank's
+                // trailing collective window
+                let (_, window) = h.recent.iter()
+                    .find(|(r, _)| *r == 1)
+                    .expect("a recent window for the missing rank");
+                assert!(window.iter().any(|w| w.contains("world")),
+                        "rank 1's window must show the world barrier: \
+                         {window:?}");
+                assert!(h.render().contains("recent:"), "{}", h.render());
             }
             other => panic!("rank 0 must hang with a report, got {other:?}"),
         }

@@ -22,6 +22,10 @@
 //!                  plan (`ttrace::faults` grammar) and print the
 //!                  structured hang/crash verdicts — op kind, group key,
 //!                  missing ranks, per-rank last-completed progress
+//!   timeline       export a store's run telemetry (recorded with
+//!                  `record --telemetry`) as Chrome trace-event JSON —
+//!                  loadable in Perfetto / `chrome://tracing` — plus a
+//!                  per-rank text summary
 //!   train          run training and print the loss curve
 //!   bugs           list the 14 reproducible Table-1 bugs
 //!
@@ -30,12 +34,15 @@
 //!   ttrace check --model tiny --tp 2 --bug 1 --localize
 //!   ttrace record --tp 2 --reference --out ref.ttrc
 //!   ttrace record --tp 2 --bug 1 --out cand.ttrc
+//!   ttrace record --tp 2 --telemetry --out cand.ttrc
 //!   ttrace record --dp 2 --out torn.ttrc --checkpoint-every 8 \
 //!                 --fault 'crash@1:0/0/layers.1'
 //!   ttrace check-offline ref.ttrc cand.ttrc
 //!   ttrace check-offline ref.ttrc torn.ttrc --salvage
 //!   ttrace diagnose ref.ttrc cand.ttrc
+//!   ttrace diagnose ref.ttrc cand.ttrc --tp 2 --dp 2 --fp8
 //!   ttrace check-hang --dp 2 --fault 'stall@1:dp@' --deadline-ms 500
+//!   ttrace timeline cand.ttrc --out trace.json
 //!   ttrace inspect ref.ttrc
 //!   ttrace inspect ref.ttrc --id i0/m0/act/layers.0.mlp
 //!   ttrace lint --tp 2 --sp --bug 12
@@ -56,7 +63,8 @@ use ttrace::model::{mean_losses, preset, run_training, try_run_training,
                     Engine, ParCfg};
 use ttrace::prelude::{localized_module, reference_of, ttrace_check, CheckCfg,
                       FaultPlan, NoopHooks, RankFailure, Report, Session,
-                      Sink, SpmdOpts, StoreReader, Tolerance};
+                      Sink, SpmdOpts, StoreReader, Telemetry, Timeline,
+                      Tolerance};
 use ttrace::runtime::Executor;
 use ttrace::ttrace::analyze::{self, diff_schema, findings_json,
                               render_findings, ExpectedSchema,
@@ -74,13 +82,15 @@ fn main() {
         Some("check-offline") => run(check_offline(&argv[1..])),
         Some("diagnose") => run(diagnose_cmd(&argv[1..])),
         Some("check-hang") => run(check_hang(&argv[1..])),
+        Some("timeline") => run(timeline_cmd(&argv[1..])),
         Some("inspect") => run(inspect(&argv[1..])),
         Some("lint") => run(lint(&argv[1..])),
         Some("train") => run(train(&argv[1..])),
         Some("bugs") => run(bugs()),
         _ => {
             eprintln!("usage: ttrace <check|record|check-offline|diagnose|\
-                       check-hang|inspect|lint|train|bugs> [options]\n\
+                       check-hang|timeline|inspect|lint|train|bugs> \
+                       [options]\n\
                        run `ttrace check --help` etc. for details");
             2
         }
@@ -215,6 +225,12 @@ fn record(argv: &[String]) -> Result<i32> {
                                        to its last checkpoint")
         .opt("deadline-ms", "0", "rendezvous wait deadline while a fault \
                                   plan is armed (0 = the comm default)")
+        .flag("telemetry", "record run telemetry into the store: module \
+                            fwd/bwd spans, every collective rendezvous as a \
+                            first-class comm entry, store I/O — export with \
+                            `ttrace timeline`. Off by default because the \
+                            wall-clock stamps make the store bytes vary run \
+                            to run")
         .flag("reference", "record this config's single-device reference and \
                             embed per-tensor threshold estimates");
     let args = cli.parse_from(argv)?;
@@ -259,6 +275,7 @@ fn record(argv: &[String]) -> Result<i32> {
     } else {
         Some(Arc::new(FaultPlan::parse(fault_spec)?))
     };
+    let tel = args.flag("telemetry").then(Telemetry::new);
     let mut builder = Session::builder().parallelism(&p)
         .checkpoint_every(args.get_usize("checkpoint-every")?)
         .sink(if json_path.is_empty() { Sink::Store(out.clone()) }
@@ -269,17 +286,23 @@ fn record(argv: &[String]) -> Result<i32> {
     if let Some(plan) = &plan {
         builder = builder.faults(plan.clone());
     }
+    if let Some(tel) = &tel {
+        builder = builder.telemetry(tel.clone());
+    }
     let mut session = builder.build();
     let engine = Engine::new(m, p.clone(), layers, &exec, bugs)?;
     let mut failed_ranks = 0usize;
-    let dt = if let Some(plan) = &plan {
+    let dt = if plan.is_some() || tel.is_some() {
         // fault-tolerant run: a crashed or stalled rank must not deadlock
         // the recorder — whatever its thread-local buffers flushed before
-        // dying still reaches the store below
+        // dying still reaches the store below. (The telemetry path rides
+        // the same runner because arming the World with the handle is an
+        // opts-only affair.)
         let dl = args.get_usize("deadline-ms")?;
         let opts = SpmdOpts {
             deadline: (dl > 0).then(|| Duration::from_millis(dl as u64)),
-            faults: Some(plan.clone()),
+            faults: plan.clone(),
+            telemetry: tel.clone(),
         };
         let (results, dt) = time_once(|| {
             try_run_training(&engine, data.as_ref(), session.hooks(), 1, opts)
@@ -305,6 +328,12 @@ fn record(argv: &[String]) -> Result<i32> {
              p.topo.describe(), summary.ids, summary.shards,
              fmt_bytes(summary.payload_bytes), fmt_bytes(summary.file_bytes),
              fmt_s(dt));
+    if let Some((events, counters)) = &rep.obs {
+        println!("telemetry: {} events sealed into the store ({} trace \
+                  entries, {} comm ops, {} dropped) — `ttrace timeline {}`",
+                 events.len(), counters.trace_entries, counters.comm_ops,
+                 counters.dropped, out.display());
+    }
     if !json_path.is_empty() {
         rep.trace.as_ref().expect("tee sink keeps the trace")
             .save(Path::new(&json_path))?;
@@ -398,17 +427,28 @@ fn check_offline(argv: &[String]) -> Result<i32> {
 }
 
 /// Differential check + dependency-aware diagnosis of two `.ttrc` stores,
-/// from the files alone (the offline twin of `check --bug N`).
+/// from the files alone (the offline twin of `check --bug N`). When the
+/// candidate carries comm telemetry (`record --telemetry`) and the
+/// record-time layout flags are supplied, the observed collectives are
+/// also cross-referenced against the statically derived plan — a
+/// collective that ran on the wrong group, never ran, or ran unplanned
+/// becomes a `comm/<op>/<group>` vertex at the head of the frontier.
 fn diagnose_cmd(argv: &[String]) -> Result<i32> {
-    let cli = store_pair_cli("differential check + dependency-aware bug \
-                              localization over two .ttrc stores: divergence \
-                              frontier, blamed module, phase, implicated \
-                              parallelism dimension");
+    let cli = parcfg_cli(store_pair_cli(
+        "differential check + dependency-aware bug localization over two \
+         .ttrc stores: divergence frontier, blamed module, phase, \
+         implicated parallelism dimension. Pass the candidate's record-time \
+         layout flags (--tp/--dp/...) to also cross-reference its comm \
+         telemetry against the static collective plan"));
     let args = cli.parse_from(argv)?;
     let (reference, candidate, tolerance) = open_store_pair(&args)?;
     let (res, dt) = time_once(|| Report::from_readers(&reference, &candidate,
                                                       &tolerance));
-    let rep = res?;
+    let mut rep = res?;
+    let comm_findings = xref_store_comm(&args, &candidate)?;
+    if let (Some(d), false) = (&mut rep.diagnosis, comm_findings.is_empty()) {
+        ttrace::ttrace::diagnose::note_comm_findings(d, &comm_findings);
+    }
     println!("{}", rep.render(args.get_usize("rows")?));
     println!("{}", rep.render_diagnosis());
     println!("diagnose time: {} ({} ids; frontier analyzed from the stores \
@@ -418,7 +458,44 @@ fn diagnose_cmd(argv: &[String]) -> Result<i32> {
         std::fs::write(out, rep.to_json().to_string_pretty())?;
         println!("wrote {out}");
     }
-    Ok(rep.exit_code())
+    Ok(if comm_findings.is_empty() { rep.exit_code() } else { 1 })
+}
+
+/// Cross-reference a candidate store's comm telemetry against the clean
+/// collective plan of the layout given on the command line. Returns no
+/// findings (and warns, where appropriate) when the store carries no comm
+/// telemetry or the supplied layout does not match the recorded topology —
+/// a plan built for the wrong grid would flag every op.
+fn xref_store_comm(args: &ttrace::util::cli::Args, candidate: &StoreReader)
+                   -> Result<Vec<analyze::CommFinding>> {
+    if !candidate.obs_events().iter().any(|e| e.comm.is_some()) {
+        return Ok(Vec::new());
+    }
+    let (m, p, layers) = parse_parcfg(args)?;
+    match candidate.run_meta() {
+        Some(meta) if meta.topo != p.topo => {
+            eprintln!("note: {} carries comm telemetry recorded on {}, but \
+                       the supplied layout is {} — skipping the collective \
+                       cross-reference (pass the record-time --tp/--dp/... \
+                       flags)",
+                      args.pos(1), meta.topo.describe(), p.topo.describe());
+            return Ok(Vec::new());
+        }
+        None if p.topo.world() == 1 => return Ok(Vec::new()),
+        _ => {}
+    }
+    // the plan must cover every recorded iteration: infer the count from
+    // the store's canonical ids ("i<n>/...")
+    let iters = candidate
+        .keys()
+        .filter_map(|k| k.strip_prefix('i')?.split('/').next()?
+                        .parse::<u64>().ok())
+        .max()
+        .map(|n| n + 1)
+        .unwrap_or(1);
+    let plan = analyze::CollectivePlan::build(&m, &p, layers,
+                                              BugSet::none(), iters)?;
+    Ok(analyze::xref_comm(&plan, candidate.obs_events()))
 }
 
 /// Robustness drill: run training under a short rendezvous deadline with
@@ -462,7 +539,8 @@ fn check_hang(argv: &[String]) -> Result<i32> {
     }
     let mut session = builder.build();
     let engine = Engine::new(m, p.clone(), layers, &exec, bugs)?;
-    let opts = SpmdOpts { deadline: Some(deadline), faults: plan.clone() };
+    let opts = SpmdOpts { deadline: Some(deadline), faults: plan.clone(),
+                          ..Default::default() };
     let (results, dt) = time_once(|| {
         try_run_training(&engine, data.as_ref(), session.hooks(), steps, opts)
     });
@@ -502,14 +580,59 @@ fn check_hang(argv: &[String]) -> Result<i32> {
     }
 }
 
+/// Export a store's run telemetry as a Chrome trace-event timeline
+/// (loadable in Perfetto / `chrome://tracing`) plus a per-rank text
+/// summary. Works on any v3 store recorded with `record --telemetry`.
+fn timeline_cmd(argv: &[String]) -> Result<i32> {
+    let cli = Cli::new("export a recorded .ttrc store's run telemetry as a \
+                        Chrome trace-event timeline")
+        .pos("store.ttrc", "a store from `ttrace record --telemetry`")
+        .opt("out", "", "write the Chrome trace-event JSON here");
+    let args = cli.parse_from(argv)?;
+    let store = StoreReader::open(Path::new(args.pos(0)))?;
+    let tl = Timeline::from_store(&store);
+    if tl.events.is_empty() {
+        println!("{}: no run telemetry in the store (ttrc v{}) — record \
+                  with `ttrace record --telemetry` to capture a timeline",
+                 args.pos(0), store.version());
+    } else {
+        print!("{}", tl.render_summary());
+    }
+    let out = args.get("out");
+    if !out.is_empty() {
+        std::fs::write(out, tl.chrome_json().to_string_pretty())?;
+        println!("wrote {out} — open it in Perfetto (ui.perfetto.dev) or \
+                  chrome://tracing");
+    }
+    Ok(0)
+}
+
 fn inspect(argv: &[String]) -> Result<i32> {
     let cli = Cli::new("describe a .ttrc trace store")
         .pos("store.ttrc", "the store to describe")
         .opt("limit", "40", "max canonical ids to list (0 = all)")
         .opt("id", "", "dump one canonical id: shard specs, dtype, ranks \
-                        and summary stats (min/max/mean/checksum)");
+                        and summary stats (min/max/mean/checksum)")
+        .flag("salvage", "open a torn store through the salvage path and \
+                          report how much of it was recovered");
     let args = cli.parse_from(argv)?;
-    let store = StoreReader::open(Path::new(args.pos(0)))?;
+    let store = if args.flag("salvage") {
+        let (reader, info) = StoreReader::open_salvage(Path::new(args.pos(0)))?;
+        if info.complete {
+            println!("salvage: {} is intact — full open", args.pos(0));
+        } else {
+            println!("salvage coverage: recovered {} id(s) / {} shard(s) \
+                      from bytes [0, {}) of {} ({:.0}% of the file) — the \
+                      rest is torn",
+                     info.recovered_ids, info.recovered_shards,
+                     info.valid_prefix, info.file_len,
+                     info.valid_prefix as f64 / info.file_len.max(1) as f64
+                         * 100.0);
+        }
+        reader
+    } else {
+        StoreReader::open(Path::new(args.pos(0)))?
+    };
     let id = args.get("id");
     if !id.is_empty() {
         return inspect_id(&store, args.pos(0), id);
@@ -531,6 +654,7 @@ fn inspect(argv: &[String]) -> Result<i32> {
                  if m.zero1 { ", zero1" } else { "" },
                  if m.overlap { ", overlap" } else { "" });
     }
+    inspect_obs(&store);
     let limit = args.get_usize("limit")?;
     println!();
     println!("{:<52} {:<5} {:<18} {:>6} {:>10}  layout",
@@ -551,6 +675,40 @@ fn inspect(argv: &[String]) -> Result<i32> {
                  bytes, layout_of(metas));
     }
     Ok(0)
+}
+
+/// The obs section of `inspect`: telemetry counters plus the first few
+/// first-class collective entries (v3 stores recorded with
+/// `record --telemetry`; silent for v2 / unarmed stores).
+fn inspect_obs(store: &StoreReader) {
+    let events = store.obs_events();
+    if events.is_empty() {
+        return;
+    }
+    if let Some(c) = store.obs_counters() {
+        println!("run telemetry: {} events ({} trace entries, {} comm ops, \
+                  {} dropped)",
+                 c.events, c.trace_entries, c.comm_ops, c.dropped);
+        for (group, bytes) in &c.bytes_by_group {
+            println!("  comm payload on {group}: {}", fmt_bytes(*bytes));
+        }
+        if c.check_ids > 0 {
+            println!("  checker: {} ids in {:.3} s", c.check_ids, c.check_s);
+        }
+    }
+    const SHOW: usize = 8;
+    let comm: Vec<&ttrace::prelude::ObsEvent> =
+        events.iter().filter(|e| e.comm.is_some()).collect();
+    if !comm.is_empty() {
+        println!("  first {} of {} collective entries:",
+                 SHOW.min(comm.len()), comm.len());
+        for e in comm.iter().take(SHOW) {
+            let c = e.comm.as_ref().expect("filtered on comm");
+            println!("    rank {:>2}: {} on {} ({} elems, group size {}, \
+                      checksum {:016x})",
+                     e.rank, c.op, c.group, c.elems, c.size, c.checksum);
+        }
+    }
 }
 
 /// `inspect --id`: dump one canonical id's shard specs, dtype and summary

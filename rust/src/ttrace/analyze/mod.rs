@@ -19,12 +19,14 @@
 pub mod lint;
 pub mod plan;
 pub mod schema;
+pub mod xref;
 
 pub use lint::{check_plan, diff_plan, diff_schema, findings_json,
                lint_analysis, render_findings, Finding, ObservedSchema,
                ObservedShard};
 pub use plan::{CollectivePlan, OpKind, PlannedOp, RankPlan};
 pub use schema::{ExpectedSchema, ExpectedShard};
+pub use xref::{xref_comm, CommDelta, CommFinding};
 
 use anyhow::Result;
 

@@ -1,0 +1,445 @@
+//! Cross-reference observed communication telemetry against the clean
+//! collective plan — the comm-aware half of blame.
+//!
+//! The static plan ([`CollectivePlan`]) says what collectives each rank
+//! *should* issue; a run's telemetry (`ttrace::obs`, persisted in the
+//! `.ttrc` v3 obs section) says what it *did* issue. [`xref_comm`] diffs
+//! the two per rank, per group, and names the structural deltas:
+//!
+//! * **missing** — a planned op the rank never executed (a skipped
+//!   grad-sync: bug B12's signature);
+//! * **unplanned** — an executed op the plan doesn't contain;
+//! * **wrong-group** — a missing op on group A paired with an unplanned
+//!   op of the same kind on group B: the op ran, on the wrong group (the
+//!   wrong-amax-group bug B7's signature).
+//!
+//! `diagnose` turns each finding into a first-class vertex at the head of
+//! the blame frontier (`comm/<op>/<group>`), so a divergence caused by a
+//! mis-grouped or skipped collective is pinned on the collective itself
+//! rather than on the first tensor downstream of it.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::plan::{CollectivePlan, PlannedOp};
+use crate::ttrace::obs::{CommInfo, ObsEvent, DRIVER_RANK};
+
+/// How an observed comm sequence deviates from the plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommDelta {
+    /// Planned op(s) never observed.
+    Missing,
+    /// Observed op(s) the plan doesn't contain.
+    Unplanned,
+    /// Op(s) of a planned kind that ran on a different group.
+    WrongGroup,
+}
+
+impl CommDelta {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommDelta::Missing => "missing-collective",
+            CommDelta::Unplanned => "unplanned-collective",
+            CommDelta::WrongGroup => "wrong-group",
+        }
+    }
+}
+
+/// One plan/telemetry divergence on one rank.
+#[derive(Clone, Debug)]
+pub struct CommFinding {
+    pub rank: usize,
+    pub delta: CommDelta,
+    /// Op kind name (`all_reduce`, ...).
+    pub op: String,
+    /// The group the plan expects (`Missing` / `WrongGroup`) or the
+    /// observed group (`Unplanned`).
+    pub group: String,
+    /// Where the ops actually ran (`WrongGroup` only).
+    pub observed_group: Option<String>,
+    /// Plan call sites of the affected ops (deduped, plan order) —
+    /// `grad_sync:<param>`, `fp8_amax:qkv_x`, ... Empty for `Unplanned`.
+    pub sites: Vec<String>,
+    /// How many ops this finding covers.
+    pub count: usize,
+}
+
+impl CommFinding {
+    /// The canonical id of the implicated collective — the vertex key
+    /// `diagnose` hangs this finding on (`comm/<op>/<group>`, where the
+    /// group is the one the ops actually ran on).
+    pub fn blame_key(&self) -> String {
+        let group = self.observed_group.as_deref().unwrap_or(&self.group);
+        format!("comm/{}/{group}", self.op)
+    }
+
+    fn sites_str(&self) -> String {
+        const SHOW: usize = 4;
+        if self.sites.is_empty() {
+            return String::new();
+        }
+        let mut s = self.sites[..self.sites.len().min(SHOW)].join(", ");
+        if self.sites.len() > SHOW {
+            s.push_str(&format!(" and {} more", self.sites.len() - SHOW));
+        }
+        format!(" (site {s})")
+    }
+
+    pub fn render(&self) -> String {
+        match self.delta {
+            CommDelta::WrongGroup => format!(
+                "rank {}: {} {} op(s) ran on group {} where the plan \
+                 expects {}{}",
+                self.rank, self.count, self.op,
+                self.observed_group.as_deref().unwrap_or("?"), self.group,
+                self.sites_str()),
+            CommDelta::Missing => format!(
+                "rank {}: {} planned {} op(s) on group {} never ran{}",
+                self.rank, self.count, self.op, self.group, self.sites_str()),
+            CommDelta::Unplanned => format!(
+                "rank {}: {} unplanned {} op(s) on group {}",
+                self.rank, self.count, self.op, self.group),
+        }
+    }
+}
+
+/// A planned op matches an observed one when kind and payload size agree
+/// (groups are compared separately — alignment runs within one group).
+fn op_matches(p: &PlannedOp, o: &CommInfo) -> bool {
+    p.kind.name() == o.op && p.elems as u64 == o.elems
+}
+
+/// Greedy subsequence alignment of one group's planned vs observed op
+/// sequence: returns the planned ops never observed and the observed ops
+/// never planned. Prefers the shorter skip when both sides could advance,
+/// so isolated deletions (a skipped grad-sync) attribute to the exact
+/// planned op rather than to the tail of the sequence.
+fn align<'p, 'o>(p: &[&'p PlannedOp], o: &[&'o CommInfo])
+                 -> (Vec<&'p PlannedOp>, Vec<&'o CommInfo>) {
+    let mut missing: Vec<&'p PlannedOp> = Vec::new();
+    let mut unplanned: Vec<&'o CommInfo> = Vec::new();
+    let (mut i, mut j) = (0, 0);
+    while i < p.len() && j < o.len() {
+        if op_matches(p[i], o[j]) {
+            i += 1;
+            j += 1;
+            continue;
+        }
+        let del = (i + 1..p.len()).find(|&k| op_matches(p[k], o[j]));
+        let ins = (j + 1..o.len()).find(|&k| op_matches(p[i], o[k]));
+        match (del, ins) {
+            (Some(k), None) => {
+                missing.extend_from_slice(&p[i..k]);
+                i = k;
+            }
+            (None, Some(k)) => {
+                unplanned.extend_from_slice(&o[j..k]);
+                j = k;
+            }
+            (Some(kd), Some(ki)) => {
+                if kd - i <= ki - j {
+                    missing.extend_from_slice(&p[i..kd]);
+                    i = kd;
+                } else {
+                    unplanned.extend_from_slice(&o[j..ki]);
+                    j = ki;
+                }
+            }
+            (None, None) => {
+                // substitution: neither side ever matches the other again
+                missing.push(p[i]);
+                unplanned.push(o[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    missing.extend_from_slice(&p[i..]);
+    unplanned.extend_from_slice(&o[j..]);
+    (missing, unplanned)
+}
+
+/// Pair up a rank's leftover missing/unplanned ops of the same kind on
+/// *different* groups into wrong-group findings; emit the rest as plain
+/// missing / unplanned.
+fn merge(rank: usize, missing: Vec<&PlannedOp>, unplanned: Vec<&CommInfo>)
+         -> Vec<CommFinding> {
+    struct Bucket {
+        op: String,
+        group: String,
+        sites: Vec<String>,
+        count: usize,
+    }
+    let mut mb: Vec<Bucket> = Vec::new();
+    for m in missing {
+        let op = m.kind.name().to_string();
+        match mb.iter_mut().find(|b| b.op == op && b.group == m.group) {
+            Some(b) => {
+                b.count += 1;
+                if !b.sites.contains(&m.site) {
+                    b.sites.push(m.site.clone());
+                }
+            }
+            None => mb.push(Bucket {
+                op,
+                group: m.group.clone(),
+                sites: vec![m.site.clone()],
+                count: 1,
+            }),
+        }
+    }
+    let mut ub: Vec<Bucket> = Vec::new();
+    for u in unplanned {
+        match ub.iter_mut().find(|b| b.op == u.op && b.group == u.group) {
+            Some(b) => b.count += 1,
+            None => ub.push(Bucket {
+                op: u.op.clone(),
+                group: u.group.clone(),
+                sites: Vec::new(),
+                count: 1,
+            }),
+        }
+    }
+
+    let mut out = Vec::new();
+    for m in &mut mb {
+        while m.count > 0 {
+            let Some(u) = ub.iter_mut()
+                .find(|u| u.op == m.op && u.count > 0 && u.group != m.group)
+            else {
+                break;
+            };
+            let k = m.count.min(u.count);
+            out.push(CommFinding {
+                rank,
+                delta: CommDelta::WrongGroup,
+                op: m.op.clone(),
+                group: m.group.clone(),
+                observed_group: Some(u.group.clone()),
+                sites: m.sites.clone(),
+                count: k,
+            });
+            m.count -= k;
+            u.count -= k;
+        }
+    }
+    for m in mb.into_iter().filter(|b| b.count > 0) {
+        out.push(CommFinding {
+            rank,
+            delta: CommDelta::Missing,
+            op: m.op,
+            group: m.group,
+            observed_group: None,
+            sites: m.sites,
+            count: m.count,
+        });
+    }
+    for u in ub.into_iter().filter(|b| b.count > 0) {
+        out.push(CommFinding {
+            rank,
+            delta: CommDelta::Unplanned,
+            op: u.op,
+            group: u.group,
+            observed_group: None,
+            sites: Vec::new(),
+            count: u.count,
+        });
+    }
+    out
+}
+
+/// Diff a run's observed comm telemetry against the *clean* plan of the
+/// same layout, per rank. Ranks with no telemetry at all (v2 store,
+/// telemetry off, rank died before flushing) are skipped rather than
+/// reported as all-missing. Barrier ops are ignored — the engine plans
+/// none, but harnesses may issue them.
+pub fn xref_comm(plan: &CollectivePlan, events: &[ObsEvent]) -> Vec<CommFinding> {
+    let mut by_rank: BTreeMap<usize, Vec<&CommInfo>> = BTreeMap::new();
+    for e in events {
+        if e.rank == DRIVER_RANK {
+            continue;
+        }
+        if let Some(c) = &e.comm {
+            if c.op == "barrier" {
+                continue;
+            }
+            by_rank.entry(e.rank as usize).or_default().push(c);
+        }
+    }
+    let mut out = Vec::new();
+    for rp in &plan.ranks {
+        let Some(obs) = by_rank.get(&rp.rank) else { continue };
+        let mut planned_g: BTreeMap<&str, Vec<&PlannedOp>> = BTreeMap::new();
+        for op in &rp.ops {
+            planned_g.entry(op.group.as_str()).or_default().push(op);
+        }
+        let mut observed_g: BTreeMap<&str, Vec<&CommInfo>> = BTreeMap::new();
+        for c in obs {
+            observed_g.entry(c.group.as_str()).or_default().push(c);
+        }
+        let groups: BTreeSet<&str> = planned_g
+            .keys()
+            .chain(observed_g.keys())
+            .copied()
+            .collect();
+        let mut missing = Vec::new();
+        let mut unplanned = Vec::new();
+        for g in groups {
+            let p = planned_g.get(g).map(|v| v.as_slice()).unwrap_or(&[]);
+            let o = observed_g.get(g).map(|v| v.as_slice()).unwrap_or(&[]);
+            let (m, u) = align(p, o);
+            missing.extend(m);
+            unplanned.extend(u);
+        }
+        out.extend(merge(rp.rank, missing, unplanned));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::plan::{OpKind, RankPlan};
+    use super::*;
+    use crate::comm::{RedOp, RedPrec};
+    use crate::dist::Coord;
+    use crate::ttrace::obs::EvKind;
+
+    fn planned(kind: OpKind, group: &str, elems: usize, site: &str) -> PlannedOp {
+        PlannedOp {
+            kind,
+            group: group.to_string(),
+            me: 0,
+            size: 2,
+            op: Some(RedOp::Sum),
+            prec: Some(RedPrec::F32),
+            elems,
+            post_scale: 1.0,
+            site: site.to_string(),
+        }
+    }
+
+    fn observed(op: &str, group: &str, elems: u64, seq: u64) -> ObsEvent {
+        ObsEvent {
+            rank: 0,
+            seq,
+            kind: EvKind::Coll,
+            label: format!("{op} {group}"),
+            detail: format!("{group}#{seq}"),
+            bytes: elems * 4,
+            t_us: seq,
+            dur_us: 1,
+            comm: Some(CommInfo {
+                op: op.to_string(),
+                group: group.to_string(),
+                key: format!("{group}#{seq}"),
+                me: 0,
+                size: 2,
+                red: 1,
+                prec: 1,
+                elems,
+                checksum: 7,
+            }),
+        }
+    }
+
+    fn plan_of(ops: Vec<PlannedOp>) -> CollectivePlan {
+        CollectivePlan {
+            ranks: vec![RankPlan {
+                rank: 0,
+                coord: Coord { dp: 0, tp: 0, pp: 0, cp: 0 },
+                ops,
+            }],
+        }
+    }
+
+    #[test]
+    fn clean_sequences_produce_no_findings() {
+        let plan = plan_of(vec![
+            planned(OpKind::AllReduce, "tp@pp0dp0cp0", 1, "fp8_amax:qkv_x"),
+            planned(OpKind::AllReduce, "tp@pp0dp0cp0", 64, "grad_sync:ln"),
+            planned(OpKind::AllReduce, "world", 1, "grad_norm"),
+        ]);
+        let events = vec![
+            observed("all_reduce", "tp@pp0dp0cp0", 1, 1),
+            observed("all_reduce", "tp@pp0dp0cp0", 64, 2),
+            observed("all_reduce", "world", 1, 1),
+        ];
+        assert!(xref_comm(&plan, &events).is_empty());
+    }
+
+    #[test]
+    fn ranks_without_telemetry_are_skipped_not_all_missing() {
+        let plan = plan_of(vec![
+            planned(OpKind::AllReduce, "world", 1, "grad_norm"),
+        ]);
+        assert!(xref_comm(&plan, &[]).is_empty());
+    }
+
+    #[test]
+    fn skipped_grad_sync_is_missing_with_its_exact_site() {
+        // B12's shape: the layernorm grad-sync between two other tp-group
+        // ops never runs; payload sizes pin the site exactly
+        let plan = plan_of(vec![
+            planned(OpKind::AllReduce, "tp@pp0dp0cp0", 1, "fp8_amax:qkv_x"),
+            planned(OpKind::AllReduce, "tp@pp0dp0cp0", 64,
+                    "grad_sync:layers.0.input_layernorm.weight"),
+            planned(OpKind::AllReduce, "tp@pp0dp0cp0", 256,
+                    "grad_sync:layers.0.mlp.router.weight"),
+        ]);
+        let events = vec![
+            observed("all_reduce", "tp@pp0dp0cp0", 1, 1),
+            observed("all_reduce", "tp@pp0dp0cp0", 256, 2),
+        ];
+        let f = xref_comm(&plan, &events);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].delta, CommDelta::Missing);
+        assert_eq!(f[0].op, "all_reduce");
+        assert_eq!(f[0].group, "tp@pp0dp0cp0");
+        assert_eq!(f[0].sites,
+                   vec!["grad_sync:layers.0.input_layernorm.weight"]);
+        assert!(f[0].render().contains("never ran"), "{}", f[0].render());
+        assert_eq!(f[0].blame_key(), "comm/all_reduce/tp@pp0dp0cp0");
+    }
+
+    #[test]
+    fn moved_ops_merge_into_one_wrong_group_finding() {
+        // B7's shape: amax all-reduces planned on the tp group run on the
+        // dp group instead
+        let plan = plan_of(vec![
+            planned(OpKind::AllReduce, "tp@pp0dp0cp0", 1, "fp8_amax:qkv_x"),
+            planned(OpKind::AllReduce, "tp@pp0dp0cp0", 1, "fp8_amax:qkv_w"),
+            planned(OpKind::AllReduce, "world", 1, "grad_norm"),
+        ]);
+        let events = vec![
+            observed("all_reduce", "dp@pp0cp0tp0", 1, 1),
+            observed("all_reduce", "dp@pp0cp0tp0", 1, 2),
+            observed("all_reduce", "world", 1, 1),
+        ];
+        let f = xref_comm(&plan, &events);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].delta, CommDelta::WrongGroup);
+        assert_eq!(f[0].count, 2);
+        assert_eq!(f[0].group, "tp@pp0dp0cp0");
+        assert_eq!(f[0].observed_group.as_deref(), Some("dp@pp0cp0tp0"));
+        assert_eq!(f[0].sites, vec!["fp8_amax:qkv_x", "fp8_amax:qkv_w"]);
+        let r = f[0].render();
+        assert!(r.contains("all_reduce"), "{r}");
+        assert!(r.contains("dp@pp0cp0tp0"), "{r}");
+        assert_eq!(f[0].blame_key(), "comm/all_reduce/dp@pp0cp0tp0");
+    }
+
+    #[test]
+    fn extra_ops_are_unplanned() {
+        let plan = plan_of(vec![
+            planned(OpKind::AllReduce, "world", 1, "grad_norm"),
+        ]);
+        let events = vec![
+            observed("all_reduce", "world", 1, 1),
+            observed("all_gather", "cp@pp0dp0tp0", 32, 1),
+        ];
+        let f = xref_comm(&plan, &events);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].delta, CommDelta::Unplanned);
+        assert_eq!(f[0].op, "all_gather");
+        assert_eq!(f[0].group, "cp@pp0dp0tp0");
+    }
+}

@@ -63,6 +63,7 @@ use super::collector::{Collector, Mode, Trace};
 use super::diagnose::{diagnose, note_hangs, RunMeta};
 use super::faults::FaultPlan;
 use super::hooks::{Hooks, Kind};
+use super::obs::{EvKind, ObsCounters, ObsEvent, Telemetry};
 use super::store::{write_trace, StoreReader, StoreWriter};
 
 /// The tolerance policy of a differential check: how far past the
@@ -215,6 +216,7 @@ pub struct SessionBuilder {
     diagnose: bool,
     faults: Option<Arc<FaultPlan>>,
     checkpoint_every: usize,
+    telemetry: Option<Telemetry>,
 }
 
 impl SessionBuilder {
@@ -230,6 +232,7 @@ impl SessionBuilder {
             diagnose: true,
             faults: None,
             checkpoint_every: 0,
+            telemetry: None,
         }
     }
 
@@ -327,6 +330,21 @@ impl SessionBuilder {
         self
     }
 
+    /// Arm run telemetry on this session: every recorded tensor entry
+    /// becomes a fwd/bwd timeline event, the store write and the checker
+    /// stage become driver-lane spans, and — when the same [`Telemetry`]
+    /// handle is also passed to `dist::SpmdOpts::telemetry` — every
+    /// collective rendezvous becomes a first-class comm event. At
+    /// [`Session::finish`] the drained events seal into the `.ttrc`
+    /// store's obs section (store sinks) and surface as
+    /// [`Report::timeline`]. Recording is per-rank lock-free (same
+    /// flush-at-join discipline as the collector), so the overhead stays
+    /// in the low single digits.
+    pub fn telemetry(mut self, tel: Telemetry) -> SessionBuilder {
+        self.telemetry = Some(tel);
+        self
+    }
+
     /// Write a crash-tolerance checkpoint into the `.ttrc` store every `n`
     /// shard payloads (0 = off, the default). A checkpointed store that is
     /// torn mid-write — rank crash, SIGKILL, full disk — salvages back to
@@ -345,6 +363,9 @@ impl SessionBuilder {
         if let Some(plan) = self.faults {
             collector = collector.with_faults(plan);
         }
+        if let Some(tel) = &self.telemetry {
+            collector = collector.with_telemetry(tel.clone());
+        }
         Session {
             collector,
             meta: self.meta,
@@ -355,6 +376,7 @@ impl SessionBuilder {
             diagnose: self.diagnose,
             checkpoint_every: self.checkpoint_every,
             hangs: Vec::new(),
+            telemetry: self.telemetry,
         }
     }
 }
@@ -381,11 +403,19 @@ pub struct Session {
     diagnose: bool,
     checkpoint_every: usize,
     hangs: Vec<HangReport>,
+    telemetry: Option<Telemetry>,
 }
 
 impl Session {
     pub fn builder() -> SessionBuilder {
         SessionBuilder::new()
+    }
+
+    /// The telemetry handle this session records into, if armed — pass a
+    /// clone to `dist::SpmdOpts::telemetry` so collective rendezvous land
+    /// on the same timeline as the trace entries.
+    pub fn telemetry(&self) -> Option<&Telemetry> {
+        self.telemetry.as_ref()
     }
 
     /// A cheap per-rank recording handle. Call this once per rank thread
@@ -488,9 +518,13 @@ impl Session {
     /// after `dist::run_spmd`).
     pub fn finish(self) -> Result<Report> {
         let Session { collector, meta, tolerance, sink, reference, embed,
-                      diagnose: want_diagnosis, checkpoint_every, hangs } = self;
+                      diagnose: want_diagnosis, checkpoint_every, hangs,
+                      telemetry } = self;
 
-        // 1. drain the collection into the sink
+        // 1. drain the collection into the sink; with telemetry armed the
+        //    store write is itself a driver-lane span, and everything
+        //    drained so far seals into the store's obs section
+        let mut obs_head: Option<(Vec<ObsEvent>, ObsCounters)> = None;
         let (trace, store) = match sink {
             Sink::Memory => (Some(collector.into_trace()), None),
             Sink::Store(path) => {
@@ -500,7 +534,15 @@ impl Session {
                     w.set_estimate(rel, *eps);
                 }
                 w.set_run_meta(&meta);
+                let t0 = telemetry.as_ref().map(|t| t.now_us());
                 collector.write_store(&mut w)?;
+                if let (Some(tel), Some(t0)) = (&telemetry, t0) {
+                    tel.span(EvKind::Store, "store:write",
+                             &path.display().to_string(), 0, t0);
+                    let drained = tel.drain();
+                    w.set_obs(drained.0.clone(), drained.1.clone());
+                    obs_head = Some(drained);
+                }
                 let summary = w.finish()?;
                 (None, Some((path, summary)))
             }
@@ -512,7 +554,15 @@ impl Session {
                     w.set_estimate(rel, *eps);
                 }
                 w.set_run_meta(&meta);
+                let t0 = telemetry.as_ref().map(|t| t.now_us());
                 write_trace(&trace, &mut w)?;
+                if let (Some(tel), Some(t0)) = (&telemetry, t0) {
+                    tel.span(EvKind::Store, "store:write",
+                             &path.display().to_string(), 0, t0);
+                    let drained = tel.drain();
+                    w.set_obs(drained.0.clone(), drained.1.clone());
+                    obs_head = Some(drained);
+                }
                 let summary = w.finish()?;
                 (Some(trace), Some((path, summary)))
             }
@@ -534,6 +584,7 @@ impl Session {
                     reference_trace: None,
                     store,
                     hangs,
+                    obs: final_obs(telemetry, obs_head),
                 });
             }
             Reference::InMemory { trace, estimate } => (trace, estimate),
@@ -556,6 +607,7 @@ impl Session {
             (None, None) => unreachable!("every sink yields a trace or a store"),
         };
 
+        let t0 = telemetry.as_ref().map(|t| t.now_us());
         let outcome = check_traces(&reference_trace, &candidate_trace,
                                    &estimate, &cfg)?;
         let diagnosis = if want_diagnosis {
@@ -566,6 +618,12 @@ impl Session {
         } else {
             None
         };
+        if let (Some(tel), Some(t0)) = (&telemetry, t0) {
+            let secs = tel.now_us().saturating_sub(t0) as f64 / 1e6;
+            tel.note_check(outcome.checks.len() as u64, secs);
+            tel.span(EvKind::Check, "check",
+                     &format!("{} ids", outcome.checks.len()), 0, t0);
+        }
         Ok(Report {
             outcome: Some(outcome),
             diagnosis,
@@ -576,8 +634,29 @@ impl Session {
             reference_trace: Some(reference_trace),
             store,
             hangs,
+            obs: final_obs(telemetry, obs_head),
         })
     }
+}
+
+/// Drain whatever telemetry accumulated after the store was sealed
+/// (checker span, checker counters) and splice it onto the events already
+/// sealed into the store's obs section. The counter *totals* are
+/// cumulative atomics, so the later drain's totals already cover both
+/// halves; only the per-event comm aggregates need adding.
+fn final_obs(tel: Option<Telemetry>,
+             head: Option<(Vec<ObsEvent>, ObsCounters)>)
+             -> Option<(Vec<ObsEvent>, ObsCounters)> {
+    let tel = tel?;
+    let (tail_events, tail_counters) = tel.drain();
+    let (mut events, head_counters) = head.unwrap_or_default();
+    let mut counters = tail_counters;
+    counters.comm_ops += head_counters.comm_ops;
+    for (group, bytes) in &head_counters.bytes_by_group {
+        *counters.bytes_by_group.entry(group.clone()).or_insert(0) += bytes;
+    }
+    events.extend(tail_events);
+    Some((events, counters))
 }
 
 /// Materialize a whole `.ttrc` store as an in-memory [`Trace`] (the
@@ -731,6 +810,43 @@ mod tests {
         let session = Session::builder().parallelism(&p).build();
         let findings = session.preflight(&TINY, 2).unwrap();
         assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn telemetry_session_seals_obs_into_store_and_report() {
+        let path = tmp("api_obs.ttrc");
+        let tel = Telemetry::new();
+        let session = Session::builder()
+            .sink(Sink::store(&path))
+            .telemetry(tel.clone())
+            .build();
+        assert!(session.telemetry().unwrap().same_as(&tel));
+        record_run(&session, 1.0);
+        let report = session.finish().unwrap();
+        let (events, counters) = report.obs.as_ref().unwrap();
+        // 4 recorded tensors + the store-write span, all on the driver lane
+        assert_eq!(counters.trace_entries, 4);
+        assert!(events.iter().any(|e| e.label == "store:write"));
+        let tl = report.timeline().unwrap();
+        assert!(tl.order_signature().contains("driver|store|store:write"));
+        // the sealed store carries the same obs section
+        let reader = StoreReader::open(&path).unwrap();
+        assert_eq!(reader.obs_events().len(), events.len());
+        assert_eq!(reader.obs_counters().unwrap().trace_entries, 4);
+    }
+
+    #[test]
+    fn telemetry_times_the_checker_stage() {
+        let tel = Telemetry::new();
+        let reference = Session::builder().build();
+        record_run(&reference, 1.0);
+        let candidate = Session::builder().telemetry(tel.clone()).build();
+        record_run(&candidate, 1.0);
+        let report = candidate.finish_against(reference).unwrap();
+        assert!(report.passed());
+        let (events, counters) = report.obs.as_ref().unwrap();
+        assert_eq!(counters.check_ids, 4);
+        assert!(events.iter().any(|e| e.kind == EvKind::Check));
     }
 
     #[test]

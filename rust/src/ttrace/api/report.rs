@@ -17,6 +17,7 @@ use super::super::checker::{CheckCfg, CheckOutcome};
 use super::super::collector::Trace;
 use super::super::diagnose::{diagnose_stores, note_hangs, Diagnosis, Dim,
                              RunMeta};
+use super::super::obs::{ObsCounters, ObsEvent, Timeline};
 use super::super::report as report_fmt;
 use super::super::store::{check_stores, SalvageInfo, StoreReader,
                           StoreSummary};
@@ -53,6 +54,9 @@ pub struct Report {
     /// `Session::note_rank_failures` / `Session::note_hang`); any hang
     /// fails the report regardless of the numeric verdict
     pub hangs: Vec<HangReport>,
+    /// drained run telemetry, when the session was built with
+    /// `SessionBuilder::telemetry` (`None` otherwise)
+    pub obs: Option<(Vec<ObsEvent>, ObsCounters)>,
 }
 
 impl Report {
@@ -92,6 +96,16 @@ impl Report {
     /// sets and per-rank last-completed progress.
     pub fn hangs(&self) -> &[HangReport] {
         &self.hangs
+    }
+
+    /// The run [`Timeline`] assembled from the session's telemetry
+    /// (module fwd/bwd spans, collective rendezvous, store I/O, checker
+    /// stages). `None` when the session ran without
+    /// `SessionBuilder::telemetry`.
+    pub fn timeline(&self) -> Option<Timeline> {
+        self.obs
+            .as_ref()
+            .map(|(ev, c)| Timeline::new(ev.clone(), c.clone()))
     }
 
     /// Fraction of the differential check's ids that could actually be
@@ -259,6 +273,7 @@ impl Report {
             reference_trace: None,
             store: None,
             hangs: Vec::new(),
+            obs: None,
         })
     }
 }
@@ -278,6 +293,7 @@ mod tests {
             reference_trace: None,
             store: None,
             hangs: Vec::new(),
+            obs: None,
         }
     }
 

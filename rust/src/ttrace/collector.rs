@@ -224,16 +224,20 @@ pub struct Collector {
     kinds: Option<Vec<Kind>>,
     /// armed fault-injection plan (crash / dropped-entry faults)
     faults: Option<Arc<super::faults::FaultPlan>>,
+    /// run telemetry, when armed: every recorded entry also lands as a
+    /// fwd/bwd marker on the recording rank's timeline lane
+    obs: Option<super::obs::Telemetry>,
 }
 
 impl Collector {
     pub fn new() -> Collector {
         Collector { shared: Arc::default(), mode: Mode::Record, kinds: None,
-                    faults: None }
+                    faults: None, obs: None }
     }
 
     pub fn with_mode(mode: Mode) -> Collector {
-        Collector { shared: Arc::default(), mode, kinds: None, faults: None }
+        Collector { shared: Arc::default(), mode, kinds: None, faults: None,
+                    obs: None }
     }
 
     pub fn only_kinds(mut self, kinds: &[Kind]) -> Collector {
@@ -244,6 +248,12 @@ impl Collector {
     /// Arm a fault plan on the record path (crash / dropped entries).
     pub fn with_faults(mut self, plan: Arc<super::faults::FaultPlan>) -> Collector {
         self.faults = Some(plan);
+        self
+    }
+
+    /// Arm run telemetry on the record path.
+    pub fn with_telemetry(mut self, tel: super::obs::Telemetry) -> Collector {
+        self.obs = Some(tel);
         self
     }
 
@@ -280,6 +290,11 @@ impl Collector {
     /// the only construction site, so the attribution can't be bypassed.
     fn push(&self, key: String, spec: &ShardSpec, data: Tensor) {
         let rank = crate::dist::current_rank().unwrap_or(0);
+        if let Some(tel) = &self.obs {
+            // canonical ids are "i<it>/m<mb>/<kind>/<module>"
+            let kind = key.splitn(4, '/').nth(2).unwrap_or("");
+            tel.note_trace_entry(kind, &key, (data.data.len() * 4) as u64);
+        }
         let entry = Entry { spec: spec.clone(), data, rank: rank as u32 };
         LOCAL.with(|l| {
             let mut bufs = l.borrow_mut();

@@ -29,5 +29,5 @@ pub mod verdict;
 pub use blame::Phase;
 pub use dag::Dag;
 pub use shardmap::Dim;
-pub use verdict::{diagnose, diagnose_stores, note_hangs, Diagnosis,
-                  EntrySource, RunMeta, Suspect};
+pub use verdict::{diagnose, diagnose_stores, note_comm_findings, note_hangs,
+                  Diagnosis, EntrySource, RunMeta, Suspect};

@@ -238,6 +238,56 @@ pub fn note_hangs(d: &mut Diagnosis, hangs: &[crate::comm::HangReport]) {
     }
 }
 
+/// Fold collective cross-reference findings ([`xref_comm`]) into a
+/// diagnosis. A collective that ran on the wrong group, never ran, or ran
+/// unplanned is a harder fact than the numeric fallout it causes, so each
+/// finding becomes a frontier vertex *ahead* of the tensor suspects: key
+/// `comm/<op>/<group>` (the group the ops actually ran on), infinite
+/// excess like a replica conflict, phase derived from the planned call
+/// site. The finding's prose lands in the notes.
+///
+/// [`xref_comm`]: crate::ttrace::analyze::xref_comm
+pub fn note_comm_findings(d: &mut Diagnosis,
+                          findings: &[crate::ttrace::analyze::CommFinding]) {
+    for (i, f) in findings.iter().enumerate() {
+        d.pass = false;
+        let site = f.sites.first().map(String::as_str).unwrap_or("");
+        let phase = comm_phase(site);
+        // "grad_sync:layers.0.mlp.w1" -> the param/module past the site tag
+        let module = match site.split_once(':') {
+            Some((_, m)) => m.to_string(),
+            None => site.to_string(),
+        };
+        if d.module.is_none() && !module.is_empty() {
+            d.module = Some(module.clone());
+        }
+        if d.phase.is_none() {
+            d.phase = Some(phase);
+        }
+        d.frontier.insert(i, Suspect {
+            key: f.blame_key(),
+            module,
+            phase,
+            rel_err: 0.0,
+            threshold: 0.0,
+            conflict_elems: f.count,
+            excess: f64::INFINITY,
+        });
+        d.notes.insert(i, f.render());
+    }
+}
+
+/// Training phase a planned collective site belongs to — gradient
+/// reductions land in wgrad, dgrad-path reductions in bprop, everything
+/// else (activation gathers, fp8 amax, loss head) in fprop.
+fn comm_phase(site: &str) -> Phase {
+    match site.split(':').next().unwrap_or(site) {
+        "grad_sync" | "dpcp" | "zero1" | "embtie" | "grad_norm" => Phase::Wgrad,
+        "bwd" | "colpar_dx" | "cp_kv_grad" => Phase::Bprop,
+        _ => Phase::Fprop,
+    }
+}
+
 /// The offline wiring: differential-check two `.ttrc` stores and diagnose
 /// the outcome from the files alone. The candidate store's embedded
 /// `RunMeta` supplies the topology; the reference store's embedded
@@ -302,6 +352,43 @@ mod tests {
         assert_eq!(d.frontier.len(), 1);
         assert_eq!(d.fallout, 1);
         assert!(d.dims.is_empty(), "single device implies no dimension");
+    }
+
+    #[test]
+    fn comm_findings_lead_the_frontier_with_infinite_excess() {
+        use crate::ttrace::analyze::{CommDelta, CommFinding};
+        // numeric fallout downstream of a misrouted amax sync
+        let r = trace_of(&[("i0/m0/act/layers.0.mlp", vec![1.0, 2.0], 0)]);
+        let c = trace_of(&[("i0/m0/act/layers.0.mlp", vec![9.0, 2.0], 0)]);
+        let cfg = CheckCfg::default();
+        let out = check_traces(&r, &c, &HashMap::new(), &cfg).unwrap();
+        let mut d = diagnose(&out, &r, &c, &RunMeta::single()).unwrap();
+        assert_eq!(d.frontier.len(), 1);
+        let f = CommFinding {
+            rank: 0,
+            delta: CommDelta::WrongGroup,
+            op: "all_reduce".to_string(),
+            group: "tp@pp0dp0cp0".to_string(),
+            observed_group: Some("dp@pp0cp0tp0".to_string()),
+            sites: vec!["fp8_amax:qkv_x".to_string()],
+            count: 2,
+        };
+        note_comm_findings(&mut d, &[f]);
+        assert!(!d.pass);
+        assert_eq!(d.frontier.len(), 2);
+        assert_eq!(d.frontier[0].key, "comm/all_reduce/dp@pp0cp0tp0");
+        assert!(d.frontier[0].excess.is_infinite());
+        assert_eq!(d.frontier[0].phase, Phase::Fprop);
+        assert!(d.notes[0].contains("dp@pp0cp0tp0"), "{:?}", d.notes);
+    }
+
+    #[test]
+    fn comm_phase_maps_sites_to_training_phases() {
+        assert_eq!(comm_phase("grad_sync:layers.0.mlp.w1"), Phase::Wgrad);
+        assert_eq!(comm_phase("zero1:layers.1.qkv.weight"), Phase::Wgrad);
+        assert_eq!(comm_phase("colpar_dx:mlp"), Phase::Bprop);
+        assert_eq!(comm_phase("fp8_amax:qkv_x"), Phase::Fprop);
+        assert_eq!(comm_phase("head:loss"), Phase::Fprop);
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod faults;
 pub mod gen;
 pub mod hooks;
 pub mod merger;
+pub mod obs;
 pub mod report;
 pub mod runner;
 pub mod shard;
@@ -35,6 +36,7 @@ pub use api::{Reference, Report, Session, SessionBuilder, Sink, Tolerance,
 pub use checker::{check_traces, CheckCfg, CheckOutcome};
 pub use diagnose::{diagnose_stores, Diagnosis, RunMeta};
 pub use faults::FaultPlan;
+pub use obs::{Telemetry, Timeline};
 pub use runner::{localized_module, reference_of, ttrace_check, TtraceRun};
 pub use collector::{Collector, Trace};
 pub use hooks::{CanonId, Hooks, Kind, NoopHooks};

@@ -1,0 +1,567 @@
+//! `ttrace::obs` — per-rank run telemetry.
+//!
+//! The tensor trace (PR 2's collector) answers *what values* a run
+//! produced; this module answers *what the run was doing*: every module
+//! forward/backward record, every collective rendezvous (op kind, group
+//! key, reduce op, element count, payload checksum), store I/O and
+//! checker stages, each stamped with the recording rank and a
+//! microsecond-resolution span.
+//!
+//! ## Recording model
+//!
+//! Same contention-free shape as the collector: each rank thread appends
+//! into a *thread-local* bounded buffer (no lock, no cross-rank cache
+//! traffic on the training hot path) that flushes into the shared
+//! telemetry exactly once — at rank join (thread exit) or when the owning
+//! thread drains. [`Telemetry::drain`] then merges per-rank segments in
+//! ascending rank order, so the event *order* of a drained timeline is
+//! deterministic across thread scheduling and worker counts even though
+//! the timestamps themselves vary run to run.
+//!
+//! Buffers are bounded ([`Telemetry::with_capacity`]): a runaway run drops
+//! excess events (counted in [`ObsCounters::dropped`]) instead of growing
+//! without limit.
+//!
+//! The only cross-thread state touched on the record path is the per-rank
+//! *recent ring* — a short window of the last few collective labels,
+//! updated only on `Coll` events (which already paid a rendezvous) and
+//! read by hang reports to show what a stalled rank was doing before it
+//! went silent.
+//!
+//! Events recorded outside an SPMD rank thread (store writes, checker
+//! stages — driven from the session's main thread) land on the synthetic
+//! [`DRIVER_RANK`] lane, rendered after all real ranks.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+pub mod timeline;
+
+pub use timeline::Timeline;
+
+/// The synthetic rank of events recorded outside any SPMD rank thread
+/// (the session driver: store I/O, checker stages).
+pub const DRIVER_RANK: u32 = u32::MAX;
+
+/// Default per-rank event-buffer capacity.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// How many trailing collective labels the per-rank recent ring keeps
+/// (the "what was this rank doing before the stall" window).
+pub const RECENT_WINDOW: usize = 8;
+
+/// What a telemetry event describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvKind {
+    /// A forward-pass tensor record (activation / loss).
+    Fwd,
+    /// A backward-pass or optimizer tensor record (grads, params).
+    Bwd,
+    /// A collective (or p2p) communication op.
+    Coll,
+    /// Store I/O (writing / sealing a `.ttrc`).
+    Store,
+    /// A checker stage (differential check, diagnosis).
+    Check,
+}
+
+impl EvKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvKind::Fwd => "fwd",
+            EvKind::Bwd => "bwd",
+            EvKind::Coll => "coll",
+            EvKind::Store => "store",
+            EvKind::Check => "check",
+        }
+    }
+
+    /// Storage tag (`.ttrc` v3 obs section).
+    pub fn tag(&self) -> u8 {
+        match self {
+            EvKind::Fwd => 0,
+            EvKind::Bwd => 1,
+            EvKind::Coll => 2,
+            EvKind::Store => 3,
+            EvKind::Check => 4,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Option<EvKind> {
+        Some(match t {
+            0 => EvKind::Fwd,
+            1 => EvKind::Bwd,
+            2 => EvKind::Coll,
+            3 => EvKind::Store,
+            4 => EvKind::Check,
+            _ => return None,
+        })
+    }
+}
+
+/// The communication payload of a `Coll` event — everything the blame
+/// frontier needs to treat the collective as a first-class trace entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommInfo {
+    /// Op kind name (`all_reduce`, `all_gather`, ... — matches
+    /// `comm::OpKind::name` and the static plan's vocabulary).
+    pub op: String,
+    /// Group key without the sequence suffix (`tp@pp0dp0cp0`, `world`).
+    pub group: String,
+    /// Full rendezvous key including the per-group sequence (`tp@...#3`).
+    pub key: String,
+    /// This rank's member index within the group.
+    pub me: u32,
+    /// Participant count of the group.
+    pub size: u32,
+    /// Reduce op: 0 = none, 1 = sum, 2 = max.
+    pub red: u8,
+    /// Accumulation precision: 0 = n/a, 1 = f32, 2 = bf16.
+    pub prec: u8,
+    /// Local payload element count.
+    pub elems: u64,
+    /// FNV-1a checksum of the local payload bytes (bit-exact divergence
+    /// witness: two ranks contributing different bits to "the same"
+    /// collective show different checksums on the same key).
+    pub checksum: u64,
+}
+
+impl CommInfo {
+    /// Bytes this rank handed to the op (f32 payload).
+    pub fn local_bytes(&self) -> u64 {
+        self.elems * 4
+    }
+}
+
+/// One telemetry event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsEvent {
+    /// Recording rank ([`DRIVER_RANK`] for driver-lane events).
+    pub rank: u32,
+    /// Per-rank monotonic sequence number (program order within a rank).
+    pub seq: u64,
+    pub kind: EvKind,
+    /// Short display label (module name, `all_reduce tp@...`, `check`).
+    pub label: String,
+    /// Free-form detail (canonical id, rendezvous key, path).
+    pub detail: String,
+    /// Payload bytes touched by the event (0 when not meaningful).
+    pub bytes: u64,
+    /// Start time, microseconds since the telemetry epoch. Varies run to
+    /// run — only the event *order* is deterministic.
+    pub t_us: u64,
+    /// Span duration in microseconds (0 = instant marker).
+    pub dur_us: u64,
+    /// Set on `Coll` events.
+    pub comm: Option<CommInfo>,
+}
+
+/// Aggregate counters of one drained run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObsCounters {
+    /// Events that made it into a buffer.
+    pub events: u64,
+    /// Events dropped because a rank's buffer hit its capacity.
+    pub dropped: u64,
+    /// Tensor-trace entries observed (fwd/bwd records).
+    pub trace_entries: u64,
+    /// Communication ops observed.
+    pub comm_ops: u64,
+    /// Local payload bytes moved per group key, across all ranks.
+    pub bytes_by_group: BTreeMap<String, u64>,
+    /// Canonical ids the checker compared.
+    pub check_ids: u64,
+    /// Wall-clock seconds spent checking.
+    pub check_s: f64,
+}
+
+impl ObsCounters {
+    /// Checker throughput in ids/second (0 when nothing was checked).
+    pub fn check_throughput(&self) -> f64 {
+        if self.check_s > 0.0 { self.check_ids as f64 / self.check_s } else { 0.0 }
+    }
+}
+
+struct Shared {
+    epoch: Instant,
+    /// Per-rank event cap.
+    cap: usize,
+    /// Per-rank segments, appended once per recording thread at flush.
+    flushed: Mutex<Vec<(usize, Vec<ObsEvent>)>>,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+    trace_entries: AtomicU64,
+    check_ids: AtomicU64,
+    /// Nanoseconds spent in checker stages (f64 seconds would need a CAS
+    /// loop; integer ns adds atomically).
+    check_ns: AtomicU64,
+    /// Trailing collective labels per rank — the hang-report window.
+    recent: Mutex<HashMap<usize, VecDeque<String>>>,
+}
+
+/// One thread's pending events for one telemetry instance.
+struct LocalBuf {
+    shared: Arc<Shared>,
+    rank: usize,
+    seq: u64,
+    items: Vec<ObsEvent>,
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        if !self.items.is_empty() {
+            self.shared
+                .flushed
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .push((self.rank, std::mem::take(&mut self.items)));
+        }
+    }
+}
+
+thread_local! {
+    /// Live buffers of this thread, one per (telemetry, rank) it records
+    /// for. Flushed by `Drop` at thread exit.
+    static LOCAL: RefCell<Vec<LocalBuf>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Handle to one run's telemetry. `Clone` shares the underlying state —
+/// hand clones to the session, the collector, and the SPMD world freely.
+#[derive(Clone)]
+pub struct Telemetry {
+    shared: Arc<Shared>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new()
+    }
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// Telemetry with an explicit per-rank event-buffer capacity.
+    pub fn with_capacity(cap: usize) -> Telemetry {
+        Telemetry {
+            shared: Arc::new(Shared {
+                epoch: Instant::now(),
+                cap,
+                flushed: Mutex::new(Vec::new()),
+                recorded: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+                trace_entries: AtomicU64::new(0),
+                check_ids: AtomicU64::new(0),
+                check_ns: AtomicU64::new(0),
+                recent: Mutex::new(HashMap::new()),
+            }),
+        }
+    }
+
+    /// Two handles record into the same telemetry?
+    pub fn same_as(&self, other: &Telemetry) -> bool {
+        Arc::ptr_eq(&self.shared, &other.shared)
+    }
+
+    /// Microseconds since this telemetry's epoch (span start stamps).
+    pub fn now_us(&self) -> u64 {
+        self.shared.epoch.elapsed().as_micros() as u64
+    }
+
+    fn rank_slot() -> usize {
+        crate::dist::current_rank().unwrap_or(DRIVER_RANK as usize)
+    }
+
+    /// Append one event to this thread's buffer (lock-free path; the
+    /// shared state is only touched when the buffer flushes at rank join).
+    fn push(&self, kind: EvKind, label: String, detail: String, bytes: u64,
+            t_us: u64, dur_us: u64, comm: Option<CommInfo>) {
+        let rank = Self::rank_slot();
+        LOCAL.with(|l| {
+            let mut bufs = l.borrow_mut();
+            let buf = match bufs
+                .iter_mut()
+                .find(|b| Arc::ptr_eq(&b.shared, &self.shared) && b.rank == rank)
+            {
+                Some(b) => b,
+                None => {
+                    bufs.push(LocalBuf {
+                        shared: self.shared.clone(),
+                        rank,
+                        seq: 0,
+                        items: Vec::new(),
+                    });
+                    bufs.last_mut().expect("just pushed")
+                }
+            };
+            if buf.items.len() >= buf.shared.cap {
+                buf.shared.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            let rank32 = if rank == DRIVER_RANK as usize {
+                DRIVER_RANK
+            } else {
+                rank as u32
+            };
+            buf.items.push(ObsEvent {
+                rank: rank32,
+                seq: buf.seq,
+                kind,
+                label,
+                detail,
+                bytes,
+                t_us,
+                dur_us,
+                comm,
+            });
+            buf.seq += 1;
+            buf.shared.recorded.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+
+    /// Record an instant marker (no duration).
+    pub fn instant(&self, kind: EvKind, label: &str, detail: &str, bytes: u64) {
+        let now = self.now_us();
+        self.push(kind, label.to_string(), detail.to_string(), bytes, now, 0,
+                  None);
+    }
+
+    /// Record a span that started at `start_us` (from [`Telemetry::now_us`])
+    /// and ends now.
+    pub fn span(&self, kind: EvKind, label: &str, detail: &str, bytes: u64,
+                start_us: u64) {
+        let end = self.now_us();
+        self.push(kind, label.to_string(), detail.to_string(), bytes,
+                  start_us, end.saturating_sub(start_us), None);
+    }
+
+    /// Record one tensor-trace entry (called by the collector on every
+    /// fwd/bwd record). `kind_name` is the canonical-id kind.
+    pub fn note_trace_entry(&self, kind_name: &str, key: &str, bytes: u64) {
+        self.shared.trace_entries.fetch_add(1, Ordering::Relaxed);
+        let kind = match kind_name {
+            "act" | "loss" => EvKind::Fwd,
+            _ => EvKind::Bwd,
+        };
+        // label = the module segment; the full canonical id rides in detail
+        let label = key.rsplit('/').next().unwrap_or(key).to_string();
+        let now = self.now_us();
+        self.push(kind, label, key.to_string(), bytes, now, 0, None);
+    }
+
+    /// Record a completed communication op as a first-class span: the
+    /// rendezvous entered at `start_us` and exited now. Also feeds the
+    /// per-rank recent ring hang reports read.
+    pub fn note_comm(&self, info: CommInfo, start_us: u64) {
+        let end = self.now_us();
+        let label = format!("{} {}", info.op, info.group);
+        let rank = Self::rank_slot();
+        {
+            let mut recent = self.shared.recent.lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            let ring = recent.entry(rank).or_default();
+            if ring.len() >= RECENT_WINDOW {
+                ring.pop_front();
+            }
+            ring.push_back(format!("{} '{}'", info.op, info.key));
+        }
+        let bytes = info.local_bytes();
+        let detail = info.key.clone();
+        self.push(EvKind::Coll, label, detail, bytes, start_us,
+                  end.saturating_sub(start_us), Some(info));
+    }
+
+    /// Trailing collective window of `rank` (most recent last). Readable
+    /// while the rank is still running — this is what a hang report shows
+    /// for each missing rank.
+    pub fn recent_of(&self, rank: usize) -> Vec<String> {
+        self.shared
+            .recent
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .get(&rank)
+            .map(|r| r.iter().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Accumulate checker throughput counters.
+    pub fn note_check(&self, ids: u64, seconds: f64) {
+        self.shared.check_ids.fetch_add(ids, Ordering::Relaxed);
+        self.shared
+            .check_ns
+            .fetch_add((seconds * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Drain every flushed (and this thread's pending) buffer: events in
+    /// ascending (rank, seq) order — deterministic regardless of thread
+    /// scheduling — plus the aggregate counters. All rank threads must
+    /// have joined (true by construction after `run_spmd`).
+    pub fn drain(&self) -> (Vec<ObsEvent>, ObsCounters) {
+        LOCAL.with(|l| {
+            let mut bufs = l.borrow_mut();
+            let mut i = 0;
+            while i < bufs.len() {
+                if Arc::ptr_eq(&bufs[i].shared, &self.shared) {
+                    // Drop flushes the buffer into `shared`
+                    drop(bufs.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        });
+        let mut segments = std::mem::take(
+            &mut *self.shared.flushed.lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner));
+        // stable: equal ranks (sequential reuse) keep their flush order
+        segments.sort_by_key(|(rank, _)| *rank);
+        let mut events = Vec::new();
+        for (_, items) in segments {
+            events.extend(items);
+        }
+        let counters = counters_of(&events, &self.shared);
+        (events, counters)
+    }
+}
+
+fn counters_of(events: &[ObsEvent], shared: &Shared) -> ObsCounters {
+    let mut c = ObsCounters {
+        events: shared.recorded.load(Ordering::Relaxed),
+        dropped: shared.dropped.load(Ordering::Relaxed),
+        trace_entries: shared.trace_entries.load(Ordering::Relaxed),
+        check_ids: shared.check_ids.load(Ordering::Relaxed),
+        check_s: shared.check_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        ..ObsCounters::default()
+    };
+    for e in events {
+        if let Some(info) = &e.comm {
+            c.comm_ops += 1;
+            *c.bytes_by_group.entry(info.group.clone()).or_insert(0) +=
+                info.local_bytes();
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn comm_info(op: &str, group: &str, seq: u64) -> CommInfo {
+        CommInfo {
+            op: op.to_string(),
+            group: group.to_string(),
+            key: format!("{group}#{seq}"),
+            me: 0,
+            size: 2,
+            red: 1,
+            prec: 1,
+            elems: 16,
+            checksum: 0xfeed,
+        }
+    }
+
+    #[test]
+    fn events_drain_in_rank_then_program_order() {
+        use crate::dist::{run_spmd, Topology};
+        for _ in 0..4 {
+            let tel = Telemetry::new();
+            let topo = Topology::new(4, 1, 1, 1, 1).unwrap();
+            run_spmd(topo, |ctx| {
+                for i in 0..3 {
+                    tel.instant(EvKind::Fwd, &format!("m{i}"), "", 0);
+                }
+                let _ = ctx.rank;
+            });
+            let (events, counters) = tel.drain();
+            assert_eq!(events.len(), 12);
+            assert_eq!(counters.events, 12);
+            for (i, e) in events.iter().enumerate() {
+                assert_eq!(e.rank as usize, i / 3, "event {i} out of rank order");
+                assert_eq!(e.seq, (i % 3) as u64, "event {i} out of program order");
+                assert_eq!(e.label, format!("m{}", i % 3));
+            }
+        }
+    }
+
+    #[test]
+    fn driver_events_land_on_the_driver_lane() {
+        let tel = Telemetry::new();
+        tel.instant(EvKind::Store, "store:write", "/tmp/x.ttrc", 64);
+        let (events, _) = tel.drain();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].rank, DRIVER_RANK);
+        assert_eq!(events[0].kind, EvKind::Store);
+    }
+
+    #[test]
+    fn bounded_buffers_drop_and_count() {
+        let tel = Telemetry::with_capacity(2);
+        for i in 0..5 {
+            tel.instant(EvKind::Fwd, &format!("m{i}"), "", 0);
+        }
+        let (events, counters) = tel.drain();
+        assert_eq!(events.len(), 2);
+        assert_eq!(counters.events, 2);
+        assert_eq!(counters.dropped, 3);
+    }
+
+    #[test]
+    fn comm_events_feed_counters_and_recent_ring() {
+        let tel = Telemetry::new();
+        let t0 = tel.now_us();
+        for seq in 1..=3 {
+            tel.note_comm(comm_info("all_reduce", "tp@pp0dp0cp0", seq), t0);
+        }
+        tel.note_comm(comm_info("all_gather", "cp@pp0dp0tp0", 1), t0);
+        // recorded outside SPMD -> driver lane
+        let recent = tel.recent_of(DRIVER_RANK as usize);
+        assert_eq!(recent.len(), 4);
+        assert!(recent[3].contains("all_gather"), "{recent:?}");
+        let (events, counters) = tel.drain();
+        assert_eq!(counters.comm_ops, 4);
+        assert_eq!(counters.bytes_by_group["tp@pp0dp0cp0"], 3 * 16 * 4);
+        assert_eq!(counters.bytes_by_group["cp@pp0dp0tp0"], 64);
+        assert!(events.iter().all(|e| e.kind == EvKind::Coll));
+        assert_eq!(events[0].comm.as_ref().unwrap().checksum, 0xfeed);
+    }
+
+    #[test]
+    fn recent_ring_is_bounded() {
+        let tel = Telemetry::new();
+        let t0 = tel.now_us();
+        for seq in 1..=(RECENT_WINDOW as u64 + 5) {
+            tel.note_comm(comm_info("barrier", "world", seq), t0);
+        }
+        let recent = tel.recent_of(DRIVER_RANK as usize);
+        assert_eq!(recent.len(), RECENT_WINDOW);
+        assert!(recent.last().unwrap().contains(&format!("#{}", RECENT_WINDOW + 5)));
+    }
+
+    #[test]
+    fn check_counters_accumulate() {
+        let tel = Telemetry::new();
+        tel.note_check(100, 0.5);
+        tel.note_check(60, 0.3);
+        let (_, c) = tel.drain();
+        assert_eq!(c.check_ids, 160);
+        assert!((c.check_s - 0.8).abs() < 1e-6);
+        assert!((c.check_throughput() - 200.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn trace_entries_classify_fwd_vs_bwd() {
+        let tel = Telemetry::new();
+        tel.note_trace_entry("act", "i0/m0/act/layers.0.mlp", 32);
+        tel.note_trace_entry("main_grad", "i0/m0/main_grad/w", 16);
+        let (events, c) = tel.drain();
+        assert_eq!(c.trace_entries, 2);
+        assert_eq!(events[0].kind, EvKind::Fwd);
+        assert_eq!(events[0].label, "layers.0.mlp");
+        assert_eq!(events[1].kind, EvKind::Bwd);
+    }
+}

@@ -1,0 +1,297 @@
+//! Timeline rendering: drained telemetry → Chrome-trace-event JSON
+//! (loadable in Perfetto / `chrome://tracing`) and a per-rank text
+//! summary.
+//!
+//! Timestamps are wall-clock and vary run to run; everything *else* about
+//! a timeline — which events, their per-rank order, their labels — is
+//! deterministic for a deterministic run. [`Timeline::order_signature`]
+//! captures exactly that stable part, which is what the determinism tests
+//! compare across `TTRACE_THREADS` settings.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+use super::{EvKind, ObsCounters, ObsEvent, DRIVER_RANK};
+
+/// A drained run timeline: events in (rank, program-order) plus the
+/// aggregate counters.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    pub events: Vec<ObsEvent>,
+    pub counters: ObsCounters,
+}
+
+impl Timeline {
+    pub fn new(events: Vec<ObsEvent>, counters: ObsCounters) -> Timeline {
+        Timeline { events, counters }
+    }
+
+    /// Rebuild a timeline from a sealed `.ttrc` store's obs section (v3
+    /// stores recorded with telemetry armed; empty for v2 / unarmed runs).
+    pub fn from_store(store: &crate::ttrace::store::StoreReader) -> Timeline {
+        Timeline {
+            events: store.obs_events().to_vec(),
+            counters: store.obs_counters().cloned().unwrap_or_default(),
+        }
+    }
+
+    /// The lane (Chrome `tid`) an event renders on: real ranks keep their
+    /// rank number; the driver lane sorts after the highest real rank.
+    fn tid_of(&self, rank: u32) -> usize {
+        if rank == DRIVER_RANK {
+            self.events
+                .iter()
+                .filter(|e| e.rank != DRIVER_RANK)
+                .map(|e| e.rank as usize + 1)
+                .max()
+                .unwrap_or(0)
+        } else {
+            rank as usize
+        }
+    }
+
+    /// Chrome trace-event JSON: `{"traceEvents": [...]}` with one
+    /// complete (`"ph": "X"`) event per telemetry event and a
+    /// `thread_name` metadata event naming each rank lane.
+    pub fn chrome_json(&self) -> Json {
+        let mut lanes: BTreeMap<usize, String> = BTreeMap::new();
+        for e in &self.events {
+            let tid = self.tid_of(e.rank);
+            lanes.entry(tid).or_insert_with(|| {
+                if e.rank == DRIVER_RANK {
+                    "driver".to_string()
+                } else {
+                    format!("rank {}", e.rank)
+                }
+            });
+        }
+        let mut out = Vec::new();
+        for (tid, name) in &lanes {
+            let mut meta = Json::obj();
+            meta.set("name", Json::from_str_("thread_name"));
+            meta.set("ph", Json::from_str_("M"));
+            meta.set("pid", Json::from_usize(0));
+            meta.set("tid", Json::from_usize(*tid));
+            let mut args = Json::obj();
+            args.set("name", Json::from_str_(name));
+            meta.set("args", args);
+            out.push(meta);
+        }
+        for e in &self.events {
+            let mut ev = Json::obj();
+            ev.set("name", Json::from_str_(&e.label));
+            ev.set("cat", Json::from_str_(e.kind.name()));
+            ev.set("ph", Json::from_str_("X"));
+            ev.set("ts", Json::from_usize(e.t_us as usize));
+            ev.set("dur", Json::from_usize(e.dur_us as usize));
+            ev.set("pid", Json::from_usize(0));
+            ev.set("tid", Json::from_usize(self.tid_of(e.rank)));
+            let mut args = Json::obj();
+            if !e.detail.is_empty() {
+                args.set("detail", Json::from_str_(&e.detail));
+            }
+            if e.bytes > 0 {
+                args.set("bytes", Json::from_usize(e.bytes as usize));
+            }
+            if let Some(c) = &e.comm {
+                args.set("op", Json::from_str_(&c.op));
+                args.set("group", Json::from_str_(&c.group));
+                args.set("key", Json::from_str_(&c.key));
+                args.set("me", Json::from_usize(c.me as usize));
+                args.set("size", Json::from_usize(c.size as usize));
+                args.set("elems", Json::from_usize(c.elems as usize));
+                // hex string: u64 checksums don't survive f64 JSON numbers
+                args.set("checksum",
+                         Json::from_str_(&format!("{:016x}", c.checksum)));
+                if c.red > 0 {
+                    let red = if c.red == 1 { "sum" } else { "max" };
+                    args.set("red", Json::from_str_(red));
+                }
+                if c.prec > 0 {
+                    let prec = if c.prec == 1 { "f32" } else { "bf16" };
+                    args.set("prec", Json::from_str_(prec));
+                }
+            }
+            ev.set("args", args);
+            out.push(ev);
+        }
+        let mut root = Json::obj();
+        root.set("traceEvents", Json::Arr(out));
+        root.set("displayTimeUnit", Json::from_str_("ms"));
+        root
+    }
+
+    /// The schedule-independent part of the timeline: one line per event,
+    /// `rank|kind|label`, in drain order. Two runs of the same
+    /// deterministic program produce byte-identical signatures regardless
+    /// of `TTRACE_THREADS` or wall-clock jitter.
+    pub fn order_signature(&self) -> String {
+        let mut s = String::new();
+        for e in &self.events {
+            let lane = if e.rank == DRIVER_RANK {
+                "driver".to_string()
+            } else {
+                e.rank.to_string()
+            };
+            let _ = writeln!(s, "{lane}|{}|{}", e.kind.name(), e.label);
+        }
+        s
+    }
+
+    /// Human-readable per-rank summary plus the aggregate counters.
+    pub fn render_summary(&self) -> String {
+        let mut per_rank: BTreeMap<u32, (usize, [usize; 5], u64, u64, u64)> =
+            BTreeMap::new();
+        for e in &self.events {
+            let slot = per_rank.entry(e.rank).or_insert((0, [0; 5], 0, u64::MAX, 0));
+            slot.0 += 1;
+            slot.1[e.kind.tag() as usize] += 1;
+            if e.comm.is_some() {
+                slot.2 += e.bytes;
+            }
+            slot.3 = slot.3.min(e.t_us);
+            slot.4 = slot.4.max(e.t_us + e.dur_us);
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "timeline: {} events across {} lanes",
+                         self.events.len(), per_rank.len());
+        for (rank, (n, kinds, comm_bytes, t0, t1)) in &per_rank {
+            let lane = if *rank == DRIVER_RANK {
+                "driver".to_string()
+            } else {
+                format!("rank {rank}")
+            };
+            let span_ms = if *t1 >= *t0 && *t0 != u64::MAX {
+                (*t1 - *t0) as f64 / 1e3
+            } else {
+                0.0
+            };
+            let _ = writeln!(
+                s,
+                "  {lane}: {n} events (fwd {}, bwd {}, coll {}, store {}, \
+                 check {}), {:.1} KiB comm payload, span {span_ms:.1} ms",
+                kinds[0], kinds[1], kinds[2], kinds[3], kinds[4],
+                *comm_bytes as f64 / 1024.0,
+            );
+        }
+        let c = &self.counters;
+        let _ = writeln!(s, "counters:");
+        let _ = writeln!(s, "  events recorded: {} (dropped {})", c.events, c.dropped);
+        let _ = writeln!(s, "  trace entries:   {}", c.trace_entries);
+        let _ = writeln!(s, "  comm ops:        {}", c.comm_ops);
+        for (group, bytes) in &c.bytes_by_group {
+            let _ = writeln!(s, "    {group}: {:.1} KiB", *bytes as f64 / 1024.0);
+        }
+        if c.check_ids > 0 {
+            let _ = writeln!(
+                s,
+                "  checker:         {} ids in {:.3} s ({:.0} ids/s)",
+                c.check_ids, c.check_s, c.check_throughput(),
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::CommInfo;
+    use super::*;
+
+    fn ev(rank: u32, seq: u64, kind: EvKind, label: &str, t_us: u64) -> ObsEvent {
+        ObsEvent {
+            rank,
+            seq,
+            kind,
+            label: label.to_string(),
+            detail: String::new(),
+            bytes: 0,
+            t_us,
+            dur_us: 5,
+            comm: None,
+        }
+    }
+
+    fn sample() -> Timeline {
+        let mut events = vec![
+            ev(0, 0, EvKind::Fwd, "layers.0.mlp", 10),
+            ev(0, 1, EvKind::Coll, "all_reduce tp@pp0dp0cp0", 20),
+            ev(1, 0, EvKind::Fwd, "layers.0.mlp", 11),
+            ev(DRIVER_RANK, 0, EvKind::Store, "store:write", 40),
+        ];
+        events[1].comm = Some(CommInfo {
+            op: "all_reduce".into(),
+            group: "tp@pp0dp0cp0".into(),
+            key: "tp@pp0dp0cp0#1".into(),
+            me: 0,
+            size: 2,
+            red: 1,
+            prec: 1,
+            elems: 8,
+            checksum: 0xdead_beef,
+        });
+        events[1].bytes = 32;
+        Timeline::new(events, ObsCounters::default())
+    }
+
+    #[test]
+    fn chrome_json_has_trace_events_with_required_fields() {
+        let t = sample();
+        let j = t.chrome_json();
+        let evs = j.req("traceEvents").unwrap().as_arr().unwrap();
+        // 3 lanes (rank 0, rank 1, driver) + 4 events
+        assert_eq!(evs.len(), 7);
+        for e in evs {
+            for k in ["name", "ph", "pid", "tid"] {
+                assert!(e.get(k).is_some(), "missing {k}: {e:?}");
+            }
+        }
+        // the comm event carries its rendezvous identity in args
+        let coll = evs
+            .iter()
+            .find(|e| e.get("cat").and_then(|c| c.as_str().ok()) == Some("coll"))
+            .unwrap();
+        let args = coll.req("args").unwrap();
+        assert_eq!(args.req("key").unwrap().as_str().unwrap(), "tp@pp0dp0cp0#1");
+        assert_eq!(args.req("checksum").unwrap().as_str().unwrap(),
+                   "00000000deadbeef");
+        // driver lane lands after the highest real rank
+        let meta_names: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str().ok()) == Some("M"))
+            .map(|e| e.req("args").unwrap().req("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(meta_names, vec!["rank 0", "rank 1", "driver"]);
+    }
+
+    #[test]
+    fn order_signature_ignores_timestamps() {
+        let a = sample();
+        let mut b = sample();
+        for e in &mut b.events {
+            e.t_us += 12345;
+            e.dur_us *= 3;
+        }
+        assert_eq!(a.order_signature(), b.order_signature());
+        assert!(a.order_signature().contains("0|coll|all_reduce tp@pp0dp0cp0"));
+        assert!(a.order_signature().contains("driver|store|store:write"));
+    }
+
+    #[test]
+    fn summary_reports_lanes_and_counters() {
+        let mut t = sample();
+        t.counters.events = 4;
+        t.counters.comm_ops = 1;
+        t.counters.bytes_by_group.insert("tp@pp0dp0cp0".into(), 32);
+        t.counters.check_ids = 10;
+        t.counters.check_s = 0.1;
+        let s = t.render_summary();
+        assert!(s.contains("4 events across 3 lanes"), "{s}");
+        assert!(s.contains("rank 0"), "{s}");
+        assert!(s.contains("driver"), "{s}");
+        assert!(s.contains("tp@pp0dp0cp0"), "{s}");
+        assert!(s.contains("100 ids/s"), "{s}");
+    }
+}

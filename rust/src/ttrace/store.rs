@@ -2,7 +2,7 @@
 //! layer the paper's deployment assumes: the framework under test dumps
 //! traces to shared storage and the checker compares them out-of-band).
 //!
-//! ## Format (version 2, little-endian throughout)
+//! ## Format (version 3, little-endian throughout)
 //!
 //! ```text
 //! [0..4)   magic  b"TTRC"
@@ -22,14 +22,26 @@
 //! [E..M)   threshold estimates (empty unless recorded with --reference):
 //!          u64 eps bits (f64; 0 = none), u32 count, then per entry
 //!          u32 string idx + u64 f64 bits of the §5.2 relative estimate
-//! [M..T)   run metadata (u8 present flag; when 1: dp,tp,pp,cp,vpp and
+//! [M..O)   run metadata (u8 present flag; when 1: dp,tp,pp,cp,vpp and
 //!          n_micro as u32, then a flags byte sp|fp8|moe|zero1|overlap) —
 //!          the parallel layout of the recording run, which
 //!          `ttrace::diagnose` needs to turn per-shard rank tags into
 //!          (tp, cp, dp, pp) coordinates offline
-//! [T..)    trailer (40 bytes): u64 S, u64 I, u64 E, u64 M, u64 FNV-1a
-//!          checksum of every byte before the checksum field
+//! [O..T)   observability section (u8 present flag; when 1: the drained
+//!          `ttrace::obs` counters and event list — see `put_obs` — with
+//!          collectives as first-class entries: op kind, group key,
+//!          member/size, reduce op, precision, element count and payload
+//!          checksum per event). Strings here are inline (`put_str`), not
+//!          string-table indexed: obs labels (rendezvous keys with
+//!          per-group sequence numbers) are mostly unique, so a table
+//!          would only add indirection.
+//! [T..)    trailer (48 bytes): u64 S, u64 I, u64 E, u64 M, u64 O,
+//!          u64 FNV-1a checksum of every byte before the checksum field
 //! ```
+//!
+//! Version 2 files (no obs section, 40-byte trailer with four offsets)
+//! still open: `StoreReader::open` dispatches on the header version and
+//! serves them with an empty obs section. The writer always writes v3.
 //!
 //! Payload encodings are bit-exact: `Raw32` stores the f32 bit patterns;
 //! `Packed16` stores only the upper 16 bits and is chosen automatically
@@ -74,16 +86,22 @@ use super::checker::{check_one_id, comp_order, CheckCfg, CheckOutcome, KeyVerdic
 use super::collector::{Entry, Trace};
 use super::diagnose::RunMeta;
 use super::hooks::CanonId;
+use super::obs::{CommInfo, EvKind, ObsCounters, ObsEvent};
 use super::shard::{DimMap, Piece, ShardSpec};
 
 const MAGIC: &[u8; 4] = b"TTRC";
-const VERSION: u16 = 2;
+const VERSION: u16 = 3;
+/// Oldest readable format version (v2 = no obs section, 40-byte trailer).
+const MIN_VERSION: u16 = 2;
 const HEADER_LEN: u64 = 8;
-const TRAILER_LEN: u64 = 40;
+/// v3 trailer: five section offsets + checksum.
+const TRAILER_LEN: u64 = 48;
+/// v2 trailer: four section offsets + checksum.
+const TRAILER_LEN_V2: u64 = 40;
 /// Checkpoint block magic (payload region, `set_checkpoint_every`).
 const CKPT_MAGIC: &[u8; 4] = b"TTCK";
-/// magic + self offset + prefix hash + 4 section offsets + blob length
-const CKPT_HEADER_LEN: u64 = 4 + 8 + 8 + 32 + 4;
+/// magic + self offset + prefix hash + 5 section offsets + blob length
+const CKPT_HEADER_LEN: u64 = 4 + 8 + 8 + 40 + 4;
 
 /// How a shard's payload bytes encode its f32 values.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -253,6 +271,7 @@ pub struct StoreWriter {
     estimate: BTreeMap<String, f64>,
     estimate_eps: f64,
     run_meta: Option<RunMeta>,
+    obs: Option<(Vec<ObsEvent>, ObsCounters)>,
     /// write a `TTCK` checkpoint block every this many shards (0 = never)
     checkpoint_every: usize,
     shards_since_checkpoint: usize,
@@ -286,6 +305,7 @@ impl StoreWriter {
             estimate: BTreeMap::new(),
             estimate_eps: 0.0,
             run_meta: None,
+            obs: None,
             checkpoint_every: 0,
             shards_since_checkpoint: 0,
         };
@@ -377,6 +397,7 @@ impl StoreWriter {
         let self_off = self.offset;
         let (blob, offs) = encode_sections(&self.index, &self.estimate,
                                            self.estimate_eps, &self.run_meta,
+                                           &self.obs,
                                            self_off + CKPT_HEADER_LEN);
         let mut block = Vec::with_capacity(CKPT_HEADER_LEN as usize
                                            + blob.len() + 8);
@@ -409,6 +430,16 @@ impl StoreWriter {
         self.run_meta = Some(meta.clone());
     }
 
+    /// Embed the run's drained telemetry (events + counters) so
+    /// `timeline`/`inspect`/`diagnose` can read the collective entries and
+    /// per-rank activity back from the store alone. Call once, just
+    /// before `finish`, with the result of [`Telemetry::drain`].
+    ///
+    /// [`Telemetry::drain`]: super::obs::Telemetry::drain
+    pub fn set_obs(&mut self, events: Vec<ObsEvent>, counters: ObsCounters) {
+        self.obs = Some((events, counters));
+    }
+
     /// Write string table, index, estimates and trailer; seal the file by
     /// renaming `<path>.tmp` onto the final path (atomic on POSIX, so the
     /// sealed path never holds a half-written store).
@@ -416,9 +447,9 @@ impl StoreWriter {
         let string_table_offset = self.offset;
         let (blob, offs) = encode_sections(&self.index, &self.estimate,
                                            self.estimate_eps, &self.run_meta,
-                                           self.offset);
+                                           &self.obs, self.offset);
         self.write_bytes(&blob)?;
-        let mut tail = Vec::with_capacity(32);
+        let mut tail = Vec::with_capacity(40);
         for o in offs {
             put_u64(&mut tail, o);
         }
@@ -443,16 +474,67 @@ impl StoreWriter {
     }
 }
 
-/// Serialize the four metadata sections (string table, index, estimates,
-/// run meta) as one blob that will start at absolute file offset `base`;
-/// returns the blob and the absolute offsets of the four sections. Shared
-/// between `finish` (followed by the trailer) and `write_checkpoint`
-/// (embedded in a `TTCK` block), so a salvaged index decodes through the
-/// exact same path as a sealed one.
+/// Serialize one telemetry event (inline strings — see the module doc).
+fn put_obs_event(buf: &mut Vec<u8>, e: &ObsEvent) {
+    put_u32(buf, e.rank);
+    put_u64(buf, e.seq);
+    put_u8(buf, e.kind.tag());
+    put_str(buf, &e.label);
+    put_str(buf, &e.detail);
+    put_u64(buf, e.bytes);
+    put_u64(buf, e.t_us);
+    put_u64(buf, e.dur_us);
+    match &e.comm {
+        None => put_u8(buf, 0),
+        Some(c) => {
+            put_u8(buf, 1);
+            put_str(buf, &c.op);
+            put_str(buf, &c.group);
+            put_str(buf, &c.key);
+            put_u32(buf, c.me);
+            put_u32(buf, c.size);
+            put_u8(buf, c.red);
+            put_u8(buf, c.prec);
+            put_u64(buf, c.elems);
+            put_u64(buf, c.checksum);
+        }
+    }
+}
+
+/// Serialize the obs section: present flag, counters, then the events.
+fn put_obs(buf: &mut Vec<u8>, obs: &Option<(Vec<ObsEvent>, ObsCounters)>) {
+    let Some((events, c)) = obs else {
+        put_u8(buf, 0);
+        return;
+    };
+    put_u8(buf, 1);
+    put_u64(buf, c.events);
+    put_u64(buf, c.dropped);
+    put_u64(buf, c.trace_entries);
+    put_u64(buf, c.check_ids);
+    put_u64(buf, c.check_s.to_bits());
+    put_u32(buf, c.bytes_by_group.len() as u32);
+    for (group, bytes) in &c.bytes_by_group {
+        put_str(buf, group);
+        put_u64(buf, *bytes);
+    }
+    put_u32(buf, events.len() as u32);
+    for e in events {
+        put_obs_event(buf, e);
+    }
+}
+
+/// Serialize the five metadata sections (string table, index, estimates,
+/// run meta, obs) as one blob that will start at absolute file offset
+/// `base`; returns the blob and the absolute offsets of the five
+/// sections. Shared between `finish` (followed by the trailer) and
+/// `write_checkpoint` (embedded in a `TTCK` block), so a salvaged index
+/// decodes through the exact same path as a sealed one.
 fn encode_sections(index: &BTreeMap<String, Vec<ShardMeta>>,
                    estimate: &BTreeMap<String, f64>, eps: f64,
-                   run_meta: &Option<RunMeta>, base: u64)
-                   -> (Vec<u8>, [u64; 4]) {
+                   run_meta: &Option<RunMeta>,
+                   obs: &Option<(Vec<ObsEvent>, ObsCounters)>, base: u64)
+                   -> (Vec<u8>, [u64; 5]) {
     let mut names: BTreeSet<String> = index.keys().cloned().collect();
     names.extend(estimate.keys().cloned());
     let sid: HashMap<String, u32> = names
@@ -503,7 +585,12 @@ fn encode_sections(index: &BTreeMap<String, Vec<ShardMeta>>,
             put_u8(&mut buf, flags);
         }
     }
-    (buf, [string_table_offset, index_offset, estimates_offset, meta_offset])
+
+    let obs_offset = base + buf.len() as u64;
+    put_obs(&mut buf, obs);
+
+    (buf, [string_table_offset, index_offset, estimates_offset, meta_offset,
+           obs_offset])
 }
 
 /// Write a fully-assembled trace into `w`, key order. (The collector
@@ -640,6 +727,8 @@ pub struct StoreReader {
     estimate: HashMap<String, f64>,
     estimate_eps: Option<f64>,
     run_meta: Option<RunMeta>,
+    obs_events: Vec<ObsEvent>,
+    obs_counters: Option<ObsCounters>,
     /// the index came from a checkpoint block of a torn file, not the
     /// trailer of a sealed one — the trace may be incomplete
     salvaged: bool,
@@ -647,7 +736,7 @@ pub struct StoreReader {
     seek_lock: std::sync::Mutex<()>,
 }
 
-/// The four decoded metadata sections (shared between `open`, which reads
+/// The decoded metadata sections (shared between `open`, which reads
 /// them from the trailer-addressed tail, and `open_salvage`, which reads
 /// them from a checkpoint block).
 struct Sections {
@@ -656,14 +745,81 @@ struct Sections {
     /// raw embedded eps (0.0 = no estimates were recorded)
     eps: f64,
     run_meta: Option<RunMeta>,
+    /// v3 telemetry (empty / `None` for v2 files and unarmed runs)
+    obs_events: Vec<ObsEvent>,
+    obs_counters: Option<ObsCounters>,
 }
 
-/// Decode string table + index + estimates + run meta from `sec`, a slice
-/// whose first byte sits at absolute file offset `st_off`. Each section
-/// must land exactly at its declared offset, and every shard payload must
-/// fit inside `[HEADER_LEN, payload_end)`.
+/// Decode one telemetry event (inverse of `put_obs_event`).
+fn read_obs_event(c: &mut Cursor) -> Result<ObsEvent> {
+    let rank = c.u32()?;
+    let seq = c.u64()?;
+    let tag_at = c.abs();
+    let tag = c.u8()?;
+    let kind = EvKind::from_tag(tag).ok_or_else(|| {
+        anyhow!("{}: unknown obs event kind tag {tag} at offset {tag_at}",
+                c.path.display())
+    })?;
+    let label = c.str()?;
+    let detail = c.str()?;
+    let bytes = c.u64()?;
+    let t_us = c.u64()?;
+    let dur_us = c.u64()?;
+    let comm = if c.u8()? == 0 {
+        None
+    } else {
+        Some(CommInfo {
+            op: c.str()?,
+            group: c.str()?,
+            key: c.str()?,
+            me: c.u32()?,
+            size: c.u32()?,
+            red: c.u8()?,
+            prec: c.u8()?,
+            elems: c.u64()?,
+            checksum: c.u64()?,
+        })
+    };
+    Ok(ObsEvent { rank, seq, kind, label, detail, bytes, t_us, dur_us, comm })
+}
+
+/// Decode the obs section (inverse of `put_obs`).
+fn read_obs(c: &mut Cursor) -> Result<(Vec<ObsEvent>, Option<ObsCounters>)> {
+    if c.u8()? == 0 {
+        return Ok((Vec::new(), None));
+    }
+    let mut counters = ObsCounters {
+        events: c.u64()?,
+        dropped: c.u64()?,
+        trace_entries: c.u64()?,
+        check_ids: c.u64()?,
+        check_s: f64::from_bits(c.u64()?),
+        ..ObsCounters::default()
+    };
+    let ng = c.u32()? as usize;
+    for _ in 0..ng {
+        let group = c.str()?;
+        let bytes = c.u64()?;
+        counters.bytes_by_group.insert(group, bytes);
+    }
+    let ne = c.u32()? as usize;
+    let mut events = Vec::with_capacity(ne.min(1 << 20));
+    for _ in 0..ne {
+        events.push(read_obs_event(c)?);
+    }
+    // comm_ops is derived, not stored — recompute it like `drain` does
+    counters.comm_ops = events.iter().filter(|e| e.comm.is_some()).count() as u64;
+    Ok((events, Some(counters)))
+}
+
+/// Decode string table + index + estimates + run meta (+ the v3 obs
+/// section when `obs_off` is set) from `sec`, a slice whose first byte
+/// sits at absolute file offset `st_off`. Each section must land exactly
+/// at its declared offset, and every shard payload must fit inside
+/// `[HEADER_LEN, payload_end)`.
 fn parse_sections(path: &Path, sec: &[u8], st_off: u64, idx_off: u64,
-                  est_off: u64, meta_off: u64, payload_end: u64)
+                  est_off: u64, meta_off: u64, obs_off: Option<u64>,
+                  payload_end: u64)
                   -> Result<Sections> {
     // string table
     let mut c = Cursor { path, buf: sec, pos: 0, base: st_off };
@@ -752,6 +908,18 @@ fn parse_sections(path: &Path, sec: &[u8], st_off: u64, idx_off: u64,
         })
     };
 
+    // telemetry (v3 only — a v2 file ends after run meta)
+    let (obs_events, obs_counters) = match obs_off {
+        None => (Vec::new(), None),
+        Some(obs_off) => {
+            if c.abs() != obs_off {
+                bail!("{}: run meta ends at offset {} but the obs section \
+                       starts at {obs_off}", path.display(), c.abs());
+            }
+            read_obs(&mut c)?
+        }
+    };
+
     // A store's shards and its embedded topology must agree: diagnosis
     // maps each shard's recording rank to a (tp, cp, dp, pp) coordinate
     // of that topology, so an out-of-range rank means the metadata and
@@ -772,7 +940,7 @@ fn parse_sections(path: &Path, sec: &[u8], st_off: u64, idx_off: u64,
         }
     }
 
-    Ok(Sections { index, estimate, eps, run_meta })
+    Ok(Sections { index, estimate, eps, run_meta, obs_events, obs_counters })
 }
 
 /// Validate one candidate checkpoint block at absolute offset `i` of an
@@ -803,8 +971,9 @@ fn try_checkpoint(path: &Path, bytes: &[u8], i: usize, prefix_hash: u64)
     let idx_off = u64_at(i + 28);
     let est_off = u64_at(i + 36);
     let meta_off = u64_at(i + 44);
+    let obs_off = u64_at(i + 52);
     let blob_len =
-        u32::from_le_bytes(bytes[i + 52..i + 56].try_into().unwrap()) as usize;
+        u32::from_le_bytes(bytes[i + 60..i + 64].try_into().unwrap()) as usize;
     let blob_end = hdr_end + blob_len;
     if blob_end + 8 > bytes.len() {
         bail!("{}: checkpoint at offset {i}: sections blob ({blob_len} \
@@ -823,7 +992,7 @@ fn try_checkpoint(path: &Path, bytes: &[u8], i: usize, prefix_hash: u64)
     }
     // shards recorded before this block must lie entirely before it
     let s = parse_sections(path, &bytes[hdr_end..blob_end], st_off, idx_off,
-                           est_off, meta_off, i as u64)?;
+                           est_off, meta_off, Some(obs_off), i as u64)?;
     Ok(((blob_end + 8) as u64, s))
 }
 
@@ -849,9 +1018,10 @@ impl StoreReader {
                   path.display(), &head[0..4], MAGIC);
         }
         let version = u16::from_le_bytes([head[4], head[5]]);
-        if version != VERSION {
+        if !(MIN_VERSION..=VERSION).contains(&version) {
             bail!("{}: unsupported .ttrc version {version} at offset 4 \
-                   (this build reads version {VERSION})", path.display());
+                   (this build reads versions {MIN_VERSION} through \
+                   {VERSION})", path.display());
         }
         // The checksum covers every byte before its own 8-byte slot; a
         // truncated or bit-flipped file cannot pass it.
@@ -865,20 +1035,30 @@ impl StoreReader {
                    computed {computed:#018x}) — the file is corrupt or \
                    truncated", path.display(), file_len - 8);
         }
-        let mut tr = [0u8; 32];
-        read_exact_at(&file, &mut tr, file_len - TRAILER_LEN)
+        // v2 trailers carry four section offsets, v3 trailers five (obs)
+        let trailer_len = if version == MIN_VERSION { TRAILER_LEN_V2 }
+                          else { TRAILER_LEN };
+        let n_offs = (trailer_len as usize - 8) / 8;
+        let mut tr = vec![0u8; n_offs * 8];
+        read_exact_at(&file, &mut tr, file_len - trailer_len)
             .map_err(|e| anyhow!("{}: reading trailer: {e}", path.display()))?;
-        let st_off = u64::from_le_bytes(tr[0..8].try_into().unwrap());
-        let idx_off = u64::from_le_bytes(tr[8..16].try_into().unwrap());
-        let est_off = u64::from_le_bytes(tr[16..24].try_into().unwrap());
-        let meta_off = u64::from_le_bytes(tr[24..32].try_into().unwrap());
-        let sections_end = file_len - TRAILER_LEN;
+        let off = |k: usize| {
+            u64::from_le_bytes(tr[k * 8..k * 8 + 8].try_into().unwrap())
+        };
+        let st_off = off(0);
+        let idx_off = off(1);
+        let est_off = off(2);
+        let meta_off = off(3);
+        let obs_off = if n_offs > 4 { Some(off(4)) } else { None };
+        let sections_end = file_len - trailer_len;
+        let last_off = obs_off.unwrap_or(meta_off);
         if !(HEADER_LEN <= st_off && st_off <= idx_off && idx_off <= est_off
-             && est_off <= meta_off && meta_off <= sections_end) {
+             && est_off <= meta_off && meta_off <= last_off
+             && last_off <= sections_end) {
             bail!("{}: corrupt section offsets in trailer at offset \
                    {sections_end} (string table {st_off}, index {idx_off}, \
-                   estimates {est_off}, run meta {meta_off}, file length \
-                   {file_len})",
+                   estimates {est_off}, run meta {meta_off}, obs {obs_off:?}, \
+                   file length {file_len})",
                   path.display());
         }
 
@@ -888,7 +1068,7 @@ impl StoreReader {
                                  path.display()))?;
 
         let s = parse_sections(path, &sec, st_off, idx_off, est_off,
-                               meta_off, st_off)?;
+                               meta_off, obs_off, st_off)?;
         Ok(StoreReader {
             path: path.to_path_buf(),
             file,
@@ -899,6 +1079,8 @@ impl StoreReader {
             estimate: s.estimate,
             estimate_eps: if s.eps > 0.0 { Some(s.eps) } else { None },
             run_meta: s.run_meta,
+            obs_events: s.obs_events,
+            obs_counters: s.obs_counters,
             salvaged: false,
             #[cfg(not(unix))]
             seek_lock: std::sync::Mutex::new(()),
@@ -949,7 +1131,8 @@ impl StoreReader {
         let version = u16::from_le_bytes([bytes[4], bytes[5]]);
         if version != VERSION {
             bail!("{}: cannot salvage .ttrc version {version} at offset 4 \
-                   (this build reads version {VERSION})", path.display());
+                   (this build salvages version {VERSION} — checkpoint \
+                   blocks are version-specific)", path.display());
         }
         let mut h = fnv1a_update(FNV_OFFSET_BASIS,
                                  &bytes[..HEADER_LEN as usize]);
@@ -983,6 +1166,8 @@ impl StoreReader {
             estimate: s.estimate,
             estimate_eps: if s.eps > 0.0 { Some(s.eps) } else { None },
             run_meta: s.run_meta,
+            obs_events: s.obs_events,
+            obs_counters: s.obs_counters,
             salvaged: true,
             #[cfg(not(unix))]
             seek_lock: std::sync::Mutex::new(()),
@@ -1066,6 +1251,18 @@ impl StoreReader {
     /// The recording run's parallel layout, if the writer embedded it.
     pub fn run_meta(&self) -> Option<&RunMeta> {
         self.run_meta.as_ref()
+    }
+
+    /// The recording run's telemetry events (v3 stores recorded with
+    /// telemetry armed; empty otherwise). Ordered by (rank, seq) — the
+    /// drained order, deterministic across thread scheduling.
+    pub fn obs_events(&self) -> &[ObsEvent] {
+        &self.obs_events
+    }
+
+    /// The recording run's aggregate telemetry counters, if embedded.
+    pub fn obs_counters(&self) -> Option<&ObsCounters> {
+        self.obs_counters.as_ref()
     }
 
     /// Load one canonical id's shard set (positioned reads; thread-safe).
@@ -1323,6 +1520,123 @@ mod tests {
         assert_eq!((got.sp, got.fp8, got.moe, got.zero1, got.overlap),
                    (true, false, true, false, true));
         assert_eq!(got.n_micro, 3);
+    }
+
+    /// A small telemetry payload exercising every field: a fwd record, a
+    /// collective with full `CommInfo`, and a driver-lane store span.
+    fn sample_obs() -> (Vec<ObsEvent>, ObsCounters) {
+        let events = vec![
+            ObsEvent { rank: 0, seq: 0, kind: EvKind::Fwd,
+                       label: "layers.0.mlp".into(),
+                       detail: "i0/m0/act/layers.0.mlp".into(),
+                       bytes: 16, t_us: 10, dur_us: 0, comm: None },
+            ObsEvent { rank: 0, seq: 1, kind: EvKind::Coll,
+                       label: "all_reduce dp@pp0cp0tp0".into(),
+                       detail: "dp@pp0cp0tp0#1".into(),
+                       bytes: 32, t_us: 20, dur_us: 5,
+                       comm: Some(CommInfo {
+                           op: "all_reduce".into(),
+                           group: "dp@pp0cp0tp0".into(),
+                           key: "dp@pp0cp0tp0#1".into(),
+                           me: 0, size: 2, red: 1, prec: 1, elems: 8,
+                           checksum: 0xdead_beef_dead_beef }) },
+            ObsEvent { rank: u32::MAX, seq: 0, kind: EvKind::Store,
+                       label: "store:seal".into(), detail: "x.ttrc".into(),
+                       bytes: 0, t_us: 30, dur_us: 2, comm: None },
+        ];
+        let mut counters = ObsCounters {
+            events: 3, dropped: 1, trace_entries: 1, comm_ops: 1,
+            check_ids: 12, check_s: 0.25, ..ObsCounters::default()
+        };
+        counters.bytes_by_group.insert("dp@pp0cp0tp0".into(), 32);
+        (events, counters)
+    }
+
+    #[test]
+    fn obs_section_roundtrips_with_comm_entries() {
+        let path = tmp("obs_roundtrip.ttrc");
+        let mut w = StoreWriter::create(&path).unwrap();
+        for (k, e) in sample_entries() {
+            w.append(&k, &e).unwrap();
+        }
+        let (events, counters) = sample_obs();
+        w.set_obs(events.clone(), counters.clone());
+        w.finish().unwrap();
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.version(), 3);
+        assert_eq!(r.obs_events(), events.as_slice());
+        assert_eq!(r.obs_counters(), Some(&counters));
+        // the collective is a first-class entry: its blame-relevant
+        // payload survives bit-exactly
+        let comm = r.obs_events()[1].comm.as_ref().unwrap();
+        assert_eq!(comm.op, "all_reduce");
+        assert_eq!(comm.group, "dp@pp0cp0tp0");
+        assert_eq!(comm.checksum, 0xdead_beef_dead_beef);
+        // the tensor payload path is untouched by the obs section
+        assert_eq!(r.shard_count(), 3);
+        assert!(r.read_entries("i0/m0/main_grad/w").unwrap().is_some());
+    }
+
+    #[test]
+    fn stores_without_obs_read_back_empty() {
+        let path = tmp("obs_absent.ttrc");
+        write_sample(&path);
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.version(), 3);
+        assert!(r.obs_events().is_empty());
+        assert!(r.obs_counters().is_none());
+    }
+
+    #[test]
+    fn v2_stores_without_obs_section_still_open() {
+        // hand-rolled version-2 file: 40-byte trailer, four section
+        // offsets, no obs section — what every pre-v3 writer produced
+        let path = tmp("v2_compat.ttrc");
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        put_u16(&mut b, 2);
+        put_u16(&mut b, 0); // reserved
+        let payload_off = b.len() as u64;
+        for v in [1.5f32, -2.25] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        let base = b.len() as u64;
+        let mut sec = Vec::new();
+        put_u32(&mut sec, 1); // string table
+        put_str(&mut sec, "i0/m0/act/layers.0.mlp");
+        let idx_off = base + sec.len() as u64;
+        put_u32(&mut sec, 1); // one id
+        put_u32(&mut sec, 0); // string idx
+        put_u32(&mut sec, 1); // one shard
+        put_shard(&mut sec, &ShardMeta {
+            spec: ShardSpec::full(&[2]),
+            dtype: DType::F32,
+            dims: vec![2],
+            encoding: Encoding::Raw32,
+            rank: 0,
+            offset: payload_off,
+            len: 8,
+        });
+        let est_off = base + sec.len() as u64;
+        put_u64(&mut sec, 0); // eps bits: no estimates
+        put_u32(&mut sec, 0);
+        let meta_off = base + sec.len() as u64;
+        put_u8(&mut sec, 0); // no run meta
+        b.extend_from_slice(&sec);
+        for o in [base, idx_off, est_off, meta_off] {
+            put_u64(&mut b, o);
+        }
+        let checksum = fnv1a_update(FNV_OFFSET_BASIS, &b);
+        put_u64(&mut b, checksum);
+        std::fs::write(&path, &b).unwrap();
+
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.version(), 2);
+        assert_eq!(r.len(), 1);
+        assert!(r.obs_events().is_empty());
+        assert!(r.obs_counters().is_none());
+        let got = r.read_entries("i0/m0/act/layers.0.mlp").unwrap().unwrap();
+        assert_eq!(got[0].data.data, vec![1.5, -2.25]);
     }
 
     #[test]

@@ -47,6 +47,7 @@ fn stalled_collective_yields_hang_verdicts_across_topologies() {
         let opts = SpmdOpts {
             deadline: Some(Duration::from_millis(400)),
             faults: Some(plan),
+            ..Default::default()
         };
         let t0 = Instant::now();
         let results =
@@ -124,6 +125,7 @@ fn crashed_rank_salvages_partial_store_with_incomplete_coverage() {
     let opts = SpmdOpts {
         deadline: Some(Duration::from_secs(10)),
         faults: Some(plan),
+        ..Default::default()
     };
     let t0 = Instant::now();
     let results = try_run_training(&engine, &GenData, cs.hooks(), 1, opts);

@@ -1,0 +1,178 @@
+//! `ttrace::obs` against the acceptance bar: (a) a telemetry-armed run's
+//! timeline event *order* is byte-stable across worker thread counts
+//! (wall-clock stamps vary, the per-lane sequence must not); (b) the
+//! comm-class Table-1 bugs are blamed on the collective vertex itself —
+//! B7's misrouted fp8 amax sync surfaces as a wrong-group finding whose
+//! `comm/all_reduce/dp@...` key leads the diagnosis frontier, and B12's
+//! skipped layernorm grad-sync as a missing-collective finding on the tp
+//! group; (c) a clean run cross-references against its own plan with zero
+//! findings (no false structural blame).
+
+use ttrace::bugs::table1::bug_config;
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::GenData;
+use ttrace::dist::Topology;
+use ttrace::model::{try_run_training, Engine, ParCfg, TINY};
+use ttrace::prelude::*;
+use ttrace::runtime::Executor;
+use ttrace::ttrace::analyze::{xref_comm, CollectivePlan, CommDelta,
+                              CommFinding};
+use ttrace::ttrace::diagnose::note_comm_findings;
+
+fn par(dp: usize, tp: usize, pp: usize, cp: usize, vpp: usize) -> ParCfg {
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(dp, tp, pp, cp, vpp).unwrap();
+    p
+}
+
+/// One telemetry-armed training iteration: the session's collector feeds
+/// trace-entry events, the world's collectives feed comm events; all
+/// per-rank buffers have flushed by the time the ranks joined, so a
+/// single drain sees the whole run.
+fn run_with_telemetry(exec: &Executor, p: &ParCfg, bugs: BugSet)
+                      -> (Vec<ObsEvent>, ObsCounters) {
+    let tel = Telemetry::new();
+    let session = Session::builder()
+        .parallelism(p)
+        .telemetry(tel.clone())
+        .build();
+    let engine = Engine::new(TINY, p.clone(), 2, exec, bugs).unwrap();
+    let opts = SpmdOpts { telemetry: Some(tel.clone()), ..Default::default() };
+    for r in try_run_training(&engine, &GenData, session.hooks(), 1, opts) {
+        r.expect("no faults armed — every rank completes");
+    }
+    tel.drain()
+}
+
+fn clean_plan(p: &ParCfg) -> CollectivePlan {
+    CollectivePlan::build(&TINY, p, 2, BugSet::none(), 1).unwrap()
+}
+
+/// A diagnosis with no numeric suspects yet — the shape `diagnose` hands
+/// to `note_comm_findings` when only the structural cross-reference fired.
+fn empty_diagnosis(p: &ParCfg) -> Diagnosis {
+    Diagnosis {
+        pass: true,
+        module: None,
+        phase: None,
+        dims: Vec::new(),
+        frontier: Vec::new(),
+        fallout: 0,
+        notes: Vec::new(),
+        topo: p.topo,
+    }
+}
+
+/// The engine's results never depend on the worker pool size (see
+/// `util::par`), so neither may the telemetry's event *order*: the
+/// timeline's order signature — lane, kind, label per event, timestamps
+/// excluded — must be identical run-to-run across thread counts.
+#[test]
+fn timeline_event_order_is_stable_across_thread_counts() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let mut p = par(2, 2, 1, 1, 1);
+    p.fp8 = true;
+
+    ttrace::util::par::set_threads(1);
+    let (ev1, c1) = run_with_telemetry(&exec, &p, BugSet::none());
+    let sig1 = Timeline::new(ev1, c1).order_signature();
+
+    ttrace::util::par::set_threads(4);
+    let (ev4, c4) = run_with_telemetry(&exec, &p, BugSet::none());
+    let sig4 = Timeline::new(ev4, c4).order_signature();
+
+    assert!(!sig1.is_empty(), "telemetry recorded nothing");
+    assert_eq!(sig1, sig4,
+               "timeline event order changed with the thread count");
+}
+
+/// Clean run, clean plan: the cross-reference must stay silent on every
+/// comm-heavy layout it later blames bugs on.
+#[test]
+fn clean_runs_cross_reference_with_zero_findings() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    for p in [par(2, 2, 1, 1, 1), {
+        let mut p = par(1, 2, 1, 1, 1);
+        p.sp = true;
+        p
+    }] {
+        let (events, counters) = run_with_telemetry(&exec, &p,
+                                                    BugSet::none());
+        assert!(counters.comm_ops > 0, "run recorded no collectives");
+        let findings = xref_comm(&clean_plan(&p), &events);
+        assert!(findings.is_empty(),
+                "clean {} run: {findings:#?}", p.topo.describe());
+    }
+}
+
+/// Bug 7 routes every fp8 amax all-reduce to the dp group instead of the
+/// tp group. The cross-reference must name that as a wrong-group finding
+/// on the amax site, and `note_comm_findings` must put the collective
+/// vertex itself — `comm/all_reduce/dp@...` — at the head of the frontier.
+#[test]
+fn b7_wrong_amax_group_blames_the_collective_vertex() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let bug = BugId::B7Fp8WrongGroup;
+    let p = bug_config(bug);
+    let (events, _) = run_with_telemetry(&exec, &p, BugSet::one(bug));
+    let findings = xref_comm(&clean_plan(&p), &events);
+
+    let wrong: Vec<&CommFinding> = findings.iter()
+        .filter(|f| f.delta == CommDelta::WrongGroup)
+        .collect();
+    assert!(!wrong.is_empty(), "no wrong-group finding: {findings:#?}");
+    for f in &wrong {
+        assert_eq!(f.op, "all_reduce", "{f:#?}");
+        assert!(f.group.starts_with("tp@"),
+                "expected group should be tp: {f:#?}");
+        assert!(f.observed_group.as_deref().unwrap_or("").starts_with("dp@"),
+                "observed group should be dp: {f:#?}");
+        assert!(f.sites.iter().any(|s| s.starts_with("fp8_amax")),
+                "site should be the amax sync: {f:#?}");
+        assert!(f.blame_key().starts_with("comm/all_reduce/dp@"),
+                "{}", f.blame_key());
+    }
+
+    let mut d = empty_diagnosis(&p);
+    note_comm_findings(&mut d, &findings);
+    assert!(!d.pass);
+    assert!(d.frontier[0].key.starts_with("comm/all_reduce/dp@"),
+            "comm vertex must lead the frontier: {:?}",
+            d.frontier.iter().map(|s| &s.key).collect::<Vec<_>>());
+    assert!(d.frontier[0].excess.is_infinite(),
+            "structural findings outrank any numeric excess");
+}
+
+/// Bug 12 skips the tp grad-sync for layernorm weights under sequence
+/// parallelism. The cross-reference must report the planned all-reduce as
+/// missing, siting it at the skipped `grad_sync:` call.
+#[test]
+fn b12_skipped_layernorm_grad_sync_is_a_missing_collective() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let bug = BugId::B12SpLnSync;
+    let p = bug_config(bug);
+    let (events, _) = run_with_telemetry(&exec, &p, BugSet::one(bug));
+    let findings = xref_comm(&clean_plan(&p), &events);
+
+    let missing: Vec<&CommFinding> = findings.iter()
+        .filter(|f| f.delta == CommDelta::Missing)
+        .collect();
+    assert!(!missing.is_empty(), "no missing finding: {findings:#?}");
+    let ln = missing.iter().find(|f| {
+        f.sites.iter().any(|s| s.starts_with("grad_sync:")
+                           && (s.contains("layernorm")
+                               || s.contains("linear_proj.bias")))
+    });
+    let ln = ln.unwrap_or_else(|| panic!("no layernorm grad_sync site: \
+                                          {missing:#?}"));
+    assert_eq!(ln.op, "all_reduce");
+    assert!(ln.group.starts_with("tp@"), "{ln:#?}");
+    assert!(ln.blame_key().starts_with("comm/all_reduce/tp@"),
+            "{}", ln.blame_key());
+
+    let mut d = empty_diagnosis(&p);
+    note_comm_findings(&mut d, &findings);
+    assert!(!d.pass);
+    assert!(d.frontier[0].key.starts_with("comm/all_reduce/"),
+            "comm vertex must lead the frontier");
+}
