@@ -1,0 +1,138 @@
+//! `ttrace::live` bench: (1) detection lag — how much sooner the
+//! streaming checker flags a bug-12 run than the offline workflow, which
+//! must wait for the run to end before it can check; (2) sink enqueue
+//! overhead — the rank-phase cost of streaming every entry through the
+//! bounded queue (`Sink::store`) vs buffering it in the collector
+//! (`Sink::store_sync`). `BENCH_SMOKE=1` shrinks the repeat count; wired
+//! into `make bench-smoke`.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use ttrace::bugs::table1::bug_config;
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::GenData;
+use ttrace::model::{run_training, Engine, TINY};
+use ttrace::prelude::*;
+use ttrace::runtime::Executor;
+use ttrace::util::bench::{fmt_s, smoke_or, BenchJson, Table};
+
+const STEPS: u64 = 4;
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+fn main() {
+    let reps = smoke_or(10, 3);
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let mut bj = BenchJson::new("live");
+    let dir = std::env::temp_dir()
+        .join(format!("ttrace_live_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let bug = BugId::B12SpLnSync;
+    let p = bug_config(bug);
+    let p_ref = reference_of(&p);
+    let engine_bug = Engine::new(TINY, p.clone(), 2, &exec,
+                                 BugSet::one(bug)).unwrap();
+    let engine_clean = Engine::new(TINY, p.clone(), 2, &exec,
+                                   BugSet::none()).unwrap();
+
+    // The trusted reference, recorded once (amortized identically by both
+    // workflows): the single-device run of the same STEPS iterations.
+    let ref_session = Session::builder().parallelism(&p_ref).build();
+    let ref_engine = Engine::new(TINY, p_ref, 2, &exec,
+                                 BugSet::none()).unwrap();
+    run_training(&ref_engine, &GenData, ref_session.hooks(), STEPS);
+    let ref_trace = ref_session.finish().unwrap().trace.unwrap();
+
+    // -- 1. detection lag: live flags the bug mid-run ------------------
+    eprintln!("live: detection lag, bug-12 x {STEPS} steps, {reps} reps ...");
+    let (mut live_at, mut live_total, mut off_at) =
+        (Vec::new(), Vec::new(), Vec::new());
+    for _ in 0..reps {
+        let detect: Arc<Mutex<Option<f64>>> = Arc::new(Mutex::new(None));
+        let d = detect.clone();
+        let t0 = Instant::now();
+        let session = Session::builder()
+            .parallelism(&p)
+            .sink(Sink::Async)
+            .diagnose(false)
+            .live(Reference::trace(ref_trace.clone()),
+                  LiveCfg::new().on_verdict(move |v| {
+                      if !v.pass {
+                          let mut g = d.lock().unwrap();
+                          if g.is_none() {
+                              *g = Some(t0.elapsed().as_secs_f64());
+                          }
+                      }
+                      Control::Continue
+                  }))
+            .unwrap()
+            .build();
+        run_training(&engine_bug, &GenData, session.hooks(), STEPS);
+        session.finish().unwrap();
+        live_total.push(t0.elapsed().as_secs_f64());
+        live_at.push(detect.lock().unwrap()
+                         .expect("bug-12 must fail a live window"));
+
+        // the offline workflow: the same recording, but the verdict only
+        // exists after the run ended and the check ran
+        let t0 = Instant::now();
+        let mut cand = Session::builder()
+            .parallelism(&p)
+            .diagnose(false)
+            .build();
+        run_training(&engine_bug, &GenData, cand.hooks(), STEPS);
+        cand.attach_reference(Reference::trace(ref_trace.clone()));
+        let rep = cand.finish().unwrap();
+        assert!(!rep.passed(), "bug-12 must fail offline too");
+        off_at.push(t0.elapsed().as_secs_f64());
+    }
+    bj.stage("live_first_fail", mean(&live_at));
+    bj.stage("live_run_total", mean(&live_total));
+    bj.stage("offline_verdict", mean(&off_at));
+
+    // -- 2. enqueue overhead: async stream vs collector buffer ---------
+    eprintln!("live: rank-phase enqueue overhead, {reps} reps ...");
+    let (mut rec_async, mut rec_sync) = (Vec::new(), Vec::new());
+    for _ in 0..reps {
+        let session = Session::builder()
+            .parallelism(&p)
+            .sink(Sink::store(dir.join("a.ttrc")))
+            .build();
+        let t = Instant::now();
+        run_training(&engine_clean, &GenData, session.hooks(), 1);
+        rec_async.push(t.elapsed().as_secs_f64());
+        session.finish().unwrap();
+
+        let session = Session::builder()
+            .parallelism(&p)
+            .sink(Sink::store_sync(dir.join("s.ttrc")))
+            .build();
+        let t = Instant::now();
+        run_training(&engine_clean, &GenData, session.hooks(), 1);
+        rec_sync.push(t.elapsed().as_secs_f64());
+        session.finish().unwrap();
+    }
+    bj.stage("enqueue_async_record", mean(&rec_async));
+    bj.stage("enqueue_sync_record", mean(&rec_sync));
+
+    let mut t = Table::new(&["measure", "mean"]);
+    t.row(&["live: first failing verdict".into(), fmt_s(mean(&live_at))]);
+    t.row(&["live: full run + finish".into(), fmt_s(mean(&live_total))]);
+    t.row(&["offline: verdict (run + check)".into(), fmt_s(mean(&off_at))]);
+    t.row(&["record phase, async store".into(), fmt_s(mean(&rec_async))]);
+    t.row(&["record phase, sync store".into(), fmt_s(mean(&rec_sync))]);
+    t.print();
+    t.write_csv("results/live.csv").unwrap();
+
+    println!("\ndetection lag: live flags the bug {} into the run — {} \
+              before the offline verdict; rank-phase enqueue overhead: \
+              {:.3}x",
+             fmt_s(mean(&live_at)),
+             fmt_s(mean(&off_at) - mean(&live_at)),
+             mean(&rec_async) / mean(&rec_sync));
+    bj.write().unwrap();
+}

@@ -1,0 +1,248 @@
+//! Live monitoring end-to-end, on the same hand-rolled data-parallel
+//! trainer as `external_trainer.rs` (a linear model with its own forward,
+//! backward, all-reduce and optimizer — no `ttrace::model::` engine):
+//!
+//!  1. an in-process monitor daemon is spawned (`Monitor::bind(..).spawn()`
+//!     — the library form of `ttrace serve`);
+//!  2. the trainer runs once clean: every step window streams PASS, zero
+//!     overflows, and `/status` shows the finished run green;
+//!  3. the trainer runs once with the classic silent dp bug — the gradient
+//!     all-reduce *sums* but forgets the 1/dp average — under
+//!     `stop_on_divergence`: the streaming checker fails window 0 the
+//!     moment it closes, raises the stop flag, and the trainer's own loop
+//!     (which agrees on the flag collectively, one tiny all-reduce per
+//!     iteration) halts every rank together, well before the final
+//!     iteration. The daemon's `/metrics` then exposes the
+//!     `ttrace_first_diverging_step` gauge for the run.
+//!
+//!     cargo run --release --example live_monitor
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::thread;
+use std::time::Duration;
+
+use ttrace::comm::{RedOp, RedPrec};
+use ttrace::dist::run_spmd;
+use ttrace::prelude::*;
+use ttrace::util::rng::Rng;
+
+/// Data-parallel degree of the candidate run.
+const DP: usize = 4;
+/// Samples per microbatch.
+const B: usize = 8;
+/// Model: y = W x with W: [N_OUT, N_IN].
+const N_IN: usize = 16;
+const N_OUT: usize = 8;
+const LR: f32 = 0.05;
+/// Iterations the run *would* take — the buggy run must stop earlier.
+const ITERS: u64 = 6;
+/// Stand-in for real per-iteration compute: gives the asynchronous
+/// checker time to close each window while the run is still going.
+const PACE: Duration = Duration::from_millis(15);
+
+fn randn(seed: u64, dims: &[usize]) -> Tensor {
+    let mut data = vec![0.0f32; dims.iter().product()];
+    Rng::new(seed).fill_normal(&mut data, 1.0);
+    Tensor::new(dims, data, DType::F32)
+}
+
+fn batch(gmicro: u32) -> (Tensor, Tensor) {
+    (randn(1_000 + gmicro as u64, &[B, N_IN]),
+     randn(2_000 + gmicro as u64, &[B, N_OUT]))
+}
+
+fn forward(w: &Tensor, x: &Tensor) -> Tensor {
+    let mut y = vec![0.0f32; B * N_OUT];
+    for b in 0..B {
+        for o in 0..N_OUT {
+            let mut acc = 0.0f32;
+            for i in 0..N_IN {
+                acc += w.data[o * N_IN + i] * x.data[b * N_IN + i];
+            }
+            y[b * N_OUT + o] = acc;
+        }
+    }
+    Tensor::new(&[B, N_OUT], y, DType::F32)
+}
+
+fn wgrad(x: &Tensor, y: &Tensor, t: &Tensor) -> Tensor {
+    let mut g = vec![0.0f32; N_OUT * N_IN];
+    for b in 0..B {
+        for o in 0..N_OUT {
+            let d = y.data[b * N_OUT + o] - t.data[b * N_OUT + o];
+            for i in 0..N_IN {
+                g[o * N_IN + i] += d * x.data[b * N_IN + i];
+            }
+        }
+    }
+    Tensor::new(&[N_OUT, N_IN], g, DType::F32)
+}
+
+/// The trainer, now stop-aware: before every iteration the ranks agree
+/// collectively on the session's stop flag (one scalar all-reduce), so a
+/// live `Control::Stop` halts all of them at the same boundary. Returns
+/// the number of iterations each rank completed.
+fn train(dp: usize, micros_per_rank: usize, missing_avg: bool,
+         session: &Session) -> Vec<u64> {
+    let topo = Topology::new(dp, 1, 1, 1, 1).unwrap();
+    let stop = session.stop_flag();
+    run_spmd(topo, |ctx| {
+        let mut w = randn(7, &[N_OUT, N_IN]);
+        let tr = session.tracer();
+        let mut done = 0u64;
+        for iter in 0..ITERS {
+            let raised = stop.load(Ordering::SeqCst);
+            let g = ctx.world_group();
+            let halt = if g.size == 1 {
+                raised
+            } else {
+                let bit = Tensor::scalar(if raised { 1.0 } else { 0.0 },
+                                         DType::F32);
+                ctx.comm.all_reduce(&g.key, g.me, g.size, &bit,
+                                    RedOp::Sum, RedPrec::F32).data[0] > 0.0
+            };
+            if halt {
+                break;
+            }
+            tr.step(iter);
+            let mut acc: Option<Tensor> = None;
+            for m in 0..micros_per_rank {
+                let gmicro = (m * dp + ctx.coord.dp) as u32;
+                tr.micro(gmicro);
+                let (x, t) = batch(gmicro);
+                let y = forward(&w, &x);
+                tr.act("linear", &y, &ShardSpec::full(&y.dims));
+                let g = wgrad(&x, &y, &t);
+                tr.param_grad("w", &g, &ShardSpec::full(&g.dims));
+                acc = Some(match acc {
+                    None => g,
+                    Some(a) => a.add(&g),
+                });
+            }
+            let dpg = ctx.dp_group();
+            let sum = ctx.comm.all_reduce(&dpg.key, dpg.me, dpg.size,
+                                          acc.as_ref().unwrap(),
+                                          RedOp::Sum, RedPrec::F32);
+            let total = (dp * micros_per_rank) as f32;
+            // THE BUG (when armed): sum without the 1/dp average
+            let g = if missing_avg { sum } else { sum.scale(1.0 / total) };
+            tr.main_grad("w", &g, &ShardSpec::full(&g.dims));
+            for (wi, gi) in w.data.iter_mut().zip(&g.data) {
+                *wi -= LR * gi;
+            }
+            tr.param("w", &w, &ShardSpec::full(&w.dims));
+            thread::sleep(PACE);
+            done += 1;
+        }
+        done
+    })
+}
+
+/// The dp=1 reference walking the whole global batch — recorded once, its
+/// in-memory trace feeds both candidates' streaming checkers.
+fn record_reference() -> Trace {
+    let reference = Session::builder().n_micro(DP).build();
+    train(1, DP, false, &reference);
+    reference.finish().unwrap().trace.expect("memory sink keeps the trace")
+}
+
+fn monitored_candidate(mon_addr: SocketAddr, run_id: &str,
+                       reference: Trace) -> Session {
+    Session::builder()
+        .topology(Topology::new(DP, 1, 1, 1, 1).unwrap())
+        .sink(Sink::Async)
+        .live(Reference::trace(reference),
+              LiveCfg::new()
+                  .run_id(run_id)
+                  .monitor(mon_addr.to_string())
+                  .stop_on_divergence())
+        .unwrap()
+        .build()
+}
+
+/// Minimal HTTP/1.1 GET against the daemon (what `curl` would do).
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: ttrace\r\n\
+               Connection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    buf
+}
+
+/// Poll the daemon until it has seen the run finish (events travel over
+/// TCP — give the accept loop a moment to apply them).
+fn wait_finished(mon: &MonitorHandle, run_id: &str)
+                 -> ttrace::ttrace::live::serve::RunState {
+    for _ in 0..100 {
+        if let Some(rs) = mon.run_state(run_id) {
+            if rs.finished {
+                return rs;
+            }
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+    panic!("the daemon never saw run '{run_id}' finish");
+}
+
+fn main() -> anyhow::Result<()> {
+    let mon = Monitor::bind("127.0.0.1:0")?.spawn();
+    println!("monitor daemon listening on {} (/status, /metrics)",
+             mon.addr());
+    let reference = record_reference();
+
+    println!("\n=== clean data-parallel trainer (dp={DP}), monitored ===");
+    let session = monitored_candidate(mon.addr(), "dp-clean", reference.clone());
+    let done = train(DP, 1, false, &session);
+    let report = session.finish()?;
+    assert!(report.passed(), "clean trainer must PASS:\n{}",
+            report.render(16));
+    let lv = report.live().expect("live session");
+    assert!(lv.clean(), "clean run must stream PASS with zero overflows");
+    assert!(done.iter().all(|&d| d == ITERS),
+            "nothing stops a clean run early");
+    let rs = wait_finished(&mon, "dp-clean");
+    assert_eq!(rs.pass, Some(true));
+    println!("verdict: PASS — {} windows streamed clean, daemon agrees",
+             lv.steps.len());
+
+    println!("\n=== same trainer, missing 1/dp grad-average, \
+              stop-on-divergence ===");
+    let session = monitored_candidate(mon.addr(), "dp-bug", reference);
+    let done = train(DP, 1, true, &session);
+    let report = session.finish()?;
+    let lv = report.live().expect("live session").clone();
+    assert_eq!(lv.first_diverging, Some(0),
+               "the x dp rescale is wrong from the first window: {lv:?}");
+    assert_eq!(lv.stopped_at, lv.first_diverging,
+               "the stop must land on the first diverging step");
+    let completed = done[0];
+    assert!(done.iter().all(|&d| d == completed),
+            "the stop bit is agreed collectively — all ranks halt together");
+    assert!(completed < ITERS,
+            "the run must halt before the final iteration");
+
+    let rs = wait_finished(&mon, "dp-bug");
+    assert_eq!(rs.pass, Some(false), "daemon must report FAIL");
+    assert_eq!(rs.first_diverging, Some(0));
+    assert_eq!(rs.stopped_at, lv.stopped_at);
+
+    let metrics = http_get(mon.addr(), "/metrics");
+    assert!(metrics.contains("ttrace_first_diverging_step{run=\"dp-bug\"} 0"),
+            "gauge missing from /metrics:\n{metrics}");
+    let gauges: Vec<&str> = metrics.lines()
+        .filter(|l| l.contains("run=\"dp-bug\"")
+                && (l.starts_with("ttrace_first_diverging_step")
+                    || l.starts_with("ttrace_stopped_at_step")
+                    || l.starts_with("ttrace_run_pass")))
+        .collect();
+    println!("verdict: stopped at step {} of {ITERS} ({} iterations ran); \
+              /metrics says:", lv.stopped_at.unwrap(), completed);
+    for g in gauges {
+        println!("  {g}");
+    }
+    mon.shutdown();
+    Ok(())
+}

@@ -52,6 +52,10 @@ pub mod prelude {
     pub use crate::ttrace::diagnose::{Diagnosis, Dim, Phase, RunMeta};
     pub use crate::ttrace::faults::FaultPlan;
     pub use crate::ttrace::hooks::{CanonId, Hooks, Kind, NoopHooks};
+    pub use crate::ttrace::live::{Control, LiveCfg, LiveSummary, Monitor,
+                                  MonitorClient, MonitorHandle,
+                                  OverflowPolicy, StepVerdict,
+                                  VerdictCallback};
     pub use crate::ttrace::obs::{CommInfo, ObsCounters, ObsEvent, Telemetry,
                                  Timeline};
     pub use crate::ttrace::shard::ShardSpec;

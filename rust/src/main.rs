@@ -26,6 +26,10 @@
 //!                  `record --telemetry`) as Chrome trace-event JSON —
 //!                  loadable in Perfetto / `chrome://tracing` — plus a
 //!                  per-rank text summary
+//!   serve          run the live monitoring daemon: a TCP endpoint that
+//!                  aggregates per-step status pushed by `record --live
+//!                  --monitor` sessions and exposes `/status` (JSON) and
+//!                  `/metrics` (Prometheus text exposition) over HTTP
 //!   train          run training and print the loss curve
 //!   bugs           list the 14 reproducible Table-1 bugs
 //!
@@ -37,6 +41,10 @@
 //!   ttrace record --tp 2 --telemetry --out cand.ttrc
 //!   ttrace record --dp 2 --out torn.ttrc --checkpoint-every 8 \
 //!                 --fault 'crash@1:0/0/layers.1'
+//!   ttrace serve --addr 127.0.0.1:9090
+//!   ttrace record --tp 2 --bug 12 --sp --steps 4 --out cand.ttrc \
+//!                 --live ref.ttrc --monitor 127.0.0.1:9090 \
+//!                 --stop-on-divergence
 //!   ttrace check-offline ref.ttrc cand.ttrc
 //!   ttrace check-offline ref.ttrc torn.ttrc --salvage
 //!   ttrace diagnose ref.ttrc cand.ttrc
@@ -59,8 +67,8 @@ use anyhow::{bail, Result};
 use ttrace::bugs::{BugId, BugSet};
 use ttrace::data::{CorpusData, DataSource, GenData};
 use ttrace::dist::Topology;
-use ttrace::model::{mean_losses, preset, run_training, try_run_training,
-                    Engine, ParCfg};
+use ttrace::model::{mean_losses, preset, run_training, run_training_until,
+                    try_run_training, try_run_training_until, Engine, ParCfg};
 use ttrace::prelude::{localized_module, reference_of, ttrace_check, CheckCfg,
                       FaultPlan, NoopHooks, RankFailure, Report, Session,
                       Sink, SpmdOpts, StoreReader, Telemetry, Timeline,
@@ -85,11 +93,12 @@ fn main() {
         Some("timeline") => run(timeline_cmd(&argv[1..])),
         Some("inspect") => run(inspect(&argv[1..])),
         Some("lint") => run(lint(&argv[1..])),
+        Some("serve") => run(serve(&argv[1..])),
         Some("train") => run(train(&argv[1..])),
         Some("bugs") => run(bugs()),
         _ => {
             eprintln!("usage: ttrace <check|record|check-offline|diagnose|\
-                       check-hang|timeline|inspect|lint|train|bugs> \
+                       check-hang|timeline|inspect|lint|serve|train|bugs> \
                        [options]\n\
                        run `ttrace check --help` etc. for details");
             2
@@ -214,6 +223,22 @@ fn record(argv: &[String]) -> Result<i32> {
                           bug's parallel config (dp/fp8/moe/...) so the \
                           recorded reference matches that candidate")
         .req("out", "output .ttrc path")
+        .opt("steps", "1", "training iterations to record")
+        .opt("live", "", "stream-check every step online against this \
+                          reference .ttrc store while recording: the async \
+                          sink's streaming checker emits a per-step verdict \
+                          the moment each iteration's window closes \
+                          (ttrace::live)")
+        .opt("monitor", "", "with --live: push per-step status to a `ttrace \
+                             serve` daemon at this host:port (best-effort — \
+                             an unreachable daemon never fails the run)")
+        .opt("run-id", "", "run id reported on the daemon's /status and \
+                            /metrics (default: the --out file stem)")
+        .flag("stop-on-divergence", "with --live: raise the session's stop \
+                                     flag at the first failing step — the \
+                                     ranks agree on the flag collectively \
+                                     and all halt at the next iteration \
+                                     boundary")
         .opt("json", "", "also dump the trace as (bit-exact) debug JSON here")
         .opt("fault", "", "inject a deterministic fault plan (ttrace::faults \
                            grammar, e.g. 'crash@1:0/0/layers.1' or \
@@ -256,11 +281,13 @@ fn record(argv: &[String]) -> Result<i32> {
     let data = data_source(args.get("data"), m.v)?;
     let out = std::path::PathBuf::from(args.get("out"));
     let json_path = args.get("json").to_string();
+    let steps = args.get_usize("steps")? as u64;
     let est = if is_ref {
         // the §5.2 estimates ride along in the store so `check-offline`
-        // derives the same thresholds as the in-process workflow
+        // derives the same thresholds as the in-process workflow; they
+        // must cover every recorded iteration
         Some(threshold::estimate(&m, &p, layers, &exec, data.as_ref(),
-                                 cfg.eps as f32, 1)?)
+                                 cfg.eps as f32, steps)?)
     } else {
         None
     };
@@ -289,7 +316,32 @@ fn record(argv: &[String]) -> Result<i32> {
     if let Some(tel) = &tel {
         builder = builder.telemetry(tel.clone());
     }
+    let live_ref = args.get("live").to_string();
+    if !live_ref.is_empty() {
+        if is_ref {
+            bail!("--live stream-checks a candidate run; drop --reference \
+                   (the trusted store is the one passed to --live)");
+        }
+        let run_id = if args.get("run-id").is_empty() {
+            out.file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "run".to_string())
+        } else {
+            args.get("run-id").to_string()
+        };
+        let mut lc = ttrace::prelude::LiveCfg::new().run_id(run_id);
+        if !args.get("monitor").is_empty() {
+            lc = lc.monitor(args.get("monitor"));
+        }
+        if args.flag("stop-on-divergence") {
+            lc = lc.stop_on_divergence();
+        }
+        builder = builder.live(
+            ttrace::prelude::Reference::store(Path::new(&live_ref)), lc)?;
+    }
+    let live = !live_ref.is_empty();
     let mut session = builder.build();
+    let stop = session.stop_flag();
     let engine = Engine::new(m, p.clone(), layers, &exec, bugs)?;
     let mut failed_ranks = 0usize;
     let dt = if plan.is_some() || tel.is_some() {
@@ -304,8 +356,12 @@ fn record(argv: &[String]) -> Result<i32> {
             faults: plan.clone(),
             telemetry: tel.clone(),
         };
-        let (results, dt) = time_once(|| {
-            try_run_training(&engine, data.as_ref(), session.hooks(), 1, opts)
+        let (results, dt) = time_once(|| if live {
+            try_run_training_until(&engine, data.as_ref(), session.hooks(),
+                                   steps, opts, &stop)
+        } else {
+            try_run_training(&engine, data.as_ref(), session.hooks(), steps,
+                             opts)
         });
         for r in &results {
             if let Err(f) = r {
@@ -316,8 +372,12 @@ fn record(argv: &[String]) -> Result<i32> {
         session.note_rank_failures(&results);
         dt
     } else {
-        let (_, dt) = time_once(|| run_training(&engine, data.as_ref(),
-                                                session.hooks(), 1));
+        let (_, dt) = time_once(|| if live {
+            run_training_until(&engine, data.as_ref(), session.hooks(),
+                               steps, &stop);
+        } else {
+            run_training(&engine, data.as_ref(), session.hooks(), steps);
+        });
         dt
     };
     let rep = session.finish()?;
@@ -333,6 +393,34 @@ fn record(argv: &[String]) -> Result<i32> {
                   entries, {} comm ops, {} dropped) — `ttrace timeline {}`",
                  events.len(), counters.trace_entries, counters.comm_ops,
                  counters.dropped, out.display());
+    }
+    let mut live_failed = false;
+    // a plain async store also carries an (empty) live summary — only its
+    // queue counters mean anything, so stay quiet unless a checker ran or
+    // the queue actually misbehaved
+    if let Some(lv) = rep.live()
+        .filter(|lv| !lv.steps.is_empty() || lv.overflow > 0 || lv.stalls > 0)
+    {
+        let failed = lv.steps.iter().filter(|s| !s.pass).count();
+        println!("live: {} step window(s) checked, {} failed{}{}; {} \
+                  flagged, {} queue overflow / {} stalls (high water {}), \
+                  {} late entries",
+                 lv.steps.len(), failed,
+                 lv.first_diverging
+                     .map(|it| format!(", first diverging step {it}"))
+                     .unwrap_or_default(),
+                 lv.stopped_at
+                     .map(|it| format!(", stopped at step {it}"))
+                     .unwrap_or_default(),
+                 lv.flagged, lv.overflow, lv.stalls, lv.queue_high_water,
+                 lv.late_entries);
+        for s in lv.steps.iter().filter(|s| !s.pass) {
+            println!("  step {:>3} FAIL: {} of {} checks past threshold \
+                      ({} missing, {} merge errors), worst {} at {:.1}x",
+                     s.iter, s.failed, s.checks, s.missing, s.merge_errors,
+                     s.worst_id, s.worst_ratio);
+        }
+        live_failed = !lv.clean() || lv.stopped_at.is_some();
     }
     if !json_path.is_empty() {
         rep.trace.as_ref().expect("tee sink keeps the trace")
@@ -355,7 +443,7 @@ fn record(argv: &[String]) -> Result<i32> {
             return Ok(1);
         }
     }
-    Ok(0)
+    Ok(if live_failed { 1 } else { 0 })
 }
 
 /// Shared head of the two-store subcommands (`check-offline`, `diagnose`):
@@ -655,6 +743,7 @@ fn inspect(argv: &[String]) -> Result<i32> {
                  if m.overlap { ", overlap" } else { "" });
     }
     inspect_obs(&store);
+    inspect_live(&store);
     let limit = args.get_usize("limit")?;
     println!();
     println!("{:<52} {:<5} {:<18} {:>6} {:>10}  layout",
@@ -707,6 +796,36 @@ fn inspect_obs(store: &StoreReader) {
             println!("    rank {:>2}: {} on {} ({} elems, group size {}, \
                       checksum {:016x})",
                      e.rank, c.op, c.group, c.elems, c.size, c.checksum);
+        }
+    }
+}
+
+/// The live section of `inspect`: the sealed per-step verdict history of
+/// the recording session's streaming checker (v4 stores recorded with
+/// `record --live`; silent otherwise).
+fn inspect_live(store: &StoreReader) {
+    let Some(lv) = store.live() else { return };
+    let failed = lv.steps.iter().filter(|s| !s.pass).count();
+    println!("live section: {} step window(s), {} failed{}{}; {} flagged, \
+              {} queue overflow / {} stalls (high water {}), {} late \
+              entries",
+             lv.steps.len(), failed,
+             lv.first_diverging
+                 .map(|it| format!(", first diverging step {it}"))
+                 .unwrap_or_default(),
+             lv.stopped_at
+                 .map(|it| format!(", stopped at step {it}"))
+                 .unwrap_or_default(),
+             lv.flagged, lv.overflow, lv.stalls, lv.queue_high_water,
+             lv.late_entries);
+    for s in &lv.steps {
+        if s.pass {
+            println!("  step {:>3} pass: {} checks", s.iter, s.checks);
+        } else {
+            println!("  step {:>3} FAIL: {} of {} checks past threshold \
+                      ({} missing, {} merge errors), worst {} at {:.1}x",
+                     s.iter, s.failed, s.checks, s.missing, s.merge_errors,
+                     s.worst_id, s.worst_ratio);
         }
     }
 }
@@ -819,6 +938,28 @@ fn lint(argv: &[String]) -> Result<i32> {
         println!("wrote {out}");
     }
     Ok(if findings.is_empty() { 0 } else { 1 })
+}
+
+/// The live monitoring daemon: one TCP port aggregating per-step status
+/// pushed by `record --live --monitor` sessions (newline-delimited JSON
+/// events) and serving `/status` (JSON) and `/metrics` (Prometheus text
+/// exposition 0.0.4) to HTTP scrapers.
+fn serve(argv: &[String]) -> Result<i32> {
+    let cli = Cli::new("run the live monitoring daemon: /status (JSON) + \
+                        /metrics (Prometheus) plus the session event \
+                        endpoint, all on one port")
+        .opt("addr", "127.0.0.1:9090", "listen address (host:port; port 0 \
+                                        picks an ephemeral port)");
+    let args = cli.parse_from(argv)?;
+    let mon = ttrace::prelude::Monitor::bind(args.get("addr"))?;
+    let addr = mon.local_addr();
+    println!("ttrace serve: listening on {addr}");
+    println!("  GET http://{addr}/status   per-run state as JSON");
+    println!("  GET http://{addr}/metrics  Prometheus text exposition");
+    println!("  sessions push with `ttrace record --live ref.ttrc \
+              --monitor {addr} ...`");
+    mon.serve_forever()?;
+    Ok(0)
 }
 
 fn train(argv: &[String]) -> Result<i32> {

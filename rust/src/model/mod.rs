@@ -15,4 +15,4 @@ mod optimizer;
 pub use config::{preset, ModelCfg, ParCfg, Schedule, Shapes, E2E, SMALL, TINY};
 pub use engine::{Engine, RankState};
 pub use step::{mean_losses, run_training, run_training_full,
-               try_run_training};
+               run_training_until, try_run_training, try_run_training_until};

@@ -266,6 +266,68 @@ pub fn run_training_full(engine: &Engine, data: &dyn DataSource,
     })
 }
 
+/// Stop-aware twin of [`run_training`] for live sessions: before every
+/// iteration the ranks *agree* on whether a stop was requested (a world
+/// all-reduce of the flag bit), so either every rank enters the iteration
+/// or none does — an asynchronously raised flag can never leave a
+/// collective half-entered. The flag is typically
+/// [`Session::stop_flag`](crate::ttrace::api::Session::stop_flag), raised
+/// by the streaming checker's `Control::Stop` verdict.
+pub fn run_training_until(engine: &Engine, data: &dyn DataSource,
+                          hooks: &dyn Hooks, iters: u64,
+                          stop: &std::sync::atomic::AtomicBool)
+                          -> Vec<Vec<f64>> {
+    run_spmd(engine.p.topo, |ctx| {
+        let mut st = engine.init_rank(ctx);
+        let mut losses = Vec::new();
+        for it in 0..iters {
+            if stop_agreed(ctx, stop) {
+                break;
+            }
+            if let Some(l) = engine.train_iter(ctx, &mut st, hooks, data, it) {
+                losses.push(l);
+            }
+        }
+        losses
+    })
+}
+
+/// Stop-aware twin of [`try_run_training`] (live session + fault plan).
+pub fn try_run_training_until(engine: &Engine, data: &dyn DataSource,
+                              hooks: &dyn Hooks, iters: u64, opts: SpmdOpts,
+                              stop: &std::sync::atomic::AtomicBool)
+                              -> Vec<Result<Vec<f64>, RankFailure>> {
+    try_run_spmd_opts(engine.p.topo, opts, |ctx| {
+        let mut st = engine.init_rank(ctx);
+        let mut losses = Vec::new();
+        for it in 0..iters {
+            if stop_agreed(ctx, stop) {
+                break;
+            }
+            if let Some(l) = engine.train_iter(ctx, &mut st, hooks, data, it) {
+                losses.push(l);
+            }
+        }
+        losses
+    })
+}
+
+/// World-agreement on the stop bit: any rank seeing the flag raised makes
+/// *all* ranks break at the same iteration boundary.
+fn stop_agreed(ctx: &RankCtx, stop: &std::sync::atomic::AtomicBool) -> bool {
+    let raised = stop.load(std::sync::atomic::Ordering::SeqCst);
+    let g = ctx.world_group();
+    if g.size == 1 {
+        return raised;
+    }
+    let t = Tensor::scalar(if raised { 1.0 } else { 0.0 },
+                           crate::tensor::DType::F32);
+    let sum = ctx.comm.all_reduce(&g.key, g.me, g.size, &t,
+                                  crate::comm::RedOp::Sum,
+                                  crate::comm::RedPrec::F32);
+    sum.data[0] > 0.0
+}
+
 /// Fault-tolerant twin of [`run_training`]: runs under
 /// [`crate::dist::try_run_spmd_opts`], so an injected (or organic) rank
 /// crash, stall or straggler never deadlocks the harness — each rank comes

@@ -48,6 +48,7 @@ pub use tracer::Tracer;
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -63,6 +64,11 @@ use super::collector::{Collector, Mode, Trace};
 use super::diagnose::{diagnose, note_hangs, RunMeta};
 use super::faults::FaultPlan;
 use super::hooks::{Hooks, Kind};
+use super::live::checker::LiveChecker;
+use super::live::serve::MonitorClient;
+use super::live::sink::{self as live_sink, LiveParts, SinkHandle, StoreLayout,
+                        StoreTarget, WorkerCfg};
+use super::live::{LiveCfg, LiveSummary, OverflowPolicy};
 use super::obs::{EvKind, ObsCounters, ObsEvent, Telemetry};
 use super::store::{write_trace, StoreReader, StoreWriter};
 
@@ -150,18 +156,32 @@ impl TraceMode {
 pub enum Sink {
     /// keep the assembled [`Trace`] in memory (`Report::trace`)
     Memory,
-    /// stream into a binary `.ttrc` store at this path — entries are
-    /// released as their payload hits the file, so persisting never builds
-    /// a second in-memory trace
+    /// stream into a binary `.ttrc` store at this path through the async
+    /// sink worker: rank threads enqueue sealed entries and join without
+    /// waiting on store I/O. The bytes written are identical to
+    /// [`Sink::StoreSync`]'s.
     Store(PathBuf),
+    /// a `.ttrc` store at this path written synchronously at
+    /// [`Session::finish`] — the finishing thread performs all store I/O
+    /// itself (the escape hatch when a worker thread is unwanted)
+    StoreSync(PathBuf),
     /// both: the in-memory trace *and* a `.ttrc` store at this path
     Tee(PathBuf),
+    /// stream-only: entries feed the live checker and are then discarded —
+    /// pure online monitoring with neither trace nor store (meaningful
+    /// only with [`SessionBuilder::live`])
+    Async,
 }
 
 impl Sink {
-    /// A `.ttrc` store sink at `path`.
+    /// A `.ttrc` store sink at `path` (async writer).
     pub fn store(path: impl Into<PathBuf>) -> Sink {
         Sink::Store(path.into())
+    }
+
+    /// A `.ttrc` store sink at `path`, written synchronously at finish.
+    pub fn store_sync(path: impl Into<PathBuf>) -> Sink {
+        Sink::StoreSync(path.into())
     }
 
     /// An in-memory trace plus a `.ttrc` store at `path`.
@@ -203,6 +223,15 @@ impl Reference {
     }
 }
 
+/// The resolved live layer of a building session: the reference trace the
+/// streaming checker compares against, its §5.2 estimates, and the user's
+/// [`LiveCfg`].
+struct LiveSetup {
+    reference: Trace,
+    estimate: HashMap<String, f64>,
+    cfg: LiveCfg,
+}
+
 /// Builder for a [`Session`]. All knobs default to a single-device,
 /// in-memory, plain-record session with the default tolerance.
 pub struct SessionBuilder {
@@ -217,6 +246,7 @@ pub struct SessionBuilder {
     faults: Option<Arc<FaultPlan>>,
     checkpoint_every: usize,
     telemetry: Option<Telemetry>,
+    live: Option<LiveSetup>,
 }
 
 impl SessionBuilder {
@@ -233,6 +263,7 @@ impl SessionBuilder {
             faults: None,
             checkpoint_every: 0,
             telemetry: None,
+            live: None,
         }
     }
 
@@ -355,6 +386,38 @@ impl SessionBuilder {
         self
     }
 
+    /// Arm the live layer: a streaming checker on the async sink worker
+    /// compares entries against `reference` *during* the run and emits a
+    /// per-step [`StepVerdict`](super::live::StepVerdict) as each
+    /// training-iteration window closes. `cfg` carries the verdict
+    /// callback, the monitor-daemon address, and the queue bound.
+    ///
+    /// A store reference's embedded estimates (and their eps) set the live
+    /// thresholds, exactly as they would at an offline finish. Fails on
+    /// [`Reference::None`] — live checking needs something to check
+    /// against.
+    pub fn live(mut self, reference: Reference, cfg: LiveCfg)
+                -> Result<SessionBuilder> {
+        let (trace, estimate) = match reference {
+            Reference::InMemory { trace, estimate } => (trace, estimate),
+            Reference::Store(path) => {
+                let reader = StoreReader::open(&path)?;
+                if let Some(eps) = reader.estimate_eps() {
+                    // same eps override the offline path applies at finish
+                    self.tolerance = self.tolerance.eps(eps);
+                }
+                let estimate = reader.estimate().clone();
+                (read_trace(&reader)?, estimate)
+            }
+            Reference::None => {
+                return Err(anyhow!("live checking needs a reference \
+                                    (an in-memory trace or a .ttrc store)"));
+            }
+        };
+        self.live = Some(LiveSetup { reference: trace, estimate, cfg });
+        Ok(self)
+    }
+
     pub fn build(self) -> Session {
         let mut collector = Collector::with_mode(self.mode.into_mode());
         if let Some(kinds) = &self.kinds {
@@ -365,6 +428,59 @@ impl SessionBuilder {
         }
         if let Some(tel) = &self.telemetry {
             collector = collector.with_telemetry(tel.clone());
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        // Any live layer — and every async-capable sink — runs through the
+        // stream worker; `Memory` and `StoreSync` without a live layer stay
+        // fully synchronous (the determinism tests pin the Memory path).
+        let streamed = self.live.is_some()
+            || matches!(self.sink, Sink::Store(_) | Sink::Tee(_) | Sink::Async);
+        let mut async_sink = None;
+        if streamed {
+            let (cap, policy) = match &self.live {
+                Some(ls) => (ls.cfg.capacity, ls.cfg.policy),
+                None => (live_sink::DEFAULT_CAPACITY, OverflowPolicy::Block),
+            };
+            let (tx, rx) = live_sink::channel(cap, policy);
+            let checker = self.live.map(|ls| {
+                let LiveSetup { reference, estimate, cfg: lcfg } = ls;
+                let mut ch = LiveChecker::new(reference, estimate,
+                                              self.tolerance.check_cfg()
+                                                  .clone(),
+                                              self.meta.topo.world())
+                    .with_stop_on_divergence(lcfg.stop_on_divergence)
+                    .with_stop_flag(stop.clone())
+                    .with_queue_counters(tx.counters());
+                if let Some(cb) = lcfg.callback {
+                    ch = ch.with_callback(cb);
+                }
+                if let Some(tel) = &self.telemetry {
+                    ch = ch.with_telemetry(tel.clone());
+                }
+                if let Some(addr) = &lcfg.monitor {
+                    ch = ch.with_monitor(MonitorClient::connect(addr.clone()),
+                                         &lcfg.run_id);
+                }
+                ch
+            });
+            let store = match &self.sink {
+                Sink::Store(p) | Sink::StoreSync(p) => {
+                    Some((p, StoreLayout::Segments))
+                }
+                Sink::Tee(p) => Some((p, StoreLayout::TraceOrder)),
+                Sink::Memory | Sink::Async => None,
+            }
+            .map(|(path, layout)| StoreTarget {
+                path: path.clone(),
+                layout,
+                checkpoint_every: self.checkpoint_every,
+                estimate: self.embed.clone(),
+                meta: self.meta.clone(),
+            });
+            let keep_trace = matches!(self.sink, Sink::Memory | Sink::Tee(_));
+            collector = collector.with_stream(tx.clone());
+            async_sink = Some(live_sink::spawn(
+                tx, rx, WorkerCfg { store, keep_trace, checker }));
         }
         Session {
             collector,
@@ -377,6 +493,8 @@ impl SessionBuilder {
             checkpoint_every: self.checkpoint_every,
             hangs: Vec::new(),
             telemetry: self.telemetry,
+            async_sink,
+            stop,
         }
     }
 }
@@ -404,11 +522,29 @@ pub struct Session {
     checkpoint_every: usize,
     hangs: Vec<HangReport>,
     telemetry: Option<Telemetry>,
+    async_sink: Option<SinkHandle>,
+    stop: Arc<AtomicBool>,
 }
 
 impl Session {
     pub fn builder() -> SessionBuilder {
         SessionBuilder::new()
+    }
+
+    /// The cooperative stop flag that [`Control::Stop`] (and
+    /// `LiveCfg::stop_on_divergence`) raises. Hand a clone to the
+    /// stop-aware runner (`model::run_training_until`) — or poll it from
+    /// your own loop — so every rank exits together when the live checker
+    /// halts the run.
+    ///
+    /// [`Control::Stop`]: super::live::Control::Stop
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Whether the live layer has raised the stop flag.
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
     }
 
     /// The telemetry handle this session records into, if armed — pass a
@@ -519,58 +655,86 @@ impl Session {
     pub fn finish(self) -> Result<Report> {
         let Session { collector, meta, tolerance, sink, reference, embed,
                       diagnose: want_diagnosis, checkpoint_every, hangs,
-                      telemetry } = self;
+                      telemetry, async_sink, stop: _ } = self;
 
         // 1. drain the collection into the sink; with telemetry armed the
         //    store write is itself a driver-lane span, and everything
         //    drained so far seals into the store's obs section
         let mut obs_head: Option<(Vec<ObsEvent>, ObsCounters)> = None;
-        let (trace, store) = match sink {
-            Sink::Memory => (Some(collector.into_trace()), None),
-            Sink::Store(path) => {
-                let mut w = StoreWriter::create(&path)?;
-                w.set_checkpoint_every(checkpoint_every);
-                if let Some((rel, eps)) = &embed {
-                    w.set_estimate(rel, *eps);
+        let mut live_summary: Option<LiveSummary> = None;
+        let mut live_parts: Option<LiveParts> = None;
+        let (trace, store) = if let Some(handle) = async_sink {
+            // Streamed sink: every entry already lives on the worker; our
+            // collector only holds the stream handle. Two-phase close —
+            // flush (windows finalized, payloads written) so the driver can
+            // record the store:write span and drain its thread-local obs
+            // events, then seal (obs + live sections, checksum, rename).
+            drop(collector);
+            let t0 = telemetry.as_ref().map(|t| t.now_us());
+            handle.flush();
+            let store_path = match &sink {
+                Sink::Store(p) | Sink::StoreSync(p) | Sink::Tee(p) => {
+                    Some(p.clone())
                 }
-                w.set_run_meta(&meta);
-                let t0 = telemetry.as_ref().map(|t| t.now_us());
-                collector.write_store(&mut w)?;
-                if let (Some(tel), Some(t0)) = (&telemetry, t0) {
+                Sink::Memory | Sink::Async => None,
+            };
+            let obs = match (&telemetry, t0, &store_path) {
+                (Some(tel), Some(t0), Some(path)) => {
                     tel.span(EvKind::Store, "store:write",
                              &path.display().to_string(), 0, t0);
                     let drained = tel.drain();
-                    w.set_obs(drained.0.clone(), drained.1.clone());
-                    obs_head = Some(drained);
+                    obs_head = Some(drained.clone());
+                    Some(drained)
                 }
-                let summary = w.finish()?;
-                (None, Some((path, summary)))
-            }
-            Sink::Tee(path) => {
-                let trace = collector.into_trace();
-                let mut w = StoreWriter::create(&path)?;
-                w.set_checkpoint_every(checkpoint_every);
-                if let Some((rel, eps)) = &embed {
-                    w.set_estimate(rel, *eps);
+                _ => None,
+            };
+            let out = handle.seal(obs)?;
+            live_summary = Some(out.summary);
+            live_parts = out.live;
+            (out.trace, out.store)
+        } else {
+            match sink {
+                Sink::Memory => (Some(collector.into_trace()), None),
+                Sink::StoreSync(path) => {
+                    let mut w = StoreWriter::create(&path)?;
+                    w.set_checkpoint_every(checkpoint_every);
+                    if let Some((rel, eps)) = &embed {
+                        w.set_estimate(rel, *eps);
+                    }
+                    w.set_run_meta(&meta);
+                    let t0 = telemetry.as_ref().map(|t| t.now_us());
+                    collector.write_store(&mut w)?;
+                    if let (Some(tel), Some(t0)) = (&telemetry, t0) {
+                        tel.span(EvKind::Store, "store:write",
+                                 &path.display().to_string(), 0, t0);
+                        let drained = tel.drain();
+                        w.set_obs(drained.0.clone(), drained.1.clone());
+                        obs_head = Some(drained);
+                    }
+                    let summary = w.finish()?;
+                    (None, Some((path, summary)))
                 }
-                w.set_run_meta(&meta);
-                let t0 = telemetry.as_ref().map(|t| t.now_us());
-                write_trace(&trace, &mut w)?;
-                if let (Some(tel), Some(t0)) = (&telemetry, t0) {
-                    tel.span(EvKind::Store, "store:write",
-                             &path.display().to_string(), 0, t0);
-                    let drained = tel.drain();
-                    w.set_obs(drained.0.clone(), drained.1.clone());
-                    obs_head = Some(drained);
+                Sink::Store(_) | Sink::Tee(_) | Sink::Async => {
+                    unreachable!("streamed sinks always build an async worker")
                 }
-                let summary = w.finish()?;
-                (Some(trace), Some((path, summary)))
             }
         };
 
         let mut cfg = tolerance.check_cfg().clone();
 
-        // 2. resolve the reference side and check
+        // 2. resolve the reference side and check. A live session's
+        //    reference (and accumulated outcome) comes back from the
+        //    worker and takes precedence — the offline re-check below then
+        //    runs against the exact trace the streaming checker saw.
+        let mut live_outcome = None;
+        let reference = match live_parts {
+            Some(parts) => {
+                let LiveParts { reference, estimate, outcome } = parts;
+                live_outcome = Some(outcome);
+                Reference::InMemory { trace: reference, estimate }
+            }
+            None => reference,
+        };
         let (reference_trace, estimate) = match reference {
             Reference::None => {
                 let estimate = embed.map(|(rel, _)| rel).unwrap_or_default();
@@ -585,6 +749,7 @@ impl Session {
                     store,
                     hangs,
                     obs: final_obs(telemetry, obs_head),
+                    live: live_summary,
                 });
             }
             Reference::InMemory { trace, estimate } => (trace, estimate),
@@ -602,9 +767,29 @@ impl Session {
         // the candidate side: the in-memory trace when the sink kept one,
         // otherwise re-read the store this session just wrote
         let candidate_trace = match (trace, &store) {
-            (Some(t), _) => t,
-            (None, Some((path, _))) => read_trace(&StoreReader::open(path)?)?,
-            (None, None) => unreachable!("every sink yields a trace or a store"),
+            (Some(t), _) => Some(t),
+            (None, Some((path, _))) => {
+                Some(read_trace(&StoreReader::open(path)?)?)
+            }
+            (None, None) => None,
+        };
+        let Some(candidate_trace) = candidate_trace else {
+            // stream-only sink (`Sink::Async`): nothing was persisted to
+            // re-check, so the streaming checker's accumulated outcome *is*
+            // the verdict (no payloads are left for a diagnosis)
+            return Ok(Report {
+                outcome: live_outcome,
+                diagnosis: None,
+                estimate,
+                cfg,
+                meta,
+                trace: None,
+                reference_trace: Some(reference_trace),
+                store: None,
+                hangs,
+                obs: final_obs(telemetry, obs_head),
+                live: live_summary,
+            });
         };
 
         let t0 = telemetry.as_ref().map(|t| t.now_us());
@@ -635,6 +820,7 @@ impl Session {
             store,
             hangs,
             obs: final_obs(telemetry, obs_head),
+            live: live_summary,
         })
     }
 }

@@ -17,6 +17,7 @@ use super::super::checker::{CheckCfg, CheckOutcome};
 use super::super::collector::Trace;
 use super::super::diagnose::{diagnose_stores, note_hangs, Diagnosis, Dim,
                              RunMeta};
+use super::super::live::LiveSummary;
 use super::super::obs::{ObsCounters, ObsEvent, Timeline};
 use super::super::report as report_fmt;
 use super::super::store::{check_stores, SalvageInfo, StoreReader,
@@ -57,6 +58,11 @@ pub struct Report {
     /// drained run telemetry, when the session was built with
     /// `SessionBuilder::telemetry` (`None` otherwise)
     pub obs: Option<(Vec<ObsEvent>, ObsCounters)>,
+    /// per-step live verdicts and queue counters, when the session ran a
+    /// live layer (`SessionBuilder::live`) or the sink streamed through
+    /// the async worker; offline reports surface the live section sealed
+    /// into the candidate store, if any
+    pub live: Option<LiveSummary>,
 }
 
 impl Report {
@@ -106,6 +112,19 @@ impl Report {
         self.obs
             .as_ref()
             .map(|(ev, c)| Timeline::new(ev.clone(), c.clone()))
+    }
+
+    /// The live layer's per-step verdict history, when the session
+    /// streamed (`SessionBuilder::live`).
+    pub fn live(&self) -> Option<&LiveSummary> {
+        self.live.as_ref()
+    }
+
+    /// First training iteration whose live window failed — the streaming
+    /// checker's answer to "when did this run go wrong", available without
+    /// waiting for the offline verdict.
+    pub fn first_diverging_step(&self) -> Option<u64> {
+        self.live.as_ref().and_then(|l| l.first_diverging)
     }
 
     /// Fraction of the differential check's ids that could actually be
@@ -179,6 +198,9 @@ impl Report {
         }
         if let Some(d) = &self.diagnosis {
             root.set("diagnosis", report_fmt::diagnosis_json(d));
+        }
+        if let Some(live) = &self.live {
+            root.set("live", live_json(live));
         }
         root
     }
@@ -274,8 +296,47 @@ impl Report {
             store: None,
             hangs: Vec::new(),
             obs: None,
+            // a live session seals its verdict history into the store —
+            // the offline report surfaces the same numbers the daemon saw
+            live: candidate.live().cloned(),
         })
     }
+}
+
+/// The `"live"` object of [`Report::to_json`] — the per-step verdict
+/// history plus queue counters, machine-readable.
+pub(crate) fn live_json(live: &LiveSummary) -> Json {
+    let mut l = Json::obj();
+    l.set("steps", Json::Arr(
+        live.steps
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("iter", Json::from_usize(s.iter as usize));
+                o.set("pass", Json::Bool(s.pass));
+                o.set("checks", Json::from_usize(s.checks as usize));
+                o.set("failed", Json::from_usize(s.failed as usize));
+                o.set("missing", Json::from_usize(s.missing as usize));
+                o.set("merge_errors",
+                      Json::from_usize(s.merge_errors as usize));
+                o.set("worst_ratio", Json::from_f64(s.worst_ratio));
+                o.set("worst_id", Json::from_str_(&s.worst_id));
+                o
+            })
+            .collect()));
+    if let Some(it) = live.first_diverging {
+        l.set("first_diverging", Json::from_usize(it as usize));
+    }
+    if let Some(it) = live.stopped_at {
+        l.set("stopped_at", Json::from_usize(it as usize));
+    }
+    l.set("flagged", Json::from_usize(live.flagged as usize));
+    l.set("overflow", Json::from_usize(live.overflow as usize));
+    l.set("stalls", Json::from_usize(live.stalls as usize));
+    l.set("queue_high_water",
+          Json::from_usize(live.queue_high_water as usize));
+    l.set("late_entries", Json::from_usize(live.late_entries as usize));
+    l
 }
 
 #[cfg(test)]
@@ -294,6 +355,7 @@ mod tests {
             store: None,
             hangs: Vec::new(),
             obs: None,
+            live: None,
         }
     }
 

@@ -32,9 +32,15 @@ impl<'s> Tracer<'s> {
     }
 
     /// Enter training iteration `iter` (resets the microbatch cursor to 0).
+    ///
+    /// With a live session this also emits an explicit step beat on the
+    /// async stream, so the streaming checker can close the previous
+    /// iteration's verdict window without waiting for the next recorded
+    /// entry from this rank.
     pub fn step(&self, iter: u64) {
         self.iter.set(iter);
         self.micro.set(0);
+        self.collector.note_step(iter);
     }
 
     /// Enter *global* microbatch `micro` of the current iteration. Under

@@ -227,17 +227,20 @@ pub struct Collector {
     /// run telemetry, when armed: every recorded entry also lands as a
     /// fwd/bwd marker on the recording rank's timeline lane
     obs: Option<super::obs::Telemetry>,
+    /// async sink, when armed: entries route into the bounded stream (the
+    /// sink worker buffers/persists them) instead of thread-local buffers
+    stream: Option<super::live::sink::StreamTx>,
 }
 
 impl Collector {
     pub fn new() -> Collector {
         Collector { shared: Arc::default(), mode: Mode::Record, kinds: None,
-                    faults: None, obs: None }
+                    faults: None, obs: None, stream: None }
     }
 
     pub fn with_mode(mode: Mode) -> Collector {
         Collector { shared: Arc::default(), mode, kinds: None, faults: None,
-                    obs: None }
+                    obs: None, stream: None }
     }
 
     pub fn only_kinds(mut self, kinds: &[Kind]) -> Collector {
@@ -255,6 +258,26 @@ impl Collector {
     pub fn with_telemetry(mut self, tel: super::obs::Telemetry) -> Collector {
         self.obs = Some(tel);
         self
+    }
+
+    /// Route recorded entries into an async sink stream instead of the
+    /// thread-local buffers. Producers stay O(1) (a move into a bounded
+    /// queue); the sink worker owns ordering, persistence, and the live
+    /// checker. With a stream armed, `into_trace`/`write_store` see no
+    /// entries — the worker hands the run back at seal.
+    pub fn with_stream(mut self, tx: super::live::sink::StreamTx) -> Collector {
+        self.stream = Some(tx);
+        self
+    }
+
+    /// Announce that the calling rank entered training iteration `iter`
+    /// (a `Tracer::step` beat) — tightens the live checker's window-close
+    /// watermark. A no-op without a stream.
+    pub(crate) fn note_step(&self, iter: u64) {
+        if let Some(tx) = &self.stream {
+            let rank = crate::dist::current_rank().unwrap_or(0);
+            tx.send_step_end(rank as u32, iter);
+        }
     }
 
     /// The fault-injection gate on the record path: returns false to
@@ -296,6 +319,12 @@ impl Collector {
             tel.note_trace_entry(kind, &key, (data.data.len() * 4) as u64);
         }
         let entry = Entry { spec: spec.clone(), data, rank: rank as u32 };
+        if let Some(tx) = &self.stream {
+            // async sink: move the sealed entry into the bounded stream —
+            // no store I/O and no thread-local buffering on the rank thread
+            tx.send_entry(key, entry);
+            return;
+        }
         LOCAL.with(|l| {
             let mut bufs = l.borrow_mut();
             if let Some(buf) = bufs

@@ -1,0 +1,520 @@
+//! The streaming per-step checker.
+//!
+//! A [`LiveChecker`] consumes the async entry stream *during* training,
+//! holding only the open step windows' candidate entries in memory, and
+//! emits a [`StepVerdict`] the moment a window closes — the same per-id
+//! merge+compare (`check_one_id`) as the offline checker, so the live
+//! verdicts agree bit-for-bit with a postmortem `check_stores` of the same
+//! run (a contract `rust/tests/live.rs` pins).
+//!
+//! ## Window closing
+//!
+//! The reference's canonical ids are grouped by training iteration. The
+//! checker tracks a per-rank *watermark* — the lowest iteration a rank may
+//! still record, inferred from the ids it streams (per-rank channel order
+//! is program order) and tightened by explicit `Tracer::step` beats.
+//! Window `N` closes once every rank of the run's topology has a watermark
+//! past `N`; entries that arrive for an already-closed window are counted
+//! as late (`LiveSummary::late_entries`), never checked and never
+//! panicked over. `close_all` (at stream flush) finalizes every remaining
+//! window, so a run whose ranks crash mid-flight still gets its verdicts.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::super::checker::{check_one_id, comp_order, CheckCfg, CheckOutcome,
+                            KeyVerdict};
+use super::super::collector::{Entry, Trace};
+use super::super::hooks::CanonId;
+use super::super::obs::Telemetry;
+use super::serve::MonitorClient;
+use super::sink::{LiveParts, StreamCounters};
+use super::{Control, LiveSummary, StepVerdict, VerdictCallback};
+use crate::util::json::Json;
+
+/// Streaming differential checker over the async entry stream.
+pub struct LiveChecker {
+    reference: Trace,
+    estimate: HashMap<String, f64>,
+    cfg: CheckCfg,
+    floor: f64,
+    /// ranks expected to stream (the candidate topology's world size)
+    world: usize,
+    /// reference ids per iteration, in computation order
+    by_iter: BTreeMap<u64, Vec<(CanonId, String)>>,
+    /// open-window candidate entries (dropped as their window closes —
+    /// the bounded-memory contract of the streaming mode)
+    cand: HashMap<String, Vec<Entry>>,
+    /// per-rank watermark: lowest iteration the rank may still record
+    watermark: BTreeMap<u32, u64>,
+    /// first window not yet closed
+    next_window: u64,
+    verdicts: Vec<StepVerdict>,
+    outcome: CheckOutcome,
+    first_diverging: Option<u64>,
+    stopped_at: Option<u64>,
+    flagged: u64,
+    late: u64,
+    check_ids: u64,
+    check_s: f64,
+    callback: Option<VerdictCallback>,
+    stop_on_divergence: bool,
+    stop: Option<Arc<AtomicBool>>,
+    monitor: Option<MonitorClient>,
+    run_id: String,
+    telemetry: Option<Telemetry>,
+    queue: Option<Arc<StreamCounters>>,
+}
+
+impl LiveChecker {
+    /// A checker over `reference` (with its §5.2 threshold estimates) for a
+    /// candidate run of `world` ranks.
+    pub fn new(reference: Trace, estimate: HashMap<String, f64>, cfg: CheckCfg,
+               world: usize) -> LiveChecker {
+        let mut keys: Vec<(CanonId, String)> = reference
+            .entries
+            .keys()
+            .filter_map(|k| CanonId::parse(k).map(|id| (id, k.clone())))
+            .collect();
+        keys.sort_by_key(|(id, _)| comp_order(id));
+        let mut by_iter: BTreeMap<u64, Vec<(CanonId, String)>> = BTreeMap::new();
+        for (id, key) in keys {
+            by_iter.entry(id.iter).or_default().push((id, key));
+        }
+        let floor = cfg.floor * cfg.eps;
+        LiveChecker {
+            reference,
+            estimate,
+            cfg,
+            floor,
+            world: world.max(1),
+            by_iter,
+            cand: HashMap::new(),
+            watermark: BTreeMap::new(),
+            next_window: 0,
+            verdicts: Vec::new(),
+            outcome: CheckOutcome::default(),
+            first_diverging: None,
+            stopped_at: None,
+            flagged: 0,
+            late: 0,
+            check_ids: 0,
+            check_s: 0.0,
+            callback: None,
+            stop_on_divergence: false,
+            stop: None,
+            monitor: None,
+            run_id: "run".to_string(),
+            telemetry: None,
+            queue: None,
+        }
+    }
+
+    pub fn with_callback(mut self, cb: VerdictCallback) -> LiveChecker {
+        self.callback = Some(cb);
+        self
+    }
+
+    /// Raise the stop flag at the first failing window.
+    pub fn with_stop_on_divergence(mut self, on: bool) -> LiveChecker {
+        self.stop_on_divergence = on;
+        self
+    }
+
+    /// The flag [`Control::Stop`] raises — hand the same `Arc` to the
+    /// stop-aware runner.
+    pub fn with_stop_flag(mut self, stop: Arc<AtomicBool>) -> LiveChecker {
+        self.stop = Some(stop);
+        self
+    }
+
+    /// Stream per-window status to a monitor daemon under `run_id`.
+    pub fn with_monitor(mut self, client: MonitorClient, run_id: &str)
+                        -> LiveChecker {
+        let mut client = client;
+        let mut hello = Json::obj();
+        hello.set("event", Json::from_str_("hello"));
+        hello.set("run", Json::from_str_(run_id));
+        hello.set("world", Json::from_usize(self.world));
+        client.send(&hello);
+        self.monitor = Some(client);
+        self.run_id = run_id.to_string();
+        self
+    }
+
+    /// Count per-window check work into the session's [`Telemetry`]
+    /// (`ObsCounters::check_ids` / `check_s` — the checker-throughput
+    /// metric). Only the lock-free counters are touched from the worker
+    /// thread; never spans (their events are drained on the driver).
+    pub fn with_telemetry(mut self, tel: Telemetry) -> LiveChecker {
+        self.telemetry = Some(tel);
+        self
+    }
+
+    /// Read queue depth/overflow for monitor beats from these counters.
+    pub fn with_queue_counters(mut self, c: Arc<StreamCounters>) -> LiveChecker {
+        self.queue = Some(c);
+        self
+    }
+
+    /// One streamed entry. O(1) amortized; closes windows when watermarks
+    /// allow.
+    pub fn on_entry(&mut self, key: &str, entry: &Entry) {
+        let Some(id) = CanonId::parse(key) else { return };
+        if id.iter < self.next_window {
+            self.late += 1;
+            return;
+        }
+        self.cand.entry(key.to_string()).or_default().push(entry.clone());
+        self.advance(entry.rank, id.iter);
+    }
+
+    /// A rank entered iteration `iter` (explicit `Tracer::step` beat —
+    /// tightens the watermark beyond what entry ids alone imply).
+    pub fn on_step_end(&mut self, rank: u32, iter: u64) {
+        self.advance(rank, iter);
+    }
+
+    fn advance(&mut self, rank: u32, iter: u64) {
+        let w = self.watermark.entry(rank).or_insert(0);
+        *w = (*w).max(iter);
+        self.try_close();
+    }
+
+    fn try_close(&mut self) {
+        let max_iter = match self.by_iter.keys().next_back() {
+            Some(&m) => m,
+            None => return, // empty reference: nothing to verdict
+        };
+        while self.next_window <= max_iter
+            && self.watermark.len() >= self.world
+            && self.watermark.values().all(|&w| w > self.next_window)
+        {
+            self.close_window(self.next_window);
+        }
+    }
+
+    /// Merge + compare every reference id of window `it`, emit the verdict,
+    /// fire the callback, and free the window's candidate entries.
+    fn close_window(&mut self, it: u64) {
+        debug_assert_eq!(it, self.next_window);
+        self.next_window = it + 1;
+        let group = self.by_iter.remove(&it).unwrap_or_default();
+        let t0 = std::time::Instant::now();
+        let (mut checks, mut failed, mut missing, mut merge_errors) = (0, 0, 0, 0);
+        let mut worst_ratio = 0.0f64;
+        let mut worst_id = String::new();
+        for (id, key) in &group {
+            let cand = self.cand.remove(key);
+            let verdict = check_one_id(
+                self.reference.get(key).expect("key came from the reference"),
+                cand.as_deref(), &self.estimate, &self.cfg, self.floor, id, key);
+            match verdict {
+                KeyVerdict::MissingInCandidate => {
+                    missing += 1;
+                    self.outcome.missing_in_candidate.push(key.clone());
+                }
+                KeyVerdict::MergeError(e) => {
+                    merge_errors += 1;
+                    self.outcome.merge_errors.push((key.clone(), e));
+                }
+                KeyVerdict::Check(c) => {
+                    checks += 1;
+                    if !c.pass {
+                        failed += 1;
+                    }
+                    let ratio = if c.threshold > 0.0 {
+                        c.rel_err / c.threshold
+                    } else if c.rel_err > 0.0 {
+                        f64::INFINITY
+                    } else {
+                        0.0
+                    };
+                    if ratio >= worst_ratio {
+                        worst_ratio = ratio;
+                        worst_id = c.key.clone();
+                    }
+                    self.outcome.checks.push(c);
+                }
+            }
+        }
+        // candidate-only ids of this window (unknown to the reference)
+        let stray: Vec<String> = self.cand.keys()
+            .filter(|k| CanonId::parse(k).map(|id| id.iter == it)
+                                         .unwrap_or(false))
+            .cloned()
+            .collect();
+        for key in stray {
+            self.cand.remove(&key);
+            self.outcome.missing_in_reference.push(key);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        self.check_ids += checks;
+        self.check_s += dt;
+        if let Some(tel) = &self.telemetry {
+            tel.note_check(checks, dt);
+        }
+        let verdict = StepVerdict {
+            iter: it,
+            checks,
+            failed,
+            missing,
+            merge_errors,
+            worst_ratio,
+            worst_id,
+            pass: failed == 0 && missing == 0 && merge_errors == 0,
+        };
+        if !verdict.pass && self.first_diverging.is_none() {
+            self.first_diverging = Some(it);
+        }
+        let mut control = match &mut self.callback {
+            Some(cb) => cb(&verdict),
+            None => Control::Continue,
+        };
+        if self.stop_on_divergence && !verdict.pass {
+            control = Control::Stop;
+        }
+        match control {
+            Control::Continue => {}
+            Control::Flag => self.flagged += 1,
+            Control::Stop => {
+                if self.stopped_at.is_none() {
+                    self.stopped_at = Some(it);
+                }
+                if let Some(stop) = &self.stop {
+                    stop.store(true, Ordering::SeqCst);
+                }
+            }
+        }
+        self.push_step(&verdict);
+        self.verdicts.push(verdict);
+    }
+
+    /// Finalize every remaining window (stream flush / end of run) and
+    /// compute the accumulated outcome's overall pass bit — same criteria
+    /// as the offline `check_traces`.
+    pub fn close_all(&mut self) {
+        let remaining: Vec<u64> = self.by_iter.keys().cloned().collect();
+        for it in remaining {
+            // windows the watermarks never released (stopped or crashed
+            // runs) close here, in ascending order
+            while self.next_window <= it {
+                self.close_window(self.next_window);
+            }
+        }
+        // candidate-only ids past the last reference window
+        let mut stray: Vec<String> = self.cand.drain().map(|(k, _)| k).collect();
+        stray.sort();
+        self.outcome.missing_in_reference.extend(stray);
+        self.outcome.pass = self.outcome.checks.iter().all(|c| c.pass)
+            && self.outcome.merge_errors.is_empty()
+            && self.outcome.missing_in_candidate.is_empty();
+        self.push_finish();
+    }
+
+    /// The live summary so far (queue counters are filled in by the sink
+    /// worker, which owns them).
+    pub fn summary(&self) -> LiveSummary {
+        LiveSummary {
+            steps: self.verdicts.clone(),
+            first_diverging: self.first_diverging,
+            stopped_at: self.stopped_at,
+            flagged: self.flagged,
+            overflow: 0,
+            stalls: 0,
+            queue_high_water: 0,
+            late_entries: self.late,
+        }
+    }
+
+    /// Hand back the reference, its estimates, and the accumulated outcome
+    /// (consumes the checker; call after [`LiveChecker::close_all`]).
+    pub fn into_parts(self) -> LiveParts {
+        LiveParts {
+            reference: self.reference,
+            estimate: self.estimate,
+            outcome: self.outcome,
+        }
+    }
+
+    // ---- monitor beats -------------------------------------------------
+
+    fn push_step(&mut self, v: &StepVerdict) {
+        let Some(client) = &mut self.monitor else { return };
+        let mut o = Json::obj();
+        o.set("event", Json::from_str_("step"));
+        o.set("run", Json::from_str_(&self.run_id));
+        o.set("iter", Json::from_usize(v.iter as usize));
+        o.set("pass", Json::Bool(v.pass));
+        o.set("checks", Json::from_usize(v.checks as usize));
+        o.set("failed", Json::from_usize(v.failed as usize));
+        o.set("missing", Json::from_usize((v.missing + v.merge_errors) as usize));
+        o.set("worst", Json::from_f64(v.worst_ratio));
+        o.set("worst_id", Json::from_str_(&v.worst_id));
+        // training progress vs check progress: how many steps behind the
+        // fastest rank this verdict landed
+        let progress = self.watermark.values().max().copied().unwrap_or(0);
+        o.set("lag", Json::from_usize(progress.saturating_sub(v.iter) as usize));
+        if let Some(q) = &self.queue {
+            let s = q.snapshot();
+            o.set("queue_depth", Json::from_usize(s.depth));
+            o.set("overflow", Json::from_usize(s.overflow as usize));
+            o.set("stalls", Json::from_usize(s.stalls as usize));
+        }
+        o.set("check_ids", Json::from_usize(self.check_ids as usize));
+        o.set("check_s", Json::from_f64(self.check_s));
+        client.send(&o);
+    }
+
+    fn push_finish(&mut self) {
+        let Some(client) = &mut self.monitor else { return };
+        let mut o = Json::obj();
+        o.set("event", Json::from_str_("finish"));
+        o.set("run", Json::from_str_(&self.run_id));
+        o.set("pass", Json::Bool(self.outcome.pass));
+        o.set("coverage", Json::from_f64(self.outcome.coverage()));
+        if let Some(it) = self.first_diverging {
+            o.set("first_diverging", Json::from_usize(it as usize));
+        }
+        if let Some(it) = self.stopped_at {
+            o.set("stopped_at", Json::from_usize(it as usize));
+        }
+        if let Some(q) = &self.queue {
+            let s = q.snapshot();
+            o.set("overflow", Json::from_usize(s.overflow as usize));
+            o.set("stalls", Json::from_usize(s.stalls as usize));
+        }
+        client.send(&o);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, Tensor};
+    use crate::ttrace::shard::ShardSpec;
+
+    fn entry(rank: u32, vals: &[f32]) -> Entry {
+        Entry {
+            spec: ShardSpec::full(&[vals.len()]),
+            data: Tensor::new(&[vals.len()], vals.to_vec(), DType::F32),
+            rank,
+        }
+    }
+
+    fn reference(iters: u64) -> Trace {
+        let mut t = Trace::default();
+        for it in 0..iters {
+            t.entries.insert(format!("i{it}/m0/act/layers.0.mlp"),
+                             vec![entry(0, &[1.0, 2.0])]);
+            t.entries.insert(format!("i{it}/m0/main_grad/w"),
+                             vec![entry(0, &[0.5, 0.5])]);
+        }
+        t
+    }
+
+    #[test]
+    fn windows_close_as_watermarks_advance() {
+        let mut ch = LiveChecker::new(reference(3), HashMap::new(),
+                                      CheckCfg::default(), 1);
+        for it in 0..3u64 {
+            ch.on_entry(&format!("i{it}/m0/act/layers.0.mlp"),
+                        &entry(0, &[1.0, 2.0]));
+            ch.on_entry(&format!("i{it}/m0/main_grad/w"),
+                        &entry(0, &[0.5, 0.5]));
+            // entering the next iteration closes the previous window
+            ch.on_step_end(0, it + 1);
+            assert_eq!(ch.verdicts.len() as u64, it + 1,
+                       "window {it} did not close");
+            assert!(ch.verdicts.last().unwrap().pass);
+        }
+        ch.close_all();
+        assert_eq!(ch.verdicts.len(), 3);
+        assert!(ch.outcome.pass);
+        assert!(ch.cand.is_empty(), "closed windows must free their entries");
+    }
+
+    #[test]
+    fn diverging_window_fails_and_stop_raises_the_flag() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut ch = LiveChecker::new(reference(3), HashMap::new(),
+                                      CheckCfg::default(), 1)
+            .with_stop_on_divergence(true)
+            .with_stop_flag(stop.clone());
+        // iter 0 clean, iter 1 diverges on the act
+        ch.on_entry("i0/m0/act/layers.0.mlp", &entry(0, &[1.0, 2.0]));
+        ch.on_entry("i0/m0/main_grad/w", &entry(0, &[0.5, 0.5]));
+        ch.on_step_end(0, 1);
+        assert!(!stop.load(Ordering::SeqCst));
+        ch.on_entry("i1/m0/act/layers.0.mlp", &entry(0, &[1.0, 4.0]));
+        ch.on_entry("i1/m0/main_grad/w", &entry(0, &[0.5, 0.5]));
+        ch.on_step_end(0, 2);
+        assert!(stop.load(Ordering::SeqCst), "stop flag must be raised");
+        ch.close_all();
+        let s = ch.summary();
+        assert_eq!(s.first_diverging, Some(1));
+        assert_eq!(s.stopped_at, Some(1));
+        assert!(!ch.outcome.pass);
+        // iter 2 was never recorded -> missing in candidate
+        assert_eq!(ch.outcome.missing_in_candidate.len(), 2);
+    }
+
+    #[test]
+    fn late_entries_are_counted_not_checked() {
+        let mut ch = LiveChecker::new(reference(2), HashMap::new(),
+                                      CheckCfg::default(), 1);
+        ch.on_entry("i0/m0/act/layers.0.mlp", &entry(0, &[1.0, 2.0]));
+        ch.on_entry("i0/m0/main_grad/w", &entry(0, &[0.5, 0.5]));
+        ch.on_step_end(0, 1);
+        assert_eq!(ch.verdicts.len(), 1);
+        // a straggler for the closed window
+        ch.on_entry("i0/m0/act/layers.0.mlp", &entry(0, &[9.0, 9.0]));
+        assert_eq!(ch.summary().late_entries, 1);
+        assert!(ch.verdicts[0].pass, "late evidence never rewrites a verdict");
+    }
+
+    #[test]
+    fn callback_flag_counts_and_continue_does_not_stop() {
+        let mut ch = LiveChecker::new(reference(2), HashMap::new(),
+                                      CheckCfg::default(), 1)
+            .with_callback(Box::new(|v| {
+                if v.pass { Control::Flag } else { Control::Continue }
+            }));
+        for it in 0..2u64 {
+            ch.on_entry(&format!("i{it}/m0/act/layers.0.mlp"),
+                        &entry(0, &[1.0, 2.0]));
+            ch.on_entry(&format!("i{it}/m0/main_grad/w"),
+                        &entry(0, &[0.5, 0.5]));
+        }
+        ch.on_step_end(0, 2);
+        ch.close_all();
+        let s = ch.summary();
+        assert_eq!(s.flagged, 2);
+        assert_eq!(s.stopped_at, None);
+    }
+
+    #[test]
+    fn multi_rank_windows_wait_for_every_rank() {
+        let mut r = Trace::default();
+        r.entries.insert("i0/m0/act/layers.0.mlp".to_string(),
+                         vec![entry(0, &[1.0, 2.0, 3.0, 4.0])]);
+        let mut ch = LiveChecker::new(r, HashMap::new(), CheckCfg::default(), 2);
+        let spec0 = ShardSpec::split(&[4], 0, 0, 2);
+        let spec1 = ShardSpec::split(&[4], 0, 1, 2);
+        ch.on_entry("i0/m0/act/layers.0.mlp", &Entry {
+            spec: spec0, data: Tensor::new(&[2], vec![1.0, 2.0], DType::F32),
+            rank: 0,
+        });
+        ch.on_step_end(0, 1);
+        // rank 1 has not reported: the window must stay open
+        assert!(ch.verdicts.is_empty(), "window closed with half the shards");
+        ch.on_entry("i0/m0/act/layers.0.mlp", &Entry {
+            spec: spec1, data: Tensor::new(&[2], vec![3.0, 4.0], DType::F32),
+            rank: 1,
+        });
+        ch.on_step_end(1, 1);
+        assert_eq!(ch.verdicts.len(), 1);
+        assert!(ch.verdicts[0].pass, "{:?}", ch.verdicts[0]);
+    }
+}

@@ -1,0 +1,187 @@
+//! `ttrace::live` — online checking: async sinks, a streaming per-step
+//! checker, and a live monitoring daemon.
+//!
+//! TTrace's offline workflow delivers its verdict at [`finish`] — after the
+//! run already burned its budget. This module turns the differential check
+//! into an *online* observability surface, in three layers:
+//!
+//!  1. **Async sink** ([`sink`]) — a bounded-channel writer thread. Rank
+//!     threads enqueue sealed entries and never block on store I/O; the
+//!     queue has a counted, explicit [`OverflowPolicy`] instead of silent
+//!     drops, and the worker tees into the existing
+//!     [`StoreWriter`](crate::ttrace::store::StoreWriter) in ascending rank
+//!     order, so `.ttrc` output stays byte-stable with the synchronous
+//!     path.
+//!  2. **Streaming checker** ([`checker`]) — a [`LiveChecker`] consumes
+//!     the stream plus an attached reference and emits a windowed
+//!     [`StepVerdict`] as soon as each training-iteration window closes
+//!     (same per-id merge+compare as the offline checker, bounded memory
+//!     per open window). A [`VerdictCallback`] returning [`Control`] lets
+//!     the trainer halt at the first diverging step.
+//!  3. **Monitor daemon** ([`serve`]) — a std-only TCP server (`ttrace
+//!     serve`) multiplexing concurrent runs keyed by run id, exposing
+//!     `/status` (JSON) and `/metrics` (Prometheus text exposition).
+//!
+//! Wire-up is one builder call:
+//!
+//! ```ignore
+//! let session = Session::builder()
+//!     .sink(Sink::store("cand.ttrc"))
+//!     .live(Reference::store("ref.ttrc"),
+//!           LiveCfg::new().stop_on_divergence())?
+//!     .build();
+//! // ... train, passing session.stop_flag() to the stop-aware runner ...
+//! let report = session.finish()?;           // report.live has the verdicts
+//! ```
+//!
+//! [`finish`]: crate::ttrace::api::Session::finish
+
+pub mod checker;
+pub mod serve;
+pub mod sink;
+
+pub use checker::LiveChecker;
+pub use serve::{Monitor, MonitorClient, MonitorHandle};
+pub use sink::OverflowPolicy;
+
+/// What a [`VerdictCallback`] tells the run to do after a step's verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Control {
+    /// keep training
+    Continue,
+    /// keep training, but count the step as flagged (soft alarm)
+    Flag,
+    /// raise the session's stop flag — the stop-aware runner
+    /// ([`run_training_until`](crate::model::run_training_until)) agrees on
+    /// the flag collectively and every rank exits before the next iteration
+    Stop,
+}
+
+/// Per-step verdict fired by the [`LiveChecker`] as soon as a training
+/// iteration's window closes — the live twin of one iteration's slice of
+/// the offline [`CheckOutcome`](crate::ttrace::checker::CheckOutcome).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepVerdict {
+    /// training iteration this window covers
+    pub iter: u64,
+    /// ids compared (reference ids of this iteration)
+    pub checks: u64,
+    /// comparisons past their threshold
+    pub failed: u64,
+    /// reference ids the candidate never recorded this iteration
+    pub missing: u64,
+    /// structural merge failures (shard omission, shape mismatch)
+    pub merge_errors: u64,
+    /// worst `rel_err / threshold` over the window (0 when nothing compared)
+    pub worst_ratio: f64,
+    /// canonical id of the worst comparison (empty when nothing compared)
+    pub worst_id: String,
+    pub pass: bool,
+}
+
+/// The callback fired after every closed step window.
+pub type VerdictCallback = Box<dyn FnMut(&StepVerdict) -> Control + Send>;
+
+/// Summary of a session's live layer, attached to the final
+/// [`Report`](crate::ttrace::api::Report) (and sealed into the `.ttrc`
+/// store's live section) so offline tooling reports the same numbers the
+/// daemon saw.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LiveSummary {
+    /// one verdict per closed step window, ascending iteration
+    pub steps: Vec<StepVerdict>,
+    /// first iteration whose window failed, if any
+    pub first_diverging: Option<u64>,
+    /// iteration at which a [`Control::Stop`] raised the stop flag
+    pub stopped_at: Option<u64>,
+    /// steps a callback marked [`Control::Flag`]
+    pub flagged: u64,
+    /// entries dropped at the bounded queue (`OverflowPolicy::DropNewest`)
+    pub overflow: u64,
+    /// enqueues that had to wait on a full queue (`OverflowPolicy::Block`)
+    pub stalls: u64,
+    /// deepest the queue ever got
+    pub queue_high_water: u64,
+    /// entries that arrived after their step window had already closed
+    /// (counted, never checked — late evidence is reported, not lost)
+    pub late_entries: u64,
+}
+
+impl LiveSummary {
+    /// True when every closed window passed and nothing overflowed.
+    pub fn clean(&self) -> bool {
+        self.steps.iter().all(|s| s.pass) && self.overflow == 0
+            && self.first_diverging.is_none()
+    }
+}
+
+/// Configuration of a session's live layer — pass to
+/// [`SessionBuilder::live`](crate::ttrace::api::SessionBuilder::live).
+pub struct LiveCfg {
+    pub(crate) callback: Option<VerdictCallback>,
+    pub(crate) monitor: Option<String>,
+    pub(crate) run_id: String,
+    pub(crate) stop_on_divergence: bool,
+    pub(crate) capacity: usize,
+    pub(crate) policy: OverflowPolicy,
+}
+
+impl Default for LiveCfg {
+    fn default() -> Self {
+        LiveCfg {
+            callback: None,
+            monitor: None,
+            run_id: "run".to_string(),
+            stop_on_divergence: false,
+            capacity: sink::DEFAULT_CAPACITY,
+            policy: OverflowPolicy::Block,
+        }
+    }
+}
+
+impl LiveCfg {
+    pub fn new() -> LiveCfg {
+        LiveCfg::default()
+    }
+
+    /// Fire `f` after every closed step window; its [`Control`] return
+    /// steers the run.
+    pub fn on_verdict(mut self,
+                      f: impl FnMut(&StepVerdict) -> Control + Send + 'static)
+                      -> LiveCfg {
+        self.callback = Some(Box::new(f));
+        self
+    }
+
+    /// Raise the stop flag at the first failing step (shorthand for a
+    /// callback returning [`Control::Stop`] on failure). Composes with
+    /// [`LiveCfg::on_verdict`]: the explicit callback runs first and its
+    /// `Stop`/`Flag` still count.
+    pub fn stop_on_divergence(mut self) -> LiveCfg {
+        self.stop_on_divergence = true;
+        self
+    }
+
+    /// Stream per-step status to a `ttrace serve` daemon at `addr`
+    /// (best-effort: an unreachable daemon never fails the run).
+    pub fn monitor(mut self, addr: impl Into<String>) -> LiveCfg {
+        self.monitor = Some(addr.into());
+        self
+    }
+
+    /// The run id this session reports under on `/status` and `/metrics`.
+    pub fn run_id(mut self, id: impl Into<String>) -> LiveCfg {
+        self.run_id = id.into();
+        self
+    }
+
+    /// Bound and overflow policy of the entry queue between rank threads
+    /// and the sink worker (default: 4096 entries, [`OverflowPolicy::Block`]
+    /// — no data loss; store-backed sinks require `Block` to stay
+    /// byte-stable).
+    pub fn queue(mut self, capacity: usize, policy: OverflowPolicy) -> LiveCfg {
+        self.capacity = capacity.max(1);
+        self.policy = policy;
+        self
+    }
+}

@@ -1,0 +1,599 @@
+//! The live monitoring daemon (`ttrace serve`) and its client.
+//!
+//! A std-only TCP server multiplexing concurrent training runs keyed by
+//! run id. One port speaks two protocols, sniffed from the first bytes of
+//! each connection:
+//!
+//!  - **HTTP** (`GET …`): `/status` returns the full per-run state as
+//!    JSON; `/metrics` returns Prometheus text exposition (version 0.0.4)
+//!    with the per-run step, verdict counters, first-diverging-step gauge,
+//!    sink queue depth/overflow, check lag, per-group comm bytes, and
+//!    checker throughput — everything a scrape-based alerting stack needs
+//!    to page on a diverging run.
+//!  - **Event lines**: newline-delimited JSON objects pushed by
+//!    [`MonitorClient`] from inside a live session (`hello`, `step`,
+//!    `hang`, `counters`, `finish`), each carrying its `run` id.
+//!
+//! The daemon holds no per-run history beyond the compact [`RunState`];
+//! sessions are additive and independent, so one daemon serves a whole
+//! cluster of concurrent candidate runs.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Compact live state of one monitored run.
+#[derive(Clone, Debug, Default)]
+pub struct RunState {
+    /// ranks in the run's topology (from `hello`)
+    pub world: u64,
+    /// latest iteration with a closed verdict window
+    pub step: u64,
+    /// verdict history: (iter, pass) per closed window
+    pub verdicts: Vec<(u64, bool)>,
+    pub checks: u64,
+    pub failed_steps: u64,
+    pub first_diverging: Option<u64>,
+    pub stopped_at: Option<u64>,
+    /// worst `rel_err / threshold` seen so far
+    pub worst_ratio: f64,
+    pub worst_id: String,
+    /// check lag in steps behind the fastest rank (latest beat)
+    pub lag_steps: u64,
+    pub queue_depth: u64,
+    pub overflow: u64,
+    pub stalls: u64,
+    pub check_ids: u64,
+    pub check_s: f64,
+    /// hang flags (collective timeouts reported by the run)
+    pub hangs: u64,
+    /// per-group communication bytes (from the run's `ObsCounters`)
+    pub comm_bytes: BTreeMap<String, u64>,
+    pub coverage: f64,
+    pub finished: bool,
+    /// overall verdict once finished
+    pub pass: Option<bool>,
+}
+
+impl RunState {
+    fn apply(&mut self, ev: &Json) {
+        let kind = ev.get("event").and_then(|e| e.as_str().ok()).unwrap_or("");
+        let num = |k: &str| ev.get(k).and_then(|v| v.as_usize().ok())
+            .unwrap_or(0) as u64;
+        match kind {
+            "hello" => self.world = num("world"),
+            "step" => {
+                let iter = num("iter");
+                let pass = ev.get("pass").and_then(|v| v.as_bool().ok())
+                    .unwrap_or(true);
+                self.step = self.step.max(iter);
+                self.verdicts.push((iter, pass));
+                self.checks += num("checks");
+                if !pass {
+                    self.failed_steps += 1;
+                    if self.first_diverging.is_none() {
+                        self.first_diverging = Some(iter);
+                    }
+                }
+                let worst = ev.get("worst").and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0);
+                if worst >= self.worst_ratio {
+                    self.worst_ratio = worst;
+                    self.worst_id = ev.get("worst_id")
+                        .and_then(|v| v.as_str().ok()).unwrap_or("").to_string();
+                }
+                self.lag_steps = num("lag");
+                self.queue_depth = num("queue_depth");
+                self.overflow = num("overflow");
+                self.stalls = num("stalls");
+                self.check_ids = num("check_ids");
+                self.check_s = ev.get("check_s").and_then(|v| v.as_f64().ok())
+                    .unwrap_or(self.check_s);
+            }
+            "hang" => self.hangs += 1,
+            "counters" => {
+                if let Some(comm) = ev.get("comm").and_then(|c| c.as_obj().ok()) {
+                    for (group, bytes) in comm {
+                        let b = bytes.as_usize().unwrap_or(0) as u64;
+                        self.comm_bytes.insert(group.clone(), b);
+                    }
+                }
+            }
+            "finish" => {
+                self.finished = true;
+                self.pass = ev.get("pass").and_then(|v| v.as_bool().ok());
+                self.coverage = ev.get("coverage").and_then(|v| v.as_f64().ok())
+                    .unwrap_or(1.0);
+                if let Some(it) = ev.get("first_diverging") {
+                    self.first_diverging = it.as_usize().ok().map(|v| v as u64)
+                        .or(self.first_diverging);
+                }
+                if let Some(it) = ev.get("stopped_at") {
+                    self.stopped_at = it.as_usize().ok().map(|v| v as u64);
+                }
+                self.overflow = num("overflow").max(self.overflow);
+                self.stalls = num("stalls").max(self.stalls);
+            }
+            _ => {}
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("world", Json::from_usize(self.world as usize));
+        o.set("step", Json::from_usize(self.step as usize));
+        o.set("verdicts", Json::Arr(self.verdicts.iter().map(|(it, pass)| {
+            let mut v = Json::obj();
+            v.set("iter", Json::from_usize(*it as usize));
+            v.set("pass", Json::Bool(*pass));
+            v
+        }).collect()));
+        o.set("checks", Json::from_usize(self.checks as usize));
+        o.set("failed_steps", Json::from_usize(self.failed_steps as usize));
+        if let Some(it) = self.first_diverging {
+            o.set("first_diverging", Json::from_usize(it as usize));
+        }
+        if let Some(it) = self.stopped_at {
+            o.set("stopped_at", Json::from_usize(it as usize));
+        }
+        o.set("worst_ratio", Json::from_f64(self.worst_ratio));
+        o.set("worst_id", Json::from_str_(&self.worst_id));
+        o.set("lag_steps", Json::from_usize(self.lag_steps as usize));
+        o.set("queue_depth", Json::from_usize(self.queue_depth as usize));
+        o.set("overflow", Json::from_usize(self.overflow as usize));
+        o.set("stalls", Json::from_usize(self.stalls as usize));
+        o.set("hangs", Json::from_usize(self.hangs as usize));
+        o.set("coverage", Json::from_f64(self.coverage));
+        o.set("finished", Json::Bool(self.finished));
+        if let Some(pass) = self.pass {
+            o.set("pass", Json::Bool(pass));
+        }
+        o
+    }
+}
+
+type State = Arc<Mutex<BTreeMap<String, RunState>>>;
+
+/// The monitor daemon: bind, then [`Monitor::serve_forever`] (CLI) or
+/// [`Monitor::spawn`] (in-process, tests).
+pub struct Monitor {
+    listener: TcpListener,
+    state: State,
+    stop: Arc<AtomicBool>,
+}
+
+impl Monitor {
+    /// Bind the daemon (use port 0 for an ephemeral test port).
+    pub fn bind(addr: &str) -> Result<Monitor> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("ttrace serve: bind {addr}"))?;
+        Ok(Monitor {
+            listener,
+            state: Arc::default(),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Serve until the process exits (the `ttrace serve` CLI path).
+    pub fn serve_forever(self) -> Result<()> {
+        accept_loop(self.listener, self.state, self.stop);
+        Ok(())
+    }
+
+    /// Serve on a background thread; the handle shuts the daemon down.
+    pub fn spawn(self) -> MonitorHandle {
+        let addr = self.local_addr();
+        let stop = self.stop.clone();
+        let state = self.state.clone();
+        let Monitor { listener, state: st, stop: flag } = self;
+        let join = std::thread::Builder::new()
+            .name("ttrace-serve".to_string())
+            .spawn(move || accept_loop(listener, st, flag))
+            .expect("spawn monitor");
+        MonitorHandle { addr, stop, state, join: Some(join) }
+    }
+}
+
+/// Handle of a spawned in-process monitor.
+pub struct MonitorHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    state: State,
+    join: Option<JoinHandle<()>>,
+}
+
+impl MonitorHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current state of one run (None if it never said hello).
+    pub fn run_state(&self, run: &str) -> Option<RunState> {
+        self.state.lock().unwrap().get(run).cloned()
+    }
+
+    /// Stop accepting and join the daemon thread.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for MonitorHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: State, stop: Arc<AtomicBool>) {
+    // non-blocking accept + poll: a std-only listener has no other way to
+    // observe the shutdown flag
+    listener.set_nonblocking(true).expect("set_nonblocking");
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let state = state.clone();
+                let _ = std::thread::Builder::new()
+                    .name("ttrace-serve-conn".to_string())
+                    .spawn(move || handle_conn(stream, state));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, state: State) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let mut reader = BufReader::new(stream);
+    // sniff the protocol from the first bytes without consuming them
+    let head = match reader.fill_buf() {
+        Ok(b) if !b.is_empty() => b,
+        _ => return,
+    };
+    if head.starts_with(b"GET ") || head.starts_with(b"HEAD") {
+        let _ = handle_http(reader, &state);
+    } else {
+        handle_events(reader, &state);
+    }
+}
+
+fn handle_http(mut reader: BufReader<TcpStream>, state: &State)
+               -> std::io::Result<()> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let path = line.split_whitespace().nth(1).unwrap_or("/");
+    // drain the header block (keep the socket well-behaved for curl)
+    let mut hdr = String::new();
+    while reader.read_line(&mut hdr)? > 0 && hdr.trim() != "" {
+        hdr.clear();
+    }
+    let (status, ctype, body) = match path {
+        "/status" => ("200 OK", "application/json", status_json(state)),
+        "/metrics" => ("200 OK",
+                       "text/plain; version=0.0.4; charset=utf-8",
+                       metrics_text(state)),
+        "/" => ("200 OK", "text/plain; charset=utf-8",
+                "ttrace serve: /status /metrics\n".to_string()),
+        _ => ("404 Not Found", "text/plain; charset=utf-8",
+              "not found\n".to_string()),
+    };
+    let stream = reader.get_mut();
+    write!(stream,
+           "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n\
+            Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+           body.len())?;
+    stream.flush()
+}
+
+fn handle_events(reader: BufReader<TcpStream>, state: &State) {
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(ev) = Json::parse(line) else { continue };
+        let Some(run) = ev.get("run").and_then(|r| r.as_str().ok()) else {
+            continue;
+        };
+        let mut runs = state.lock().unwrap();
+        runs.entry(run.to_string()).or_default().apply(&ev);
+    }
+}
+
+fn status_json(state: &State) -> String {
+    let runs = state.lock().unwrap();
+    let mut o = Json::obj();
+    let mut rj = Json::obj();
+    for (id, rs) in runs.iter() {
+        rj.set(id, rs.to_json());
+    }
+    o.set("runs", rj);
+    drop(runs);
+    let mut s = o.to_string_pretty();
+    s.push('\n');
+    s
+}
+
+/// Prometheus text exposition format 0.0.4.
+fn metrics_text(state: &State) -> String {
+    let runs = state.lock().unwrap();
+    let mut out = String::new();
+    let mut family = |name: &str, kind: &str, help: &str,
+                      rows: Vec<(String, f64)>| {
+        if rows.is_empty() {
+            return;
+        }
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        for (labels, v) in rows {
+            if v == v.trunc() && v.abs() < 1e15 {
+                out.push_str(&format!("{name}{{{labels}}} {}\n", v as i64));
+            } else {
+                out.push_str(&format!("{name}{{{labels}}} {v}\n"));
+            }
+        }
+    };
+    let lbl = |run: &str| format!("run=\"{}\"", escape_label(run));
+    let gather = |f: &dyn Fn(&str, &RunState) -> Option<(String, f64)>| {
+        runs.iter().filter_map(|(id, rs)| f(id, rs)).collect::<Vec<_>>()
+    };
+
+    family("ttrace_run_step", "gauge",
+           "Latest training iteration with a closed verdict window.",
+           gather(&|id, rs| Some((lbl(id), rs.step as f64))));
+    family("ttrace_verdicts_total", "counter",
+           "Closed step windows by verdict.",
+           runs.iter().flat_map(|(id, rs)| {
+               let pass = rs.verdicts.iter().filter(|(_, p)| *p).count();
+               let fail = rs.verdicts.len() - pass;
+               [(format!("{},verdict=\"pass\"", lbl(id)), pass as f64),
+                (format!("{},verdict=\"fail\"", lbl(id)), fail as f64)]
+           }).collect());
+    family("ttrace_first_diverging_step", "gauge",
+           "First training iteration whose verdict window failed.",
+           gather(&|id, rs| rs.first_diverging
+                  .map(|it| (lbl(id), it as f64))));
+    family("ttrace_stopped_at_step", "gauge",
+           "Iteration at which the Stop callback halted the run.",
+           gather(&|id, rs| rs.stopped_at.map(|it| (lbl(id), it as f64))));
+    family("ttrace_run_pass", "gauge",
+           "1 while no window failed (final verdict once finished).",
+           gather(&|id, rs| {
+               let pass = rs.pass.unwrap_or(rs.failed_steps == 0
+                                            && rs.hangs == 0);
+               Some((lbl(id), if pass { 1.0 } else { 0.0 }))
+           }));
+    family("ttrace_check_lag_steps", "gauge",
+           "Steps the checker trails behind the fastest training rank.",
+           gather(&|id, rs| Some((lbl(id), rs.lag_steps as f64))));
+    family("ttrace_sink_queue_depth", "gauge",
+           "Entries currently queued between rank threads and the sink.",
+           gather(&|id, rs| Some((lbl(id), rs.queue_depth as f64))));
+    family("ttrace_sink_overflow_total", "counter",
+           "Entries dropped at the bounded sink queue (DropNewest).",
+           gather(&|id, rs| Some((lbl(id), rs.overflow as f64))));
+    family("ttrace_sink_stalls_total", "counter",
+           "Enqueues that blocked on a full sink queue (Block).",
+           gather(&|id, rs| Some((lbl(id), rs.stalls as f64))));
+    family("ttrace_checks_total", "counter",
+           "Canonical ids compared so far.",
+           gather(&|id, rs| Some((lbl(id), rs.checks as f64))));
+    family("ttrace_checker_throughput_ids_per_s", "gauge",
+           "Checker throughput over the run so far.",
+           gather(&|id, rs| {
+               (rs.check_s > 0.0)
+                   .then(|| (lbl(id), rs.check_ids as f64 / rs.check_s))
+           }));
+    family("ttrace_hangs_total", "counter",
+           "Collective-timeout hang flags reported by the run.",
+           gather(&|id, rs| Some((lbl(id), rs.hangs as f64))));
+    family("ttrace_coverage_ratio", "gauge",
+           "Fraction of reference ids the candidate held (at finish).",
+           gather(&|id, rs| rs.finished.then(|| (lbl(id), rs.coverage))));
+    family("ttrace_comm_bytes_total", "counter",
+           "Communication payload bytes by process group.",
+           runs.iter().flat_map(|(id, rs)| {
+               rs.comm_bytes.iter().map(|(g, b)| {
+                   (format!("{},group=\"{}\"", lbl(id), escape_label(g)),
+                    *b as f64)
+               }).collect::<Vec<_>>()
+           }).collect());
+    out
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Best-effort event pusher used from inside a live session. Connection
+/// failures mark the client dead and are never surfaced — a missing
+/// monitor must not fail (or slow) the training run.
+pub struct MonitorClient {
+    addr: String,
+    conn: Option<TcpStream>,
+    dead: bool,
+}
+
+impl MonitorClient {
+    /// A client for the daemon at `addr` (connects lazily on first send).
+    pub fn connect(addr: impl Into<String>) -> MonitorClient {
+        MonitorClient { addr: addr.into(), conn: None, dead: false }
+    }
+
+    /// Push one event line (an object carrying `event` and `run`).
+    pub fn send(&mut self, ev: &Json) {
+        if self.dead {
+            return;
+        }
+        if self.conn.is_none() {
+            let addr = match self.addr.parse::<SocketAddr>() {
+                Ok(a) => a,
+                Err(_) => {
+                    // hostnames resolve through the blocking path
+                    match TcpStream::connect(&self.addr) {
+                        Ok(s) => {
+                            self.conn = Some(s);
+                            return self.write_line(ev);
+                        }
+                        Err(_) => {
+                            self.dead = true;
+                            return;
+                        }
+                    }
+                }
+            };
+            match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
+                Ok(s) => self.conn = Some(s),
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        self.write_line(ev);
+    }
+
+    fn write_line(&mut self, ev: &Json) {
+        let mut line = ev.to_string_compact();
+        line.push('\n');
+        let failed = match &mut self.conn {
+            Some(conn) => conn.write_all(line.as_bytes()).is_err()
+                || conn.flush().is_err(),
+            None => true,
+        };
+        if failed {
+            self.conn = None;
+            self.dead = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn http_get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn ev(text: &str) -> Json {
+        Json::parse(text).unwrap()
+    }
+
+    #[test]
+    fn event_lines_update_status_and_metrics() {
+        let mon = Monitor::bind("127.0.0.1:0").unwrap().spawn();
+        let addr = mon.addr();
+        let mut client = MonitorClient::connect(addr.to_string());
+        client.send(&ev(r#"{"event":"hello","run":"r1","world":4}"#));
+        client.send(&ev(r#"{"event":"step","run":"r1","iter":0,"pass":true,
+                            "checks":12,"failed":0,"worst":0.4,
+                            "worst_id":"i0/m0/act/x","lag":1}"#));
+        client.send(&ev(r#"{"event":"step","run":"r1","iter":1,"pass":false,
+                            "checks":12,"failed":3,"worst":42.0,
+                            "worst_id":"i1/m0/act/x","lag":1}"#));
+        client.send(&ev(r#"{"event":"finish","run":"r1","pass":false,
+                            "coverage":1.0,"first_diverging":1,
+                            "stopped_at":1,"overflow":0}"#));
+        // pushes are async to the handler thread: poll until applied
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            if let Some(rs) = mon.run_state("r1") {
+                if rs.finished {
+                    break;
+                }
+            }
+            assert!(std::time::Instant::now() < deadline, "events not applied");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+
+        let rs = mon.run_state("r1").unwrap();
+        assert_eq!(rs.world, 4);
+        assert_eq!(rs.step, 1);
+        assert_eq!(rs.verdicts, vec![(0, true), (1, false)]);
+        assert_eq!(rs.first_diverging, Some(1));
+        assert_eq!(rs.stopped_at, Some(1));
+        assert_eq!(rs.pass, Some(false));
+
+        let status = http_get(addr, "/status");
+        assert!(status.starts_with("HTTP/1.1 200"), "{status}");
+        let body = status.split("\r\n\r\n").nth(1).unwrap();
+        let j = Json::parse(body).unwrap();
+        let r1 = j.req("runs").unwrap().req("r1").unwrap();
+        assert_eq!(r1.req("first_diverging").unwrap().as_usize().unwrap(), 1);
+        assert!(!r1.req("pass").unwrap().as_bool().unwrap());
+
+        let metrics = http_get(addr, "/metrics");
+        assert!(metrics.contains("text/plain; version=0.0.4"), "{metrics}");
+        let body = metrics.split("\r\n\r\n").nth(1).unwrap();
+        assert!(body.contains("# TYPE ttrace_first_diverging_step gauge"));
+        assert!(body.contains("ttrace_first_diverging_step{run=\"r1\"} 1"),
+                "{body}");
+        assert!(body.contains("ttrace_verdicts_total{run=\"r1\",verdict=\"fail\"} 1"),
+                "{body}");
+        assert!(body.contains("ttrace_run_pass{run=\"r1\"} 0"), "{body}");
+        // exposition sanity: every non-comment line is `name{labels} value`
+        for line in body.lines().filter(|l| !l.starts_with('#')
+                                        && !l.is_empty()) {
+            let (head, val) = line.rsplit_once(' ').unwrap();
+            assert!(head.contains("{run=\"r1\""), "{line}");
+            assert!(val.parse::<f64>().is_ok(), "{line}");
+        }
+        mon.shutdown();
+    }
+
+    #[test]
+    fn unknown_paths_404_and_unreachable_client_goes_dead_silently() {
+        let mon = Monitor::bind("127.0.0.1:0").unwrap().spawn();
+        let resp = http_get(mon.addr(), "/nope");
+        assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+        mon.shutdown();
+
+        // send to a port nobody listens on: silent, never panics
+        let mut dead = MonitorClient::connect("127.0.0.1:1");
+        dead.send(&ev(r#"{"event":"hello","run":"x","world":1}"#));
+        dead.send(&ev(r#"{"event":"hello","run":"x","world":1}"#));
+    }
+
+    #[test]
+    fn hang_and_counters_events_accumulate() {
+        let state: State = Arc::default();
+        let mut rs = RunState::default();
+        rs.apply(&ev(r#"{"event":"hang","run":"r"}"#));
+        rs.apply(&ev(r#"{"event":"hang","run":"r"}"#));
+        rs.apply(&ev(r#"{"event":"counters","run":"r",
+                         "comm":{"dp@0":4096,"tp@1":128}}"#));
+        assert_eq!(rs.hangs, 2);
+        assert_eq!(rs.comm_bytes.get("dp@0"), Some(&4096));
+        state.lock().unwrap().insert("r".to_string(), rs);
+        let text = metrics_text(&state);
+        assert!(text.contains("ttrace_hangs_total{run=\"r\"} 2"), "{text}");
+        assert!(text.contains(
+            "ttrace_comm_bytes_total{run=\"r\",group=\"dp@0\"} 4096"), "{text}");
+    }
+}

@@ -1,0 +1,512 @@
+//! The async sink: a bounded MPSC channel between rank threads and one
+//! sink worker thread.
+//!
+//! Rank threads enqueue sealed [`Entry`]s (a move, no store I/O, no lock
+//! beyond the queue mutex) and join as soon as training ends; the worker
+//! feeds the streaming checker during the run and performs the `.ttrc`
+//! store write at close — buffered per rank and appended in **ascending
+//! rank order**, so the bytes match the synchronous
+//! `Collector::write_store` / `write_trace` paths exactly.
+//!
+//! The queue is bounded with a *counted, explicit* [`OverflowPolicy`]:
+//! [`Block`](OverflowPolicy::Block) (default) stalls the producer — counted,
+//! no data loss, required for byte-stable stores — while
+//! [`DropNewest`](OverflowPolicy::DropNewest) sheds entries for pure live
+//! monitoring, counting every drop. Nothing is ever dropped silently.
+//!
+//! ## Two-phase close
+//!
+//! The driver's `Session::finish` closes the stream in two phases so the
+//! telemetry contract survives the thread hop (obs spans are thread-local
+//! and drained on the *driver*):
+//!
+//!  1. [`SinkHandle::flush`] — the worker finalizes the checker's open
+//!     windows and writes every buffered payload into the store, then
+//!     acks. The driver can now record the `store:write` span and drain
+//!     telemetry.
+//!  2. [`SinkHandle::seal`] — the drained obs section (and the live
+//!     summary) seal into the store, the file is finished (checksum +
+//!     atomic rename), and the worker hands everything back.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::super::checker::CheckOutcome;
+use super::super::collector::{Entry, Trace};
+use super::super::diagnose::RunMeta;
+use super::super::obs::{ObsCounters, ObsEvent};
+use super::super::store::{write_trace, StoreSummary, StoreWriter};
+use super::{checker::LiveChecker, LiveSummary};
+
+/// Default bound of the entry queue.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// What happens when a producer hits the full queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// wait for the worker to drain (counted as a stall; no data loss —
+    /// required for store-backed sinks, whose output must be complete)
+    Block,
+    /// drop the entry being enqueued (counted as overflow; for pure live
+    /// monitoring where losing a window beat is better than stalling a rank)
+    DropNewest,
+}
+
+/// One message on the stream. Entries are *moved* (the tensor buffer is
+/// never cloned on the producer side); control messages are tiny and
+/// always enqueue even past the bound, so close can never deadlock.
+pub enum StreamMsg {
+    /// one recorded shard (the entry carries its recording rank)
+    Entry { key: String, entry: Entry },
+    /// a rank entered training iteration `iter` (tightens the checker's
+    /// window-close watermark; emitted by `Tracer::step`)
+    StepEnd { rank: u32, iter: u64 },
+    /// phase 1 of close: finalize windows, write store payloads, ack
+    Flush,
+    /// phase 2 of close: seal obs + live sections and finish the store
+    Seal { obs: Option<(Vec<ObsEvent>, ObsCounters)> },
+    /// abandon the stream (session dropped without finish)
+    Cancel,
+}
+
+/// Cumulative queue counters, readable lock-free from the checker's
+/// monitor pushes and the final [`LiveSummary`].
+#[derive(Default)]
+pub struct StreamCounters {
+    depth: AtomicUsize,
+    high_water: AtomicUsize,
+    overflow: AtomicU64,
+    stalls: AtomicU64,
+    enqueued: AtomicU64,
+}
+
+/// A point-in-time snapshot of [`StreamCounters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    pub depth: usize,
+    pub high_water: usize,
+    pub overflow: u64,
+    pub stalls: u64,
+    pub enqueued: u64,
+}
+
+impl StreamCounters {
+    pub fn snapshot(&self) -> StreamStats {
+        StreamStats {
+            depth: self.depth.load(Ordering::Relaxed),
+            high_water: self.high_water.load(Ordering::Relaxed),
+            overflow: self.overflow.load(Ordering::Relaxed),
+            stalls: self.stalls.load(Ordering::Relaxed),
+            enqueued: self.enqueued.load(Ordering::Relaxed),
+        }
+    }
+}
+
+struct Channel {
+    q: Mutex<VecDeque<StreamMsg>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    policy: OverflowPolicy,
+    counters: Arc<StreamCounters>,
+}
+
+/// Producer half — clonable, shared by every rank thread (the collector
+/// holds one clone).
+#[derive(Clone)]
+pub struct StreamTx {
+    ch: Arc<Channel>,
+}
+
+/// Consumer half — owned by the sink worker.
+pub struct StreamRx {
+    ch: Arc<Channel>,
+}
+
+/// A bounded stream with the given capacity and overflow policy.
+pub fn channel(capacity: usize, policy: OverflowPolicy) -> (StreamTx, StreamRx) {
+    let ch = Arc::new(Channel {
+        q: Mutex::new(VecDeque::new()),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        cap: capacity.max(1),
+        policy,
+        counters: Arc::new(StreamCounters::default()),
+    });
+    (StreamTx { ch: ch.clone() }, StreamRx { ch })
+}
+
+impl StreamTx {
+    /// Enqueue one recorded entry, honoring the overflow policy. O(1) for
+    /// the producer: no store I/O, no tensor clone.
+    pub fn send_entry(&self, key: String, entry: Entry) {
+        let c = &self.ch.counters;
+        let mut q = self.ch.q.lock().unwrap();
+        if q.len() >= self.ch.cap {
+            match self.ch.policy {
+                OverflowPolicy::DropNewest => {
+                    c.overflow.fetch_add(1, Ordering::Relaxed);
+                    return; // counted, never silent
+                }
+                OverflowPolicy::Block => {
+                    c.stalls.fetch_add(1, Ordering::Relaxed);
+                    while q.len() >= self.ch.cap {
+                        q = self.ch.not_full.wait(q).unwrap();
+                    }
+                }
+            }
+        }
+        q.push_back(StreamMsg::Entry { key, entry });
+        self.note_push(c, q.len());
+        drop(q);
+        self.ch.not_empty.notify_one();
+    }
+
+    /// Enqueue a control message (never bounded — close must not deadlock
+    /// behind a full queue).
+    pub fn send_ctrl(&self, msg: StreamMsg) {
+        let mut q = self.ch.q.lock().unwrap();
+        q.push_back(msg);
+        self.note_push(&self.ch.counters, q.len());
+        drop(q);
+        self.ch.not_empty.notify_one();
+    }
+
+    /// A rank entered iteration `iter`.
+    pub fn send_step_end(&self, rank: u32, iter: u64) {
+        self.send_ctrl(StreamMsg::StepEnd { rank, iter });
+    }
+
+    fn note_push(&self, c: &StreamCounters, len: usize) {
+        c.enqueued.fetch_add(1, Ordering::Relaxed);
+        c.depth.store(len, Ordering::Relaxed);
+        c.high_water.fetch_max(len, Ordering::Relaxed);
+    }
+
+    /// The queue's cumulative counters (shared with the consumer side).
+    pub fn counters(&self) -> Arc<StreamCounters> {
+        self.ch.counters.clone()
+    }
+}
+
+impl StreamRx {
+    /// Block until the next message.
+    pub fn recv(&self) -> StreamMsg {
+        let mut q = self.ch.q.lock().unwrap();
+        loop {
+            if let Some(msg) = q.pop_front() {
+                self.ch.counters.depth.store(q.len(), Ordering::Relaxed);
+                drop(q);
+                self.ch.not_full.notify_one();
+                return msg;
+            }
+            q = self.ch.not_empty.wait(q).unwrap();
+        }
+    }
+
+    pub fn counters(&self) -> Arc<StreamCounters> {
+        self.ch.counters.clone()
+    }
+}
+
+/// Where (and in which byte layout) the worker persists the run.
+pub(crate) enum StoreLayout {
+    /// per-rank segments appended in ascending rank order — byte-identical
+    /// to the synchronous `Sink::Store` path (`Collector::write_store`)
+    Segments,
+    /// assembled-trace key order — byte-identical to the synchronous
+    /// `Sink::Tee` path (`store::write_trace`)
+    TraceOrder,
+}
+
+pub(crate) struct StoreTarget {
+    pub path: PathBuf,
+    pub layout: StoreLayout,
+    pub checkpoint_every: usize,
+    pub estimate: Option<(HashMap<String, f64>, f64)>,
+    pub meta: RunMeta,
+}
+
+/// What the worker is asked to do with the stream.
+pub(crate) struct WorkerCfg {
+    pub store: Option<StoreTarget>,
+    pub keep_trace: bool,
+    pub checker: Option<LiveChecker>,
+}
+
+/// The reference the checker hands back at close, plus its accumulated
+/// outcome — what `Session::finish` feeds the offline re-check (or, for
+/// stream-only sinks, uses as *the* outcome).
+pub(crate) struct LiveParts {
+    pub reference: Trace,
+    pub estimate: HashMap<String, f64>,
+    pub outcome: CheckOutcome,
+}
+
+/// Everything the worker hands back when the stream seals.
+pub(crate) struct SinkOutput {
+    pub trace: Option<Trace>,
+    pub store: Option<(PathBuf, StoreSummary)>,
+    pub summary: LiveSummary,
+    pub live: Option<LiveParts>,
+}
+
+/// Driver-side handle of a spawned sink worker.
+pub(crate) struct SinkHandle {
+    tx: StreamTx,
+    join: Option<JoinHandle<Result<SinkOutput>>>,
+    flushed: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl SinkHandle {
+    /// Phase 1: ask the worker to finalize checker windows and write every
+    /// buffered payload into the store; returns once it has.
+    pub fn flush(&self) {
+        self.tx.send_ctrl(StreamMsg::Flush);
+        let (lock, cv) = &*self.flushed;
+        let mut done = lock.lock().unwrap();
+        while !*done {
+            done = cv.wait(done).unwrap();
+        }
+    }
+
+    /// Phase 2: seal the drained obs section + live summary into the store
+    /// and join the worker.
+    pub fn seal(mut self, obs: Option<(Vec<ObsEvent>, ObsCounters)>)
+                -> Result<SinkOutput> {
+        self.tx.send_ctrl(StreamMsg::Seal { obs });
+        let join = self.join.take().expect("seal consumes the handle once");
+        match join.join() {
+            Ok(out) => out,
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    }
+
+    pub fn counters(&self) -> Arc<StreamCounters> {
+        self.tx.counters()
+    }
+}
+
+impl Drop for SinkHandle {
+    fn drop(&mut self) {
+        // session dropped without finish: unblock the worker so the thread
+        // exits instead of waiting on a stream that will never close
+        if let Some(join) = self.join.take() {
+            self.tx.send_ctrl(StreamMsg::Cancel);
+            drop(join); // detach — never block a drop on I/O
+        }
+    }
+}
+
+/// Spawn the sink worker on `rx`. Returns the driver-side handle.
+pub(crate) fn spawn(tx: StreamTx, rx: StreamRx, cfg: WorkerCfg) -> SinkHandle {
+    let flushed = Arc::new((Mutex::new(false), Condvar::new()));
+    let ack = flushed.clone();
+    let join = std::thread::Builder::new()
+        .name("ttrace-live-sink".to_string())
+        .spawn(move || run_worker(rx, cfg, ack))
+        .expect("spawn sink worker");
+    SinkHandle { tx, join: Some(join), flushed }
+}
+
+/// The worker loop: feed the checker during the run, buffer per-rank
+/// segments when a store or trace is wanted, write + seal at close.
+fn run_worker(rx: StreamRx, cfg: WorkerCfg,
+              ack: Arc<(Mutex<bool>, Condvar)>) -> Result<SinkOutput> {
+    let WorkerCfg { store, keep_trace, mut checker } = cfg;
+    // Per-rank segments in arrival order. The channel is FIFO and each rank
+    // thread enqueues in program order, so each segment is that rank's
+    // program order — the same invariant `Collector::drain_segments` has.
+    let buffer = store.is_some() || keep_trace;
+    let mut segments: BTreeMap<u32, Vec<(String, Entry)>> = BTreeMap::new();
+    let mut writer: Option<(StoreWriter, PathBuf)> = None;
+    let mut trace: Option<Trace> = None;
+    let mut err: Option<anyhow::Error> = None;
+
+    let flush_ack = || {
+        let (lock, cv) = &*ack;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    };
+
+    loop {
+        match rx.recv() {
+            StreamMsg::Entry { key, entry } => {
+                if let Some(ch) = &mut checker {
+                    ch.on_entry(&key, &entry);
+                }
+                if buffer {
+                    segments.entry(entry.rank).or_default().push((key, entry));
+                }
+            }
+            StreamMsg::StepEnd { rank, iter } => {
+                if let Some(ch) = &mut checker {
+                    ch.on_step_end(rank, iter);
+                }
+            }
+            StreamMsg::Flush => {
+                if let Some(ch) = &mut checker {
+                    ch.close_all();
+                }
+                if keep_trace {
+                    let mut t = Trace::default();
+                    // ascending rank order — `Collector::into_trace` exactly
+                    for items in segments.values() {
+                        for (key, entry) in items {
+                            t.entries.entry(key.clone()).or_default()
+                                .push(entry.clone());
+                        }
+                    }
+                    trace = Some(t);
+                }
+                if let Some(target) = &store {
+                    match write_payloads(target, &segments, trace.as_ref()) {
+                        Ok(w) => writer = Some((w, target.path.clone())),
+                        Err(e) => err = Some(e),
+                    }
+                }
+                segments.clear();
+                flush_ack();
+            }
+            StreamMsg::Seal { obs } => {
+                let summary = assemble_summary(&checker, &rx);
+                let mut sealed = None;
+                if let Some((mut w, path)) = writer.take() {
+                    if let Some((events, counters)) = obs {
+                        w.set_obs(events, counters);
+                    }
+                    // Only embed a live section when a streaming checker
+                    // actually ran: a plain async store must stay
+                    // byte-identical to its synchronous counterpart.
+                    if checker.is_some() {
+                        w.set_live(summary.clone());
+                    }
+                    match w.finish() {
+                        Ok(s) => sealed = Some((path, s)),
+                        Err(e) => err = err.or(Some(e)),
+                    }
+                }
+                if let Some(e) = err {
+                    return Err(e);
+                }
+                let live = checker.map(|ch| ch.into_parts());
+                return Ok(SinkOutput { trace, store: sealed, summary, live });
+            }
+            StreamMsg::Cancel => {
+                // abandoned session: ack any flush-waiter and bail out
+                flush_ack();
+                anyhow::bail!("live sink cancelled before finish");
+            }
+        }
+    }
+}
+
+/// Create the store writer and append every buffered payload in the
+/// layout's canonical order.
+fn write_payloads(target: &StoreTarget,
+                  segments: &BTreeMap<u32, Vec<(String, Entry)>>,
+                  trace: Option<&Trace>) -> Result<StoreWriter> {
+    let mut w = StoreWriter::create(&target.path)?;
+    w.set_checkpoint_every(target.checkpoint_every);
+    if let Some((rel, eps)) = &target.estimate {
+        w.set_estimate(rel, *eps);
+    }
+    w.set_run_meta(&target.meta);
+    match target.layout {
+        StoreLayout::Segments => {
+            for items in segments.values() {
+                for (key, entry) in items {
+                    w.append(key, entry)?;
+                }
+            }
+        }
+        StoreLayout::TraceOrder => {
+            let t = trace.expect("TraceOrder layout always keeps the trace");
+            write_trace(t, &mut w)?;
+        }
+    }
+    Ok(w)
+}
+
+fn assemble_summary(checker: &Option<LiveChecker>, rx: &StreamRx) -> LiveSummary {
+    let stats = rx.counters().snapshot();
+    let mut s = checker.as_ref().map(|c| c.summary()).unwrap_or_default();
+    s.overflow = stats.overflow;
+    s.stalls = stats.stalls;
+    s.queue_high_water = stats.high_water as u64;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, Tensor};
+    use crate::ttrace::shard::ShardSpec;
+
+    fn entry(rank: u32, v: f32) -> Entry {
+        Entry {
+            spec: ShardSpec::full(&[1]),
+            data: Tensor::new(&[1], vec![v], DType::F32),
+            rank,
+        }
+    }
+
+    #[test]
+    fn drop_newest_counts_every_overflow() {
+        let (tx, rx) = channel(4, OverflowPolicy::DropNewest);
+        for i in 0..20 {
+            tx.send_entry(format!("k{i}"), entry(0, i as f32));
+        }
+        let stats = tx.counters().snapshot();
+        assert_eq!(stats.overflow, 16, "{stats:?}");
+        assert_eq!(stats.enqueued, 4);
+        let mut got = 0;
+        for _ in 0..4 {
+            match rx.recv() {
+                StreamMsg::Entry { .. } => got += 1,
+                _ => panic!("unexpected message"),
+            }
+        }
+        assert_eq!(got, 4);
+        assert_eq!(rx.counters().snapshot().depth, 0);
+    }
+
+    #[test]
+    fn block_policy_stalls_but_never_drops() {
+        let (tx, rx) = channel(2, OverflowPolicy::Block);
+        let producer = std::thread::spawn(move || {
+            for i in 0..50 {
+                tx.send_entry(format!("k{i}"), entry(0, i as f32));
+            }
+            tx.counters().snapshot()
+        });
+        let mut got = 0;
+        while got < 50 {
+            if let StreamMsg::Entry { .. } = rx.recv() {
+                got += 1;
+            }
+            // slow consumer: force the producer into the full-queue path
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+        let stats = producer.join().unwrap();
+        assert_eq!(stats.overflow, 0, "Block must never drop");
+        assert_eq!(stats.enqueued, 50);
+        assert!(stats.stalls > 0, "a capacity-2 queue must have stalled");
+        assert!(stats.high_water <= 3, "bound violated: {stats:?}");
+    }
+
+    #[test]
+    fn control_messages_bypass_the_bound() {
+        let (tx, _rx) = channel(1, OverflowPolicy::DropNewest);
+        tx.send_entry("a".into(), entry(0, 0.0));
+        // queue is full; control must still get through without blocking
+        tx.send_ctrl(StreamMsg::Flush);
+        tx.send_step_end(0, 1);
+        assert_eq!(tx.counters().snapshot().enqueued, 3);
+    }
+}

@@ -22,6 +22,7 @@ pub mod diagnose;
 pub mod faults;
 pub mod gen;
 pub mod hooks;
+pub mod live;
 pub mod merger;
 pub mod obs;
 pub mod report;
@@ -36,6 +37,8 @@ pub use api::{Reference, Report, Session, SessionBuilder, Sink, Tolerance,
 pub use checker::{check_traces, CheckCfg, CheckOutcome};
 pub use diagnose::{diagnose_stores, Diagnosis, RunMeta};
 pub use faults::FaultPlan;
+pub use live::{Control, LiveCfg, LiveSummary, Monitor, MonitorClient,
+               StepVerdict};
 pub use obs::{Telemetry, Timeline};
 pub use runner::{localized_module, reference_of, ttrace_check, TtraceRun};
 pub use collector::{Collector, Trace};

@@ -2,7 +2,7 @@
 //! layer the paper's deployment assumes: the framework under test dumps
 //! traces to shared storage and the checker compares them out-of-band).
 //!
-//! ## Format (version 3, little-endian throughout)
+//! ## Format (version 4, little-endian throughout)
 //!
 //! ```text
 //! [0..4)   magic  b"TTRC"
@@ -27,7 +27,7 @@
 //!          the parallel layout of the recording run, which
 //!          `ttrace::diagnose` needs to turn per-shard rank tags into
 //!          (tp, cp, dp, pp) coordinates offline
-//! [O..T)   observability section (u8 present flag; when 1: the drained
+//! [O..L)   observability section (u8 present flag; when 1: the drained
 //!          `ttrace::obs` counters and event list — see `put_obs` — with
 //!          collectives as first-class entries: op kind, group key,
 //!          member/size, reduce op, precision, element count and payload
@@ -35,13 +35,19 @@
 //!          string-table indexed: obs labels (rendezvous keys with
 //!          per-group sequence numbers) are mostly unique, so a table
 //!          would only add indirection.
-//! [T..)    trailer (48 bytes): u64 S, u64 I, u64 E, u64 M, u64 O,
+//! [L..T)   live section (u8 present flag; when 1: the session's
+//!          [`LiveSummary`] — per-step verdicts of the streaming checker,
+//!          first diverging / stopped-at iterations and the async sink's
+//!          queue counters — see `put_live`), so offline tooling reports
+//!          the same numbers the monitor daemon saw during the run
+//! [T..)    trailer (56 bytes): u64 S, u64 I, u64 E, u64 M, u64 O, u64 L,
 //!          u64 FNV-1a checksum of every byte before the checksum field
 //! ```
 //!
-//! Version 2 files (no obs section, 40-byte trailer with four offsets)
+//! Version 2 files (no obs section, 40-byte trailer with four offsets) and
+//! version 3 files (no live section, 48-byte trailer with five offsets)
 //! still open: `StoreReader::open` dispatches on the header version and
-//! serves them with an empty obs section. The writer always writes v3.
+//! serves them with empty obs/live sections. The writer always writes v4.
 //!
 //! Payload encodings are bit-exact: `Raw32` stores the f32 bit patterns;
 //! `Packed16` stores only the upper 16 bits and is chosen automatically
@@ -86,22 +92,25 @@ use super::checker::{check_one_id, comp_order, CheckCfg, CheckOutcome, KeyVerdic
 use super::collector::{Entry, Trace};
 use super::diagnose::RunMeta;
 use super::hooks::CanonId;
+use super::live::{LiveSummary, StepVerdict};
 use super::obs::{CommInfo, EvKind, ObsCounters, ObsEvent};
 use super::shard::{DimMap, Piece, ShardSpec};
 
 const MAGIC: &[u8; 4] = b"TTRC";
-const VERSION: u16 = 3;
+const VERSION: u16 = 4;
 /// Oldest readable format version (v2 = no obs section, 40-byte trailer).
 const MIN_VERSION: u16 = 2;
 const HEADER_LEN: u64 = 8;
-/// v3 trailer: five section offsets + checksum.
-const TRAILER_LEN: u64 = 48;
+/// v4 trailer: six section offsets + checksum.
+const TRAILER_LEN: u64 = 56;
+/// v3 trailer: five section offsets + checksum (no live section).
+const TRAILER_LEN_V3: u64 = 48;
 /// v2 trailer: four section offsets + checksum.
 const TRAILER_LEN_V2: u64 = 40;
 /// Checkpoint block magic (payload region, `set_checkpoint_every`).
 const CKPT_MAGIC: &[u8; 4] = b"TTCK";
-/// magic + self offset + prefix hash + 5 section offsets + blob length
-const CKPT_HEADER_LEN: u64 = 4 + 8 + 8 + 40 + 4;
+/// magic + self offset + prefix hash + 6 section offsets + blob length
+const CKPT_HEADER_LEN: u64 = 4 + 8 + 8 + 48 + 4;
 
 /// How a shard's payload bytes encode its f32 values.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -272,6 +281,7 @@ pub struct StoreWriter {
     estimate_eps: f64,
     run_meta: Option<RunMeta>,
     obs: Option<(Vec<ObsEvent>, ObsCounters)>,
+    live: Option<LiveSummary>,
     /// write a `TTCK` checkpoint block every this many shards (0 = never)
     checkpoint_every: usize,
     shards_since_checkpoint: usize,
@@ -306,6 +316,7 @@ impl StoreWriter {
             estimate_eps: 0.0,
             run_meta: None,
             obs: None,
+            live: None,
             checkpoint_every: 0,
             shards_since_checkpoint: 0,
         };
@@ -397,7 +408,7 @@ impl StoreWriter {
         let self_off = self.offset;
         let (blob, offs) = encode_sections(&self.index, &self.estimate,
                                            self.estimate_eps, &self.run_meta,
-                                           &self.obs,
+                                           &self.obs, &self.live,
                                            self_off + CKPT_HEADER_LEN);
         let mut block = Vec::with_capacity(CKPT_HEADER_LEN as usize
                                            + blob.len() + 8);
@@ -440,6 +451,14 @@ impl StoreWriter {
         self.obs = Some((events, counters));
     }
 
+    /// Embed the session's live summary (per-step verdicts of the
+    /// streaming checker plus the async sink's queue counters) so offline
+    /// tooling (`inspect`, `Report::from_stores`) reports the same numbers
+    /// the monitor daemon saw during the run. Call once, before `finish`.
+    pub fn set_live(&mut self, live: LiveSummary) {
+        self.live = Some(live);
+    }
+
     /// Write string table, index, estimates and trailer; seal the file by
     /// renaming `<path>.tmp` onto the final path (atomic on POSIX, so the
     /// sealed path never holds a half-written store).
@@ -447,9 +466,9 @@ impl StoreWriter {
         let string_table_offset = self.offset;
         let (blob, offs) = encode_sections(&self.index, &self.estimate,
                                            self.estimate_eps, &self.run_meta,
-                                           &self.obs, self.offset);
+                                           &self.obs, &self.live, self.offset);
         self.write_bytes(&blob)?;
-        let mut tail = Vec::with_capacity(40);
+        let mut tail = Vec::with_capacity(48);
         for o in offs {
             put_u64(&mut tail, o);
         }
@@ -524,17 +543,87 @@ fn put_obs(buf: &mut Vec<u8>, obs: &Option<(Vec<ObsEvent>, ObsCounters)>) {
     }
 }
 
-/// Serialize the five metadata sections (string table, index, estimates,
-/// run meta, obs) as one blob that will start at absolute file offset
-/// `base`; returns the blob and the absolute offsets of the five
+/// Serialize the session's live summary: present flag, scalar counters,
+/// then the per-step verdicts.
+fn put_live(buf: &mut Vec<u8>, live: &Option<LiveSummary>) {
+    let Some(l) = live else {
+        put_u8(buf, 0);
+        return;
+    };
+    put_u8(buf, 1);
+    for opt in [l.first_diverging, l.stopped_at] {
+        match opt {
+            None => put_u8(buf, 0),
+            Some(it) => {
+                put_u8(buf, 1);
+                put_u64(buf, it);
+            }
+        }
+    }
+    for v in [l.flagged, l.overflow, l.stalls, l.queue_high_water,
+              l.late_entries] {
+        put_u64(buf, v);
+    }
+    put_u32(buf, l.steps.len() as u32);
+    for s in &l.steps {
+        put_u64(buf, s.iter);
+        put_u64(buf, s.checks);
+        put_u64(buf, s.failed);
+        put_u64(buf, s.missing);
+        put_u64(buf, s.merge_errors);
+        put_u64(buf, s.worst_ratio.to_bits());
+        put_str(buf, &s.worst_id);
+        put_u8(buf, s.pass as u8);
+    }
+}
+
+/// Decode the live section (inverse of `put_live`).
+fn read_live(c: &mut Cursor) -> Result<Option<LiveSummary>> {
+    if c.u8()? == 0 {
+        return Ok(None);
+    }
+    let mut opts = [None, None];
+    for slot in opts.iter_mut() {
+        if c.u8()? != 0 {
+            *slot = Some(c.u64()?);
+        }
+    }
+    let [first_diverging, stopped_at] = opts;
+    let flagged = c.u64()?;
+    let overflow = c.u64()?;
+    let stalls = c.u64()?;
+    let queue_high_water = c.u64()?;
+    let late_entries = c.u64()?;
+    let ns = c.u32()? as usize;
+    let mut steps = Vec::with_capacity(ns.min(1 << 20));
+    for _ in 0..ns {
+        steps.push(StepVerdict {
+            iter: c.u64()?,
+            checks: c.u64()?,
+            failed: c.u64()?,
+            missing: c.u64()?,
+            merge_errors: c.u64()?,
+            worst_ratio: f64::from_bits(c.u64()?),
+            worst_id: c.str()?,
+            pass: c.u8()? != 0,
+        });
+    }
+    Ok(Some(LiveSummary { steps, first_diverging, stopped_at, flagged,
+                          overflow, stalls, queue_high_water, late_entries }))
+}
+
+/// Serialize the six metadata sections (string table, index, estimates,
+/// run meta, obs, live) as one blob that will start at absolute file
+/// offset `base`; returns the blob and the absolute offsets of the six
 /// sections. Shared between `finish` (followed by the trailer) and
 /// `write_checkpoint` (embedded in a `TTCK` block), so a salvaged index
 /// decodes through the exact same path as a sealed one.
 fn encode_sections(index: &BTreeMap<String, Vec<ShardMeta>>,
                    estimate: &BTreeMap<String, f64>, eps: f64,
                    run_meta: &Option<RunMeta>,
-                   obs: &Option<(Vec<ObsEvent>, ObsCounters)>, base: u64)
-                   -> (Vec<u8>, [u64; 5]) {
+                   obs: &Option<(Vec<ObsEvent>, ObsCounters)>,
+                   live: &Option<LiveSummary>, base: u64)
+                   -> (Vec<u8>, [u64; 6]) {
     let mut names: BTreeSet<String> = index.keys().cloned().collect();
     names.extend(estimate.keys().cloned());
     let sid: HashMap<String, u32> = names
@@ -589,8 +678,11 @@ fn encode_sections(index: &BTreeMap<String, Vec<ShardMeta>>,
     let obs_offset = base + buf.len() as u64;
     put_obs(&mut buf, obs);
 
+    let live_offset = base + buf.len() as u64;
+    put_live(&mut buf, live);
+
     (buf, [string_table_offset, index_offset, estimates_offset, meta_offset,
-           obs_offset])
+           obs_offset, live_offset])
 }
 
 /// Write a fully-assembled trace into `w`, key order. (The collector
@@ -729,6 +821,7 @@ pub struct StoreReader {
     run_meta: Option<RunMeta>,
     obs_events: Vec<ObsEvent>,
     obs_counters: Option<ObsCounters>,
+    live: Option<LiveSummary>,
     /// the index came from a checkpoint block of a torn file, not the
     /// trailer of a sealed one — the trace may be incomplete
     salvaged: bool,
@@ -745,9 +838,11 @@ struct Sections {
     /// raw embedded eps (0.0 = no estimates were recorded)
     eps: f64,
     run_meta: Option<RunMeta>,
-    /// v3 telemetry (empty / `None` for v2 files and unarmed runs)
+    /// v3+ telemetry (empty / `None` for v2 files and unarmed runs)
     obs_events: Vec<ObsEvent>,
     obs_counters: Option<ObsCounters>,
+    /// v4 live summary (`None` for older files and non-live sessions)
+    live: Option<LiveSummary>,
 }
 
 /// Decode one telemetry event (inverse of `put_obs_event`).
@@ -812,14 +907,14 @@ fn read_obs(c: &mut Cursor) -> Result<(Vec<ObsEvent>, Option<ObsCounters>)> {
     Ok((events, Some(counters)))
 }
 
-/// Decode string table + index + estimates + run meta (+ the v3 obs
-/// section when `obs_off` is set) from `sec`, a slice whose first byte
-/// sits at absolute file offset `st_off`. Each section must land exactly
-/// at its declared offset, and every shard payload must fit inside
-/// `[HEADER_LEN, payload_end)`.
+/// Decode string table + index + estimates + run meta (+ the v3 obs and
+/// v4 live sections when their offsets are set) from `sec`, a slice whose
+/// first byte sits at absolute file offset `st_off`. Each section must
+/// land exactly at its declared offset, and every shard payload must fit
+/// inside `[HEADER_LEN, payload_end)`.
 fn parse_sections(path: &Path, sec: &[u8], st_off: u64, idx_off: u64,
                   est_off: u64, meta_off: u64, obs_off: Option<u64>,
-                  payload_end: u64)
+                  live_off: Option<u64>, payload_end: u64)
                   -> Result<Sections> {
     // string table
     let mut c = Cursor { path, buf: sec, pos: 0, base: st_off };
@@ -908,7 +1003,7 @@ fn parse_sections(path: &Path, sec: &[u8], st_off: u64, idx_off: u64,
         })
     };
 
-    // telemetry (v3 only — a v2 file ends after run meta)
+    // telemetry (v3+ — a v2 file ends after run meta)
     let (obs_events, obs_counters) = match obs_off {
         None => (Vec::new(), None),
         Some(obs_off) => {
@@ -917,6 +1012,18 @@ fn parse_sections(path: &Path, sec: &[u8], st_off: u64, idx_off: u64,
                        starts at {obs_off}", path.display(), c.abs());
             }
             read_obs(&mut c)?
+        }
+    };
+
+    // live summary (v4 only — a v3 file ends after obs)
+    let live = match live_off {
+        None => None,
+        Some(live_off) => {
+            if c.abs() != live_off {
+                bail!("{}: obs section ends at offset {} but the live \
+                       section starts at {live_off}", path.display(), c.abs());
+            }
+            read_live(&mut c)?
         }
     };
 
@@ -940,7 +1047,8 @@ fn parse_sections(path: &Path, sec: &[u8], st_off: u64, idx_off: u64,
         }
     }
 
-    Ok(Sections { index, estimate, eps, run_meta, obs_events, obs_counters })
+    Ok(Sections { index, estimate, eps, run_meta, obs_events, obs_counters,
+                  live })
 }
 
 /// Validate one candidate checkpoint block at absolute offset `i` of an
@@ -972,8 +1080,9 @@ fn try_checkpoint(path: &Path, bytes: &[u8], i: usize, prefix_hash: u64)
     let est_off = u64_at(i + 36);
     let meta_off = u64_at(i + 44);
     let obs_off = u64_at(i + 52);
+    let live_off = u64_at(i + 60);
     let blob_len =
-        u32::from_le_bytes(bytes[i + 60..i + 64].try_into().unwrap()) as usize;
+        u32::from_le_bytes(bytes[i + 68..i + 72].try_into().unwrap()) as usize;
     let blob_end = hdr_end + blob_len;
     if blob_end + 8 > bytes.len() {
         bail!("{}: checkpoint at offset {i}: sections blob ({blob_len} \
@@ -992,7 +1101,8 @@ fn try_checkpoint(path: &Path, bytes: &[u8], i: usize, prefix_hash: u64)
     }
     // shards recorded before this block must lie entirely before it
     let s = parse_sections(path, &bytes[hdr_end..blob_end], st_off, idx_off,
-                           est_off, meta_off, Some(obs_off), i as u64)?;
+                           est_off, meta_off, Some(obs_off), Some(live_off),
+                           i as u64)?;
     Ok(((blob_end + 8) as u64, s))
 }
 
@@ -1004,10 +1114,10 @@ impl StoreReader {
             .metadata()
             .map_err(|e| anyhow!("stat {}: {e}", path.display()))?
             .len();
-        if file_len < HEADER_LEN + TRAILER_LEN {
+        if file_len < HEADER_LEN + TRAILER_LEN_V2 {
             bail!("{}: too small to be a .ttrc store ({file_len} bytes; a \
                    valid store is at least {} bytes)",
-                  path.display(), HEADER_LEN + TRAILER_LEN);
+                  path.display(), HEADER_LEN + TRAILER_LEN_V2);
         }
         let mut head = [0u8; HEADER_LEN as usize];
         read_exact_at(&file, &mut head, 0)
@@ -1035,9 +1145,18 @@ impl StoreReader {
                    computed {computed:#018x}) — the file is corrupt or \
                    truncated", path.display(), file_len - 8);
         }
-        // v2 trailers carry four section offsets, v3 trailers five (obs)
-        let trailer_len = if version == MIN_VERSION { TRAILER_LEN_V2 }
-                          else { TRAILER_LEN };
+        // v2 trailers carry four section offsets, v3 five (obs), v4 six
+        // (obs + live)
+        let trailer_len = match version {
+            2 => TRAILER_LEN_V2,
+            3 => TRAILER_LEN_V3,
+            _ => TRAILER_LEN,
+        };
+        if file_len < HEADER_LEN + trailer_len {
+            bail!("{}: too small to be a v{version} .ttrc store ({file_len} \
+                   bytes; a valid v{version} store is at least {} bytes)",
+                  path.display(), HEADER_LEN + trailer_len);
+        }
         let n_offs = (trailer_len as usize - 8) / 8;
         let mut tr = vec![0u8; n_offs * 8];
         read_exact_at(&file, &mut tr, file_len - trailer_len)
@@ -1050,15 +1169,17 @@ impl StoreReader {
         let est_off = off(2);
         let meta_off = off(3);
         let obs_off = if n_offs > 4 { Some(off(4)) } else { None };
+        let live_off = if n_offs > 5 { Some(off(5)) } else { None };
         let sections_end = file_len - trailer_len;
-        let last_off = obs_off.unwrap_or(meta_off);
-        if !(HEADER_LEN <= st_off && st_off <= idx_off && idx_off <= est_off
-             && est_off <= meta_off && meta_off <= last_off
-             && last_off <= sections_end) {
+        let mut chain = vec![HEADER_LEN, st_off, idx_off, est_off, meta_off];
+        chain.extend(obs_off);
+        chain.extend(live_off);
+        chain.push(sections_end);
+        if chain.windows(2).any(|w| w[0] > w[1]) {
             bail!("{}: corrupt section offsets in trailer at offset \
                    {sections_end} (string table {st_off}, index {idx_off}, \
                    estimates {est_off}, run meta {meta_off}, obs {obs_off:?}, \
-                   file length {file_len})",
+                   live {live_off:?}, file length {file_len})",
                   path.display());
         }
 
@@ -1068,7 +1189,7 @@ impl StoreReader {
                                  path.display()))?;
 
         let s = parse_sections(path, &sec, st_off, idx_off, est_off,
-                               meta_off, obs_off, st_off)?;
+                               meta_off, obs_off, live_off, st_off)?;
         Ok(StoreReader {
             path: path.to_path_buf(),
             file,
@@ -1081,6 +1202,7 @@ impl StoreReader {
             run_meta: s.run_meta,
             obs_events: s.obs_events,
             obs_counters: s.obs_counters,
+            live: s.live,
             salvaged: false,
             #[cfg(not(unix))]
             seek_lock: std::sync::Mutex::new(()),
@@ -1168,6 +1290,7 @@ impl StoreReader {
             run_meta: s.run_meta,
             obs_events: s.obs_events,
             obs_counters: s.obs_counters,
+            live: s.live,
             salvaged: true,
             #[cfg(not(unix))]
             seek_lock: std::sync::Mutex::new(()),
@@ -1263,6 +1386,13 @@ impl StoreReader {
     /// The recording run's aggregate telemetry counters, if embedded.
     pub fn obs_counters(&self) -> Option<&ObsCounters> {
         self.obs_counters.as_ref()
+    }
+
+    /// The recording session's sealed live summary (per-step verdicts of
+    /// the streaming checker), if the run used a live layer. v4 stores
+    /// only; `None` for older files and non-live sessions.
+    pub fn live(&self) -> Option<&LiveSummary> {
+        self.live.as_ref()
     }
 
     /// Load one canonical id's shard set (positioned reads; thread-safe).

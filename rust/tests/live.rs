@@ -1,0 +1,394 @@
+//! `ttrace::live` against the acceptance bar: (a) the bounded stream
+//! queue's overflow is counted and surfaces in the verdicts — never a
+//! silent drop, never a deadlock; (b) the streaming checker's per-step
+//! verdicts agree window-for-window with the offline store check of the
+//! same run, for a clean candidate and for bug-1/bug-12 candidates;
+//! (c) a `Control::Stop` verdict halts the stop-aware runner before the
+//! final iteration; and (d) the async store sink changes *when* store I/O
+//! happens (after the ranks joined), not *what* is written — its bytes
+//! match the synchronous path.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::thread;
+use std::time::Duration;
+
+use ttrace::bugs::table1::bug_config;
+use ttrace::bugs::{BugId, BugSet};
+use ttrace::data::GenData;
+use ttrace::dist::run_spmd;
+use ttrace::model::{run_training, run_training_until, Engine, ParCfg, TINY};
+use ttrace::prelude::*;
+use ttrace::runtime::Executor;
+use ttrace::ttrace::threshold;
+
+/// A fresh per-test scratch directory (recreated on every run so stale
+/// stores from a crashed prior run can't satisfy an assertion).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("ttrace_live_{}_{}", tag, std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Record the single-device reference for `steps` iterations into a
+/// `.ttrc` store with its §5.2 estimates embedded — the file both the
+/// live layer and the offline check consume.
+fn record_reference(exec: &Executor, steps: u64, path: &Path) {
+    let p_ref = reference_of(&ParCfg::single());
+    let eps = Tolerance::default().check_cfg().eps as f32;
+    let est = threshold::estimate(&TINY, &p_ref, 2, exec, &GenData, eps,
+                                  steps)
+        .unwrap();
+    let session = Session::builder()
+        .parallelism(&p_ref)
+        .sink(Sink::store_sync(path))
+        .embed_estimate(&est.rel, est.eps as f64)
+        .build();
+    let engine = Engine::new(TINY, p_ref, 2, exec, BugSet::none()).unwrap();
+    run_training(&engine, &GenData, session.hooks(), steps);
+    session.finish().unwrap();
+}
+
+/// The iteration a canonical key belongs to (store keys are always
+/// well-formed — produced by `CanonId::key`).
+fn key_iter(key: &str) -> u64 {
+    CanonId::parse(key).expect("store keys are canonical").iter
+}
+
+/// (b) For a clean run and for the bug-1 / bug-12 candidates, every live
+/// window's failed/missing/merge counts — and its pass bit — must equal
+/// the same iteration's slice of the offline store check of the very same
+/// candidate store. The clean run must additionally stream PASS with zero
+/// overflows.
+#[test]
+fn live_step_verdicts_agree_with_the_offline_check() {
+    const STEPS: u64 = 2;
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let dir = tmp_dir("parity");
+    let ref_path = dir.join("ref.ttrc");
+    // bug-1 and bug-12 share dp=1, so one single-device reference (and one
+    // estimate) serves every scenario
+    record_reference(&exec, STEPS, &ref_path);
+
+    let scenarios: [(&str, ParCfg, BugSet); 3] = [
+        ("clean", bug_config(BugId::B12SpLnSync), BugSet::none()),
+        ("bug-1", bug_config(BugId::B1TpEmbeddingMask),
+         BugSet::one(BugId::B1TpEmbeddingMask)),
+        ("bug-12", bug_config(BugId::B12SpLnSync),
+         BugSet::one(BugId::B12SpLnSync)),
+    ];
+    for (tag, p, bugs) in scenarios {
+        let cand_path = dir.join(format!("{tag}.ttrc"));
+        let session = Session::builder()
+            .parallelism(&p)
+            .sink(Sink::store(&cand_path))
+            .live(Reference::store(&ref_path), LiveCfg::new())
+            .unwrap()
+            .build();
+        let engine = Engine::new(TINY, p, 2, &exec, bugs).unwrap();
+        run_training(&engine, &GenData, session.hooks(), STEPS);
+        let rep = session.finish().unwrap();
+        let lv = rep.live().expect("live session carries a summary").clone();
+
+        let r = StoreReader::open(&ref_path).unwrap();
+        let c = StoreReader::open(&cand_path).unwrap();
+        let off = Report::check_readers(&r, &c, &Tolerance::default())
+            .unwrap();
+        let out = off.outcome.as_ref().unwrap();
+
+        assert_eq!(lv.steps.len() as u64, STEPS, "{tag}: one verdict per \
+                    training iteration");
+        for (i, s) in lv.steps.iter().enumerate() {
+            assert_eq!(s.iter, i as u64, "{tag}: windows close in order");
+            let failed = out.checks.iter()
+                .filter(|ck| ck.id.iter == s.iter && !ck.pass)
+                .count() as u64;
+            let missing = out.missing_in_candidate.iter()
+                .filter(|k| key_iter(k) == s.iter)
+                .count() as u64;
+            let merge = out.merge_errors.iter()
+                .filter(|(k, _)| key_iter(k) == s.iter)
+                .count() as u64;
+            assert_eq!(s.failed, failed,
+                       "{tag} iter {}: live failed-count disagrees with the \
+                        offline check", s.iter);
+            assert_eq!(s.missing, missing,
+                       "{tag} iter {}: live missing-count disagrees with \
+                        the offline check", s.iter);
+            assert_eq!(s.merge_errors, merge,
+                       "{tag} iter {}: live merge-error count disagrees \
+                        with the offline check", s.iter);
+            assert_eq!(s.pass, failed == 0 && missing == 0 && merge == 0,
+                       "{tag} iter {}: live pass bit disagrees", s.iter);
+        }
+        let first_bad = lv.steps.iter().find(|s| !s.pass).map(|s| s.iter);
+        assert_eq!(lv.first_diverging, first_bad,
+                   "{tag}: first_diverging must name the first failing \
+                    window");
+        if tag == "clean" {
+            assert!(rep.passed(), "clean candidate must PASS:\n{}",
+                    rep.render(16));
+            assert!(lv.clean(), "clean run must stream PASS with zero \
+                    overflows: {lv:?}");
+            assert_eq!(lv.overflow, 0);
+        } else {
+            assert!(!out.pass, "{tag}: the offline check must detect the \
+                    bug");
+            assert!(lv.first_diverging.is_some(),
+                    "{tag}: the live layer must detect the bug too");
+        }
+    }
+}
+
+/// Delegating [`Hooks`] wrapper pacing the rank threads: a short sleep on
+/// every loss record gives the (asynchronous) streaming checker time to
+/// close each window while the run is still inside the next iteration —
+/// making the stop-before-the-end assertion deterministic on slow CI.
+struct Throttled<'a> {
+    inner: &'a dyn Hooks,
+    pause: Duration,
+}
+
+impl Hooks for Throttled<'_> {
+    fn record(&self, id: &CanonId, t: &Tensor, spec: &ShardSpec) {
+        self.inner.record(id, t, spec);
+        if id.kind == Kind::Loss {
+            thread::sleep(self.pause);
+        }
+    }
+
+    fn record_owned(&self, id: &CanonId, t: Tensor, spec: &ShardSpec) {
+        let kind = id.kind;
+        self.inner.record_owned(id, t, spec);
+        if kind == Kind::Loss {
+            thread::sleep(self.pause);
+        }
+    }
+
+    fn rewrite_input(&self, id: &CanonId, spec: &ShardSpec, t: &Tensor)
+                     -> Option<Tensor> {
+        self.inner.rewrite_input(id, spec, t)
+    }
+}
+
+/// (c) `stop_on_divergence` + the stop-aware runner: a bug-12 candidate
+/// given 6 iterations must halt early — every rank at the *same*
+/// iteration (the stop bit is agreed collectively), strictly before the
+/// final one — and the summary must pin the stop to the first diverging
+/// step.
+#[test]
+fn stop_callback_halts_before_the_final_iteration() {
+    const STEPS: u64 = 6;
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let dir = tmp_dir("stop");
+    let ref_path = dir.join("ref.ttrc");
+    record_reference(&exec, STEPS, &ref_path);
+
+    let bug = BugId::B12SpLnSync;
+    let p = bug_config(bug);
+    let session = Session::builder()
+        .parallelism(&p)
+        .sink(Sink::Async)
+        .live(Reference::store(&ref_path),
+              LiveCfg::new().stop_on_divergence())
+        .unwrap()
+        .build();
+    let engine = Engine::new(TINY, p, 2, &exec, BugSet::one(bug)).unwrap();
+    let stop = session.stop_flag();
+    let throttled = Throttled {
+        inner: session.hooks(),
+        pause: Duration::from_millis(15),
+    };
+    let losses = run_training_until(&engine, &GenData, &throttled, STEPS,
+                                    &stop);
+
+    assert!(stop.load(std::sync::atomic::Ordering::SeqCst),
+            "the live checker must raise the stop flag on divergence");
+    let done = losses[0].len() as u64;
+    assert!(done < STEPS,
+            "the run must halt before the final iteration (completed all \
+             {STEPS})");
+    assert!(done >= 1, "iteration 0 completes before its window can close");
+    for (rank, l) in losses.iter().enumerate() {
+        assert_eq!(l.len() as u64, done,
+                   "rank {rank} stopped at a different iteration — the \
+                    stop bit was not agreed collectively");
+    }
+
+    let rep = session.finish().unwrap();
+    let lv = rep.live().expect("live summary").clone();
+    assert!(lv.first_diverging.is_some(), "bug-12 must diverge");
+    assert_eq!(lv.stopped_at, lv.first_diverging,
+               "the stop must land on the first diverging step: {lv:?}");
+    assert!(lv.stopped_at.unwrap() < done,
+            "the stop was raised while a later iteration was in flight");
+}
+
+/// Deterministic synthetic tensor for the hand-rolled stream tests — a
+/// pure function of (iteration, site), so candidate and reference record
+/// identical values and only *dropped* entries can fail a window.
+fn wave(it: u64, k: usize) -> Tensor {
+    let data: Vec<f32> = (0..64)
+        .map(|i| (it as f32 + k as f32 * 0.5 + i as f32 * 0.25).sin())
+        .collect();
+    Tensor::new(&[64], data, DType::F32)
+}
+
+/// Record `iters` x `ids` activation entries through the session's tracer
+/// on a single SPMD rank.
+fn stream_trace(session: &Session, iters: u64, ids: usize) {
+    run_spmd(Topology::single(), |_ctx| {
+        let tr = session.tracer();
+        for it in 0..iters {
+            tr.step(it);
+            tr.micro(0);
+            for k in 0..ids {
+                let t = wave(it, k);
+                tr.act(&format!("m{k}"), &t, &ShardSpec::full(&t.dims));
+            }
+        }
+    });
+}
+
+/// An in-memory reference trace with the same synthetic schedule.
+fn stream_reference(iters: u64, ids: usize) -> Trace {
+    let session = Session::builder().build();
+    stream_trace(&session, iters, ids);
+    session.finish().unwrap().trace.expect("memory sink keeps the trace")
+}
+
+/// (a) `DropNewest` against a 4-deep queue and a deliberately slow
+/// verdict callback (the callback runs on the sink worker, so the queue
+/// backs up while it sleeps): drops must be counted in `overflow` AND
+/// surface as missing ids in the window verdicts — and the run must
+/// complete (enqueue never deadlocks on a full queue).
+#[test]
+fn dropnewest_overflow_is_counted_never_silent() {
+    const ITERS: u64 = 3;
+    const IDS: usize = 32;
+    let reference = stream_reference(ITERS, IDS);
+    let session = Session::builder()
+        .sink(Sink::Async)
+        .live(Reference::trace(reference),
+              LiveCfg::new()
+                  .queue(4, OverflowPolicy::DropNewest)
+                  .on_verdict(|_| {
+                      thread::sleep(Duration::from_millis(120));
+                      Control::Continue
+                  }))
+        .unwrap()
+        .build();
+    stream_trace(&session, ITERS, IDS);
+    let rep = session.finish().unwrap();
+    let lv = rep.live().expect("live summary").clone();
+
+    assert!(lv.overflow > 0,
+            "a 4-deep queue against a sleeping worker must overflow: \
+             {lv:?}");
+    let missing: u64 = lv.steps.iter().map(|s| s.missing).sum();
+    assert!(missing > 0,
+            "dropped entries must surface as missing ids, not vanish: \
+             {lv:?}");
+    assert!(!lv.clean(), "an overflowing run is not clean");
+    assert_eq!(lv.steps.len() as u64, ITERS,
+               "every window still gets a verdict");
+}
+
+/// (a) companion: `Block` under the same pressure loses nothing — the
+/// producer stalls (counted) instead of dropping, every window compares
+/// all of its ids, and the close handshake still terminates (no
+/// deadlock).
+#[test]
+fn block_policy_stalls_but_never_drops() {
+    const ITERS: u64 = 3;
+    const IDS: usize = 32;
+    let reference = stream_reference(ITERS, IDS);
+    let session = Session::builder()
+        .sink(Sink::Async)
+        .live(Reference::trace(reference),
+              LiveCfg::new()
+                  .queue(2, OverflowPolicy::Block)
+                  .on_verdict(|_| {
+                      thread::sleep(Duration::from_millis(30));
+                      Control::Continue
+                  }))
+        .unwrap()
+        .build();
+    stream_trace(&session, ITERS, IDS);
+    let rep = session.finish().unwrap();
+    let lv = rep.live().expect("live summary").clone();
+
+    assert_eq!(lv.overflow, 0, "Block never sheds entries: {lv:?}");
+    assert!(lv.stalls > 0,
+            "a 2-deep queue against a sleeping worker must stall the \
+             producer: {lv:?}");
+    assert_eq!(lv.steps.len() as u64, ITERS);
+    for s in &lv.steps {
+        assert!(s.pass && s.missing == 0,
+                "identical values + lossless queue: every window passes \
+                 whole: {s:?}");
+        assert_eq!(s.checks, IDS as u64,
+                   "every reference id of the window was compared: {s:?}");
+    }
+    assert!(lv.clean());
+}
+
+/// (d) The async store path moves the I/O off the rank threads without
+/// changing a byte: the same deterministic run recorded through
+/// `Sink::store` and `Sink::store_sync` produces identical `.ttrc` files.
+#[test]
+fn async_store_bytes_match_the_sync_store() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let dir = tmp_dir("bytes");
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+
+    let mut paths = Vec::new();
+    for (name, sink) in [("async.ttrc", Sink::store(dir.join("async.ttrc"))),
+                         ("sync.ttrc",
+                          Sink::store_sync(dir.join("sync.ttrc")))] {
+        let session = Session::builder()
+            .parallelism(&p)
+            .sink(sink)
+            .build();
+        let engine = Engine::new(TINY, p.clone(), 2, &exec,
+                                 BugSet::none()).unwrap();
+        run_training(&engine, &GenData, session.hooks(), 1);
+        session.finish().unwrap();
+        paths.push(dir.join(name));
+    }
+    let a = fs::read(&paths[0]).unwrap();
+    let b = fs::read(&paths[1]).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "async and sync stores must be byte-identical");
+}
+
+/// The async sink's point: rank join is independent of store I/O. With
+/// `Sink::store` not a byte touches disk while ranks run or join — the
+/// `.ttrc` only materializes inside `finish` — so join time cannot scale
+/// with store size.
+#[test]
+fn rank_join_never_waits_on_store_io() {
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let dir = tmp_dir("join");
+    let path = dir.join("cand.ttrc");
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+
+    let session = Session::builder()
+        .parallelism(&p)
+        .sink(Sink::store(&path))
+        .build();
+    let engine = Engine::new(TINY, p, 2, &exec, BugSet::none()).unwrap();
+    run_training(&engine, &GenData, session.hooks(), 1);
+    // every rank has joined; the store write has not begun
+    assert!(!path.exists(),
+            "store I/O leaked into the rank/join phase of an async sink");
+    let rep = session.finish().unwrap();
+    assert!(path.exists(), "finish writes and seals the store");
+    let (_, summary) = rep.store.as_ref().expect("store sink persists");
+    assert!(summary.shards > 0);
+    StoreReader::open(&path).expect("the sealed store opens clean");
+}
