@@ -12,7 +12,7 @@ PYTHON ?= python
 BENCHES = table1_bugs fig1_loss_curves fig7_thresholds fig8_bug_vs_fp \
           fig9_fp8 ablation_thresholds overhead_naive_vs_ttrace \
           theorem_bounds offline_check diagnose api_overhead lint faults \
-          obs_overhead live
+          obs_overhead live mesh
 
 .PHONY: verify test bench-smoke artifacts clean-artifacts
 

@@ -1,0 +1,140 @@
+//! `ttrace::mesh` bench: (1) segment-record overhead — recording one
+//! process' rank slice (full-topology deterministic replay, partial
+//! persist) vs the whole-world store; (2) merge throughput —
+//! `merge_segments` unioning the per-process stores back into one
+//! byte-identical whole; (3) push throughput — the framed, ack'd TCP
+//! agent→collector transfer over loopback. `BENCH_SMOKE=1` shrinks the
+//! repeat count; wired into `make bench-smoke`.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use ttrace::bugs::BugSet;
+use ttrace::data::GenData;
+use ttrace::model::{run_training, Engine, ParCfg, TINY};
+use ttrace::prelude::*;
+use ttrace::runtime::Executor;
+use ttrace::ttrace::mesh::rank_range;
+use ttrace::util::bench::{fmt_s, smoke_or, BenchJson, Table};
+
+const STEPS: u64 = 4;
+const PROCS: u32 = 2;
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Record `STEPS` iterations into `out`, optionally as one process'
+/// segment; returns the wall time of the record+seal.
+fn record(p: &ParCfg, engine: &Engine, out: PathBuf,
+          seg: Option<SegmentInfo>) -> f64 {
+    let mut b = Session::builder()
+        .parallelism(p)
+        .sink(Sink::store(out))
+        .diagnose(false);
+    if let Some(s) = seg {
+        b = b.segment(s);
+    }
+    let session = b.build();
+    let t = Instant::now();
+    run_training(engine, &GenData, session.hooks(), STEPS);
+    session.finish().unwrap();
+    t.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let reps = smoke_or(8, 2);
+    let exec = Executor::load(ttrace::default_artifacts_dir()).unwrap();
+    let mut bj = BenchJson::new("mesh");
+    let dir = std::env::temp_dir()
+        .join(format!("ttrace_mesh_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut p = ParCfg::single();
+    p.topo = Topology::new(1, 2, 1, 1, 1).unwrap();
+    let engine = Engine::new(TINY, p.clone(), 2, &exec,
+                             BugSet::none()).unwrap();
+    let world = p.topo.world();
+
+    // -- 1. record overhead: whole-world vs one segment ----------------
+    eprintln!("mesh: record whole vs segment, {reps} reps ...");
+    let (mut rec_whole, mut rec_seg) = (Vec::new(), Vec::new());
+    let whole = dir.join("whole.ttrc");
+    let segs: Vec<PathBuf> = (0..PROCS)
+        .map(|k| dir.join(format!("seg{k}.ttrc")))
+        .collect();
+    for _ in 0..reps {
+        rec_whole.push(record(&p, &engine, whole.clone(), None));
+        let mut dt = 0.0;
+        for k in 0..PROCS {
+            let seg = SegmentInfo {
+                proc_id: k,
+                proc_count: PROCS,
+                ranks: rank_range(world, k, PROCS).unwrap(),
+            };
+            dt = dt.max(record(&p, &engine, segs[k as usize].clone(),
+                               Some(seg)));
+        }
+        // the processes run concurrently in deployment: cost = slowest
+        rec_seg.push(dt);
+    }
+    bj.stage("record_whole", mean(&rec_whole));
+    bj.stage("record_segment", mean(&rec_seg));
+
+    let seg_bytes: u64 = segs.iter()
+        .map(|s| std::fs::metadata(s).unwrap().len())
+        .sum();
+
+    // -- 2. merge throughput -------------------------------------------
+    eprintln!("mesh: merge {PROCS} segments, {reps} reps ...");
+    let merged = dir.join("merged.ttrc");
+    let mut merge_t = Vec::new();
+    for _ in 0..reps {
+        let t = Instant::now();
+        merge_segments(&segs, &merged).unwrap();
+        merge_t.push(t.elapsed().as_secs_f64());
+    }
+    assert_eq!(std::fs::read(&whole).unwrap(),
+               std::fs::read(&merged).unwrap(),
+               "merged store must be byte-identical to the whole-world \
+                recording");
+    bj.stage("merge", mean(&merge_t));
+
+    // -- 3. push throughput over loopback ------------------------------
+    eprintln!("mesh: push {PROCS} segments over TCP, {reps} reps ...");
+    let mut push_t = Vec::new();
+    for rep in 0..reps {
+        let spool = dir.join(format!("spool{rep}"));
+        let collector =
+            SegmentCollector::bind("127.0.0.1:0", PROCS, &spool).unwrap();
+        let addr = collector.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            collector.serve_until_complete(Some(Duration::from_secs(60)))
+        });
+        let t = Instant::now();
+        for s in &segs {
+            push_segment(&addr, s, 3).unwrap();
+        }
+        server.join().unwrap().unwrap();
+        push_t.push(t.elapsed().as_secs_f64());
+    }
+    bj.stage("push", mean(&push_t));
+
+    let mbps = |dt: f64| seg_bytes as f64 / dt / 1e6;
+    let mut t = Table::new(&["measure", "mean"]);
+    t.row(&["record: whole-world store".into(), fmt_s(mean(&rec_whole))]);
+    t.row(&["record: one segment (slowest proc)".into(),
+            fmt_s(mean(&rec_seg))]);
+    t.row(&["merge: segments -> whole".into(), fmt_s(mean(&merge_t))]);
+    t.row(&["push: agent -> collector (loopback)".into(),
+            fmt_s(mean(&push_t))]);
+    t.print();
+    t.write_csv("results/mesh.csv").unwrap();
+
+    println!("\nsegment record costs {:.2}x a whole-world record; merge \
+              moves {:.1} MB/s, the wire {:.1} MB/s over loopback \
+              ({} segment bytes)",
+             mean(&rec_seg) / mean(&rec_whole),
+             mbps(mean(&merge_t)), mbps(mean(&push_t)), seg_bytes);
+    bj.write().unwrap();
+}

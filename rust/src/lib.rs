@@ -56,11 +56,13 @@ pub mod prelude {
                                   MonitorClient, MonitorHandle,
                                   OverflowPolicy, StepVerdict,
                                   VerdictCallback};
+    pub use crate::ttrace::mesh::{merge_segments, push_segment,
+                                  SegmentCollector, SegmentSet};
     pub use crate::ttrace::obs::{CommInfo, ObsCounters, ObsEvent, Telemetry,
                                  Timeline};
     pub use crate::ttrace::shard::ShardSpec;
-    pub use crate::ttrace::store::{SalvageInfo, StoreReader, StoreSummary,
-                                   StoreWriter};
+    pub use crate::ttrace::store::{SalvageInfo, SegmentInfo, StoreReader,
+                                   StoreSummary, StoreWriter};
     pub use crate::ttrace::{localized_module, reference_of, ttrace_check,
                             TtraceRun};
 }

@@ -30,6 +30,14 @@
 //!                  aggregates per-step status pushed by `record --live
 //!                  --monitor` sessions and exposes `/status` (JSON) and
 //!                  `/metrics` (Prometheus text exposition) over HTTP
+//!   collect        run the central segment collector (`ttrace::mesh`):
+//!                  accept `record --segment --push` pushes over TCP,
+//!                  spool each process' segment, and merge them into one
+//!                  whole-world store when the run is complete —
+//!                  optionally check-offline against a reference
+//!   estimate       §5.2 threshold estimation from three recorded stores
+//!                  (reference run, identical rerun, `--perturb` run):
+//!                  writes a reference store with the estimates embedded
 //!   train          run training and print the loss curve
 //!   bugs           list the 14 reproducible Table-1 bugs
 //!
@@ -41,10 +49,17 @@
 //!   ttrace record --tp 2 --telemetry --out cand.ttrc
 //!   ttrace record --dp 2 --out torn.ttrc --checkpoint-every 8 \
 //!                 --fault 'crash@1:0/0/layers.1'
-//!   ttrace serve --addr 127.0.0.1:9090
+//!   ttrace serve --addr 127.0.0.1:9090 --max-runs 64 --ttl-secs 86400
 //!   ttrace record --tp 2 --bug 12 --sp --steps 4 --out cand.ttrc \
 //!                 --live ref.ttrc --monitor 127.0.0.1:9090 \
 //!                 --stop-on-divergence
+//!   ttrace collect --world 2 --spool spool/ --out merged.ttrc \
+//!                  --reference ref.ttrc
+//!   ttrace record --tp 2 --segment --proc-id 0/2 \
+//!                 --push 127.0.0.1:9191 --out seg0.ttrc
+//!   ttrace record --out base.ttrc && ttrace record --out rerun.ttrc
+//!   ttrace record --perturb 0.0078 --out pert.ttrc
+//!   ttrace estimate base.ttrc rerun.ttrc pert.ttrc --out ref_est.ttrc
 //!   ttrace check-offline ref.ttrc cand.ttrc
 //!   ttrace check-offline ref.ttrc torn.ttrc --salvage
 //!   ttrace diagnose ref.ttrc cand.ttrc
@@ -69,16 +84,18 @@ use ttrace::data::{CorpusData, DataSource, GenData};
 use ttrace::dist::Topology;
 use ttrace::model::{mean_losses, preset, run_training, run_training_until,
                     try_run_training, try_run_training_until, Engine, ParCfg};
-use ttrace::prelude::{localized_module, reference_of, ttrace_check, CheckCfg,
-                      FaultPlan, NoopHooks, RankFailure, Report, Session,
-                      Sink, SpmdOpts, StoreReader, Telemetry, Timeline,
-                      Tolerance};
+use ttrace::prelude::{localized_module, merge_segments, reference_of,
+                      ttrace_check, CheckCfg, FaultPlan, NoopHooks,
+                      RankFailure, Report, SegmentCollector, SegmentInfo,
+                      Session, Sink, SpmdOpts, StoreReader, StoreWriter,
+                      Telemetry, Timeline, Tolerance, Trace, TraceMode};
 use ttrace::runtime::Executor;
 use ttrace::ttrace::analyze::{self, diff_schema, findings_json,
                               render_findings, ExpectedSchema,
                               ObservedSchema};
-use ttrace::ttrace::store::{layout_of, Encoding};
-use ttrace::ttrace::{report, threshold};
+use ttrace::ttrace::live::warn_if_nonloopback;
+use ttrace::ttrace::store::{layout_of, write_trace, Encoding};
+use ttrace::ttrace::{mesh, report, threshold};
 use ttrace::util::bench::{fmt_bytes, fmt_s, time_once};
 use ttrace::util::cli::Cli;
 
@@ -94,12 +111,14 @@ fn main() {
         Some("inspect") => run(inspect(&argv[1..])),
         Some("lint") => run(lint(&argv[1..])),
         Some("serve") => run(serve(&argv[1..])),
+        Some("collect") => run(collect(&argv[1..])),
+        Some("estimate") => run(estimate_cmd(&argv[1..])),
         Some("train") => run(train(&argv[1..])),
         Some("bugs") => run(bugs()),
         _ => {
             eprintln!("usage: ttrace <check|record|check-offline|diagnose|\
-                       check-hang|timeline|inspect|lint|serve|train|bugs> \
-                       [options]\n\
+                       check-hang|timeline|inspect|lint|serve|collect|\
+                       estimate|train|bugs> [options]\n\
                        run `ttrace check --help` etc. for details");
             2
         }
@@ -256,6 +275,22 @@ fn record(argv: &[String]) -> Result<i32> {
                             `ttrace timeline`. Off by default because the \
                             wall-clock stamps make the store bytes vary run \
                             to run")
+        .flag("segment", "record this process' share of a multi-process run \
+                          (ttrace::mesh): the store carries a segment header \
+                          and persists only the ranks --proc-id assigns to \
+                          this process — merge with `ttrace collect` or \
+                          `merge_segments`")
+        .opt("proc-id", "", "with --segment: which process this is, as K/N \
+                             (process K of N); the world's ranks are split \
+                             into N contiguous partitions")
+        .opt("push", "", "with --segment: after sealing the store, push it \
+                          to the `ttrace collect` endpoint at this host:port \
+                          (checksummed, resumable frames)")
+        .opt("push-attempts", "5", "connection attempts for --push \
+                                    (exponential backoff between attempts)")
+        .opt("perturb", "0", "record under the §5.2 input perturbation at \
+                              this relative magnitude (0 = off) — the third \
+                              run of the `ttrace estimate` recipe")
         .flag("reference", "record this config's single-device reference and \
                             embed per-tensor threshold estimates");
     let args = cli.parse_from(argv)?;
@@ -303,10 +338,46 @@ fn record(argv: &[String]) -> Result<i32> {
         Some(Arc::new(FaultPlan::parse(fault_spec)?))
     };
     let tel = args.flag("telemetry").then(Telemetry::new);
+    let push_addr = args.get("push").to_string();
+    let segment = if args.flag("segment") {
+        let spec = args.get("proc-id");
+        if spec.is_empty() {
+            bail!("--segment needs --proc-id K/N (which process of the \
+                   world this one is)");
+        }
+        if !json_path.is_empty() {
+            bail!("--segment records a per-process partial store; drop \
+                   --json (dump the merged store instead)");
+        }
+        let (proc_id, proc_count) = parse_proc_id(spec)?;
+        let ranks = mesh::rank_range(p.topo.world(), proc_id, proc_count)?;
+        Some(SegmentInfo { proc_id, proc_count, ranks })
+    } else {
+        if !push_addr.is_empty() {
+            bail!("--push streams a segment store; add --segment \
+                   --proc-id K/N");
+        }
+        None
+    };
     let mut builder = Session::builder().parallelism(&p)
         .checkpoint_every(args.get_usize("checkpoint-every")?)
         .sink(if json_path.is_empty() { Sink::Store(out.clone()) }
               else { Sink::Tee(out.clone()) });
+    if let Some(seg) = &segment {
+        builder = builder.segment(seg.clone());
+    }
+    let perturb = args.get_f64("perturb")?;
+    if perturb > 0.0 {
+        if is_ref {
+            bail!("--perturb records the estimation recipe's third run; \
+                   drop --reference (`ttrace estimate` builds the reference \
+                   store from the three runs)");
+        }
+        builder = builder.mode(TraceMode::Perturb {
+            modules: threshold::input_modules(),
+            eps: perturb as f32,
+        });
+    }
     if let Some(est) = &est {
         builder = builder.embed_estimate(&est.rel, cfg.eps);
     }
@@ -388,6 +459,11 @@ fn record(argv: &[String]) -> Result<i32> {
              p.topo.describe(), summary.ids, summary.shards,
              fmt_bytes(summary.payload_bytes), fmt_bytes(summary.file_bytes),
              fmt_s(dt));
+    if let Some(seg) = &segment {
+        println!("segment: process {}/{} holding rank(s) {:?} of the \
+                  {}-rank world", seg.proc_id, seg.proc_count, seg.ranks,
+                 p.topo.world());
+    }
     if let Some((events, counters)) = &rep.obs {
         println!("telemetry: {} events sealed into the store ({} trace \
                   entries, {} comm ops, {} dropped) — `ttrace timeline {}`",
@@ -443,7 +519,26 @@ fn record(argv: &[String]) -> Result<i32> {
             return Ok(1);
         }
     }
+    if !push_addr.is_empty() {
+        let attempts = args.get_usize("push-attempts")?;
+        let (res, dt) = time_once(|| mesh::push_segment(&push_addr, &out,
+                                                        attempts));
+        res?;
+        println!("pushed {} to collector {} ({})", out.display(), push_addr,
+                 fmt_s(dt));
+    }
     Ok(if live_failed { 1 } else { 0 })
+}
+
+/// Parse `--proc-id K/N` (process K of N, 0-based).
+fn parse_proc_id(spec: &str) -> Result<(u32, u32)> {
+    let parse = || -> Option<(u32, u32)> {
+        let (k, n) = spec.split_once('/')?;
+        Some((k.trim().parse().ok()?, n.trim().parse().ok()?))
+    };
+    parse().ok_or_else(|| anyhow::anyhow!(
+        "--proc-id must be K/N (e.g. 0/2 for the first of two recording \
+         processes), got '{spec}'"))
 }
 
 /// Shared head of the two-store subcommands (`check-offline`, `diagnose`):
@@ -949,9 +1044,23 @@ fn serve(argv: &[String]) -> Result<i32> {
                         /metrics (Prometheus) plus the session event \
                         endpoint, all on one port")
         .opt("addr", "127.0.0.1:9090", "listen address (host:port; port 0 \
-                                        picks an ephemeral port)");
+                                        picks an ephemeral port). The \
+                                        default stays on loopback — the \
+                                        endpoint is unauthenticated, so \
+                                        binding wider is an explicit, \
+                                        warned-about choice")
+        .opt("max-runs", "0", "retain at most this many runs, evicting the \
+                               least recently updated first (0 = unbounded); \
+                               evictions surface on /metrics as \
+                               ttrace_evicted_runs_total")
+        .opt("ttl-secs", "0", "drop a run this long after its last event \
+                               (0 = never)");
     let args = cli.parse_from(argv)?;
-    let mon = ttrace::prelude::Monitor::bind(args.get("addr"))?;
+    warn_if_nonloopback(args.get("addr"));
+    let ttl = args.get_usize("ttl-secs")?;
+    let mon = ttrace::prelude::Monitor::bind(args.get("addr"))?
+        .retention(args.get_usize("max-runs")?,
+                   (ttl > 0).then(|| Duration::from_secs(ttl as u64)));
     let addr = mon.local_addr();
     println!("ttrace serve: listening on {addr}");
     println!("  GET http://{addr}/status   per-run state as JSON");
@@ -960,6 +1069,132 @@ fn serve(argv: &[String]) -> Result<i32> {
               --monitor {addr} ...`");
     mon.serve_forever()?;
     Ok(0)
+}
+
+/// The central segment collector (`ttrace::mesh`): spool `record --segment
+/// --push` pushes until every process of the world has sealed its segment,
+/// then merge them into one whole-world store — and, with `--reference`,
+/// run the same differential check `check-offline` would, from one command.
+fn collect(argv: &[String]) -> Result<i32> {
+    let cli = Cli::new("run the segment collector: accept `record --segment \
+                        --push` pushes over TCP, spool each process' \
+                        segment, merge into one whole-world .ttrc when the \
+                        run is complete, and optionally check it against a \
+                        reference store")
+        .opt("addr", "127.0.0.1:9191", "listen address (host:port; port 0 \
+                                        picks an ephemeral port). Loopback \
+                                        by default — the push protocol is \
+                                        unauthenticated")
+        .req("world", "recording processes to wait for (the N of their \
+                       --proc-id K/N)")
+        .opt("spool", "", "spool dir for incoming segments (default: \
+                           <out>.spool); sealed segments already there \
+                           count, so a restarted collector resumes")
+        .opt("out", "merged.ttrc", "write the merged whole-world store here")
+        .opt("reference", "", "after merging, differentially check the \
+                               merged store against this reference .ttrc \
+                               (the exit code becomes the check's)")
+        .opt("timeout-secs", "0", "give up waiting after this many seconds, \
+                                   naming the processes still missing \
+                                   (0 = wait forever)")
+        .opt("safety", "8", "threshold safety multiplier for --reference")
+        .opt("rows", "32", "max report rows for --reference");
+    let args = cli.parse_from(argv)?;
+    let addr = args.get("addr");
+    warn_if_nonloopback(addr);
+    let world = args.get_usize("world")? as u32;
+    let out = std::path::PathBuf::from(args.get("out"));
+    let spool = if args.get("spool").is_empty() {
+        out.with_extension("ttrc.spool")
+    } else {
+        std::path::PathBuf::from(args.get("spool"))
+    };
+    let col = SegmentCollector::bind(addr, world, &spool)?;
+    let local = col.local_addr()?;
+    println!("ttrace collect: listening on {local}, spooling {world} \
+              segment(s) into {}", spool.display());
+    println!("  recorders push with `ttrace record --segment \
+              --proc-id K/{world} --push {local} ...`");
+    let timeout = args.get_usize("timeout-secs")?;
+    let (res, dt) = time_once(|| col.serve_until_complete(
+        (timeout > 0).then(|| Duration::from_secs(timeout as u64))));
+    let paths = res?;
+    let summary = merge_segments(&paths, &out)?;
+    println!("merged {} segment(s) into {}: {} ids / {} shards, {} payload, \
+              {} file ({})",
+             paths.len(), out.display(), summary.ids, summary.shards,
+             fmt_bytes(summary.payload_bytes), fmt_bytes(summary.file_bytes),
+             fmt_s(dt));
+    let ref_path = args.get("reference");
+    if ref_path.is_empty() {
+        return Ok(0);
+    }
+    let reference = StoreReader::open(Path::new(ref_path))?;
+    let candidate = StoreReader::open(&out)?;
+    let tolerance = Tolerance::new().safety(args.get_f64("safety")?);
+    let rep = Report::check_readers(&reference, &candidate, &tolerance)?;
+    println!("{}", rep.render(args.get_usize("rows")?));
+    Ok(rep.exit_code())
+}
+
+/// §5.2 threshold estimation for externally recorded runs: per id, the
+/// larger of the perturbation response (base vs perturbed) and the rerun
+/// noise floor (base vs rerun — zero for a bit-deterministic trainer).
+/// Writes base's trace with the estimates and run meta embedded, so the
+/// output is a drop-in `check-offline` / `collect --reference` store.
+fn estimate_cmd(argv: &[String]) -> Result<i32> {
+    let cli = Cli::new("derive §5.2 per-tensor threshold estimates from \
+                        three recorded stores and write a reference store \
+                        with the estimates embedded")
+        .pos("base.ttrc", "the reference run")
+        .pos("rerun.ttrc", "a second, identically configured reference run")
+        .pos("perturbed.ttrc", "the same config recorded with \
+                                `record --perturb EPS`")
+        .opt("eps", "0", "machine epsilon the check thresholds are derived \
+                          at (0 = the bf16 default; use the --perturb \
+                          magnitude of the third run)")
+        .req("out", "write base's trace + estimates + run meta here");
+    let args = cli.parse_from(argv)?;
+    let base = StoreReader::open(Path::new(args.pos(0)))?;
+    let rerun = StoreReader::open(Path::new(args.pos(1)))?;
+    let perturbed = StoreReader::open(Path::new(args.pos(2)))?;
+    let base_trace = store_trace(&base)?;
+    let rel = Session::estimate_thresholds(&base_trace,
+                                           &store_trace(&rerun)?,
+                                           &store_trace(&perturbed)?)?;
+    let eps = match args.get_f64("eps")? {
+        e if e > 0.0 => e,
+        _ => CheckCfg::default().eps,
+    };
+    let out = args.get("out");
+    let mut w = StoreWriter::create(Path::new(out))?;
+    w.set_estimate(&rel, eps);
+    if let Some(meta) = base.run_meta() {
+        w.set_run_meta(meta);
+    }
+    write_trace(&base_trace, &mut w)?;
+    let summary = w.finish()?;
+    println!("estimated thresholds for {} tensor(s) at eps {eps:.3e}; \
+              wrote reference store {out}: {} ids / {} shards, {} file",
+             rel.len(), summary.ids, summary.shards,
+             fmt_bytes(summary.file_bytes));
+    let mut worst: Vec<(&String, &f64)> = rel.iter().collect();
+    worst.sort_by(|a, b| b.1.total_cmp(a.1));
+    for (k, v) in worst.iter().take(5) {
+        println!("  {k:<52} {v:.3e}");
+    }
+    Ok(0)
+}
+
+/// Materialize a whole store as an in-memory trace (the estimate recipe
+/// compares full traces, not stores).
+fn store_trace(reader: &StoreReader) -> Result<Trace> {
+    let mut t = Trace::default();
+    for key in reader.keys() {
+        t.entries.insert(key.clone(), reader.read_entries(key)?
+            .expect("key came from the store index"));
+    }
+    Ok(t)
 }
 
 fn train(argv: &[String]) -> Result<i32> {

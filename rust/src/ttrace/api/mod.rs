@@ -70,7 +70,8 @@ use super::live::sink::{self as live_sink, LiveParts, SinkHandle, StoreLayout,
                         StoreTarget, WorkerCfg};
 use super::live::{LiveCfg, LiveSummary, OverflowPolicy};
 use super::obs::{EvKind, ObsCounters, ObsEvent, Telemetry};
-use super::store::{write_trace, StoreReader, StoreWriter};
+use super::store::{write_trace, SegmentInfo, StoreReader, StoreWriter};
+use super::threshold::trace_rel;
 
 /// The tolerance policy of a differential check: how far past the
 /// estimated FP round-off a tensor may land before it is flagged. A thin
@@ -247,6 +248,7 @@ pub struct SessionBuilder {
     checkpoint_every: usize,
     telemetry: Option<Telemetry>,
     live: Option<LiveSetup>,
+    segment: Option<SegmentInfo>,
 }
 
 impl SessionBuilder {
@@ -264,6 +266,7 @@ impl SessionBuilder {
             checkpoint_every: 0,
             telemetry: None,
             live: None,
+            segment: None,
         }
     }
 
@@ -386,6 +389,20 @@ impl SessionBuilder {
         self
     }
 
+    /// Record this session as one *segment* of a multi-process run
+    /// (`ttrace::mesh`): the store this session writes carries a segment
+    /// header naming the process and persists only the payloads of
+    /// `seg.ranks` — push it to a `ttrace collect` endpoint (or
+    /// `merge_segments` by hand) to reassemble the whole-world store.
+    /// The deterministic replay still runs every rank, so the persisted
+    /// bytes of each owned rank are identical to a whole-world
+    /// recording's. Only meaningful with [`Sink::Store`] /
+    /// [`Sink::StoreSync`] (the per-rank-segment store layouts).
+    pub fn segment(mut self, seg: SegmentInfo) -> SessionBuilder {
+        self.segment = Some(seg);
+        self
+    }
+
     /// Arm the live layer: a streaming checker on the async sink worker
     /// compares entries against `reference` *during* the run and emits a
     /// per-step [`StepVerdict`](super::live::StepVerdict) as each
@@ -434,7 +451,11 @@ impl SessionBuilder {
         // stream worker; `Memory` and `StoreSync` without a live layer stay
         // fully synchronous (the determinism tests pin the Memory path).
         let streamed = self.live.is_some()
-            || matches!(self.sink, Sink::Store(_) | Sink::Tee(_) | Sink::Async);
+            || matches!(self.sink, Sink::Store(_) | Sink::Tee(_) | Sink::Async)
+            // segment recording filters ranks at the store write, which
+            // lives on the stream worker — route StoreSync through it too
+            || (self.segment.is_some()
+                && matches!(self.sink, Sink::StoreSync(_)));
         let mut async_sink = None;
         if streamed {
             let (cap, policy) = match &self.live {
@@ -476,6 +497,7 @@ impl SessionBuilder {
                 checkpoint_every: self.checkpoint_every,
                 estimate: self.embed.clone(),
                 meta: self.meta.clone(),
+                segment: self.segment.clone(),
             });
             let keep_trace = matches!(self.sink, Sink::Memory | Sink::Tee(_));
             collector = collector.with_stream(tx.clone());
@@ -632,6 +654,29 @@ impl Session {
                 }
             }
         }
+    }
+
+    /// The §5.2 threshold-estimation procedure for external trainers, from
+    /// three recorded reference traces: the reference run as-is, a second
+    /// identical run, and a run with [`TraceMode::Perturb`] applied to the
+    /// model inputs. The estimate for each id is the larger of the
+    /// perturbation response (how FP-level input noise amplifies with
+    /// depth — the paper's estimator) and the plain rerun difference (the
+    /// trainer's own determinism/noise floor, zero for a bit-deterministic
+    /// trainer). Embed the result with [`SessionBuilder::embed_estimate`]
+    /// — or `ttrace estimate`, which writes the merged reference store
+    /// directly — so `check-offline` needs no internals.
+    pub fn estimate_thresholds(reference: &Trace, rerun: &Trace,
+                               perturbed: &Trace)
+                               -> Result<HashMap<String, f64>> {
+        let mut rel = trace_rel(reference, perturbed)?;
+        for (key, noise) in trace_rel(reference, rerun)? {
+            let slot = rel.entry(key).or_insert(0.0);
+            if noise > *slot {
+                *slot = noise;
+            }
+        }
+        Ok(rel)
     }
 
     /// Finish the reference `Session` (which must use an in-memory sink),

@@ -21,7 +21,7 @@ use super::shardmap::{self, Dim, IdReport};
 /// The parallel layout + feature flags of the run that produced a trace —
 /// what turns per-shard rank tags into grid coordinates. Embedded in
 /// `.ttrc` stores by `ttrace record`; built from the `ParCfg` in-process.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RunMeta {
     pub topo: Topology,
     pub sp: bool,

@@ -41,7 +41,7 @@ pub mod serve;
 pub mod sink;
 
 pub use checker::LiveChecker;
-pub use serve::{Monitor, MonitorClient, MonitorHandle};
+pub use serve::{warn_if_nonloopback, Monitor, MonitorClient, MonitorHandle};
 pub use sink::OverflowPolicy;
 
 /// What a [`VerdictCallback`] tells the run to do after a step's verdict.

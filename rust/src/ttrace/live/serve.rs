@@ -16,18 +16,22 @@
 //!
 //! The daemon holds no per-run history beyond the compact [`RunState`];
 //! sessions are additive and independent, so one daemon serves a whole
-//! cluster of concurrent candidate runs.
+//! cluster of concurrent candidate runs. Long-lived daemons bound their
+//! memory with [`Monitor::retention`]: an LRU cap on tracked runs plus an
+//! optional idle TTL, with evictions counted on `/metrics`
+//! (`ttrace_evicted_runs_total`).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::ttrace::mesh::Backoff;
 use crate::util::json::Json;
 
 /// Compact live state of one monitored run.
@@ -160,7 +164,66 @@ impl RunState {
     }
 }
 
-type State = Arc<Mutex<BTreeMap<String, RunState>>>;
+/// The daemon's run registry plus its retention policy. Each tracked run
+/// carries its last-update instant; the policy evicts least-recently
+/// updated runs past `max_runs` and idle runs past `ttl`, counting every
+/// eviction for `/metrics`.
+#[derive(Default)]
+struct Registry {
+    runs: BTreeMap<String, (RunState, Instant)>,
+    /// LRU bound on tracked runs (0 = unbounded)
+    max_runs: usize,
+    /// drop a run this long after its last event (None = never)
+    ttl: Option<Duration>,
+    evicted: u64,
+}
+
+impl Registry {
+    /// Apply the retention policy: TTL first (idle runs age out regardless
+    /// of the bound), then evict least-recently-updated runs until the LRU
+    /// bound holds.
+    fn sweep(&mut self) {
+        if let Some(ttl) = self.ttl {
+            let before = self.runs.len();
+            self.runs.retain(|_, (_, at)| at.elapsed() <= ttl);
+            self.evicted += (before - self.runs.len()) as u64;
+        }
+        if self.max_runs == 0 {
+            return;
+        }
+        while self.runs.len() > self.max_runs {
+            let oldest = self.runs.iter()
+                .min_by_key(|(_, (_, at))| *at)
+                .map(|(id, _)| id.clone())
+                .expect("len > max_runs >= 1");
+            self.runs.remove(&oldest);
+            self.evicted += 1;
+        }
+    }
+}
+
+type State = Arc<Mutex<Registry>>;
+
+/// Warn when a daemon is asked to listen beyond loopback. The `serve` and
+/// `collect` CLIs default to `127.0.0.1` — neither protocol carries any
+/// authentication, so exposing a port to the network is an explicit,
+/// logged decision.
+pub fn warn_if_nonloopback(addr: &str) {
+    let loopback = match addr.parse::<SocketAddr>() {
+        Ok(sa) => sa.ip().is_loopback(),
+        // not a literal socket address — best-effort host check
+        Err(_) => {
+            let host = addr.rsplit_once(':').map_or(addr, |(h, _)| h);
+            host == "localhost" || host.starts_with("127.")
+                || host == "::1" || host == "[::1]"
+        }
+    };
+    if !loopback {
+        eprintln!("warning: listening on non-loopback address {addr} — \
+                   this endpoint is unauthenticated; anyone who can reach \
+                   it can push state to it");
+    }
+}
 
 /// The monitor daemon: bind, then [`Monitor::serve_forever`] (CLI) or
 /// [`Monitor::spawn`] (in-process, tests).
@@ -180,6 +243,20 @@ impl Monitor {
             state: Arc::default(),
             stop: Arc::new(AtomicBool::new(false)),
         })
+    }
+
+    /// Bound the daemon's memory: keep at most `max_runs` runs (0 =
+    /// unbounded), evicting the least recently updated first, and drop any
+    /// run idle for longer than `ttl` (None = never). Evictions are
+    /// counted on `/metrics` as `ttrace_evicted_runs_total`.
+    pub fn retention(self, max_runs: usize, ttl: Option<Duration>)
+                     -> Monitor {
+        {
+            let mut reg = self.state.lock().unwrap();
+            reg.max_runs = max_runs;
+            reg.ttl = ttl;
+        }
+        self
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -219,9 +296,15 @@ impl MonitorHandle {
         self.addr
     }
 
-    /// Current state of one run (None if it never said hello).
+    /// Current state of one run (None if it never said hello — or was
+    /// evicted by the retention policy).
     pub fn run_state(&self, run: &str) -> Option<RunState> {
-        self.state.lock().unwrap().get(run).cloned()
+        self.state.lock().unwrap().runs.get(run).map(|(rs, _)| rs.clone())
+    }
+
+    /// Runs evicted by the retention policy so far.
+    pub fn evicted(&self) -> u64 {
+        self.state.lock().unwrap().evicted
     }
 
     /// Stop accepting and join the daemon thread.
@@ -317,20 +400,26 @@ fn handle_events(reader: BufReader<TcpStream>, state: &State) {
         let Some(run) = ev.get("run").and_then(|r| r.as_str().ok()) else {
             continue;
         };
-        let mut runs = state.lock().unwrap();
-        runs.entry(run.to_string()).or_default().apply(&ev);
+        let mut reg = state.lock().unwrap();
+        let slot = reg.runs.entry(run.to_string())
+            .or_insert_with(|| (RunState::default(), Instant::now()));
+        slot.0.apply(&ev);
+        slot.1 = Instant::now();
+        reg.sweep();
     }
 }
 
 fn status_json(state: &State) -> String {
-    let runs = state.lock().unwrap();
+    let mut reg = state.lock().unwrap();
+    reg.sweep(); // idle daemons age runs out on read, not just on push
     let mut o = Json::obj();
     let mut rj = Json::obj();
-    for (id, rs) in runs.iter() {
+    for (id, (rs, _)) in reg.runs.iter() {
         rj.set(id, rs.to_json());
     }
     o.set("runs", rj);
-    drop(runs);
+    o.set("evicted_runs", Json::from_usize(reg.evicted as usize));
+    drop(reg);
     let mut s = o.to_string_pretty();
     s.push('\n');
     s
@@ -338,7 +427,9 @@ fn status_json(state: &State) -> String {
 
 /// Prometheus text exposition format 0.0.4.
 fn metrics_text(state: &State) -> String {
-    let runs = state.lock().unwrap();
+    let mut reg = state.lock().unwrap();
+    reg.sweep(); // idle daemons age runs out on read, not just on push
+    let reg = &*reg;
     let mut out = String::new();
     let mut family = |name: &str, kind: &str, help: &str,
                       rows: Vec<(String, f64)>| {
@@ -356,7 +447,8 @@ fn metrics_text(state: &State) -> String {
     };
     let lbl = |run: &str| format!("run=\"{}\"", escape_label(run));
     let gather = |f: &dyn Fn(&str, &RunState) -> Option<(String, f64)>| {
-        runs.iter().filter_map(|(id, rs)| f(id, rs)).collect::<Vec<_>>()
+        reg.runs.iter().filter_map(|(id, (rs, _))| f(id, rs))
+            .collect::<Vec<_>>()
     };
 
     family("ttrace_run_step", "gauge",
@@ -364,7 +456,7 @@ fn metrics_text(state: &State) -> String {
            gather(&|id, rs| Some((lbl(id), rs.step as f64))));
     family("ttrace_verdicts_total", "counter",
            "Closed step windows by verdict.",
-           runs.iter().flat_map(|(id, rs)| {
+           reg.runs.iter().flat_map(|(id, (rs, _))| {
                let pass = rs.verdicts.iter().filter(|(_, p)| *p).count();
                let fail = rs.verdicts.len() - pass;
                [(format!("{},verdict=\"pass\"", lbl(id)), pass as f64),
@@ -413,12 +505,19 @@ fn metrics_text(state: &State) -> String {
            gather(&|id, rs| rs.finished.then(|| (lbl(id), rs.coverage))));
     family("ttrace_comm_bytes_total", "counter",
            "Communication payload bytes by process group.",
-           runs.iter().flat_map(|(id, rs)| {
+           reg.runs.iter().flat_map(|(id, (rs, _))| {
                rs.comm_bytes.iter().map(|(g, b)| {
                    (format!("{},group=\"{}\"", lbl(id), escape_label(g)),
                     *b as f64)
                }).collect::<Vec<_>>()
            }).collect());
+    // unlabeled daemon-wide counter (present even at 0 so retention
+    // regressions show up as a flat line, not a missing series)
+    out.push_str(&format!(
+        "# HELP ttrace_evicted_runs_total Runs evicted by the retention \
+         policy (LRU bound or idle TTL).\n\
+         # TYPE ttrace_evicted_runs_total counter\n\
+         ttrace_evicted_runs_total {}\n", reg.evicted));
     out
 }
 
@@ -426,65 +525,102 @@ fn escape_label(v: &str) -> String {
     v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
 }
 
-/// Best-effort event pusher used from inside a live session. Connection
-/// failures mark the client dead and are never surfaced — a missing
-/// monitor must not fail (or slow) the training run.
+/// Event lines a disconnected client holds on to, at most. The buffer
+/// drops its *oldest* lines past the cap — the most recent state is what
+/// a restarted daemon wants first.
+const PENDING_CAP: usize = 1024;
+
+/// Best-effort event pusher used from inside a live session. An
+/// unreachable daemon never fails (or slows) the training run: unacked
+/// lines are buffered (bounded, drop-oldest) and re-sent once a later
+/// `send` finds the daemon back — so a daemon restart loses nothing the
+/// buffer still holds. Reconnects are gated by an exponential [`Backoff`]
+/// deadline rather than a sleep, so the training loop never blocks on a
+/// dead monitor.
 pub struct MonitorClient {
     addr: String,
     conn: Option<TcpStream>,
-    dead: bool,
+    pending: VecDeque<String>,
+    dropped: u64,
+    backoff: Backoff,
+    next_try: Option<Instant>,
 }
 
 impl MonitorClient {
     /// A client for the daemon at `addr` (connects lazily on first send).
     pub fn connect(addr: impl Into<String>) -> MonitorClient {
-        MonitorClient { addr: addr.into(), conn: None, dead: false }
+        MonitorClient {
+            addr: addr.into(),
+            conn: None,
+            pending: VecDeque::new(),
+            dropped: 0,
+            backoff: Backoff::default(),
+            next_try: None,
+        }
     }
 
-    /// Push one event line (an object carrying `event` and `run`).
+    /// Push one event line (an object carrying `event` and `run`). The
+    /// line is buffered first, then as much of the buffer as the
+    /// connection accepts is flushed — on failure everything unsent stays
+    /// buffered for the next call.
     pub fn send(&mut self, ev: &Json) {
-        if self.dead {
-            return;
-        }
-        if self.conn.is_none() {
-            let addr = match self.addr.parse::<SocketAddr>() {
-                Ok(a) => a,
-                Err(_) => {
-                    // hostnames resolve through the blocking path
-                    match TcpStream::connect(&self.addr) {
-                        Ok(s) => {
-                            self.conn = Some(s);
-                            return self.write_line(ev);
-                        }
-                        Err(_) => {
-                            self.dead = true;
-                            return;
-                        }
-                    }
-                }
-            };
-            match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
-                Ok(s) => self.conn = Some(s),
-                Err(_) => {
-                    self.dead = true;
-                    return;
-                }
-            }
-        }
-        self.write_line(ev);
-    }
-
-    fn write_line(&mut self, ev: &Json) {
         let mut line = ev.to_string_compact();
         line.push('\n');
-        let failed = match &mut self.conn {
-            Some(conn) => conn.write_all(line.as_bytes()).is_err()
-                || conn.flush().is_err(),
-            None => true,
+        if self.pending.len() >= PENDING_CAP {
+            self.pending.pop_front();
+            self.dropped += 1;
+        }
+        self.pending.push_back(line);
+        self.flush_pending();
+    }
+
+    /// Event lines dropped from the reconnect buffer so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn flush_pending(&mut self) {
+        if self.conn.is_none() && !self.try_connect() {
+            return;
+        }
+        while let Some(line) = self.pending.front() {
+            let conn = self.conn.as_mut().expect("connected above");
+            if conn.write_all(line.as_bytes()).is_err()
+                || conn.flush().is_err() {
+                // keep the line; the next send retries after the backoff
+                self.conn = None;
+                self.next_try = Some(Instant::now() + self.backoff.delay());
+                return;
+            }
+            self.pending.pop_front();
+        }
+    }
+
+    /// One reconnect attempt, gated by the backoff deadline (never
+    /// sleeps). On success the backoff resets.
+    fn try_connect(&mut self) -> bool {
+        if let Some(at) = self.next_try {
+            if Instant::now() < at {
+                return false;
+            }
+        }
+        let conn = match self.addr.parse::<SocketAddr>() {
+            Ok(a) => TcpStream::connect_timeout(&a,
+                                                Duration::from_millis(500)),
+            // hostnames resolve through the blocking path
+            Err(_) => TcpStream::connect(&self.addr),
         };
-        if failed {
-            self.conn = None;
-            self.dead = true;
+        match conn {
+            Ok(s) => {
+                self.conn = Some(s);
+                self.backoff.reset();
+                self.next_try = None;
+                true
+            }
+            Err(_) => {
+                self.next_try = Some(Instant::now() + self.backoff.delay());
+                false
+            }
         }
     }
 }
@@ -557,9 +693,12 @@ mod tests {
         assert!(body.contains("ttrace_verdicts_total{run=\"r1\",verdict=\"fail\"} 1"),
                 "{body}");
         assert!(body.contains("ttrace_run_pass{run=\"r1\"} 0"), "{body}");
-        // exposition sanity: every non-comment line is `name{labels} value`
+        assert!(body.contains("ttrace_evicted_runs_total 0"), "{body}");
+        // exposition sanity: every labeled line is `name{labels} value`
         for line in body.lines().filter(|l| !l.starts_with('#')
-                                        && !l.is_empty()) {
+                                        && !l.is_empty()
+                                        && !l.starts_with(
+                                            "ttrace_evicted_runs_total")) {
             let (head, val) = line.rsplit_once(' ').unwrap();
             assert!(head.contains("{run=\"r1\""), "{line}");
             assert!(val.parse::<f64>().is_ok(), "{line}");
@@ -568,16 +707,123 @@ mod tests {
     }
 
     #[test]
-    fn unknown_paths_404_and_unreachable_client_goes_dead_silently() {
+    fn unknown_paths_404_and_unreachable_client_buffers_silently() {
         let mon = Monitor::bind("127.0.0.1:0").unwrap().spawn();
         let resp = http_get(mon.addr(), "/nope");
         assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
         mon.shutdown();
 
-        // send to a port nobody listens on: silent, never panics
-        let mut dead = MonitorClient::connect("127.0.0.1:1");
-        dead.send(&ev(r#"{"event":"hello","run":"x","world":1}"#));
-        dead.send(&ev(r#"{"event":"hello","run":"x","world":1}"#));
+        // send to a port nobody listens on: silent, never panics — the
+        // lines wait in the reconnect buffer instead of being lost
+        let mut client = MonitorClient::connect("127.0.0.1:1");
+        client.send(&ev(r#"{"event":"hello","run":"x","world":1}"#));
+        client.send(&ev(r#"{"event":"hello","run":"x","world":1}"#));
+        assert_eq!(client.pending.len(), 2);
+        assert_eq!(client.dropped(), 0);
+    }
+
+    #[test]
+    fn pending_buffer_drops_oldest_past_the_cap() {
+        let mut client = MonitorClient::connect("127.0.0.1:1");
+        for i in 0..PENDING_CAP + 3 {
+            client.send(&ev(&format!(
+                r#"{{"event":"step","run":"x","iter":{i}}}"#)));
+        }
+        assert_eq!(client.pending.len(), PENDING_CAP);
+        assert_eq!(client.dropped(), 3);
+        // the oldest lines went first
+        assert!(client.pending.front().unwrap().contains(r#""iter":3"#));
+    }
+
+    #[test]
+    fn buffered_events_survive_a_daemon_restart() {
+        // daemon down before the run starts: the hello is buffered
+        let mon = Monitor::bind("127.0.0.1:0").unwrap().spawn();
+        let addr = mon.addr();
+        mon.shutdown();
+        let mut client = MonitorClient::connect(addr.to_string());
+        client.send(&ev(r#"{"event":"hello","run":"rr","world":2}"#));
+        assert_eq!(client.pending.len(), 1, "hello must be buffered");
+
+        // the daemon comes back on the same port; later sends reconnect
+        // (after the backoff deadline) and flush the buffer first
+        let mon = Monitor::bind(&addr.to_string()).unwrap().spawn();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            client.send(&ev(r#"{"event":"counters","run":"rr",
+                               "comm":{"dp@0":64}}"#));
+            if let Some(rs) = mon.run_state("rr") {
+                if rs.world == 2 && rs.comm_bytes.contains_key("dp@0") {
+                    break; // buffered hello and the fresh event both landed
+                }
+            }
+            assert!(std::time::Instant::now() < deadline,
+                    "buffered events never reached the restarted daemon");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        mon.shutdown();
+    }
+
+    #[test]
+    fn retention_evicts_lru_runs_and_counts_them() {
+        let mon = Monitor::bind("127.0.0.1:0").unwrap()
+            .retention(2, None)
+            .spawn();
+        let mut client = MonitorClient::connect(mon.addr().to_string());
+        client.send(&ev(r#"{"event":"hello","run":"a","world":1}"#));
+        client.send(&ev(r#"{"event":"hello","run":"b","world":1}"#));
+        client.send(&ev(r#"{"event":"hello","run":"c","world":1}"#));
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while mon.run_state("c").is_none() {
+            assert!(std::time::Instant::now() < deadline, "c never arrived");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // "a" was the least recently updated of the three
+        assert!(mon.run_state("a").is_none(), "LRU run must be evicted");
+        assert!(mon.run_state("b").is_some());
+        assert_eq!(mon.evicted(), 1);
+        let metrics = http_get(mon.addr(), "/metrics");
+        assert!(metrics.contains("ttrace_evicted_runs_total 1"), "{metrics}");
+        mon.shutdown();
+    }
+
+    #[test]
+    fn idle_runs_age_out_past_the_ttl() {
+        let mon = Monitor::bind("127.0.0.1:0").unwrap()
+            .retention(0, Some(Duration::from_millis(50)))
+            .spawn();
+        let mut client = MonitorClient::connect(mon.addr().to_string());
+        client.send(&ev(r#"{"event":"hello","run":"old","world":1}"#));
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while mon.run_state("old").is_none() {
+            assert!(std::time::Instant::now() < deadline, "never arrived");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        std::thread::sleep(Duration::from_millis(120));
+        // the sweep also runs on reads, so an idle daemon still ages out
+        let _ = http_get(mon.addr(), "/status");
+        assert!(mon.run_state("old").is_none(), "idle run must age out");
+        assert!(mon.evicted() >= 1);
+        mon.shutdown();
+    }
+
+    #[test]
+    fn loopback_detection_flags_public_addrs() {
+        // pure predicate check via the same parsing the warning uses
+        let is_loop = |addr: &str| match addr.parse::<SocketAddr>() {
+            Ok(sa) => sa.ip().is_loopback(),
+            Err(_) => {
+                let host = addr.rsplit_once(':').map_or(addr, |(h, _)| h);
+                host == "localhost" || host.starts_with("127.")
+                    || host == "::1" || host == "[::1]"
+            }
+        };
+        assert!(is_loop("127.0.0.1:9090"));
+        assert!(is_loop("localhost:9090"));
+        assert!(!is_loop("0.0.0.0:9090"));
+        assert!(!is_loop("192.168.1.4:9090"));
+        // and the warning helper itself never panics on odd input
+        warn_if_nonloopback("not an address at all");
     }
 
     #[test]
@@ -590,7 +836,8 @@ mod tests {
                          "comm":{"dp@0":4096,"tp@1":128}}"#));
         assert_eq!(rs.hangs, 2);
         assert_eq!(rs.comm_bytes.get("dp@0"), Some(&4096));
-        state.lock().unwrap().insert("r".to_string(), rs);
+        state.lock().unwrap().runs
+            .insert("r".to_string(), (rs, Instant::now()));
         let text = metrics_text(&state);
         assert!(text.contains("ttrace_hangs_total{run=\"r\"} 2"), "{text}");
         assert!(text.contains(

@@ -40,7 +40,8 @@ use super::super::checker::CheckOutcome;
 use super::super::collector::{Entry, Trace};
 use super::super::diagnose::RunMeta;
 use super::super::obs::{ObsCounters, ObsEvent};
-use super::super::store::{write_trace, StoreSummary, StoreWriter};
+use super::super::store::{write_trace, SegmentInfo, StoreSummary,
+                          StoreWriter};
 use super::{checker::LiveChecker, LiveSummary};
 
 /// Default bound of the entry queue.
@@ -230,6 +231,12 @@ pub(crate) struct StoreTarget {
     pub checkpoint_every: usize,
     pub estimate: Option<(HashMap<String, f64>, f64)>,
     pub meta: RunMeta,
+    /// Per-process segment recording (`ttrace::mesh`): persist only this
+    /// process' ranks and stamp the store with the segment header. The
+    /// deterministic replay still runs (and streams) *all* ranks — the
+    /// filter applies at the store write, so the persisted bytes of rank
+    /// r are identical to the whole-world store's bytes for rank r.
+    pub segment: Option<SegmentInfo>,
 }
 
 /// What the worker is asked to do with the stream.
@@ -417,9 +424,19 @@ fn write_payloads(target: &StoreTarget,
         w.set_estimate(rel, *eps);
     }
     w.set_run_meta(&target.meta);
+    if let Some(seg) = &target.segment {
+        w.set_segment(seg);
+    }
     match target.layout {
         StoreLayout::Segments => {
-            for items in segments.values() {
+            let owned = |rank: u32| match &target.segment {
+                Some(seg) => seg.ranks.contains(&rank),
+                None => true,
+            };
+            for (rank, items) in segments {
+                if !owned(*rank) {
+                    continue;
+                }
                 for (key, entry) in items {
                     w.append(key, entry)?;
                 }

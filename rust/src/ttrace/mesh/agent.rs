@@ -1,0 +1,237 @@
+//! The per-process push agent: streams one sealed `.ttrc` segment to a
+//! [`SegmentCollector`] over a std-only, length-prefixed TCP protocol.
+//!
+//! ## Wire protocol (little-endian, version 1)
+//!
+//! Grown from `live::serve`'s push format, but framed and acknowledged —
+//! segment payloads are binary and must survive reconnects:
+//!
+//! ```text
+//! agent → collector   hello: "TTSG" u16 version  u32 proc_id
+//!                            u32 proc_count  u64 total_len
+//!                            u64 file FNV-1a
+//! collector → agent   u64 resume offset (bytes already spooled from an
+//!                     earlier connection; u64::MAX = rejected)
+//! agent → collector   data frame: u32 len (≤ 1 MiB)  payload bytes
+//!                                 u64 FNV-1a of the payload
+//! collector → agent   u64 total spooled bytes (u64::MAX = bad frame)
+//!                     … repeated per frame …
+//! agent → collector   done frame: u32 0
+//! collector → agent   u64 total_len = sealed (the collector verified
+//!                     the whole-file FNV-1a and renamed the spool file
+//!                     into place); u64::MAX = verification failed
+//! ```
+//!
+//! Every frame is acknowledged, so after a dropped connection the agent
+//! reconnects (exponential [`Backoff`]) and resumes from exactly the
+//! bytes the collector durably spooled — re-pushing a sealed segment is
+//! also safe (the resume offset equals `total_len` and only the done
+//! frame is exchanged).
+//!
+//! [`SegmentCollector`]: super::collector::SegmentCollector
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ttrace::store::StoreReader;
+use crate::util::rng::{fnv1a_update, FNV_OFFSET_BASIS};
+
+/// Wire magic of the segment push protocol.
+pub(crate) const WIRE_MAGIC: &[u8; 4] = b"TTSG";
+/// Wire protocol version.
+pub(crate) const WIRE_VERSION: u16 = 1;
+/// Largest payload one data frame may carry.
+pub(crate) const MAX_FRAME: u32 = 1 << 20;
+/// Ack value meaning "rejected / failed".
+pub(crate) const NAK: u64 = u64::MAX;
+/// How much payload the agent puts in one frame (one ack round-trip per
+/// chunk; small enough to make resume granular, large enough to amortize
+/// the round-trip).
+const CHUNK: usize = 64 * 1024;
+
+pub(crate) fn write_u64(s: &mut TcpStream, v: u64) -> std::io::Result<()> {
+    s.write_all(&v.to_le_bytes())
+}
+
+pub(crate) fn read_u64(s: &mut TcpStream) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    s.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub(crate) fn read_u32(s: &mut TcpStream) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    s.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Exponential reconnect backoff: every `delay()` doubles the next one,
+/// up to `max`; `reset()` on success. Shared by the segment agent (which
+/// sleeps between reconnect attempts) and `MonitorClient` (which uses the
+/// growing delay as a "don't retry before" deadline so the training loop
+/// never sleeps).
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    cur: Duration,
+    start: Duration,
+    max: Duration,
+}
+
+impl Backoff {
+    pub fn new(start: Duration, max: Duration) -> Backoff {
+        Backoff { cur: start, start, max }
+    }
+
+    /// The current delay; doubles the stored delay for next time.
+    pub fn delay(&mut self) -> Duration {
+        let d = self.cur;
+        self.cur = (self.cur * 2).min(self.max);
+        d
+    }
+
+    /// Sleep for the current delay (and grow the next one).
+    pub fn sleep(&mut self) {
+        let d = self.delay();
+        std::thread::sleep(d);
+    }
+
+    /// Back to the starting delay (call after a successful reconnect).
+    pub fn reset(&mut self) {
+        self.cur = self.start;
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Backoff {
+        Backoff::new(Duration::from_millis(50), Duration::from_secs(2))
+    }
+}
+
+/// Push one sealed segment store to the collector at `addr`, retrying
+/// with exponential backoff up to `attempts` connection attempts. The
+/// file must be a sealed segment (`record --segment` output) — the
+/// segment header supplies the proc identity the collector spools it
+/// under. Returns once the collector has verified the whole file's
+/// checksum and sealed its spool copy.
+pub fn push_segment(addr: &str, path: &Path, attempts: usize) -> Result<()> {
+    // the reader re-verifies the file checksum and yields proc identity
+    let reader = StoreReader::open(path)?;
+    let seg = reader.segment().ok_or_else(|| {
+        anyhow!("{}: not a segment store (no segment header) — record it \
+                 with --segment before pushing", path.display())
+    })?;
+    let (proc_id, proc_count) = (seg.proc_id, seg.proc_count);
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let total_len = bytes.len() as u64;
+    let file_hash = fnv1a_update(FNV_OFFSET_BASIS, &bytes);
+
+    let mut backoff = Backoff::default();
+    let mut last_err = None;
+    for attempt in 0..attempts.max(1) {
+        if attempt > 0 {
+            backoff.sleep();
+        }
+        match push_once(addr, &bytes, proc_id, proc_count, total_len,
+                        file_hash) {
+            Ok(()) => return Ok(()),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(anyhow!("pushing {} to {addr} failed after {} attempt(s): {}",
+                path.display(), attempts.max(1),
+                last_err.expect("at least one attempt ran")))
+}
+
+/// One connection's worth of the protocol: hello, resume, stream, done.
+fn push_once(addr: &str, bytes: &[u8], proc_id: u32, proc_count: u32,
+             total_len: u64, file_hash: u64) -> Result<()> {
+    let mut s = connect(addr)?;
+    s.set_nodelay(true).ok();
+
+    let mut hello = Vec::with_capacity(30);
+    hello.extend_from_slice(WIRE_MAGIC);
+    hello.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    hello.extend_from_slice(&proc_id.to_le_bytes());
+    hello.extend_from_slice(&proc_count.to_le_bytes());
+    hello.extend_from_slice(&total_len.to_le_bytes());
+    hello.extend_from_slice(&file_hash.to_le_bytes());
+    s.write_all(&hello)?;
+
+    let resume = read_u64(&mut s)?;
+    if resume == NAK {
+        bail!("collector {addr} rejected the hello for proc \
+               {proc_id}/{proc_count}");
+    }
+    if resume > total_len {
+        bail!("collector {addr} claims {resume} spooled bytes for proc \
+               {proc_id} but the segment is only {total_len} bytes — its \
+               spool holds a different recording; clear the spool dir");
+    }
+
+    let mut off = resume as usize;
+    while off < bytes.len() {
+        let n = (bytes.len() - off).min(CHUNK);
+        let chunk = &bytes[off..off + n];
+        s.write_all(&(n as u32).to_le_bytes())?;
+        s.write_all(chunk)?;
+        write_u64(&mut s, fnv1a_update(FNV_OFFSET_BASIS, chunk))?;
+        let acked = read_u64(&mut s)?;
+        if acked == NAK {
+            bail!("collector {addr} rejected a data frame at offset {off} \
+                   (checksum mismatch on the wire)");
+        }
+        off = acked as usize;
+    }
+
+    // done frame: collector verifies the whole file and seals it
+    s.write_all(&0u32.to_le_bytes())?;
+    let fin = read_u64(&mut s)?;
+    if fin != total_len {
+        bail!("collector {addr} failed to seal proc {proc_id}'s segment \
+               (whole-file checksum mismatch after spooling — the spool \
+               held stale bytes; clear the spool dir and re-push)");
+    }
+    Ok(())
+}
+
+fn connect(addr: &str) -> Result<TcpStream> {
+    let stream = match addr.parse::<std::net::SocketAddr>() {
+        Ok(sa) => TcpStream::connect_timeout(&sa, Duration::from_secs(2)),
+        Err(_) => TcpStream::connect(addr), // hostname — resolver decides
+    };
+    stream.map_err(|e| anyhow!("connecting to collector {addr}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_to_max_and_resets() {
+        let mut b = Backoff::new(Duration::from_millis(10),
+                                 Duration::from_millis(35));
+        assert_eq!(b.delay(), Duration::from_millis(10));
+        assert_eq!(b.delay(), Duration::from_millis(20));
+        assert_eq!(b.delay(), Duration::from_millis(35)); // capped
+        assert_eq!(b.delay(), Duration::from_millis(35));
+        b.reset();
+        assert_eq!(b.delay(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn push_to_unreachable_collector_errors_with_addr_and_path() {
+        // port 1 is never listening; the error must name both ends
+        let path = std::env::temp_dir().join("mesh_agent_no_store.ttrc");
+        let _ = std::fs::remove_file(&path);
+        let err = push_segment("127.0.0.1:1", &path, 1)
+            .unwrap_err().to_string();
+        // the store doesn't even exist — the reader error comes first and
+        // names the file
+        assert!(err.contains("mesh_agent_no_store.ttrc"), "{err}");
+    }
+}

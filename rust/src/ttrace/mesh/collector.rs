@@ -1,0 +1,256 @@
+//! The central segment collector: accepts framed pushes from per-process
+//! [`agent`]s, spools each segment under `spool/proc<K>.ttrc`, and
+//! reports when every process of the world has sealed its segment (the
+//! trigger for merge + check — see `ttrace collect`).
+//!
+//! Spooling is crash-tolerant on both sides: bytes land in
+//! `proc<K>.ttrc.part` and are renamed into place only after the
+//! whole-file checksum from the agent's hello verifies, so a sealed spool
+//! file is always a complete, checksum-valid segment; a collector restart
+//! re-scans the spool dir and picks up both sealed segments and partial
+//! `.part` files (agents resume from the spooled length).
+//!
+//! [`agent`]: super::agent
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::agent::{read_u32, read_u64, write_u64, MAX_FRAME, NAK,
+                   WIRE_MAGIC, WIRE_VERSION};
+use crate::util::rng::{fnv1a_update, FNV_OFFSET_BASIS};
+
+/// Sealed-proc bookkeeping shared between the accept loop and the
+/// per-connection handler threads.
+type Sealed = Arc<(Mutex<BTreeSet<u32>>, Condvar)>;
+
+/// A bound collector endpoint. `serve_until_complete` runs the accept
+/// loop until all `world_procs` segments are sealed in the spool dir.
+pub struct SegmentCollector {
+    listener: TcpListener,
+    world_procs: u32,
+    spool: PathBuf,
+    sealed: Sealed,
+}
+
+/// The spool path of process `k`'s sealed segment.
+pub fn spool_path(spool: &Path, proc_id: u32) -> PathBuf {
+    spool.join(format!("proc{proc_id:05}.ttrc"))
+}
+
+fn part_path(spool: &Path, proc_id: u32) -> PathBuf {
+    spool.join(format!("proc{proc_id:05}.ttrc.part"))
+}
+
+impl SegmentCollector {
+    /// Bind on `addr` and prepare `spool` (created if missing). Sealed
+    /// segments already in the spool dir count toward completion, so a
+    /// restarted collector resumes where the previous one stopped.
+    pub fn bind(addr: &str, world_procs: u32, spool: &Path)
+                -> Result<SegmentCollector> {
+        if world_procs == 0 {
+            bail!("collector needs at least one process (--world 0)");
+        }
+        fs::create_dir_all(spool)
+            .map_err(|e| anyhow!("creating spool dir {}: {e}",
+                                 spool.display()))?;
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("binding collector on {addr}: {e}"))?;
+        let sealed: Sealed = Arc::new((Mutex::new(BTreeSet::new()),
+                                       Condvar::new()));
+        {
+            let mut set = sealed.0.lock().unwrap();
+            for k in 0..world_procs {
+                if spool_path(spool, k).exists() {
+                    set.insert(k);
+                }
+            }
+        }
+        Ok(SegmentCollector {
+            listener,
+            world_procs,
+            spool: spool.to_path_buf(),
+            sealed,
+        })
+    }
+
+    /// The address the OS actually bound (port 0 resolves here).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr()
+            .map_err(|e| anyhow!("collector local_addr: {e}"))
+    }
+
+    /// Accept agent connections until every process of the world has a
+    /// sealed segment in the spool dir (or `deadline` passes — the error
+    /// names the processes still missing). Returns the sealed segment
+    /// paths in ascending proc order, ready for `merge_segments`.
+    pub fn serve_until_complete(&self, deadline: Option<Duration>)
+                                -> Result<Vec<PathBuf>> {
+        let start = Instant::now();
+        self.listener.set_nonblocking(true)
+            .map_err(|e| anyhow!("collector set_nonblocking: {e}"))?;
+        loop {
+            {
+                let set = self.sealed.0.lock().unwrap();
+                if set.len() as u32 >= self.world_procs {
+                    break;
+                }
+                if let Some(d) = deadline {
+                    if start.elapsed() > d {
+                        let missing: Vec<u32> = (0..self.world_procs)
+                            .filter(|k| !set.contains(k))
+                            .collect();
+                        bail!("collector timed out after {:?} with {} of \
+                               {} segment(s) sealed — still missing \
+                               proc(s) {missing:?}",
+                              d, set.len(), self.world_procs);
+                    }
+                }
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let spool = self.spool.clone();
+                    let world = self.world_procs;
+                    let sealed = Arc::clone(&self.sealed);
+                    std::thread::spawn(move || {
+                        if let Err(e) = serve_one(stream, &spool, world,
+                                                  &sealed) {
+                            // the agent retries; a dropped connection is
+                            // not fatal to the collector
+                            eprintln!("ttrace collect: connection error: \
+                                       {e:#}");
+                        }
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => bail!("collector accept failed: {e}"),
+            }
+        }
+        Ok((0..self.world_procs)
+            .map(|k| spool_path(&self.spool, k))
+            .collect())
+    }
+}
+
+/// One connection's worth of the server side: hello → resume offset →
+/// ack'd data frames into `.part` → verify + rename on the done frame.
+fn serve_one(mut s: TcpStream, spool: &Path, world_procs: u32,
+             sealed: &Sealed) -> Result<()> {
+    s.set_nodelay(true).ok();
+    let mut hdr = [0u8; 30];
+    s.read_exact(&mut hdr)
+        .map_err(|e| anyhow!("reading hello: {e}"))?;
+    if &hdr[0..4] != WIRE_MAGIC {
+        let _ = write_u64(&mut s, NAK);
+        bail!("bad wire magic {:02x?} (expected {WIRE_MAGIC:02x?})",
+              &hdr[0..4]);
+    }
+    let version = u16::from_le_bytes([hdr[4], hdr[5]]);
+    if version != WIRE_VERSION {
+        let _ = write_u64(&mut s, NAK);
+        bail!("unsupported wire version {version} (this collector speaks \
+               {WIRE_VERSION})");
+    }
+    let u32_at = |o: usize| u32::from_le_bytes(hdr[o..o + 4]
+                                               .try_into().unwrap());
+    let u64_at = |o: usize| u64::from_le_bytes(hdr[o..o + 8]
+                                               .try_into().unwrap());
+    let proc_id = u32_at(6);
+    let proc_count = u32_at(10);
+    let total_len = u64_at(14);
+    let file_hash = u64_at(22);
+    if proc_count != world_procs || proc_id >= world_procs {
+        let _ = write_u64(&mut s, NAK);
+        bail!("hello for proc {proc_id}/{proc_count} does not fit this \
+               collector's world of {world_procs} process(es)");
+    }
+
+    let final_path = spool_path(spool, proc_id);
+    let part = part_path(spool, proc_id);
+    let already_sealed = final_path.exists();
+    let resume = if already_sealed {
+        fs::metadata(&final_path)?.len()
+    } else if part.exists() {
+        fs::metadata(&part)?.len()
+    } else {
+        0
+    };
+    write_u64(&mut s, resume)?;
+
+    let mut file: Option<fs::File> = None;
+    let mut spooled = resume;
+    loop {
+        let len = read_u32(&mut s)
+            .map_err(|e| anyhow!("proc {proc_id}: reading frame: {e}"))?;
+        if len == 0 {
+            break; // done frame
+        }
+        if len > MAX_FRAME {
+            let _ = write_u64(&mut s, NAK);
+            bail!("proc {proc_id}: oversized frame ({len} bytes, max \
+                   {MAX_FRAME})");
+        }
+        let mut buf = vec![0u8; len as usize];
+        s.read_exact(&mut buf)
+            .map_err(|e| anyhow!("proc {proc_id}: reading {len}-byte \
+                                  payload: {e}"))?;
+        let claimed = read_u64(&mut s)?;
+        if fnv1a_update(FNV_OFFSET_BASIS, &buf) != claimed {
+            let _ = write_u64(&mut s, NAK);
+            bail!("proc {proc_id}: frame checksum mismatch at offset \
+                   {spooled}");
+        }
+        let f = match &mut file {
+            Some(f) => f,
+            None => file.insert(
+                fs::OpenOptions::new().create(true).append(true)
+                    .open(&part)
+                    .map_err(|e| anyhow!("opening {}: {e}",
+                                         part.display()))?),
+        };
+        f.write_all(&buf)
+            .map_err(|e| anyhow!("writing {}: {e}", part.display()))?;
+        f.flush()
+            .map_err(|e| anyhow!("flushing {}: {e}", part.display()))?;
+        spooled += len as u64;
+        write_u64(&mut s, spooled)?;
+    }
+    drop(file);
+
+    // done: verify the whole spooled file against the hello's checksum,
+    // then seal it (rename) so completion implies integrity
+    let target = if already_sealed { &final_path } else { &part };
+    let ok = match fs::read(target) {
+        Ok(b) => b.len() as u64 == total_len
+            && fnv1a_update(FNV_OFFSET_BASIS, &b) == file_hash,
+        Err(_) => false,
+    };
+    if !ok {
+        if !already_sealed {
+            let _ = fs::remove_file(&part);
+        }
+        let _ = write_u64(&mut s, NAK);
+        bail!("proc {proc_id}: spooled segment failed whole-file \
+               verification ({} — cleared, the agent will re-push)",
+              target.display());
+    }
+    if !already_sealed {
+        fs::rename(&part, &final_path)
+            .map_err(|e| anyhow!("sealing {}: {e}", final_path.display()))?;
+    }
+    {
+        let (set, cv) = (&sealed.0, &sealed.1);
+        set.lock().unwrap().insert(proc_id);
+        cv.notify_all();
+    }
+    write_u64(&mut s, total_len)?;
+    Ok(())
+}

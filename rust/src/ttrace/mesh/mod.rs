@@ -1,0 +1,152 @@
+//! Multi-process trace collection — the paper's SPMD story across real OS
+//! processes and hosts.
+//!
+//! Every collection path before this module lived inside one process: all
+//! ranks of the simulated topology joined their shards into a single
+//! `Trace` (or streamed them into one `.ttrc`). `mesh` splits that into
+//! three layers, mirroring the per-node-agent / central-engine shape of
+//! production trace systems:
+//!
+//! ```text
+//!   host 0                      host 1
+//!   ┌─────────────────────┐     ┌─────────────────────┐
+//!   │ record --segment    │     │ record --segment    │
+//!   │   --proc-id 0/2     │     │   --proc-id 1/2     │
+//!   │   ranks 0..w/2      │     │   ranks w/2..w      │
+//!   │        │            │     │        │            │
+//!   │   proc0.ttrc        │     │   proc1.ttrc        │
+//!   │        │ agent      │     │        │ agent      │
+//!   └────────┼────────────┘     └────────┼────────────┘
+//!            │  framed TCP push (ack'd,  │
+//!            │  checksummed, resumable)  │
+//!            ▼                           ▼
+//!          ┌───────────────────────────────┐
+//!          │ ttrace collect (collector)    │
+//!          │   spool/proc0.ttrc  proc1.ttrc│
+//!          │   → merge_segments → merged   │
+//!          │   → check vs reference        │
+//!          └───────────────────────────────┘
+//! ```
+//!
+//! - **Segments** ([`segment`]): each process records only its own ranks
+//!   into a `.ttrc` carrying a v5 *segment header* (`proc_id`, rank
+//!   subset; the embedded run meta still names the whole world).
+//!   [`merge_segments`] unions N segments into one whole-world store,
+//!   byte-identical to what a single-process recording of the same config
+//!   would have written; [`SegmentSet`] serves the same union virtually
+//!   through the `EntrySource` trait without materializing it.
+//! - **Transport** ([`agent`] / [`collector`]): a std-only
+//!   length-prefixed TCP protocol. The agent streams a sealed segment in
+//!   checksummed frames, resuming after reconnect from the last byte the
+//!   collector acknowledged; the collector spools `proc<K>.ttrc` files
+//!   and reports when the world is complete.
+//! - **Launcher** ([`launch_procs`]): spawns one OS process per segment
+//!   (tests, CI and examples use it to split a topology across real
+//!   processes).
+//!
+//! Deterministic replay makes the segment split cheap: every process runs
+//! the *full* topology bit-identically and simply persists only its
+//! assigned rank slice, so no cross-process communication is needed at
+//! record time and the merged bytes cannot differ from a single-process
+//! recording.
+
+pub mod agent;
+pub mod collector;
+pub mod segment;
+
+pub use agent::{push_segment, Backoff};
+pub use collector::SegmentCollector;
+pub use segment::{merge_segments, SegmentSet};
+
+use anyhow::{bail, Result};
+
+/// The contiguous rank slice process `proc_id` of `proc_count` persists:
+/// ranks `[proc_id*world/proc_count, (proc_id+1)*world/proc_count)`.
+/// Slices partition `0..world` exactly (balanced to within one rank), so
+/// the union over all processes covers every rank once.
+pub fn rank_range(world: usize, proc_id: u32, proc_count: u32)
+                  -> Result<Vec<u32>> {
+    if proc_count == 0 {
+        bail!("proc count must be at least 1");
+    }
+    if proc_id >= proc_count {
+        bail!("proc id {proc_id} out of range for {proc_count} process(es) \
+               (expected 0..{proc_count})");
+    }
+    if proc_count as usize > world {
+        bail!("cannot split {world} rank(s) across {proc_count} processes \
+               — at most one process per rank");
+    }
+    let lo = proc_id as usize * world / proc_count as usize;
+    let hi = (proc_id as usize + 1) * world / proc_count as usize;
+    Ok((lo as u32..hi as u32).collect())
+}
+
+/// Launch one OS process per segment and wait for all of them. `cmd_of`
+/// builds the command for process `k` (typically the `ttrace` binary with
+/// `record --segment --proc-id k/N`). All processes are spawned before
+/// any is waited on, so they can rendezvous through a collector; the
+/// error, if any, names every process that failed.
+pub fn launch_procs<F>(proc_count: u32, mut cmd_of: F) -> Result<()>
+where
+    F: FnMut(u32) -> std::process::Command,
+{
+    let mut children = Vec::new();
+    let mut failures = Vec::new();
+    for k in 0..proc_count {
+        let mut cmd = cmd_of(k);
+        match cmd.spawn() {
+            Ok(child) => children.push((k, child)),
+            Err(e) => failures.push(format!("proc {k}: spawn failed: {e}")),
+        }
+    }
+    for (k, mut child) in children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failures.push(format!("proc {k}: exited with \
+                                                 {status}")),
+            Err(e) => failures.push(format!("proc {k}: wait failed: {e}")),
+        }
+    }
+    if !failures.is_empty() {
+        bail!("{} of {proc_count} segment process(es) failed: {}",
+              failures.len(), failures.join("; "));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_ranges_partition_the_world() {
+        for world in 1..=9usize {
+            for n in 1..=world as u32 {
+                let mut all = Vec::new();
+                for k in 0..n {
+                    all.extend(rank_range(world, k, n).unwrap());
+                }
+                let want: Vec<u32> = (0..world as u32).collect();
+                assert_eq!(all, want, "world {world} split {n} ways");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_range_rejects_bad_splits() {
+        assert!(rank_range(4, 0, 0).is_err());
+        assert!(rank_range(4, 2, 2).is_err());
+        assert!(rank_range(2, 0, 3).is_err());
+    }
+
+    #[test]
+    fn launch_procs_reports_failing_procs_by_id() {
+        // 'false' exits non-zero on every POSIX system
+        let err = launch_procs(2, |_| std::process::Command::new("false"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("proc 0"), "{err}");
+        assert!(err.contains("proc 1"), "{err}");
+    }
+}

@@ -1,0 +1,259 @@
+//! Segment validation and merge: N per-process `.ttrc` segments → one
+//! whole-world store.
+//!
+//! A segment is a normal v5 store whose segment header (see
+//! [`SegmentInfo`]) names the writing process and the global ranks it
+//! persists; its embedded `RunMeta` still describes the *whole* world
+//! topology. [`merge_segments`] materializes the union into a single
+//! `.ttrc` that is byte-identical to what a single-process recording of
+//! the same config would have written; [`SegmentSet`] serves the same
+//! union virtually through the [`EntrySource`] trait (the diagnosis
+//! loader), without writing a merged file.
+//!
+//! Every validation failure is an error naming the offending file(s) —
+//! merging never panics on mismatched inputs.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ttrace::collector::Entry;
+use crate::ttrace::diagnose::verdict::EntrySource;
+use crate::ttrace::diagnose::RunMeta;
+use crate::ttrace::store::{StoreReader, StoreSummary, StoreWriter};
+
+/// The validated shape of a segment set: whole-world run meta, the
+/// world's size, and which reader owns each rank.
+struct MergePlan {
+    meta: RunMeta,
+    /// rank → index into the reader list (covers `0..world` exactly)
+    owner: Vec<usize>,
+    /// the shared estimate section (empty when no segment carries one)
+    estimate: HashMap<String, f64>,
+    estimate_eps: f64,
+}
+
+/// Validate that `readers` form exactly one world: every file is a
+/// segment store, all agree on topology/flags and `proc_count`, no rank
+/// is claimed twice, no rank of the world is missing, and any embedded
+/// estimate sections are identical. Errors name the offending file(s).
+fn plan(readers: &[StoreReader]) -> Result<MergePlan> {
+    if readers.is_empty() {
+        bail!("no segment files to merge");
+    }
+    let name = |r: &StoreReader| r.path().display().to_string();
+
+    let first = &readers[0];
+    let first_seg = first.segment().ok_or_else(|| {
+        anyhow!("{}: not a segment store (no segment header) — record it \
+                 with --segment", name(first))
+    })?;
+    let meta = first.run_meta().ok_or_else(|| {
+        anyhow!("{}: segment carries no run metadata — cannot establish \
+                 the world topology", name(first))
+    })?.clone();
+    let world = meta.topo.world();
+
+    let mut owner = vec![usize::MAX; world];
+    let mut estimate: Option<(usize, HashMap<String, f64>, f64)> = None;
+    for (ri, r) in readers.iter().enumerate() {
+        let seg = r.segment().ok_or_else(|| {
+            anyhow!("{}: not a segment store (no segment header) — record \
+                     it with --segment", name(r))
+        })?;
+        let m = r.run_meta().ok_or_else(|| {
+            anyhow!("{}: segment carries no run metadata — cannot \
+                     establish the world topology", name(r))
+        })?;
+        if *m != meta {
+            bail!("mismatched topology: {} was recorded under {} but {} \
+                   was recorded under {} — segments must come from the \
+                   same run configuration",
+                  name(first), meta.topo.describe(), name(r),
+                  m.topo.describe());
+        }
+        if seg.proc_count != first_seg.proc_count {
+            bail!("mismatched process count: {} says {} process(es) but \
+                   {} says {}", name(first), first_seg.proc_count, name(r),
+                  seg.proc_count);
+        }
+        for &rank in &seg.ranks {
+            // (rank < world was already enforced by StoreReader::open)
+            let prev = owner[rank as usize];
+            if prev != usize::MAX {
+                bail!("duplicate rank: rank {rank} is claimed by both {} \
+                       and {}", name(&readers[prev]), name(r));
+            }
+            owner[rank as usize] = ri;
+        }
+        if !r.estimate().is_empty() {
+            match &estimate {
+                None => {
+                    estimate = Some((ri, r.estimate().clone(),
+                                     r.estimate_eps().unwrap_or(0.0)));
+                }
+                Some((ei, est, eps)) => {
+                    let same = est.len() == r.estimate().len()
+                        && est.iter().all(|(k, v)| {
+                            r.estimate().get(k)
+                                .is_some_and(|w| w.to_bits() == v.to_bits())
+                        })
+                        && *eps == r.estimate_eps().unwrap_or(0.0);
+                    if !same {
+                        bail!("mismatched threshold estimates: {} and {} \
+                               embed different estimate sections — \
+                               segments of one run compute identical \
+                               estimates", name(&readers[*ei]), name(r));
+                    }
+                }
+            }
+        }
+    }
+
+    let missing: Vec<usize> = owner.iter().enumerate()
+        .filter(|(_, &o)| o == usize::MAX)
+        .map(|(rank, _)| rank)
+        .collect();
+    if !missing.is_empty() {
+        bail!("incomplete world: rank(s) {missing:?} of the {world}-rank \
+               world {} are covered by none of the {} segment file(s)",
+              meta.topo.describe(), readers.len());
+    }
+
+    let (estimate, estimate_eps) = match estimate {
+        Some((_, est, eps)) => (est, eps),
+        None => (HashMap::new(), 0.0),
+    };
+    Ok(MergePlan { meta, owner, estimate, estimate_eps })
+}
+
+/// Union N per-process segments into one whole-world `.ttrc` at `out`.
+///
+/// Shards are appended in ascending rank order, and within each rank in
+/// the order the recording process appended them (payload offsets are
+/// monotone in append order, so sorting a rank's shards by offset
+/// recovers its program order) — exactly the order the single-process
+/// store writer uses — so the merged file is byte-identical to a
+/// single-process recording of the same config. The merged store carries
+/// the shared run meta and estimate section but no segment header: it is
+/// a whole-world store again.
+pub fn merge_segments(paths: &[PathBuf], out: &Path) -> Result<StoreSummary> {
+    let readers = paths.iter()
+        .map(|p| StoreReader::open(p))
+        .collect::<Result<Vec<_>>>()?;
+    let plan = plan(&readers)?;
+    let world = plan.owner.len();
+
+    // every shard, grouped by recording rank: (offset within its
+    // segment, canonical id, index into the id's shard list)
+    let mut by_rank: Vec<Vec<(u64, String, usize)>> = vec![Vec::new(); world];
+    for r in &readers {
+        for key in r.keys() {
+            for (si, m) in r.shards(key)
+                .expect("key came from the index").iter().enumerate() {
+                by_rank[m.rank as usize].push((m.offset, key.clone(), si));
+            }
+        }
+    }
+
+    let mut w = StoreWriter::create(out)?;
+    if !plan.estimate.is_empty() {
+        w.set_estimate(&plan.estimate, plan.estimate_eps);
+    }
+    w.set_run_meta(&plan.meta);
+
+    // decoded shard sets, cached per (reader, id) — each id's entries are
+    // read once even when its shards span several ranks
+    let mut caches: Vec<BTreeMap<String, Vec<Entry>>> =
+        readers.iter().map(|_| BTreeMap::new()).collect();
+    for (rank, mut addrs) in by_rank.into_iter().enumerate() {
+        let ri = plan.owner[rank];
+        addrs.sort();
+        for (_, key, si) in addrs {
+            if !caches[ri].contains_key(&key) {
+                let entries = readers[ri].read_entries(&key)?
+                    .expect("key came from this reader's index");
+                caches[ri].insert(key.clone(), entries);
+            }
+            // read_entries returns shards in index order, so `si` indexes
+            // the same shard the address was taken from
+            w.append(&key, &caches[ri][&key][si])?;
+        }
+    }
+    w.finish()
+}
+
+/// A virtual merged view over N open segments: the same union
+/// `merge_segments` materializes, served through the [`EntrySource`]
+/// trait so diagnosis can load frontier ids straight from the segment
+/// files without writing a merged store first.
+pub struct SegmentSet {
+    readers: Vec<StoreReader>,
+    meta: RunMeta,
+    estimate: HashMap<String, f64>,
+    estimate_eps: f64,
+}
+
+impl SegmentSet {
+    /// Open and validate a segment set (same rules as `merge_segments`:
+    /// one world, no duplicate or missing ranks, matching topology).
+    pub fn open(paths: &[PathBuf]) -> Result<SegmentSet> {
+        let readers = paths.iter()
+            .map(|p| StoreReader::open(p))
+            .collect::<Result<Vec<_>>>()?;
+        let plan = plan(&readers)?;
+        Ok(SegmentSet {
+            readers,
+            meta: plan.meta,
+            estimate: plan.estimate,
+            estimate_eps: plan.estimate_eps,
+        })
+    }
+
+    /// The whole-world run layout every segment agreed on.
+    pub fn run_meta(&self) -> &RunMeta {
+        &self.meta
+    }
+
+    /// The shared §5.2 estimate section (empty for candidate runs).
+    pub fn estimate(&self) -> &HashMap<String, f64> {
+        &self.estimate
+    }
+
+    pub fn estimate_eps(&self) -> Option<f64> {
+        if self.estimate_eps > 0.0 { Some(self.estimate_eps) } else { None }
+    }
+
+    /// Canonical ids across all segments, sorted.
+    pub fn keys(&self) -> BTreeSet<String> {
+        self.readers.iter()
+            .flat_map(|r| r.keys().cloned())
+            .collect()
+    }
+
+    /// Total shard count across all segments.
+    pub fn shard_count(&self) -> usize {
+        self.readers.iter().map(|r| r.shard_count()).sum()
+    }
+}
+
+impl EntrySource for SegmentSet {
+    /// One id's shards across the whole world, ascending rank (each rank
+    /// lives in exactly one segment, so the union has no duplicates).
+    fn entries_of(&self, key: &str) -> Result<Option<Vec<Entry>>> {
+        let mut found = false;
+        let mut all: Vec<Entry> = Vec::new();
+        for r in &self.readers {
+            if let Some(entries) = r.read_entries(key)? {
+                found = true;
+                all.extend(entries);
+            }
+        }
+        if !found {
+            return Ok(None);
+        }
+        all.sort_by_key(|e| e.rank);
+        Ok(Some(all))
+    }
+}

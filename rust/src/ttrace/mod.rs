@@ -24,6 +24,7 @@ pub mod gen;
 pub mod hooks;
 pub mod live;
 pub mod merger;
+pub mod mesh;
 pub mod obs;
 pub mod report;
 pub mod runner;
@@ -39,9 +40,10 @@ pub use diagnose::{diagnose_stores, Diagnosis, RunMeta};
 pub use faults::FaultPlan;
 pub use live::{Control, LiveCfg, LiveSummary, Monitor, MonitorClient,
                StepVerdict};
+pub use mesh::{merge_segments, push_segment, SegmentCollector, SegmentSet};
 pub use obs::{Telemetry, Timeline};
 pub use runner::{localized_module, reference_of, ttrace_check, TtraceRun};
 pub use collector::{Collector, Trace};
 pub use hooks::{CanonId, Hooks, Kind, NoopHooks};
 pub use shard::ShardSpec;
-pub use store::{check_stores, StoreReader, StoreWriter};
+pub use store::{check_stores, SegmentInfo, StoreReader, StoreWriter};

@@ -2,7 +2,7 @@
 //! layer the paper's deployment assumes: the framework under test dumps
 //! traces to shared storage and the checker compares them out-of-band).
 //!
-//! ## Format (version 4, little-endian throughout)
+//! ## Format (version 5, little-endian throughout)
 //!
 //! ```text
 //! [0..4)   magic  b"TTRC"
@@ -35,19 +35,29 @@
 //!          string-table indexed: obs labels (rendezvous keys with
 //!          per-group sequence numbers) are mostly unique, so a table
 //!          would only add indirection.
-//! [L..T)   live section (u8 present flag; when 1: the session's
+//! [L..G)   live section (u8 present flag; when 1: the session's
 //!          [`LiveSummary`] — per-step verdicts of the streaming checker,
 //!          first diverging / stopped-at iterations and the async sink's
 //!          queue counters — see `put_live`), so offline tooling reports
 //!          the same numbers the monitor daemon saw during the run
-//! [T..)    trailer (56 bytes): u64 S, u64 I, u64 E, u64 M, u64 O, u64 L,
-//!          u64 FNV-1a checksum of every byte before the checksum field
+//! [G..T)   segment header (u8 present flag; when 1: u32 proc_id, u32
+//!          proc_count, u32 rank count, then each owned global rank as a
+//!          u32) — set only for per-process *segment* stores
+//!          (`ttrace::mesh`): the file persists the shards of one
+//!          process' rank subset of a larger world, and `merge_segments`
+//!          unions N such files back into one whole-world store (which
+//!          carries no segment header again)
+//! [T..)    trailer (64 bytes): u64 S, u64 I, u64 E, u64 M, u64 O, u64 L,
+//!          u64 G, u64 FNV-1a checksum of every byte before the checksum
+//!          field
 //! ```
 //!
-//! Version 2 files (no obs section, 40-byte trailer with four offsets) and
+//! Version 2 files (no obs section, 40-byte trailer with four offsets),
 //! version 3 files (no live section, 48-byte trailer with five offsets)
-//! still open: `StoreReader::open` dispatches on the header version and
-//! serves them with empty obs/live sections. The writer always writes v4.
+//! and version 4 files (no segment header, 56-byte trailer with six
+//! offsets) still open: `StoreReader::open` dispatches on the header
+//! version and serves them with empty obs/live/segment sections. The
+//! writer always writes v5.
 //!
 //! Payload encodings are bit-exact: `Raw32` stores the f32 bit patterns;
 //! `Packed16` stores only the upper 16 bits and is chosen automatically
@@ -97,20 +107,22 @@ use super::obs::{CommInfo, EvKind, ObsCounters, ObsEvent};
 use super::shard::{DimMap, Piece, ShardSpec};
 
 const MAGIC: &[u8; 4] = b"TTRC";
-const VERSION: u16 = 4;
+const VERSION: u16 = 5;
 /// Oldest readable format version (v2 = no obs section, 40-byte trailer).
 const MIN_VERSION: u16 = 2;
 const HEADER_LEN: u64 = 8;
-/// v4 trailer: six section offsets + checksum.
-const TRAILER_LEN: u64 = 56;
+/// v5 trailer: seven section offsets + checksum.
+const TRAILER_LEN: u64 = 64;
+/// v4 trailer: six section offsets + checksum (no segment header).
+const TRAILER_LEN_V4: u64 = 56;
 /// v3 trailer: five section offsets + checksum (no live section).
 const TRAILER_LEN_V3: u64 = 48;
 /// v2 trailer: four section offsets + checksum.
 const TRAILER_LEN_V2: u64 = 40;
 /// Checkpoint block magic (payload region, `set_checkpoint_every`).
 const CKPT_MAGIC: &[u8; 4] = b"TTCK";
-/// magic + self offset + prefix hash + 6 section offsets + blob length
-const CKPT_HEADER_LEN: u64 = 4 + 8 + 8 + 48 + 4;
+/// magic + self offset + prefix hash + 7 section offsets + blob length
+const CKPT_HEADER_LEN: u64 = 4 + 8 + 8 + 56 + 4;
 
 /// How a shard's payload bytes encode its f32 values.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -262,6 +274,57 @@ fn checksum_of(file: &fs::File, len: u64, path: &Path) -> Result<u64> {
     Ok(h)
 }
 
+// ---- segment header -----------------------------------------------------
+
+/// Identity of a per-process `.ttrc` *segment* (see `ttrace::mesh`): which
+/// process of a multi-process recording wrote this file and which global
+/// ranks it persists. The embedded run meta still describes the *whole*
+/// world topology — the segment header only narrows which of its ranks
+/// this file carries. Stores written outside the mesh path (including the
+/// merged store `merge_segments` produces) have no segment header and
+/// `StoreReader::segment` returns `None`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentInfo {
+    /// 0-based index of the writing process
+    pub proc_id: u32,
+    /// how many processes the recording world was split across
+    pub proc_count: u32,
+    /// global ranks whose shards this segment persists (ascending)
+    pub ranks: Vec<u32>,
+}
+
+/// Serialize the v5 segment header (u8 present flag + proc identity +
+/// owned ranks).
+fn put_segment(buf: &mut Vec<u8>, seg: &Option<SegmentInfo>) {
+    match seg {
+        None => put_u8(buf, 0),
+        Some(s) => {
+            put_u8(buf, 1);
+            put_u32(buf, s.proc_id);
+            put_u32(buf, s.proc_count);
+            put_u32(buf, s.ranks.len() as u32);
+            for &r in &s.ranks {
+                put_u32(buf, r);
+            }
+        }
+    }
+}
+
+/// Decode the segment header (inverse of `put_segment`).
+fn read_segment(c: &mut Cursor) -> Result<Option<SegmentInfo>> {
+    if c.u8()? == 0 {
+        return Ok(None);
+    }
+    let proc_id = c.u32()?;
+    let proc_count = c.u32()?;
+    let n = c.u32()? as usize;
+    let mut ranks = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        ranks.push(c.u32()?);
+    }
+    Ok(Some(SegmentInfo { proc_id, proc_count, ranks }))
+}
+
 // ---- writer -------------------------------------------------------------
 
 /// Streaming `.ttrc` writer: payloads go to disk as they are appended (in
@@ -282,6 +345,7 @@ pub struct StoreWriter {
     run_meta: Option<RunMeta>,
     obs: Option<(Vec<ObsEvent>, ObsCounters)>,
     live: Option<LiveSummary>,
+    segment: Option<SegmentInfo>,
     /// write a `TTCK` checkpoint block every this many shards (0 = never)
     checkpoint_every: usize,
     shards_since_checkpoint: usize,
@@ -317,6 +381,7 @@ impl StoreWriter {
             run_meta: None,
             obs: None,
             live: None,
+            segment: None,
             checkpoint_every: 0,
             shards_since_checkpoint: 0,
         };
@@ -399,7 +464,7 @@ impl StoreWriter {
 
     /// Write one self-delimiting `TTCK` block into the payload region:
     /// header (self offset, FNV-1a of the whole file prefix before the
-    /// block, the four section offsets, blob length), a serialized copy of
+    /// block, the seven section offsets, blob length), a serialized copy of
     /// the sections so far, then an FNV-1a hash of the block itself.
     /// `open_salvage` recovers a torn file from the last block whose
     /// prefix hash and block hash both verify.
@@ -408,7 +473,7 @@ impl StoreWriter {
         let self_off = self.offset;
         let (blob, offs) = encode_sections(&self.index, &self.estimate,
                                            self.estimate_eps, &self.run_meta,
-                                           &self.obs, &self.live,
+                                           &self.obs, &self.live, &self.segment,
                                            self_off + CKPT_HEADER_LEN);
         let mut block = Vec::with_capacity(CKPT_HEADER_LEN as usize
                                            + blob.len() + 8);
@@ -459,6 +524,17 @@ impl StoreWriter {
         self.live = Some(live);
     }
 
+    /// Mark this store as one process' *segment* of a multi-process
+    /// recording (`ttrace::mesh`): the header names the writing process
+    /// and the global ranks whose shards it persists, which
+    /// `merge_segments` uses to validate world coverage before unioning
+    /// segments back into one whole-world store. Call once, before
+    /// `finish`. Stores written without this call — including merged
+    /// stores — carry no segment header.
+    pub fn set_segment(&mut self, seg: &SegmentInfo) {
+        self.segment = Some(seg.clone());
+    }
+
     /// Write string table, index, estimates and trailer; seal the file by
     /// renaming `<path>.tmp` onto the final path (atomic on POSIX, so the
     /// sealed path never holds a half-written store).
@@ -466,9 +542,10 @@ impl StoreWriter {
         let string_table_offset = self.offset;
         let (blob, offs) = encode_sections(&self.index, &self.estimate,
                                            self.estimate_eps, &self.run_meta,
-                                           &self.obs, &self.live, self.offset);
+                                           &self.obs, &self.live,
+                                           &self.segment, self.offset);
         self.write_bytes(&blob)?;
-        let mut tail = Vec::with_capacity(48);
+        let mut tail = Vec::with_capacity(56);
         for o in offs {
             put_u64(&mut tail, o);
         }
@@ -612,18 +689,19 @@ fn read_live(c: &mut Cursor) -> Result<Option<LiveSummary>> {
                           overflow, stalls, queue_high_water, late_entries }))
 }
 
-/// Serialize the six metadata sections (string table, index, estimates,
-/// run meta, obs, live) as one blob that will start at absolute file
-/// offset `base`; returns the blob and the absolute offsets of the six
-/// sections. Shared between `finish` (followed by the trailer) and
-/// `write_checkpoint` (embedded in a `TTCK` block), so a salvaged index
-/// decodes through the exact same path as a sealed one.
+/// Serialize the seven metadata sections (string table, index, estimates,
+/// run meta, obs, live, segment header) as one blob that will start at
+/// absolute file offset `base`; returns the blob and the absolute offsets
+/// of the seven sections. Shared between `finish` (followed by the
+/// trailer) and `write_checkpoint` (embedded in a `TTCK` block), so a
+/// salvaged index decodes through the exact same path as a sealed one.
 fn encode_sections(index: &BTreeMap<String, Vec<ShardMeta>>,
                    estimate: &BTreeMap<String, f64>, eps: f64,
                    run_meta: &Option<RunMeta>,
                    obs: &Option<(Vec<ObsEvent>, ObsCounters)>,
-                   live: &Option<LiveSummary>, base: u64)
-                   -> (Vec<u8>, [u64; 6]) {
+                   live: &Option<LiveSummary>,
+                   segment: &Option<SegmentInfo>, base: u64)
+                   -> (Vec<u8>, [u64; 7]) {
     let mut names: BTreeSet<String> = index.keys().cloned().collect();
     names.extend(estimate.keys().cloned());
     let sid: HashMap<String, u32> = names
@@ -681,8 +759,11 @@ fn encode_sections(index: &BTreeMap<String, Vec<ShardMeta>>,
     let live_offset = base + buf.len() as u64;
     put_live(&mut buf, live);
 
+    let seg_offset = base + buf.len() as u64;
+    put_segment(&mut buf, segment);
+
     (buf, [string_table_offset, index_offset, estimates_offset, meta_offset,
-           obs_offset, live_offset])
+           obs_offset, live_offset, seg_offset])
 }
 
 /// Write a fully-assembled trace into `w`, key order. (The collector
@@ -822,6 +903,7 @@ pub struct StoreReader {
     obs_events: Vec<ObsEvent>,
     obs_counters: Option<ObsCounters>,
     live: Option<LiveSummary>,
+    segment: Option<SegmentInfo>,
     /// the index came from a checkpoint block of a torn file, not the
     /// trailer of a sealed one — the trace may be incomplete
     salvaged: bool,
@@ -843,6 +925,8 @@ struct Sections {
     obs_counters: Option<ObsCounters>,
     /// v4 live summary (`None` for older files and non-live sessions)
     live: Option<LiveSummary>,
+    /// v5 segment header (`None` for older files and whole-world stores)
+    segment: Option<SegmentInfo>,
 }
 
 /// Decode one telemetry event (inverse of `put_obs_event`).
@@ -914,7 +998,8 @@ fn read_obs(c: &mut Cursor) -> Result<(Vec<ObsEvent>, Option<ObsCounters>)> {
 /// inside `[HEADER_LEN, payload_end)`.
 fn parse_sections(path: &Path, sec: &[u8], st_off: u64, idx_off: u64,
                   est_off: u64, meta_off: u64, obs_off: Option<u64>,
-                  live_off: Option<u64>, payload_end: u64)
+                  live_off: Option<u64>, seg_off: Option<u64>,
+                  payload_end: u64)
                   -> Result<Sections> {
     // string table
     let mut c = Cursor { path, buf: sec, pos: 0, base: st_off };
@@ -1015,7 +1100,7 @@ fn parse_sections(path: &Path, sec: &[u8], st_off: u64, idx_off: u64,
         }
     };
 
-    // live summary (v4 only — a v3 file ends after obs)
+    // live summary (v4+ — a v3 file ends after obs)
     let live = match live_off {
         None => None,
         Some(live_off) => {
@@ -1024,6 +1109,18 @@ fn parse_sections(path: &Path, sec: &[u8], st_off: u64, idx_off: u64,
                        section starts at {live_off}", path.display(), c.abs());
             }
             read_live(&mut c)?
+        }
+    };
+
+    // segment header (v5 only — a v4 file ends after live)
+    let segment = match seg_off {
+        None => None,
+        Some(seg_off) => {
+            if c.abs() != seg_off {
+                bail!("{}: live section ends at offset {} but the segment \
+                       header starts at {seg_off}", path.display(), c.abs());
+            }
+            read_segment(&mut c)?
         }
     };
 
@@ -1047,8 +1144,33 @@ fn parse_sections(path: &Path, sec: &[u8], st_off: u64, idx_off: u64,
         }
     }
 
+    // A segment's shards must all belong to ranks the header claims to
+    // own, and those ranks must exist in the embedded world topology —
+    // otherwise the merge would silently attribute shards to the wrong
+    // process. Reject the file by name instead.
+    if let Some(s) = &segment {
+        if let Some(m) = &run_meta {
+            let world = m.topo.world() as u32;
+            if let Some(&r) = s.ranks.iter().find(|&&r| r >= world) {
+                bail!("{}: segment header claims rank {r} but the embedded \
+                       run topology {} has only {world} rank(s)",
+                      path.display(), m.topo.describe());
+            }
+        }
+        for (key, metas) in &index {
+            for (si, sm) in metas.iter().enumerate() {
+                if !s.ranks.contains(&sm.rank) {
+                    bail!("{}: shard {si} of '{key}' was recorded by rank \
+                           {} but the segment header only owns ranks {:?} \
+                           — the segment's header does not match its \
+                           shards", path.display(), sm.rank, s.ranks);
+                }
+            }
+        }
+    }
+
     Ok(Sections { index, estimate, eps, run_meta, obs_events, obs_counters,
-                  live })
+                  live, segment })
 }
 
 /// Validate one candidate checkpoint block at absolute offset `i` of an
@@ -1081,8 +1203,9 @@ fn try_checkpoint(path: &Path, bytes: &[u8], i: usize, prefix_hash: u64)
     let meta_off = u64_at(i + 44);
     let obs_off = u64_at(i + 52);
     let live_off = u64_at(i + 60);
+    let seg_off = u64_at(i + 68);
     let blob_len =
-        u32::from_le_bytes(bytes[i + 68..i + 72].try_into().unwrap()) as usize;
+        u32::from_le_bytes(bytes[i + 76..i + 80].try_into().unwrap()) as usize;
     let blob_end = hdr_end + blob_len;
     if blob_end + 8 > bytes.len() {
         bail!("{}: checkpoint at offset {i}: sections blob ({blob_len} \
@@ -1102,7 +1225,7 @@ fn try_checkpoint(path: &Path, bytes: &[u8], i: usize, prefix_hash: u64)
     // shards recorded before this block must lie entirely before it
     let s = parse_sections(path, &bytes[hdr_end..blob_end], st_off, idx_off,
                            est_off, meta_off, Some(obs_off), Some(live_off),
-                           i as u64)?;
+                           Some(seg_off), i as u64)?;
     Ok(((blob_end + 8) as u64, s))
 }
 
@@ -1146,10 +1269,11 @@ impl StoreReader {
                    truncated", path.display(), file_len - 8);
         }
         // v2 trailers carry four section offsets, v3 five (obs), v4 six
-        // (obs + live)
+        // (obs + live), v5 seven (obs + live + segment header)
         let trailer_len = match version {
             2 => TRAILER_LEN_V2,
             3 => TRAILER_LEN_V3,
+            4 => TRAILER_LEN_V4,
             _ => TRAILER_LEN,
         };
         if file_len < HEADER_LEN + trailer_len {
@@ -1170,17 +1294,19 @@ impl StoreReader {
         let meta_off = off(3);
         let obs_off = if n_offs > 4 { Some(off(4)) } else { None };
         let live_off = if n_offs > 5 { Some(off(5)) } else { None };
+        let seg_off = if n_offs > 6 { Some(off(6)) } else { None };
         let sections_end = file_len - trailer_len;
         let mut chain = vec![HEADER_LEN, st_off, idx_off, est_off, meta_off];
         chain.extend(obs_off);
         chain.extend(live_off);
+        chain.extend(seg_off);
         chain.push(sections_end);
         if chain.windows(2).any(|w| w[0] > w[1]) {
             bail!("{}: corrupt section offsets in trailer at offset \
                    {sections_end} (string table {st_off}, index {idx_off}, \
                    estimates {est_off}, run meta {meta_off}, obs {obs_off:?}, \
-                   live {live_off:?}, file length {file_len})",
-                  path.display());
+                   live {live_off:?}, segment {seg_off:?}, file length \
+                   {file_len})", path.display());
         }
 
         let mut sec = vec![0u8; (sections_end - st_off) as usize];
@@ -1189,7 +1315,7 @@ impl StoreReader {
                                  path.display()))?;
 
         let s = parse_sections(path, &sec, st_off, idx_off, est_off,
-                               meta_off, obs_off, live_off, st_off)?;
+                               meta_off, obs_off, live_off, seg_off, st_off)?;
         Ok(StoreReader {
             path: path.to_path_buf(),
             file,
@@ -1203,6 +1329,7 @@ impl StoreReader {
             obs_events: s.obs_events,
             obs_counters: s.obs_counters,
             live: s.live,
+            segment: s.segment,
             salvaged: false,
             #[cfg(not(unix))]
             seek_lock: std::sync::Mutex::new(()),
@@ -1291,6 +1418,7 @@ impl StoreReader {
             obs_events: s.obs_events,
             obs_counters: s.obs_counters,
             live: s.live,
+            segment: s.segment,
             salvaged: true,
             #[cfg(not(unix))]
             seek_lock: std::sync::Mutex::new(()),
@@ -1393,6 +1521,14 @@ impl StoreReader {
     /// only; `None` for older files and non-live sessions.
     pub fn live(&self) -> Option<&LiveSummary> {
         self.live.as_ref()
+    }
+
+    /// The per-process segment header, when this file is one process'
+    /// slice of a multi-process recording (`ttrace::mesh`). v5 stores
+    /// only; `None` for older files and whole-world stores — including
+    /// the merged store `merge_segments` produces.
+    pub fn segment(&self) -> Option<&SegmentInfo> {
+        self.segment.as_ref()
     }
 
     /// Load one canonical id's shard set (positioned reads; thread-safe).
@@ -1693,7 +1829,7 @@ mod tests {
         w.set_obs(events.clone(), counters.clone());
         w.finish().unwrap();
         let r = StoreReader::open(&path).unwrap();
-        assert_eq!(r.version(), 3);
+        assert_eq!(r.version(), VERSION);
         assert_eq!(r.obs_events(), events.as_slice());
         assert_eq!(r.obs_counters(), Some(&counters));
         // the collective is a first-class entry: its blame-relevant
@@ -1712,7 +1848,7 @@ mod tests {
         let path = tmp("obs_absent.ttrc");
         write_sample(&path);
         let r = StoreReader::open(&path).unwrap();
-        assert_eq!(r.version(), 3);
+        assert_eq!(r.version(), VERSION);
         assert!(r.obs_events().is_empty());
         assert!(r.obs_counters().is_none());
     }
@@ -1767,6 +1903,108 @@ mod tests {
         assert!(r.obs_counters().is_none());
         let got = r.read_entries("i0/m0/act/layers.0.mlp").unwrap().unwrap();
         assert_eq!(got[0].data.data, vec![1.5, -2.25]);
+    }
+
+    #[test]
+    fn v4_stores_without_segment_header_still_open() {
+        // hand-rolled version-4 file: 56-byte trailer, six section
+        // offsets, no segment header — what every pre-v5 writer produced
+        let path = tmp("v4_compat.ttrc");
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        put_u16(&mut b, 4);
+        put_u16(&mut b, 0); // reserved
+        let payload_off = b.len() as u64;
+        for v in [1.5f32, -2.25] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        let base = b.len() as u64;
+        let mut sec = Vec::new();
+        put_u32(&mut sec, 1); // string table
+        put_str(&mut sec, "i0/m0/act/layers.0.mlp");
+        let idx_off = base + sec.len() as u64;
+        put_u32(&mut sec, 1); // one id
+        put_u32(&mut sec, 0); // string idx
+        put_u32(&mut sec, 1); // one shard
+        put_shard(&mut sec, &ShardMeta {
+            spec: ShardSpec::full(&[2]),
+            dtype: DType::F32,
+            dims: vec![2],
+            encoding: Encoding::Raw32,
+            rank: 0,
+            offset: payload_off,
+            len: 8,
+        });
+        let est_off = base + sec.len() as u64;
+        put_u64(&mut sec, 0); // eps bits: no estimates
+        put_u32(&mut sec, 0);
+        let meta_off = base + sec.len() as u64;
+        put_u8(&mut sec, 0); // no run meta
+        let obs_off = base + sec.len() as u64;
+        put_obs(&mut sec, &None);
+        let live_off = base + sec.len() as u64;
+        put_live(&mut sec, &None);
+        b.extend_from_slice(&sec);
+        for o in [base, idx_off, est_off, meta_off, obs_off, live_off] {
+            put_u64(&mut b, o);
+        }
+        let checksum = fnv1a_update(FNV_OFFSET_BASIS, &b);
+        put_u64(&mut b, checksum);
+        std::fs::write(&path, &b).unwrap();
+
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.version(), 4);
+        assert_eq!(r.len(), 1);
+        assert!(r.live().is_none());
+        assert!(r.segment().is_none());
+        let got = r.read_entries("i0/m0/act/layers.0.mlp").unwrap().unwrap();
+        assert_eq!(got[0].data.data, vec![1.5, -2.25]);
+    }
+
+    #[test]
+    fn segment_header_roundtrips() {
+        let path = tmp("segment_roundtrip.ttrc");
+        let mut w = StoreWriter::create(&path).unwrap();
+        // a segment persisting only rank 1's shard of the sample world
+        for (k, e) in sample_entries() {
+            if e.rank == 1 {
+                w.append(&k, &e).unwrap();
+            }
+        }
+        let meta = RunMeta {
+            topo: crate::dist::Topology::new(1, 2, 1, 1, 1).unwrap(),
+            sp: false, fp8: false, moe: false, zero1: false, overlap: false,
+            n_micro: 1,
+        };
+        w.set_run_meta(&meta);
+        let seg = SegmentInfo { proc_id: 1, proc_count: 2, ranks: vec![1] };
+        w.set_segment(&seg);
+        w.finish().unwrap();
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.version(), VERSION);
+        assert_eq!(r.segment(), Some(&seg));
+        // the run meta still describes the whole world
+        assert_eq!(r.run_meta().unwrap().topo.world(), 2);
+        // stores without a segment header read back None
+        let plain = tmp("segment_none.ttrc");
+        write_sample(&plain);
+        assert!(StoreReader::open(&plain).unwrap().segment().is_none());
+    }
+
+    #[test]
+    fn segment_headers_reject_shards_of_unowned_ranks() {
+        let path = tmp("segment_unowned.ttrc");
+        let mut w = StoreWriter::create(&path).unwrap();
+        for (k, e) in sample_entries() {
+            w.append(&k, &e).unwrap(); // ranks 0 and 1
+        }
+        let seg = SegmentInfo { proc_id: 0, proc_count: 2, ranks: vec![0] };
+        w.set_segment(&seg);
+        w.finish().unwrap();
+        let err = StoreReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("only owns ranks [0]"), "{err}");
+        assert!(err.contains(path.file_name().unwrap().to_str().unwrap()),
+                "{err}");
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Multi-process trace collection end-to-end (`ttrace::mesh`): segments
+//! recorded by real OS processes must merge into a store byte-identical
+//! to a single-process recording, invalid segment sets must error (never
+//! panic) naming the offending files, and a bug run recorded by two
+//! processes pushing over TCP to `ttrace collect`'s collector must
+//! reproduce the single-process verdict, first-diverging canonical id,
+//! and diagnosed module/dimension from the merged store alone.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::Duration;
+
+use ttrace::prelude::{merge_segments, SegmentCollector, SegmentSet,
+                      StoreReader};
+use ttrace::ttrace::mesh::launch_procs;
+use ttrace::util::json::Json;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ttrace"))
+}
+
+fn run_ok(args: &[&str]) {
+    let out = bin().args(args).output().expect("spawn ttrace");
+    assert!(out.status.success(), "ttrace {args:?} failed:\nstdout: {}\nstderr: {}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr));
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ttrace_mesh_it").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Record process `k` of `n`'s segment of a tp=2 run into `out`, as a
+/// real OS process (plus optional extra flags, e.g. `--bug 12` or
+/// `--push <addr>`).
+fn segment_cmd(k: u32, n: u32, out: &Path, extra: &[&str]) -> Command {
+    let mut c = bin();
+    c.args(["record", "--tp", "2", "--segment"])
+        .arg("--proc-id").arg(format!("{k}/{n}"))
+        .arg("--out").arg(out)
+        .args(extra);
+    c
+}
+
+#[test]
+fn merged_segments_match_single_process_bytes() {
+    let dir = tmp("bytes");
+    let whole = dir.join("whole.ttrc");
+    let segs: Vec<PathBuf> = (0..2).map(|k| dir.join(format!("seg{k}.ttrc")))
+        .collect();
+    let merged = dir.join("merged.ttrc");
+
+    // the same tp=2 config, once whole-world in one process and once as
+    // two real single-rank segment processes
+    run_ok(&["record", "--tp", "2", "--out", whole.to_str().unwrap()]);
+    launch_procs(2, |k| segment_cmd(k, 2, &segs[k as usize], &[])).unwrap();
+
+    merge_segments(&segs, &merged).unwrap();
+    let whole_bytes = std::fs::read(&whole).unwrap();
+    let merged_bytes = std::fs::read(&merged).unwrap();
+    assert_eq!(whole_bytes, merged_bytes,
+               "merged segments differ from the single-process store \
+                ({} vs {} bytes)", merged_bytes.len(), whole_bytes.len());
+
+    // the virtual union serves the same world without materializing it
+    let set = SegmentSet::open(&segs).unwrap();
+    let reader = StoreReader::open(&merged).unwrap();
+    assert_eq!(set.keys().len(), reader.len(),
+               "SegmentSet id count differs from the merged store");
+    assert_eq!(set.shard_count(), reader.shard_count());
+    assert_eq!(set.run_meta().topo.world(), 2);
+}
+
+#[test]
+fn segment_validation_errors_name_the_offending_files() {
+    let dir = tmp("invalid");
+    let whole = dir.join("whole.ttrc");
+    let seg0 = dir.join("seg0.ttrc");
+    let seg1 = dir.join("seg1.ttrc");
+    let seg0_dup = dir.join("seg0_dup.ttrc");
+    let other = dir.join("other_topo.ttrc");
+    let out = dir.join("merged.ttrc");
+
+    run_ok(&["record", "--tp", "2", "--out", whole.to_str().unwrap()]);
+    launch_procs(2, |k| {
+        segment_cmd(k, 2, if k == 0 { &seg0 } else { &seg1 }, &[])
+    }).unwrap();
+    std::fs::copy(&seg0, &seg0_dup).unwrap();
+    // a valid segment of a *different* run configuration (tp=1 world)
+    run_ok(&["record", "--segment", "--proc-id", "0/1",
+             "--out", other.to_str().unwrap()]);
+
+    // missing rank: one segment of a two-rank world
+    let err = merge_segments(&[seg0.clone()], &out).unwrap_err().to_string();
+    assert!(err.contains("incomplete world"), "{err}");
+    assert!(err.contains("rank(s) [1]"), "{err}");
+
+    // duplicate rank: the same ranks claimed by two files — both named
+    let err = merge_segments(&[seg0.clone(), seg0_dup.clone()], &out)
+        .unwrap_err().to_string();
+    assert!(err.contains("duplicate rank"), "{err}");
+    assert!(err.contains("seg0.ttrc"), "{err}");
+    assert!(err.contains("seg0_dup.ttrc"), "{err}");
+
+    // mismatched topology: segments of two different run configs — named
+    let err = merge_segments(&[seg0.clone(), other.clone()], &out)
+        .unwrap_err().to_string();
+    assert!(err.contains("mismatched topology"), "{err}");
+    assert!(err.contains("seg0.ttrc"), "{err}");
+    assert!(err.contains("other_topo.ttrc"), "{err}");
+
+    // a whole-world store is not a segment — named, with the fix
+    let err = merge_segments(&[whole.clone(), seg1.clone()], &out)
+        .unwrap_err().to_string();
+    assert!(err.contains("not a segment store"), "{err}");
+    assert!(err.contains("whole.ttrc"), "{err}");
+
+    // SegmentSet applies the same validation
+    let err = SegmentSet::open(&[seg0, seg0_dup]).unwrap_err().to_string();
+    assert!(err.contains("duplicate rank"), "{err}");
+}
+
+/// First failing canonical id of a `check-offline --out` report.
+fn first_failing(report: &Path) -> Option<String> {
+    let j = Json::parse_file(report).unwrap();
+    j.req("checks").unwrap().as_arr().unwrap().iter()
+        .find(|c| !c.req("pass").unwrap().as_bool().unwrap())
+        .map(|c| c.req("key").unwrap().as_str().unwrap().to_string())
+}
+
+/// Run `check-offline ref cand --out report`, returning the exit code.
+fn check_offline(refp: &Path, cand: &Path, report: &Path) -> i32 {
+    let out = bin()
+        .args(["check-offline", refp.to_str().unwrap(),
+               cand.to_str().unwrap(), "--out", report.to_str().unwrap()])
+        .output().expect("spawn ttrace check-offline");
+    let code = out.status.code().expect("check-offline had no exit code");
+    assert!(code == 0 || code == 1, "check-offline errored:\n{}",
+            String::from_utf8_lossy(&out.stderr));
+    code
+}
+
+/// Run `diagnose ref cand --out report`, returning (module, dims).
+fn diagnose(refp: &Path, cand: &Path, report: &Path)
+            -> (String, Vec<String>) {
+    let out = bin()
+        .args(["diagnose", refp.to_str().unwrap(), cand.to_str().unwrap(),
+               "--tp", "2", "--out", report.to_str().unwrap()])
+        .output().expect("spawn ttrace diagnose");
+    let code = out.status.code().expect("diagnose had no exit code");
+    assert!(code == 0 || code == 1, "diagnose errored:\n{}",
+            String::from_utf8_lossy(&out.stderr));
+    let j = Json::parse_file(report).unwrap();
+    let d = j.req("diagnosis").unwrap();
+    let module = d.req("module").unwrap().as_str().unwrap().to_string();
+    let dims = d.req("implicated_dims").unwrap().as_arr().unwrap().iter()
+        .map(|o| o.req("dim").unwrap().as_str().unwrap().to_string())
+        .collect();
+    (module, dims)
+}
+
+/// The acceptance path: two OS processes record segments of a run and
+/// push them over TCP to an in-process collector; the merged store's
+/// offline verdict, first-diverging id, and diagnosis must match the
+/// single-process recording of the same run — clean and under Table-1
+/// bugs 1 and 12.
+#[test]
+fn wire_transport_reproduces_single_process_verdicts() {
+    let dir = tmp("wire");
+    let refp = dir.join("ref.ttrc");
+    run_ok(&["record", "--tp", "2", "--reference",
+             "--out", refp.to_str().unwrap()]);
+
+    for bug_no in [0usize, 1, 12] {
+        let bug_s = bug_no.to_string();
+        let bug_args: &[&str] = if bug_no == 0 { &[] }
+                                else { &["--bug", &bug_s] };
+
+        // single-process candidate of the same run
+        let whole = dir.join(format!("whole{bug_no}.ttrc"));
+        let mut args = vec!["record", "--tp", "2",
+                            "--out", whole.to_str().unwrap()];
+        args.extend_from_slice(bug_args);
+        run_ok(&args);
+
+        // two recorder processes pushing to a port-0 collector
+        let spool = dir.join(format!("spool{bug_no}"));
+        let collector =
+            SegmentCollector::bind("127.0.0.1:0", 2, &spool).unwrap();
+        let addr = collector.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            collector.serve_until_complete(Some(Duration::from_secs(120)))
+        });
+        launch_procs(2, |k| {
+            let seg = dir.join(format!("seg{bug_no}_{k}.ttrc"));
+            let mut extra: Vec<&str> = vec!["--push", &addr];
+            extra.extend_from_slice(bug_args);
+            segment_cmd(k, 2, &seg, &extra)
+        }).unwrap();
+        let spooled = server.join().unwrap().unwrap();
+        assert_eq!(spooled.len(), 2, "bug {bug_no}: collector sealed {:?}",
+                   spooled);
+
+        let merged = dir.join(format!("merged{bug_no}.ttrc"));
+        merge_segments(&spooled, &merged).unwrap();
+
+        // verdict + first-diverging-id parity, from the files alone
+        let rep_single = dir.join(format!("single{bug_no}.json"));
+        let rep_multi = dir.join(format!("multi{bug_no}.json"));
+        let code_single = check_offline(&refp, &whole, &rep_single);
+        let code_multi = check_offline(&refp, &merged, &rep_multi);
+        assert_eq!(code_multi, code_single,
+                   "bug {bug_no}: merged verdict differs from \
+                    single-process");
+        assert_eq!(code_multi == 1, bug_no != 0,
+                   "bug {bug_no}: unexpected verdict {code_multi}");
+        assert_eq!(first_failing(&rep_multi), first_failing(&rep_single),
+                   "bug {bug_no}: first failing canonical id differs");
+
+        // diagnosis parity: same blamed module, same implicated dims
+        if bug_no != 0 {
+            let diag_single = dir.join(format!("diag_single{bug_no}.json"));
+            let diag_multi = dir.join(format!("diag_multi{bug_no}.json"));
+            let (m_single, d_single) =
+                diagnose(&refp, &whole, &diag_single);
+            let (m_multi, d_multi) = diagnose(&refp, &merged, &diag_multi);
+            assert_eq!(m_multi, m_single,
+                       "bug {bug_no}: diagnosed module differs");
+            assert_eq!(d_multi, d_single,
+                       "bug {bug_no}: implicated dims differ");
+        }
+    }
+}
